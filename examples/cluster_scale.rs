@@ -1,0 +1,95 @@
+//! Cluster-scale matching with wavelet signatures — the paper's §5
+//! future-work plan (E6).
+//!
+//! On an N-node cluster each application yields 3N series (CPU, disk,
+//! memory per node). Full DTW over 3N pairs is quadratic and expensive; the
+//! paper proposes comparing fixed-length *wavelet coefficient* vectors with
+//! a plain distance instead. This example implements both and reports:
+//!   * whether the wavelet route reproduces the DTW route's decision,
+//!   * the speedup from replacing DTW with signature distances.
+//!
+//! Run with: `cargo run --release --example cluster_scale [nodes]`
+
+use mrtuner::coordinator::SystemConfig;
+use mrtuner::dtw::{band_radius, banded::dtw_banded, corr::similarity_from_alignment};
+use mrtuner::signal::wavelet::{signature, signature_distance, Family};
+use mrtuner::simulator::cluster::ClusterConfig;
+use mrtuner::simulator::engine::simulate;
+use mrtuner::simulator::job::JobConfig;
+use mrtuner::util::rng::Rng;
+use mrtuner::workloads::{workload_for, AppId};
+use std::time::Instant;
+
+/// 3N resource series for one app run.
+fn capture(app: AppId, nodes: usize, cfg: &JobConfig, seed: u64) -> Vec<Vec<f64>> {
+    let w = workload_for(app);
+    let cluster = ClusterConfig::cluster(nodes);
+    let sc = SystemConfig::default();
+    let r = simulate(w.as_ref(), cfg, &cluster, &sc.noise, &mut Rng::new(seed));
+    let mut series = Vec::with_capacity(3 * nodes);
+    for node in &r.per_node {
+        for s in [&node.cpu, &node.disk, &node.mem] {
+            series.push(mrtuner::signal::preprocess(s));
+        }
+    }
+    series
+}
+
+/// Mean pairwise similarity over corresponding series, full DTW route.
+fn dtw_similarity(a: &[Vec<f64>], b: &[Vec<f64>]) -> f64 {
+    let sims: Vec<f64> = a
+        .iter()
+        .zip(b.iter())
+        .map(|(x, y)| {
+            let r = dtw_banded(x, y, band_radius(x.len(), y.len()));
+            similarity_from_alignment(&r, x, y)
+        })
+        .collect();
+    mrtuner::util::stats::mean(&sims)
+}
+
+/// Mean signature distance (lower = more similar), wavelet route (M=32).
+fn wavelet_distance(a: &[Vec<f64>], b: &[Vec<f64>]) -> f64 {
+    let ds: Vec<f64> = a
+        .iter()
+        .zip(b.iter())
+        .map(|(x, y)| {
+            let sx = signature(x, Family::Db4, 32);
+            let sy = signature(y, Family::Db4, 32);
+            signature_distance(&sx, &sy)
+        })
+        .collect();
+    mrtuner::util::stats::mean(&ds)
+}
+
+fn main() {
+    mrtuner::util::logging::init();
+    let nodes: usize = std::env::args().nth(1).and_then(|a| a.parse().ok()).unwrap_or(8);
+    let cfg = JobConfig::new(4 * nodes, 2 * nodes, 16.0, 80.0 * nodes as f64);
+    println!("cluster: {nodes} nodes, job {}, 3N = {} series/app", cfg.label(), 3 * nodes);
+
+    let exim = capture(AppId::EximParse, nodes, &cfg, 1);
+    let wc = capture(AppId::WordCount, nodes, &cfg, 2);
+    let ts = capture(AppId::TeraSort, nodes, &cfg, 3);
+
+    let t0 = Instant::now();
+    let s_wc = dtw_similarity(&exim, &wc);
+    let s_ts = dtw_similarity(&exim, &ts);
+    let dtw_time = t0.elapsed();
+    println!("\nDTW route     : exim~wordcount {s_wc:.1}%  exim~terasort {s_ts:.1}%  ({:.1} ms)", dtw_time.as_secs_f64() * 1e3);
+
+    let t1 = Instant::now();
+    let d_wc = wavelet_distance(&exim, &wc);
+    let d_ts = wavelet_distance(&exim, &ts);
+    let wav_time = t1.elapsed();
+    println!("wavelet route : exim~wordcount d={d_wc:.3}  exim~terasort d={d_ts:.3}  ({:.1} ms)", wav_time.as_secs_f64() * 1e3);
+
+    let speedup = dtw_time.as_secs_f64() / wav_time.as_secs_f64().max(1e-9);
+    println!("\nwavelet signatures are {speedup:.0}x faster on {} series pairs", 3 * nodes);
+    let dtw_says_wc = s_wc > s_ts;
+    let wavelet_says_wc = d_wc < d_ts;
+    println!("decision agreement: dtw->wordcount={dtw_says_wc} wavelet->wordcount={wavelet_says_wc}");
+    assert!(dtw_says_wc, "DTW route must pick WordCount");
+    assert!(wavelet_says_wc, "wavelet route must agree with DTW");
+    assert!(speedup > 5.0, "wavelet route should be much faster");
+}

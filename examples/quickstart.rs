@@ -1,0 +1,34 @@
+//! Quickstart: profile two reference applications, match an unknown one,
+//! and print the vote — the paper's whole loop in ~20 lines.
+//!
+//! Run with: `cargo run --release --example quickstart`
+
+use mrtuner::prelude::*;
+
+fn main() {
+    mrtuner::util::logging::init();
+    let grid = ConfigGrid::small(1);
+
+    // Profiling phase: build the reference database (paper Fig. 4a).
+    let mut sys = TuningSystem::new(SystemConfig::default());
+    sys.profile_app(AppId::WordCount, &grid);
+    sys.profile_app(AppId::TeraSort, &grid);
+    println!("reference database: {} entries", sys.db.len());
+
+    // Matching phase: who does Exim mainlog parsing behave like? (Fig. 4b)
+    let outcome = sys.match_app(AppId::EximParse, &grid);
+    for v in &outcome.votes {
+        println!(
+            "  {:28} -> {:10} ({:.1}%)",
+            v.config.label(),
+            v.best_app.map(|a| a.name()).unwrap_or("-"),
+            v.best_similarity
+        );
+    }
+    println!("tally: {:?}", outcome.tally);
+    println!(
+        "most similar application: {}",
+        outcome.winner.map(|a| a.name()).unwrap_or("none")
+    );
+    assert_eq!(outcome.winner, Some(AppId::WordCount), "paper's headline result");
+}

@@ -1,0 +1,101 @@
+//! Reproduce the paper's evaluation artifacts end to end:
+//!   * Table 1  — similarity % of Exim vs {WordCount, TeraSort} under the
+//!     four printed configuration sets (8 reference rows x 4 query columns);
+//!   * Figure 5 — the same data as per-config bar series (CSV);
+//!   * Figure 6 — sample aligned time-series pairs (CSV).
+//!
+//! Run with: `cargo run --release --example reproduce_paper`
+//! CSVs land in `target/experiments/`.
+
+use mrtuner::coordinator::{matcher::Matcher, print_table1, ConfigGrid, SystemConfig, TuningSystem};
+use mrtuner::dtw::{band_radius, banded::dtw_banded};
+use mrtuner::prelude::*;
+use std::io::Write;
+
+fn main() {
+    mrtuner::util::logging::init();
+    let out_dir = std::path::Path::new("target/experiments");
+    std::fs::create_dir_all(out_dir).unwrap();
+
+    let grid = ConfigGrid::paper_table1();
+    let mut sys = TuningSystem::new(SystemConfig::default());
+    sys.profile_app(AppId::WordCount, &grid);
+    sys.profile_app(AppId::TeraSort, &grid);
+
+    let m = Matcher::new(&sys.config, sys.runtime());
+    let table = m.similarity_table(AppId::EximParse, &grid, &sys.db);
+
+    // ---- Table 1 ----
+    println!("== Table 1: similarity of Exim mainlog parsing vs reference apps ==");
+    print_table1(&table, &grid);
+
+    // ---- Figure 5: CSV of the same series ----
+    let mut f5 = std::fs::File::create(out_dir.join("figure5.csv")).unwrap();
+    writeln!(f5, "query_config,reference_app,reference_config,similarity_pct").unwrap();
+    for c in &table {
+        writeln!(
+            f5,
+            "{},{},{},{:.4}",
+            c.config.label(),
+            c.reference_app.name(),
+            c.reference_config.label(),
+            c.similarity
+        )
+        .unwrap();
+    }
+    println!("figure5.csv written ({} cells)", table.len());
+
+    // ---- Figure 6: aligned sample series ----
+    let cfg = grid.configs[0];
+    let profiler = mrtuner::coordinator::profiler::Profiler::new(&sys.config, sys.runtime());
+    let exim = profiler.profile_one(AppId::EximParse, &cfg);
+    let mut f6 = std::fs::File::create(out_dir.join("figure6.csv")).unwrap();
+    writeln!(f6, "pair,t,exim,reference_warped").unwrap();
+    for app in [AppId::WordCount, AppId::TeraSort] {
+        let e = sys
+            .db
+            .entries()
+            .iter()
+            .find(|e| e.app == app && e.config_key() == cfg.label())
+            .expect("profiled");
+        let r = dtw_banded(
+            &exim.series,
+            &e.series,
+            band_radius(exim.series.len(), e.series.len()),
+        );
+        let warped = r.warp_onto_x(&e.series, exim.series.len());
+        for (t, (x, y)) in exim.series.iter().zip(&warped).enumerate() {
+            writeln!(f6, "exim-vs-{},{t},{x:.5},{y:.5}", app.name()).unwrap();
+        }
+        let sim = mrtuner::dtw::corr::similarity_from_alignment(&r, &exim.series, &e.series);
+        println!("figure6: exim vs {:10} at {}: {:.1}%", app.name(), cfg.label(), sim);
+    }
+    println!("figure6.csv written");
+
+    // ---- validation (the paper's qualitative claims) ----
+    let diag_wc: Vec<f64> = table
+        .iter()
+        .filter(|c| {
+            c.reference_app == AppId::WordCount && c.reference_config.label() == c.config.label()
+        })
+        .map(|c| c.similarity)
+        .collect();
+    let same_cfg_ts: Vec<f64> = table
+        .iter()
+        .filter(|c| {
+            c.reference_app == AppId::TeraSort && c.reference_config.label() == c.config.label()
+        })
+        .map(|c| c.similarity)
+        .collect();
+    let min_diag = diag_wc.iter().cloned().fold(f64::INFINITY, f64::min);
+    println!("\nvalidation:");
+    println!("  min same-config Exim~WordCount similarity: {min_diag:.1}% (paper: 91.8%)");
+    let wins = diag_wc
+        .iter()
+        .zip(&same_cfg_ts)
+        .filter(|(wc, ts)| wc > ts)
+        .count();
+    println!("  Exim~WordCount beats Exim~TeraSort on {wins}/4 same-config cells (paper: 4/4)");
+    assert!(min_diag >= 90.0, "diagonal below the paper's 90% acceptance");
+    assert_eq!(wins, 4, "WordCount must dominate TeraSort on the diagonal");
+}

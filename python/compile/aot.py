@@ -1,0 +1,115 @@
+"""AOT lowering: jit the L2 entry points, dump HLO text + manifest.
+
+HLO *text* (not serialized HloModuleProto) is the interchange format: jax
+>= 0.5 emits protos with 64-bit instruction ids which xla_extension 0.5.1
+(the version the published ``xla`` crate binds) rejects; the text parser
+reassigns ids and round-trips cleanly. Lowered with ``return_tuple=True``;
+the Rust side unwraps with ``to_tuple()``.
+
+Usage:  python -m compile.aot --out ../artifacts
+Writes one ``<entry>.hlo.txt`` per (entry, shape bucket) plus
+``manifest.json`` describing shapes/dtypes for the Rust runtime.
+
+Python runs only here, at build time — never on the request path.
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+#: Shape buckets: series seconds after resampling (see DESIGN.md §3).
+BUCKETS = (128, 256, 512)
+#: Batch size for dtw_batch / match_one entries.
+BATCH = 8
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (see module docstring)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def f32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def i32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.int32)
+
+
+def entries():
+    """Yield (name, fn, example_args, metadata) for every artifact."""
+    for L in BUCKETS:
+        yield (
+            f"preprocess_{L}",
+            model.preprocess,
+            (f32(L), i32(1)),
+            {"kind": "preprocess", "len": L},
+        )
+        yield (
+            f"dtw_pair_{L}",
+            model.dtw_pair,
+            (f32(L), f32(L), i32(1), i32(1)),
+            {"kind": "dtw_pair", "len": L},
+        )
+        yield (
+            f"dtw_batch_{BATCH}x{L}",
+            model.dtw_batch,
+            (f32(L), f32(BATCH, L), i32(1), i32(BATCH)),
+            {"kind": "dtw_batch", "len": L, "batch": BATCH},
+        )
+        yield (
+            f"match_one_{BATCH}x{L}",
+            model.match_one,
+            (f32(L), f32(BATCH, L), i32(1), i32(BATCH)),
+            {"kind": "match_one", "len": L, "batch": BATCH},
+        )
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts", help="artifact directory")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    manifest = {"batch": BATCH, "buckets": list(BUCKETS), "entries": []}
+    for name, fn, example_args, meta in entries():
+        lowered = jax.jit(fn).lower(*example_args)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        path = os.path.join(args.out, fname)
+        with open(path, "w") as f:
+            f.write(text)
+        manifest["entries"].append(
+            {
+                "name": name,
+                "file": fname,
+                "sha256": hashlib.sha256(text.encode()).hexdigest(),
+                "inputs": [
+                    {"shape": list(a.shape), "dtype": a.dtype.name}
+                    for a in example_args
+                ],
+                **meta,
+            }
+        )
+        print(f"wrote {path} ({len(text)} chars)")
+
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+    print(f"wrote {os.path.join(args.out, 'manifest.json')}")
+
+
+if __name__ == "__main__":
+    main()

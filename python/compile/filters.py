@@ -1,0 +1,87 @@
+"""Chebyshev type-I low-pass design (pure numpy).
+
+Mirrors ``rust/src/signal/chebyshev.rs`` step for step — analog prototype
+poles -> pre-warped low-pass scale -> bilinear transform -> second-order
+sections — and is pinned against ``scipy.signal.cheby1`` in
+``python/tests/test_filters.py``. The resulting coefficients are baked into
+the L1 Pallas kernel at trace time, so all three layers (scipy-checked
+python, the AOT HLO artifact, and the pure-Rust fallback) filter
+identically.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+
+def cheby1_sos(order: int, ripple_db: float, cutoff: float) -> np.ndarray:
+    """Design an even-order Chebyshev type-I low-pass filter.
+
+    Args:
+      order: filter order; must be even and >= 2 (the paper uses 6).
+      ripple_db: pass-band ripple in dB (> 0).
+      cutoff: cutoff as a fraction of Nyquist, in (0, 1).
+
+    Returns:
+      ``(order//2, 6)`` second-order sections ``[b0,b1,b2,1,a1,a2]`` in the
+      same layout (and section order) as ``scipy.signal.cheby1(...,
+      output='sos')``.
+    """
+    if order < 2 or order % 2:
+        raise ValueError("even order >= 2 required")
+    if ripple_db <= 0:
+        raise ValueError("ripple must be positive")
+    if not 0 < cutoff < 1:
+        raise ValueError("cutoff must be in (0,1) of Nyquist")
+
+    n = order
+    eps = np.sqrt(10.0 ** (ripple_db / 10.0) - 1.0)
+    mu = np.arcsinh(1.0 / eps) / n
+    k = np.arange(1, n + 1)
+    theta = np.pi * (2 * k - 1) / (2 * n)
+    poles = -np.sinh(mu) * np.sin(theta) + 1j * np.cosh(mu) * np.cos(theta)
+    gain = np.real(np.prod(-poles)) / np.sqrt(1.0 + eps * eps)
+
+    # Low-pass scale with bilinear pre-warping (fs = 2 convention).
+    fs2 = 4.0
+    warped = fs2 * np.tan(np.pi * cutoff / 2.0)
+    poles = poles * warped
+    gain *= warped**n
+
+    # Bilinear transform: z = (fs2 + s) / (fs2 - s); n zeros at z = -1.
+    zpoles = (fs2 + poles) / (fs2 - poles)
+    gain = gain / np.real(np.prod(fs2 - poles))
+
+    # Pair conjugates into biquads, ascending pole radius (scipy order).
+    upper = sorted(
+        (p for p in zpoles if p.imag > 0), key=lambda p: abs(p) ** 2
+    )
+    sos = []
+    for p in upper:
+        sos.append([1.0, 2.0, 1.0, 1.0, -2.0 * p.real, abs(p) ** 2])
+    sos = np.asarray(sos, dtype=np.float64)
+    sos[0, :3] *= gain
+    return sos
+
+
+def sosfilt(sos: np.ndarray, x: np.ndarray) -> np.ndarray:
+    """Direct Form II transposed cascade, zero initial state.
+
+    Reference implementation (matches ``scipy.signal.sosfilt``); the Pallas
+    kernel is checked against this in pytest.
+    """
+    y = np.asarray(x, dtype=np.float64).copy()
+    for b0, b1, b2, _, a1, a2 in sos:
+        s1 = 0.0
+        s2 = 0.0
+        for i in range(len(y)):
+            xin = y[i]
+            yo = b0 * xin + s1
+            s1 = b1 * xin - a1 * yo + s2
+            s2 = b2 * xin - a2 * yo
+            y[i] = yo
+    return y
+
+
+#: The paper's de-noising filter: 6th order, 0.5 dB ripple, 0.1 x Nyquist.
+PAPER_SOS = cheby1_sos(6, 0.5, 0.1)

@@ -1,0 +1,93 @@
+"""L1 Pallas kernel: Chebyshev de-noising + magnitude normalization.
+
+The paper's pre-processing (6th-order type-I Chebyshev low-pass, then
+min-max normalization to [0,1]) as one kernel. The IIR recurrence is
+sequential in textbook form; here each biquad's 2-state Direct Form II
+transposed recurrence
+
+    z_n = A z_{n-1} + c_n,   A = [[-a1, 1], [-a2, 0]],
+    c_n = [(b1 - a1 b0) x_n, (b2 - a2 b0) x_n],  y_n = b0 x_n + s1_{n-1}
+
+is an *affine* recurrence, closed under composition, so the whole series is
+one ``associative_scan`` over ``(A, c)`` pairs per biquad — three log-depth
+scans for the 6th-order cascade instead of an L-step loop. Normalization
+masks to the valid prefix ``[0, n)`` and zeroes the padding.
+
+Filter coefficients come from ``compile.filters`` (scipy-pinned) and are
+baked into the HLO at trace time.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+from .. import filters
+
+
+def _affine_combine(left, right):
+    """Composition of z -> A z + c affine maps (right applied after left)."""
+    a1, c1 = left
+    a2, c2 = right
+    return a2 @ a1, a2 @ c1 + c2
+
+
+def _biquad_scan(x, b0, b1, b2, a1, a2):
+    """Run one biquad over ``x`` via an affine associative scan.
+
+    ``A`` is assembled from the traced coefficient scalars (pallas kernels
+    may not capture array constants), hence the ``a1 * 0 + 1`` dance.
+    """
+    L = x.shape[0]
+    one = a1 * 0.0 + 1.0
+    zero = a1 * 0.0
+    A = jnp.stack([jnp.stack([-a1, one]), jnp.stack([-a2, zero])])
+    As = jnp.broadcast_to(A, (L, 2, 2))
+    cs = jnp.stack([(b1 - a1 * b0) * x, (b2 - a2 * b0) * x], axis=-1)[..., None]
+    _, zs = jax.lax.associative_scan(_affine_combine, (As, cs))
+    s1 = zs[:, 0, 0]
+    # y_n uses the *previous* sample's state.
+    s1_prev = jnp.concatenate([zero[None], s1[:-1]])
+    return b0 * x + s1_prev
+
+
+def _preprocess_kernel(x_ref, n_ref, sos_ref, out_ref):
+    x = x_ref[...]
+    n = n_ref[0]
+    sos = sos_ref[...]
+    L = x.shape[0]
+    y = x
+    for k in range(sos.shape[0]):
+        y = _biquad_scan(y, sos[k, 0], sos[k, 1], sos[k, 2], sos[k, 4], sos[k, 5])
+    mask = jnp.arange(L) < n
+    lo = jnp.min(jnp.where(mask, y, jnp.float32(1e30)))
+    hi = jnp.max(jnp.where(mask, y, jnp.float32(-1e30)))
+    span = hi - lo
+    safe = jnp.where(span > 0, span, jnp.float32(1.0))
+    norm = jnp.where(span > 0, (y - lo) / safe, jnp.float32(0.0))
+    out_ref[...] = jnp.where(mask, norm, jnp.float32(0.0)).astype(jnp.float32)
+
+
+def preprocess(x, n, sos=None):
+    """Filter + normalize a padded series.
+
+    Args:
+      x: f32[L] raw series (pad beyond ``n`` ignored).
+      n: i32[1] valid length.
+      sos: optional (3, 6) float second-order sections; defaults to the
+        paper's 6th-order 0.5 dB / 0.1-Nyquist design.
+
+    Returns:
+      f32[L]: de-noised series normalized into [0,1]; padding zeroed.
+    """
+    sos = np.asarray(filters.PAPER_SOS if sos is None else sos, dtype=np.float32)
+    L = x.shape[0]
+    x = x.astype(jnp.float32)
+    n = n.astype(jnp.int32)
+    return pl.pallas_call(
+        _preprocess_kernel,
+        out_shape=jax.ShapeDtypeStruct((L,), jnp.float32),
+        interpret=True,
+    )(x, n, jnp.asarray(sos))

@@ -1,0 +1,140 @@
+"""L1 Pallas kernel: masked DTW dynamic program with traceback output.
+
+The O(N*M) recurrence (paper eqn. 1) is reformulated row-wise for the TPU
+VPU: within row ``i``
+
+    D[i,j] = d[i,j] + min(m[j], D[i,j-1]),   m[j] = min(D[i-1,j], D[i-1,j-1])
+
+and functions ``f(c) = min(a, b + c)`` are closed under composition, so the
+whole row is one ``associative_scan`` over pairs ``(a, b) = (d + m, d)`` —
+a log-depth, full-lane-width primitive instead of the classic ragged
+anti-diagonal wavefront. A ``fori_loop`` walks rows, keeping only two rows
+of f32 state in VMEM; the only O(L^2) output is the **s8 traceback choice
+matrix** (4x smaller than the float cost matrix the textbook formulation
+returns).
+
+Masking: series are padded to the bucket length ``L``; local costs outside
+``[0,nx) x [0,ny)`` are set to +1e30. The valid region is closed under the
+recurrence (a valid cell's predecessors are valid or the zero boundary), so
+reading ``D[nx-1, ny-1]`` gives the *exact* unpadded DTW distance.
+
+Choice encoding (shared with rust/src/dtw/mod.rs and ref.py):
+0 = diagonal, 1 = up, 2 = left; ties resolve vertical-group-first,
+diagonal-within-group.
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot run Mosaic
+custom-calls; on a real TPU the same kernel lowers natively (see
+DESIGN.md §Hardware-Adaptation for the VMEM/roofline estimate).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BIG = 1e30  # python scalar: jnp constants may not be captured by pallas kernels
+
+CHOICE_DIAG = 0
+CHOICE_UP = 1
+CHOICE_LEFT = 2
+
+
+def _minplus_combine(left, right):
+    """Composition of f(c) = min(a, b + c) elements for associative_scan."""
+    a1, b1 = left
+    a2, b2 = right
+    return jnp.minimum(a2, b2 + a1), b1 + b2
+
+
+def _dtw_kernel(x_ref, y_ref, nx_ref, ny_ref, dist_ref, choices_ref):
+    """One (query, reference) DTW: grid cell ``b`` sees y row ``b``."""
+    x = x_ref[...]  # (L,)
+    y = y_ref[...].reshape(-1)  # (1, L) block -> (L,)
+    nx = nx_ref[0]
+    ny = ny_ref[0]
+    L = x.shape[0]
+    jj = jnp.arange(L)
+    valid_j = jj < ny
+
+    # Sakoe-Chiba band (10% of the longer series, slope-following) — keep
+    # in sync with rust/src/dtw/mod.rs::band_radius.
+    nxf = nx.astype(jnp.float32)
+    nyf = ny.astype(jnp.float32)
+    drift = (jnp.maximum(nyf, 2.0) - 1.0) / (jnp.maximum(nxf, 2.0) - 1.0)
+    radius = jnp.ceil(jnp.maximum(0.1 * jnp.maximum(nxf, nyf), drift + 2.0))
+
+    def row(i, carry):
+        prev, dist = carry
+        centre = i.astype(jnp.float32) * drift
+        in_band = (jj.astype(jnp.float32) >= jnp.floor(centre - radius)) & (
+            jj.astype(jnp.float32) <= jnp.ceil(centre + radius)
+        )
+        d = jnp.where(valid_j & in_band & (i < nx), jnp.abs(x[i] - y), jnp.float32(BIG))
+        boundary = jnp.where(i == 0, jnp.float32(0.0), jnp.float32(BIG))
+        diag = jnp.concatenate([boundary[None], prev[:-1]])
+        up = prev
+        vg = jnp.minimum(diag, up)
+        vchoice = jnp.where(diag <= up, CHOICE_DIAG, CHOICE_UP).astype(jnp.int8)
+
+        # Row min-plus scan: D_j = d_j + min(vg_j, D_{j-1}).
+        a = d + vg
+        drow, _ = jax.lax.associative_scan(_minplus_combine, (a, d))
+
+        dshift = jnp.concatenate([jnp.full((1,), BIG, jnp.float32), drow[:-1]])
+        ch = jnp.where(dshift < vg, jnp.int8(CHOICE_LEFT), vchoice)
+        pl.store(choices_ref, (0, i, pl.dslice(0, L)), ch)
+
+        dist = jnp.where(i == nx - 1, jax.lax.dynamic_index_in_dim(drow, ny - 1, keepdims=False), dist)
+        return drow, dist
+
+    init = (jnp.full((L,), BIG, jnp.float32), jnp.float32(0.0))
+    _, dist = jax.lax.fori_loop(0, L, row, init)
+    dist_ref[0] = dist
+
+
+@functools.partial(jax.jit, static_argnames=())
+def dtw_batch(x, ys, nx, nys):
+    """Compare one padded query against a batch of padded references.
+
+    Args:
+      x: f32[L] query.
+      ys: f32[B, L] references.
+      nx: i32[1] query length.
+      nys: i32[B] reference lengths.
+
+    Returns:
+      ``(dists f32[B], choices s8[B, L, L])``.
+    """
+    B, L = ys.shape
+    x = x.astype(jnp.float32)
+    ys = ys.astype(jnp.float32)
+    nx = nx.astype(jnp.int32)
+    nys = nys.astype(jnp.int32)
+    return pl.pallas_call(
+        _dtw_kernel,
+        grid=(B,),
+        in_specs=[
+            pl.BlockSpec((L,), lambda b: (0,)),
+            pl.BlockSpec((1, L), lambda b: (b, 0)),
+            pl.BlockSpec((1,), lambda b: (0,)),
+            pl.BlockSpec((1,), lambda b: (b,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1,), lambda b: (b,)),
+            pl.BlockSpec((1, L, L), lambda b: (b, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B,), jnp.float32),
+            jax.ShapeDtypeStruct((B, L, L), jnp.int8),
+        ],
+        interpret=True,
+    )(x, ys, nx, nys)
+
+
+def dtw_pair(x, y, nx, ny):
+    """Single-pair convenience wrapper: ``(dist f32[], choices s8[L,L])``."""
+    dists, choices = dtw_batch(x, y[None, :], nx, ny.reshape(1))
+    return dists[0], choices[0]

@@ -1,0 +1,140 @@
+"""Pure-jnp correctness oracles for the Pallas kernels.
+
+Everything here is written with plain ``jax.numpy`` / ``lax.scan`` semantics
+(no Pallas) so pytest can compare the kernels against an independent
+implementation. The traceback choice encoding matches
+``rust/src/dtw/mod.rs``: 0 = diagonal, 1 = up, 2 = left; ties resolve
+vertical-group-first, diagonal-within-group.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+BIG = jnp.float32(1e30)
+
+CHOICE_DIAG = 0
+CHOICE_UP = 1
+CHOICE_LEFT = 2
+
+
+def dtw_reference(x, y, nx, ny):
+    """Naive masked DTW over padded series.
+
+    Args:
+      x: f32[L] query (only ``x[:nx]`` is meaningful).
+      y: f32[L] reference (only ``y[:ny]`` is meaningful).
+      nx, ny: actual lengths (python ints or traced scalars).
+
+    Returns:
+      ``(dist, choices)`` — terminal distance ``D[nx-1, ny-1]`` and the full
+      s8[L, L] traceback matrix (garbage outside the valid region).
+    """
+    x = jnp.asarray(x, jnp.float32)
+    y = jnp.asarray(y, jnp.float32)
+    L = x.shape[0]
+    jj = jnp.arange(L)
+    nxf = jnp.float32(nx)
+    nyf = jnp.float32(ny)
+    drift = (jnp.maximum(nyf, 2.0) - 1.0) / (jnp.maximum(nxf, 2.0) - 1.0)
+    radius = jnp.ceil(jnp.maximum(0.1 * jnp.maximum(nxf, nyf), drift + 2.0))
+
+    def row(carry, i):
+        prev = carry  # D[i-1, :]
+        centre = i.astype(jnp.float32) * drift
+        in_band = (jj.astype(jnp.float32) >= jnp.floor(centre - radius)) & (
+            jj.astype(jnp.float32) <= jnp.ceil(centre + radius)
+        )
+        d = jnp.abs(x[i] - y)
+        d = jnp.where((jj < ny) & in_band & (i < nx), d, BIG)
+        boundary = jnp.where(i == 0, jnp.float32(0.0), BIG)
+        diag = jnp.concatenate([boundary[None], prev[:-1]])
+        up = prev
+        vg = jnp.minimum(diag, up)
+        vchoice = jnp.where(diag <= up, CHOICE_DIAG, CHOICE_UP).astype(jnp.int8)
+
+        # Sequential in-row recurrence: D_j = d_j + min(vg_j, D_{j-1}).
+        def cell(c, inputs):
+            dj, vgj = inputs
+            best = jnp.minimum(vgj, c)
+            return dj + best, dj + best
+
+        _, drow = jax.lax.scan(cell, BIG, (d, vg))
+        dshift = jnp.concatenate([BIG[None], drow[:-1]])
+        choices = jnp.where(dshift < vg, jnp.int8(CHOICE_LEFT), vchoice)
+        return drow, (drow, choices)
+
+    init = jnp.full((L,), BIG, jnp.float32)
+    _, (rows, choices) = jax.lax.scan(row, init, jnp.arange(L))
+    dist = rows[nx - 1, ny - 1]
+    return dist, choices
+
+
+def dtw_distance_numpy(x, y):
+    """Classic O(N*M) float64 DTW distance on exact-length numpy arrays —
+    the most independent oracle (no masking, no padding)."""
+    x = np.asarray(x, dtype=np.float64)
+    y = np.asarray(y, dtype=np.float64)
+    n, m = len(x), len(y)
+    D = np.full((n, m), np.inf)
+    D[0, 0] = abs(x[0] - y[0])
+    for j in range(1, m):
+        D[0, j] = D[0, j - 1] + abs(x[0] - y[j])
+    for i in range(1, n):
+        D[i, 0] = D[i - 1, 0] + abs(x[i] - y[0])
+        for j in range(1, m):
+            D[i, j] = abs(x[i] - y[j]) + min(D[i - 1, j], D[i, j - 1], D[i - 1, j - 1])
+    return D[n - 1, m - 1]
+
+
+def backtrack_numpy(choices, nx, ny):
+    """Walk a choice matrix back from (nx-1, ny-1); mirrors the Rust
+    ``dtw::full::backtrack``."""
+    i, j = nx - 1, ny - 1
+    path = [(i, j)]
+    while (i, j) != (0, 0):
+        if i == 0:
+            j -= 1
+        elif j == 0:
+            i -= 1
+        else:
+            c = int(choices[i, j])
+            if c == CHOICE_DIAG:
+                i, j = i - 1, j - 1
+            elif c == CHOICE_UP:
+                i -= 1
+            else:
+                j -= 1
+        path.append((i, j))
+    path.reverse()
+    return path
+
+
+def sosfilt_reference(sos, x):
+    """lax.scan direct-form-II-transposed cascade (f32), matching
+    ``filters.sosfilt`` up to f32 rounding."""
+    y = jnp.asarray(x, jnp.float32)
+    for b0, b1, b2, _, a1, a2 in np.asarray(sos, dtype=np.float32):
+        def step(state, xin, b0=b0, b1=b1, b2=b2, a1=a1, a2=a2):
+            s1, s2 = state
+            yo = b0 * xin + s1
+            s1n = b1 * xin - a1 * yo + s2
+            s2n = b2 * xin - a2 * yo
+            return (s1n, s2n), yo
+
+        _, y = jax.lax.scan(step, (jnp.float32(0.0), jnp.float32(0.0)), y)
+    return y
+
+
+def preprocess_reference(sos, x, n):
+    """Filter then min-max normalize the first ``n`` samples; pad -> 0."""
+    y = sosfilt_reference(sos, x)
+    L = y.shape[0]
+    mask = jnp.arange(L) < n
+    lo = jnp.min(jnp.where(mask, y, jnp.float32(np.inf)))
+    hi = jnp.max(jnp.where(mask, y, jnp.float32(-np.inf)))
+    span = hi - lo
+    norm = jnp.where(span > 0, (y - lo) / jnp.where(span > 0, span, 1.0), 0.0)
+    return jnp.where(mask, norm, 0.0).astype(jnp.float32)

@@ -1,0 +1,67 @@
+"""L2 JAX model: the matching-pipeline entry points lowered AOT.
+
+Composes the L1 kernels into the exact computations the Rust coordinator
+executes via PJRT (one compiled executable per shape bucket):
+
+* ``preprocess``   — Chebyshev de-noise + normalize (paper §3.1.1);
+* ``dtw_pair``     — masked DTW distance + traceback choices (§3.1.2);
+* ``dtw_batch``    — one query against a batch of references;
+* ``match_one``    — fused preprocess(query) -> dtw_batch against
+  already-preprocessed references: the whole matching hot path in a single
+  HLO module, so XLA fuses the filter scans with the DP loop and the query
+  never round-trips to the host in between.
+
+The correlation step (paper eqn. 3) runs on the warping *path*, which needs
+a data-dependent backtrack — an O(L) pointer chase the Rust side does
+faster than XLA; the kernel hands it the s8 choice matrix.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .kernels import cheby, dtw
+
+
+def preprocess(x, n):
+    """f32[L], i32[1] -> f32[L] (see kernels.cheby.preprocess)."""
+    return cheby.preprocess(x, n)
+
+
+def dtw_pair(x, y, nx, ny):
+    """f32[L] x2, i32[1] x2 -> (f32[1] dist, s8[L,L] choices)."""
+    dists, choices = dtw.dtw_batch(x, y[None, :], nx, ny)
+    return dists, choices[0]
+
+
+def dtw_batch(x, ys, nx, nys):
+    """f32[L], f32[B,L], i32[1], i32[B] -> (f32[B], s8[B,L,L])."""
+    return dtw.dtw_batch(x, ys, nx, nys)
+
+
+def match_one(raw_x, ys, nx, nys):
+    """Fused hot path: preprocess the raw query, then batched DTW against
+    preprocessed references.
+
+    Args:
+      raw_x: f32[L] raw (noisy) query series.
+      ys: f32[B, L] preprocessed reference series.
+      nx: i32[1] query length.
+      nys: i32[B] reference lengths.
+
+    Returns:
+      ``(query f32[L], dists f32[B], choices s8[B,L,L])`` — the
+      preprocessed query is returned too (the Rust side needs it for the
+      correlation step).
+    """
+    q = cheby.preprocess(raw_x, nx)
+    dists, choices = dtw.dtw_batch(q, ys, nx, nys)
+    return q, dists, choices
+
+
+def similarity_upper_bound(dists, nx, nys):
+    """Cheap screening: path-normalized distance, used by the coordinator to
+    skip the correlation step for hopeless references (optimization E-opt2;
+    normalized distance and correlation are strongly rank-correlated on
+    normalized series)."""
+    return dists / (nx + nys).astype(jnp.float32)

@@ -1,0 +1,53 @@
+"""Filter design vs scipy and the reference implementations."""
+
+import numpy as np
+import pytest
+import scipy.signal as sig
+from hypothesis import given, settings, strategies as st
+
+from compile import filters
+
+
+def test_paper_design_matches_scipy():
+    want = sig.cheby1(6, 0.5, 0.1, output="sos")
+    np.testing.assert_allclose(filters.PAPER_SOS, want, atol=1e-12)
+
+
+@pytest.mark.parametrize("order", [2, 4, 6, 8])
+@pytest.mark.parametrize("ripple", [0.1, 0.5, 1.0, 3.0])
+@pytest.mark.parametrize("cutoff", [0.05, 0.1, 0.3, 0.6])
+def test_design_space_matches_scipy(order, ripple, cutoff):
+    ours = filters.cheby1_sos(order, ripple, cutoff)
+    want = sig.cheby1(order, ripple, cutoff, output="sos")
+    np.testing.assert_allclose(ours, want, atol=1e-9)
+
+
+def test_sosfilt_matches_scipy():
+    rng = np.random.default_rng(0)
+    x = rng.random(200)
+    ours = filters.sosfilt(filters.PAPER_SOS, x)
+    want = sig.sosfilt(filters.PAPER_SOS, x)
+    np.testing.assert_allclose(ours, want, atol=1e-12)
+
+
+def test_invalid_designs_rejected():
+    with pytest.raises(ValueError):
+        filters.cheby1_sos(5, 0.5, 0.1)  # odd order
+    with pytest.raises(ValueError):
+        filters.cheby1_sos(6, -1.0, 0.1)
+    with pytest.raises(ValueError):
+        filters.cheby1_sos(6, 0.5, 1.5)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    order=st.sampled_from([2, 4, 6]),
+    ripple=st.floats(0.05, 3.0),
+    cutoff=st.floats(0.02, 0.9),
+)
+def test_design_is_always_stable(order, ripple, cutoff):
+    sos = filters.cheby1_sos(order, ripple, cutoff)
+    for _, _, _, _, a1, a2 in sos:
+        # Poles strictly inside the unit circle.
+        assert a2 < 1.0 + 1e-12
+        assert abs(a1) < 1.0 + a2 + 1e-12

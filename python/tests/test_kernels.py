@@ -1,0 +1,182 @@
+"""L1 Pallas kernels vs the pure-jnp / numpy oracles.
+
+The CORE correctness signal of the compiled path: the same kernels are
+lowered into the HLO artifacts the Rust coordinator executes.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import filters
+from compile.kernels import cheby, dtw, ref
+
+
+def pad(x, L):
+    out = np.zeros(L, np.float32)
+    out[: len(x)] = x
+    return out
+
+
+def banded_dtw_numpy(x, y):
+    """Float64 banded DTW with the shared band formula — independent oracle."""
+    n, m = len(x), len(y)
+    drift = (max(m, 2) - 1) / (max(n, 2) - 1)
+    radius = np.ceil(max(0.1 * max(n, m), drift + 2.0))
+    D = np.full((n, m), np.inf)
+    for i in range(n):
+        c = i * drift
+        lo = max(0, int(np.floor(c - radius)))
+        hi = min(m - 1, int(np.ceil(c + radius)))
+        for j in range(lo, hi + 1):
+            d = abs(x[i] - y[j])
+            if i == 0 and j == 0:
+                D[0, 0] = d
+            elif i == 0:
+                D[0, j] = D[0, j - 1] + d
+            else:
+                best = min(
+                    D[i - 1, j],
+                    D[i - 1, j - 1] if j > 0 else np.inf,
+                    D[i, j - 1] if j > 0 else np.inf,
+                )
+                D[i, j] = best + d
+    return D[n - 1, m - 1]
+
+
+@pytest.mark.parametrize("L", [32, 64, 128])
+def test_dtw_kernel_matches_numpy(L):
+    rng = np.random.default_rng(L)
+    for _ in range(4):
+        nx = int(rng.integers(4, L + 1))
+        ny = int(rng.integers(4, L + 1))
+        x = rng.random(nx)
+        y = rng.random(ny)
+        want = banded_dtw_numpy(x, y)
+        d, _ = dtw.dtw_pair(
+            jnp.array(pad(x, L)),
+            jnp.array(pad(y, L)),
+            jnp.array([nx], jnp.int32),
+            jnp.array([ny], jnp.int32),
+        )
+        assert abs(float(d) - want) < 1e-3 * max(want, 1.0)
+
+
+def test_dtw_kernel_matches_jnp_reference():
+    L = 48
+    rng = np.random.default_rng(7)
+    for _ in range(5):
+        nx = int(rng.integers(4, L + 1))
+        ny = int(rng.integers(4, L + 1))
+        x = pad(rng.random(nx), L)
+        y = pad(rng.random(ny), L)
+        d_ref, _ = ref.dtw_reference(x, y, nx, ny)
+        d_k, _ = dtw.dtw_pair(
+            jnp.array(x), jnp.array(y), jnp.array([nx], jnp.int32), jnp.array([ny], jnp.int32)
+        )
+        np.testing.assert_allclose(float(d_k), float(d_ref), rtol=1e-4, atol=1e-4)
+
+
+def test_dtw_traceback_path_is_optimal():
+    # Backtracking the kernel's choice matrix reproduces the DTW distance.
+    L = 64
+    rng = np.random.default_rng(3)
+    nx, ny = 50, 37
+    x = rng.random(nx)
+    y = rng.random(ny)
+    d, ch = dtw.dtw_pair(
+        jnp.array(pad(x, L)),
+        jnp.array(pad(y, L)),
+        jnp.array([nx], jnp.int32),
+        jnp.array([ny], jnp.int32),
+    )
+    path = ref.backtrack_numpy(np.asarray(ch), nx, ny)
+    cost = sum(abs(x[i] - y[j]) for i, j in path)
+    assert abs(cost - float(d)) < 1e-3
+    # Monotone, connected, endpoint-correct.
+    assert path[0] == (0, 0) and path[-1] == (nx - 1, ny - 1)
+    for (i0, j0), (i1, j1) in zip(path, path[1:]):
+        assert 0 <= i1 - i0 <= 1 and 0 <= j1 - j0 <= 1 and (i1 - i0) + (j1 - j0) >= 1
+
+
+def test_dtw_batch_equals_pairs():
+    L, B = 64, 8
+    rng = np.random.default_rng(5)
+    x = rng.random(60)
+    ys, nys = [], []
+    for _ in range(B):
+        n = int(rng.integers(4, L + 1))
+        ys.append(pad(rng.random(n), L))
+        nys.append(n)
+    dists, _ = dtw.dtw_batch(
+        jnp.array(pad(x, L)),
+        jnp.array(np.stack(ys)),
+        jnp.array([60], jnp.int32),
+        jnp.array(nys, jnp.int32),
+    )
+    for b in range(B):
+        d, _ = dtw.dtw_pair(
+            jnp.array(pad(x, L)),
+            jnp.array(ys[b]),
+            jnp.array([60], jnp.int32),
+            jnp.array([nys[b]], jnp.int32),
+        )
+        np.testing.assert_allclose(float(dists[b]), float(d), rtol=1e-5)
+
+
+def test_dtw_self_distance_zero():
+    L = 32
+    x = pad(np.linspace(0, 1, 28), L)
+    d, _ = dtw.dtw_pair(
+        jnp.array(x), jnp.array(x), jnp.array([28], jnp.int32), jnp.array([28], jnp.int32)
+    )
+    assert abs(float(d)) < 1e-6
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    nx=st.integers(3, 40),
+    ny=st.integers(3, 40),
+    seed=st.integers(0, 2**31),
+)
+def test_dtw_kernel_hypothesis_sweep(nx, ny, seed):
+    L = 40
+    rng = np.random.default_rng(seed)
+    x = rng.random(nx)
+    y = rng.random(ny)
+    want = banded_dtw_numpy(x, y)
+    d, _ = dtw.dtw_pair(
+        jnp.array(pad(x, L)),
+        jnp.array(pad(y, L)),
+        jnp.array([nx], jnp.int32),
+        jnp.array([ny], jnp.int32),
+    )
+    assert abs(float(d) - want) < 1e-3 * max(want, 1.0)
+
+
+def test_preprocess_kernel_matches_references():
+    L = 96
+    rng = np.random.default_rng(11)
+    n = 80
+    x = pad(rng.random(n), L)
+    got = np.asarray(cheby.preprocess(jnp.array(x), jnp.array([n], jnp.int32)))
+    want_jnp = np.asarray(ref.preprocess_reference(filters.PAPER_SOS, x, n))
+    np.testing.assert_allclose(got, want_jnp, atol=3e-5)
+    # Against the float64 design path.
+    y64 = filters.sosfilt(filters.PAPER_SOS, x[:n].astype(np.float64))
+    want64 = (y64 - y64.min()) / (y64.max() - y64.min())
+    np.testing.assert_allclose(got[:n], want64, atol=5e-4)
+    assert np.all(got[n:] == 0.0)
+
+
+@settings(max_examples=10, deadline=None)
+@given(n=st.integers(8, 120), seed=st.integers(0, 2**31))
+def test_preprocess_hypothesis_sweep(n, seed):
+    L = 128
+    rng = np.random.default_rng(seed)
+    x = pad(rng.random(n), L)
+    got = np.asarray(cheby.preprocess(jnp.array(x), jnp.array([n], jnp.int32)))
+    assert got.shape == (L,)
+    assert np.all(got >= 0.0) and np.all(got <= 1.0)
+    assert np.all(got[n:] == 0.0)

@@ -1,0 +1,68 @@
+"""L2 model entry points and the AOT lowering pipeline."""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import aot, model
+
+
+def test_match_one_composes_preprocess_and_dtw():
+    L, B = 64, 8
+    rng = np.random.default_rng(1)
+    raw = np.zeros(L, np.float32)
+    raw[:50] = rng.random(50)
+    ys = np.zeros((B, L), np.float32)
+    nys = np.full(B, 40, np.int32)
+    ys[:, :40] = rng.random((B, 40))
+
+    q, dists, choices = model.match_one(
+        jnp.array(raw), jnp.array(ys), jnp.array([50], jnp.int32), jnp.array(nys)
+    )
+    q2 = model.preprocess(jnp.array(raw), jnp.array([50], jnp.int32))
+    np.testing.assert_allclose(np.asarray(q), np.asarray(q2), atol=1e-6)
+    d2, ch2 = model.dtw_batch(q2, jnp.array(ys), jnp.array([50], jnp.int32), jnp.array(nys))
+    np.testing.assert_allclose(np.asarray(dists), np.asarray(d2), rtol=1e-5)
+    assert choices.shape == (B, L, L)
+    assert choices.dtype == jnp.int8
+    np.testing.assert_array_equal(np.asarray(ch2), np.asarray(choices))
+
+
+def test_entries_cover_every_bucket():
+    names = [name for name, *_ in aot.entries()]
+    for L in aot.BUCKETS:
+        assert f"preprocess_{L}" in names
+        assert f"dtw_pair_{L}" in names
+        assert f"dtw_batch_{aot.BATCH}x{L}" in names
+        assert f"match_one_{aot.BATCH}x{L}" in names
+
+
+def test_lowering_produces_valid_hlo_text():
+    # Lower the smallest preprocess entry and sanity-check the HLO text.
+    name, fn, args, _ = next(iter(aot.entries()))
+    lowered = jax.jit(fn).lower(*args)
+    text = aot.to_hlo_text(lowered)
+    assert text.startswith("HloModule")
+    assert "ENTRY" in text
+
+
+def test_manifest_written(tmp_path):
+    # Full AOT run into a temp dir (slow-ish but the real build-time path).
+    import sys
+
+    argv = sys.argv
+    sys.argv = ["aot", "--out", str(tmp_path)]
+    try:
+        aot.main()
+    finally:
+        sys.argv = argv
+    manifest = json.loads((tmp_path / "manifest.json").read_text())
+    assert manifest["batch"] == aot.BATCH
+    assert sorted(manifest["buckets"]) == sorted(aot.BUCKETS)
+    assert len(manifest["entries"]) == 4 * len(aot.BUCKETS)
+    for e in manifest["entries"]:
+        assert os.path.exists(tmp_path / e["file"])
+        assert e["kind"] in {"preprocess", "dtw_pair", "dtw_batch", "match_one"}

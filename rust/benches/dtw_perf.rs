@@ -1,0 +1,66 @@
+//! Perf bench (L1/L3): DTW similarity throughput across implementations —
+//! pure-Rust full DTW, Sakoe–Chiba banded, FastDTW, and the PJRT-compiled
+//! Pallas kernel (batched). Drives the §Perf iteration log.
+//!
+//! Run with: `cargo bench --bench dtw_perf`
+
+#[path = "harness.rs"]
+mod harness;
+
+use harness::bench;
+use mrtuner::coordinator::batcher::Batcher;
+use mrtuner::dtw::{band_radius, banded::dtw_banded, fastdtw::fastdtw, full::dtw};
+use mrtuner::runtime::RuntimeService;
+use mrtuner::signal;
+use mrtuner::util::rng::Rng;
+
+fn series(len: usize, seed: u64) -> Vec<f64> {
+    let mut rng = Rng::new(seed);
+    let f = 0.05 + rng.f64() * 0.1;
+    signal::preprocess(
+        &(0..len)
+            .map(|i| (0.5 + 0.4 * ((i as f64) * f).sin() + rng.normal_ms(0.0, 0.05)).clamp(0.0, 1.0))
+            .collect::<Vec<_>>(),
+    )
+}
+
+fn main() {
+    mrtuner::util::logging::init();
+    println!("== DTW similarity throughput (per pair) ==");
+    for len in [128usize, 256, 512] {
+        let x = series(len, 1);
+        let y = series(len.saturating_sub(30).max(16), 2);
+        bench(&format!("rust full dtw        L={len}"), 3, 30, || dtw(&x, &y).distance);
+        bench(&format!("rust banded dtw(10%) L={len}"), 3, 30, || {
+            dtw_banded(&x, &y, band_radius(x.len(), y.len())).distance
+        });
+        bench(&format!("rust fastdtw(r=10)   L={len}"), 3, 30, || {
+            fastdtw(&x, &y, 10).distance
+        });
+    }
+
+    match RuntimeService::try_default() {
+        None => println!("(PJRT artifacts missing — run `make artifacts` for kernel numbers)"),
+        Some(svc) => {
+            let rt = svc.handle();
+            let b = rt.batch();
+            println!("\n== PJRT pallas kernel (batch of {b}, per-pair cost shown) ==");
+            for len in [128usize, 256, 512] {
+                let raw = series(len, 3);
+                let refs: Vec<Vec<f64>> =
+                    (0..b as u64).map(|s| series(len - 10, 10 + s)).collect();
+                let batcher = Batcher::new(rt.clone());
+                let stats = bench(
+                    &format!("pjrt match_one batch L={len}"),
+                    2,
+                    10,
+                    || batcher.similarities(&raw, &refs).expect("pjrt"),
+                );
+                println!(
+                    "    -> per-pair {:.3} ms (batch amortized)",
+                    stats.mean_s * 1e3 / b as f64
+                );
+            }
+        }
+    }
+}

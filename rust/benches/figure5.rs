@@ -1,0 +1,52 @@
+//! E2 — regenerate the paper's **Figure 5**: the Table 1 similarity data
+//! plotted per query configuration (here: ASCII bars + CSV to stdout).
+//!
+//! Run with: `cargo bench --bench figure5`
+
+use mrtuner::coordinator::{matcher::Matcher, ConfigGrid, SystemConfig, TuningSystem};
+use mrtuner::prelude::*;
+
+fn bar(p: f64) -> String {
+    let n = (p / 2.0).round() as usize;
+    "#".repeat(n.min(50))
+}
+
+fn main() {
+    mrtuner::util::logging::init();
+    let grid = ConfigGrid::paper_table1();
+    let mut sys = TuningSystem::new(SystemConfig::default());
+    sys.profile_app(AppId::WordCount, &grid);
+    sys.profile_app(AppId::TeraSort, &grid);
+    let m = Matcher::new(&sys.config, sys.runtime());
+    let table = m.similarity_table(AppId::EximParse, &grid, &sys.db);
+
+    println!("== Figure 5: similarity of Exim vs reference apps, per query config ==");
+    for q in &grid.configs {
+        println!("\nquery config {}:", q.label());
+        let mut cells: Vec<_> = table.iter().filter(|c| c.config.label() == q.label()).collect();
+        cells.sort_by(|a, b| b.similarity.partial_cmp(&a.similarity).unwrap());
+        for c in cells {
+            let marker = if c.reference_config.label() == q.label() { "*" } else { " " };
+            println!(
+                "  {:12} {:24}{} {:5.1}% |{}",
+                c.reference_app.name(),
+                c.reference_config.label(),
+                marker,
+                c.similarity,
+                bar(c.similarity)
+            );
+        }
+    }
+
+    println!("\ncsv:");
+    println!("query_config,reference_app,reference_config,similarity_pct");
+    for c in &table {
+        println!(
+            "{},{},{},{:.4}",
+            c.config.label(),
+            c.reference_app.name(),
+            c.reference_config.label(),
+            c.similarity
+        );
+    }
+}

@@ -1,0 +1,67 @@
+//! E3 — regenerate the paper's **Figure 6**: sample de-noised CPU series of
+//! Exim vs WordCount and Exim vs TeraSort under the same configuration set,
+//! shown DTW-aligned (ASCII sketch + CSV).
+//!
+//! Run with: `cargo bench --bench figure6`
+
+use mrtuner::coordinator::profiler::Profiler;
+use mrtuner::coordinator::{ConfigGrid, SystemConfig};
+use mrtuner::dtw::{band_radius, banded::dtw_banded, corr::similarity_from_alignment};
+use mrtuner::prelude::*;
+
+fn sketch(s: &[f64]) -> String {
+    let n = 72.min(s.len());
+    (0..n)
+        .map(|i| {
+            let v = s[i * s.len() / n];
+            char::from_digit((v * 9.99) as u32, 10).unwrap_or('?')
+        })
+        .collect()
+}
+
+fn main() {
+    mrtuner::util::logging::init();
+    let grid = ConfigGrid::paper_table1();
+    let sc = SystemConfig::default();
+    let p = Profiler::new(&sc, None);
+
+    println!("== Figure 6: aligned sample series (same configuration set) ==");
+    for cfg in &grid.configs {
+        let exim = p.profile_one(AppId::EximParse, cfg);
+        println!("\nconfig {} (exim len {}s):", cfg.label(), exim.raw_len);
+        println!("  exim        {}", sketch(&exim.series));
+        for app in [AppId::WordCount, AppId::TeraSort] {
+            let r = p.profile_one(app, cfg);
+            let align = dtw_banded(
+                &exim.series,
+                &r.series,
+                band_radius(exim.series.len(), r.series.len()),
+            );
+            let warped = align.warp_onto_x(&r.series, exim.series.len());
+            let sim = similarity_from_alignment(&align, &exim.series, &r.series);
+            println!("  {:10}  {}  sim={sim:5.1}%", app.name(), sketch(&warped));
+        }
+    }
+    println!(
+        "\n(the paper's visual: Exim and WordCount curves nearly coincide; \
+         TeraSort's shape deviates — the warped sketches above show the same)"
+    );
+
+    // CSV for plotting.
+    let cfg = grid.configs[0];
+    let exim = p.profile_one(AppId::EximParse, &cfg);
+    println!("\ncsv (config {}):", cfg.label());
+    println!("pair,t,exim,reference_warped");
+    for app in [AppId::WordCount, AppId::TeraSort] {
+        let r = p.profile_one(app, &cfg);
+        let align = dtw_banded(
+            &exim.series,
+            &r.series,
+            band_radius(exim.series.len(), r.series.len()),
+        );
+        let warped = align.warp_onto_x(&r.series, exim.series.len());
+        for (t, (x, y)) in exim.series.iter().zip(&warped).enumerate() {
+            println!("exim-vs-{},{t},{x:.5},{y:.5}", app.name());
+        }
+    }
+}

@@ -1,0 +1,59 @@
+//! Minimal measurement harness for the `harness = false` benches
+//! (criterion is not vendorable offline): warmup + N timed samples,
+//! reporting mean / p50 / p99.
+
+use std::time::Instant;
+
+/// Time `f` over `samples` iterations after `warmup` untimed runs.
+pub fn bench<T>(name: &str, warmup: usize, samples: usize, mut f: impl FnMut() -> T) -> BenchStats {
+    for _ in 0..warmup {
+        std::hint::black_box(f());
+    }
+    let mut times = Vec::with_capacity(samples);
+    for _ in 0..samples {
+        let t0 = Instant::now();
+        std::hint::black_box(f());
+        times.push(t0.elapsed().as_secs_f64());
+    }
+    let stats = BenchStats::from_times(name, &times);
+    println!("{stats}");
+    stats
+}
+
+/// Summary of one bench run.
+pub struct BenchStats {
+    pub name: String,
+    pub mean_s: f64,
+    pub p50_s: f64,
+    pub p99_s: f64,
+    pub samples: usize,
+}
+
+impl BenchStats {
+    pub fn from_times(name: &str, times: &[f64]) -> BenchStats {
+        let mut sorted = times.to_vec();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let pct = |q: f64| sorted[((q * (sorted.len() - 1) as f64).round() as usize).min(sorted.len() - 1)];
+        BenchStats {
+            name: name.to_string(),
+            mean_s: times.iter().sum::<f64>() / times.len() as f64,
+            p50_s: pct(0.50),
+            p99_s: pct(0.99),
+            samples: times.len(),
+        }
+    }
+}
+
+impl std::fmt::Display for BenchStats {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{:44} mean {:>9.3} ms  p50 {:>9.3} ms  p99 {:>9.3} ms  (n={})",
+            self.name,
+            self.mean_s * 1e3,
+            self.p50_s * 1e3,
+            self.p99_s * 1e3,
+            self.samples
+        )
+    }
+}

@@ -1,0 +1,76 @@
+//! Perf bench (L3): end-to-end coordinator throughput — profiling phase
+//! rate, matching phase latency (vote over a grid), and serve-mode request
+//! latency. The headline numbers for EXPERIMENTS.md §Perf.
+//!
+//! Run with: `cargo bench --bench pipeline_perf`
+
+#[path = "harness.rs"]
+mod harness;
+
+use harness::bench;
+use mrtuner::coordinator::matcher::Matcher;
+use mrtuner::coordinator::metrics::Metrics;
+use mrtuner::coordinator::profiler::Profiler;
+use mrtuner::coordinator::server::{handle_request, ServerState};
+use mrtuner::coordinator::{ConfigGrid, SystemConfig, TuningSystem};
+use mrtuner::prelude::*;
+use mrtuner::util::json::Json;
+
+fn main() {
+    mrtuner::util::logging::init();
+    let grid = ConfigGrid::random(12, 9);
+    let sc = SystemConfig::default();
+
+    // Profiling-phase throughput (12 configs, parallel).
+    let profiler = Profiler::new(&sc, None);
+    let stats = bench("profile wordcount over 12 configs (par)", 1, 5, || {
+        profiler.profile(AppId::WordCount, &grid)
+    });
+    println!(
+        "    -> {:.1} profiles/s",
+        12.0 / stats.mean_s
+    );
+
+    // Matching-phase latency (vote over the grid, 2-app db).
+    let mut sys = TuningSystem::new(sc.clone());
+    sys.profile_app(AppId::WordCount, &grid);
+    sys.profile_app(AppId::TeraSort, &grid);
+    let matcher = Matcher::new(&sys.config, sys.runtime());
+    bench("match exim over 12 configs (vote)", 1, 5, || {
+        matcher.match_app(AppId::EximParse, &grid, &sys.db)
+    });
+
+    // Serve-mode request latency (in-process dispatch; one query against
+    // every same-config reference).
+    let cfg = grid.configs[0];
+    let raw = profiler.profile_one(AppId::EximParse, &cfg);
+    let state = ServerState {
+        db: {
+            let mut db = ReferenceDb::new();
+            for e in sys.db.entries() {
+                db.insert(e.clone());
+            }
+            db
+        },
+        runtime: sys.runtime(),
+        metrics: Metrics::new(),
+    };
+    let req = Json::obj(vec![
+        ("cmd", Json::Str("match".into())),
+        ("series", Json::nums(&raw.series)),
+        (
+            "config",
+            Json::obj(vec![
+                ("mappers", Json::Num(cfg.mappers as f64)),
+                ("reducers", Json::Num(cfg.reducers as f64)),
+                ("split_mb", Json::Num(cfg.split_mb)),
+                ("input_mb", Json::Num(cfg.input_mb)),
+            ]),
+        ),
+    ])
+    .to_string();
+    bench("serve: match request (same-config refs)", 3, 50, || {
+        handle_request(&req, &state).expect("request ok")
+    });
+    println!("\nserver metrics: {}", state.metrics.report());
+}

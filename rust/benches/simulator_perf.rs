@@ -1,0 +1,69 @@
+//! Perf bench (substrate): discrete-event simulator throughput — events/s
+//! and wall time per simulated job across job sizes and cluster scales,
+//! plus an ablation of speculative execution (DESIGN.md design choice).
+//!
+//! Run with: `cargo bench --bench simulator_perf`
+
+#[path = "harness.rs"]
+mod harness;
+
+use harness::bench;
+use mrtuner::signal::noise::NoiseModel;
+use mrtuner::simulator::cluster::ClusterConfig;
+use mrtuner::simulator::engine::simulate;
+use mrtuner::simulator::job::JobConfig;
+use mrtuner::util::rng::Rng;
+use mrtuner::workloads::{workload_for, AppId};
+
+fn main() {
+    mrtuner::util::logging::init();
+    println!("== simulator throughput ==");
+    for (label, cfg) in [
+        ("small  (M=8,  I=50MB) ", JobConfig::new(8, 4, 10.0, 50.0)),
+        ("medium (M=21, I=80MB) ", JobConfig::new(21, 30, 10.0, 80.0)),
+        ("large  (M=42, I=500MB)", JobConfig::new(42, 33, 20.0, 500.0)),
+    ] {
+        for app in [AppId::WordCount, AppId::TeraSort] {
+            let w = workload_for(app);
+            let cluster = ClusterConfig::pseudo_distributed();
+            let mut events = 0u64;
+            let stats = bench(&format!("{label} {:10}", app.name()), 2, 10, || {
+                let r = simulate(w.as_ref(), &cfg, &cluster, &NoiseModel::default(), &mut Rng::new(7));
+                events = r.counters.events;
+                r.completion_secs
+            });
+            println!(
+                "    -> {events} events, {:.0} events/ms, sim/wall ratio {:.0}x",
+                events as f64 / (stats.mean_s * 1e3),
+                {
+                    let r = simulate(w.as_ref(), &cfg, &cluster, &NoiseModel::default(), &mut Rng::new(7));
+                    r.completion_secs / stats.mean_s
+                }
+            );
+        }
+    }
+
+    println!("\n== cluster scaling (WordCount, M=64, I=1GB) ==");
+    let cfg = JobConfig::new(64, 16, 32.0, 1024.0);
+    let w = workload_for(AppId::WordCount);
+    for nodes in [1usize, 4, 16] {
+        let cluster = ClusterConfig::cluster(nodes);
+        bench(&format!("nodes={nodes:2}"), 1, 5, || {
+            simulate(w.as_ref(), &cfg, &cluster, &NoiseModel::none(), &mut Rng::new(1)).completion_secs
+        });
+    }
+
+    println!("\n== ablation: speculative execution under stragglers ==");
+    let cfg = JobConfig::new(12, 4, 10.0, 60.0);
+    for (label, speculative) in [("speculation off", false), ("speculation on ", true)] {
+        let mut cluster = ClusterConfig::pseudo_distributed();
+        cluster.speculative = speculative;
+        cluster.task_jitter = 0.5;
+        let mut mean_completion = 0.0;
+        for seed in 0..20u64 {
+            let r = simulate(w.as_ref(), &cfg, &cluster, &NoiseModel::none(), &mut Rng::new(seed));
+            mean_completion += r.completion_secs / 20.0;
+        }
+        println!("  {label}: mean completion {mean_completion:.1}s over 20 seeds");
+    }
+}

@@ -1,0 +1,55 @@
+//! E1 — regenerate the paper's **Table 1**: similarity of Exim mainlog
+//! parsing against WordCount and TeraSort under the four printed
+//! configuration sets, plus timing of the full table computation.
+//!
+//! Run with: `cargo bench --bench table1`
+
+#[path = "harness.rs"]
+mod harness;
+
+use mrtuner::coordinator::{matcher::Matcher, print_table1, ConfigGrid, SystemConfig, TuningSystem};
+use mrtuner::prelude::*;
+
+fn main() {
+    mrtuner::util::logging::init();
+    let grid = ConfigGrid::paper_table1();
+    let mut sys = TuningSystem::new(SystemConfig::default());
+    sys.profile_app(AppId::WordCount, &grid);
+    sys.profile_app(AppId::TeraSort, &grid);
+    let m = Matcher::new(&sys.config, sys.runtime());
+
+    let table = m.similarity_table(AppId::EximParse, &grid, &sys.db);
+    println!("== Table 1 (paper: diag Exim~WC 91.8-94.4%, Exim~TS 58-89%) ==");
+    print_table1(&table, &grid);
+
+    // Validation summary (shape, not absolute values).
+    let mut diag_ok = 0;
+    for q in &grid.configs {
+        let wc = table
+            .iter()
+            .find(|c| {
+                c.reference_app == AppId::WordCount
+                    && c.reference_config.label() == q.label()
+                    && c.config.label() == q.label()
+            })
+            .unwrap()
+            .similarity;
+        let ts = table
+            .iter()
+            .find(|c| {
+                c.reference_app == AppId::TeraSort
+                    && c.reference_config.label() == q.label()
+                    && c.config.label() == q.label()
+            })
+            .unwrap()
+            .similarity;
+        if wc >= 90.0 && wc > ts {
+            diag_ok += 1;
+        }
+    }
+    println!("\nsame-config cells where WC>=90% and WC>TS: {diag_ok}/4 (paper: 4/4)");
+
+    harness::bench("table1: 8x4 similarity table end-to-end", 1, 5, || {
+        m.similarity_table(AppId::EximParse, &grid, &sys.db)
+    });
+}

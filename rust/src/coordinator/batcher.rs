@@ -1,0 +1,267 @@
+//! Comparison batcher: packs (query, references) comparisons into full
+//! `dtw_batch` PJRT executions and post-processes the traceback into the
+//! paper's correlation similarity. This is the matching-phase hot loop.
+
+use crate::runtime::{BatchOutput, Padded, RuntimeHandle};
+use crate::util::stats::pearson;
+
+/// Similarity (%) from one batch lane: backtrack the choice matrix, warp
+/// the reference onto the query axis, correlate (paper eqn. 3).
+/// Reuses caller-provided scratch to avoid allocation in the hot loop.
+pub fn lane_similarity(
+    query: &[f32],
+    nx: usize,
+    reference: &[f32],
+    ny: usize,
+    choices: &[i8],
+    bucket: usize,
+    warped: &mut Vec<f64>,
+    qbuf: &mut Vec<f64>,
+) -> f64 {
+    debug_assert!(nx >= 1 && ny >= 1);
+    debug_assert_eq!(choices.len(), bucket * bucket);
+    // Backtrack over the valid sub-matrix; the choice matrix is row-major
+    // over the full bucket, so index with the bucket stride.
+    warped.clear();
+    warped.resize(nx, 0.0);
+    qbuf.clear();
+    qbuf.extend(query[..nx].iter().map(|&v| v as f64));
+
+    // Walk the path backwards. The forward construction keeps the *last*
+    // (largest-j) visit per row, which is the first time the backward walk
+    // touches a row — so only write on row change.
+    let (mut i, mut j) = (nx - 1, ny - 1);
+    let mut last_row = usize::MAX;
+    loop {
+        if i != last_row {
+            warped[i] = reference[j] as f64;
+            last_row = i;
+        }
+        if i == 0 && j == 0 {
+            break;
+        }
+        if i == 0 {
+            j -= 1;
+            continue;
+        }
+        if j == 0 {
+            i -= 1;
+            continue;
+        }
+        match choices[i * bucket + j] as u8 {
+            crate::dtw::CHOICE_DIAG => {
+                i -= 1;
+                j -= 1;
+            }
+            crate::dtw::CHOICE_UP => i -= 1,
+            _ => j -= 1,
+        }
+    }
+    (pearson(qbuf, warped).max(0.0) * 100.0).min(100.0)
+}
+
+/// Batched similarity computation against a set of references.
+///
+/// References are grouped by padded bucket; each group runs through the
+/// fused `match_one` artifact in chunks of the manifest batch size (the
+/// final chunk is padded with copies of the first reference and the
+/// extra lanes discarded).
+pub struct Batcher {
+    runtime: RuntimeHandle,
+}
+
+impl Batcher {
+    pub fn new(runtime: RuntimeHandle) -> Batcher {
+        Batcher { runtime }
+    }
+
+    /// Similarities (%) of `raw_query` against each reference series.
+    /// `raw_query` is the noisy capture; references are already
+    /// preprocessed (as stored in the database).
+    pub fn similarities(
+        &self,
+        raw_query: &[f64],
+        references: &[Vec<f64>],
+    ) -> anyhow::Result<Vec<f64>> {
+        if references.is_empty() {
+            return Ok(Vec::new());
+        }
+        let b = self.runtime.batch();
+        let max_ref = references.iter().map(|r| r.len()).max().unwrap_or(1);
+        let bucket = self.runtime.bucket_for(raw_query.len().max(max_ref));
+        let query = Padded::fit(raw_query, bucket);
+        let refs: Vec<Padded> = references.iter().map(|r| Padded::fit(r, bucket)).collect();
+
+        let mut sims = Vec::with_capacity(references.len());
+        let mut warped = Vec::new();
+        let mut qbuf = Vec::new();
+        for chunk in refs.chunks(b) {
+            let mut lane_refs: Vec<Padded> = chunk.to_vec();
+            while lane_refs.len() < b {
+                lane_refs.push(chunk[0].clone()); // discarded padding lane
+            }
+            let (q, out): (Padded, BatchOutput) =
+                self.runtime.match_one(query.clone(), lane_refs)?;
+            for (lane, r) in chunk.iter().enumerate() {
+                let sim = lane_similarity(
+                    &q.data,
+                    q.len,
+                    &refs[sims.len()].data,
+                    r.len,
+                    out.lane_choices(lane),
+                    bucket,
+                    &mut warped,
+                    &mut qbuf,
+                );
+                sims.push(sim);
+            }
+        }
+        Ok(sims)
+    }
+}
+
+/// Execution-mode policy for the similarity hot path.
+///
+/// `MRTUNER_MODE` overrides: `pjrt` (always use the compiled artifacts),
+/// `rust` (always the native fallback), `auto` (default — use PJRT for
+/// small buckets where batch amortization keeps it competitive on the
+/// CPU-interpret build, native Rust for the large ones; on a real TPU
+/// deployment set `pjrt`). Decided per call from the padded bucket size.
+/// §Perf in EXPERIMENTS.md records the measured crossover.
+pub fn use_pjrt_for_bucket(bucket: usize) -> bool {
+    match std::env::var("MRTUNER_MODE").as_deref() {
+        Ok("pjrt") => true,
+        Ok("rust") => false,
+        _ => bucket <= 128,
+    }
+}
+
+/// Route one similarity batch through PJRT or the native path per the
+/// mode policy above.
+pub fn similarities_auto(
+    runtime: Option<&RuntimeHandle>,
+    raw_query: &[f64],
+    references: &[Vec<f64>],
+) -> Vec<f64> {
+    if references.is_empty() {
+        return Vec::new();
+    }
+    if let Some(rt) = runtime {
+        let max_ref = references.iter().map(|r| r.len()).max().unwrap_or(1);
+        let bucket = rt.bucket_for(raw_query.len().max(max_ref));
+        if use_pjrt_for_bucket(bucket) {
+            match Batcher::new(rt.clone()).similarities(raw_query, references) {
+                Ok(s) => return s,
+                Err(e) => log::warn!("runtime matching failed ({e:#}); falling back"),
+            }
+        }
+    }
+    similarities_fallback(raw_query, references)
+}
+
+/// Pure-Rust fallback with identical semantics (used when no artifacts are
+/// available, and by the parity tests).
+pub fn similarities_fallback(raw_query: &[f64], references: &[Vec<f64>]) -> Vec<f64> {
+    let capped = if raw_query.len() > 512 {
+        crate::signal::resample::linear(raw_query, 512)
+    } else {
+        raw_query.to_vec()
+    };
+    let q = crate::signal::preprocess(&capped);
+    references
+        .iter()
+        .map(|r| crate::dtw::corr::similarity_percent_banded(&q, r))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dtw::full::dtw;
+
+    #[test]
+    fn lane_similarity_matches_fallback_path() {
+        // Build a pair, run Rust DTW to get choices in the same encoding,
+        // and check lane_similarity agrees with the reference pipeline.
+        let q: Vec<f64> = (0..40).map(|i| 0.5 + 0.4 * ((i as f64) * 0.3).sin()).collect();
+        let r: Vec<f64> = (0..30).map(|i| 0.5 + 0.4 * ((i as f64) * 0.4).sin()).collect();
+        let res = dtw(&q, &r);
+        let expected = crate::dtw::corr::similarity_from_alignment(&res, &q, &r);
+
+        // Recreate a bucket-shaped choice matrix from the Rust DP.
+        let bucket = 64usize;
+        let (n, m) = (q.len(), r.len());
+        let mut choices = vec![0i8; bucket * bucket];
+        // Recompute with the full matrix to extract choices.
+        let full = full_choices(&q, &r);
+        for i in 0..n {
+            for j in 0..m {
+                choices[i * bucket + j] = full[i * m + j] as i8;
+            }
+        }
+        let qf: Vec<f32> = q
+            .iter()
+            .map(|&v| v as f32)
+            .chain(std::iter::repeat(0.0).take(bucket - n))
+            .collect();
+        let rf: Vec<f32> = r
+            .iter()
+            .map(|&v| v as f32)
+            .chain(std::iter::repeat(0.0).take(bucket - m))
+            .collect();
+        let mut warped = Vec::new();
+        let mut qbuf = Vec::new();
+        let got = lane_similarity(&qf, n, &rf, m, &choices, bucket, &mut warped, &mut qbuf);
+        assert!(
+            (got - expected).abs() < 0.05,
+            "lane {got} vs reference {expected}"
+        );
+    }
+
+    /// Rust DP returning the full choice matrix (test helper).
+    fn full_choices(x: &[f64], y: &[f64]) -> Vec<u8> {
+        use crate::dtw::{local_cost, CHOICE_DIAG, CHOICE_LEFT, CHOICE_UP};
+        let (n, m) = (x.len(), y.len());
+        let mut choices = vec![0u8; n * m];
+        let mut prev = vec![0.0f64; m];
+        let mut cur = vec![0.0f64; m];
+        cur[0] = local_cost(x[0], y[0]);
+        for j in 1..m {
+            cur[j] = cur[j - 1] + local_cost(x[0], y[j]);
+            choices[j] = CHOICE_LEFT;
+        }
+        std::mem::swap(&mut prev, &mut cur);
+        for i in 1..n {
+            let row = i * m;
+            cur[0] = prev[0] + local_cost(x[i], y[0]);
+            choices[row] = CHOICE_UP;
+            for j in 1..m {
+                let d = local_cost(x[i], y[j]);
+                let (vg, vchoice) = if prev[j - 1] <= prev[j] {
+                    (prev[j - 1], CHOICE_DIAG)
+                } else {
+                    (prev[j], CHOICE_UP)
+                };
+                if cur[j - 1] < vg {
+                    cur[j] = cur[j - 1] + d;
+                    choices[row + j] = CHOICE_LEFT;
+                } else {
+                    cur[j] = vg + d;
+                    choices[row + j] = vchoice;
+                }
+            }
+            std::mem::swap(&mut prev, &mut cur);
+        }
+        choices
+    }
+
+    #[test]
+    fn fallback_identical_series_is_100() {
+        let q: Vec<f64> = (0..60).map(|i| 0.5 + 0.4 * ((i as f64) * 0.2).sin()).collect();
+        // The fallback preprocesses the query but not the reference, so
+        // feed a reference that IS the preprocessed query.
+        let qp = crate::signal::preprocess(&q);
+        let sims = similarities_fallback(&q, &[qp]);
+        assert!(sims[0] > 99.0, "self similarity {}", sims[0]);
+    }
+}

@@ -1,0 +1,274 @@
+//! Matching phase (paper §4, Figure 4b): profile the unknown application
+//! under each configuration set, compare its pattern to every database
+//! entry captured under the *same* set, pick the per-set winner when its
+//! correlation clears 90%, and declare the app with the most wins the most
+//! similar application.
+
+use super::batcher::similarities_auto;
+use super::{ConfigGrid, SystemConfig};
+use crate::database::store::ReferenceDb;
+use crate::dtw::corr::MATCH_THRESHOLD;
+use crate::runtime::RuntimeHandle;
+use crate::simulator::job::JobConfig;
+use crate::util::pool::par_map;
+use crate::workloads::AppId;
+use std::collections::BTreeMap;
+
+/// One (config set, reference app) similarity measurement.
+#[derive(Debug, Clone)]
+pub struct SimilarityCell {
+    pub config: JobConfig,
+    pub reference_app: AppId,
+    pub reference_config: JobConfig,
+    pub similarity: f64,
+}
+
+/// Per-configuration-set result: the best reference app, if it cleared the
+/// paper's 90% acceptance threshold.
+#[derive(Debug, Clone)]
+pub struct ConfigVote {
+    pub config: JobConfig,
+    pub best_app: Option<AppId>,
+    pub best_similarity: f64,
+}
+
+/// Outcome of the matching phase.
+#[derive(Debug, Clone)]
+pub struct MatchOutcome {
+    pub query_app: AppId,
+    /// Every same-config comparison performed.
+    pub cells: Vec<SimilarityCell>,
+    /// Per-config winner (paper Fig. 4b line 12).
+    pub votes: Vec<ConfigVote>,
+    /// App with the highest number of accepted CORRs, if any.
+    pub winner: Option<AppId>,
+    /// Votes per app.
+    pub tally: BTreeMap<&'static str, usize>,
+}
+
+/// Runs the matching phase.
+pub struct Matcher {
+    config: SystemConfig,
+    runtime: Option<RuntimeHandle>,
+}
+
+impl Matcher {
+    pub fn new(config: &SystemConfig, runtime: Option<RuntimeHandle>) -> Matcher {
+        Matcher {
+            config: config.clone(),
+            runtime,
+        }
+    }
+
+    /// Similarities of a raw query capture against stored references
+    /// (PJRT or native per the mode policy — see batcher::use_pjrt_for_bucket).
+    fn similarities(&self, raw_query: &[f64], refs: &[Vec<f64>]) -> Vec<f64> {
+        similarities_auto(self.runtime.as_ref(), raw_query, refs)
+    }
+
+    /// Full matching phase for `app` over `grid` against `db`.
+    pub fn match_app(&self, app: AppId, grid: &ConfigGrid, db: &ReferenceDb) -> MatchOutcome {
+        // Profile the unknown app and compare, one config set at a time.
+        let per_config: Vec<(Vec<SimilarityCell>, ConfigVote)> =
+            par_map(&grid.configs, self.config.workers, |cfg| {
+                // Capture the raw (noisy) series; preprocessing happens in
+                // the fused match path.
+                let workload = crate::workloads::workload_for(app);
+                let mut rng =
+                    crate::util::rng::Rng::new(self.run_seed(app, cfg));
+                let sim = crate::simulator::engine::simulate(
+                    workload.as_ref(),
+                    cfg,
+                    &self.config.cluster,
+                    &self.config.noise,
+                    &mut rng,
+                );
+                let raw = sim.cpu_noisy;
+
+                let refs = db.by_config(&cfg.label());
+                let ref_series: Vec<Vec<f64>> =
+                    refs.iter().map(|e| e.series.clone()).collect();
+                let sims = self.similarities(&raw, &ref_series);
+
+                let mut cells = Vec::with_capacity(refs.len());
+                let mut best: Option<(AppId, f64)> = None;
+                for (e, s) in refs.iter().zip(sims.iter()) {
+                    cells.push(SimilarityCell {
+                        config: *cfg,
+                        reference_app: e.app,
+                        reference_config: e.config,
+                        similarity: *s,
+                    });
+                    if best.map_or(true, |(_, bs)| *s > bs) {
+                        best = Some((e.app, *s));
+                    }
+                }
+                let vote = ConfigVote {
+                    config: *cfg,
+                    best_app: best
+                        .filter(|(_, s)| *s >= MATCH_THRESHOLD)
+                        .map(|(a, _)| a),
+                    best_similarity: best.map(|(_, s)| s).unwrap_or(0.0),
+                };
+                (cells, vote)
+            });
+
+        let mut cells = Vec::new();
+        let mut votes = Vec::new();
+        for (c, v) in per_config {
+            cells.extend(c);
+            votes.push(v);
+        }
+
+        let mut tally: BTreeMap<&'static str, usize> = BTreeMap::new();
+        for v in &votes {
+            if let Some(app) = v.best_app {
+                *tally.entry(app.name()).or_insert(0) += 1;
+            }
+        }
+        let winner = tally
+            .iter()
+            .max_by_key(|(_, &n)| n)
+            .map(|(name, _)| AppId::from_name(name).expect("tally key is valid"));
+
+        MatchOutcome {
+            query_app: app,
+            cells,
+            votes,
+            winner,
+            tally,
+        }
+    }
+
+    /// Cross-config similarity table (Table 1 reproduction): the query app
+    /// profiled at each grid config vs *every* reference entry — including
+    /// different-config references, which the paper's Table 1 shows as the
+    /// off-diagonal cells.
+    pub fn similarity_table(
+        &self,
+        app: AppId,
+        grid: &ConfigGrid,
+        db: &ReferenceDb,
+    ) -> Vec<SimilarityCell> {
+        let all_refs: Vec<(AppId, JobConfig, Vec<f64>)> = db
+            .entries()
+            .iter()
+            .map(|e| (e.app, e.config, e.series.clone()))
+            .collect();
+        let per_config: Vec<Vec<SimilarityCell>> =
+            par_map(&grid.configs, self.config.workers, |cfg| {
+                let workload = crate::workloads::workload_for(app);
+                let mut rng =
+                    crate::util::rng::Rng::new(self.run_seed(app, cfg));
+                let sim = crate::simulator::engine::simulate(
+                    workload.as_ref(),
+                    cfg,
+                    &self.config.cluster,
+                    &self.config.noise,
+                    &mut rng,
+                );
+                let ref_series: Vec<Vec<f64>> =
+                    all_refs.iter().map(|(_, _, s)| s.clone()).collect();
+                let sims = self.similarities(&sim.cpu_noisy, &ref_series);
+                all_refs
+                    .iter()
+                    .zip(sims)
+                    .map(|((ra, rc, _), s)| SimilarityCell {
+                        config: *cfg,
+                        reference_app: *ra,
+                        reference_config: *rc,
+                        similarity: s,
+                    })
+                    .collect()
+            });
+        per_config.into_iter().flatten().collect()
+    }
+
+    fn run_seed(&self, app: AppId, cfg: &JobConfig) -> u64 {
+        // Distinct stream from the profiler's (the paper re-runs the new
+        // application; it does not reuse the reference capture).
+        let mut h: u64 = self.config.seed ^ 0x00c0_ffee_0000_0001;
+        for b in app.name().bytes().chain(cfg.label().bytes()) {
+            h = h.wrapping_mul(0x100_0000_01b3) ^ b as u64;
+        }
+        h
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::profiler::Profiler;
+
+    fn sysconfig() -> SystemConfig {
+        SystemConfig {
+            workers: 2,
+            use_runtime: false,
+            ..SystemConfig::default()
+        }
+    }
+
+    fn build_db(grid: &ConfigGrid) -> ReferenceDb {
+        let cfg = sysconfig();
+        let p = Profiler::new(&cfg, None);
+        let mut db = ReferenceDb::new();
+        for app in [AppId::WordCount, AppId::TeraSort] {
+            for e in p.profile(app, grid) {
+                db.insert(e);
+            }
+        }
+        db
+    }
+
+    #[test]
+    fn self_match_wins_every_config() {
+        // Matching WordCount against a DB containing WordCount must vote
+        // WordCount everywhere (different noise seeds, same underlying
+        // pattern).
+        let grid = ConfigGrid::small(1);
+        let db = build_db(&grid);
+        let m = Matcher::new(&sysconfig(), None);
+        let outcome = m.match_app(AppId::WordCount, &grid, &db);
+        assert_eq!(outcome.winner, Some(AppId::WordCount));
+        let wc_votes = outcome.tally.get("wordcount").copied().unwrap_or(0);
+        assert!(
+            wc_votes >= grid.len() - 1,
+            "wordcount won only {wc_votes}/{} votes: {:?}",
+            grid.len(),
+            outcome.tally
+        );
+    }
+
+    #[test]
+    fn exim_matches_wordcount_not_terasort() {
+        // The paper's headline result.
+        let grid = ConfigGrid::small(2);
+        let db = build_db(&grid);
+        let m = Matcher::new(&sysconfig(), None);
+        let outcome = m.match_app(AppId::EximParse, &grid, &db);
+        assert_eq!(outcome.winner, Some(AppId::WordCount), "tally {:?}", outcome.tally);
+    }
+
+    #[test]
+    fn empty_db_yields_no_winner() {
+        let grid = ConfigGrid::small(3);
+        let db = ReferenceDb::new();
+        let m = Matcher::new(&sysconfig(), None);
+        let outcome = m.match_app(AppId::Grep, &grid, &db);
+        assert_eq!(outcome.winner, None);
+        assert!(outcome.cells.is_empty());
+    }
+
+    #[test]
+    fn similarity_table_is_complete() {
+        let grid = ConfigGrid::paper_table1();
+        let db = build_db(&grid);
+        let m = Matcher::new(&sysconfig(), None);
+        let table = m.similarity_table(AppId::EximParse, &grid, &db);
+        // 4 query configs x (2 apps x 4 ref configs) = 32 cells.
+        assert_eq!(table.len(), 32);
+        for c in &table {
+            assert!((0.0..=100.0).contains(&c.similarity));
+        }
+    }
+}

@@ -1,0 +1,124 @@
+//! Service metrics: counters and latency statistics for the serve loop and
+//! the perf benches.
+
+use crate::util::stats::Welford;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+/// Thread-safe metrics registry.
+#[derive(Debug, Default)]
+pub struct Metrics {
+    pub comparisons: AtomicU64,
+    pub batches: AtomicU64,
+    pub requests: AtomicU64,
+    pub errors: AtomicU64,
+    latency: Mutex<Welford>,
+}
+
+impl Metrics {
+    pub fn new() -> Metrics {
+        Metrics::default()
+    }
+
+    pub fn inc_comparisons(&self, n: u64) {
+        self.comparisons.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn inc_batches(&self) {
+        self.batches.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn inc_requests(&self) {
+        self.requests.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn inc_errors(&self) {
+        self.errors.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record a request latency.
+    pub fn observe_latency(&self, seconds: f64) {
+        self.latency.lock().expect("latency lock").push(seconds);
+    }
+
+    /// Time a closure and record its latency.
+    pub fn time<T>(&self, f: impl FnOnce() -> T) -> T {
+        let t0 = Instant::now();
+        let out = f();
+        self.observe_latency(t0.elapsed().as_secs_f64());
+        out
+    }
+
+    /// Snapshot: (count, mean_s, stddev_s, min_s, max_s).
+    pub fn latency_summary(&self) -> (u64, f64, f64, f64, f64) {
+        let w = self.latency.lock().expect("latency lock");
+        (w.count(), w.mean(), w.stddev(), w.min(), w.max())
+    }
+
+    /// One-line human-readable report.
+    pub fn report(&self) -> String {
+        let (n, mean, std, min, max) = self.latency_summary();
+        format!(
+            "requests={} comparisons={} batches={} errors={} latency: n={} mean={:.1}ms sd={:.1}ms min={:.1}ms max={:.1}ms",
+            self.requests.load(Ordering::Relaxed),
+            self.comparisons.load(Ordering::Relaxed),
+            self.batches.load(Ordering::Relaxed),
+            self.errors.load(Ordering::Relaxed),
+            n,
+            mean * 1e3,
+            std * 1e3,
+            min * 1e3,
+            max * 1e3,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn counters_accumulate() {
+        let m = Metrics::new();
+        m.inc_comparisons(5);
+        m.inc_comparisons(3);
+        m.inc_batches();
+        m.inc_requests();
+        m.inc_errors();
+        assert_eq!(m.comparisons.load(Ordering::Relaxed), 8);
+        assert!(m.report().contains("comparisons=8"));
+    }
+
+    #[test]
+    fn latency_stats() {
+        let m = Metrics::new();
+        m.observe_latency(0.010);
+        m.observe_latency(0.020);
+        m.observe_latency(0.030);
+        let (n, mean, _, min, max) = m.latency_summary();
+        assert_eq!(n, 3);
+        assert!((mean - 0.020).abs() < 1e-9);
+        assert_eq!(min, 0.010);
+        assert_eq!(max, 0.030);
+    }
+
+    #[test]
+    fn concurrent_updates() {
+        let m = Arc::new(Metrics::new());
+        std::thread::scope(|s| {
+            for _ in 0..8 {
+                let m = Arc::clone(&m);
+                s.spawn(move || {
+                    for _ in 0..1000 {
+                        m.inc_comparisons(1);
+                        m.observe_latency(0.001);
+                    }
+                });
+            }
+        });
+        assert_eq!(m.comparisons.load(Ordering::Relaxed), 8000);
+        assert_eq!(m.latency_summary().0, 8000);
+    }
+}

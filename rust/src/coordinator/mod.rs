@@ -1,0 +1,226 @@
+//! The coordinator: the paper's two-phase system (profiling + matching)
+//! plus the self-tuning step that motivates it, orchestrated over the
+//! simulator substrate and the PJRT runtime.
+
+pub mod batcher;
+pub mod matcher;
+pub mod metrics;
+pub mod profiler;
+pub mod server;
+pub mod tuner;
+
+use crate::database::store::ReferenceDb;
+use crate::runtime::{RuntimeHandle, RuntimeService};
+use crate::signal::noise::NoiseModel;
+use crate::simulator::cluster::ClusterConfig;
+use crate::simulator::job::JobConfig;
+use crate::util::rng::Rng;
+use crate::workloads::AppId;
+
+/// System-wide configuration.
+#[derive(Debug, Clone)]
+pub struct SystemConfig {
+    /// Simulated cluster (defaults to the paper's pseudo-distributed box).
+    pub cluster: ClusterConfig,
+    /// Measurement-noise model applied to captured series.
+    pub noise: NoiseModel,
+    /// Master seed for all deterministic randomness.
+    pub seed: u64,
+    /// Worker threads for profiling / matching fan-out.
+    pub workers: usize,
+    /// Use the PJRT runtime when artifacts are available.
+    pub use_runtime: bool,
+}
+
+impl Default for SystemConfig {
+    fn default() -> Self {
+        SystemConfig {
+            cluster: ClusterConfig::pseudo_distributed(),
+            noise: NoiseModel::default(),
+            seed: 0x5eed,
+            workers: crate::util::pool::default_workers(),
+            use_runtime: true,
+        }
+    }
+}
+
+/// A set of configuration-parameter values to profile/match over.
+#[derive(Debug, Clone)]
+pub struct ConfigGrid {
+    pub configs: Vec<JobConfig>,
+}
+
+impl ConfigGrid {
+    /// The paper's Table 1 configuration sets.
+    pub fn paper_table1() -> ConfigGrid {
+        ConfigGrid {
+            configs: JobConfig::paper_table1(),
+        }
+    }
+
+    /// The paper's §5 experimental design: 50 random sets with mappers and
+    /// reducers in 1..=42, split size 1..=50 MB, input size 10..=500 MB.
+    pub fn paper_grid50(seed: u64) -> ConfigGrid {
+        ConfigGrid::random(50, seed)
+    }
+
+    /// `n` random configuration sets drawn from the paper's ranges.
+    pub fn random(n: usize, seed: u64) -> ConfigGrid {
+        let mut rng = Rng::new(seed ^ 0xc0f1_69d5);
+        let configs = (0..n)
+            .map(|_| {
+                JobConfig::new(
+                    rng.range_u64(1, 43) as usize,
+                    rng.range_u64(1, 41) as usize,
+                    rng.range_u64(1, 51) as f64,
+                    rng.range_u64(10, 501) as f64,
+                )
+            })
+            .collect();
+        ConfigGrid { configs }
+    }
+
+    /// Small, fast grid for tests and the quickstart example.
+    pub fn small(seed: u64) -> ConfigGrid {
+        let mut rng = Rng::new(seed ^ 0x5a11);
+        let configs = (0..6)
+            .map(|_| {
+                JobConfig::new(
+                    rng.range_u64(2, 13) as usize,
+                    rng.range_u64(1, 7) as usize,
+                    rng.range_u64(5, 21) as f64,
+                    rng.range_u64(10, 61) as f64,
+                )
+            })
+            .collect();
+        ConfigGrid { configs }
+    }
+
+    pub fn len(&self) -> usize {
+        self.configs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.configs.is_empty()
+    }
+}
+
+/// Facade tying the whole system together; what the CLI and the examples
+/// use.
+pub struct TuningSystem {
+    pub config: SystemConfig,
+    pub db: ReferenceDb,
+    runtime: Option<RuntimeService>,
+}
+
+impl TuningSystem {
+    /// Create a system; starts the PJRT runtime when artifacts exist and
+    /// `config.use_runtime` is set, otherwise falls back to pure Rust.
+    pub fn new(config: SystemConfig) -> TuningSystem {
+        let runtime = if config.use_runtime {
+            RuntimeService::try_default()
+        } else {
+            None
+        };
+        if runtime.is_none() {
+            log::info!("runtime: PJRT artifacts unavailable; using pure-Rust fallback");
+        }
+        TuningSystem {
+            config,
+            db: ReferenceDb::new(),
+            runtime,
+        }
+    }
+
+    /// Handle to the PJRT runtime, if running.
+    pub fn runtime(&self) -> Option<RuntimeHandle> {
+        self.runtime.as_ref().map(|r| r.handle())
+    }
+
+    /// Profiling phase (paper Figure 4a) for one application.
+    pub fn profile_app(&mut self, app: AppId, grid: &ConfigGrid) {
+        let profiler = profiler::Profiler::new(&self.config, self.runtime());
+        for entry in profiler.profile(app, grid) {
+            self.db.insert(entry);
+        }
+    }
+
+    /// Matching phase (paper Figure 4b) for an unknown application.
+    pub fn match_app(&self, app: AppId, grid: &ConfigGrid) -> matcher::MatchOutcome {
+        let m = matcher::Matcher::new(&self.config, self.runtime());
+        m.match_app(app, grid, &self.db)
+    }
+
+    /// Self-tuning: find the matched reference app's optimal configuration
+    /// (grid-searching if not cached) and transfer it to `app`.
+    pub fn tune_app(&mut self, app: AppId, grid: &ConfigGrid) -> tuner::TuningReport {
+        let outcome = self.match_app(app, grid);
+        let t = tuner::Tuner::new(&self.config);
+        t.tune(app, &outcome, &mut self.db)
+    }
+}
+
+/// Print a Table-1-shaped similarity matrix: rows = (reference app,
+/// reference config), columns = query (Exim) configs; the paper's "red
+/// diagonal" cells (same config set) are marked with `*`.
+pub fn print_table1(cells: &[matcher::SimilarityCell], grid: &ConfigGrid) {
+    let mut rows: Vec<(AppId, JobConfig)> = Vec::new();
+    for c in cells {
+        if !rows
+            .iter()
+            .any(|(a, rc)| *a == c.reference_app && rc.label() == c.reference_config.label())
+        {
+            rows.push((c.reference_app, c.reference_config));
+        }
+    }
+    print!("{:40}", "reference \\ query (exim)");
+    for q in &grid.configs {
+        print!(" {:>24}", q.label());
+    }
+    println!();
+    for (app, rc) in &rows {
+        print!("{:12} {:27}", app.name(), rc.label());
+        for q in &grid.configs {
+            let cell = cells
+                .iter()
+                .find(|c| {
+                    c.reference_app == *app
+                        && c.reference_config.label() == rc.label()
+                        && c.config.label() == q.label()
+                })
+                .map(|c| c.similarity)
+                .unwrap_or(f64::NAN);
+            let mark = if rc.label() == q.label() { "*" } else { " " };
+            print!(" {:>22.4}%{mark}", cell);
+        }
+        println!();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grids_have_expected_sizes_and_validity() {
+        assert_eq!(ConfigGrid::paper_table1().len(), 4);
+        let g = ConfigGrid::paper_grid50(1);
+        assert_eq!(g.len(), 50);
+        assert!(g.configs.iter().all(|c| c.is_valid()));
+        for c in &g.configs {
+            assert!((1..=42).contains(&c.mappers));
+            assert!((1..=40).contains(&c.reducers));
+            assert!((1.0..=50.0).contains(&c.split_mb));
+            assert!((10.0..=500.0).contains(&c.input_mb));
+        }
+    }
+
+    #[test]
+    fn grid_is_seeded() {
+        let a = ConfigGrid::random(10, 7);
+        let b = ConfigGrid::random(10, 7);
+        let c = ConfigGrid::random(10, 8);
+        assert_eq!(a.configs, b.configs);
+        assert_ne!(a.configs, c.configs);
+    }
+}

@@ -1,0 +1,150 @@
+//! Profiling phase (paper §4, Figure 4a): run an application under every
+//! configuration set, capture its 1 Hz CPU series, de-noise + normalize it
+//! and emit database entries.
+
+use super::{ConfigGrid, SystemConfig};
+use crate::database::profile::ProfileEntry;
+use crate::runtime::{Padded, RuntimeHandle};
+use crate::simulator::{engine::simulate, job::JobConfig};
+use crate::util::pool::par_map;
+use crate::util::rng::Rng;
+use crate::workloads::{workload_for, AppId};
+
+/// Runs the profiling phase.
+pub struct Profiler {
+    config: SystemConfig,
+    runtime: Option<RuntimeHandle>,
+}
+
+impl Profiler {
+    pub fn new(config: &SystemConfig, runtime: Option<RuntimeHandle>) -> Profiler {
+        Profiler {
+            config: config.clone(),
+            runtime,
+        }
+    }
+
+    /// Deterministic per-(app, config) seed so re-profiling one set does
+    /// not disturb the others.
+    fn run_seed(&self, app: AppId, cfg: &JobConfig) -> u64 {
+        let mut h: u64 = self.config.seed ^ 0x9e37_79b9_0000_0000;
+        for b in app.name().bytes().chain(cfg.label().bytes()) {
+            h = h.wrapping_mul(0x100_0000_01b3) ^ b as u64;
+        }
+        h
+    }
+
+    /// Profile one application over the whole grid (parallel).
+    pub fn profile(&self, app: AppId, grid: &ConfigGrid) -> Vec<ProfileEntry> {
+        par_map(&grid.configs, self.config.workers, |cfg| {
+            self.profile_one(app, cfg)
+        })
+    }
+
+    /// One run: simulate → capture noisy series → de-noise + normalize.
+    pub fn profile_one(&self, app: AppId, cfg: &JobConfig) -> ProfileEntry {
+        let workload = workload_for(app);
+        let mut rng = Rng::new(self.run_seed(app, cfg));
+        let result = simulate(
+            workload.as_ref(),
+            cfg,
+            &self.config.cluster,
+            &self.config.noise,
+            &mut rng,
+        );
+        let raw_len = result.cpu_noisy.len();
+        let series = self.preprocess(&result.cpu_noisy);
+        ProfileEntry {
+            app,
+            config: *cfg,
+            series,
+            raw_len,
+            completion_secs: result.completion_secs,
+        }
+    }
+
+    /// De-noise + normalize a raw capture — PJRT path when available,
+    /// bit-compatible Rust fallback otherwise.
+    pub fn preprocess(&self, raw: &[f64]) -> Vec<f64> {
+        if let Some(rt) = &self.runtime {
+            let bucket = rt.bucket_for(raw.len());
+            let padded = Padded::fit(raw, bucket);
+            match rt.preprocess(padded) {
+                Ok(out) => return out.valid(),
+                Err(e) => log::warn!("runtime preprocess failed ({e:#}); falling back"),
+            }
+        }
+        let capped = if raw.len() > 512 {
+            crate::signal::resample::linear(raw, 512)
+        } else {
+            raw.to_vec()
+        };
+        crate::signal::preprocess(&capped)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn profiler() -> Profiler {
+        let config = SystemConfig {
+            workers: 2,
+            use_runtime: false,
+            ..SystemConfig::default()
+        };
+        Profiler::new(&config, None)
+    }
+
+    #[test]
+    fn profiles_are_deterministic() {
+        let p = profiler();
+        let cfg = JobConfig::new(4, 2, 10.0, 20.0);
+        let a = p.profile_one(AppId::WordCount, &cfg);
+        let b = p.profile_one(AppId::WordCount, &cfg);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn series_normalized_to_unit_range() {
+        let p = profiler();
+        let e = p.profile_one(AppId::TeraSort, &JobConfig::new(4, 2, 10.0, 30.0));
+        assert!(!e.series.is_empty());
+        for &v in &e.series {
+            assert!((0.0..=1.0).contains(&v), "v={v}");
+        }
+        // min-max normalization touches both bounds
+        let max = e.series.iter().cloned().fold(0.0, f64::max);
+        assert!((max - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn grid_profile_covers_all_configs() {
+        let p = profiler();
+        let grid = ConfigGrid::small(3);
+        let entries = p.profile(AppId::Grep, &grid);
+        assert_eq!(entries.len(), grid.len());
+        let mut keys: Vec<String> = entries.iter().map(|e| e.config_key()).collect();
+        keys.sort();
+        keys.dedup();
+        assert_eq!(keys.len(), grid.len(), "duplicate config keys");
+    }
+
+    #[test]
+    fn long_series_resampled_to_bucket() {
+        let p = profiler();
+        // 500 MB of WordCount takes far longer than 512 s.
+        let e = p.profile_one(AppId::WordCount, &JobConfig::new(8, 4, 50.0, 400.0));
+        assert!(e.raw_len > 512);
+        assert_eq!(e.series.len(), 512);
+    }
+
+    #[test]
+    fn different_apps_produce_different_series() {
+        let p = profiler();
+        let cfg = JobConfig::new(6, 3, 10.0, 40.0);
+        let wc = p.profile_one(AppId::WordCount, &cfg);
+        let ts = p.profile_one(AppId::TeraSort, &cfg);
+        assert_ne!(wc.series, ts.series);
+    }
+}

@@ -1,0 +1,292 @@
+//! Match-as-a-service: a line-delimited JSON protocol over TCP.
+//!
+//! Requests (one JSON object per line):
+//!   {"cmd": "ping"}
+//!   {"cmd": "stats"}
+//!   {"cmd": "apps"}
+//!   {"cmd": "match", "series": [..], "config": {"mappers": M, "reducers": R,
+//!    "split_mb": FS, "input_mb": I}}
+//!
+//! The `match` request carries a *raw* captured CPU series (what a real
+//! deployment's SysStat agent would send); the server preprocesses it,
+//! compares against every stored reference under the same configuration
+//! set, and answers with the per-app similarities and the best match.
+
+use super::batcher::similarities_auto;
+use super::metrics::Metrics;
+use crate::database::store::ReferenceDb;
+use crate::dtw::corr::MATCH_THRESHOLD;
+use crate::runtime::RuntimeHandle;
+use crate::simulator::job::JobConfig;
+use crate::util::json::Json;
+use crate::util::pool::ThreadPool;
+use anyhow::{anyhow, Result};
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+/// Shared server state.
+pub struct ServerState {
+    pub db: ReferenceDb,
+    pub runtime: Option<RuntimeHandle>,
+    pub metrics: Metrics,
+}
+
+/// The TCP server.
+pub struct MatchServer {
+    listener: TcpListener,
+    state: Arc<ServerState>,
+    stop: Arc<AtomicBool>,
+}
+
+impl MatchServer {
+    /// Bind to `addr` (use port 0 for an ephemeral port).
+    pub fn bind(addr: &str, state: ServerState) -> Result<MatchServer> {
+        let listener = TcpListener::bind(addr)?;
+        Ok(MatchServer {
+            listener,
+            state: Arc::new(state),
+            stop: Arc::new(AtomicBool::new(false)),
+        })
+    }
+
+    /// Local address (for tests with ephemeral ports).
+    pub fn local_addr(&self) -> Result<std::net::SocketAddr> {
+        Ok(self.listener.local_addr()?)
+    }
+
+    /// Stop handle: set true and connect once to unblock accept().
+    pub fn stop_flag(&self) -> Arc<AtomicBool> {
+        Arc::clone(&self.stop)
+    }
+
+    /// Serve until the stop flag is raised. Each connection is handled on
+    /// the pool; one line per request, one line per response.
+    pub fn serve(&self, workers: usize) -> Result<()> {
+        let pool = ThreadPool::new(workers.max(1));
+        log::info!("serving on {}", self.listener.local_addr()?);
+        for conn in self.listener.incoming() {
+            if self.stop.load(Ordering::SeqCst) {
+                break;
+            }
+            match conn {
+                Ok(stream) => {
+                    let state = Arc::clone(&self.state);
+                    pool.execute(move || {
+                        if let Err(e) = handle_connection(stream, &state) {
+                            log::debug!("connection ended: {e:#}");
+                        }
+                    });
+                }
+                Err(e) => log::warn!("accept failed: {e}"),
+            }
+        }
+        Ok(())
+    }
+}
+
+fn handle_connection(stream: TcpStream, state: &ServerState) -> Result<()> {
+    // Bound how long an idle connection can pin a pool worker.
+    stream.set_read_timeout(Some(std::time::Duration::from_secs(30)))?;
+    let peer = stream.peer_addr()?;
+    let mut writer = stream.try_clone()?;
+    let reader = BufReader::new(stream);
+    for line in reader.lines() {
+        let line = line?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        state.metrics.inc_requests();
+        let response = state.metrics.time(|| match handle_request(&line, state) {
+            Ok(v) => v,
+            Err(e) => {
+                state.metrics.inc_errors();
+                Json::obj(vec![
+                    ("ok", Json::Bool(false)),
+                    ("error", Json::Str(format!("{e:#}"))),
+                ])
+            }
+        });
+        writer.write_all(response.to_string().as_bytes())?;
+        writer.write_all(b"\n")?;
+    }
+    log::debug!("peer {peer} disconnected");
+    Ok(())
+}
+
+/// Dispatch one request line.
+pub fn handle_request(line: &str, state: &ServerState) -> Result<Json> {
+    let req = Json::parse(line).map_err(|e| anyhow!("bad json: {e}"))?;
+    match req.get("cmd").and_then(Json::as_str) {
+        Some("ping") => Ok(Json::obj(vec![
+            ("ok", Json::Bool(true)),
+            ("pong", Json::Bool(true)),
+        ])),
+        Some("stats") => Ok(Json::obj(vec![
+            ("ok", Json::Bool(true)),
+            ("report", Json::Str(state.metrics.report())),
+            ("db_entries", Json::Num(state.db.len() as f64)),
+        ])),
+        Some("apps") => Ok(Json::obj(vec![
+            ("ok", Json::Bool(true)),
+            (
+                "apps",
+                Json::arr(
+                    state
+                        .db
+                        .apps()
+                        .iter()
+                        .map(|a| Json::Str(a.name().to_string()))
+                        .collect(),
+                ),
+            ),
+        ])),
+        Some("match") => handle_match(&req, state),
+        _ => Err(anyhow!("unknown cmd")),
+    }
+}
+
+fn handle_match(req: &Json, state: &ServerState) -> Result<Json> {
+    let series = req
+        .get("series")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| anyhow!("match: missing series"))?
+        .iter()
+        .filter_map(Json::as_f64)
+        .collect::<Vec<f64>>();
+    if series.len() < 4 {
+        return Err(anyhow!("match: series too short"));
+    }
+    let cfg = req.get("config").ok_or_else(|| anyhow!("match: missing config"))?;
+    let num = |k: &str| -> Result<f64> {
+        cfg.get(k)
+            .and_then(Json::as_f64)
+            .ok_or_else(|| anyhow!("match: config missing {k}"))
+    };
+    let config = JobConfig::new(
+        num("mappers")? as usize,
+        num("reducers")? as usize,
+        num("split_mb")?,
+        num("input_mb")?,
+    );
+
+    let refs = state.db.by_config(&config.label());
+    let ref_series: Vec<Vec<f64>> = refs.iter().map(|e| e.series.clone()).collect();
+    let sims = similarities_auto(state.runtime.as_ref(), &series, &ref_series);
+    state.metrics.inc_comparisons(sims.len() as u64);
+
+    let mut results = Vec::new();
+    let mut best: Option<(&str, f64)> = None;
+    for (e, s) in refs.iter().zip(&sims) {
+        results.push(Json::obj(vec![
+            ("app", Json::Str(e.app.name().to_string())),
+            ("similarity", Json::Num(*s)),
+        ]));
+        if best.map_or(true, |(_, bs)| *s > bs) {
+            best = Some((e.app.name(), *s));
+        }
+    }
+    let (match_app, match_sim) = match best {
+        Some((a, s)) if s >= MATCH_THRESHOLD => (Json::Str(a.to_string()), Json::Num(s)),
+        Some((_, s)) => (Json::Null, Json::Num(s)),
+        None => (Json::Null, Json::Num(0.0)),
+    };
+    Ok(Json::obj(vec![
+        ("ok", Json::Bool(true)),
+        ("results", Json::arr(results)),
+        ("match", match_app),
+        ("best_similarity", match_sim),
+    ]))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::database::profile::ProfileEntry;
+    use crate::workloads::AppId;
+
+    fn state_with_db() -> ServerState {
+        let mut db = ReferenceDb::new();
+        let series: Vec<f64> = (0..64).map(|i| 0.5 + 0.5 * ((i as f64) * 0.2).sin()).collect();
+        db.insert(ProfileEntry {
+            app: AppId::WordCount,
+            config: JobConfig::new(4, 2, 10.0, 20.0),
+            series: crate::signal::preprocess(&series),
+            raw_len: 64,
+            completion_secs: 100.0,
+        });
+        ServerState {
+            db,
+            runtime: None,
+            metrics: Metrics::new(),
+        }
+    }
+
+    #[test]
+    fn ping_roundtrip() {
+        let state = state_with_db();
+        let resp = handle_request(r#"{"cmd":"ping"}"#, &state).unwrap();
+        assert_eq!(resp.get("pong"), Some(&Json::Bool(true)));
+    }
+
+    #[test]
+    fn match_request_finds_similar_series() {
+        let state = state_with_db();
+        let series: Vec<f64> = (0..64).map(|i| 0.5 + 0.5 * ((i as f64) * 0.2).sin()).collect();
+        let req = Json::obj(vec![
+            ("cmd", Json::Str("match".into())),
+            ("series", Json::nums(&series)),
+            (
+                "config",
+                Json::obj(vec![
+                    ("mappers", Json::Num(4.0)),
+                    ("reducers", Json::Num(2.0)),
+                    ("split_mb", Json::Num(10.0)),
+                    ("input_mb", Json::Num(20.0)),
+                ]),
+            ),
+        ]);
+        let resp = handle_request(&req.to_string(), &state).unwrap();
+        assert_eq!(resp.get("ok"), Some(&Json::Bool(true)));
+        let best = resp.get("best_similarity").and_then(Json::as_f64).unwrap();
+        assert!(best > 90.0, "best={best}");
+        assert_eq!(resp.get("match").and_then(Json::as_str), Some("wordcount"));
+    }
+
+    #[test]
+    fn malformed_requests_error_cleanly() {
+        let state = state_with_db();
+        assert!(handle_request("not json", &state).is_err());
+        assert!(handle_request(r#"{"cmd":"nope"}"#, &state).is_err());
+        assert!(handle_request(r#"{"cmd":"match"}"#, &state).is_err());
+    }
+
+    #[test]
+    fn tcp_end_to_end() {
+        let server = MatchServer::bind("127.0.0.1:0", state_with_db()).unwrap();
+        let addr = server.local_addr().unwrap();
+        let stop = server.stop_flag();
+        let handle = std::thread::spawn(move || server.serve(2));
+
+        let mut stream = TcpStream::connect(addr).unwrap();
+        stream.write_all(b"{\"cmd\":\"ping\"}\n").unwrap();
+        let mut reader = BufReader::new(stream.try_clone().unwrap());
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        assert!(line.contains("pong"), "line={line}");
+
+        stream.write_all(b"{\"cmd\":\"apps\"}\n").unwrap();
+        let mut line2 = String::new();
+        reader.read_line(&mut line2).unwrap();
+        assert!(line2.contains("wordcount"));
+
+        // Shut down: close our connection first (a pool worker is blocked
+        // reading it and serve() joins the pool before returning).
+        drop(reader);
+        drop(stream);
+        stop.store(true, Ordering::SeqCst);
+        let _ = TcpStream::connect(addr); // unblock accept
+        handle.join().unwrap().unwrap();
+    }
+}

@@ -1,0 +1,208 @@
+//! Self-tuning (the paper's motivation, §1/§3.1.3): once the matcher has
+//! identified the most similar reference application, reuse that
+//! application's known-optimal configuration values for the new one.
+
+use super::matcher::MatchOutcome;
+use super::SystemConfig;
+use crate::database::store::{OptimalConfig, ReferenceDb};
+use crate::signal::noise::NoiseModel;
+use crate::simulator::engine::simulate;
+use crate::simulator::job::JobConfig;
+use crate::util::pool::par_map;
+use crate::util::rng::Rng;
+use crate::workloads::{workload_for, AppId};
+
+/// Result of one self-tuning pass.
+#[derive(Debug, Clone)]
+pub struct TuningReport {
+    pub app: AppId,
+    pub matched_app: Option<AppId>,
+    /// The configuration transferred from the matched app.
+    pub transferred: Option<JobConfig>,
+    /// Hadoop-default baseline configuration.
+    pub default_config: JobConfig,
+    /// Measured completion with the default configuration (sim seconds).
+    pub default_secs: f64,
+    /// Measured completion with the transferred configuration.
+    pub tuned_secs: f64,
+}
+
+impl TuningReport {
+    /// Default-time / tuned-time (>1 means the transfer helped).
+    pub fn speedup(&self) -> f64 {
+        if self.tuned_secs > 0.0 {
+            self.default_secs / self.tuned_secs
+        } else {
+            1.0
+        }
+    }
+}
+
+/// Grid-searches optimal configurations and transfers them.
+pub struct Tuner {
+    config: SystemConfig,
+}
+
+impl Tuner {
+    pub fn new(config: &SystemConfig) -> Tuner {
+        Tuner {
+            config: config.clone(),
+        }
+    }
+
+    /// Hadoop 0.20 default configuration for a given input size
+    /// (`mapred.map.tasks = 2`, `mapred.reduce.tasks = 1`, 64 MB blocks).
+    pub fn default_config(input_mb: f64) -> JobConfig {
+        JobConfig::new(2, 1, 64.0, input_mb)
+    }
+
+    /// Completion time of `app` under `cfg` (noise-free run; the tuner
+    /// measures performance, not patterns).
+    pub fn measure(&self, app: AppId, cfg: &JobConfig) -> f64 {
+        let workload = workload_for(app);
+        let mut rng = Rng::new(self.config.seed ^ 0x7e57);
+        simulate(
+            workload.as_ref(),
+            cfg,
+            &self.config.cluster,
+            &NoiseModel::none(),
+            &mut rng,
+        )
+        .completion_secs
+    }
+
+    /// Grid-search the optimal (M, R, FS) for `app` at `input_mb` — the
+    /// expensive procedure the paper's approach amortizes: run it once per
+    /// *reference* app, then transfer to matched apps for free.
+    pub fn find_optimal(&self, app: AppId, input_mb: f64) -> OptimalConfig {
+        let mut candidates = Vec::new();
+        for &m in &[2usize, 4, 8, 12, 16, 24, 32] {
+            for &r in &[1usize, 2, 4, 8, 12] {
+                for &fs in &[8.0f64, 16.0, 32.0, 64.0] {
+                    candidates.push(JobConfig::new(m, r, fs, input_mb));
+                }
+            }
+        }
+        let times = par_map(&candidates, self.config.workers, |cfg| {
+            self.measure(app, cfg)
+        });
+        let (best_idx, best_time) = times
+            .iter()
+            .enumerate()
+            .min_by(|a, b| a.1.partial_cmp(b.1).expect("finite times"))
+            .expect("nonempty grid");
+        OptimalConfig {
+            config: candidates[best_idx],
+            completion_secs: *best_time,
+        }
+    }
+
+    /// Full tuning flow: ensure the matched app has a cached optimal
+    /// config (grid-searching if missing), transfer it to `app` and
+    /// measure tuned-vs-default completion.
+    pub fn tune(&self, app: AppId, outcome: &MatchOutcome, db: &mut ReferenceDb) -> TuningReport {
+        // Input size for the tuned job: the median of the matched
+        // profiles' inputs, or 100 MB if nothing is known.
+        let input_mb = 100.0;
+        let default_config = Self::default_config(input_mb);
+        let default_secs = self.measure(app, &default_config);
+
+        let Some(matched) = outcome.winner else {
+            return TuningReport {
+                app,
+                matched_app: None,
+                transferred: None,
+                default_config,
+                default_secs,
+                tuned_secs: default_secs,
+            };
+        };
+
+        if db.optimal(matched).is_none() {
+            let best = self.find_optimal(matched, input_mb);
+            log::info!(
+                "tuner: optimal for {} = {} ({:.1}s)",
+                matched.name(),
+                best.config.label(),
+                best.completion_secs
+            );
+            db.set_optimal(matched, best);
+        }
+        let mut transferred = db.optimal(matched).expect("just set").config;
+        transferred.input_mb = input_mb;
+        let tuned_secs = self.measure(app, &transferred);
+
+        TuningReport {
+            app,
+            matched_app: Some(matched),
+            transferred: Some(transferred),
+            default_config,
+            default_secs,
+            tuned_secs,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tuner() -> Tuner {
+        Tuner::new(&SystemConfig {
+            workers: 4,
+            use_runtime: false,
+            ..SystemConfig::default()
+        })
+    }
+
+    #[test]
+    fn optimal_beats_default() {
+        let t = tuner();
+        let best = t.find_optimal(AppId::WordCount, 60.0);
+        let default_secs = t.measure(AppId::WordCount, &Tuner::default_config(60.0));
+        assert!(
+            best.completion_secs < default_secs,
+            "optimal {} vs default {default_secs}",
+            best.completion_secs
+        );
+    }
+
+    #[test]
+    fn transfer_from_similar_app_helps() {
+        // WordCount's optimum applied to Exim must beat Exim's default —
+        // the paper's core claim.
+        let t = tuner();
+        let wc_best = t.find_optimal(AppId::WordCount, 60.0);
+        let mut cfg = wc_best.config;
+        cfg.input_mb = 60.0;
+        let tuned = t.measure(AppId::EximParse, &cfg);
+        let default_secs = t.measure(AppId::EximParse, &Tuner::default_config(60.0));
+        assert!(
+            tuned < default_secs,
+            "transferred {tuned} vs default {default_secs}"
+        );
+    }
+
+    #[test]
+    fn no_winner_no_transfer() {
+        let t = tuner();
+        let outcome = MatchOutcome {
+            query_app: AppId::Grep,
+            cells: vec![],
+            votes: vec![],
+            winner: None,
+            tally: Default::default(),
+        };
+        let mut db = ReferenceDb::new();
+        let report = t.tune(AppId::Grep, &outcome, &mut db);
+        assert!(report.transferred.is_none());
+        assert!((report.speedup() - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn measure_is_deterministic() {
+        let t = tuner();
+        let cfg = JobConfig::new(4, 2, 16.0, 40.0);
+        assert_eq!(t.measure(AppId::TeraSort, &cfg), t.measure(AppId::TeraSort, &cfg));
+    }
+}

@@ -1,0 +1,5 @@
+//! The reference database: profiled CPU-utilization patterns keyed by
+//! (application, configuration set), plus known-optimal configurations.
+
+pub mod profile;
+pub mod store;

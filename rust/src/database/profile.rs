@@ -1,0 +1,106 @@
+//! Profile entries: one captured CPU-utilization pattern per
+//! (application, configuration-set) pair — the rows of the paper's
+//! reference database (Figure 3a, step 6).
+
+use crate::simulator::job::JobConfig;
+use crate::util::json::Json;
+use crate::workloads::AppId;
+use anyhow::{anyhow, Result};
+
+/// One profiled run.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ProfileEntry {
+    pub app: AppId,
+    pub config: JobConfig,
+    /// De-noised, normalized CPU series (the paper stores post-filter).
+    pub series: Vec<f64>,
+    /// Length of the raw 1 Hz capture before any resampling.
+    pub raw_len: usize,
+    /// Simulated job completion time (used by the tuner).
+    pub completion_secs: f64,
+}
+
+impl ProfileEntry {
+    /// Key used to pair entries across applications: the config label.
+    pub fn config_key(&self) -> String {
+        self.config.label()
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("app", Json::Str(self.app.name().to_string())),
+            ("mappers", Json::Num(self.config.mappers as f64)),
+            ("reducers", Json::Num(self.config.reducers as f64)),
+            ("split_mb", Json::Num(self.config.split_mb)),
+            ("input_mb", Json::Num(self.config.input_mb)),
+            ("raw_len", Json::Num(self.raw_len as f64)),
+            ("completion_secs", Json::Num(self.completion_secs)),
+            ("series", Json::nums(&self.series)),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> Result<ProfileEntry> {
+        let app = v
+            .get("app")
+            .and_then(Json::as_str)
+            .and_then(AppId::from_name)
+            .ok_or_else(|| anyhow!("profile entry: bad app"))?;
+        let num = |k: &str| -> Result<f64> {
+            v.get(k)
+                .and_then(Json::as_f64)
+                .ok_or_else(|| anyhow!("profile entry: missing {k}"))
+        };
+        let series = v
+            .get("series")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("profile entry: missing series"))?
+            .iter()
+            .filter_map(Json::as_f64)
+            .collect::<Vec<_>>();
+        Ok(ProfileEntry {
+            app,
+            config: JobConfig::new(
+                num("mappers")? as usize,
+                num("reducers")? as usize,
+                num("split_mb")?,
+                num("input_mb")?,
+            ),
+            series,
+            raw_len: num("raw_len")? as usize,
+            completion_secs: num("completion_secs")?,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> ProfileEntry {
+        ProfileEntry {
+            app: AppId::WordCount,
+            config: JobConfig::new(11, 6, 20.0, 30.0),
+            series: vec![0.1, 0.9, 0.5],
+            raw_len: 3,
+            completion_secs: 123.5,
+        }
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let e = sample();
+        let back = ProfileEntry::from_json(&Json::parse(&e.to_json().to_string()).unwrap()).unwrap();
+        assert_eq!(e, back);
+    }
+
+    #[test]
+    fn config_key_is_label() {
+        assert_eq!(sample().config_key(), "M=11,R=6,FS=20M,I=30M");
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        let v = Json::parse(r#"{"app":"nosuch","series":[]}"#).unwrap();
+        assert!(ProfileEntry::from_json(&v).is_err());
+    }
+}

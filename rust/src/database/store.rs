@@ -1,0 +1,218 @@
+//! The reference database: profiled patterns plus known-optimal
+//! configurations, persisted as JSON.
+
+use super::profile::ProfileEntry;
+use crate::simulator::job::JobConfig;
+use crate::util::json::Json;
+use crate::workloads::AppId;
+use anyhow::{anyhow, Context, Result};
+use std::collections::BTreeMap;
+use std::path::Path;
+
+/// Known-optimal configuration for an application (found by the tuner's
+/// grid search; transferred to matched applications).
+#[derive(Debug, Clone, PartialEq)]
+pub struct OptimalConfig {
+    pub config: JobConfig,
+    pub completion_secs: f64,
+}
+
+/// In-memory reference database with JSON persistence.
+#[derive(Debug, Default)]
+pub struct ReferenceDb {
+    entries: Vec<ProfileEntry>,
+    optimal: BTreeMap<&'static str, OptimalConfig>,
+}
+
+impl ReferenceDb {
+    pub fn new() -> ReferenceDb {
+        ReferenceDb::default()
+    }
+
+    /// Add a profiled run (replacing any previous entry for the same
+    /// app + config set).
+    pub fn insert(&mut self, entry: ProfileEntry) {
+        self.entries
+            .retain(|e| !(e.app == entry.app && e.config_key() == entry.config_key()));
+        self.entries.push(entry);
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    pub fn entries(&self) -> &[ProfileEntry] {
+        &self.entries
+    }
+
+    /// Applications present in the database.
+    pub fn apps(&self) -> Vec<AppId> {
+        let mut apps: Vec<AppId> = self.entries.iter().map(|e| e.app).collect();
+        apps.sort_unstable();
+        apps.dedup();
+        apps
+    }
+
+    /// All entries captured under a given configuration set.
+    pub fn by_config(&self, key: &str) -> Vec<&ProfileEntry> {
+        self.entries.iter().filter(|e| e.config_key() == key).collect()
+    }
+
+    /// All entries for one application.
+    pub fn by_app(&self, app: AppId) -> Vec<&ProfileEntry> {
+        self.entries.iter().filter(|e| e.app == app).collect()
+    }
+
+    /// Record the tuner's optimal configuration for an application.
+    pub fn set_optimal(&mut self, app: AppId, best: OptimalConfig) {
+        self.optimal.insert(app.name(), best);
+    }
+
+    pub fn optimal(&self, app: AppId) -> Option<&OptimalConfig> {
+        self.optimal.get(app.name())
+    }
+
+    pub fn to_json(&self) -> Json {
+        let optimal = self
+            .optimal
+            .iter()
+            .map(|(name, o)| {
+                (
+                    name.to_string(),
+                    Json::obj(vec![
+                        ("mappers", Json::Num(o.config.mappers as f64)),
+                        ("reducers", Json::Num(o.config.reducers as f64)),
+                        ("split_mb", Json::Num(o.config.split_mb)),
+                        ("input_mb", Json::Num(o.config.input_mb)),
+                        ("completion_secs", Json::Num(o.completion_secs)),
+                    ]),
+                )
+            })
+            .collect();
+        Json::obj(vec![
+            ("version", Json::Num(1.0)),
+            (
+                "entries",
+                Json::arr(self.entries.iter().map(ProfileEntry::to_json).collect()),
+            ),
+            ("optimal", Json::Obj(optimal)),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> Result<ReferenceDb> {
+        let mut db = ReferenceDb::new();
+        for e in v
+            .get("entries")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("db: missing entries"))?
+        {
+            db.insert(ProfileEntry::from_json(e)?);
+        }
+        if let Some(Json::Obj(map)) = v.get("optimal") {
+            for (name, o) in map {
+                let app = AppId::from_name(name)
+                    .ok_or_else(|| anyhow!("db: unknown app {name}"))?;
+                let num = |k: &str| -> Result<f64> {
+                    o.get(k)
+                        .and_then(Json::as_f64)
+                        .ok_or_else(|| anyhow!("db optimal: missing {k}"))
+                };
+                db.set_optimal(
+                    app,
+                    OptimalConfig {
+                        config: JobConfig::new(
+                            num("mappers")? as usize,
+                            num("reducers")? as usize,
+                            num("split_mb")?,
+                            num("input_mb")?,
+                        ),
+                        completion_secs: num("completion_secs")?,
+                    },
+                );
+            }
+        }
+        Ok(db)
+    }
+
+    /// Persist to a JSON file.
+    pub fn save(&self, path: &Path) -> Result<()> {
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent).ok();
+        }
+        std::fs::write(path, self.to_json().to_pretty())
+            .with_context(|| format!("writing {}", path.display()))
+    }
+
+    /// Load from a JSON file.
+    pub fn load(path: &Path) -> Result<ReferenceDb> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        ReferenceDb::from_json(&Json::parse(&text)?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn entry(app: AppId, m: usize) -> ProfileEntry {
+        ProfileEntry {
+            app,
+            config: JobConfig::new(m, 2, 10.0, 20.0),
+            series: vec![0.5; 4],
+            raw_len: 4,
+            completion_secs: 10.0 * m as f64,
+        }
+    }
+
+    #[test]
+    fn insert_replaces_same_key() {
+        let mut db = ReferenceDb::new();
+        db.insert(entry(AppId::WordCount, 4));
+        db.insert(entry(AppId::WordCount, 4));
+        assert_eq!(db.len(), 1);
+        db.insert(entry(AppId::WordCount, 8));
+        assert_eq!(db.len(), 2);
+    }
+
+    #[test]
+    fn queries() {
+        let mut db = ReferenceDb::new();
+        db.insert(entry(AppId::WordCount, 4));
+        db.insert(entry(AppId::TeraSort, 4));
+        db.insert(entry(AppId::TeraSort, 8));
+        assert_eq!(db.apps(), vec![AppId::WordCount, AppId::TeraSort]);
+        assert_eq!(db.by_app(AppId::TeraSort).len(), 2);
+        assert_eq!(db.by_config("M=4,R=2,FS=10M,I=20M").len(), 2);
+    }
+
+    #[test]
+    fn save_load_roundtrip() {
+        let mut db = ReferenceDb::new();
+        db.insert(entry(AppId::WordCount, 4));
+        db.insert(entry(AppId::EximParse, 6));
+        db.set_optimal(
+            AppId::WordCount,
+            OptimalConfig {
+                config: JobConfig::new(16, 4, 30.0, 20.0),
+                completion_secs: 42.25,
+            },
+        );
+        let path = std::env::temp_dir().join("mrtuner_db_test.json");
+        db.save(&path).unwrap();
+        let back = ReferenceDb::load(&path).unwrap();
+        assert_eq!(back.len(), 2);
+        assert_eq!(back.optimal(AppId::WordCount), db.optimal(AppId::WordCount));
+        assert_eq!(back.entries()[0], db.entries()[0]);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn load_missing_file_errors() {
+        assert!(ReferenceDb::load(Path::new("/nonexistent/db.json")).is_err());
+    }
+}

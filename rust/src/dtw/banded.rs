@@ -1,0 +1,142 @@
+//! Sakoe–Chiba banded DTW.
+//!
+//! Restricts the warping path to a diagonal band of radius `r` (scaled for
+//! unequal lengths), cutting work from O(N·M) to O(r·max(N,M)). Exact when
+//! the optimal path stays inside the band — which holds for the CPU series
+//! here, whose misalignment is bounded by a few map-wave lengths.
+
+use super::full::{backtrack, DtwResult};
+use super::{local_cost, CHOICE_DIAG, CHOICE_LEFT, CHOICE_UP};
+
+/// Banded DTW with Sakoe–Chiba radius `r` (in samples, on the `y` axis after
+/// slope correction). `r >= max(n,m)` degenerates to full DTW.
+pub fn dtw_banded(x: &[f64], y: &[f64], r: usize) -> DtwResult {
+    let (n, m) = (x.len(), y.len());
+    assert!(n > 0 && m > 0, "dtw_banded: empty series");
+    let slope = (m.max(2) - 1) as f64 / (n.max(2) - 1) as f64;
+    let inf = f64::INFINITY;
+
+    // Row j-ranges; forced to overlap between consecutive rows and to
+    // include the corners so a connected path always exists.
+    let bounds: Vec<(usize, usize)> = (0..n)
+        .map(|i| {
+            let c = i as f64 * slope;
+            let lo = (c - r as f64).floor().max(0.0) as usize;
+            let hi = ((c + r as f64).ceil() as usize).min(m - 1);
+            (lo, hi)
+        })
+        .collect();
+
+    let mut choices = vec![CHOICE_DIAG; n * m];
+    let mut prev = vec![inf; m];
+    let mut cur = vec![inf; m];
+
+    let (lo0, hi0) = bounds[0];
+    debug_assert_eq!(lo0, 0);
+    cur[0] = local_cost(x[0], y[0]);
+    for j in lo0.max(1)..=hi0 {
+        cur[j] = cur[j - 1] + local_cost(x[0], y[j]);
+        choices[j] = CHOICE_LEFT;
+    }
+    std::mem::swap(&mut prev, &mut cur);
+
+    for i in 1..n {
+        let (lo, hi) = bounds[i];
+        let row = i * m;
+        cur.iter_mut().for_each(|v| *v = inf);
+        for j in lo..=hi {
+            let d = local_cost(x[i], y[j]);
+            let diag = if j > 0 { prev[j - 1] } else { inf };
+            let up = prev[j];
+            let left = if j > lo { cur[j - 1] } else { inf };
+            let (vg, vchoice) = if diag <= up { (diag, CHOICE_DIAG) } else { (up, CHOICE_UP) };
+            if left < vg {
+                cur[j] = left + d;
+                choices[row + j] = CHOICE_LEFT;
+            } else {
+                cur[j] = vg + d;
+                choices[row + j] = vchoice;
+            }
+        }
+        std::mem::swap(&mut prev, &mut cur);
+    }
+
+    let distance = prev[m - 1];
+    assert!(
+        distance.is_finite(),
+        "band too narrow to connect corners (r={r}, n={n}, m={m})"
+    );
+    let path = backtrack(&choices, n, m);
+    DtwResult {
+        distance,
+        normalized: distance / (n + m) as f64,
+        path,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dtw::full::dtw;
+    use crate::util::rng::Pcg32;
+
+    fn rand_series(g: &mut Pcg32, len: usize) -> Vec<f64> {
+        (0..len).map(|_| g.f64()).collect()
+    }
+
+    #[test]
+    fn wide_band_equals_full() {
+        let mut g = Pcg32::new(10, 1);
+        for _ in 0..15 {
+            let lx = 2 + g.below(40) as usize;
+            let x = rand_series(&mut g, lx);
+            let ly = 2 + g.below(40) as usize;
+            let y = rand_series(&mut g, ly);
+            let full = dtw(&x, &y).distance;
+            let band = dtw_banded(&x, &y, x.len().max(y.len())).distance;
+            assert!((full - band).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn band_is_lower_bounded_by_full() {
+        // Constraining paths can only increase (or keep) the distance.
+        let mut g = Pcg32::new(11, 2);
+        for _ in 0..15 {
+            let lx = 10 + g.below(50) as usize;
+            let x = rand_series(&mut g, lx);
+            let ly = 10 + g.below(50) as usize;
+            let y = rand_series(&mut g, ly);
+            let full = dtw(&x, &y).distance;
+            for r in [2usize, 5, 10] {
+                let band = dtw_banded(&x, &y, r).distance;
+                assert!(band >= full - 1e-12, "r={r}: band {band} < full {full}");
+            }
+        }
+    }
+
+    #[test]
+    fn small_shift_recovered_with_small_band() {
+        let x: Vec<f64> = (0..80).map(|i| ((i as f64) * 0.3).sin()).collect();
+        let y: Vec<f64> = (0..80).map(|i| (((i + 3) as f64) * 0.3).sin()).collect();
+        let full = dtw(&x, &y).distance;
+        let band = dtw_banded(&x, &y, 6).distance;
+        assert!((full - band).abs() < 1e-9, "full {full} band {band}");
+    }
+
+    #[test]
+    fn unequal_lengths_band_follows_slope() {
+        let x: Vec<f64> = (0..60).map(|i| (i as f64 * 0.2).sin()).collect();
+        let y: Vec<f64> = (0..120).map(|i| (i as f64 * 0.1).sin()).collect();
+        let r = dtw_banded(&x, &y, 8);
+        assert!(r.distance.is_finite());
+        assert_eq!(r.path.first(), Some(&(0, 0)));
+        assert_eq!(r.path.last(), Some(&(59, 119)));
+    }
+
+    #[test]
+    fn identical_series_zero_even_tight_band() {
+        let x: Vec<f64> = (0..50).map(|i| (i as f64 * 0.17).cos()).collect();
+        assert_eq!(dtw_banded(&x, &x, 1).distance, 0.0);
+    }
+}

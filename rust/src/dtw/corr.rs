@@ -1,0 +1,104 @@
+//! The paper's similarity measure (eqn. 3): correlation coefficient between
+//! the query series `X` and the DTW-warped reference `Y'`, as a percentage.
+
+use super::banded::dtw_banded;
+use super::full::{dtw, DtwResult};
+
+/// Paper's acceptance threshold: `CORR(X, Y') >= 0.9` counts as a match.
+pub const MATCH_THRESHOLD: f64 = 90.0;
+
+/// Similarity in percent between `x` and `y` (order follows the paper:
+/// warp the *reference* `y` onto the *query* `x`'s time axis, then
+/// correlate). Returns a value in `[0, 100]` — negative correlations clamp
+/// to 0 ("no similarity at all").
+pub fn similarity_percent(x: &[f64], y: &[f64]) -> f64 {
+    let r = dtw(x, y);
+    similarity_from_alignment(&r, x, y)
+}
+
+/// Similarity with the production pipeline's Sakoe–Chiba constraint
+/// (10% band): restricting pathological warps is what lets the measure
+/// discriminate configuration sets (see DESIGN.md §Deviations).
+pub fn similarity_percent_banded(x: &[f64], y: &[f64]) -> f64 {
+    let r = dtw_banded(x, y, super::band_radius(x.len(), y.len()));
+    similarity_from_alignment(&r, x, y)
+}
+
+/// Similarity given an existing alignment (avoids recomputing DTW when the
+/// runtime already produced the traceback).
+pub fn similarity_from_alignment(r: &DtwResult, x: &[f64], y: &[f64]) -> f64 {
+    let warped = r.warp_onto_x(y, x.len());
+    let c = crate::util::stats::pearson(x, &warped);
+    (c.max(0.0) * 100.0).min(100.0)
+}
+
+/// True when the similarity clears the paper's 90% acceptance threshold.
+pub fn is_match(sim_percent: f64) -> bool {
+    sim_percent >= MATCH_THRESHOLD
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg32;
+
+    #[test]
+    fn identical_series_full_similarity() {
+        let x: Vec<f64> = (0..120).map(|i| 0.5 + 0.5 * ((i as f64) * 0.1).sin()).collect();
+        let s = similarity_percent(&x, &x);
+        assert!((s - 100.0).abs() < 1e-9, "s={s}");
+        assert!(is_match(s));
+    }
+
+    #[test]
+    fn stretched_copy_still_high() {
+        // Same shape, different length (time-stretched) → DTW should absorb
+        // the stretch and leave a high correlation.
+        let x: Vec<f64> = (0..100).map(|i| 0.5 + 0.4 * ((i as f64) * 0.10).sin()).collect();
+        let y: Vec<f64> = (0..140).map(|i| 0.5 + 0.4 * ((i as f64 * 100.0 / 140.0) * 0.10).sin()).collect();
+        let s = similarity_percent(&x, &y);
+        assert!(s > 95.0, "s={s}");
+    }
+
+    #[test]
+    fn unrelated_shapes_low() {
+        let mut g = Pcg32::new(30, 1);
+        // Rising ramp vs white noise.
+        let x: Vec<f64> = (0..150).map(|i| i as f64 / 150.0).collect();
+        let y: Vec<f64> = (0..150).map(|_| g.f64()).collect();
+        let s = similarity_percent(&x, &y);
+        assert!(s < MATCH_THRESHOLD, "s={s}");
+    }
+
+    #[test]
+    fn anti_correlated_clamps_to_zero() {
+        let x: Vec<f64> = (0..50).map(|i| i as f64).collect();
+        let y: Vec<f64> = (0..50).map(|i| 50.0 - i as f64).collect();
+        // DTW will warp heavily, but any residual negative corr clamps at 0.
+        let s = similarity_percent(&x, &y);
+        assert!((0.0..=100.0).contains(&s));
+    }
+
+    #[test]
+    fn symmetric_enough_for_same_length_shapes() {
+        // The measure is not symmetric by construction (warp direction), but
+        // for same-shape series it should be close both ways.
+        let x: Vec<f64> = (0..100).map(|i| 0.5 + 0.3 * ((i as f64) * 0.07).cos()).collect();
+        let y: Vec<f64> = (0..100).map(|i| 0.5 + 0.3 * (((i + 4) as f64) * 0.07).cos()).collect();
+        let a = similarity_percent(&x, &y);
+        let b = similarity_percent(&y, &x);
+        assert!((a - b).abs() < 5.0, "a={a} b={b}");
+        assert!(a > MATCH_THRESHOLD);
+    }
+
+    #[test]
+    fn range_always_valid() {
+        let mut g = Pcg32::new(31, 2);
+        for _ in 0..25 {
+            let x: Vec<f64> = (0..(2 + g.below(60) as usize)).map(|_| g.f64()).collect();
+            let y: Vec<f64> = (0..(2 + g.below(60) as usize)).map(|_| g.f64()).collect();
+            let s = similarity_percent(&x, &y);
+            assert!((0.0..=100.0).contains(&s), "s={s}");
+        }
+    }
+}

@@ -1,0 +1,226 @@
+//! FastDTW (Salvador & Chan 2007) — the paper's reference [20], cited as the
+//! answer to DTW's quadratic cost in the cluster-scale future-work section.
+//!
+//! Multiresolution scheme: coarsen both series by 2, solve recursively,
+//! project the coarse path onto the finer grid, and re-solve inside a
+//! window of the projection expanded by `radius`.
+
+use super::full::{dtw, DtwResult};
+use super::{local_cost, CHOICE_DIAG, CHOICE_LEFT, CHOICE_UP};
+
+/// FastDTW with the given radius. Larger radius → closer to exact, slower.
+pub fn fastdtw(x: &[f64], y: &[f64], radius: usize) -> DtwResult {
+    let min_size = radius + 2;
+    if x.len() <= min_size || y.len() <= min_size {
+        return dtw(x, y);
+    }
+    let xs = coarsen(x);
+    let ys = coarsen(y);
+    let coarse = fastdtw(&xs, &ys, radius);
+    let window = expand_window(&coarse.path, x.len(), y.len(), radius);
+    windowed_dtw(x, y, &window)
+}
+
+/// Halve resolution by averaging adjacent pairs (odd tail carried over).
+fn coarsen(xs: &[f64]) -> Vec<f64> {
+    let mut out = Vec::with_capacity(xs.len().div_ceil(2));
+    let mut i = 0;
+    while i + 1 < xs.len() {
+        out.push(0.5 * (xs[i] + xs[i + 1]));
+        i += 2;
+    }
+    if i < xs.len() {
+        out.push(xs[i]);
+    }
+    out
+}
+
+/// Project a coarse path to the finer grid and expand by `radius`;
+/// returns per-row inclusive `(lo, hi)` j-ranges, made monotone/connected.
+fn expand_window(
+    coarse_path: &[(usize, usize)],
+    n: usize,
+    m: usize,
+    radius: usize,
+) -> Vec<(usize, usize)> {
+    let mut lo = vec![usize::MAX; n];
+    let mut hi = vec![0usize; n];
+    let mut mark = |i: usize, j: usize| {
+        if i < n {
+            let jlo = j.saturating_sub(radius);
+            let jhi = (j + radius).min(m - 1);
+            lo[i] = lo[i].min(jlo);
+            hi[i] = hi[i].max(jhi);
+        }
+    };
+    for &(ci, cj) in coarse_path {
+        // Each coarse cell covers a 2×2 block of fine cells.
+        for di in 0..2 {
+            for dj in 0..2 {
+                let i = 2 * ci + di;
+                let j = (2 * cj + dj).min(m - 1);
+                // Expand by radius in i as well by marking neighbours.
+                let ilo = i.saturating_sub(radius);
+                let ihi = (i + radius).min(n - 1);
+                for ii in ilo..=ihi {
+                    mark(ii, j);
+                }
+            }
+        }
+    }
+    // Fill any unreached rows (possible with degenerate coarse paths) and
+    // enforce per-row connectivity with the previous row.
+    let mut prev_hi = 0usize;
+    for i in 0..n {
+        if lo[i] == usize::MAX {
+            lo[i] = prev_hi;
+            hi[i] = prev_hi;
+        }
+        // A legal step needs overlap or adjacency with the previous row.
+        if lo[i] > prev_hi {
+            lo[i] = prev_hi;
+        }
+        if hi[i] < lo[i] {
+            hi[i] = lo[i];
+        }
+        prev_hi = hi[i];
+    }
+    lo[0] = 0;
+    hi[n - 1] = m - 1;
+    lo.into_iter().zip(hi).collect()
+}
+
+/// DTW restricted to per-row `(lo, hi)` windows.
+fn windowed_dtw(x: &[f64], y: &[f64], window: &[(usize, usize)]) -> DtwResult {
+    let (n, m) = (x.len(), y.len());
+    let inf = f64::INFINITY;
+    let mut choices = vec![CHOICE_DIAG; n * m];
+    let mut prev = vec![inf; m];
+    let mut cur = vec![inf; m];
+
+    let (lo0, hi0) = window[0];
+    cur[lo0] = local_cost(x[0], y[lo0]);
+    for j in (lo0 + 1)..=hi0 {
+        cur[j] = cur[j - 1] + local_cost(x[0], y[j]);
+        choices[j] = CHOICE_LEFT;
+    }
+    std::mem::swap(&mut prev, &mut cur);
+
+    for i in 1..n {
+        let (lo, hi) = window[i];
+        let row = i * m;
+        cur.iter_mut().for_each(|v| *v = inf);
+        for j in lo..=hi {
+            let d = local_cost(x[i], y[j]);
+            let diag = if j > 0 { prev[j - 1] } else { inf };
+            let up = prev[j];
+            let left = if j > lo { cur[j - 1] } else { inf };
+            let (vg, vchoice) = if diag <= up { (diag, CHOICE_DIAG) } else { (up, CHOICE_UP) };
+            if left < vg {
+                cur[j] = left + d;
+                choices[row + j] = CHOICE_LEFT;
+            } else {
+                cur[j] = vg + d;
+                choices[row + j] = vchoice;
+            }
+        }
+        std::mem::swap(&mut prev, &mut cur);
+    }
+
+    let distance = prev[m - 1];
+    assert!(distance.is_finite(), "window disconnected");
+    let path = super::full::backtrack(&choices, n, m);
+    DtwResult {
+        distance,
+        normalized: distance / (n + m) as f64,
+        path,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dtw::full::dtw_distance;
+    use crate::util::rng::Pcg32;
+
+    fn rand_walk(g: &mut Pcg32, len: usize) -> Vec<f64> {
+        let mut v = 0.5;
+        (0..len)
+            .map(|_| {
+                v = (v + (g.f64() - 0.5) * 0.1).clamp(0.0, 1.0);
+                v
+            })
+            .collect()
+    }
+
+    #[test]
+    fn small_inputs_are_exact() {
+        let mut g = Pcg32::new(20, 1);
+        for _ in 0..10 {
+            let lx = 2 + g.below(10) as usize;
+            let x = rand_walk(&mut g, lx);
+            let ly = 2 + g.below(10) as usize;
+            let y = rand_walk(&mut g, ly);
+            let exact = dtw_distance(&x, &y);
+            let fast = fastdtw(&x, &y, 8).distance;
+            assert!((exact - fast).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn approximation_error_small_on_smooth_series() {
+        let mut g = Pcg32::new(21, 2);
+        let mut errs = Vec::new();
+        for _ in 0..10 {
+            let lx = 200 + g.below(100) as usize;
+            let x = rand_walk(&mut g, lx);
+            let ly = 200 + g.below(100) as usize;
+            let y = rand_walk(&mut g, ly);
+            let exact = dtw_distance(&x, &y);
+            let fast = fastdtw(&x, &y, 10).distance;
+            assert!(fast >= exact - 1e-9, "fastdtw below exact");
+            let rel = if exact > 1e-9 { (fast - exact) / exact } else { 0.0 };
+            errs.push(rel);
+        }
+        let mean_err = crate::util::stats::mean(&errs);
+        assert!(mean_err < 0.05, "mean relative error {mean_err}");
+    }
+
+    #[test]
+    fn identical_series_zero() {
+        let x: Vec<f64> = (0..500).map(|i| ((i as f64) * 0.05).sin()).collect();
+        let r = fastdtw(&x, &x, 3);
+        assert!(r.distance.abs() < 1e-12);
+    }
+
+    #[test]
+    fn path_endpoints_valid() {
+        let mut g = Pcg32::new(22, 3);
+        let x = rand_walk(&mut g, 333);
+        let y = rand_walk(&mut g, 257);
+        let r = fastdtw(&x, &y, 5);
+        assert_eq!(r.path.first(), Some(&(0, 0)));
+        assert_eq!(r.path.last(), Some(&(332, 256)));
+        for w in r.path.windows(2) {
+            let (i0, j0) = w[0];
+            let (i1, j1) = w[1];
+            assert!(i1 - i0 <= 1 && j1 - j0 <= 1 && (i1 - i0) + (j1 - j0) >= 1);
+        }
+    }
+
+    #[test]
+    fn larger_radius_is_no_worse() {
+        let mut g = Pcg32::new(23, 4);
+        let x = rand_walk(&mut g, 400);
+        let y = rand_walk(&mut g, 380);
+        let d1 = fastdtw(&x, &y, 1).distance;
+        let d20 = fastdtw(&x, &y, 20).distance;
+        assert!(d20 <= d1 + 1e-9, "r=20 {d20} > r=1 {d1}");
+    }
+
+    #[test]
+    fn coarsen_halves_and_averages() {
+        assert_eq!(coarsen(&[1.0, 3.0, 5.0, 7.0]), vec![2.0, 6.0]);
+        assert_eq!(coarsen(&[1.0, 3.0, 9.0]), vec![2.0, 9.0]);
+    }
+}

@@ -1,0 +1,277 @@
+//! Exact O(N·M) DTW with traceback and warped-series construction.
+
+use super::{local_cost, CHOICE_DIAG, CHOICE_LEFT, CHOICE_UP};
+
+/// Result of a DTW alignment.
+#[derive(Debug, Clone)]
+pub struct DtwResult {
+    /// Accumulated minimum distance `D(N, M)` (paper eqn. (1)).
+    pub distance: f64,
+    /// Distance normalized by path length (comparable across lengths).
+    pub normalized: f64,
+    /// Optimal warping path as `(i, j)` pairs from `(0,0)` to `(N-1,M-1)`.
+    pub path: Vec<(usize, usize)>,
+}
+
+impl DtwResult {
+    /// Build `Y'` — `y` warped onto `x`'s time axis (paper §3.1.2: "Y' is
+    /// always made from Y by repeating some of its elements"): for each `i`,
+    /// the `y` sample the optimal path last visits in row `i`.
+    pub fn warp_onto_x(&self, y: &[f64], n: usize) -> Vec<f64> {
+        let mut out = vec![0.0; n];
+        for &(i, j) in &self.path {
+            out[i] = y[j]; // path is ordered; later visits overwrite
+        }
+        out
+    }
+}
+
+/// Compute the DTW cost matrix choices and distance, then backtrack.
+///
+/// Tie-breaking (shared with the Pallas kernel): the *vertical group*
+/// `min(D[i-1,j], D[i-1,j-1])` wins over `D[i,j-1]` (left) on ties, and the
+/// diagonal wins over up on ties within the group.
+pub fn dtw(x: &[f64], y: &[f64]) -> DtwResult {
+    let (n, m) = (x.len(), y.len());
+    assert!(n > 0 && m > 0, "dtw: empty series");
+    let mut choices = vec![0u8; n * m];
+    let mut prev = vec![0.0f64; m];
+    let mut cur = vec![0.0f64; m];
+
+    // Row 0.
+    cur[0] = local_cost(x[0], y[0]);
+    choices[0] = CHOICE_DIAG; // unused (origin)
+    for j in 1..m {
+        cur[j] = cur[j - 1] + local_cost(x[0], y[j]);
+        choices[j] = CHOICE_LEFT;
+    }
+    std::mem::swap(&mut prev, &mut cur);
+
+    for i in 1..n {
+        let row = i * m;
+        cur[0] = prev[0] + local_cost(x[i], y[0]);
+        choices[row] = CHOICE_UP;
+        for j in 1..m {
+            let d = local_cost(x[i], y[j]);
+            // Vertical group: diag vs up (diag wins ties).
+            let (vg, vchoice) = if prev[j - 1] <= prev[j] {
+                (prev[j - 1], CHOICE_DIAG)
+            } else {
+                (prev[j], CHOICE_UP)
+            };
+            // Left wins only when strictly smaller than the group.
+            if cur[j - 1] < vg {
+                cur[j] = cur[j - 1] + d;
+                choices[row + j] = CHOICE_LEFT;
+            } else {
+                cur[j] = vg + d;
+                choices[row + j] = vchoice;
+            }
+        }
+        std::mem::swap(&mut prev, &mut cur);
+    }
+
+    let distance = prev[m - 1];
+    let path = backtrack(&choices, n, m);
+    DtwResult {
+        distance,
+        normalized: distance / (n + m) as f64,
+        path,
+    }
+}
+
+/// Walk the choice matrix from `(n-1, m-1)` back to `(0,0)`.
+/// Shared by the pure-Rust path and the PJRT path (which returns the same
+/// choice matrix from the Pallas kernel).
+pub fn backtrack(choices: &[u8], n: usize, m: usize) -> Vec<(usize, usize)> {
+    debug_assert_eq!(choices.len(), n * m);
+    let mut path = Vec::with_capacity(n + m);
+    let (mut i, mut j) = (n - 1, m - 1);
+    loop {
+        path.push((i, j));
+        if i == 0 && j == 0 {
+            break;
+        }
+        if i == 0 {
+            j -= 1;
+            continue;
+        }
+        if j == 0 {
+            i -= 1;
+            continue;
+        }
+        match choices[i * m + j] {
+            CHOICE_DIAG => {
+                i -= 1;
+                j -= 1;
+            }
+            CHOICE_UP => i -= 1,
+            CHOICE_LEFT => j -= 1,
+            c => unreachable!("bad choice {c}"),
+        }
+    }
+    path.reverse();
+    path
+}
+
+/// Distance-only DTW (two rolling rows, no choices) — used by FastDTW's
+/// accuracy tests and anywhere the path is not needed.
+pub fn dtw_distance(x: &[f64], y: &[f64]) -> f64 {
+    let (n, m) = (x.len(), y.len());
+    assert!(n > 0 && m > 0);
+    let mut prev = vec![0.0f64; m];
+    let mut cur = vec![0.0f64; m];
+    cur[0] = local_cost(x[0], y[0]);
+    for j in 1..m {
+        cur[j] = cur[j - 1] + local_cost(x[0], y[j]);
+    }
+    std::mem::swap(&mut prev, &mut cur);
+    for i in 1..n {
+        cur[0] = prev[0] + local_cost(x[i], y[0]);
+        for j in 1..m {
+            let best = prev[j - 1].min(prev[j]).min(cur[j - 1]);
+            cur[j] = best + local_cost(x[i], y[j]);
+        }
+        std::mem::swap(&mut prev, &mut cur);
+    }
+    prev[m - 1]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg32;
+
+    fn rand_series(g: &mut Pcg32, len: usize) -> Vec<f64> {
+        (0..len).map(|_| g.f64()).collect()
+    }
+
+    #[test]
+    fn identical_series_distance_zero() {
+        let x = vec![0.1, 0.5, 0.3, 0.9];
+        let r = dtw(&x, &x);
+        assert_eq!(r.distance, 0.0);
+        // Path is the main diagonal.
+        assert_eq!(r.path, (0..4).map(|i| (i, i)).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn known_small_example() {
+        // Hand-checked: x=[0,1,2], y=[0,2].
+        // D = [[0,2],[1,1],[3,1]] → distance 1.
+        let r = dtw(&[0.0, 1.0, 2.0], &[0.0, 2.0]);
+        assert_eq!(r.distance, 1.0);
+        assert_eq!(r.path.first(), Some(&(0, 0)));
+        assert_eq!(r.path.last(), Some(&(2, 1)));
+    }
+
+    #[test]
+    fn time_shift_is_cheap_for_dtw() {
+        // A shifted copy should have a much smaller DTW distance than the
+        // pointwise (lock-step) distance — DTW's raison d'être.
+        let x: Vec<f64> = (0..100).map(|i| ((i as f64) * 0.2).sin()).collect();
+        let y: Vec<f64> = (0..100).map(|i| (((i + 6) as f64) * 0.2).sin()).collect();
+        let lockstep: f64 = x.iter().zip(&y).map(|(a, b)| (a - b).abs()).sum();
+        let r = dtw(&x, &y);
+        assert!(r.distance < lockstep / 4.0, "dtw {} lockstep {}", r.distance, lockstep);
+    }
+
+    #[test]
+    fn distance_symmetry() {
+        let mut g = Pcg32::new(1, 1);
+        for _ in 0..20 {
+            let lx = 3 + g.below(40) as usize;
+            let x = rand_series(&mut g, lx);
+            let ly = 3 + g.below(40) as usize;
+            let y = rand_series(&mut g, ly);
+            let a = dtw(&x, &y).distance;
+            let b = dtw(&y, &x).distance;
+            assert!((a - b).abs() < 1e-9, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn path_is_monotone_and_connected() {
+        let mut g = Pcg32::new(2, 7);
+        for _ in 0..30 {
+            let lx = 2 + g.below(60) as usize;
+            let x = rand_series(&mut g, lx);
+            let ly = 2 + g.below(60) as usize;
+            let y = rand_series(&mut g, ly);
+            let r = dtw(&x, &y);
+            assert_eq!(r.path.first(), Some(&(0, 0)));
+            assert_eq!(r.path.last(), Some(&(x.len() - 1, y.len() - 1)));
+            for w in r.path.windows(2) {
+                let (i0, j0) = w[0];
+                let (i1, j1) = w[1];
+                let di = i1 - i0;
+                let dj = j1 - j0;
+                assert!(di <= 1 && dj <= 1 && di + dj >= 1, "step {w:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn path_cost_equals_distance() {
+        let mut g = Pcg32::new(3, 3);
+        for _ in 0..20 {
+            let lx = 2 + g.below(50) as usize;
+            let x = rand_series(&mut g, lx);
+            let ly = 2 + g.below(50) as usize;
+            let y = rand_series(&mut g, ly);
+            let r = dtw(&x, &y);
+            let cost: f64 = r.path.iter().map(|&(i, j)| local_cost(x[i], y[j])).sum();
+            assert!((cost - r.distance).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn distance_only_matches_full() {
+        let mut g = Pcg32::new(4, 9);
+        for _ in 0..20 {
+            let lx = 2 + g.below(50) as usize;
+            let x = rand_series(&mut g, lx);
+            let ly = 2 + g.below(50) as usize;
+            let y = rand_series(&mut g, ly);
+            assert!((dtw(&x, &y).distance - dtw_distance(&x, &y)).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn triangle_like_bound_vs_pointwise() {
+        // DTW distance never exceeds the lock-step L1 distance for
+        // equal-length series (the diagonal is one admissible path).
+        let mut g = Pcg32::new(5, 5);
+        for _ in 0..20 {
+            let n = 2 + g.below(64) as usize;
+            let x = rand_series(&mut g, n);
+            let y = rand_series(&mut g, n);
+            let lockstep: f64 = x.iter().zip(&y).map(|(a, b)| (a - b).abs()).sum();
+            assert!(dtw_distance(&x, &y) <= lockstep + 1e-12);
+        }
+    }
+
+    #[test]
+    fn warp_onto_x_repeats_y_elements() {
+        let x = vec![0.0, 0.0, 1.0, 2.0, 2.0];
+        let y = vec![0.0, 1.0, 2.0];
+        let r = dtw(&x, &y);
+        let warped = r.warp_onto_x(&y, x.len());
+        assert_eq!(warped.len(), x.len());
+        // Every warped value is an element of y.
+        for v in &warped {
+            assert!(y.contains(v));
+        }
+        // For this construction the warp is exact.
+        assert_eq!(warped, x);
+    }
+
+    #[test]
+    fn distance_zero_iff_identical_after_warp() {
+        // x and its "stuttered" version warp to distance 0.
+        let x = vec![0.1, 0.4, 0.8, 0.3];
+        let y = vec![0.1, 0.1, 0.4, 0.8, 0.8, 0.8, 0.3];
+        let r = dtw(&x, &y);
+        assert!(r.distance.abs() < 1e-12);
+    }
+}

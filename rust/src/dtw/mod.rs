@@ -1,0 +1,40 @@
+//! Dynamic Time Warping and the paper's similarity measure.
+//!
+//! [`full`] is the exact O(N·M) algorithm of paper eqn. (1)–(2) with
+//! traceback; [`banded`] adds a Sakoe–Chiba constraint; [`fastdtw`] is the
+//! multiresolution approximation of the paper's reference [20]
+//! (Salvador & Chan, *Toward accurate dynamic time warping in linear time
+//! and space*). [`corr`] computes the correlation-coefficient similarity of
+//! eqn. (3) on the DTW-aligned series.
+//!
+//! The traceback **choice encoding is shared with the Pallas kernel**
+//! (`python/compile/kernels/dtw.py`) and with [`crate::runtime`]:
+//! `0` = diagonal `(i-1,j-1)`, `1` = up `(i-1,j)`, `2` = left `(i,j-1)`;
+//! ties resolve vertical-group-first, diagonal-within-group (see
+//! [`full::dtw`]). `rust/tests/parity.rs` pins the two implementations.
+
+pub mod banded;
+pub mod corr;
+pub mod fastdtw;
+pub mod full;
+
+/// Traceback choice: predecessor of a DP cell.
+pub const CHOICE_DIAG: u8 = 0;
+pub const CHOICE_UP: u8 = 1;
+pub const CHOICE_LEFT: u8 = 2;
+
+/// Local cost: absolute difference of utilization samples (paper eqn. (2)).
+#[inline]
+pub fn local_cost(a: f64, b: f64) -> f64 {
+    (a - b).abs()
+}
+
+/// Sakoe–Chiba band radius used by the similarity pipeline: 10% of the
+/// longer series (the textbook default), floored so the slope-following
+/// band always stays connected. Shared with the Pallas kernel
+/// (`python/compile/kernels/dtw.py`) — keep the two formulas in sync.
+pub fn band_radius(n: usize, m: usize) -> usize {
+    let drift = (m.max(2) - 1) as f64 / (n.max(2) - 1) as f64;
+    let r = (0.1 * n.max(m) as f64).max(drift + 2.0);
+    r.ceil() as usize
+}

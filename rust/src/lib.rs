@@ -1,0 +1,44 @@
+//! # mrtuner — pattern-matching self-tuning for MapReduce jobs
+//!
+//! Reproduction of *"Pattern Matching for Self-Tuning of MapReduce Jobs"*
+//! (Rizvandi, Taheri, Zomaya — IEEE ISPA 2011, DOI 10.1109/ISPA.2011.24)
+//! as a three-layer Rust + JAX + Pallas stack:
+//!
+//! * **L1** (build-time Python): the DTW dynamic program and the 6th-order
+//!   Chebyshev de-noising filter as Pallas kernels, AOT-lowered to HLO text.
+//! * **L2** (build-time Python): the matching pipeline (preprocess →
+//!   DTW → traceback inputs) as jitted JAX entry points, one per shape bucket.
+//! * **L3** (this crate): the paper's system — a pseudo-distributed MapReduce
+//!   simulator substrate, workload implementations, the profiling phase, the
+//!   matching phase (DTW + correlation vote), and the self-tuner that
+//!   transfers optimal configurations between matched applications.
+//!
+//! Python never runs on the request path: `make artifacts` lowers the HLO
+//! once, and [`runtime`] loads and executes it through the PJRT C API
+//! (`xla` crate). Every runtime computation also has a bit-compatible pure
+//! Rust fallback ([`signal`], [`dtw`]) used when artifacts are absent and to
+//! cross-check the compiled path in tests.
+
+pub mod coordinator;
+pub mod database;
+pub mod dtw;
+pub mod runtime;
+pub mod signal;
+pub mod simulator;
+pub mod util;
+pub mod workloads;
+
+/// Convenient re-exports covering the public API surface used by the
+/// examples and the CLI.
+pub mod prelude {
+    pub use crate::coordinator::{
+        matcher::{MatchOutcome, Matcher},
+        profiler::Profiler,
+        tuner::{Tuner, TuningReport},
+        ConfigGrid, SystemConfig, TuningSystem,
+    };
+    pub use crate::database::{profile::ProfileEntry, store::ReferenceDb};
+    pub use crate::dtw::{corr::similarity_percent, full::DtwResult};
+    pub use crate::simulator::job::JobConfig;
+    pub use crate::workloads::AppId;
+}

@@ -1,0 +1,165 @@
+//! mrtuner CLI — leader entrypoint.
+//!
+//! ```text
+//! mrtuner profile --app wordcount --grid table1|grid50|small --db db.json
+//! mrtuner match   --app exim      --grid table1 --db db.json
+//! mrtuner tune    --app exim      --grid small  --db db.json
+//! mrtuner table1  [--seed N]                  # reproduce the paper's Table 1
+//! mrtuner serve   --db db.json --port 7070    # match-as-a-service
+//! mrtuner calibrate --app terasort            # re-measure cost model
+//! ```
+
+use mrtuner::coordinator::server::{MatchServer, ServerState};
+use mrtuner::coordinator::{matcher::Matcher, ConfigGrid, SystemConfig, TuningSystem};
+use mrtuner::database::store::ReferenceDb;
+use mrtuner::util::cli::Args;
+use mrtuner::workloads::{workload_for, AppId};
+use std::path::PathBuf;
+
+fn grid_from(args: &Args) -> ConfigGrid {
+    let seed = args.opt::<u64>("seed", 1);
+    match args.opt_str("grid", "small").as_str() {
+        "table1" => ConfigGrid::paper_table1(),
+        "grid50" => ConfigGrid::paper_grid50(seed),
+        "small" => ConfigGrid::small(seed),
+        other => {
+            let n: usize = other.parse().unwrap_or_else(|_| {
+                eprintln!("unknown grid {other:?}; use table1|grid50|small|<N>");
+                std::process::exit(2);
+            });
+            ConfigGrid::random(n, seed)
+        }
+    }
+}
+
+fn app_from(args: &Args) -> AppId {
+    let name = args.opt_str("app", "");
+    AppId::from_name(&name).unwrap_or_else(|| {
+        eprintln!(
+            "unknown --app {name:?}; known: {}",
+            AppId::all().iter().map(|a| a.name()).collect::<Vec<_>>().join(", ")
+        );
+        std::process::exit(2);
+    })
+}
+
+fn system(args: &Args) -> TuningSystem {
+    let mut config = SystemConfig {
+        seed: args.opt::<u64>("seed", SystemConfig::default().seed),
+        workers: args.opt::<usize>("workers", SystemConfig::default().workers),
+        use_runtime: !args.has_flag("no-runtime"),
+        ..SystemConfig::default()
+    };
+    if args.has_flag("no-noise") {
+        config.noise = mrtuner::signal::noise::NoiseModel::none();
+    }
+    let mut sys = TuningSystem::new(config);
+    let db_path = args.opt_str("db", "");
+    if !db_path.is_empty() {
+        if let Ok(db) = ReferenceDb::load(&PathBuf::from(&db_path)) {
+            log::info!("loaded {} entries from {db_path}", db.len());
+            sys.db = db;
+        }
+    }
+    sys
+}
+
+fn save_db(sys: &TuningSystem, args: &Args) {
+    let db_path = args.opt_str("db", "");
+    if !db_path.is_empty() {
+        sys.db.save(&PathBuf::from(&db_path)).expect("saving database");
+        log::info!("saved {} entries to {db_path}", sys.db.len());
+    }
+}
+
+fn main() -> anyhow::Result<()> {
+    mrtuner::util::logging::init();
+    let args = Args::from_env();
+    match args.command.as_deref() {
+        Some("profile") => {
+            let app = app_from(&args);
+            let grid = grid_from(&args);
+            let mut sys = system(&args);
+            sys.profile_app(app, &grid);
+            println!("profiled {} under {} configuration sets", app.name(), grid.len());
+            save_db(&sys, &args);
+        }
+        Some("match") => {
+            let app = app_from(&args);
+            let grid = grid_from(&args);
+            let sys = system(&args);
+            let outcome = sys.match_app(app, &grid);
+            for v in &outcome.votes {
+                println!(
+                    "{:28} best={:12} sim={:6.2}%",
+                    v.config.label(),
+                    v.best_app.map(|a| a.name()).unwrap_or("-"),
+                    v.best_similarity
+                );
+            }
+            println!("tally: {:?}", outcome.tally);
+            match outcome.winner {
+                Some(w) => println!("most similar application: {}", w.name()),
+                None => println!("no application cleared the 90% threshold"),
+            }
+        }
+        Some("tune") => {
+            let app = app_from(&args);
+            let grid = grid_from(&args);
+            let mut sys = system(&args);
+            let report = sys.tune_app(app, &grid);
+            println!("matched: {:?}", report.matched_app.map(|a| a.name()));
+            if let Some(cfg) = report.transferred {
+                println!("transferred config: {}", cfg.label());
+            }
+            println!(
+                "default {:.1}s -> tuned {:.1}s (speedup {:.2}x)",
+                report.default_secs,
+                report.tuned_secs,
+                report.speedup()
+            );
+            save_db(&sys, &args);
+        }
+        Some("table1") => {
+            let mut sys = system(&args);
+            let grid = ConfigGrid::paper_table1();
+            sys.profile_app(AppId::WordCount, &grid);
+            sys.profile_app(AppId::TeraSort, &grid);
+            let m = Matcher::new(&sys.config, sys.runtime());
+            let table = m.similarity_table(AppId::EximParse, &grid, &sys.db);
+            mrtuner::coordinator::print_table1(&table, &grid);
+        }
+        Some("serve") => {
+            let mut sys = system(&args);
+            let port = args.opt::<u16>("port", 7070);
+            let runtime = sys.runtime();
+            let state = ServerState {
+                db: std::mem::take(&mut sys.db),
+                runtime,
+                metrics: mrtuner::coordinator::metrics::Metrics::new(),
+            };
+            let server = MatchServer::bind(&format!("127.0.0.1:{port}"), state)?;
+            println!("serving on {}", server.local_addr()?);
+            server.serve(args.opt::<usize>("workers", 4))?;
+        }
+        Some("calibrate") => {
+            let app = app_from(&args);
+            let w = workload_for(app);
+            let measured = w.calibrate(
+                args.opt::<usize>("sample-kb", 1024) * 1024,
+                args.opt::<f64>("speed-factor", 4.0),
+                args.opt::<u64>("seed", 1),
+            );
+            println!("calibrated cost model for {}: {measured:#?}", app.name());
+            println!("shipped default:             {:#?}", w.default_costs());
+        }
+        _ => {
+            println!(
+                "usage: mrtuner <profile|match|tune|table1|serve|calibrate> \
+                 [--app NAME] [--grid table1|grid50|small|N] [--db FILE] \
+                 [--seed N] [--workers N] [--port N] [--no-runtime] [--no-noise]"
+            );
+        }
+    }
+    Ok(())
+}

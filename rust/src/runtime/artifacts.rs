@@ -1,0 +1,196 @@
+//! Artifact manifest: what `python/compile/aot.py` produced.
+
+use crate::util::json::Json;
+use anyhow::{anyhow, Context, Result};
+use std::path::{Path, PathBuf};
+
+/// Kind of compiled entry point.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EntryKind {
+    Preprocess,
+    DtwPair,
+    DtwBatch,
+    MatchOne,
+}
+
+impl EntryKind {
+    fn parse(s: &str) -> Option<EntryKind> {
+        match s {
+            "preprocess" => Some(EntryKind::Preprocess),
+            "dtw_pair" => Some(EntryKind::DtwPair),
+            "dtw_batch" => Some(EntryKind::DtwBatch),
+            "match_one" => Some(EntryKind::MatchOne),
+            _ => None,
+        }
+    }
+}
+
+/// One compiled artifact.
+#[derive(Debug, Clone)]
+pub struct EntryMeta {
+    pub name: String,
+    pub file: String,
+    pub kind: EntryKind,
+    /// Shape bucket (series length L).
+    pub len: usize,
+    /// Batch size for batched kinds.
+    pub batch: usize,
+}
+
+/// Parsed `manifest.json`.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub batch: usize,
+    pub buckets: Vec<usize>,
+    pub entries: Vec<EntryMeta>,
+}
+
+impl Manifest {
+    /// Load and validate `dir/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let json = Json::parse(&text).context("parsing manifest.json")?;
+        let batch = json
+            .get("batch")
+            .and_then(Json::as_usize)
+            .ok_or_else(|| anyhow!("manifest missing batch"))?;
+        let mut buckets = json
+            .get("buckets")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("manifest missing buckets"))?
+            .iter()
+            .filter_map(Json::as_usize)
+            .collect::<Vec<_>>();
+        buckets.sort_unstable();
+        let mut entries = Vec::new();
+        for e in json
+            .get("entries")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("manifest missing entries"))?
+        {
+            let name = e
+                .get("name")
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow!("entry missing name"))?
+                .to_string();
+            let kind = e
+                .get("kind")
+                .and_then(Json::as_str)
+                .and_then(EntryKind::parse)
+                .ok_or_else(|| anyhow!("entry {name}: bad kind"))?;
+            let file = e
+                .get("file")
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow!("entry {name}: missing file"))?
+                .to_string();
+            let len = e
+                .get("len")
+                .and_then(Json::as_usize)
+                .ok_or_else(|| anyhow!("entry {name}: missing len"))?;
+            let batch = e.get("batch").and_then(Json::as_usize).unwrap_or(1);
+            if !dir.join(&file).exists() {
+                return Err(anyhow!("artifact file {file} missing from {}", dir.display()));
+            }
+            entries.push(EntryMeta {
+                name,
+                file,
+                kind,
+                len,
+                batch,
+            });
+        }
+        Ok(Manifest {
+            dir: dir.to_path_buf(),
+            batch,
+            buckets,
+            entries,
+        })
+    }
+
+    /// Default artifact directory: `$MRTUNER_ARTIFACTS` or `./artifacts`.
+    pub fn default_dir() -> PathBuf {
+        std::env::var("MRTUNER_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|_| PathBuf::from("artifacts"))
+    }
+
+    /// Smallest bucket that fits a series of `len` samples, if any.
+    pub fn bucket_for(&self, len: usize) -> Option<usize> {
+        self.buckets.iter().copied().find(|&b| b >= len)
+    }
+
+    /// Largest available bucket (series longer than this get resampled).
+    pub fn max_bucket(&self) -> usize {
+        self.buckets.last().copied().unwrap_or(0)
+    }
+
+    /// Find a specific entry.
+    pub fn entry(&self, kind: EntryKind, len: usize) -> Option<&EntryMeta> {
+        self.entries.iter().find(|e| e.kind == kind && e.len == len)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn write_fake(dir: &Path) {
+        std::fs::create_dir_all(dir).unwrap();
+        std::fs::write(dir.join("preprocess_128.hlo.txt"), "HloModule fake").unwrap();
+        std::fs::write(
+            dir.join("manifest.json"),
+            r#"{"batch": 8, "buckets": [128], "entries": [
+                {"name": "preprocess_128", "file": "preprocess_128.hlo.txt",
+                 "kind": "preprocess", "len": 128,
+                 "inputs": [], "sha256": "x"}
+            ]}"#,
+        )
+        .unwrap();
+    }
+
+    #[test]
+    fn parses_manifest() {
+        let dir = std::env::temp_dir().join("mrtuner_manifest_test");
+        write_fake(&dir);
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.batch, 8);
+        assert_eq!(m.buckets, vec![128]);
+        assert_eq!(m.entries.len(), 1);
+        assert_eq!(m.entries[0].kind, EntryKind::Preprocess);
+        assert!(m.entry(EntryKind::Preprocess, 128).is_some());
+        assert!(m.entry(EntryKind::DtwBatch, 128).is_none());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn bucket_selection() {
+        let dir = std::env::temp_dir().join("mrtuner_manifest_test2");
+        write_fake(&dir);
+        let mut m = Manifest::load(&dir).unwrap();
+        m.buckets = vec![128, 256, 512];
+        assert_eq!(m.bucket_for(100), Some(128));
+        assert_eq!(m.bucket_for(128), Some(128));
+        assert_eq!(m.bucket_for(300), Some(512));
+        assert_eq!(m.bucket_for(513), None);
+        assert_eq!(m.max_bucket(), 512);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn missing_file_rejected() {
+        let dir = std::env::temp_dir().join("mrtuner_manifest_test3");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.json"),
+            r#"{"batch": 8, "buckets": [128], "entries": [
+                {"name": "x", "file": "nope.hlo.txt", "kind": "preprocess", "len": 128}
+            ]}"#,
+        )
+        .unwrap();
+        assert!(Manifest::load(&dir).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,198 @@
+//! PJRT client: compile AOT artifacts once, execute them on demand.
+//!
+//! [`Runtime`] is **not** `Send` (the `xla` crate's `PjRtClient` is
+//! `Rc`-based); [`super::executor::RuntimeHandle`] wraps it in a dedicated
+//! service thread for the multi-threaded coordinator.
+
+use super::artifacts::{EntryKind, Manifest};
+use anyhow::{anyhow, Context, Result};
+use std::collections::BTreeMap;
+use std::path::Path;
+
+/// A padded, fixed-bucket f32 series plus its true length.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Padded {
+    pub data: Vec<f32>,
+    pub len: usize,
+}
+
+impl Padded {
+    /// Pad (or linearly resample, if longer than `bucket`) to `bucket`.
+    pub fn fit(series: &[f64], bucket: usize) -> Padded {
+        let (vals, len) = if series.len() <= bucket {
+            (series.to_vec(), series.len())
+        } else {
+            (crate::signal::resample::linear(series, bucket), bucket)
+        };
+        let mut data: Vec<f32> = vals.iter().map(|&v| v as f32).collect();
+        data.resize(bucket, 0.0);
+        Padded { data, len }
+    }
+
+    /// The valid prefix as f64.
+    pub fn valid(&self) -> Vec<f64> {
+        self.data[..self.len].iter().map(|&v| v as f64).collect()
+    }
+}
+
+/// Result of a batched DTW execution.
+#[derive(Debug, Clone)]
+pub struct BatchOutput {
+    /// Raw DTW distances per batch lane.
+    pub dists: Vec<f32>,
+    /// Traceback choices, `batch * len * len`, row-major.
+    pub choices: Vec<i8>,
+    /// Bucket length the lane matrices are sized for.
+    pub len: usize,
+}
+
+impl BatchOutput {
+    /// The `b`-th lane's choice matrix.
+    pub fn lane_choices(&self, b: usize) -> &[i8] {
+        &self.choices[b * self.len * self.len..(b + 1) * self.len * self.len]
+    }
+}
+
+/// Compiled executables keyed by artifact name.
+pub struct Runtime {
+    manifest: Manifest,
+    executables: BTreeMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl Runtime {
+    /// Load every artifact in `dir` and compile it on the PJRT CPU client.
+    pub fn load(dir: &Path) -> Result<Runtime> {
+        let manifest = Manifest::load(dir)?;
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        let mut executables = BTreeMap::new();
+        for entry in &manifest.entries {
+            let path = manifest.dir.join(&entry.file);
+            let proto = xla::HloModuleProto::from_text_file(&path)
+                .with_context(|| format!("parsing HLO text {}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client
+                .compile(&comp)
+                .with_context(|| format!("compiling {}", entry.name))?;
+            executables.insert(entry.name.clone(), exe);
+        }
+        log::info!(
+            "runtime: compiled {} artifacts from {}",
+            executables.len(),
+            dir.display()
+        );
+        Ok(Runtime {
+            manifest,
+            executables,
+        })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    fn exe(&self, kind: EntryKind, len: usize) -> Result<&xla::PjRtLoadedExecutable> {
+        let entry = self
+            .manifest
+            .entry(kind, len)
+            .ok_or_else(|| anyhow!("no artifact for {kind:?} at bucket {len}"))?;
+        self.executables
+            .get(&entry.name)
+            .ok_or_else(|| anyhow!("artifact {} not compiled", entry.name))
+    }
+
+    /// Chebyshev de-noise + normalize via the `preprocess_L` artifact.
+    pub fn preprocess(&self, series: &Padded) -> Result<Padded> {
+        let bucket = series.data.len();
+        let exe = self.exe(EntryKind::Preprocess, bucket)?;
+        let x = xla::Literal::vec1(&series.data);
+        let n = xla::Literal::vec1(&[series.len as i32]);
+        let result = exe.execute::<xla::Literal>(&[x, n])?[0][0].to_literal_sync()?;
+        let out = result.to_tuple1()?;
+        Ok(Padded {
+            data: out.to_vec::<f32>()?,
+            len: series.len,
+        })
+    }
+
+    /// Batched DTW via the `dtw_batch_BxL` artifact. `refs` must have
+    /// exactly the manifest batch size (pad with dummies and ignore).
+    pub fn dtw_batch(&self, query: &Padded, refs: &[Padded]) -> Result<BatchOutput> {
+        let bucket = query.data.len();
+        let b = self.manifest.batch;
+        if refs.len() != b {
+            return Err(anyhow!("dtw_batch needs exactly {b} refs, got {}", refs.len()));
+        }
+        let exe = self.exe(EntryKind::DtwBatch, bucket)?;
+        let (dists, choices) = self.run_batched(exe, None, query, refs, bucket)?;
+        Ok(BatchOutput {
+            dists,
+            choices,
+            len: bucket,
+        })
+    }
+
+    /// Fused preprocess+DTW via `match_one_BxL`. Returns the preprocessed
+    /// query along with the batch output.
+    pub fn match_one(&self, raw_query: &Padded, refs: &[Padded]) -> Result<(Padded, BatchOutput)> {
+        let bucket = raw_query.data.len();
+        let b = self.manifest.batch;
+        if refs.len() != b {
+            return Err(anyhow!("match_one needs exactly {b} refs, got {}", refs.len()));
+        }
+        let exe = self.exe(EntryKind::MatchOne, bucket)?;
+
+        let mut ys = Vec::with_capacity(b * bucket);
+        let mut nys = Vec::with_capacity(b);
+        for r in refs {
+            anyhow::ensure!(r.data.len() == bucket, "ref bucket mismatch");
+            ys.extend_from_slice(&r.data);
+            nys.push(r.len as i32);
+        }
+        let args = [
+            xla::Literal::vec1(&raw_query.data),
+            xla::Literal::vec1(&ys).reshape(&[b as i64, bucket as i64])?,
+            xla::Literal::vec1(&[raw_query.len as i32]),
+            xla::Literal::vec1(&nys),
+        ];
+        let result = exe.execute::<xla::Literal>(&args)?[0][0].to_literal_sync()?;
+        let (q, dists, choices) = result.to_tuple3()?;
+        Ok((
+            Padded {
+                data: q.to_vec::<f32>()?,
+                len: raw_query.len,
+            },
+            BatchOutput {
+                dists: dists.to_vec::<f32>()?,
+                choices: choices.to_vec::<i8>()?,
+                len: bucket,
+            },
+        ))
+    }
+
+    fn run_batched(
+        &self,
+        exe: &xla::PjRtLoadedExecutable,
+        _q_pre: Option<()>,
+        query: &Padded,
+        refs: &[Padded],
+        bucket: usize,
+    ) -> Result<(Vec<f32>, Vec<i8>)> {
+        let b = refs.len();
+        let mut ys = Vec::with_capacity(b * bucket);
+        let mut nys = Vec::with_capacity(b);
+        for r in refs {
+            anyhow::ensure!(r.data.len() == bucket, "ref bucket mismatch");
+            ys.extend_from_slice(&r.data);
+            nys.push(r.len as i32);
+        }
+        let args = [
+            xla::Literal::vec1(&query.data),
+            xla::Literal::vec1(&ys).reshape(&[b as i64, bucket as i64])?,
+            xla::Literal::vec1(&[query.len as i32]),
+            xla::Literal::vec1(&nys),
+        ];
+        let result = exe.execute::<xla::Literal>(&args)?[0][0].to_literal_sync()?;
+        let (dists, choices) = result.to_tuple2()?;
+        Ok((dists.to_vec::<f32>()?, choices.to_vec::<i8>()?))
+    }
+}

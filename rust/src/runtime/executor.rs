@@ -1,0 +1,171 @@
+//! Thread-safe runtime access: a dedicated service thread owns the
+//! non-`Send` [`Runtime`]; [`RuntimeHandle`] is a cheap, cloneable,
+//! `Send + Sync` handle the coordinator's worker threads use.
+
+use super::client::{BatchOutput, Padded, Runtime};
+use anyhow::{anyhow, Result};
+use std::path::{Path, PathBuf};
+use std::sync::mpsc;
+use std::thread;
+
+enum Request {
+    Preprocess {
+        series: Padded,
+        reply: mpsc::Sender<Result<Padded>>,
+    },
+    DtwBatch {
+        query: Padded,
+        refs: Vec<Padded>,
+        reply: mpsc::Sender<Result<BatchOutput>>,
+    },
+    MatchOne {
+        raw_query: Padded,
+        refs: Vec<Padded>,
+        reply: mpsc::Sender<Result<(Padded, BatchOutput)>>,
+    },
+    Shutdown,
+}
+
+/// Cloneable handle to the runtime service thread.
+#[derive(Clone)]
+pub struct RuntimeHandle {
+    tx: mpsc::Sender<Request>,
+    batch: usize,
+    buckets: Vec<usize>,
+}
+
+/// Owns the service thread; dropping shuts it down.
+pub struct RuntimeService {
+    handle: RuntimeHandle,
+    join: Option<thread::JoinHandle<()>>,
+}
+
+impl RuntimeService {
+    /// Start the service, compiling artifacts from `dir`.
+    pub fn start(dir: &Path) -> Result<RuntimeService> {
+        let dir: PathBuf = dir.to_path_buf();
+        let (tx, rx) = mpsc::channel::<Request>();
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<(usize, Vec<usize>)>>();
+        let join = thread::Builder::new()
+            .name("mrtuner-runtime".into())
+            .spawn(move || {
+                let runtime = match Runtime::load(&dir) {
+                    Ok(rt) => {
+                        let m = rt.manifest();
+                        let _ = ready_tx.send(Ok((m.batch, m.buckets.clone())));
+                        rt
+                    }
+                    Err(e) => {
+                        let _ = ready_tx.send(Err(e));
+                        return;
+                    }
+                };
+                for req in rx {
+                    match req {
+                        Request::Preprocess { series, reply } => {
+                            let _ = reply.send(runtime.preprocess(&series));
+                        }
+                        Request::DtwBatch { query, refs, reply } => {
+                            let _ = reply.send(runtime.dtw_batch(&query, &refs));
+                        }
+                        Request::MatchOne {
+                            raw_query,
+                            refs,
+                            reply,
+                        } => {
+                            let _ = reply.send(runtime.match_one(&raw_query, &refs));
+                        }
+                        Request::Shutdown => break,
+                    }
+                }
+            })
+            .expect("spawn runtime thread");
+        let (batch, buckets) = ready_rx
+            .recv()
+            .map_err(|_| anyhow!("runtime thread died during startup"))??;
+        Ok(RuntimeService {
+            handle: RuntimeHandle {
+                tx,
+                batch,
+                buckets,
+            },
+            join: Some(join),
+        })
+    }
+
+    /// Start from the default artifact directory if it exists.
+    pub fn try_default() -> Option<RuntimeService> {
+        let dir = super::artifacts::Manifest::default_dir();
+        if !dir.join("manifest.json").exists() {
+            return None;
+        }
+        match RuntimeService::start(&dir) {
+            Ok(s) => Some(s),
+            Err(e) => {
+                log::warn!("artifacts present but unusable ({e:#}); using Rust fallback");
+                None
+            }
+        }
+    }
+
+    pub fn handle(&self) -> RuntimeHandle {
+        self.handle.clone()
+    }
+}
+
+impl Drop for RuntimeService {
+    fn drop(&mut self) {
+        let _ = self.handle.tx.send(Request::Shutdown);
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+impl RuntimeHandle {
+    /// Manifest batch size (lanes per dtw_batch/match_one execution).
+    pub fn batch(&self) -> usize {
+        self.batch
+    }
+
+    /// Available shape buckets (sorted ascending).
+    pub fn buckets(&self) -> &[usize] {
+        &self.buckets
+    }
+
+    /// Smallest bucket fitting `len`, else the largest (resample case).
+    pub fn bucket_for(&self, len: usize) -> usize {
+        self.buckets
+            .iter()
+            .copied()
+            .find(|&b| b >= len)
+            .unwrap_or_else(|| *self.buckets.last().expect("nonempty buckets"))
+    }
+
+    fn call<T>(&self, build: impl FnOnce(mpsc::Sender<Result<T>>) -> Request) -> Result<T> {
+        let (reply, rx) = mpsc::channel();
+        self.tx
+            .send(build(reply))
+            .map_err(|_| anyhow!("runtime thread gone"))?;
+        rx.recv().map_err(|_| anyhow!("runtime thread gone"))?
+    }
+
+    /// Chebyshev de-noise + normalize on the PJRT path.
+    pub fn preprocess(&self, series: Padded) -> Result<Padded> {
+        self.call(|reply| Request::Preprocess { series, reply })
+    }
+
+    /// Batched DTW on the PJRT path.
+    pub fn dtw_batch(&self, query: Padded, refs: Vec<Padded>) -> Result<BatchOutput> {
+        self.call(|reply| Request::DtwBatch { query, refs, reply })
+    }
+
+    /// Fused preprocess + batched DTW on the PJRT path.
+    pub fn match_one(&self, raw_query: Padded, refs: Vec<Padded>) -> Result<(Padded, BatchOutput)> {
+        self.call(|reply| Request::MatchOne {
+            raw_query,
+            refs,
+            reply,
+        })
+    }
+}

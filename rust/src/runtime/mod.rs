@@ -1,0 +1,13 @@
+//! PJRT runtime: loads the HLO-text artifacts `make artifacts` produced and
+//! executes them from the request path. Python is never involved here.
+//!
+//! * [`artifacts`] — manifest parsing and bucket selection;
+//! * [`client`]    — the (thread-local) PJRT CPU client and typed wrappers;
+//! * [`executor`]  — a dedicated service thread + `Send + Sync` handle.
+
+pub mod artifacts;
+pub mod client;
+pub mod executor;
+
+pub use client::{BatchOutput, Padded};
+pub use executor::{RuntimeHandle, RuntimeService};

@@ -1,0 +1,295 @@
+//! Chebyshev type-I low-pass filter design and cascaded-biquad filtering.
+//!
+//! Implements the classic design chain — analog prototype poles → low-pass
+//! frequency scaling with pre-warping → bilinear transform → second-order
+//! sections — with no external DSP dependency. The design is pinned against
+//! `scipy.signal.cheby1(6, 0.5, 0.1, output='sos')` golden values in the
+//! tests below, and the same golden coefficients pin the Python/Pallas
+//! implementation, so all three layers filter identically.
+
+/// Complex number helper (no `num-complex` offline; only what design needs).
+#[derive(Debug, Clone, Copy, PartialEq)]
+struct C {
+    re: f64,
+    im: f64,
+}
+
+impl C {
+    fn new(re: f64, im: f64) -> C {
+        C { re, im }
+    }
+
+    fn add(self, o: C) -> C {
+        C::new(self.re + o.re, self.im + o.im)
+    }
+
+    fn sub(self, o: C) -> C {
+        C::new(self.re - o.re, self.im - o.im)
+    }
+
+    fn mul(self, o: C) -> C {
+        C::new(
+            self.re * o.re - self.im * o.im,
+            self.re * o.im + self.im * o.re,
+        )
+    }
+
+    fn div(self, o: C) -> C {
+        let d = o.re * o.re + o.im * o.im;
+        C::new(
+            (self.re * o.re + self.im * o.im) / d,
+            (self.im * o.re - self.re * o.im) / d,
+        )
+    }
+
+    fn scale(self, k: f64) -> C {
+        C::new(self.re * k, self.im * k)
+    }
+
+    fn abs2(self) -> f64 {
+        self.re * self.re + self.im * self.im
+    }
+}
+
+/// One second-order section: `b = [b0,b1,b2]`, `a = [1,a1,a2]`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Biquad {
+    pub b: [f64; 3],
+    pub a1: f64,
+    pub a2: f64,
+}
+
+/// A cascade of second-order sections (SOS) — the filter.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Sos {
+    pub sections: Vec<Biquad>,
+}
+
+impl Sos {
+    /// Design an even-order Chebyshev type-I low-pass filter.
+    ///
+    /// * `order` — filter order (must be even and ≥ 2; the paper uses 6).
+    /// * `ripple_db` — pass-band ripple in dB (> 0).
+    /// * `cutoff` — cutoff as a fraction of the Nyquist frequency, in (0,1).
+    pub fn cheby1_lowpass(order: usize, ripple_db: f64, cutoff: f64) -> Sos {
+        assert!(order >= 2 && order % 2 == 0, "even order >= 2 required");
+        assert!(ripple_db > 0.0, "ripple must be positive");
+        assert!(cutoff > 0.0 && cutoff < 1.0, "cutoff in (0,1) of Nyquist");
+
+        let n = order;
+        // Analog prototype (cutoff 1 rad/s).
+        let eps = (10f64.powf(ripple_db / 10.0) - 1.0).sqrt();
+        let mu = (1.0 / eps).asinh() / n as f64;
+        let sinh_mu = mu.sinh();
+        let cosh_mu = mu.cosh();
+        let mut poles: Vec<C> = (1..=n)
+            .map(|k| {
+                let theta = std::f64::consts::PI * (2 * k as i64 - 1) as f64 / (2.0 * n as f64);
+                C::new(-sinh_mu * theta.sin(), cosh_mu * theta.cos())
+            })
+            .collect();
+        // Prototype gain: product of (-poles); even order divides by sqrt(1+eps^2).
+        let mut k0 = C::new(1.0, 0.0);
+        for p in &poles {
+            k0 = k0.mul(p.scale(-1.0));
+        }
+        let mut gain = k0.re / (1.0 + eps * eps).sqrt();
+
+        // Low-pass scale with bilinear pre-warping (fs = 2 convention).
+        let fs2 = 4.0; // 2 * fs
+        let warped = fs2 * (std::f64::consts::PI * cutoff / 2.0).tan();
+        for p in &mut poles {
+            *p = p.scale(warped);
+        }
+        gain *= warped.powi(n as i32);
+
+        // Bilinear transform: z = (fs2 + s) / (fs2 - s); n zeros at z = -1.
+        let mut zpoles = Vec::with_capacity(n);
+        let mut denom = C::new(1.0, 0.0);
+        for p in &poles {
+            zpoles.push(C::new(fs2, 0.0).add(*p).div(C::new(fs2, 0.0).sub(*p)));
+            denom = denom.mul(C::new(fs2, 0.0).sub(*p));
+        }
+        // Imaginary parts cancel over conjugate pairs.
+        let gz = gain / denom.re;
+
+        // Pair conjugates into biquads; sort by pole radius so section order
+        // matches scipy's (ascending |p|² keeps the golden comparison exact).
+        let mut pairs: Vec<(C, f64)> = zpoles
+            .iter()
+            .filter(|p| p.im > 0.0)
+            .map(|p| (*p, p.abs2()))
+            .collect();
+        pairs.sort_by(|x, y| x.1.partial_cmp(&y.1).expect("finite radius"));
+        let mut sections: Vec<Biquad> = pairs
+            .iter()
+            .map(|(p, r2)| Biquad {
+                b: [1.0, 2.0, 1.0],
+                a1: -2.0 * p.re,
+                a2: *r2,
+            })
+            .collect();
+        // Fold the overall gain into the first section (scipy layout).
+        for c in &mut sections[0].b {
+            *c *= gz;
+        }
+        Sos { sections }
+    }
+
+    /// The paper's filter: 6th order, 0.5 dB ripple, 0.1 × Nyquist cutoff
+    /// (1 Hz sampling → 0.05 Hz cutoff, well below the map/reduce phase
+    /// structure but above the SysStat sampling noise).
+    pub fn lowpass_default() -> Sos {
+        Sos::cheby1_lowpass(6, 0.5, 0.1)
+    }
+
+    /// Run the cascade over `x` (Direct Form II transposed per section),
+    /// zero initial state — matches `scipy.signal.sosfilt`.
+    pub fn filter(&self, x: &[f64]) -> Vec<f64> {
+        let mut y: Vec<f64> = x.to_vec();
+        for s in &self.sections {
+            let mut s1 = 0.0;
+            let mut s2 = 0.0;
+            for v in y.iter_mut() {
+                let xin = *v;
+                let yo = s.b[0] * xin + s1;
+                s1 = s.b[1] * xin - s.a1 * yo + s2;
+                s2 = s.b[2] * xin - s.a2 * yo;
+                *v = yo;
+            }
+        }
+        y
+    }
+
+    /// DC gain of the cascade (`H(z=1)`).
+    pub fn dc_gain(&self) -> f64 {
+        self.sections
+            .iter()
+            .map(|s| (s.b[0] + s.b[1] + s.b[2]) / (1.0 + s.a1 + s.a2))
+            .product()
+    }
+
+    /// True if every pole is strictly inside the unit circle.
+    pub fn is_stable(&self) -> bool {
+        self.sections.iter().all(|s| s.a2 < 1.0 && s.a1.abs() < 1.0 + s.a2)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// scipy.signal.cheby1(6, 0.5, 0.1, output='sos') — golden.
+    const SCIPY_SOS: [[f64; 6]; 3] = [
+        [
+            1.1341790241947333e-06,
+            2.2683580483894666e-06,
+            1.1341790241947333e-06,
+            1.0,
+            -1.8180684439942343,
+            0.8324455519809297,
+        ],
+        [1.0, 2.0, 1.0, 1.0, -1.8210683354520127, 0.8757846277694602],
+        [1.0, 2.0, 1.0, 1.0, -1.8554197031915467, 0.9531599405224532],
+    ];
+
+    /// scipy.signal.sosfilt(sos, ones(16)) — golden step response.
+    const SCIPY_STEP: [f64; 16] = [
+        1.1341790241947333e-06,
+        1.4171063879224112e-05,
+        8.838396641944708e-05,
+        0.0003709700620232489,
+        0.001190711211134303,
+        0.0031429384633369145,
+        0.0071484765005884136,
+        0.014465070330996619,
+        0.02663942081325119,
+        0.045398430261593216,
+        0.07248827546206923,
+        0.10947831787798826,
+        0.15755272207399354,
+        0.21731541322510559,
+        0.2886334702988405,
+        0.37054040669980676,
+    ];
+
+    #[test]
+    fn design_matches_scipy() {
+        let sos = Sos::lowpass_default();
+        assert_eq!(sos.sections.len(), 3);
+        for (sec, gold) in sos.sections.iter().zip(SCIPY_SOS.iter()) {
+            for (i, b) in sec.b.iter().enumerate() {
+                assert!((b - gold[i]).abs() < 1e-12, "b[{i}]: {b} vs {}", gold[i]);
+            }
+            assert!((sec.a1 - gold[4]).abs() < 1e-12, "a1 {} vs {}", sec.a1, gold[4]);
+            assert!((sec.a2 - gold[5]).abs() < 1e-12, "a2 {} vs {}", sec.a2, gold[5]);
+        }
+    }
+
+    #[test]
+    fn step_response_matches_scipy() {
+        let sos = Sos::lowpass_default();
+        let y = sos.filter(&[1.0; 16]);
+        for (a, b) in y.iter().zip(SCIPY_STEP.iter()) {
+            assert!((a - b).abs() < 1e-12, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn dc_gain_is_ripple_bound() {
+        // Even-order type-I: |H(0)| = 1/sqrt(1+eps^2).
+        let sos = Sos::lowpass_default();
+        let eps = (10f64.powf(0.5 / 10.0) - 1.0).sqrt();
+        let want = 1.0 / (1.0 + eps * eps).sqrt();
+        assert!((sos.dc_gain() - want).abs() < 1e-9, "{}", sos.dc_gain());
+    }
+
+    #[test]
+    fn stable_across_design_space() {
+        for order in [2usize, 4, 6, 8] {
+            for ripple in [0.1, 0.5, 1.0, 3.0] {
+                for cutoff in [0.02, 0.1, 0.25, 0.5, 0.8] {
+                    let sos = Sos::cheby1_lowpass(order, ripple, cutoff);
+                    assert!(
+                        sos.is_stable(),
+                        "unstable: order={order} ripple={ripple} cutoff={cutoff}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn attenuates_high_frequency() {
+        // A Nyquist-rate alternating signal must be crushed; a slow ramp passes.
+        let sos = Sos::lowpass_default();
+        let n = 400;
+        let hf: Vec<f64> = (0..n).map(|i| if i % 2 == 0 { 1.0 } else { -1.0 }).collect();
+        let y = sos.filter(&hf);
+        let tail_energy: f64 = y[n - 50..].iter().map(|v| v * v).sum::<f64>() / 50.0;
+        assert!(tail_energy < 1e-10, "hf energy {tail_energy}");
+
+        let steady = sos.filter(&vec![1.0; 600]);
+        assert!((steady[599] - sos.dc_gain()).abs() < 1e-6);
+    }
+
+    #[test]
+    fn filter_is_linear() {
+        let sos = Sos::lowpass_default();
+        let x1: Vec<f64> = (0..64).map(|i| (i as f64 * 0.3).sin()).collect();
+        let x2: Vec<f64> = (0..64).map(|i| (i as f64 * 0.11).cos()).collect();
+        let sum: Vec<f64> = x1.iter().zip(&x2).map(|(a, b)| 2.0 * a + 3.0 * b).collect();
+        let y1 = sos.filter(&x1);
+        let y2 = sos.filter(&x2);
+        let ysum = sos.filter(&sum);
+        for i in 0..64 {
+            assert!((ysum[i] - (2.0 * y1[i] + 3.0 * y2[i])).abs() < 1e-10);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "even order")]
+    fn odd_order_rejected() {
+        let _ = Sos::cheby1_lowpass(5, 0.5, 0.1);
+    }
+}

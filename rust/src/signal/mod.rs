@@ -1,0 +1,22 @@
+//! Signal-processing pipeline used on CPU-utilization time series.
+//!
+//! The paper's pre-processing (§3.1.1) is a 6th-order low-pass Chebyshev
+//! filter followed by magnitude normalization to `[0,1]`. This module holds
+//! the pure-Rust implementations; the same computation is also lowered AOT
+//! from JAX (see `python/compile/kernels/cheby.py`) and executed via PJRT on
+//! the hot path — `rust/tests/parity.rs` pins the two against each other.
+
+pub mod chebyshev;
+pub mod noise;
+pub mod normalize;
+pub mod resample;
+pub mod wavelet;
+
+/// De-noise + normalize, exactly the paper's pre-processing step:
+/// 6th-order type-I Chebyshev low-pass (0.5 dB ripple, 0.1 normalized
+/// cutoff) followed by min-max normalization into `[0,1]`.
+pub fn preprocess(series: &[f64]) -> Vec<f64> {
+    let filt = chebyshev::Sos::lowpass_default();
+    let smoothed = filt.filter(series);
+    normalize::min_max(&smoothed)
+}

@@ -1,0 +1,137 @@
+//! Measurement-noise model for the simulated SysStat sampler.
+//!
+//! The paper's pipeline assumes the captured CPU series are "noisy due to
+//! temporal changes coming from unknown devices states" (§3.1.1) and
+//! de-noises them with the Chebyshev filter. The simulator reproduces that
+//! property with a seeded model: white Gaussian jitter plus sparse positive
+//! spikes (background daemons waking up).
+
+use crate::util::rng::Rng;
+
+/// Noise model parameters.
+#[derive(Debug, Clone, Copy)]
+pub struct NoiseModel {
+    /// Standard deviation of the Gaussian jitter (utilization fraction).
+    pub jitter_std: f64,
+    /// Per-sample probability of a daemon spike.
+    pub spike_prob: f64,
+    /// Spike amplitude upper bound (uniform in [0, spike_max]).
+    pub spike_max: f64,
+}
+
+impl Default for NoiseModel {
+    fn default() -> Self {
+        NoiseModel {
+            jitter_std: 0.035,
+            spike_prob: 0.04,
+            spike_max: 0.22,
+        }
+    }
+}
+
+impl NoiseModel {
+    /// No noise (for deterministic tests).
+    pub fn none() -> NoiseModel {
+        NoiseModel {
+            jitter_std: 0.0,
+            spike_prob: 0.0,
+            spike_max: 0.0,
+        }
+    }
+
+    /// Apply noise to a clean utilization series, clamping into `[0,1]`.
+    pub fn apply(&self, clean: &[f64], rng: &mut Rng) -> Vec<f64> {
+        clean
+            .iter()
+            .map(|&u| {
+                let mut v = u + rng.normal_ms(0.0, self.jitter_std);
+                if self.spike_prob > 0.0 && rng.chance(self.spike_prob) {
+                    v += rng.range_f64(0.0, self.spike_max);
+                }
+                v.clamp(0.0, 1.0)
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn none_is_identity() {
+        let clean = vec![0.1, 0.5, 0.9];
+        let mut rng = Rng::new(1);
+        assert_eq!(NoiseModel::none().apply(&clean, &mut rng), clean);
+    }
+
+    #[test]
+    fn output_clamped() {
+        let clean = vec![0.0, 1.0, 0.5, 0.02, 0.98];
+        let model = NoiseModel {
+            jitter_std: 0.5,
+            spike_prob: 0.5,
+            spike_max: 1.0,
+        };
+        let mut rng = Rng::new(2);
+        for _ in 0..100 {
+            for v in model.apply(&clean, &mut rng) {
+                assert!((0.0..=1.0).contains(&v));
+            }
+        }
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let clean: Vec<f64> = (0..50).map(|i| (i as f64 / 50.0)).collect();
+        let model = NoiseModel::default();
+        let a = model.apply(&clean, &mut Rng::new(7));
+        let b = model.apply(&clean, &mut Rng::new(7));
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn noise_is_roughly_unbiased_midrange() {
+        let clean = vec![0.5; 20_000];
+        let model = NoiseModel {
+            jitter_std: 0.03,
+            spike_prob: 0.0,
+            spike_max: 0.0,
+        };
+        let noisy = model.apply(&clean, &mut Rng::new(11));
+        let mean = crate::util::stats::mean(&noisy);
+        assert!((mean - 0.5).abs() < 0.002, "mean={mean}");
+    }
+
+    #[test]
+    fn chebyshev_recovers_clean_shape() {
+        // End-to-end sanity: filter(noisy) correlates far better with clean
+        // than noisy does — the premise of the paper's pre-processing.
+        let clean: Vec<f64> = (0..300)
+            .map(|i| 0.5 + 0.4 * ((i as f64) * 0.05).sin())
+            .collect();
+        let noisy = NoiseModel::default().apply(&clean, &mut Rng::new(3));
+        let filtered = crate::signal::chebyshev::Sos::lowpass_default().filter(&noisy);
+        // The IIR filter introduces a group delay, so compare at the best
+        // lag (both series in a real comparison share the delay, so it
+        // cancels there). Skip the settle-in transient.
+        let best_lag_corr = |a: &[f64], b: &[f64]| -> f64 {
+            (0..30)
+                .map(|lag| crate::util::stats::pearson(&a[60..a.len() - 30], &b[60 + lag..b.len() - 30 + lag]))
+                .fold(f64::NEG_INFINITY, f64::max)
+        };
+        let c_noisy = best_lag_corr(&clean, &noisy);
+        let c_filt = best_lag_corr(&clean, &filtered);
+        // High-frequency noise energy must drop an order of magnitude.
+        let hf_energy = |s: &[f64]| -> f64 {
+            s.windows(2).map(|w| (w[1] - w[0]) * (w[1] - w[0])).sum::<f64>() / (s.len() - 1) as f64
+        };
+        assert!(
+            hf_energy(&filtered[60..]) < hf_energy(&noisy[60..]) / 10.0,
+            "noise not removed: {} vs {}",
+            hf_energy(&filtered[60..]),
+            hf_energy(&noisy[60..])
+        );
+        assert!(c_filt > 0.97, "filtered corr too low: {c_filt} (noisy {c_noisy})");
+    }
+}

@@ -1,0 +1,79 @@
+//! Magnitude normalization (paper §3.1.1: series bounded into `[0,1]`).
+
+/// Min-max normalize into `[0,1]`. A constant series maps to all-zeros
+/// (no information; avoids division by zero).
+pub fn min_max(xs: &[f64]) -> Vec<f64> {
+    if xs.is_empty() {
+        return Vec::new();
+    }
+    let lo = xs.iter().cloned().fold(f64::INFINITY, f64::min);
+    let hi = xs.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+    let span = hi - lo;
+    if span <= 0.0 {
+        return vec![0.0; xs.len()];
+    }
+    xs.iter().map(|x| (x - lo) / span).collect()
+}
+
+/// Z-score normalize (mean 0, stddev 1); constant series maps to zeros.
+pub fn z_score(xs: &[f64]) -> Vec<f64> {
+    let m = crate::util::stats::mean(xs);
+    let s = crate::util::stats::stddev(xs);
+    if s <= 0.0 {
+        return vec![0.0; xs.len()];
+    }
+    xs.iter().map(|x| (x - m) / s).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn min_max_bounds() {
+        let y = min_max(&[3.0, -1.0, 7.0, 5.0]);
+        assert_eq!(y[1], 0.0);
+        assert_eq!(y[2], 1.0);
+        for v in &y {
+            assert!((0.0..=1.0).contains(v));
+        }
+    }
+
+    #[test]
+    fn min_max_preserves_order() {
+        let xs = [2.0, 9.0, 4.0, 4.5];
+        let y = min_max(&xs);
+        for i in 0..xs.len() {
+            for j in 0..xs.len() {
+                assert_eq!(xs[i] < xs[j], y[i] < y[j]);
+            }
+        }
+    }
+
+    #[test]
+    fn constant_series_is_zeros() {
+        assert_eq!(min_max(&[5.0; 4]), vec![0.0; 4]);
+        assert_eq!(z_score(&[5.0; 4]), vec![0.0; 4]);
+    }
+
+    #[test]
+    fn empty_ok() {
+        assert!(min_max(&[]).is_empty());
+        assert!(z_score(&[]).is_empty());
+    }
+
+    #[test]
+    fn z_score_moments() {
+        let xs: Vec<f64> = (0..100).map(|i| i as f64 * 0.7 - 3.0).collect();
+        let y = z_score(&xs);
+        assert!(crate::util::stats::mean(&y).abs() < 1e-12);
+        assert!((crate::util::stats::stddev(&y) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn min_max_scale_invariant() {
+        let xs = [1.0, 2.0, 5.0, 3.0];
+        let scaled: Vec<f64> = xs.iter().map(|x| 10.0 * x + 4.0).collect();
+        assert_eq!(min_max(&xs), min_max(&scaled));
+    }
+}

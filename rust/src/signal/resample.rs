@@ -1,0 +1,81 @@
+//! Linear resampling.
+//!
+//! Used to fold variable-length CPU series into the fixed shape buckets the
+//! AOT artifacts are compiled for (series *longer* than the largest bucket
+//! are linearly compressed; DTW inside a bucket still performs the nonlinear
+//! alignment the paper relies on — §3.1.2 explains why resampling alone is
+//! not a substitute for DTW, which is exactly how we use it).
+
+/// Resample `xs` to `target` points by linear interpolation.
+pub fn linear(xs: &[f64], target: usize) -> Vec<f64> {
+    if target == 0 || xs.is_empty() {
+        return Vec::new();
+    }
+    if xs.len() == 1 {
+        return vec![xs[0]; target];
+    }
+    if target == 1 {
+        return vec![xs[0]];
+    }
+    let step = (xs.len() - 1) as f64 / (target - 1) as f64;
+    (0..target)
+        .map(|i| {
+            let pos = i as f64 * step;
+            let lo = pos.floor() as usize;
+            let hi = (lo + 1).min(xs.len() - 1);
+            let frac = pos - lo as f64;
+            xs[lo] * (1.0 - frac) + xs[hi] * frac
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn identity_when_same_length() {
+        let xs = [1.0, 3.0, 2.0, 5.0];
+        let y = linear(&xs, 4);
+        for (a, b) in xs.iter().zip(&y) {
+            assert!((a - b).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn endpoints_preserved() {
+        let xs: Vec<f64> = (0..37).map(|i| (i as f64).sin()).collect();
+        for target in [2usize, 5, 36, 38, 100] {
+            let y = linear(&xs, target);
+            assert_eq!(y.len(), target);
+            assert!((y[0] - xs[0]).abs() < 1e-12);
+            assert!((y[target - 1] - xs[36]).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn upsampling_a_line_is_exact() {
+        let xs = [0.0, 1.0, 2.0, 3.0];
+        let y = linear(&xs, 7);
+        for (i, v) in y.iter().enumerate() {
+            assert!((v - i as f64 * 0.5).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn degenerate_inputs() {
+        assert!(linear(&[], 5).is_empty());
+        assert!(linear(&[1.0], 0).is_empty());
+        assert_eq!(linear(&[2.5], 3), vec![2.5; 3]);
+        assert_eq!(linear(&[1.0, 2.0], 1), vec![1.0]);
+    }
+
+    #[test]
+    fn values_stay_within_input_range() {
+        let xs = [0.2, 0.9, 0.1, 0.7, 0.4];
+        let y = linear(&xs, 23);
+        for v in y {
+            assert!((0.1..=0.9).contains(&v));
+        }
+    }
+}

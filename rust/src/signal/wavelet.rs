@@ -1,0 +1,196 @@
+//! Discrete wavelet transforms (Haar and Daubechies-4).
+//!
+//! Implements the paper's §5 future-work proposal: replace the quadratic
+//! DTW on raw series with a fixed-length vector of wavelet coefficients and
+//! a plain distance, so an N-node cluster's `3N` resource series stay
+//! tractable. `examples/cluster_scale.rs` evaluates this against full DTW.
+
+/// Wavelet family.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Family {
+    Haar,
+    Db4,
+}
+
+const SQRT2_INV: f64 = std::f64::consts::FRAC_1_SQRT_2;
+
+/// Daubechies-4 low-pass decomposition coefficients.
+const DB4_LO: [f64; 4] = [
+    0.48296291314469025,
+    0.836516303737469,
+    0.22414386804185735,
+    -0.12940952255092145,
+];
+
+fn filters(family: Family) -> (Vec<f64>, Vec<f64>) {
+    let lo: Vec<f64> = match family {
+        Family::Haar => vec![SQRT2_INV, SQRT2_INV],
+        Family::Db4 => DB4_LO.to_vec(),
+    };
+    // Quadrature mirror: hi[k] = (-1)^k * lo[L-1-k].
+    let l = lo.len();
+    let hi: Vec<f64> = (0..l)
+        .map(|k| if k % 2 == 0 { lo[l - 1 - k] } else { -lo[l - 1 - k] })
+        .collect();
+    (lo, hi)
+}
+
+/// One analysis level with periodic (circular) extension.
+/// Returns (approximation, detail), each of length `ceil(n/2)`.
+pub fn dwt_level(xs: &[f64], family: Family) -> (Vec<f64>, Vec<f64>) {
+    let n = xs.len();
+    assert!(n >= 2, "dwt needs at least 2 samples");
+    let (lo, hi) = filters(family);
+    let half = n.div_ceil(2);
+    let mut approx = Vec::with_capacity(half);
+    let mut detail = Vec::with_capacity(half);
+    for i in 0..half {
+        let mut a = 0.0;
+        let mut d = 0.0;
+        for (k, (&l, &h)) in lo.iter().zip(hi.iter()).enumerate() {
+            let idx = (2 * i + k) % n;
+            a += l * xs[idx];
+            d += h * xs[idx];
+        }
+        approx.push(a);
+        detail.push(d);
+    }
+    (approx, detail)
+}
+
+/// Full multi-level decomposition down to `levels` (or until length < 2).
+/// Output layout: `[a_L, d_L, d_{L-1}, ..., d_1]` (pywt "wavedec" order).
+pub fn wavedec(xs: &[f64], family: Family, levels: usize) -> Vec<Vec<f64>> {
+    let mut approx = xs.to_vec();
+    let mut details: Vec<Vec<f64>> = Vec::new();
+    for _ in 0..levels {
+        if approx.len() < 2 {
+            break;
+        }
+        let (a, d) = dwt_level(&approx, family);
+        details.push(d);
+        approx = a;
+    }
+    let mut out = vec![approx];
+    out.extend(details.into_iter().rev());
+    out
+}
+
+/// Fixed-length wavelet signature: decompose until the approximation band
+/// has ≤ `m` coefficients, then zero-pad/truncate to exactly `m`.
+/// This is the compressed representation the paper's future-work section
+/// proposes comparing with a simple distance instead of DTW.
+pub fn signature(xs: &[f64], family: Family, m: usize) -> Vec<f64> {
+    assert!(m >= 1);
+    if xs.is_empty() {
+        return vec![0.0; m];
+    }
+    let mut approx = xs.to_vec();
+    while approx.len() > m && approx.len() >= 2 {
+        let (a, _) = dwt_level(&approx, family);
+        approx = a;
+    }
+    approx.resize(m, 0.0);
+    approx
+}
+
+/// Euclidean distance between equal-length signatures.
+pub fn signature_distance(a: &[f64], b: &[f64]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    a.iter()
+        .zip(b.iter())
+        .map(|(x, y)| (x - y) * (x - y))
+        .sum::<f64>()
+        .sqrt()
+}
+
+/// Inverse of one Haar level (exact for even-length inputs) — used to verify
+/// the transform in tests and to reconstruct approximations for plots.
+pub fn haar_inverse_level(approx: &[f64], detail: &[f64]) -> Vec<f64> {
+    assert_eq!(approx.len(), detail.len());
+    let mut out = Vec::with_capacity(approx.len() * 2);
+    for (a, d) in approx.iter().zip(detail.iter()) {
+        out.push((a + d) * SQRT2_INV);
+        out.push((a - d) * SQRT2_INV);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn haar_perfect_reconstruction() {
+        let xs: Vec<f64> = (0..64).map(|i| ((i as f64) * 0.37).sin() + 0.1 * i as f64).collect();
+        let (a, d) = dwt_level(&xs, Family::Haar);
+        let back = haar_inverse_level(&a, &d);
+        for (x, y) in xs.iter().zip(&back) {
+            assert!((x - y).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn energy_preserved_haar() {
+        // Orthonormal transform: ||x||² = ||a||² + ||d||² (even length).
+        let xs: Vec<f64> = (0..128).map(|i| ((i * i) as f64 * 0.01).cos()).collect();
+        let (a, d) = dwt_level(&xs, Family::Haar);
+        let ex: f64 = xs.iter().map(|v| v * v).sum();
+        let eout: f64 = a.iter().chain(d.iter()).map(|v| v * v).sum();
+        assert!((ex - eout).abs() < 1e-9, "{ex} vs {eout}");
+    }
+
+    #[test]
+    fn db4_kills_linear_detail() {
+        // DB4 has 2 vanishing moments: detail of a linear ramp is ~0
+        // (away from the circular wrap-around).
+        let xs: Vec<f64> = (0..64).map(|i| 3.0 * i as f64 + 1.0).collect();
+        let (_, d) = dwt_level(&xs, Family::Db4);
+        for v in &d[..d.len() - 2] {
+            assert!(v.abs() < 1e-9, "detail {v}");
+        }
+    }
+
+    #[test]
+    fn db4_filter_is_orthonormal() {
+        let s: f64 = DB4_LO.iter().map(|c| c * c).sum();
+        assert!((s - 1.0).abs() < 1e-12);
+        let sum: f64 = DB4_LO.iter().sum();
+        assert!((sum - std::f64::consts::SQRT_2).abs() < 1e-12);
+    }
+
+    #[test]
+    fn wavedec_layout() {
+        let xs: Vec<f64> = (0..32).map(|i| i as f64).collect();
+        let bands = wavedec(&xs, Family::Haar, 3);
+        assert_eq!(bands.len(), 4); // a3, d3, d2, d1
+        assert_eq!(bands[0].len(), 4);
+        assert_eq!(bands[1].len(), 4);
+        assert_eq!(bands[2].len(), 8);
+        assert_eq!(bands[3].len(), 16);
+    }
+
+    #[test]
+    fn signature_fixed_length_and_similarity() {
+        let a: Vec<f64> = (0..100).map(|i| ((i as f64) * 0.2).sin()).collect();
+        let mut b = a.clone();
+        for v in &mut b {
+            *v += 0.01; // tiny offset
+        }
+        let c: Vec<f64> = (0..100).map(|i| if i < 50 { 1.0 } else { 0.0 }).collect();
+        let (sa, sb, sc) = (
+            signature(&a, Family::Db4, 16),
+            signature(&b, Family::Db4, 16),
+            signature(&c, Family::Db4, 16),
+        );
+        assert_eq!(sa.len(), 16);
+        assert!(signature_distance(&sa, &sb) < signature_distance(&sa, &sc));
+    }
+
+    #[test]
+    fn signature_handles_short_input() {
+        let s = signature(&[1.0, 2.0], Family::Haar, 8);
+        assert_eq!(s.len(), 8);
+        assert!(s[2..].iter().all(|&v| v == 0.0));
+    }
+}

@@ -1,0 +1,90 @@
+//! Cluster model: nodes, cores, task slots, disk.
+
+/// Static description of the simulated cluster.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ClusterConfig {
+    /// Number of worker nodes (pseudo-distributed: 1).
+    pub nodes: usize,
+    /// Physical cores per node (CPU capacity for processor sharing).
+    pub cores_per_node: usize,
+    /// Concurrent map task slots per node (Hadoop 0.20 default: 2).
+    pub map_slots_per_node: usize,
+    /// Concurrent reduce task slots per node (default: 2).
+    pub reduce_slots_per_node: usize,
+    /// Sequential disk bandwidth per node, MB/s (shared by its tasks).
+    pub disk_mb_s: f64,
+    /// Memory per node in MB (only used for the memory-pressure series).
+    pub mem_mb: f64,
+    /// Lognormal sigma of the per-task speed jitter (straggler model).
+    pub task_jitter: f64,
+    /// Enable speculative re-execution of straggling tasks.
+    pub speculative: bool,
+    /// Fraction of maps that must finish before reducers may start
+    /// (mapred.reduce.slowstart.completed.maps; Hadoop 0.20 default 0.05).
+    pub reduce_slowstart: f64,
+}
+
+impl ClusterConfig {
+    /// The paper's testbed: one 2-core laptop (Dell Latitude E4300,
+    /// 2.26 GHz Centrino, 4 GB RAM, 80 GB disk) running all daemons.
+    pub fn pseudo_distributed() -> ClusterConfig {
+        ClusterConfig {
+            nodes: 1,
+            cores_per_node: 2,
+            map_slots_per_node: 2,
+            reduce_slots_per_node: 2,
+            disk_mb_s: 35.0,
+            mem_mb: 4096.0,
+            task_jitter: 0.06,
+            speculative: false,
+            reduce_slowstart: 0.05,
+        }
+    }
+
+    /// An N-node cluster for the future-work scale experiment (§5).
+    pub fn cluster(nodes: usize) -> ClusterConfig {
+        ClusterConfig {
+            nodes,
+            cores_per_node: 4,
+            map_slots_per_node: 4,
+            reduce_slots_per_node: 2,
+            disk_mb_s: 120.0,
+            mem_mb: 8192.0,
+            ..ClusterConfig::pseudo_distributed()
+        }
+    }
+
+    pub fn total_map_slots(&self) -> usize {
+        self.nodes * self.map_slots_per_node
+    }
+
+    pub fn total_reduce_slots(&self) -> usize {
+        self.nodes * self.reduce_slots_per_node
+    }
+
+    pub fn total_cores(&self) -> usize {
+        self.nodes * self.cores_per_node
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pseudo_distributed_matches_paper_testbed() {
+        let c = ClusterConfig::pseudo_distributed();
+        assert_eq!(c.nodes, 1);
+        assert_eq!(c.total_cores(), 2);
+        assert_eq!(c.total_map_slots(), 2);
+        assert_eq!(c.total_reduce_slots(), 2);
+        assert!(!c.speculative);
+    }
+
+    #[test]
+    fn cluster_scales_slots() {
+        let c = ClusterConfig::cluster(8);
+        assert_eq!(c.total_map_slots(), 32);
+        assert_eq!(c.total_cores(), 32);
+    }
+}

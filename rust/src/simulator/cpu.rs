@@ -1,0 +1,156 @@
+//! Piecewise-constant resource timelines and the 1 Hz SysStat-style sampler.
+
+/// A piecewise-constant function of simulated time built by pushing
+/// `(time, value)` change-points in nondecreasing time order.
+#[derive(Debug, Clone, Default)]
+pub struct Timeline {
+    points: Vec<(f64, f64)>,
+}
+
+impl Timeline {
+    pub fn new() -> Timeline {
+        Timeline { points: Vec::new() }
+    }
+
+    /// Record that the value becomes `v` at time `t`.
+    pub fn push(&mut self, t: f64, v: f64) {
+        if let Some(&(lt, lv)) = self.points.last() {
+            debug_assert!(t >= lt - 1e-9, "time went backwards: {t} < {lt}");
+            if (lv - v).abs() < 1e-12 {
+                return; // no change
+            }
+            if (t - lt).abs() < 1e-12 {
+                // Same instant: overwrite.
+                self.points.last_mut().expect("nonempty").1 = v;
+                return;
+            }
+        }
+        self.points.push((t, v));
+    }
+
+    /// Mean value over each 1-second bucket `[s, s+1)` up to `t_end`
+    /// (the paper samples CPU utilization at 1 Hz).
+    pub fn sample_per_second(&self, t_end: f64) -> Vec<f64> {
+        let n = t_end.ceil().max(0.0) as usize;
+        let mut out = vec![0.0f64; n];
+        if self.points.is_empty() || n == 0 {
+            return out;
+        }
+        let mut idx = 0usize;
+        for (s, slot) in out.iter_mut().enumerate() {
+            let lo = s as f64;
+            let hi = ((s + 1) as f64).min(t_end);
+            let mut acc = 0.0;
+            // Advance to the last change-point at or before `lo`.
+            while idx + 1 < self.points.len() && self.points[idx + 1].0 <= lo {
+                idx += 1;
+            }
+            let mut j = idx;
+            let mut cur = lo;
+            while cur < hi - 1e-12 {
+                let seg_val = if self.points[j].0 <= cur { self.points[j].1 } else { 0.0 };
+                let seg_end = if j + 1 < self.points.len() {
+                    self.points[j + 1].0.min(hi)
+                } else {
+                    hi
+                };
+                let seg_end = seg_end.max(cur);
+                acc += seg_val * (seg_end - cur);
+                cur = seg_end;
+                if j + 1 < self.points.len() && self.points[j + 1].0 <= cur + 1e-12 {
+                    j += 1;
+                }
+            }
+            *slot = acc / (hi - lo).max(1e-12);
+        }
+        out
+    }
+
+    /// Total integral over `[0, t_end]`.
+    pub fn integral(&self, t_end: f64) -> f64 {
+        let mut acc = 0.0;
+        for (i, &(t, v)) in self.points.iter().enumerate() {
+            if t >= t_end {
+                break;
+            }
+            let next = if i + 1 < self.points.len() {
+                self.points[i + 1].0.min(t_end)
+            } else {
+                t_end
+            };
+            acc += v * (next - t).max(0.0);
+        }
+        acc
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn constant_value_samples_flat() {
+        let mut tl = Timeline::new();
+        tl.push(0.0, 1.5);
+        let s = tl.sample_per_second(4.0);
+        assert_eq!(s, vec![1.5; 4]);
+    }
+
+    #[test]
+    fn step_change_mid_bucket() {
+        let mut tl = Timeline::new();
+        tl.push(0.0, 1.0);
+        tl.push(0.5, 0.0);
+        let s = tl.sample_per_second(2.0);
+        assert!((s[0] - 0.5).abs() < 1e-12);
+        assert_eq!(s[1], 0.0);
+    }
+
+    #[test]
+    fn integral_matches_samples() {
+        let mut tl = Timeline::new();
+        tl.push(0.0, 2.0);
+        tl.push(1.25, 0.5);
+        tl.push(3.0, 1.0);
+        let t_end = 5.0;
+        let total = tl.integral(t_end);
+        let samples = tl.sample_per_second(t_end);
+        let from_samples: f64 = samples.iter().sum();
+        assert!((total - from_samples).abs() < 1e-9, "{total} vs {from_samples}");
+    }
+
+    #[test]
+    fn duplicate_value_pushes_collapse() {
+        let mut tl = Timeline::new();
+        tl.push(0.0, 1.0);
+        tl.push(1.0, 1.0);
+        tl.push(2.0, 1.0);
+        assert_eq!(tl.points.len(), 1);
+    }
+
+    #[test]
+    fn same_instant_overwrites() {
+        let mut tl = Timeline::new();
+        tl.push(0.0, 1.0);
+        tl.push(1.0, 2.0);
+        tl.push(1.0, 3.0);
+        let s = tl.sample_per_second(2.0);
+        assert!((s[1] - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn partial_final_bucket() {
+        let mut tl = Timeline::new();
+        tl.push(0.0, 1.0);
+        let s = tl.sample_per_second(1.5);
+        assert_eq!(s.len(), 2);
+        assert!((s[1] - 1.0).abs() < 1e-12); // mean over [1, 1.5)
+    }
+
+    #[test]
+    fn empty_timeline_is_zero() {
+        let tl = Timeline::new();
+        assert_eq!(tl.sample_per_second(3.0), vec![0.0; 3]);
+        assert_eq!(tl.integral(3.0), 0.0);
+    }
+}

@@ -1,0 +1,665 @@
+//! The discrete-event simulation engine.
+//!
+//! Advances simulated time between "next completion" events. Between
+//! events every rate is constant: CPU is processor-shared per node
+//! (slots can oversubscribe cores), disk is processor-shared per node,
+//! and reducer shuffles are gated on map completions. The engine emits
+//! per-node piecewise-constant CPU / disk / memory timelines which the
+//! SysStat-style sampler turns into 1 Hz series.
+
+use super::cluster::ClusterConfig;
+use super::cpu::Timeline;
+use super::job::JobConfig;
+use super::jobtracker::JobTracker;
+use super::task::{phase_mem_mb, plan_job, JobPlan, PhaseKind, TaskSpec};
+use crate::signal::noise::NoiseModel;
+use crate::util::rng::Rng;
+use crate::workloads::Workload;
+
+const EPS: f64 = 1e-9;
+/// Background utilization of the five Hadoop daemons + OS (fraction of all
+/// cores) — keeps idle periods slightly above zero like real SysStat traces.
+const DAEMON_BASELINE: f64 = 0.04;
+
+/// Per-node resource series (the future-work "3 time series per node").
+#[derive(Debug, Clone)]
+pub struct NodeSeries {
+    pub cpu: Vec<f64>,
+    pub disk: Vec<f64>,
+    pub mem: Vec<f64>,
+}
+
+/// Aggregate counters from one simulated job.
+#[derive(Debug, Clone, Default)]
+pub struct SimCounters {
+    pub map_tasks: usize,
+    pub reduce_tasks: usize,
+    pub speculative_attempts: usize,
+    pub shuffle_mb: f64,
+    pub events: u64,
+}
+
+/// Result of one simulated job execution.
+#[derive(Debug, Clone)]
+pub struct SimResult {
+    /// Job completion time in simulated seconds.
+    pub completion_secs: f64,
+    /// Clean cluster-wide CPU-utilization series, 1 Hz, in `[0,1]`.
+    pub cpu_clean: Vec<f64>,
+    /// The same series with seeded measurement noise (what profiling sees).
+    pub cpu_noisy: Vec<f64>,
+    /// Per-node CPU / disk / memory series for the cluster-scale extension.
+    pub per_node: Vec<NodeSeries>,
+    pub counters: SimCounters,
+}
+
+/// One running attempt of a logical task.
+#[derive(Debug, Clone)]
+struct Attempt {
+    logical: usize, // index into all_specs
+    node: usize,
+    phase: usize,
+    cpu_rem: f64,
+    io_rem: f64,
+    fixed_rem: f64,
+    speed: f64,
+    speculative: bool,
+}
+
+struct EngineState<'a> {
+    specs: Vec<&'a TaskSpec>,
+    num_maps: usize,
+    tracker: JobTracker,
+    running: Vec<Attempt>,
+    /// Free slots per node: (map, reduce).
+    free_map: Vec<usize>,
+    free_reduce: Vec<usize>,
+    /// Shuffle bytes made available / consumed per logical reduce index.
+    shuffle_avail: Vec<f64>,
+    shuffle_taken: Vec<f64>,
+    /// Logical-task attempt bookkeeping for speculative execution.
+    attempts_of: Vec<usize>,
+    done: Vec<bool>,
+    counters: SimCounters,
+    rng_spec: Rng,
+    jitter: f64,
+}
+
+impl<'a> EngineState<'a> {
+    fn spec(&self, logical: usize) -> &'a TaskSpec {
+        self.specs[logical]
+    }
+
+    fn is_map(&self, logical: usize) -> bool {
+        logical < self.num_maps
+    }
+
+    /// Initialize an attempt's phase work, applying the speed factor to CPU.
+    fn init_phase(&self, a: &mut Attempt) {
+        let ph = &self.spec(a.logical).phases[a.phase];
+        a.cpu_rem = ph.cpu_secs * a.speed;
+        a.io_rem = ph.io_mb;
+        a.fixed_rem = ph.fixed_secs;
+    }
+
+    /// Remaining shuffle headroom for a reduce attempt (INF for others).
+    fn shuffle_headroom(&self, a: &Attempt) -> f64 {
+        let spec = self.spec(a.logical);
+        if !matches!(spec.phases[a.phase].kind, PhaseKind::Shuffle) {
+            return f64::INFINITY;
+        }
+        let r = a.logical - self.num_maps;
+        (self.shuffle_avail[r] - self.shuffle_taken[r]).max(0.0)
+    }
+
+    /// Whether the attempt currently has disk work it is allowed to do.
+    fn io_active(&self, a: &Attempt) -> bool {
+        a.io_rem > EPS && self.shuffle_headroom(a) > EPS
+    }
+}
+
+/// Simulate one job end-to-end.
+pub fn simulate(
+    workload: &dyn Workload,
+    config: &JobConfig,
+    cluster: &ClusterConfig,
+    noise: &NoiseModel,
+    rng: &mut Rng,
+) -> SimResult {
+    let plan: JobPlan = plan_job(workload, config, cluster, rng);
+    let num_maps = plan.maps.len();
+    let num_reduces = plan.reduces.len();
+    let specs: Vec<&TaskSpec> = plan.maps.iter().chain(plan.reduces.iter()).collect();
+
+    let mut st = EngineState {
+        specs,
+        num_maps,
+        tracker: JobTracker::new(num_maps, num_reduces, cluster.reduce_slowstart),
+        running: Vec::new(),
+        free_map: vec![cluster.map_slots_per_node; cluster.nodes],
+        free_reduce: vec![cluster.reduce_slots_per_node; cluster.nodes],
+        shuffle_avail: vec![0.0; num_reduces],
+        shuffle_taken: vec![0.0; num_reduces],
+        attempts_of: vec![0; num_maps + num_reduces],
+        done: vec![false; num_maps + num_reduces],
+        counters: SimCounters {
+            map_tasks: num_maps,
+            reduce_tasks: num_reduces,
+            ..SimCounters::default()
+        },
+        rng_spec: rng.fork(),
+        jitter: cluster.task_jitter,
+    };
+
+    let mut t = 0.0f64;
+    let mut cpu_tl: Vec<Timeline> = (0..cluster.nodes).map(|_| Timeline::new()).collect();
+    let mut disk_tl: Vec<Timeline> = (0..cluster.nodes).map(|_| Timeline::new()).collect();
+    let mut mem_tl: Vec<Timeline> = (0..cluster.nodes).map(|_| Timeline::new()).collect();
+
+    let max_events = 50_000_000u64;
+    loop {
+        // 1. Schedule: fill free slots; then settle zero-work phases; repeat
+        //    until stable (a settled completion may free a slot).
+        loop {
+            let scheduled = schedule(&mut st, cluster);
+            let settled = settle(&mut st);
+            if !scheduled && !settled {
+                break;
+            }
+        }
+
+        if st.tracker.all_done() {
+            break;
+        }
+        st.counters.events += 1;
+        assert!(st.counters.events < max_events, "simulation runaway");
+        assert!(
+            !st.running.is_empty(),
+            "deadlock: nothing running but job incomplete"
+        );
+
+        // 2. Compute per-node rates.
+        let mut n_cpu = vec![0usize; cluster.nodes];
+        let mut n_io = vec![0usize; cluster.nodes];
+        for a in &st.running {
+            if a.cpu_rem > EPS {
+                n_cpu[a.node] += 1;
+            }
+            if st.io_active(a) {
+                n_io[a.node] += 1;
+            }
+        }
+        let cpu_rate: Vec<f64> = n_cpu
+            .iter()
+            .map(|&n| {
+                if n == 0 {
+                    0.0
+                } else {
+                    (cluster.cores_per_node as f64 / n as f64).min(1.0)
+                }
+            })
+            .collect();
+        let io_rate: Vec<f64> = n_io
+            .iter()
+            .map(|&n| if n == 0 { 0.0 } else { cluster.disk_mb_s / n as f64 })
+            .collect();
+
+        // 3. Record resource usage for this interval.
+        let mut cpu_used = vec![DAEMON_BASELINE * cluster.cores_per_node as f64; cluster.nodes];
+        let mut mem_used = vec![300.0f64; cluster.nodes]; // daemons' RSS
+        for a in &st.running {
+            let ph = &st.spec(a.logical).phases[a.phase];
+            cpu_used[a.node] += if a.cpu_rem > EPS {
+                cpu_rate[a.node]
+            } else if st.io_active(a) {
+                ph.idle_cpu_frac
+            } else if a.fixed_rem > EPS {
+                0.5 * ph.idle_cpu_frac // waiting on the framework
+            } else {
+                0.02 // blocked on shuffle
+            };
+            mem_used[a.node] += phase_mem_mb(ph.kind, ph.io_mb.max(ph.cpu_secs));
+        }
+        for node in 0..cluster.nodes {
+            cpu_tl[node].push(t, cpu_used[node].min(cluster.cores_per_node as f64));
+            disk_tl[node].push(t, if n_io[node] > 0 { 1.0 } else { 0.0 });
+            mem_tl[node].push(t, (mem_used[node] / cluster.mem_mb).min(1.0));
+        }
+
+        // 4. Time to next completion.
+        let mut dt = f64::INFINITY;
+        for a in &st.running {
+            if a.cpu_rem > EPS {
+                dt = dt.min(a.cpu_rem / cpu_rate[a.node]);
+            }
+            if a.fixed_rem > EPS {
+                dt = dt.min(a.fixed_rem);
+            }
+            if st.io_active(a) {
+                let doable = a.io_rem.min(st.shuffle_headroom(a));
+                dt = dt.min(doable / io_rate[a.node]);
+            }
+        }
+        assert!(
+            dt.is_finite() && dt > 0.0,
+            "no progress possible at t={t}: running={} ",
+            st.running.len()
+        );
+
+        // 5. Advance.
+        t += dt;
+        let mut shuffle_deltas: Vec<(usize, f64)> = Vec::new();
+        for a in &mut st.running {
+            if a.cpu_rem > EPS {
+                a.cpu_rem = (a.cpu_rem - dt * cpu_rate[a.node]).max(0.0);
+            }
+            if a.fixed_rem > EPS {
+                a.fixed_rem = (a.fixed_rem - dt).max(0.0);
+            }
+            // Recompute io_active inline (borrow rules: use the headroom
+            // captured before mutation — headroom only grows mid-interval
+            // if a map completes, which cannot happen inside an interval).
+            let spec = st.specs[a.logical];
+            let is_shuffle = matches!(spec.phases[a.phase].kind, PhaseKind::Shuffle);
+            let headroom = if is_shuffle {
+                let r = a.logical - st.num_maps;
+                (st.shuffle_avail[r] - st.shuffle_taken[r]).max(0.0)
+            } else {
+                f64::INFINITY
+            };
+            if a.io_rem > EPS && headroom > EPS {
+                let consumed = (dt * io_rate[a.node]).min(a.io_rem).min(headroom);
+                a.io_rem = (a.io_rem - consumed).max(0.0);
+                if is_shuffle {
+                    shuffle_deltas.push((a.logical - st.num_maps, consumed));
+                }
+            }
+        }
+        for (r, c) in shuffle_deltas {
+            st.shuffle_taken[r] += c;
+            st.counters.shuffle_mb += c;
+        }
+    }
+
+    // Close timelines and sample.
+    let t_end = t.max(1.0);
+    for node in 0..cluster.nodes {
+        cpu_tl[node].push(t_end, 0.0);
+        disk_tl[node].push(t_end, 0.0);
+        mem_tl[node].push(t_end, 0.0);
+    }
+    let cores = cluster.cores_per_node as f64;
+    let per_node: Vec<NodeSeries> = (0..cluster.nodes)
+        .map(|node| NodeSeries {
+            cpu: cpu_tl[node]
+                .sample_per_second(t_end)
+                .into_iter()
+                .map(|v| (v / cores).clamp(0.0, 1.0))
+                .collect(),
+            disk: disk_tl[node].sample_per_second(t_end),
+            mem: mem_tl[node].sample_per_second(t_end),
+        })
+        .collect();
+    let len = per_node[0].cpu.len();
+    let cpu_clean: Vec<f64> = (0..len)
+        .map(|i| per_node.iter().map(|n| n.cpu[i]).sum::<f64>() / cluster.nodes as f64)
+        .collect();
+    let cpu_noisy = noise.apply(&cpu_clean, rng);
+
+    SimResult {
+        completion_secs: t,
+        cpu_clean,
+        cpu_noisy,
+        per_node,
+        counters: st.counters,
+    }
+}
+
+/// Fill free slots from the pending queues (and speculatively re-execute
+/// stragglers when enabled). Returns true if anything was scheduled.
+fn schedule(st: &mut EngineState<'_>, cluster: &ClusterConfig) -> bool {
+    let mut any = false;
+    // Maps first (FIFO priority), round-robin over nodes with free slots.
+    loop {
+        let Some(node) = (0..cluster.nodes).find(|&n| st.free_map[n] > 0) else {
+            break;
+        };
+        let Some(m) = st.tracker.next_map() else {
+            break;
+        };
+        launch(st, m, node, false);
+        st.free_map[node] -= 1;
+        any = true;
+    }
+    loop {
+        let Some(node) = (0..cluster.nodes).find(|&n| st.free_reduce[n] > 0) else {
+            break;
+        };
+        let Some(r) = st.tracker.next_reduce() else {
+            break;
+        };
+        launch(st, st.num_maps + r, node, false);
+        st.free_reduce[node] -= 1;
+        any = true;
+    }
+    if cluster.speculative {
+        any |= speculate(st, cluster, true);
+        any |= speculate(st, cluster, false);
+    }
+    any
+}
+
+/// Launch one speculative duplicate of the slowest single-attempt task of
+/// the given kind, if queues are empty and a slot is free.
+fn speculate(st: &mut EngineState<'_>, cluster: &ClusterConfig, maps: bool) -> bool {
+    if maps && st.tracker.has_pending_maps() {
+        return false;
+    }
+    if !maps && st.tracker.has_pending_reduces() {
+        return false;
+    }
+    let free = if maps { &st.free_map } else { &st.free_reduce };
+    let Some(node) = (0..cluster.nodes).find(|&n| free[n] > 0) else {
+        return false;
+    };
+    // Pick the running attempt with the most remaining work whose logical
+    // task has a single attempt.
+    let mut best: Option<(usize, f64)> = None;
+    for a in &st.running {
+        if st.is_map(a.logical) != maps || a.speculative {
+            continue;
+        }
+        if st.attempts_of[a.logical] != 1 || st.done[a.logical] {
+            continue;
+        }
+        let rem: f64 = a.cpu_rem
+            + st.spec(a.logical).phases[a.phase + 1..]
+                .iter()
+                .map(|p| p.cpu_secs)
+                .sum::<f64>();
+        if rem > 2.0 * st.spec(a.logical).phases[0].cpu_secs.max(1.0)
+            && best.map_or(true, |(_, b)| rem > b)
+        {
+            best = Some((a.logical, rem));
+        }
+    }
+    let Some((logical, _)) = best else {
+        return false;
+    };
+    launch(st, logical, node, true);
+    if maps {
+        st.free_map[node] -= 1;
+    } else {
+        st.free_reduce[node] -= 1;
+    }
+    st.counters.speculative_attempts += 1;
+    true
+}
+
+fn launch(st: &mut EngineState<'_>, logical: usize, node: usize, speculative: bool) {
+    let speed = if speculative && st.jitter > 0.0 {
+        st.rng_spec.lognormal(0.0, st.jitter)
+    } else {
+        st.spec(logical).speed
+    };
+    let mut a = Attempt {
+        logical,
+        node,
+        phase: 0,
+        cpu_rem: 0.0,
+        io_rem: 0.0,
+        fixed_rem: 0.0,
+        speed,
+        speculative,
+    };
+    st.init_phase(&mut a);
+    st.attempts_of[logical] += 1;
+    st.running.push(a);
+}
+
+/// Advance attempts through zero-work phase boundaries and handle task
+/// completions. Returns true if any state changed.
+fn settle(st: &mut EngineState<'_>) -> bool {
+    let mut changed = false;
+    let mut i = 0;
+    while i < st.running.len() {
+        let a = &st.running[i];
+        let phase_done = a.cpu_rem <= EPS
+            && a.fixed_rem <= EPS
+            && (a.io_rem <= EPS
+                // A shuffle with all expected bytes consumed may carry float
+                // dust in io_rem; treat as done when nothing more can come.
+                || (matches!(
+                    st.spec(a.logical).phases[a.phase].kind,
+                    PhaseKind::Shuffle
+                ) && shuffle_fully_fetched(st, a)));
+        if !phase_done {
+            i += 1;
+            continue;
+        }
+        changed = true;
+        let last_phase = a.phase + 1 == st.spec(a.logical).phases.len();
+        if !last_phase {
+            let a = &mut st.running[i];
+            a.phase += 1;
+            let (logical, phase) = (a.logical, a.phase);
+            let spec = st.specs[logical];
+            let ph = &spec.phases[phase];
+            a.cpu_rem = ph.cpu_secs * a.speed;
+            a.io_rem = ph.io_mb;
+            a.fixed_rem = ph.fixed_secs;
+            i += 1;
+            continue;
+        }
+        // Task attempt finished → logical completion (first wins).
+        let logical = a.logical;
+        let node = a.node;
+        st.running.swap_remove(i);
+        st.attempts_of[logical] -= 1;
+        if st.is_map(logical) {
+            st.free_map[node] += 1;
+        } else {
+            st.free_reduce[node] += 1;
+        }
+        if st.done[logical] {
+            continue; // sibling already completed the logical task
+        }
+        st.done[logical] = true;
+        // Kill sibling attempts.
+        let mut k = 0;
+        while k < st.running.len() {
+            if st.running[k].logical == logical {
+                let sib = st.running.swap_remove(k);
+                st.attempts_of[logical] -= 1;
+                if st.is_map(logical) {
+                    st.free_map[sib.node] += 1;
+                } else {
+                    st.free_reduce[sib.node] += 1;
+                }
+            } else {
+                k += 1;
+            }
+        }
+        if st.is_map(logical) {
+            st.tracker.on_map_complete();
+            // Publish this map's partition bytes to every reducer.
+            for r in 0..st.shuffle_avail.len() {
+                st.shuffle_avail[r] += st.spec(st.num_maps + r).shuffle_per_map_mb;
+            }
+        } else {
+            st.tracker.on_reduce_complete();
+        }
+    }
+    changed
+}
+
+/// All maps done and this reducer consumed everything that will ever come.
+fn shuffle_fully_fetched(st: &EngineState<'_>, a: &Attempt) -> bool {
+    let r = a.logical - st.num_maps;
+    st.tracker.completed_maps == st.tracker.total_maps
+        && st.shuffle_avail[r] - st.shuffle_taken[r] <= 1e-6
+        && a.io_rem <= 1e-3 // only float dust may remain
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workloads::{workload_for, AppId};
+
+    fn run(app: AppId, cfg: JobConfig, seed: u64) -> SimResult {
+        let w = workload_for(app);
+        let cluster = ClusterConfig::pseudo_distributed();
+        simulate(
+            w.as_ref(),
+            &cfg,
+            &cluster,
+            &NoiseModel::none(),
+            &mut Rng::new(seed),
+        )
+    }
+
+    #[test]
+    fn completes_and_is_deterministic() {
+        let cfg = JobConfig::new(4, 2, 10.0, 20.0);
+        let a = run(AppId::WordCount, cfg, 42);
+        let b = run(AppId::WordCount, cfg, 42);
+        assert!(a.completion_secs > 0.0);
+        assert_eq!(a.completion_secs, b.completion_secs);
+        assert_eq!(a.cpu_clean, b.cpu_clean);
+    }
+
+    #[test]
+    fn utilization_in_unit_range() {
+        let r = run(AppId::TeraSort, JobConfig::new(6, 4, 10.0, 40.0), 1);
+        assert!(!r.cpu_clean.is_empty());
+        for &u in &r.cpu_clean {
+            assert!((0.0..=1.0).contains(&u), "u={u}");
+        }
+    }
+
+    #[test]
+    fn series_length_matches_completion() {
+        let r = run(AppId::Grep, JobConfig::new(3, 2, 10.0, 30.0), 2);
+        assert_eq!(r.cpu_clean.len(), r.completion_secs.ceil() as usize);
+        assert_eq!(r.cpu_noisy.len(), r.cpu_clean.len());
+    }
+
+    #[test]
+    fn more_input_takes_longer() {
+        let small = run(AppId::WordCount, JobConfig::new(4, 2, 10.0, 20.0), 3);
+        let large = run(AppId::WordCount, JobConfig::new(4, 2, 10.0, 80.0), 3);
+        assert!(
+            large.completion_secs > 1.5 * small.completion_secs,
+            "small={} large={}",
+            small.completion_secs,
+            large.completion_secs
+        );
+    }
+
+    #[test]
+    fn wordcount_is_map_heavy_terasort_reduce_heavy() {
+        // Compare where the CPU mass sits in time: WordCount's centre of
+        // mass should be earlier (map-dominated) than TeraSort's.
+        let cfg = JobConfig::new(8, 4, 10.0, 60.0);
+        let wc = run(AppId::WordCount, cfg, 4);
+        let ts = run(AppId::TeraSort, cfg, 4);
+        let centre = |s: &[f64]| {
+            let total: f64 = s.iter().sum();
+            let m: f64 = s.iter().enumerate().map(|(i, v)| i as f64 * v).sum();
+            m / total / s.len() as f64
+        };
+        let cwc = centre(&wc.cpu_clean);
+        let cts = centre(&ts.cpu_clean);
+        assert!(cwc < cts, "wordcount centre {cwc} vs terasort {cts}");
+    }
+
+    #[test]
+    fn shuffle_conservation() {
+        // Total shuffled MB equals input × map selectivity.
+        let cfg = JobConfig::new(5, 3, 10.0, 50.0);
+        let w = workload_for(AppId::TeraSort);
+        let cluster = ClusterConfig::pseudo_distributed();
+        let r = simulate(
+            w.as_ref(),
+            &cfg,
+            &cluster,
+            &NoiseModel::none(),
+            &mut Rng::new(5),
+        );
+        let expected = 50.0 * w.default_costs().map_selectivity;
+        assert!(
+            (r.counters.shuffle_mb - expected).abs() < 0.1,
+            "{} vs {expected}",
+            r.counters.shuffle_mb
+        );
+    }
+
+    #[test]
+    fn speculative_execution_launches_and_completes() {
+        let w = workload_for(AppId::WordCount);
+        let mut cluster = ClusterConfig::pseudo_distributed();
+        cluster.speculative = true;
+        cluster.task_jitter = 0.5; // aggressive stragglers
+        let cfg = JobConfig::new(6, 2, 10.0, 30.0);
+        // Whether the speculation window opens depends on how the final
+        // wave's horse race falls; sweep seeds and require that it fires
+        // for a solid majority.
+        let mut fired = 0;
+        for seed in 0..10u64 {
+            let r = simulate(
+                w.as_ref(),
+                &cfg,
+                &cluster,
+                &NoiseModel::none(),
+                &mut Rng::new(seed),
+            );
+            assert!(r.completion_secs > 0.0);
+            if r.counters.speculative_attempts > 0 {
+                fired += 1;
+            }
+        }
+        assert!(fired >= 5, "speculation fired in only {fired}/10 runs");
+    }
+
+    #[test]
+    fn multi_node_cluster_runs() {
+        let w = workload_for(AppId::EximParse);
+        let cluster = ClusterConfig::cluster(4);
+        let cfg = JobConfig::new(16, 8, 10.0, 100.0);
+        let r = simulate(
+            w.as_ref(),
+            &cfg,
+            &cluster,
+            &NoiseModel::none(),
+            &mut Rng::new(7),
+        );
+        assert_eq!(r.per_node.len(), 4);
+        for node in &r.per_node {
+            assert_eq!(node.cpu.len(), r.cpu_clean.len());
+            for &v in node.mem.iter().chain(node.disk.iter()).chain(node.cpu.iter()) {
+                assert!((0.0..=1.0).contains(&v));
+            }
+        }
+    }
+
+    #[test]
+    fn more_nodes_faster() {
+        let w = workload_for(AppId::WordCount);
+        let cfg = JobConfig::new(32, 8, 10.0, 200.0);
+        let r1 = simulate(
+            w.as_ref(),
+            &cfg,
+            &ClusterConfig::cluster(1),
+            &NoiseModel::none(),
+            &mut Rng::new(8),
+        );
+        let r4 = simulate(
+            w.as_ref(),
+            &cfg,
+            &ClusterConfig::cluster(4),
+            &NoiseModel::none(),
+            &mut Rng::new(8),
+        );
+        assert!(r4.completion_secs < r1.completion_secs / 2.0);
+    }
+}

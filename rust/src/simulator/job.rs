@@ -1,0 +1,91 @@
+//! Job configuration — the four MapReduce parameters the paper tunes (§1):
+//! number of mappers, number of reducers, file-system split size, input size.
+
+/// One configuration-parameter set `{M, R, FS, I}`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct JobConfig {
+    /// Requested number of map tasks (`mapred.map.tasks` hint).
+    pub mappers: usize,
+    /// Number of reduce tasks (`mapred.reduce.tasks`).
+    pub reducers: usize,
+    /// Split / block size in MB (`dfs.block.size` analogue).
+    pub split_mb: f64,
+    /// Input size in MB.
+    pub input_mb: f64,
+}
+
+impl JobConfig {
+    pub fn new(mappers: usize, reducers: usize, split_mb: f64, input_mb: f64) -> JobConfig {
+        JobConfig {
+            mappers,
+            reducers,
+            split_mb,
+            input_mb,
+        }
+    }
+
+    /// Actual number of map tasks: Hadoop 0.20's FileInputFormat produces
+    /// one split per block, but honours a larger `mapred.map.tasks` hint by
+    /// shrinking the goal split size — net effect `max(M, ceil(I/FS))`.
+    pub fn num_map_tasks(&self) -> usize {
+        let by_splits = (self.input_mb / self.split_mb).ceil() as usize;
+        self.mappers.max(by_splits).max(1)
+    }
+
+    /// Stable compact label, e.g. `M=11,R=6,FS=20M,I=30M` (Table 1 headers).
+    pub fn label(&self) -> String {
+        format!(
+            "M={},R={},FS={}M,I={}M",
+            self.mappers, self.reducers, self.split_mb, self.input_mb
+        )
+    }
+
+    /// The four configuration sets printed in the paper's Table 1.
+    pub fn paper_table1() -> Vec<JobConfig> {
+        vec![
+            JobConfig::new(11, 6, 20.0, 30.0),
+            JobConfig::new(21, 30, 10.0, 80.0),
+            JobConfig::new(32, 21, 30.0, 80.0),
+            JobConfig::new(42, 33, 20.0, 60.0),
+        ]
+    }
+
+    /// Validity guard for property sweeps.
+    pub fn is_valid(&self) -> bool {
+        self.mappers >= 1
+            && self.reducers >= 1
+            && self.split_mb > 0.0
+            && self.input_mb > 0.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn split_rule_matches_hadoop() {
+        // M hint dominates when larger than the block count.
+        assert_eq!(JobConfig::new(11, 6, 20.0, 30.0).num_map_tasks(), 11);
+        // Block count dominates when larger than the hint.
+        assert_eq!(JobConfig::new(2, 6, 10.0, 100.0).num_map_tasks(), 10);
+        // Exact division.
+        assert_eq!(JobConfig::new(1, 1, 25.0, 100.0).num_map_tasks(), 4);
+        // Remainder rounds up.
+        assert_eq!(JobConfig::new(1, 1, 30.0, 100.0).num_map_tasks(), 4);
+    }
+
+    #[test]
+    fn paper_table1_sets() {
+        let sets = JobConfig::paper_table1();
+        assert_eq!(sets.len(), 4);
+        assert!(sets.iter().all(|c| c.is_valid()));
+        assert_eq!(sets[0].label(), "M=11,R=6,FS=20M,I=30M");
+        assert_eq!(sets[3].label(), "M=42,R=33,FS=20M,I=60M");
+    }
+
+    #[test]
+    fn at_least_one_map_task() {
+        assert_eq!(JobConfig::new(1, 1, 100.0, 1.0).num_map_tasks(), 1);
+    }
+}

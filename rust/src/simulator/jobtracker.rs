@@ -1,0 +1,129 @@
+//! FIFO JobTracker: pending queues, reduce slow-start, wave accounting.
+
+use std::collections::VecDeque;
+
+/// Scheduling state for one job (Hadoop 0.20 FIFO semantics).
+#[derive(Debug)]
+pub struct JobTracker {
+    pending_maps: VecDeque<usize>,
+    pending_reduces: VecDeque<usize>,
+    pub total_maps: usize,
+    pub total_reduces: usize,
+    pub completed_maps: usize,
+    pub completed_reduces: usize,
+    slowstart: f64,
+}
+
+impl JobTracker {
+    pub fn new(num_maps: usize, num_reduces: usize, slowstart: f64) -> JobTracker {
+        JobTracker {
+            pending_maps: (0..num_maps).collect(),
+            pending_reduces: (0..num_reduces).collect(),
+            total_maps: num_maps,
+            total_reduces: num_reduces,
+            completed_maps: 0,
+            completed_reduces: 0,
+            slowstart: slowstart.clamp(0.0, 1.0),
+        }
+    }
+
+    /// Maps needed before reducers may launch.
+    fn slowstart_threshold(&self) -> usize {
+        ((self.slowstart * self.total_maps as f64).ceil() as usize).min(self.total_maps)
+    }
+
+    /// True once reduce tasks are allowed to start.
+    pub fn reducers_eligible(&self) -> bool {
+        self.completed_maps >= self.slowstart_threshold()
+    }
+
+    /// Pop the next pending map task.
+    pub fn next_map(&mut self) -> Option<usize> {
+        self.pending_maps.pop_front()
+    }
+
+    /// Pop the next pending reduce task, honouring slow-start.
+    pub fn next_reduce(&mut self) -> Option<usize> {
+        if self.reducers_eligible() {
+            self.pending_reduces.pop_front()
+        } else {
+            None
+        }
+    }
+
+    pub fn has_pending_maps(&self) -> bool {
+        !self.pending_maps.is_empty()
+    }
+
+    pub fn has_pending_reduces(&self) -> bool {
+        !self.pending_reduces.is_empty()
+    }
+
+    pub fn on_map_complete(&mut self) {
+        self.completed_maps += 1;
+        debug_assert!(self.completed_maps <= self.total_maps);
+    }
+
+    pub fn on_reduce_complete(&mut self) {
+        self.completed_reduces += 1;
+        debug_assert!(self.completed_reduces <= self.total_reduces);
+    }
+
+    pub fn all_done(&self) -> bool {
+        self.completed_maps == self.total_maps && self.completed_reduces == self.total_reduces
+    }
+
+    /// Number of map waves on a cluster with `slots` map slots.
+    pub fn map_waves(&self, slots: usize) -> usize {
+        self.total_maps.div_ceil(slots.max(1))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fifo_order() {
+        let mut jt = JobTracker::new(3, 2, 0.0);
+        assert_eq!(jt.next_map(), Some(0));
+        assert_eq!(jt.next_map(), Some(1));
+        assert_eq!(jt.next_map(), Some(2));
+        assert_eq!(jt.next_map(), None);
+    }
+
+    #[test]
+    fn slowstart_gates_reducers() {
+        let mut jt = JobTracker::new(20, 2, 0.05);
+        assert!(!jt.reducers_eligible());
+        assert_eq!(jt.next_reduce(), None);
+        jt.on_map_complete();
+        assert!(jt.reducers_eligible()); // ceil(0.05*20)=1
+        assert_eq!(jt.next_reduce(), Some(0));
+    }
+
+    #[test]
+    fn slowstart_zero_starts_immediately() {
+        let mut jt = JobTracker::new(5, 1, 0.0);
+        assert!(jt.reducers_eligible());
+        assert_eq!(jt.next_reduce(), Some(0));
+    }
+
+    #[test]
+    fn all_done_tracking() {
+        let mut jt = JobTracker::new(2, 1, 0.0);
+        assert!(!jt.all_done());
+        jt.on_map_complete();
+        jt.on_map_complete();
+        jt.on_reduce_complete();
+        assert!(jt.all_done());
+    }
+
+    #[test]
+    fn wave_math() {
+        let jt = JobTracker::new(11, 1, 0.05);
+        assert_eq!(jt.map_waves(2), 6);
+        assert_eq!(jt.map_waves(4), 3);
+        assert_eq!(jt.map_waves(16), 1);
+    }
+}

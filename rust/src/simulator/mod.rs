@@ -1,0 +1,47 @@
+//! Pseudo-distributed MapReduce simulator.
+//!
+//! Replaces the paper's Hadoop 0.20.2 testbed (five daemons on a 2-core
+//! Dell Latitude E4300) with a discrete-event simulation that reproduces the
+//! mechanisms shaping a job's CPU-utilization time series:
+//!
+//! * HDFS-style input splits (`FS` parameter) and the Hadoop split rule
+//!   `num_maps = max(M, ceil(I/FS))`;
+//! * task slots per node (2 map + 2 reduce by default) → map/reduce *waves*;
+//! * per-task JVM startup cost, per-task speed jitter → ragged wave edges;
+//! * CPU as a processor-shared resource per node (slots can oversubscribe
+//!   cores) and disk as a processor-shared resource per node;
+//! * reduce slow-start and shuffle gating on map completions → the
+//!   mid-job utilization trough;
+//! * per-workload cost models calibrated from really executing the
+//!   map/reduce functions (see [`crate::workloads`]).
+//!
+//! The output is the per-second CPU-utilization series the paper's SysStat
+//! step produces (§4, Figure 2), both clean and with seeded measurement
+//! noise, plus per-node disk/memory series for the cluster-scale extension.
+
+pub mod cluster;
+pub mod cpu;
+pub mod engine;
+pub mod job;
+pub mod jobtracker;
+pub mod task;
+
+pub use engine::{simulate, SimCounters, SimResult};
+
+use crate::signal::noise::NoiseModel;
+use crate::util::rng::Rng;
+use crate::workloads::AppId;
+
+/// Convenience wrapper: simulate `app` under `config` on the default
+/// pseudo-distributed cluster and return the *noisy* CPU series (what the
+/// paper's profiling step captures) along with the full result.
+pub fn profile_run(
+    app: AppId,
+    config: &job::JobConfig,
+    noise: &NoiseModel,
+    seed: u64,
+) -> SimResult {
+    let workload = crate::workloads::workload_for(app);
+    let cluster = cluster::ClusterConfig::pseudo_distributed();
+    simulate(workload.as_ref(), config, &cluster, noise, &mut Rng::new(seed))
+}

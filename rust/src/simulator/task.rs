@@ -1,0 +1,294 @@
+//! Task phase models: how a workload's cost model and a job configuration
+//! turn into concrete map/reduce task specifications.
+
+use super::cluster::ClusterConfig;
+use super::job::JobConfig;
+use crate::util::rng::Rng;
+use crate::workloads::{CostModel, Workload};
+
+/// What kind of work a phase does (drives the utilization accounting).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PhaseKind {
+    /// JVM fork + task setup.
+    Startup,
+    /// Read input split and run the map function.
+    MapProcess,
+    /// Sort/spill/combine map output.
+    Spill,
+    /// Write intermediate data to local disk.
+    MapWrite,
+    /// Copy map outputs (gated on map completions).
+    Shuffle,
+    /// Merge-sort shuffled runs.
+    MergeSort,
+    /// Run the reduce function.
+    ReduceProcess,
+    /// Write final output to HDFS.
+    OutputWrite,
+}
+
+/// One task phase: concurrent CPU work (dedicated-core seconds) and disk
+/// work (MB); the phase completes when both are exhausted. While CPU work
+/// remains the task consumes its CPU share; once only IO remains it
+/// contributes `idle_cpu_frac` (iowait-ish overhead).
+#[derive(Debug, Clone, Copy)]
+pub struct Phase {
+    pub kind: PhaseKind,
+    pub cpu_secs: f64,
+    pub io_mb: f64,
+    pub idle_cpu_frac: f64,
+    /// Minimum wall-clock duration (heartbeat scheduling latency, JVM
+    /// fork, shuffle fetch round-trips) — Hadoop 0.20's fixed overheads.
+    pub fixed_secs: f64,
+}
+
+/// Memory footprint (MB) a task charges its node while in a given phase —
+/// sort buffers dominate (io.sort.mb ≈ 100 MB in Hadoop 0.20).
+pub fn phase_mem_mb(kind: PhaseKind, data_mb: f64) -> f64 {
+    match kind {
+        PhaseKind::Startup => 60.0,
+        PhaseKind::MapProcess => 120.0 + 0.2 * data_mb,
+        PhaseKind::Spill => 100.0 + 0.5 * data_mb,
+        PhaseKind::MapWrite => 80.0,
+        PhaseKind::Shuffle => 140.0 + 0.7 * data_mb,
+        PhaseKind::MergeSort => 100.0 + 1.0 * data_mb,
+        PhaseKind::ReduceProcess => 120.0 + 0.3 * data_mb,
+        PhaseKind::OutputWrite => 80.0,
+    }
+}
+
+/// Whether a task is a mapper or a reducer.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TaskKind {
+    Map { index: usize },
+    Reduce { index: usize },
+}
+
+/// A fully specified simulated task.
+#[derive(Debug, Clone)]
+pub struct TaskSpec {
+    pub kind: TaskKind,
+    pub phases: Vec<Phase>,
+    /// Per-task speed factor (lognormal straggler jitter, multiplies CPU).
+    pub speed: f64,
+    /// For reducers: total shuffle bytes expected from each map task (MB).
+    pub shuffle_per_map_mb: f64,
+}
+
+/// Everything the engine needs to run one job.
+#[derive(Debug, Clone)]
+pub struct JobPlan {
+    pub maps: Vec<TaskSpec>,
+    pub reduces: Vec<TaskSpec>,
+    /// Per-map intermediate output (MB).
+    pub map_out_mb: f64,
+}
+
+/// Build the task plan for `(workload, config)` on `cluster`.
+pub fn plan_job(
+    workload: &dyn Workload,
+    config: &JobConfig,
+    cluster: &ClusterConfig,
+    rng: &mut Rng,
+) -> JobPlan {
+    let costs: CostModel = workload.default_costs();
+    let num_maps = config.num_map_tasks();
+    let num_reduces = config.reducers.max(1);
+    let per_map_mb = config.input_mb / num_maps as f64;
+    let map_out_total = config.input_mb * costs.map_selectivity;
+    let per_map_out = map_out_total / num_maps as f64;
+    let weights = workload.partition_weights(num_reduces, rng);
+    debug_assert!((weights.iter().sum::<f64>() - 1.0).abs() < 1e-6);
+
+    let jitter = |rng: &mut Rng| {
+        if cluster.task_jitter > 0.0 {
+            rng.lognormal(0.0, cluster.task_jitter)
+        } else {
+            1.0
+        }
+    };
+
+    let maps = (0..num_maps)
+        .map(|index| TaskSpec {
+            kind: TaskKind::Map { index },
+            speed: jitter(rng),
+            shuffle_per_map_mb: 0.0,
+            phases: vec![
+                Phase {
+                    kind: PhaseKind::Startup,
+                    cpu_secs: costs.startup_cpu_s,
+                    io_mb: 2.0, // jar + split metadata
+                    idle_cpu_frac: 0.15,
+                    fixed_secs: 3.0, // heartbeat-paced task assignment
+                },
+                Phase {
+                    kind: PhaseKind::MapProcess,
+                    cpu_secs: per_map_mb * costs.map_cpu_s_per_mb,
+                    io_mb: per_map_mb,
+                    idle_cpu_frac: 0.08,
+                    fixed_secs: 0.0,
+                },
+                Phase {
+                    kind: PhaseKind::Spill,
+                    cpu_secs: per_map_out * costs.sort_cpu_s_per_mb,
+                    io_mb: per_map_out, // spill write passes
+                    idle_cpu_frac: 0.12,
+                    fixed_secs: 0.0,
+                },
+                Phase {
+                    kind: PhaseKind::MapWrite,
+                    cpu_secs: per_map_out * 0.02,
+                    io_mb: per_map_out,
+                    idle_cpu_frac: 0.06,
+                    fixed_secs: 1.0, // commit round trip
+                },
+            ],
+        })
+        .collect();
+
+    let reduces = (0..num_reduces)
+        .map(|index| {
+            let part_mb = map_out_total * weights[index];
+            let out_mb = part_mb * costs.reduce_selectivity;
+            TaskSpec {
+                kind: TaskKind::Reduce { index },
+                speed: jitter(rng),
+                shuffle_per_map_mb: per_map_out * weights[index],
+                phases: vec![
+                    Phase {
+                        kind: PhaseKind::Startup,
+                        cpu_secs: costs.startup_cpu_s,
+                        io_mb: 2.0,
+                        idle_cpu_frac: 0.15,
+                        fixed_secs: 3.0,
+                    },
+                    Phase {
+                        kind: PhaseKind::Shuffle,
+                        cpu_secs: part_mb * 0.08, // checksum + in-flight merge
+                        io_mb: part_mb,
+                        idle_cpu_frac: 0.05,
+                        fixed_secs: 5.0, // fetch round trips per map wave
+                    },
+                    Phase {
+                        kind: PhaseKind::MergeSort,
+                        cpu_secs: part_mb * costs.sort_cpu_s_per_mb,
+                        io_mb: part_mb * 1.4, // merge read+write passes
+                        idle_cpu_frac: 0.25,
+                        fixed_secs: 0.0,
+                    },
+                    Phase {
+                        kind: PhaseKind::ReduceProcess,
+                        cpu_secs: part_mb * costs.reduce_cpu_s_per_mb,
+                        io_mb: 0.0,
+                        idle_cpu_frac: 0.0,
+                        fixed_secs: 0.0,
+                    },
+                    Phase {
+                        kind: PhaseKind::OutputWrite,
+                        cpu_secs: out_mb * 0.02,
+                        io_mb: out_mb,
+                        idle_cpu_frac: 0.06,
+                        fixed_secs: 1.0,
+                    },
+                ],
+            }
+        })
+        .collect();
+
+    JobPlan {
+        maps,
+        reduces,
+        map_out_mb: per_map_out,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workloads::{workload_for, AppId};
+
+    fn plan(app: AppId, cfg: JobConfig) -> JobPlan {
+        let w = workload_for(app);
+        let cluster = ClusterConfig::pseudo_distributed();
+        plan_job(w.as_ref(), &cfg, &cluster, &mut Rng::new(1))
+    }
+
+    #[test]
+    fn plan_counts_follow_config() {
+        let p = plan(AppId::WordCount, JobConfig::new(11, 6, 20.0, 30.0));
+        assert_eq!(p.maps.len(), 11);
+        assert_eq!(p.reduces.len(), 6);
+    }
+
+    #[test]
+    fn shuffle_mass_conserved() {
+        // Sum over reducers of expected shuffle equals total map output.
+        let cfg = JobConfig::new(8, 5, 10.0, 40.0);
+        let w = workload_for(AppId::TeraSort);
+        let cluster = ClusterConfig::pseudo_distributed();
+        let p = plan_job(w.as_ref(), &cfg, &cluster, &mut Rng::new(2));
+        let per_map_total: f64 = p.reduces.iter().map(|r| r.shuffle_per_map_mb).sum();
+        assert!(
+            (per_map_total - p.map_out_mb).abs() < 1e-9,
+            "{per_map_total} vs {}",
+            p.map_out_mb
+        );
+        let shuffle_total: f64 = p
+            .reduces
+            .iter()
+            .map(|r| r.shuffle_per_map_mb * p.maps.len() as f64)
+            .sum();
+        let expected = cfg.input_mb * w.default_costs().map_selectivity;
+        assert!((shuffle_total - expected).abs() < 1e-6);
+    }
+
+    #[test]
+    fn wordcount_maps_are_cpu_dominated() {
+        let p = plan(AppId::WordCount, JobConfig::new(4, 2, 10.0, 40.0));
+        let mp = &p.maps[0].phases[1];
+        assert_eq!(mp.kind, PhaseKind::MapProcess);
+        // CPU seconds far exceed what the disk needs (60 MB/s → io secs).
+        assert!(mp.cpu_secs > 10.0 * mp.io_mb / 60.0);
+    }
+
+    #[test]
+    fn terasort_reduces_dominate_maps() {
+        let p = plan(AppId::TeraSort, JobConfig::new(4, 4, 10.0, 40.0));
+        let map_cpu: f64 = p.maps.iter().flat_map(|t| &t.phases).map(|ph| ph.cpu_secs).sum();
+        let red_cpu: f64 = p.reduces.iter().flat_map(|t| &t.phases).map(|ph| ph.cpu_secs).sum();
+        // TeraSort sorts on both sides (map spill + reduce merge) but the
+        // reduce side adds the merge + reduce-function cost on the full
+        // data volume: reduce CPU must dominate.
+        assert!(red_cpu > 1.2 * map_cpu, "map={map_cpu} red={red_cpu}");
+    }
+
+    #[test]
+    fn jitter_disabled_gives_unit_speed() {
+        let w = workload_for(AppId::Grep);
+        let mut cluster = ClusterConfig::pseudo_distributed();
+        cluster.task_jitter = 0.0;
+        let p = plan_job(
+            w.as_ref(),
+            &JobConfig::new(3, 2, 10.0, 30.0),
+            &cluster,
+            &mut Rng::new(3),
+        );
+        assert!(p.maps.iter().all(|t| t.speed == 1.0));
+    }
+
+    #[test]
+    fn phase_mem_positive() {
+        for kind in [
+            PhaseKind::Startup,
+            PhaseKind::MapProcess,
+            PhaseKind::Spill,
+            PhaseKind::MapWrite,
+            PhaseKind::Shuffle,
+            PhaseKind::MergeSort,
+            PhaseKind::ReduceProcess,
+            PhaseKind::OutputWrite,
+        ] {
+            assert!(phase_mem_mb(kind, 10.0) > 0.0);
+        }
+    }
+}

@@ -1,0 +1,119 @@
+//! Small subcommand/flag argument parser (clap is not vendorable offline).
+//!
+//! Grammar: `prog <subcommand> [--flag] [--key value]... [positional]...`
+//! Flags may be given as `--key=value` or `--key value`.
+
+use std::collections::BTreeMap;
+
+/// Parsed command line.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    /// First non-flag token (the subcommand), if any.
+    pub command: Option<String>,
+    /// `--key value` / `--key=value` options.
+    pub options: BTreeMap<String, String>,
+    /// Bare `--flag` switches.
+    pub flags: Vec<String>,
+    /// Remaining positional arguments after the subcommand.
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of tokens (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Args {
+        let tokens: Vec<String> = argv.into_iter().collect();
+        let mut args = Args::default();
+        let mut i = 0;
+        while i < tokens.len() {
+            let t = &tokens[i];
+            if let Some(stripped) = t.strip_prefix("--") {
+                if let Some((k, v)) = stripped.split_once('=') {
+                    args.options.insert(k.to_string(), v.to_string());
+                } else if i + 1 < tokens.len() && !tokens[i + 1].starts_with("--") {
+                    args.options.insert(stripped.to_string(), tokens[i + 1].clone());
+                    i += 1;
+                } else {
+                    args.flags.push(stripped.to_string());
+                }
+            } else if args.command.is_none() {
+                args.command = Some(t.clone());
+            } else {
+                args.positional.push(t.clone());
+            }
+            i += 1;
+        }
+        args
+    }
+
+    /// Parse from the real process arguments.
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    /// String option with default.
+    pub fn opt_str(&self, key: &str, default: &str) -> String {
+        self.options.get(key).cloned().unwrap_or_else(|| default.to_string())
+    }
+
+    /// Typed option with default; panics with a helpful message on bad input.
+    pub fn opt<T: std::str::FromStr>(&self, key: &str, default: T) -> T {
+        match self.options.get(key) {
+            None => default,
+            Some(v) => v
+                .parse()
+                .unwrap_or_else(|_| panic!("invalid value for --{key}: {v:?}")),
+        }
+    }
+
+    /// True if `--flag` was given (value-less).
+    pub fn has_flag(&self, key: &str) -> bool {
+        self.flags.iter().any(|f| f == key)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn subcommand_and_options() {
+        let a = parse("profile --app wordcount --seed 42 --verbose");
+        assert_eq!(a.command.as_deref(), Some("profile"));
+        assert_eq!(a.opt_str("app", ""), "wordcount");
+        assert_eq!(a.opt::<u64>("seed", 0), 42);
+        assert!(a.has_flag("verbose"));
+    }
+
+    #[test]
+    fn equals_form() {
+        let a = parse("match --db=/tmp/db.json --topk=3");
+        assert_eq!(a.opt_str("db", ""), "/tmp/db.json");
+        assert_eq!(a.opt::<usize>("topk", 1), 3);
+    }
+
+    #[test]
+    fn positionals_after_command() {
+        let a = parse("tune exim wordcount --grid small");
+        assert_eq!(a.command.as_deref(), Some("tune"));
+        assert_eq!(a.positional, vec!["exim", "wordcount"]);
+        assert_eq!(a.opt_str("grid", ""), "small");
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = parse("serve");
+        assert_eq!(a.opt::<u16>("port", 7070), 7070);
+        assert!(!a.has_flag("quiet"));
+    }
+
+    #[test]
+    #[should_panic(expected = "invalid value for --seed")]
+    fn bad_typed_option_panics() {
+        let a = parse("profile --seed notanumber");
+        let _: u64 = a.opt("seed", 0);
+    }
+}

@@ -1,0 +1,16 @@
+//! Utility substrates.
+//!
+//! The build environment is fully offline and the vendored crate set does not
+//! include `rand`, `serde`, `clap`, `criterion` or a thread-pool crate, so
+//! this module implements the pieces the rest of the system needs from
+//! scratch: a seeded PRNG with the distributions the workload generators use,
+//! a JSON value model with serializer/parser (database persistence, artifact
+//! manifests, experiment output), a small CLI parser, descriptive statistics,
+//! a `log`-facade backend and a fixed thread pool.
+
+pub mod cli;
+pub mod json;
+pub mod logging;
+pub mod pool;
+pub mod rng;
+pub mod stats;

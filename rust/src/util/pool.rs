@@ -1,0 +1,146 @@
+//! Fixed-size thread pool and a scoped parallel map.
+//!
+//! Tokio is not available offline, and the coordinator's concurrency needs
+//! are simple: fan a batch of independent comparisons / simulations over the
+//! cores and join. `par_map` uses `std::thread::scope`, so closures can
+//! borrow from the caller without `'static` bounds.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::thread;
+
+/// Number of worker threads to use by default (logical cores, capped at 16 —
+/// the batcher saturates PJRT well before that).
+pub fn default_workers() -> usize {
+    thread::available_parallelism().map(|n| n.get()).unwrap_or(2).min(16)
+}
+
+/// Apply `f` to every element of `items` using up to `workers` threads,
+/// preserving input order in the output. Panics in `f` propagate.
+pub fn par_map<T, R, F>(items: &[T], workers: usize, f: F) -> Vec<R>
+where
+    T: Sync,
+    R: Send,
+    F: Fn(&T) -> R + Sync,
+{
+    let n = items.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let workers = workers.max(1).min(n);
+    if workers == 1 {
+        return items.iter().map(&f).collect();
+    }
+    let next = AtomicUsize::new(0);
+    let mut out: Vec<Option<R>> = (0..n).map(|_| None).collect();
+    let slots: Vec<Mutex<&mut Option<R>>> = out.iter_mut().map(Mutex::new).collect();
+    thread::scope(|scope| {
+        for _ in 0..workers {
+            scope.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let r = f(&items[i]);
+                **slots[i].lock().expect("slot lock") = Some(r);
+            });
+        }
+    });
+    drop(slots);
+    out.into_iter().map(|r| r.expect("worker filled slot")).collect()
+}
+
+/// Long-lived FIFO thread pool for the serve loop: jobs are boxed closures.
+pub struct ThreadPool {
+    tx: Option<mpsc::Sender<Job>>,
+    handles: Vec<thread::JoinHandle<()>>,
+}
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+impl ThreadPool {
+    /// Spawn a pool with `workers` threads.
+    pub fn new(workers: usize) -> Self {
+        let workers = workers.max(1);
+        let (tx, rx) = mpsc::channel::<Job>();
+        let rx = Arc::new(Mutex::new(rx));
+        let handles = (0..workers)
+            .map(|i| {
+                let rx = Arc::clone(&rx);
+                thread::Builder::new()
+                    .name(format!("mrtuner-worker-{i}"))
+                    .spawn(move || loop {
+                        let job = rx.lock().expect("pool rx lock").recv();
+                        match job {
+                            Ok(job) => job(),
+                            Err(_) => break, // all senders dropped
+                        }
+                    })
+                    .expect("spawn worker")
+            })
+            .collect();
+        ThreadPool { tx: Some(tx), handles }
+    }
+
+    /// Enqueue a job.
+    pub fn execute<F: FnOnce() + Send + 'static>(&self, f: F) {
+        self.tx
+            .as_ref()
+            .expect("pool is live")
+            .send(Box::new(f))
+            .expect("pool worker alive");
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        drop(self.tx.take()); // close channel → workers exit
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn par_map_preserves_order() {
+        let xs: Vec<u64> = (0..500).collect();
+        let ys = par_map(&xs, 8, |&x| x * x);
+        assert_eq!(ys, xs.iter().map(|x| x * x).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn par_map_allows_borrows() {
+        let base = vec![10u64, 20, 30];
+        let xs = vec![0usize, 1, 2];
+        let ys = par_map(&xs, 2, |&i| base[i] + 1);
+        assert_eq!(ys, vec![11, 21, 31]);
+    }
+
+    #[test]
+    fn par_map_empty_and_single() {
+        let none: Vec<u32> = vec![];
+        assert!(par_map(&none, 4, |&x| x).is_empty());
+        assert_eq!(par_map(&[7u32], 4, |&x| x + 1), vec![8]);
+    }
+
+    #[test]
+    fn pool_runs_all_jobs() {
+        let counter = Arc::new(AtomicU64::new(0));
+        {
+            let pool = ThreadPool::new(4);
+            for _ in 0..100 {
+                let c = Arc::clone(&counter);
+                pool.execute(move || {
+                    c.fetch_add(1, Ordering::SeqCst);
+                });
+            }
+            // Drop joins: all jobs must have completed.
+        }
+        assert_eq!(counter.load(Ordering::SeqCst), 100);
+    }
+}

@@ -1,0 +1,157 @@
+//! Distributed Grep — extra reference application (Dean & Ghemawat's
+//! original MapReduce example). Scans syslog-style text for a pattern and
+//! counts matches per matched string. Very low map selectivity: almost
+//! nothing is shuffled, so the CPU series is one map-phase plateau with a
+//! negligible reduce tail — a third distinct shape for the database.
+
+use super::traits::{CostModel, Emit, Workload};
+use super::AppId;
+use crate::util::rng::Rng;
+use regex::bytes::Regex;
+
+pub struct Grep {
+    pattern: Regex,
+}
+
+impl Default for Grep {
+    fn default() -> Self {
+        Grep {
+            pattern: Regex::new(r"(ERROR|FATAL) [a-z]+").expect("static regex compiles"),
+        }
+    }
+}
+
+const FACILITIES: &[&str] = &["kernel", "sshd", "cron", "nfsd", "dhclient", "postfix"];
+const LEVELS: &[(&str, f64)] = &[("INFO", 0.75), ("WARN", 0.15), ("ERROR", 0.08), ("FATAL", 0.02)];
+const MESSAGES: &[&str] = &[
+    "connection reset by peer",
+    "timeout waiting for response",
+    "disk quota exceeded",
+    "segfault at address",
+    "permission denied for user",
+    "checksum mismatch detected",
+];
+
+impl Workload for Grep {
+    fn id(&self) -> AppId {
+        AppId::Grep
+    }
+
+    fn generate(&self, bytes: usize, rng: &mut Rng) -> Vec<u8> {
+        let mut out = Vec::with_capacity(bytes + 128);
+        let mut t = 0u64;
+        while out.len() < bytes {
+            t += rng.range_u64(1, 5);
+            let u = rng.f64();
+            let mut acc = 0.0;
+            let mut level = "INFO";
+            for (l, p) in LEVELS {
+                acc += p;
+                if u < acc {
+                    level = l;
+                    break;
+                }
+            }
+            out.extend_from_slice(
+                format!(
+                    "May 26 {:02}:{:02}:{:02} host {}[{}]: {} {}\n",
+                    (t / 3600) % 24,
+                    (t / 60) % 60,
+                    t % 60,
+                    rng.choose(FACILITIES),
+                    rng.range_u64(100, 32768),
+                    level,
+                    rng.choose(MESSAGES),
+                )
+                .as_bytes(),
+            );
+        }
+        out
+    }
+
+    fn map(&self, split: &[u8], emit: &mut Emit) {
+        for line in split.split(|&b| b == b'\n') {
+            for m in self.pattern.find_iter(line) {
+                emit(m.as_bytes(), b"1");
+            }
+        }
+    }
+
+    fn combine(&self, _key: &[u8], values: Vec<Vec<u8>>) -> Vec<Vec<u8>> {
+        let sum: u64 = values.iter().map(|v| parse_count(v)).sum();
+        vec![sum.to_string().into_bytes()]
+    }
+
+    fn reduce(&self, key: &[u8], values: &[Vec<u8>], out: &mut Vec<u8>) {
+        let sum: u64 = values.iter().map(|v| parse_count(v)).sum();
+        out.extend_from_slice(sum.to_string().as_bytes());
+        out.push(b'\t');
+        out.extend_from_slice(key);
+        out.push(b'\n');
+    }
+
+    fn default_costs(&self) -> CostModel {
+        CostModel {
+            map_cpu_s_per_mb: 3.0,
+            map_selectivity: 0.01,
+            sort_cpu_s_per_mb: 0.3,
+            reduce_cpu_s_per_mb: 0.4,
+            reduce_selectivity: 1.2,
+            startup_cpu_s: 1.2,
+        }
+    }
+}
+
+fn parse_count(v: &[u8]) -> u64 {
+    std::str::from_utf8(v)
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workloads::mapreduce::run_job;
+
+    #[test]
+    fn finds_only_matching_lines() {
+        let g = Grep::default();
+        let input = b"x INFO all good\ny ERROR disk quota exceeded\nz FATAL segfault now\n";
+        let mut keys = Vec::new();
+        g.map(input, &mut |k, _| keys.push(String::from_utf8_lossy(k).into_owned()));
+        assert_eq!(keys, vec!["ERROR disk", "FATAL segfault"]);
+    }
+
+    #[test]
+    fn selectivity_is_tiny() {
+        let g = Grep::default();
+        let mut rng = Rng::new(1);
+        let data = g.generate(64 * 1024, &mut rng);
+        let out = run_job(&g, &data, 3, 2);
+        let ratio = out.counters.combine_output_bytes as f64 / data.len() as f64;
+        assert!(ratio < 0.05, "ratio={ratio}");
+        assert!(out.counters.reduce_groups > 0, "some matches exist");
+    }
+
+    #[test]
+    fn counts_are_consistent() {
+        let g = Grep::default();
+        let mut rng = Rng::new(2);
+        let data = g.generate(32 * 1024, &mut rng);
+        let direct = g.pattern.find_iter(&data).count() as u64;
+        let out = run_job(&g, &data, 4, 3);
+        let mut total = 0u64;
+        for ro in &out.reducer_outputs {
+            for line in std::str::from_utf8(ro).unwrap().lines() {
+                total += line.split('\t').next().unwrap().parse::<u64>().unwrap();
+            }
+        }
+        assert_eq!(total, direct);
+    }
+
+    #[test]
+    fn cost_model_plausible() {
+        assert!(Grep::default().default_costs().is_plausible());
+    }
+}

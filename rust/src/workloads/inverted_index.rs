@@ -1,0 +1,160 @@
+//! Inverted index — extra reference application (the classic search-engine
+//! indexing workload the paper's introduction motivates: "indexing the
+//! documents and returning appropriate information to incoming queries").
+//! Maps `docid \t text` documents to `(word, docid)` postings; the reducer
+//! merges postings lists. Map-heavy like WordCount but with high shuffle
+//! selectivity (postings are not collapsible by a combiner), so its series
+//! sits between WordCount's and TeraSort's.
+
+use super::traits::{CostModel, Emit, Workload};
+use super::AppId;
+use crate::util::rng::{Rng, Zipf};
+
+pub struct InvertedIndex {
+    vocab: Vec<String>,
+    zipf: Zipf,
+}
+
+const VOCAB: usize = 3_000;
+
+impl Default for InvertedIndex {
+    fn default() -> Self {
+        let mut rng = Rng::new(0x1d0c_5ee0_91ab_cdef);
+        let mut seen = std::collections::BTreeSet::new();
+        let mut vocab = Vec::with_capacity(VOCAB);
+        while vocab.len() < VOCAB {
+            let n = 3 + rng.below(7) as usize;
+            let w: String = (0..n).map(|_| (b'a' + rng.below(26) as u8) as char).collect();
+            if seen.insert(w.clone()) {
+                vocab.push(w);
+            }
+        }
+        InvertedIndex {
+            vocab,
+            zipf: Zipf::new(VOCAB, 1.05),
+        }
+    }
+}
+
+impl Workload for InvertedIndex {
+    fn id(&self) -> AppId {
+        AppId::InvertedIndex
+    }
+
+    fn generate(&self, bytes: usize, rng: &mut Rng) -> Vec<u8> {
+        let mut out = Vec::with_capacity(bytes + 256);
+        let mut doc = 0u64;
+        while out.len() < bytes {
+            doc += 1;
+            out.extend_from_slice(format!("d{doc:07}\t").as_bytes());
+            let words = rng.range_u64(20, 80);
+            for i in 0..words {
+                if i > 0 {
+                    out.push(b' ');
+                }
+                out.extend_from_slice(self.vocab[self.zipf.sample(rng)].as_bytes());
+            }
+            out.push(b'\n');
+        }
+        out
+    }
+
+    fn map(&self, split: &[u8], emit: &mut Emit) {
+        for line in split.split(|&b| b == b'\n') {
+            let mut it = line.splitn(2, |&b| b == b'\t');
+            let (Some(docid), Some(text)) = (it.next(), it.next()) else {
+                continue;
+            };
+            // Unique words per document (set semantics for postings).
+            let mut words: Vec<&[u8]> = text
+                .split(|&b| b == b' ')
+                .filter(|w| !w.is_empty())
+                .collect();
+            words.sort_unstable();
+            words.dedup();
+            for w in words {
+                emit(w, docid);
+            }
+        }
+    }
+
+    fn reduce(&self, key: &[u8], values: &[Vec<u8>], out: &mut Vec<u8>) {
+        out.extend_from_slice(key);
+        out.push(b'\t');
+        let mut docs: Vec<&Vec<u8>> = values.iter().collect();
+        docs.sort_unstable();
+        docs.dedup();
+        for (i, d) in docs.iter().enumerate() {
+            if i > 0 {
+                out.push(b',');
+            }
+            out.extend_from_slice(d);
+        }
+        out.push(b'\n');
+    }
+
+    fn default_costs(&self) -> CostModel {
+        CostModel {
+            map_cpu_s_per_mb: 6.5,
+            map_selectivity: 0.85,
+            sort_cpu_s_per_mb: 1.0,
+            reduce_cpu_s_per_mb: 1.5,
+            reduce_selectivity: 0.8,
+            startup_cpu_s: 1.2,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workloads::mapreduce::run_job;
+
+    #[test]
+    fn postings_contain_document() {
+        let ii = InvertedIndex::default();
+        let input = b"d1\tapple banana\nd2\tbanana cherry\n".to_vec();
+        let out = run_job(&ii, &input, 1, 1);
+        let text = String::from_utf8(out.reducer_outputs[0].clone()).unwrap();
+        let mut lines: Vec<&str> = text.lines().collect();
+        lines.sort();
+        assert_eq!(lines, vec!["apple\td1", "banana\td1,d2", "cherry\td2"]);
+    }
+
+    #[test]
+    fn duplicate_words_deduplicated() {
+        let ii = InvertedIndex::default();
+        let input = b"d9\tfoo foo foo bar\n".to_vec();
+        let mut pairs = Vec::new();
+        ii.map(&input, &mut |k, v| {
+            pairs.push((k.to_vec(), v.to_vec()));
+        });
+        assert_eq!(pairs.len(), 2);
+    }
+
+    #[test]
+    fn generated_docs_have_ids() {
+        let ii = InvertedIndex::default();
+        let mut rng = Rng::new(1);
+        let data = ii.generate(16 * 1024, &mut rng);
+        for line in std::str::from_utf8(&data).unwrap().lines().take(20) {
+            assert!(line.starts_with('d'));
+            assert!(line.contains('\t'));
+        }
+    }
+
+    #[test]
+    fn shuffle_is_large_fraction() {
+        let ii = InvertedIndex::default();
+        let mut rng = Rng::new(2);
+        let data = ii.generate(32 * 1024, &mut rng);
+        let out = run_job(&ii, &data, 2, 2);
+        let ratio = out.counters.combine_output_bytes as f64 / data.len() as f64;
+        assert!(ratio > 0.3, "ratio={ratio}");
+    }
+
+    #[test]
+    fn cost_model_plausible() {
+        assert!(InvertedIndex::default().default_costs().is_plausible());
+    }
+}

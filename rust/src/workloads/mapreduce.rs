@@ -1,0 +1,163 @@
+//! In-process MapReduce execution engine.
+//!
+//! Really runs a workload's map → combine → partition → shuffle → sort →
+//! reduce chain over concrete bytes. Used for (a) workload correctness
+//! tests, (b) cost-model calibration, and (c) deriving shuffle partition
+//! statistics that the discrete-event simulator scales up to full job size.
+
+use super::traits::Workload;
+
+/// FNV-1a 64-bit — the default key partitioner.
+pub fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// Byte/record counters collected during a real run.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Counters {
+    pub map_input_bytes: u64,
+    pub map_output_records: u64,
+    pub map_output_bytes: u64,
+    pub combine_output_records: u64,
+    pub combine_output_bytes: u64,
+    pub reduce_groups: u64,
+    pub output_bytes: u64,
+}
+
+/// Result of a real in-process job execution.
+#[derive(Debug, Clone)]
+pub struct JobOutput {
+    /// Final output of each reducer, in reducer order.
+    pub reducer_outputs: Vec<Vec<u8>>,
+    /// Shuffle bytes received per reducer.
+    pub partition_bytes: Vec<u64>,
+    pub counters: Counters,
+}
+
+/// Execute the full job: `num_splits` map tasks, `num_reducers` reduce tasks.
+pub fn run_job(
+    w: &dyn Workload,
+    input: &[u8],
+    num_splits: usize,
+    num_reducers: usize,
+) -> JobOutput {
+    assert!(num_reducers > 0, "need at least one reducer");
+    let splits = w.split(input, num_splits.max(1));
+    let mut counters = Counters {
+        map_input_bytes: input.len() as u64,
+        ..Counters::default()
+    };
+
+    // Map side: map → sort → group → combine → partition.
+    let mut buckets: Vec<Vec<(Vec<u8>, Vec<u8>)>> = vec![Vec::new(); num_reducers];
+    for split in &splits {
+        let mut pairs: Vec<(Vec<u8>, Vec<u8>)> = Vec::new();
+        w.map(split, &mut |k, v| {
+            counters.map_output_records += 1;
+            counters.map_output_bytes += (k.len() + v.len()) as u64;
+            pairs.push((k.to_vec(), v.to_vec()));
+        });
+        pairs.sort();
+        let mut i = 0;
+        while i < pairs.len() {
+            let mut j = i + 1;
+            while j < pairs.len() && pairs[j].0 == pairs[i].0 {
+                j += 1;
+            }
+            let key = pairs[i].0.clone();
+            let values: Vec<Vec<u8>> = pairs[i..j].iter().map(|(_, v)| v.clone()).collect();
+            let combined = w.combine(&key, values);
+            let p = w.partition(&key, num_reducers);
+            debug_assert!(p < num_reducers);
+            for v in combined {
+                counters.combine_output_records += 1;
+                counters.combine_output_bytes += (key.len() + v.len()) as u64;
+                buckets[p].push((key.clone(), v));
+            }
+            i = j;
+        }
+    }
+
+    // Reduce side: per-reducer sort → group → reduce.
+    let mut reducer_outputs = Vec::with_capacity(num_reducers);
+    let mut partition_bytes = Vec::with_capacity(num_reducers);
+    for bucket in &mut buckets {
+        partition_bytes
+            .push(bucket.iter().map(|(k, v)| (k.len() + v.len()) as u64).sum::<u64>());
+        bucket.sort();
+        let mut out = Vec::new();
+        let mut i = 0;
+        while i < bucket.len() {
+            let mut j = i + 1;
+            while j < bucket.len() && bucket[j].0 == bucket[i].0 {
+                j += 1;
+            }
+            let values: Vec<Vec<u8>> = bucket[i..j].iter().map(|(_, v)| v.clone()).collect();
+            counters.reduce_groups += 1;
+            w.reduce(&bucket[i].0, &values, &mut out);
+            i = j;
+        }
+        counters.output_bytes += out.len() as u64;
+        reducer_outputs.push(out);
+    }
+
+    JobOutput {
+        reducer_outputs,
+        partition_bytes,
+        counters,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+    use crate::workloads::{workload_for, AppId};
+
+    #[test]
+    fn fnv_known_values() {
+        // Published FNV-1a test vectors.
+        assert_eq!(fnv1a(b""), 0xcbf29ce484222325);
+        assert_eq!(fnv1a(b"a"), 0xaf63dc4c8601ec8c);
+        assert_eq!(fnv1a(b"foobar"), 0x85944171f73967e8);
+    }
+
+    #[test]
+    fn deterministic_across_runs() {
+        let w = workload_for(AppId::WordCount);
+        let mut rng = Rng::new(5);
+        let input = w.generate(64 * 1024, &mut rng);
+        let a = run_job(w.as_ref(), &input, 3, 2);
+        let b = run_job(w.as_ref(), &input, 3, 2);
+        assert_eq!(a.reducer_outputs, b.reducer_outputs);
+        assert_eq!(a.counters, b.counters);
+    }
+
+    #[test]
+    fn split_count_does_not_change_result() {
+        // MapReduce determinism: the reduce output must be independent of
+        // how the input was split (combiner associativity).
+        let w = workload_for(AppId::WordCount);
+        let mut rng = Rng::new(6);
+        let input = w.generate(48 * 1024, &mut rng);
+        let a = run_job(w.as_ref(), &input, 1, 3);
+        let b = run_job(w.as_ref(), &input, 7, 3);
+        assert_eq!(a.reducer_outputs, b.reducer_outputs);
+        assert_eq!(a.counters.output_bytes, b.counters.output_bytes);
+    }
+
+    #[test]
+    fn partition_bytes_sum_to_combine_output() {
+        let w = workload_for(AppId::EximParse);
+        let mut rng = Rng::new(7);
+        let input = w.generate(32 * 1024, &mut rng);
+        let out = run_job(w.as_ref(), &input, 4, 5);
+        let total: u64 = out.partition_bytes.iter().sum();
+        assert_eq!(total, out.counters.combine_output_bytes);
+    }
+}

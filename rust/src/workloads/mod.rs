@@ -1,0 +1,97 @@
+//! MapReduce workloads.
+//!
+//! The paper's three benchmark applications (§5) — WordCount, TeraSort and
+//! Exim mainlog parsing — plus two extra reference applications (Grep,
+//! InvertedIndex) that widen the reference database in the extended
+//! experiments. Each workload is *really implemented*: it generates
+//! realistic synthetic input and its map/reduce functions actually execute
+//! over that input (see [`mapreduce`], the in-process execution engine used
+//! for correctness tests and cost calibration). The discrete-event
+//! simulator then scales the calibrated costs to full job sizes.
+
+pub mod exim;
+pub mod grep;
+pub mod inverted_index;
+pub mod mapreduce;
+pub mod terasort;
+pub mod traits;
+pub mod wordcount;
+
+pub use traits::{CostModel, Workload};
+
+/// Identifier for every application known to the system.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum AppId {
+    WordCount,
+    TeraSort,
+    EximParse,
+    Grep,
+    InvertedIndex,
+}
+
+impl AppId {
+    /// Stable lowercase name (database keys, CLI values).
+    pub fn name(&self) -> &'static str {
+        match self {
+            AppId::WordCount => "wordcount",
+            AppId::TeraSort => "terasort",
+            AppId::EximParse => "exim",
+            AppId::Grep => "grep",
+            AppId::InvertedIndex => "invertedindex",
+        }
+    }
+
+    /// Parse from the stable name.
+    pub fn from_name(s: &str) -> Option<AppId> {
+        match s {
+            "wordcount" => Some(AppId::WordCount),
+            "terasort" => Some(AppId::TeraSort),
+            "exim" => Some(AppId::EximParse),
+            "grep" => Some(AppId::Grep),
+            "invertedindex" => Some(AppId::InvertedIndex),
+            _ => None,
+        }
+    }
+
+    /// All known applications.
+    pub fn all() -> &'static [AppId] {
+        &[
+            AppId::WordCount,
+            AppId::TeraSort,
+            AppId::EximParse,
+            AppId::Grep,
+            AppId::InvertedIndex,
+        ]
+    }
+}
+
+/// Instantiate the workload implementation for an application.
+pub fn workload_for(app: AppId) -> Box<dyn Workload> {
+    match app {
+        AppId::WordCount => Box::new(wordcount::WordCount::default()),
+        AppId::TeraSort => Box::new(terasort::TeraSort::default()),
+        AppId::EximParse => Box::new(exim::EximParse::default()),
+        AppId::Grep => Box::new(grep::Grep::default()),
+        AppId::InvertedIndex => Box::new(inverted_index::InvertedIndex::default()),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn names_roundtrip() {
+        for &app in AppId::all() {
+            assert_eq!(AppId::from_name(app.name()), Some(app));
+        }
+        assert_eq!(AppId::from_name("nosuch"), None);
+    }
+
+    #[test]
+    fn workloads_instantiate() {
+        for &app in AppId::all() {
+            assert_eq!(workload_for(app).id(), app);
+        }
+    }
+}

@@ -1,0 +1,165 @@
+//! TeraSort — the paper's second reference application (§5).
+//!
+//! Standard map/reduce sort with the custom range partitioner the paper
+//! describes: a sorted list of `R-1` sampled keys defines per-reducer key
+//! ranges, so reducer `i`'s output is entirely ≤ reducer `i+1`'s. Records
+//! follow the teragen layout: 10-byte key + 90-byte payload, 100 bytes
+//! fixed width. The map function is the identity on `(key, payload)` —
+//! which is exactly why TeraSort's CPU profile differs so much from the
+//! text-parsing applications: almost all its work is shuffle IO and
+//! reduce-side merge sorting.
+
+use super::traits::{record_splits, CostModel, Emit, Workload};
+use super::AppId;
+use crate::util::rng::Rng;
+
+pub const RECORD: usize = 100;
+pub const KEY_LEN: usize = 10;
+
+pub struct TeraSort;
+
+impl Default for TeraSort {
+    fn default() -> Self {
+        TeraSort
+    }
+}
+
+impl Workload for TeraSort {
+    fn id(&self) -> AppId {
+        AppId::TeraSort
+    }
+
+    fn generate(&self, bytes: usize, rng: &mut Rng) -> Vec<u8> {
+        let records = bytes.div_ceil(RECORD).max(1);
+        let mut out = Vec::with_capacity(records * RECORD);
+        for row in 0..records {
+            // 10-byte printable random key (teragen uses 95 printable chars).
+            for _ in 0..KEY_LEN {
+                out.push(b' ' + rng.below(95) as u8);
+            }
+            // 10-byte row id + 80 bytes filler.
+            out.extend_from_slice(format!("{row:010}").as_bytes());
+            let filler = b'A' + (row % 26) as u8;
+            out.extend(std::iter::repeat(filler).take(RECORD - KEY_LEN - 10));
+        }
+        out
+    }
+
+    fn split<'a>(&self, input: &'a [u8], n: usize) -> Vec<&'a [u8]> {
+        record_splits(input, RECORD, n)
+    }
+
+    fn map(&self, split: &[u8], emit: &mut Emit) {
+        for rec in split.chunks_exact(RECORD) {
+            emit(&rec[..KEY_LEN], &rec[KEY_LEN..]);
+        }
+    }
+
+    fn partition(&self, key: &[u8], r: usize) -> usize {
+        // Range partitioner over the printable-byte key space [0x20, 0x7f):
+        // equivalent to TotalOrderPartitioner with uniformly sampled keys,
+        // since generated keys are uniform over the space.
+        let b0 = key.first().copied().unwrap_or(b' ');
+        let frac = (b0.saturating_sub(b' ')) as f64 / 95.0;
+        ((frac * r as f64) as usize).min(r - 1)
+    }
+
+    fn reduce(&self, key: &[u8], values: &[Vec<u8>], out: &mut Vec<u8>) {
+        for v in values {
+            out.extend_from_slice(key);
+            out.extend_from_slice(v);
+        }
+    }
+
+    fn default_costs(&self) -> CostModel {
+        // Identity map, no combiner (selectivity 1.0), heavy reduce-side
+        // merge sort and full-volume shuffle — the IO-bound inverse of the
+        // text workloads.
+        CostModel {
+            map_cpu_s_per_mb: 0.12,
+            map_selectivity: 1.0,
+            sort_cpu_s_per_mb: 0.35,
+            reduce_cpu_s_per_mb: 0.30,
+            reduce_selectivity: 1.0,
+            startup_cpu_s: 1.2,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workloads::mapreduce::run_job;
+
+    #[test]
+    fn generates_fixed_width_records() {
+        let ts = TeraSort;
+        let mut rng = Rng::new(1);
+        let data = ts.generate(1000, &mut rng);
+        assert_eq!(data.len() % RECORD, 0);
+        assert!(data.len() >= 1000);
+    }
+
+    #[test]
+    fn output_is_globally_sorted() {
+        let ts = TeraSort;
+        let mut rng = Rng::new(2);
+        let data = ts.generate(50 * RECORD, &mut rng);
+        let out = run_job(&ts, &data, 4, 3);
+        // Within each reducer the keys are sorted; across reducers the last
+        // key of reducer i ≤ first key of reducer i+1 (range partitioning).
+        let mut last_overall: Option<Vec<u8>> = None;
+        for ro in &out.reducer_outputs {
+            for rec in ro.chunks_exact(RECORD) {
+                let key = rec[..KEY_LEN].to_vec();
+                if let Some(prev) = &last_overall {
+                    assert!(*prev <= key, "sort order violated");
+                }
+                last_overall = Some(key);
+            }
+        }
+    }
+
+    #[test]
+    fn output_is_permutation_of_input() {
+        let ts = TeraSort;
+        let mut rng = Rng::new(3);
+        let data = ts.generate(30 * RECORD, &mut rng);
+        let out = run_job(&ts, &data, 3, 4);
+        let mut input_records: Vec<&[u8]> = data.chunks_exact(RECORD).collect();
+        let all_out: Vec<u8> = out.reducer_outputs.concat();
+        let mut output_records: Vec<&[u8]> = all_out.chunks_exact(RECORD).collect();
+        input_records.sort();
+        output_records.sort();
+        assert_eq!(input_records, output_records);
+    }
+
+    #[test]
+    fn no_combiner_full_shuffle() {
+        let ts = TeraSort;
+        let mut rng = Rng::new(4);
+        let data = ts.generate(20 * RECORD, &mut rng);
+        let out = run_job(&ts, &data, 2, 2);
+        assert_eq!(out.counters.map_output_bytes, out.counters.combine_output_bytes);
+        assert_eq!(out.counters.map_output_bytes, data.len() as u64);
+    }
+
+    #[test]
+    fn partitioner_is_monotone_in_key() {
+        let ts = TeraSort;
+        for r in [1usize, 2, 5, 33] {
+            let mut last = 0usize;
+            for b in b' '..b'~' {
+                let p = ts.partition(&[b; KEY_LEN], r);
+                assert!(p < r);
+                assert!(p >= last, "partition not monotone");
+                last = p;
+            }
+        }
+    }
+
+    #[test]
+    fn cost_model_plausible() {
+        assert!(TeraSort.default_costs().is_plausible());
+    }
+}

@@ -1,0 +1,241 @@
+//! The [`Workload`] trait and the per-application cost model.
+
+use super::AppId;
+use crate::util::rng::Rng;
+
+/// Emit sink for map output pairs.
+pub type Emit<'a> = dyn FnMut(&[u8], &[u8]) + 'a;
+
+/// Per-application resource cost model used by the discrete-event simulator
+/// to scale the *really executed* small-sample behaviour to full job sizes.
+///
+/// CPU costs are in seconds of a single reference core (the paper's 2.26 GHz
+/// Centrino) per MB processed; selectivities are output/input byte ratios.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CostModel {
+    /// CPU seconds per input MB in the map function (parse/tokenize).
+    pub map_cpu_s_per_mb: f64,
+    /// Intermediate bytes emitted per input byte (post-combiner).
+    pub map_selectivity: f64,
+    /// CPU seconds per intermediate MB for spill sort + combine.
+    pub sort_cpu_s_per_mb: f64,
+    /// CPU seconds per shuffled MB in the reduce function.
+    pub reduce_cpu_s_per_mb: f64,
+    /// Output bytes per shuffled byte.
+    pub reduce_selectivity: f64,
+    /// Task JVM startup cost in CPU seconds (Hadoop 0.20 forks per task).
+    pub startup_cpu_s: f64,
+}
+
+impl CostModel {
+    /// Sanity guard used by property tests.
+    pub fn is_plausible(&self) -> bool {
+        self.map_cpu_s_per_mb > 0.0
+            && self.map_selectivity > 0.0
+            && self.sort_cpu_s_per_mb >= 0.0
+            && self.reduce_cpu_s_per_mb >= 0.0
+            && self.reduce_selectivity > 0.0
+            && self.startup_cpu_s >= 0.0
+    }
+}
+
+/// A MapReduce application: synthetic input generation plus the *actual*
+/// map/combine/reduce functions, plus the calibrated cost model.
+pub trait Workload: Send + Sync {
+    /// Which application this is.
+    fn id(&self) -> AppId;
+
+    /// Generate approximately `bytes` of realistic input (record-aligned;
+    /// the result may overshoot by up to one record).
+    fn generate(&self, bytes: usize, rng: &mut Rng) -> Vec<u8>;
+
+    /// Split input into at most `n` record-aligned chunks (HDFS splits).
+    /// Default: newline-aligned; fixed-width workloads override.
+    fn split<'a>(&self, input: &'a [u8], n: usize) -> Vec<&'a [u8]> {
+        line_splits(input, n)
+    }
+
+    /// Route a key to one of `r` reducers. Default: FNV-1a hash
+    /// (Hadoop's HashPartitioner); TeraSort overrides with its range
+    /// partitioner built from sampled keys.
+    fn partition(&self, key: &[u8], r: usize) -> usize {
+        (super::mapreduce::fnv1a(key) % r as u64) as usize
+    }
+
+    /// Run the map function over one input split, emitting key/value pairs.
+    fn map(&self, split: &[u8], emit: &mut Emit);
+
+    /// Combine values for one key map-side (Hadoop combiner). The default
+    /// is the identity (no combiner).
+    fn combine(&self, _key: &[u8], values: Vec<Vec<u8>>) -> Vec<Vec<u8>> {
+        values
+    }
+
+    /// Run the reduce function for one key group, appending output bytes.
+    fn reduce(&self, key: &[u8], values: &[Vec<u8>], out: &mut Vec<u8>);
+
+    /// Calibrated default cost model (see `calibrate` for re-measurement).
+    fn default_costs(&self) -> CostModel;
+
+    /// Relative shuffle-partition weights for `r` reducers (sum = 1).
+    /// Default: uniform (hash partitioning of well-spread keys).
+    fn partition_weights(&self, r: usize, _rng: &mut Rng) -> Vec<f64> {
+        vec![1.0 / r as f64; r]
+    }
+
+    /// Re-measure the CPU cost terms by really executing the map/reduce
+    /// functions on `sample_bytes` of generated data and timing them on the
+    /// host, then rescaling to the reference core via `host_speed_factor`
+    /// (host-seconds × factor = reference-seconds). Selectivities are
+    /// measured exactly (byte counts, not timing).
+    fn calibrate(&self, sample_bytes: usize, host_speed_factor: f64, seed: u64) -> CostModel {
+        let mut rng = Rng::new(seed);
+        let input = self.generate(sample_bytes, &mut rng);
+        let mb = input.len() as f64 / (1024.0 * 1024.0);
+
+        let t0 = std::time::Instant::now();
+        let mut inter_bytes = 0usize;
+        let mut pairs: Vec<(Vec<u8>, Vec<u8>)> = Vec::new();
+        self.map(&input, &mut |k, v| {
+            inter_bytes += k.len() + v.len();
+            pairs.push((k.to_vec(), v.to_vec()));
+        });
+        let map_s = t0.elapsed().as_secs_f64();
+
+        // Group (sort) and combine — the spill-side cost.
+        let t1 = std::time::Instant::now();
+        pairs.sort();
+        let mut combined_bytes = 0usize;
+        let mut groups: Vec<(Vec<u8>, Vec<Vec<u8>>)> = Vec::new();
+        for (k, v) in pairs {
+            match groups.last_mut() {
+                Some((lk, vs)) if *lk == k => vs.push(v),
+                _ => groups.push((k, vec![v])),
+            }
+        }
+        for (k, vs) in &mut groups {
+            let taken = std::mem::take(vs);
+            *vs = self.combine(k, taken);
+            combined_bytes += k.len() + vs.iter().map(|v| v.len()).sum::<usize>();
+        }
+        let sort_s = t1.elapsed().as_secs_f64();
+
+        // Reduce.
+        let t2 = std::time::Instant::now();
+        let mut out = Vec::new();
+        for (k, vs) in &groups {
+            self.reduce(k, vs, &mut out);
+        }
+        let reduce_s = t2.elapsed().as_secs_f64();
+
+        let inter_mb = (combined_bytes.max(1)) as f64 / (1024.0 * 1024.0);
+        let defaults = self.default_costs();
+        CostModel {
+            map_cpu_s_per_mb: (map_s * host_speed_factor / mb).max(1e-4),
+            map_selectivity: combined_bytes.max(1) as f64 / input.len().max(1) as f64,
+            sort_cpu_s_per_mb: (sort_s * host_speed_factor / inter_mb).max(1e-5),
+            reduce_cpu_s_per_mb: (reduce_s * host_speed_factor / inter_mb).max(1e-5),
+            reduce_selectivity: out.len().max(1) as f64 / combined_bytes.max(1) as f64,
+            startup_cpu_s: defaults.startup_cpu_s,
+        }
+        .clamp_to_plausible()
+    }
+}
+
+impl CostModel {
+    fn clamp_to_plausible(mut self) -> CostModel {
+        self.map_selectivity = self.map_selectivity.clamp(1e-4, 2.0);
+        self.reduce_selectivity = self.reduce_selectivity.clamp(1e-4, 2.0);
+        self
+    }
+}
+
+/// Split a byte buffer on newline boundaries into at most `n` chunks of
+/// roughly equal size — HDFS-style record-aligned input splits.
+pub fn line_splits(input: &[u8], n: usize) -> Vec<&[u8]> {
+    if input.is_empty() || n == 0 {
+        return Vec::new();
+    }
+    let n = n.min(input.len());
+    let target = input.len() / n;
+    let mut splits = Vec::with_capacity(n);
+    let mut start = 0usize;
+    for _ in 0..n - 1 {
+        if start >= input.len() {
+            break;
+        }
+        let mut end = (start + target).min(input.len());
+        // Advance to the next newline so records stay whole.
+        while end < input.len() && input[end] != b'\n' {
+            end += 1;
+        }
+        if end < input.len() {
+            end += 1; // include the newline
+        }
+        if end > start {
+            splits.push(&input[start..end]);
+        }
+        start = end;
+    }
+    if start < input.len() {
+        splits.push(&input[start..]);
+    }
+    splits
+}
+
+/// Split fixed-width records (TeraSort's 100-byte rows) into `n` chunks.
+pub fn record_splits(input: &[u8], record: usize, n: usize) -> Vec<&[u8]> {
+    let records = input.len() / record;
+    if records == 0 || n == 0 {
+        return Vec::new();
+    }
+    let n = n.min(records);
+    let per = records / n;
+    let extra = records % n;
+    let mut out = Vec::with_capacity(n);
+    let mut start = 0usize;
+    for i in 0..n {
+        let count = per + usize::from(i < extra);
+        let end = start + count * record;
+        out.push(&input[start..end]);
+        start = end;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn line_splits_cover_everything() {
+        let data = b"alpha beta\ngamma\ndelta epsilon\nzeta\n".to_vec();
+        for n in 1..=6 {
+            let splits = line_splits(&data, n);
+            let total: usize = splits.iter().map(|s| s.len()).sum();
+            assert_eq!(total, data.len(), "n={n}");
+            for s in &splits[..splits.len() - 1] {
+                assert!(s.ends_with(b"\n"), "split not line-aligned");
+            }
+        }
+    }
+
+    #[test]
+    fn record_splits_are_exact() {
+        let data = vec![7u8; 100 * 13];
+        let splits = record_splits(&data, 100, 4);
+        assert_eq!(splits.len(), 4);
+        let total: usize = splits.iter().map(|s| s.len()).sum();
+        assert_eq!(total, 1300);
+        for s in &splits {
+            assert_eq!(s.len() % 100, 0);
+        }
+    }
+
+    #[test]
+    fn record_splits_more_chunks_than_records() {
+        let data = vec![1u8; 100 * 2];
+        let splits = record_splits(&data, 100, 8);
+        assert_eq!(splits.len(), 2);
+    }
+}

@@ -1,0 +1,236 @@
+//! WordCount — the paper's first reference application (§5).
+//!
+//! Reads text, emits `<word, 1>` per token, combiner/reducer sum the counts
+//! and write `word \t count` lines. Input is a synthetic natural-text corpus
+//! with Zipf(1.0)-distributed word frequencies over a generated vocabulary —
+//! the statistic the combiner's selectivity (and hence the shuffle volume)
+//! depends on.
+
+use super::traits::{CostModel, Emit, Workload};
+use super::AppId;
+use crate::util::rng::{Rng, Zipf};
+
+/// Vocabulary size for the synthetic corpus.
+const VOCAB: usize = 5_000;
+/// Words per generated line (min, max).
+const LINE_WORDS: (usize, usize) = (6, 14);
+
+pub struct WordCount {
+    vocab: Vec<String>,
+    zipf: Zipf,
+}
+
+impl Default for WordCount {
+    fn default() -> Self {
+        // Vocabulary is derived from a fixed seed so that every instance
+        // (and every test) sees the same corpus statistics.
+        let mut rng = Rng::new(0x0077_0c0d_e5ee_d001);
+        let vocab = build_vocab(&mut rng, VOCAB);
+        WordCount {
+            vocab,
+            zipf: Zipf::new(VOCAB, 1.0),
+        }
+    }
+}
+
+fn build_vocab(rng: &mut Rng, n: usize) -> Vec<String> {
+    const CONSONANTS: &[u8] = b"bcdfghjklmnprstvwz";
+    const VOWELS: &[u8] = b"aeiou";
+    let mut seen = std::collections::BTreeSet::new();
+    let mut vocab = Vec::with_capacity(n);
+    while vocab.len() < n {
+        let syllables = 1 + rng.below(4) as usize;
+        let mut w = String::new();
+        for _ in 0..syllables {
+            w.push(*rng.choose(CONSONANTS) as char);
+            w.push(*rng.choose(VOWELS) as char);
+            if rng.chance(0.3) {
+                w.push(*rng.choose(CONSONANTS) as char);
+            }
+        }
+        if seen.insert(w.clone()) {
+            vocab.push(w);
+        }
+    }
+    vocab
+}
+
+impl Workload for WordCount {
+    fn id(&self) -> AppId {
+        AppId::WordCount
+    }
+
+    fn generate(&self, bytes: usize, rng: &mut Rng) -> Vec<u8> {
+        let mut out = Vec::with_capacity(bytes + 64);
+        while out.len() < bytes {
+            let words = rng.range_u64(LINE_WORDS.0 as u64, LINE_WORDS.1 as u64 + 1) as usize;
+            for i in 0..words {
+                if i > 0 {
+                    out.push(b' ');
+                }
+                out.extend_from_slice(self.vocab[self.zipf.sample(rng)].as_bytes());
+            }
+            out.push(b'\n');
+        }
+        out
+    }
+
+    fn map(&self, split: &[u8], emit: &mut Emit) {
+        for line in split.split(|&b| b == b'\n') {
+            for word in line
+                .split(|&b| b == b' ' || b == b'\t')
+                .filter(|w| !w.is_empty())
+            {
+                emit(word, b"1");
+            }
+        }
+    }
+
+    fn combine(&self, _key: &[u8], values: Vec<Vec<u8>>) -> Vec<Vec<u8>> {
+        let sum: u64 = values.iter().map(|v| parse_count(v)).sum();
+        vec![sum.to_string().into_bytes()]
+    }
+
+    fn reduce(&self, key: &[u8], values: &[Vec<u8>], out: &mut Vec<u8>) {
+        let sum: u64 = values.iter().map(|v| parse_count(v)).sum();
+        out.extend_from_slice(key);
+        out.push(b'\t');
+        out.extend_from_slice(sum.to_string().as_bytes());
+        out.push(b'\n');
+    }
+
+    fn default_costs(&self) -> CostModel {
+        // Calibrated on the reference core (see `calibrate`): tokenisation-
+        // bound map, strong combiner, cheap summing reduce. The map-heavy
+        // profile is what makes WordCount's CPU series resemble Exim's.
+        CostModel {
+            map_cpu_s_per_mb: 6.0,
+            map_selectivity: 0.08,
+            sort_cpu_s_per_mb: 0.6,
+            reduce_cpu_s_per_mb: 0.9,
+            reduce_selectivity: 0.9,
+            startup_cpu_s: 1.2,
+        }
+    }
+
+    fn partition_weights(&self, r: usize, rng: &mut Rng) -> Vec<f64> {
+        // Zipf keys hash unevenly: weight each vocabulary word by its Zipf
+        // mass and accumulate per hash bucket.
+        let mut w = vec![0.0f64; r];
+        let _ = rng;
+        for (rank, word) in self.vocab.iter().enumerate() {
+            let mass = 1.0 / (rank as f64 + 1.0);
+            let b = (super::mapreduce::fnv1a(word.as_bytes()) % r as u64) as usize;
+            w[b] += mass;
+        }
+        let total: f64 = w.iter().sum();
+        for v in &mut w {
+            *v /= total;
+        }
+        w
+    }
+}
+
+fn parse_count(v: &[u8]) -> u64 {
+    std::str::from_utf8(v)
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workloads::mapreduce::run_job;
+
+    #[test]
+    fn counts_small_known_input() {
+        let wc = WordCount::default();
+        let input = b"a b a\nc a b\n".to_vec();
+        let out = run_job(&wc, &input, 2, 1);
+        let text = String::from_utf8(out.reducer_outputs[0].clone()).unwrap();
+        let mut lines: Vec<&str> = text.lines().collect();
+        lines.sort();
+        assert_eq!(lines, vec!["a\t3", "b\t2", "c\t1"]);
+    }
+
+    #[test]
+    fn generated_corpus_is_text_lines() {
+        let wc = WordCount::default();
+        let mut rng = Rng::new(1);
+        let data = wc.generate(8 * 1024, &mut rng);
+        assert!(data.len() >= 8 * 1024);
+        let text = std::str::from_utf8(&data).expect("ascii corpus");
+        for line in text.lines().take(50) {
+            assert!(!line.trim().is_empty());
+            assert!(line.split(' ').count() >= LINE_WORDS.0);
+        }
+    }
+
+    #[test]
+    fn zipf_corpus_is_skewed() {
+        let wc = WordCount::default();
+        let mut rng = Rng::new(2);
+        let data = wc.generate(64 * 1024, &mut rng);
+        let out = run_job(&wc, &data, 1, 1);
+        let text = String::from_utf8(out.reducer_outputs[0].clone()).unwrap();
+        let mut counts: Vec<u64> = text
+            .lines()
+            .map(|l| l.split('\t').nth(1).unwrap().parse().unwrap())
+            .collect();
+        counts.sort_unstable_by(|a, b| b.cmp(a));
+        // Top word ≫ median word.
+        let median = counts[counts.len() / 2];
+        assert!(counts[0] > median * 20, "top={} median={median}", counts[0]);
+    }
+
+    #[test]
+    fn combiner_shrinks_shuffle() {
+        let wc = WordCount::default();
+        let mut rng = Rng::new(3);
+        let data = wc.generate(32 * 1024, &mut rng);
+        let out = run_job(&wc, &data, 2, 2);
+        assert!(
+            out.counters.combine_output_bytes < out.counters.map_output_bytes / 2,
+            "combiner ineffective: {} vs {}",
+            out.counters.combine_output_bytes,
+            out.counters.map_output_bytes
+        );
+    }
+
+    #[test]
+    fn total_count_equals_tokens() {
+        let wc = WordCount::default();
+        let mut rng = Rng::new(4);
+        let data = wc.generate(16 * 1024, &mut rng);
+        let tokens = data
+            .split(|&b| b == b' ' || b == b'\n')
+            .filter(|w| !w.is_empty())
+            .count() as u64;
+        let out = run_job(&wc, &data, 3, 4);
+        let mut sum = 0u64;
+        for ro in &out.reducer_outputs {
+            for line in std::str::from_utf8(ro).unwrap().lines() {
+                sum += line.split('\t').nth(1).unwrap().parse::<u64>().unwrap();
+            }
+        }
+        assert_eq!(sum, tokens);
+    }
+
+    #[test]
+    fn partition_weights_normalized_and_skewed() {
+        let wc = WordCount::default();
+        let mut rng = Rng::new(5);
+        let w = wc.partition_weights(8, &mut rng);
+        assert_eq!(w.len(), 8);
+        assert!((w.iter().sum::<f64>() - 1.0).abs() < 1e-9);
+        let max = w.iter().cloned().fold(0.0, f64::max);
+        let min = w.iter().cloned().fold(1.0, f64::min);
+        assert!(max / min > 1.05, "expected hash skew from zipf keys");
+    }
+
+    #[test]
+    fn cost_model_plausible() {
+        assert!(WordCount::default().default_costs().is_plausible());
+    }
+}

@@ -1,0 +1,119 @@
+//! End-to-end integration over the full coordinator stack (pure-Rust
+//! fallback path — artifact-dependent tests live in `parity.rs`).
+
+use mrtuner::prelude::*;
+use mrtuner::workloads::{workload_for, AppId};
+
+fn system() -> TuningSystem {
+    TuningSystem::new(SystemConfig {
+        workers: 4,
+        use_runtime: false,
+        ..SystemConfig::default()
+    })
+}
+
+#[test]
+fn profile_match_tune_end_to_end() {
+    let grid = ConfigGrid::small(11);
+    let mut sys = system();
+    sys.profile_app(AppId::WordCount, &grid);
+    sys.profile_app(AppId::TeraSort, &grid);
+    assert_eq!(sys.db.len(), 2 * grid.len());
+
+    let report = sys.tune_app(AppId::EximParse, &grid);
+    assert_eq!(report.matched_app, Some(AppId::WordCount));
+    let transferred = report.transferred.expect("transfer happened");
+    assert!(transferred.is_valid());
+    assert!(
+        report.speedup() > 1.0,
+        "transferred config not faster: default {}s tuned {}s",
+        report.default_secs,
+        report.tuned_secs
+    );
+}
+
+#[test]
+fn database_survives_persistence_round_trip() {
+    let grid = ConfigGrid::small(13);
+    let mut sys = system();
+    sys.profile_app(AppId::Grep, &grid);
+    let path = std::env::temp_dir().join("mrtuner_integration_db.json");
+    sys.db.save(&path).unwrap();
+
+    let restored = ReferenceDb::load(&path).unwrap();
+    assert_eq!(restored.len(), sys.db.len());
+    // Matching against the restored DB behaves identically.
+    let m = Matcher::new(&sys.config, None);
+    let a = m.match_app(AppId::Grep, &grid, &sys.db);
+    let b = m.match_app(AppId::Grep, &grid, &restored);
+    assert_eq!(a.winner, b.winner);
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn five_app_database_still_ranks_text_apps_together() {
+    // Wider DB (extension experiment E4): Exim should match WordCount ahead
+    // of TeraSort even with Grep and InvertedIndex competing.
+    let grid = ConfigGrid::small(17);
+    let mut sys = system();
+    for app in [
+        AppId::WordCount,
+        AppId::TeraSort,
+        AppId::Grep,
+        AppId::InvertedIndex,
+    ] {
+        sys.profile_app(app, &grid);
+    }
+    let outcome = sys.match_app(AppId::EximParse, &grid);
+    let wc = outcome.tally.get("wordcount").copied().unwrap_or(0);
+    let ts = outcome.tally.get("terasort").copied().unwrap_or(0);
+    assert!(wc > ts, "wordcount {wc} vs terasort {ts}: {:?}", outcome.tally);
+}
+
+#[test]
+fn real_execution_calibration_is_sane() {
+    // The calibrate path really executes the map/reduce functions; its
+    // measured selectivities must be close to the cost-model constants the
+    // simulator uses.
+    for app in [AppId::WordCount, AppId::TeraSort, AppId::EximParse] {
+        let w = workload_for(app);
+        let measured = w.calibrate(256 * 1024, 1.0, 1234);
+        assert!(measured.is_plausible(), "{app:?}: {measured:?}");
+        let expected = w.default_costs();
+        let ratio = measured.map_selectivity / expected.map_selectivity;
+        assert!(
+            (0.3..=3.0).contains(&ratio),
+            "{app:?}: measured selectivity {} vs model {}",
+            measured.map_selectivity,
+            expected.map_selectivity
+        );
+    }
+}
+
+#[test]
+fn simulator_workload_separation_is_robust_across_seeds() {
+    // The separation Table 1 relies on (same-config text apps similar,
+    // TeraSort different) must hold across noise seeds, not just the one
+    // used in the paper benches.
+    use mrtuner::coordinator::profiler::Profiler;
+    use mrtuner::dtw::corr::similarity_percent;
+    let cfg = JobConfig::new(8, 4, 10.0, 50.0);
+    for seed in [1u64, 2, 3] {
+        let sc = SystemConfig {
+            seed,
+            workers: 2,
+            use_runtime: false,
+            ..SystemConfig::default()
+        };
+        let p = Profiler::new(&sc, None);
+        let wc = p.profile_one(AppId::WordCount, &cfg);
+        let ex = p.profile_one(AppId::EximParse, &cfg);
+        let ts = p.profile_one(AppId::TeraSort, &cfg);
+        let s_wc = similarity_percent(&ex.series, &wc.series);
+        let s_ts = similarity_percent(&ex.series, &ts.series);
+        assert!(
+            s_wc > s_ts,
+            "seed {seed}: exim~wordcount {s_wc} <= exim~terasort {s_ts}"
+        );
+    }
+}

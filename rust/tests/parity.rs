@@ -1,0 +1,133 @@
+//! Cross-layer parity: the PJRT-compiled artifacts (L1 Pallas kernels
+//! lowered through L2 JAX) must agree with the pure-Rust implementations.
+//!
+//! These tests need `make artifacts` to have run; they are skipped (with a
+//! loud message) if the artifact directory is missing so `cargo test` still
+//! works in a fresh checkout.
+
+use mrtuner::coordinator::batcher::{similarities_fallback, Batcher};
+use mrtuner::dtw::{band_radius, banded::dtw_banded};
+use mrtuner::runtime::{Padded, RuntimeService};
+use mrtuner::signal;
+use mrtuner::util::rng::Rng;
+
+fn runtime() -> Option<RuntimeService> {
+    let svc = RuntimeService::try_default();
+    if svc.is_none() {
+        eprintln!("SKIP: artifacts/ missing — run `make artifacts` for parity tests");
+    }
+    svc
+}
+
+fn wave(len: usize, seed: u64) -> Vec<f64> {
+    let mut rng = Rng::new(seed);
+    let f = 0.05 + rng.f64() * 0.2;
+    let phase = rng.f64() * 6.28;
+    (0..len)
+        .map(|i| {
+            (0.5 + 0.35 * ((i as f64) * f + phase).sin() + rng.normal_ms(0.0, 0.03))
+                .clamp(0.0, 1.0)
+        })
+        .collect()
+}
+
+#[test]
+fn preprocess_matches_rust_chebyshev() {
+    let Some(svc) = runtime() else { return };
+    let rt = svc.handle();
+    for seed in 0..6u64 {
+        let len = 60 + (seed as usize) * 37;
+        let raw = wave(len, seed);
+        let bucket = rt.bucket_for(len);
+        let got = rt.preprocess(Padded::fit(&raw, bucket)).expect("preprocess");
+        let want = signal::preprocess(&raw);
+        assert_eq!(got.len, len);
+        for (i, (a, b)) in got.valid().iter().zip(want.iter()).enumerate() {
+            assert!(
+                (a - b).abs() < 5e-4,
+                "seed {seed} sample {i}: pjrt {a} vs rust {b}"
+            );
+        }
+        // Padding must be exactly zero.
+        for &v in &got.data[len..] {
+            assert_eq!(v, 0.0);
+        }
+    }
+}
+
+#[test]
+fn dtw_batch_distances_match_rust() {
+    let Some(svc) = runtime() else { return };
+    let rt = svc.handle();
+    let b = rt.batch();
+    let query = signal::preprocess(&wave(100, 42));
+    let refs: Vec<Vec<f64>> = (0..b as u64)
+        .map(|s| signal::preprocess(&wave(64 + 11 * s as usize, 100 + s)))
+        .collect();
+
+    let bucket = rt.bucket_for(refs.iter().map(|r| r.len()).max().unwrap().max(query.len()));
+    let padded_refs: Vec<Padded> = refs.iter().map(|r| Padded::fit(r, bucket)).collect();
+    let out = rt
+        .dtw_batch(Padded::fit(&query, bucket), padded_refs)
+        .expect("dtw_batch");
+
+    for (lane, r) in refs.iter().enumerate() {
+        let want = dtw_banded(&query, r, band_radius(query.len(), r.len())).distance;
+        let got = out.dists[lane] as f64;
+        // Band-edge rounding differs by at most one cell between the two
+        // implementations; distances agree within a small relative bound.
+        assert!(
+            (got - want).abs() < 2e-2 * want.max(1.0),
+            "lane {lane}: pjrt {got} vs rust {want}"
+        );
+    }
+}
+
+#[test]
+fn match_one_similarities_track_fallback() {
+    let Some(svc) = runtime() else { return };
+    let rt = svc.handle();
+    let raw_query = wave(90, 7);
+    let refs: Vec<Vec<f64>> = (0..12u64)
+        .map(|s| signal::preprocess(&wave(50 + 13 * s as usize, 500 + s)))
+        .collect();
+
+    let pjrt = Batcher::new(rt.clone())
+        .similarities(&raw_query, &refs)
+        .expect("batcher");
+    let rust = similarities_fallback(&raw_query, &refs);
+    assert_eq!(pjrt.len(), rust.len());
+    for (i, (a, b)) in pjrt.iter().zip(rust.iter()).enumerate() {
+        // f32 vs f64 and tie-breaking differences keep these within a
+        // fraction of a percentage point, not bit-identical.
+        assert!((a - b).abs() < 1.5, "ref {i}: pjrt {a} vs rust {b}");
+    }
+}
+
+#[test]
+fn self_similarity_is_perfect_through_pjrt() {
+    let Some(svc) = runtime() else { return };
+    let rt = svc.handle();
+    let raw = wave(120, 9);
+    // Reference = the preprocessed query itself.
+    let pre = signal::preprocess(&raw);
+    let sims = Batcher::new(rt)
+        .similarities(&raw, &[pre])
+        .expect("batcher");
+    assert!(sims[0] > 99.0, "self similarity {}", sims[0]);
+}
+
+#[test]
+fn batch_lanes_are_independent() {
+    // The same reference must get the same similarity regardless of which
+    // lane (and which chunk) it lands in.
+    let Some(svc) = runtime() else { return };
+    let rt = svc.handle();
+    let raw_query = wave(80, 21);
+    let r = signal::preprocess(&wave(70, 77));
+    let refs: Vec<Vec<f64>> = (0..10).map(|_| r.clone()).collect();
+    let sims = Batcher::new(rt).similarities(&raw_query, &refs).expect("batcher");
+    for s in &sims[1..] {
+        assert!((s - sims[0]).abs() < 1e-6, "{s} vs {}", sims[0]);
+    }
+}

@@ -1,0 +1,312 @@
+//! Seeded property sweeps across module boundaries (proptest is not
+//! vendorable offline; `util::rng::Pcg32` drives the case generation).
+
+use mrtuner::dtw::{band_radius, banded::dtw_banded, fastdtw::fastdtw, full};
+use mrtuner::signal::{self, chebyshev::Sos, normalize, resample, wavelet};
+use mrtuner::simulator::cluster::ClusterConfig;
+use mrtuner::simulator::engine::simulate;
+use mrtuner::simulator::job::JobConfig;
+use mrtuner::signal::noise::NoiseModel;
+use mrtuner::util::json::Json;
+use mrtuner::util::rng::{Pcg32, Rng};
+use mrtuner::workloads::{mapreduce::run_job, workload_for, AppId};
+
+fn series(g: &mut Pcg32, len: usize) -> Vec<f64> {
+    let mut v = 0.5;
+    (0..len)
+        .map(|_| {
+            v = (v + (g.f64() - 0.5) * 0.2).clamp(0.0, 1.0);
+            v
+        })
+        .collect()
+}
+
+#[test]
+fn dtw_impl_ordering_invariants() {
+    // full <= banded <= fastdtw-with-tiny-radius never violated;
+    // full == banded when the band is the whole matrix.
+    let mut g = Pcg32::new(100, 1);
+    for _ in 0..40 {
+        let n = 8 + g.below(120) as usize;
+        let m = 8 + g.below(120) as usize;
+        let x = series(&mut g, n);
+        let y = series(&mut g, m);
+        let f = full::dtw_distance(&x, &y);
+        let b = dtw_banded(&x, &y, band_radius(n, m)).distance;
+        let fd = fastdtw(&x, &y, 6).distance;
+        assert!(b >= f - 1e-9, "band below exact: {b} < {f}");
+        assert!(fd >= f - 1e-9, "fastdtw below exact: {fd} < {f}");
+        let wide = dtw_banded(&x, &y, n.max(m)).distance;
+        assert!((wide - f).abs() < 1e-9);
+    }
+}
+
+#[test]
+fn dtw_scale_and_shift_behaviour() {
+    // DTW on |a-b| local cost: distance scales linearly with amplitude and
+    // is invariant to adding a constant to both series.
+    let mut g = Pcg32::new(101, 2);
+    for _ in 0..20 {
+        let n = 10 + g.below(60) as usize;
+        let x = series(&mut g, n);
+        let y = series(&mut g, n + 5);
+        let d = full::dtw_distance(&x, &y);
+        let x2: Vec<f64> = x.iter().map(|v| 3.0 * v).collect();
+        let y2: Vec<f64> = y.iter().map(|v| 3.0 * v).collect();
+        assert!((full::dtw_distance(&x2, &y2) - 3.0 * d).abs() < 1e-9);
+        let x3: Vec<f64> = x.iter().map(|v| v + 7.0).collect();
+        let y3: Vec<f64> = y.iter().map(|v| v + 7.0).collect();
+        assert!((full::dtw_distance(&x3, &y3) - d).abs() < 1e-9);
+    }
+}
+
+#[test]
+fn warp_preserves_reference_value_set() {
+    let mut g = Pcg32::new(102, 3);
+    for _ in 0..20 {
+        let len = 10 + g.below(50) as usize;
+        let x = series(&mut g, len);
+        let len = 10 + g.below(50) as usize;
+        let y = series(&mut g, len);
+        let r = full::dtw(&x, &y);
+        let warped = r.warp_onto_x(&y, x.len());
+        for v in &warped {
+            assert!(y.contains(v), "warped value not from reference");
+        }
+    }
+}
+
+#[test]
+fn preprocess_bounds_and_monotone_under_scaling() {
+    let mut g = Pcg32::new(103, 4);
+    for _ in 0..20 {
+        let len = 30 + g.below(300) as usize;
+        let raw = series(&mut g, len);
+        let p = signal::preprocess(&raw);
+        assert_eq!(p.len(), raw.len());
+        let (mut lo, mut hi) = (f64::INFINITY, f64::NEG_INFINITY);
+        for &v in &p {
+            assert!((0.0..=1.0).contains(&v));
+            lo = lo.min(v);
+            hi = hi.max(v);
+        }
+        assert!(lo.abs() < 1e-12 && (hi - 1.0).abs() < 1e-12, "min-max touched");
+        // Scaled input gives the identical normalized output (filter is
+        // linear; a constant *offset* would excite the IIR transient, so
+        // only pure scaling is invariant end-to-end).
+        let scaled: Vec<f64> = raw.iter().map(|v| 0.3 * v).collect();
+        let p2 = signal::preprocess(&scaled);
+        for (a, b) in p.iter().zip(&p2) {
+            assert!((a - b).abs() < 1e-9);
+        }
+    }
+}
+
+#[test]
+fn filter_never_explodes() {
+    // Bounded input -> bounded output for the (stable) default filter.
+    let mut g = Pcg32::new(104, 5);
+    for _ in 0..10 {
+        let sos = Sos::lowpass_default();
+        let x: Vec<f64> = (0..2000).map(|_| g.f64() * 2.0 - 1.0).collect();
+        let y = sos.filter(&x);
+        for v in y {
+            assert!(v.abs() < 10.0, "filter output blew up: {v}");
+        }
+    }
+}
+
+#[test]
+fn resample_then_resample_back_is_close_for_smooth_series() {
+    let mut g = Pcg32::new(105, 6);
+    for _ in 0..10 {
+        let n = 100 + g.below(200) as usize;
+        let sos = Sos::lowpass_default();
+        let x = sos.filter(&series(&mut g, n)); // smooth it
+        let down = resample::linear(&x, n / 2);
+        let back = resample::linear(&down, n);
+        let err: f64 = x
+            .iter()
+            .zip(&back)
+            .skip(20)
+            .map(|(a, b)| (a - b).abs())
+            .sum::<f64>()
+            / (n - 20) as f64;
+        assert!(err < 0.02, "roundtrip error {err}");
+    }
+}
+
+#[test]
+fn wavelet_signature_distance_is_a_semimetric() {
+    let mut g = Pcg32::new(106, 7);
+    for _ in 0..15 {
+        let len = 64 + g.below(200) as usize;
+        let a = series(&mut g, len);
+        let len = 64 + g.below(200) as usize;
+        let b = series(&mut g, len);
+        let sa = wavelet::signature(&a, wavelet::Family::Db4, 16);
+        let sb = wavelet::signature(&b, wavelet::Family::Db4, 16);
+        assert_eq!(wavelet::signature_distance(&sa, &sa), 0.0);
+        let dab = wavelet::signature_distance(&sa, &sb);
+        let dba = wavelet::signature_distance(&sb, &sa);
+        assert!((dab - dba).abs() < 1e-12);
+        assert!(dab >= 0.0);
+    }
+}
+
+#[test]
+fn json_roundtrips_arbitrary_trees() {
+    let mut g = Pcg32::new(107, 8);
+    fn gen(g: &mut Pcg32, depth: usize) -> Json {
+        match if depth == 0 { g.below(4) } else { g.below(6) } {
+            0 => Json::Null,
+            1 => Json::Bool(g.below(2) == 0),
+            2 => Json::Num((g.f64() - 0.5) * 1e6),
+            3 => Json::Str(format!("k{}-\"quote\\slash\n", g.below(1000))),
+            4 => Json::Arr((0..g.below(5)).map(|_| gen(g, depth - 1)).collect()),
+            _ => Json::Obj(
+                (0..g.below(5))
+                    .map(|i| (format!("key{i}"), gen(g, depth - 1)))
+                    .collect(),
+            ),
+        }
+    }
+    for _ in 0..200 {
+        let v = gen(&mut g, 3);
+        let text = v.to_string();
+        let back = Json::parse(&text).expect("own output parses");
+        // Numbers may differ at the last ulp through the %e formatting; a
+        // second round trip must be a fixed point.
+        assert_eq!(back.to_string(), Json::parse(&back.to_string()).unwrap().to_string());
+        let pretty = Json::parse(&v.to_pretty()).expect("pretty parses");
+        assert_eq!(back.to_string(), pretty.to_string());
+    }
+}
+
+#[test]
+fn simulator_conservation_and_monotonicity() {
+    let mut g = Pcg32::new(108, 9);
+    let cluster = ClusterConfig::pseudo_distributed();
+    for _ in 0..12 {
+        let app = *[AppId::WordCount, AppId::TeraSort, AppId::EximParse, AppId::Grep]
+            .iter()
+            .nth(g.below(4) as usize)
+            .unwrap();
+        let w = workload_for(app);
+        let cfg = JobConfig::new(
+            1 + g.below(20) as usize,
+            1 + g.below(10) as usize,
+            (1 + g.below(30)) as f64,
+            (10 + g.below(90)) as f64,
+        );
+        let r = simulate(w.as_ref(), &cfg, &cluster, &NoiseModel::none(), &mut Rng::new(1));
+        // Shuffle conservation: total shuffled == input x map selectivity.
+        let expected = cfg.input_mb * w.default_costs().map_selectivity;
+        assert!(
+            (r.counters.shuffle_mb - expected).abs() < 0.05 * expected + 0.5,
+            "{app:?} {}: shuffled {} vs expected {expected}",
+            cfg.label(),
+            r.counters.shuffle_mb
+        );
+        // Utilization bounded; series spans the run.
+        assert_eq!(r.cpu_clean.len(), r.completion_secs.ceil() as usize);
+        assert!(r.cpu_clean.iter().all(|&u| (0.0..=1.0).contains(&u)));
+        // Task accounting.
+        assert_eq!(r.counters.map_tasks, cfg.num_map_tasks());
+        assert_eq!(r.counters.reduce_tasks, cfg.reducers.max(1));
+    }
+}
+
+#[test]
+fn simulator_more_work_never_faster() {
+    // Completion time is monotone in input size (same config otherwise).
+    let cluster = ClusterConfig::pseudo_distributed();
+    let w = workload_for(AppId::EximParse);
+    let mut last = 0.0;
+    for i in [20.0f64, 40.0, 80.0, 160.0] {
+        let cfg = JobConfig::new(8, 4, 10.0, i);
+        let r = simulate(w.as_ref(), &cfg, &cluster, &NoiseModel::none(), &mut Rng::new(3));
+        assert!(
+            r.completion_secs > last,
+            "I={i}: {} not > {last}",
+            r.completion_secs
+        );
+        last = r.completion_secs;
+    }
+}
+
+#[test]
+fn mapreduce_engine_keys_partition_disjointly() {
+    // A key's group is reduced exactly once: keys never appear in more
+    // than one reducer's output, and never twice within one reducer.
+    // (WordCount and InvertedIndex emit `key \t value` lines.)
+    let mut g = Pcg32::new(109, 10);
+    for app in [AppId::WordCount, AppId::InvertedIndex] {
+        let w = workload_for(app);
+        let mut rng = Rng::new(g.next_u32() as u64);
+        let input = w.generate(24 * 1024, &mut rng);
+        let out = run_job(w.as_ref(), &input, 3, 4);
+        let mut owner: std::collections::BTreeMap<Vec<u8>, usize> = Default::default();
+        for (ri, ro) in out.reducer_outputs.iter().enumerate() {
+            for line in ro.split(|&b| b == b'\n').filter(|l| !l.is_empty()) {
+                let key = line.split(|&b| b == b'\t').next().unwrap().to_vec();
+                match owner.insert(key.clone(), ri) {
+                    None => {}
+                    Some(prev) => panic!(
+                        "{app:?}: key {:?} reduced twice (reducers {prev} and {ri})",
+                        String::from_utf8_lossy(&key)
+                    ),
+                }
+            }
+        }
+        assert!(owner.len() > 10, "{app:?}: suspiciously few keys");
+    }
+}
+
+#[test]
+fn normalization_idempotent() {
+    let mut g = Pcg32::new(110, 11);
+    for _ in 0..20 {
+        let len = 10 + g.below(100) as usize;
+        let x = series(&mut g, len);
+        let n1 = normalize::min_max(&x);
+        let n2 = normalize::min_max(&n1);
+        for (a, b) in n1.iter().zip(&n2) {
+            assert!((a - b).abs() < 1e-12);
+        }
+    }
+}
+
+#[test]
+fn profile_entries_roundtrip_through_db_json() {
+    use mrtuner::database::{profile::ProfileEntry, store::ReferenceDb};
+    let mut g = Pcg32::new(111, 12);
+    let mut db = ReferenceDb::new();
+    for i in 0..30 {
+        let app = *[AppId::WordCount, AppId::TeraSort, AppId::EximParse]
+            .iter()
+            .nth(g.below(3) as usize)
+            .unwrap();
+        db.insert(ProfileEntry {
+            app,
+            config: JobConfig::new(1 + i, 1 + (i % 7), 5.0 + i as f64, 10.0 * (i + 1) as f64),
+            series: {
+                let len = 5 + g.below(60) as usize;
+                series(&mut g, len)
+            },
+            raw_len: 50,
+            completion_secs: g.f64() * 1000.0,
+        });
+    }
+    let text = db.to_json().to_string();
+    let back = ReferenceDb::from_json(&Json::parse(&text).unwrap()).unwrap();
+    assert_eq!(back.len(), db.len());
+    for (a, b) in db.entries().iter().zip(back.entries()) {
+        assert_eq!(a.app, b.app);
+        assert_eq!(a.config_key(), b.config_key());
+        assert_eq!(a.series.len(), b.series.len());
+        for (x, y) in a.series.iter().zip(&b.series) {
+            assert!((x - y).abs() < 1e-9);
+        }
+    }
+}
