@@ -1,0 +1,88 @@
+//! Index quickstart: wrap a profiled reference database in the
+//! lower-bound-cascade similarity index, run exact k-NN queries, and
+//! persist the envelope cache alongside the JSON store.
+//!
+//! Run with: `cargo run --release --example index_search`
+
+use mrtuner::coordinator::batcher::prepare_query;
+use mrtuner::coordinator::profiler::Profiler;
+use mrtuner::coordinator::{ConfigGrid, SystemConfig};
+use mrtuner::prelude::*;
+use mrtuner::simulator::engine::simulate;
+use mrtuner::util::rng::Rng;
+use mrtuner::workloads::workload_for;
+
+fn main() {
+    mrtuner::util::logging::init();
+    let grid = ConfigGrid::small(1);
+    let sc = SystemConfig {
+        use_runtime: false,
+        ..SystemConfig::default()
+    };
+
+    // Profile two reference applications and index the database: the
+    // envelope cache is built once per entry, on insert.
+    let p = Profiler::new(&sc, None);
+    let mut idx = IndexedDb::new();
+    for app in [AppId::WordCount, AppId::TeraSort] {
+        for entry in p.profile(app, &grid) {
+            idx.insert(entry);
+        }
+    }
+    println!("indexed {} reference entries", idx.len());
+
+    // An "unknown" raw capture: Exim under the first configuration set.
+    // `prepare_query` applies the same cap + de-noise + normalize the
+    // stored references went through.
+    let cfg = grid.configs[0];
+    let workload = workload_for(AppId::EximParse);
+    let sim = simulate(
+        workload.as_ref(),
+        &cfg,
+        &sc.cluster,
+        &sc.noise,
+        &mut Rng::new(0xA5),
+    );
+    let query = prepare_query(&sim.cpu_noisy);
+
+    // Exact nearest neighbours under the banded-DTW distance — same
+    // entries a brute-force scan would return, found with most candidates
+    // pruned by the LB_Kim -> LB_PAA -> LB_Keogh cascade.
+    let (neighbors, stats) = idx.knn(&query, 3);
+    println!("\ntop-3 nearest references (whole DB):");
+    for nb in &neighbors {
+        let e = &idx.entries()[nb.index];
+        println!(
+            "  {:12} {:24} distance {:8.3}",
+            e.app.name(),
+            e.config.label(),
+            nb.distance
+        );
+    }
+    println!("search: {stats}");
+
+    // The matching phase only compares same-config patterns; the index
+    // keeps a config bucket for exactly that.
+    let (bucket, _) = idx.knn_in_config(&query, &cfg.label(), 1);
+    let best = &idx.entries()[bucket[0].index];
+    println!(
+        "\nnearest same-config reference: {} (distance {:.3})",
+        best.app.name(),
+        bucket[0].distance
+    );
+
+    // Persistence: the envelope cache rides alongside the JSON store and
+    // is reused on load (rebuilt automatically if stale).
+    let path = std::env::temp_dir().join("mrtuner_index_quickstart.json");
+    idx.save(&path).expect("save store + envelope sidecar");
+    let restored = IndexedDb::load(&path).expect("load store + sidecar");
+    let (again, _) = restored.knn(&query, 3);
+    assert_eq!(again[0].index, neighbors[0].index);
+    assert!((again[0].distance - neighbors[0].distance).abs() < 1e-9);
+    println!(
+        "\nsaved + reloaded via {} — identical neighbours",
+        path.display()
+    );
+    std::fs::remove_file(&path).ok();
+    std::fs::remove_file(IndexedDb::envelope_path(&path)).ok();
+}

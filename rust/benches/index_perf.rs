@@ -1,0 +1,164 @@
+//! Perf bench (index layer): brute-force matcher vs the lower-bound-cascade
+//! index.
+//!
+//! Part 1 — the paper's §5 scenario (`paper_grid50`, WordCount + TeraSort
+//! references, Exim query): the indexed matching phase must return the same
+//! winning application as the brute-force matcher while paying one
+//! correlation per configuration set.
+//!
+//! Part 2 — reference-DB scaling at sizes {50, 500, 5000}: exact top-1
+//! retrieval, brute force vs cascade, reporting how many full/banded DTW
+//! evaluations the lower bounds avoided. The acceptance bar is <= 50% of
+//! candidates reaching the DTW at DB size 500; in practice the cascade
+//! prunes far more.
+//!
+//! Run with: `cargo bench --bench index_perf`
+
+#[path = "harness.rs"]
+mod harness;
+
+use harness::bench;
+use mrtuner::coordinator::matcher::Matcher;
+use mrtuner::coordinator::{ConfigGrid, SystemConfig, TuningSystem};
+use mrtuner::database::profile::ProfileEntry;
+use mrtuner::prelude::*;
+use mrtuner::signal;
+use mrtuner::util::rng::Rng;
+use mrtuner::workloads::AppId;
+
+/// Synthetic CPU-like pattern family: noisy sine, preprocessed exactly like
+/// stored profiles.
+fn wave(len: usize, seed: u64) -> Vec<f64> {
+    let mut rng = Rng::new(seed);
+    let f = 0.04 + rng.f64() * 0.12;
+    let phase = rng.f64() * 6.28;
+    signal::preprocess(
+        &(0..len)
+            .map(|i| {
+                (0.55 + 0.35 * ((i as f64) * f + phase).sin() + rng.normal_ms(0.0, 0.04))
+                    .clamp(0.0, 1.0)
+            })
+            .collect::<Vec<_>>(),
+    )
+}
+
+fn synthetic_db(n: usize) -> IndexedDb {
+    let mut db = ReferenceDb::new();
+    for i in 0..n {
+        // Unique (M, R, FS) triple for every i < 42*40*50.
+        let cfg = JobConfig::new(
+            i % 42 + 1,
+            (i / 42) % 40 + 1,
+            (i / (42 * 40) + 1) as f64,
+            100.0,
+        );
+        let len = 64 + (i * 37) % 256;
+        db.insert(ProfileEntry {
+            app: AppId::all()[i % AppId::all().len()],
+            config: cfg,
+            series: wave(len, i as u64),
+            raw_len: len,
+            completion_secs: 100.0,
+        });
+    }
+    IndexedDb::from_db(db)
+}
+
+fn paper_scenario() {
+    println!("== paper_grid50 scenario: brute-force matcher vs indexed kNN ==");
+    let grid = ConfigGrid::paper_grid50(1);
+    let sc = SystemConfig {
+        use_runtime: false,
+        ..SystemConfig::default()
+    };
+    let mut sys = TuningSystem::new(sc);
+    sys.profile_app(AppId::WordCount, &grid);
+    sys.profile_app(AppId::TeraSort, &grid);
+    let m = Matcher::new(&sys.config, None);
+
+    let brute = bench("brute-force match_app   (50 cfgs x 2 refs)", 0, 3, || {
+        m.match_app(AppId::EximParse, &grid, &sys.db)
+    });
+    let brute_outcome = m.match_app(AppId::EximParse, &grid, &sys.db);
+
+    let idx = IndexedDb::from_db(std::mem::take(&mut sys.db));
+    let indexed = bench("indexed  match_app_indexed (rerank=1)     ", 0, 3, || {
+        m.match_app_indexed(AppId::EximParse, &grid, &idx, 1)
+    });
+    let (indexed_outcome, stats) = m.match_app_indexed(AppId::EximParse, &grid, &idx, 1);
+
+    let bw = brute_outcome.winner.map(|a| a.name()).unwrap_or("none");
+    let iw = indexed_outcome.winner.map(|a| a.name()).unwrap_or("none");
+    println!(
+        "    winner: brute={bw} indexed={iw} -> {}",
+        if bw == iw { "AGREE" } else { "DISAGREE" }
+    );
+    println!(
+        "    correlations evaluated: brute={} indexed={}",
+        brute_outcome.cells.len(),
+        indexed_outcome.cells.len()
+    );
+    println!("    pruning: {stats}");
+    println!(
+        "    matcher speedup: {:.2}x (profiling dominates both; see part 2 for search-only numbers)",
+        brute.mean_s / indexed.mean_s
+    );
+}
+
+fn scaling() {
+    println!("\n== reference-DB scaling: exact top-1, brute vs cascade ==");
+    for &n in &[50usize, 500, 5000] {
+        let idx = synthetic_db(n);
+        let queries: Vec<Vec<f64>> = (0..5)
+            .map(|qi| wave(96 + qi * 40, (qi * 7 + 3) as u64))
+            .collect();
+
+        let samples = if n >= 5000 { 3 } else { 10 };
+        let b = bench(&format!("brute-force top-1   DB={n}"), 1, samples, || {
+            queries.iter().map(|q| idx.brute_force(q, 1)).collect::<Vec<_>>()
+        });
+        let f = bench(&format!("indexed     top-1   DB={n}"), 1, samples, || {
+            queries.iter().map(|q| idx.knn(q, 1)).collect::<Vec<_>>()
+        });
+
+        let mut total = SearchStats::default();
+        for q in &queries {
+            let (fast, stats) = idx.knn(q, 1);
+            let slow = idx.brute_force(q, 1);
+            assert_eq!(fast[0].index, slow[0].index, "index/brute winner mismatch");
+            assert_eq!(
+                fast[0].distance.to_bits(),
+                slow[0].distance.to_bits(),
+                "index/brute distance mismatch"
+            );
+            total.merge(&stats);
+        }
+        let started = total.dtw_fraction() * 100.0;
+        let completed = if total.candidates == 0 {
+            0.0
+        } else {
+            total.dtw_evals as f64 / total.candidates as f64 * 100.0
+        };
+        println!("    exact: indexed top-1 == brute-force top-1 on all {} queries", queries.len());
+        println!("    pruning: {total}");
+        println!(
+            "    full DTW completed on {completed:.1}% of candidates (started on {started:.1}%){} — search speedup {:.2}x",
+            if n == 500 {
+                if completed <= 50.0 {
+                    " — target <= 50% at DB=500: PASS"
+                } else {
+                    " — target <= 50% at DB=500: FAIL"
+                }
+            } else {
+                ""
+            },
+            b.mean_s / f.mean_s
+        );
+    }
+}
+
+fn main() {
+    mrtuner::util::logging::init();
+    paper_scenario();
+    scaling();
+}

@@ -46,7 +46,7 @@ fn main() {
     let raw = profiler.profile_one(AppId::EximParse, &cfg);
     let state = ServerState {
         db: {
-            let mut db = ReferenceDb::new();
+            let mut db = IndexedDb::new();
             for e in sys.db.entries() {
                 db.insert(e.clone());
             }

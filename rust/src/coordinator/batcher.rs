@@ -159,15 +159,24 @@ pub fn similarities_auto(
     similarities_fallback(raw_query, references)
 }
 
-/// Pure-Rust fallback with identical semantics (used when no artifacts are
-/// available, and by the parity tests).
-pub fn similarities_fallback(raw_query: &[f64], references: &[Vec<f64>]) -> Vec<f64> {
+/// Matching-pipeline query preparation: cap a raw capture at 512 samples
+/// (linear resample) and de-noise + normalize it — the exact
+/// transformation stored references went through. Shared by the
+/// brute-force fallback, the index-backed matcher path and the serve
+/// loop's `knn` command so every route compares like with like.
+pub fn prepare_query(raw_query: &[f64]) -> Vec<f64> {
     let capped = if raw_query.len() > 512 {
         crate::signal::resample::linear(raw_query, 512)
     } else {
         raw_query.to_vec()
     };
-    let q = crate::signal::preprocess(&capped);
+    crate::signal::preprocess(&capped)
+}
+
+/// Pure-Rust fallback with identical semantics (used when no artifacts are
+/// available, and by the parity tests).
+pub fn similarities_fallback(raw_query: &[f64], references: &[Vec<f64>]) -> Vec<f64> {
+    let q = prepare_query(raw_query);
     references
         .iter()
         .map(|r| crate::dtw::corr::similarity_percent_banded(&q, r))

@@ -4,10 +4,11 @@
 //! correlation clears 90%, and declare the app with the most wins the most
 //! similar application.
 
-use super::batcher::similarities_auto;
+use super::batcher::{prepare_query, similarities_auto};
 use super::{ConfigGrid, SystemConfig};
 use crate::database::store::ReferenceDb;
-use crate::dtw::corr::MATCH_THRESHOLD;
+use crate::dtw::corr::{similarity_percent_banded, MATCH_THRESHOLD};
+use crate::index::{IndexedDb, SearchStats};
 use crate::runtime::RuntimeHandle;
 use crate::simulator::job::JobConfig;
 use crate::util::pool::par_map;
@@ -66,6 +67,22 @@ impl Matcher {
         similarities_auto(self.runtime.as_ref(), raw_query, refs)
     }
 
+    /// Profile the unknown app under one configuration set: the raw (noisy)
+    /// query capture. One seed derivation for every matching path — the
+    /// brute-force, indexed and table routes must query identical series or
+    /// their equivalence guarantees silently rot.
+    fn profile_query(&self, app: AppId, cfg: &JobConfig) -> crate::simulator::engine::SimResult {
+        let workload = crate::workloads::workload_for(app);
+        let mut rng = crate::util::rng::Rng::new(self.run_seed(app, cfg));
+        crate::simulator::engine::simulate(
+            workload.as_ref(),
+            cfg,
+            &self.config.cluster,
+            &self.config.noise,
+            &mut rng,
+        )
+    }
+
     /// Full matching phase for `app` over `grid` against `db`.
     pub fn match_app(&self, app: AppId, grid: &ConfigGrid, db: &ReferenceDb) -> MatchOutcome {
         // Profile the unknown app and compare, one config set at a time.
@@ -73,17 +90,7 @@ impl Matcher {
             par_map(&grid.configs, self.config.workers, |cfg| {
                 // Capture the raw (noisy) series; preprocessing happens in
                 // the fused match path.
-                let workload = crate::workloads::workload_for(app);
-                let mut rng =
-                    crate::util::rng::Rng::new(self.run_seed(app, cfg));
-                let sim = crate::simulator::engine::simulate(
-                    workload.as_ref(),
-                    cfg,
-                    &self.config.cluster,
-                    &self.config.noise,
-                    &mut rng,
-                );
-                let raw = sim.cpu_noisy;
+                let raw = self.profile_query(app, cfg).cpu_noisy;
 
                 let refs = db.by_config(&cfg.label());
                 let ref_series: Vec<Vec<f64>> =
@@ -120,17 +127,7 @@ impl Matcher {
             votes.push(v);
         }
 
-        let mut tally: BTreeMap<&'static str, usize> = BTreeMap::new();
-        for v in &votes {
-            if let Some(app) = v.best_app {
-                *tally.entry(app.name()).or_insert(0) += 1;
-            }
-        }
-        let winner = tally
-            .iter()
-            .max_by_key(|(_, &n)| n)
-            .map(|(name, _)| AppId::from_name(name).expect("tally key is valid"));
-
+        let (tally, winner) = tally_votes(&votes);
         MatchOutcome {
             query_app: app,
             cells,
@@ -138,6 +135,85 @@ impl Matcher {
             winner,
             tally,
         }
+    }
+
+    /// Index-backed matching phase: instead of evaluating the paper's
+    /// correlation similarity against *every* same-config reference, each
+    /// per-config query retrieves the `rerank` nearest references under the
+    /// banded-DTW distance through the lower-bound cascade
+    /// ([`IndexedDb::knn_in_config`] — exact, brute-force-identical
+    /// neighbours) and only those get the full correlation treatment.
+    ///
+    /// With `rerank >= <bucket size>` this computes exactly what
+    /// [`Matcher::match_app`] computes *on the pure-Rust path* (every
+    /// candidate is retrieved and re-ranked with the same f64 pipeline;
+    /// `match_app` with a PJRT runtime attached rounds through f32 and can
+    /// differ in the last decimals). Smaller values trade the guarantee
+    /// for sublinear work — in practice the DTW-nearest reference and the
+    /// correlation winner coincide (asserted on the paper scenarios in
+    /// tests and `benches/index_perf.rs`). `MatchOutcome::cells` contains
+    /// only the comparisons actually performed. Each finalist pays one
+    /// extra banded DP with traceback for the correlation (the cascade's
+    /// distance-only pass keeps no path, on purpose — finalists are few,
+    /// pruned candidates many).
+    pub fn match_app_indexed(
+        &self,
+        app: AppId,
+        grid: &ConfigGrid,
+        idx: &IndexedDb,
+        rerank: usize,
+    ) -> (MatchOutcome, SearchStats) {
+        let rerank = rerank.max(1);
+        let per_config: Vec<(Vec<SimilarityCell>, ConfigVote, SearchStats)> =
+            par_map(&grid.configs, self.config.workers, |cfg| {
+                let q = prepare_query(&self.profile_query(app, cfg).cpu_noisy);
+                let (neighbors, stats) = idx.knn_in_config(&q, &cfg.label(), rerank);
+
+                let entries = idx.entries();
+                let mut cells = Vec::with_capacity(neighbors.len());
+                let mut best: Option<(AppId, f64)> = None;
+                for nb in &neighbors {
+                    let e = &entries[nb.index];
+                    let s = similarity_percent_banded(&q, &e.series);
+                    cells.push(SimilarityCell {
+                        config: *cfg,
+                        reference_app: e.app,
+                        reference_config: e.config,
+                        similarity: s,
+                    });
+                    if best.map_or(true, |(_, bs)| s > bs) {
+                        best = Some((e.app, s));
+                    }
+                }
+                let vote = ConfigVote {
+                    config: *cfg,
+                    best_app: best
+                        .filter(|(_, s)| *s >= MATCH_THRESHOLD)
+                        .map(|(a, _)| a),
+                    best_similarity: best.map(|(_, s)| s).unwrap_or(0.0),
+                };
+                (cells, vote, stats)
+            });
+
+        let mut cells = Vec::new();
+        let mut votes = Vec::new();
+        let mut stats = SearchStats::default();
+        for (c, v, s) in per_config {
+            cells.extend(c);
+            votes.push(v);
+            stats.merge(&s);
+        }
+        let (tally, winner) = tally_votes(&votes);
+        (
+            MatchOutcome {
+                query_app: app,
+                cells,
+                votes,
+                winner,
+                tally,
+            },
+            stats,
+        )
     }
 
     /// Cross-config similarity table (Table 1 reproduction): the query app
@@ -157,16 +233,7 @@ impl Matcher {
             .collect();
         let per_config: Vec<Vec<SimilarityCell>> =
             par_map(&grid.configs, self.config.workers, |cfg| {
-                let workload = crate::workloads::workload_for(app);
-                let mut rng =
-                    crate::util::rng::Rng::new(self.run_seed(app, cfg));
-                let sim = crate::simulator::engine::simulate(
-                    workload.as_ref(),
-                    cfg,
-                    &self.config.cluster,
-                    &self.config.noise,
-                    &mut rng,
-                );
+                let sim = self.profile_query(app, cfg);
                 let ref_series: Vec<Vec<f64>> =
                     all_refs.iter().map(|(_, _, s)| s.clone()).collect();
                 let sims = self.similarities(&sim.cpu_noisy, &ref_series);
@@ -193,6 +260,23 @@ impl Matcher {
         }
         h
     }
+}
+
+/// Per-config votes → (votes per app, app with the most accepted CORRs).
+/// Shared by the brute-force and index-backed paths so their aggregation
+/// (including tie behaviour) can never diverge.
+fn tally_votes(votes: &[ConfigVote]) -> (BTreeMap<&'static str, usize>, Option<AppId>) {
+    let mut tally: BTreeMap<&'static str, usize> = BTreeMap::new();
+    for v in votes {
+        if let Some(app) = v.best_app {
+            *tally.entry(app.name()).or_insert(0) += 1;
+        }
+    }
+    let winner = tally
+        .iter()
+        .max_by_key(|(_, &n)| n)
+        .map(|(name, _)| AppId::from_name(name).expect("tally key is valid"));
+    (tally, winner)
 }
 
 #[cfg(test)]
@@ -257,6 +341,58 @@ mod tests {
         let outcome = m.match_app(AppId::Grep, &grid, &db);
         assert_eq!(outcome.winner, None);
         assert!(outcome.cells.is_empty());
+    }
+
+    #[test]
+    fn indexed_match_with_full_rerank_equals_brute_force() {
+        // rerank >= bucket size retrieves every candidate, so the indexed
+        // path must reproduce the brute-force outcome vote for vote.
+        let grid = ConfigGrid::small(5);
+        let db = build_db(&grid);
+        let m = Matcher::new(&sysconfig(), None);
+        let brute = m.match_app(AppId::EximParse, &grid, &db);
+        let idx = IndexedDb::from_db(db);
+        let (fast, stats) = m.match_app_indexed(AppId::EximParse, &grid, &idx, usize::MAX);
+        assert_eq!(fast.winner, brute.winner);
+        assert_eq!(fast.tally, brute.tally);
+        assert_eq!(fast.votes.len(), brute.votes.len());
+        for (a, b) in fast.votes.iter().zip(&brute.votes) {
+            assert_eq!(a.best_app, b.best_app, "config {}", a.config.label());
+            assert!(
+                (a.best_similarity - b.best_similarity).abs() < 1e-9,
+                "config {}: {} vs {}",
+                a.config.label(),
+                a.best_similarity,
+                b.best_similarity
+            );
+        }
+        // 2 reference apps per config: every candidate was examined.
+        assert_eq!(stats.candidates, 2 * grid.len() as u64);
+    }
+
+    #[test]
+    fn indexed_match_top1_self_match_wins() {
+        let grid = ConfigGrid::small(1);
+        let db = build_db(&grid);
+        let m = Matcher::new(&sysconfig(), None);
+        let idx = IndexedDb::from_db(db);
+        let (outcome, stats) = m.match_app_indexed(AppId::WordCount, &grid, &idx, 1);
+        assert_eq!(outcome.winner, Some(AppId::WordCount));
+        // Top-1 retrieval computes the correlation for one reference per
+        // config only.
+        assert_eq!(outcome.cells.len(), grid.len());
+        assert_eq!(stats.candidates, 2 * grid.len() as u64);
+    }
+
+    #[test]
+    fn indexed_match_empty_db_yields_no_winner() {
+        let grid = ConfigGrid::small(3);
+        let idx = IndexedDb::from_db(ReferenceDb::new());
+        let m = Matcher::new(&sysconfig(), None);
+        let (outcome, stats) = m.match_app_indexed(AppId::Grep, &grid, &idx, 1);
+        assert_eq!(outcome.winner, None);
+        assert!(outcome.cells.is_empty());
+        assert_eq!(stats.candidates, 0);
     }
 
     #[test]

@@ -1,6 +1,7 @@
 //! Service metrics: counters and latency statistics for the serve loop and
 //! the perf benches.
 
+use crate::index::SearchStats;
 use crate::util::stats::Welford;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
@@ -13,6 +14,15 @@ pub struct Metrics {
     pub batches: AtomicU64,
     pub requests: AtomicU64,
     pub errors: AtomicU64,
+    /// Index-search counters (see [`SearchStats`]): candidates examined and
+    /// where the cascade culled them. `index_dtw_evals / index_candidates`
+    /// is the live "DTW evaluations not avoided" ratio.
+    pub index_candidates: AtomicU64,
+    pub index_pruned_lb_kim: AtomicU64,
+    pub index_pruned_lb_paa: AtomicU64,
+    pub index_pruned_lb_keogh: AtomicU64,
+    pub index_abandoned: AtomicU64,
+    pub index_dtw_evals: AtomicU64,
     latency: Mutex<Welford>,
 }
 
@@ -35,6 +45,31 @@ impl Metrics {
 
     pub fn inc_errors(&self) {
         self.errors.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Fold one index search's pruning counters into the registry.
+    pub fn record_search(&self, s: &SearchStats) {
+        self.index_candidates.fetch_add(s.candidates, Ordering::Relaxed);
+        self.index_pruned_lb_kim
+            .fetch_add(s.pruned_lb_kim, Ordering::Relaxed);
+        self.index_pruned_lb_paa
+            .fetch_add(s.pruned_lb_paa, Ordering::Relaxed);
+        self.index_pruned_lb_keogh
+            .fetch_add(s.pruned_lb_keogh, Ordering::Relaxed);
+        self.index_abandoned.fetch_add(s.abandoned, Ordering::Relaxed);
+        self.index_dtw_evals.fetch_add(s.dtw_evals, Ordering::Relaxed);
+    }
+
+    /// Snapshot of the accumulated index counters.
+    pub fn search_stats(&self) -> SearchStats {
+        SearchStats {
+            candidates: self.index_candidates.load(Ordering::Relaxed),
+            pruned_lb_kim: self.index_pruned_lb_kim.load(Ordering::Relaxed),
+            pruned_lb_paa: self.index_pruned_lb_paa.load(Ordering::Relaxed),
+            pruned_lb_keogh: self.index_pruned_lb_keogh.load(Ordering::Relaxed),
+            abandoned: self.index_abandoned.load(Ordering::Relaxed),
+            dtw_evals: self.index_dtw_evals.load(Ordering::Relaxed),
+        }
     }
 
     /// Record a request latency.
@@ -60,7 +95,7 @@ impl Metrics {
     pub fn report(&self) -> String {
         let (n, mean, std, min, max) = self.latency_summary();
         format!(
-            "requests={} comparisons={} batches={} errors={} latency: n={} mean={:.1}ms sd={:.1}ms min={:.1}ms max={:.1}ms",
+            "requests={} comparisons={} batches={} errors={} latency: n={} mean={:.1}ms sd={:.1}ms min={:.1}ms max={:.1}ms index: {}",
             self.requests.load(Ordering::Relaxed),
             self.comparisons.load(Ordering::Relaxed),
             self.batches.load(Ordering::Relaxed),
@@ -70,6 +105,7 @@ impl Metrics {
             std * 1e3,
             min * 1e3,
             max * 1e3,
+            self.search_stats(),
         )
     }
 }
@@ -89,6 +125,26 @@ mod tests {
         m.inc_errors();
         assert_eq!(m.comparisons.load(Ordering::Relaxed), 8);
         assert!(m.report().contains("comparisons=8"));
+    }
+
+    #[test]
+    fn search_counters_accumulate() {
+        let m = Metrics::new();
+        let s = SearchStats {
+            candidates: 10,
+            pruned_lb_kim: 4,
+            pruned_lb_paa: 1,
+            pruned_lb_keogh: 2,
+            abandoned: 1,
+            dtw_evals: 2,
+        };
+        m.record_search(&s);
+        m.record_search(&s);
+        let total = m.search_stats();
+        assert_eq!(total.candidates, 20);
+        assert_eq!(total.dtw_evals, 4);
+        assert!((total.dtw_fraction() - 0.3).abs() < 1e-12);
+        assert!(m.report().contains("candidates=20"), "{}", m.report());
     }
 
     #[test]

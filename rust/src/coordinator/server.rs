@@ -6,16 +6,24 @@
 //!   {"cmd": "apps"}
 //!   {"cmd": "match", "series": [..], "config": {"mappers": M, "reducers": R,
 //!    "split_mb": FS, "input_mb": I}}
+//!   {"cmd": "knn", "series": [..], "k": K[, "config": {..}]}
 //!
 //! The `match` request carries a *raw* captured CPU series (what a real
 //! deployment's SysStat agent would send); the server preprocesses it,
 //! compares against every stored reference under the same configuration
 //! set, and answers with the per-app similarities and the best match.
+//!
+//! The `knn` request runs the lower-bound-cascade index instead: the k
+//! nearest references under the banded-DTW distance — over the whole
+//! database, or one configuration set when `config` is given — plus each
+//! neighbour's correlation similarity and the pruning counters for this
+//! search. The state holds an [`IndexedDb`], so concurrent connections
+//! share one immutable envelope cache.
 
-use super::batcher::similarities_auto;
+use super::batcher::{prepare_query, similarities_auto};
 use super::metrics::Metrics;
-use crate::database::store::ReferenceDb;
 use crate::dtw::corr::MATCH_THRESHOLD;
+use crate::index::IndexedDb;
 use crate::runtime::RuntimeHandle;
 use crate::simulator::job::JobConfig;
 use crate::util::json::Json;
@@ -28,7 +36,7 @@ use std::sync::Arc;
 
 /// Shared server state.
 pub struct ServerState {
-    pub db: ReferenceDb,
+    pub db: IndexedDb,
     pub runtime: Option<RuntimeHandle>,
     pub metrics: Metrics,
 }
@@ -143,33 +151,96 @@ pub fn handle_request(line: &str, state: &ServerState) -> Result<Json> {
             ),
         ])),
         Some("match") => handle_match(&req, state),
+        Some("knn") => handle_knn(&req, state),
         _ => Err(anyhow!("unknown cmd")),
     }
 }
 
-fn handle_match(req: &Json, state: &ServerState) -> Result<Json> {
+/// Parse the optional/required pieces shared by `match` and `knn`.
+fn parse_series(req: &Json) -> Result<Vec<f64>> {
     let series = req
         .get("series")
         .and_then(Json::as_arr)
-        .ok_or_else(|| anyhow!("match: missing series"))?
+        .ok_or_else(|| anyhow!("missing series"))?
         .iter()
         .filter_map(Json::as_f64)
         .collect::<Vec<f64>>();
     if series.len() < 4 {
-        return Err(anyhow!("match: series too short"));
+        return Err(anyhow!("series too short"));
     }
-    let cfg = req.get("config").ok_or_else(|| anyhow!("match: missing config"))?;
+    Ok(series)
+}
+
+fn parse_config(v: &Json) -> Result<JobConfig> {
     let num = |k: &str| -> Result<f64> {
-        cfg.get(k)
+        v.get(k)
             .and_then(Json::as_f64)
-            .ok_or_else(|| anyhow!("match: config missing {k}"))
+            .ok_or_else(|| anyhow!("config missing {k}"))
     };
-    let config = JobConfig::new(
+    Ok(JobConfig::new(
         num("mappers")? as usize,
         num("reducers")? as usize,
         num("split_mb")?,
         num("input_mb")?,
-    );
+    ))
+}
+
+/// Index-backed k-NN: exact nearest references under the banded-DTW
+/// distance via the lower-bound cascade.
+fn handle_knn(req: &Json, state: &ServerState) -> Result<Json> {
+    let series = parse_series(req)?;
+    let k = req
+        .get("k")
+        .and_then(Json::as_usize)
+        .unwrap_or(1)
+        .clamp(1, 100);
+    let q = prepare_query(&series);
+    let (neighbors, stats) = match req.get("config") {
+        Some(cfg) => state.db.knn_in_config(&q, &parse_config(cfg)?.label(), k),
+        None => state.db.knn(&q, k),
+    };
+    state.metrics.record_search(&stats);
+    state.metrics.inc_comparisons(stats.dtw_evals);
+
+    let entries = state.db.entries();
+    let results = neighbors
+        .iter()
+        .map(|nb| {
+            let e = &entries[nb.index];
+            Json::obj(vec![
+                ("app", Json::Str(e.app.name().to_string())),
+                ("config", Json::Str(e.config_key())),
+                ("distance", Json::Num(nb.distance)),
+                (
+                    "similarity",
+                    Json::Num(crate::dtw::corr::similarity_percent_banded(&q, &e.series)),
+                ),
+            ])
+        })
+        .collect();
+    Ok(Json::obj(vec![
+        ("ok", Json::Bool(true)),
+        ("neighbors", Json::arr(results)),
+        (
+            "stats",
+            Json::obj(vec![
+                ("candidates", Json::Num(stats.candidates as f64)),
+                ("pruned_lb_kim", Json::Num(stats.pruned_lb_kim as f64)),
+                ("pruned_lb_paa", Json::Num(stats.pruned_lb_paa as f64)),
+                ("pruned_lb_keogh", Json::Num(stats.pruned_lb_keogh as f64)),
+                ("abandoned", Json::Num(stats.abandoned as f64)),
+                ("dtw_evals", Json::Num(stats.dtw_evals as f64)),
+            ]),
+        ),
+    ]))
+}
+
+fn handle_match(req: &Json, state: &ServerState) -> Result<Json> {
+    let series = parse_series(req)?;
+    let config = parse_config(
+        req.get("config")
+            .ok_or_else(|| anyhow!("match: missing config"))?,
+    )?;
 
     let refs = state.db.by_config(&config.label());
     let ref_series: Vec<Vec<f64>> = refs.iter().map(|e| e.series.clone()).collect();
@@ -207,7 +278,7 @@ mod tests {
     use crate::workloads::AppId;
 
     fn state_with_db() -> ServerState {
-        let mut db = ReferenceDb::new();
+        let mut db = IndexedDb::new();
         let series: Vec<f64> = (0..64).map(|i| 0.5 + 0.5 * ((i as f64) * 0.2).sin()).collect();
         db.insert(ProfileEntry {
             app: AppId::WordCount,
@@ -215,6 +286,16 @@ mod tests {
             series: crate::signal::preprocess(&series),
             raw_len: 64,
             completion_secs: 100.0,
+        });
+        let shifted: Vec<f64> = (0..64)
+            .map(|i| 0.5 + 0.5 * (((i + 40) as f64) * 0.2).sin())
+            .collect();
+        db.insert(ProfileEntry {
+            app: AppId::TeraSort,
+            config: JobConfig::new(4, 2, 10.0, 20.0),
+            series: crate::signal::preprocess(&shifted),
+            raw_len: 64,
+            completion_secs: 80.0,
         });
         ServerState {
             db,
@@ -260,6 +341,77 @@ mod tests {
         assert!(handle_request("not json", &state).is_err());
         assert!(handle_request(r#"{"cmd":"nope"}"#, &state).is_err());
         assert!(handle_request(r#"{"cmd":"match"}"#, &state).is_err());
+        assert!(handle_request(r#"{"cmd":"knn"}"#, &state).is_err());
+        assert!(handle_request(r#"{"cmd":"knn","series":[1,2]}"#, &state).is_err());
+    }
+
+    #[test]
+    fn knn_request_returns_neighbors_and_stats() {
+        let state = state_with_db();
+        let series: Vec<f64> = (0..64).map(|i| 0.5 + 0.5 * ((i as f64) * 0.2).sin()).collect();
+        let req = Json::obj(vec![
+            ("cmd", Json::Str("knn".into())),
+            ("series", Json::nums(&series)),
+            ("k", Json::Num(2.0)),
+        ]);
+        let resp = handle_request(&req.to_string(), &state).unwrap();
+        assert_eq!(resp.get("ok"), Some(&Json::Bool(true)));
+        let neighbors = resp.get("neighbors").and_then(Json::as_arr).unwrap();
+        assert_eq!(neighbors.len(), 2);
+        // The untouched sine is the query itself: distance 0, first.
+        assert_eq!(
+            neighbors[0].get("app").and_then(Json::as_str),
+            Some("wordcount")
+        );
+        assert_eq!(neighbors[0].get("distance").and_then(Json::as_f64), Some(0.0));
+        let stats = resp.get("stats").unwrap();
+        assert_eq!(stats.get("candidates").and_then(Json::as_f64), Some(2.0));
+        // The search was folded into the shared metrics registry.
+        assert_eq!(state.metrics.search_stats().candidates, 2);
+
+        // Config-scoped search sees only that bucket.
+        let scoped = Json::obj(vec![
+            ("cmd", Json::Str("knn".into())),
+            ("series", Json::nums(&series)),
+            ("k", Json::Num(5.0)),
+            (
+                "config",
+                Json::obj(vec![
+                    ("mappers", Json::Num(4.0)),
+                    ("reducers", Json::Num(2.0)),
+                    ("split_mb", Json::Num(10.0)),
+                    ("input_mb", Json::Num(20.0)),
+                ]),
+            ),
+        ]);
+        let resp = handle_request(&scoped.to_string(), &state).unwrap();
+        let neighbors = resp.get("neighbors").and_then(Json::as_arr).unwrap();
+        assert_eq!(neighbors.len(), 2, "both entries share the config set");
+    }
+
+    #[test]
+    fn concurrent_knn_requests_share_the_index() {
+        let state = std::sync::Arc::new(state_with_db());
+        let series: Vec<f64> = (0..64).map(|i| 0.5 + 0.5 * ((i as f64) * 0.2).sin()).collect();
+        let req = Json::obj(vec![
+            ("cmd", Json::Str("knn".into())),
+            ("series", Json::nums(&series)),
+            ("k", Json::Num(1.0)),
+        ])
+        .to_string();
+        std::thread::scope(|s| {
+            for _ in 0..8 {
+                let state = std::sync::Arc::clone(&state);
+                let req = req.clone();
+                s.spawn(move || {
+                    for _ in 0..20 {
+                        let resp = handle_request(&req, &state).unwrap();
+                        assert_eq!(resp.get("ok"), Some(&Json::Bool(true)));
+                    }
+                });
+            }
+        });
+        assert_eq!(state.metrics.search_stats().candidates, 8 * 20 * 2);
     }
 
     #[test]

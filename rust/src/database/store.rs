@@ -21,7 +21,7 @@ pub struct OptimalConfig {
 #[derive(Debug, Default)]
 pub struct ReferenceDb {
     entries: Vec<ProfileEntry>,
-    optimal: BTreeMap<&'static str, OptimalConfig>,
+    optimal: BTreeMap<AppId, OptimalConfig>,
 }
 
 impl ReferenceDb {
@@ -30,11 +30,20 @@ impl ReferenceDb {
     }
 
     /// Add a profiled run (replacing any previous entry for the same
-    /// app + config set).
-    pub fn insert(&mut self, entry: ProfileEntry) {
-        self.entries
-            .retain(|e| !(e.app == entry.app && e.config_key() == entry.config_key()));
+    /// app + config set). Returns the position the replaced entry occupied,
+    /// if any — every entry at a later position shifted down by one and the
+    /// new entry went to the back, which is exactly what sidecar caches
+    /// (e.g. `index::IndexedDb`) need to stay in sync.
+    pub fn insert(&mut self, entry: ProfileEntry) -> Option<usize> {
+        let replaced = self
+            .entries
+            .iter()
+            .position(|e| e.app == entry.app && e.config_key() == entry.config_key());
+        if let Some(p) = replaced {
+            self.entries.remove(p);
+        }
         self.entries.push(entry);
+        replaced
     }
 
     pub fn len(&self) -> usize {
@@ -69,20 +78,20 @@ impl ReferenceDb {
 
     /// Record the tuner's optimal configuration for an application.
     pub fn set_optimal(&mut self, app: AppId, best: OptimalConfig) {
-        self.optimal.insert(app.name(), best);
+        self.optimal.insert(app, best);
     }
 
     pub fn optimal(&self, app: AppId) -> Option<&OptimalConfig> {
-        self.optimal.get(app.name())
+        self.optimal.get(&app)
     }
 
     pub fn to_json(&self) -> Json {
         let optimal = self
             .optimal
             .iter()
-            .map(|(name, o)| {
+            .map(|(app, o)| {
                 (
-                    name.to_string(),
+                    app.name().to_string(),
                     Json::obj(vec![
                         ("mappers", Json::Num(o.config.mappers as f64)),
                         ("reducers", Json::Num(o.config.reducers as f64)),
@@ -172,11 +181,16 @@ mod tests {
     #[test]
     fn insert_replaces_same_key() {
         let mut db = ReferenceDb::new();
-        db.insert(entry(AppId::WordCount, 4));
-        db.insert(entry(AppId::WordCount, 4));
+        assert_eq!(db.insert(entry(AppId::WordCount, 4)), None);
+        assert_eq!(db.insert(entry(AppId::WordCount, 4)), Some(0));
         assert_eq!(db.len(), 1);
-        db.insert(entry(AppId::WordCount, 8));
+        assert_eq!(db.insert(entry(AppId::WordCount, 8)), None);
         assert_eq!(db.len(), 2);
+        // Replacing the first entry reports its slot; the survivor shifts
+        // down and the replacement goes to the back.
+        assert_eq!(db.insert(entry(AppId::WordCount, 4)), Some(0));
+        assert_eq!(db.entries()[0].config.mappers, 8);
+        assert_eq!(db.entries()[1].config.mappers, 4);
     }
 
     #[test]

@@ -6,26 +6,19 @@
 //! here, whose misalignment is bounded by a few map-wave lengths.
 
 use super::full::{backtrack, DtwResult};
-use super::{local_cost, CHOICE_DIAG, CHOICE_LEFT, CHOICE_UP};
+use super::{band_edges, band_slope, local_cost, CHOICE_DIAG, CHOICE_LEFT, CHOICE_UP};
 
 /// Banded DTW with Sakoe–Chiba radius `r` (in samples, on the `y` axis after
 /// slope correction). `r >= max(n,m)` degenerates to full DTW.
 pub fn dtw_banded(x: &[f64], y: &[f64], r: usize) -> DtwResult {
     let (n, m) = (x.len(), y.len());
     assert!(n > 0 && m > 0, "dtw_banded: empty series");
-    let slope = (m.max(2) - 1) as f64 / (n.max(2) - 1) as f64;
+    let slope = band_slope(n, m);
     let inf = f64::INFINITY;
 
     // Row j-ranges; forced to overlap between consecutive rows and to
     // include the corners so a connected path always exists.
-    let bounds: Vec<(usize, usize)> = (0..n)
-        .map(|i| {
-            let c = i as f64 * slope;
-            let lo = (c - r as f64).floor().max(0.0) as usize;
-            let hi = ((c + r as f64).ceil() as usize).min(m - 1);
-            (lo, hi)
-        })
-        .collect();
+    let bounds: Vec<(usize, usize)> = (0..n).map(|i| band_edges(i, slope, r, m)).collect();
 
     let mut choices = vec![CHOICE_DIAG; n * m];
     let mut prev = vec![inf; m];
@@ -72,6 +65,57 @@ pub fn dtw_banded(x: &[f64], y: &[f64], r: usize) -> DtwResult {
         normalized: distance / (n + m) as f64,
         path,
     }
+}
+
+/// Distance-only banded DTW with **early abandoning**: returns `None` as
+/// soon as every cell of some row exceeds `cutoff` (any warping path must
+/// cross every row inside the band, so no completion can come in below the
+/// row minimum). When it completes, the result is the exact
+/// [`dtw_banded`] distance — same band, same recurrence, same operation
+/// order, hence bit-identical — which is what lets the similarity index
+/// (`crate::index`) guarantee brute-force-identical k-NN results.
+pub fn dtw_banded_distance_cutoff(x: &[f64], y: &[f64], r: usize, cutoff: f64) -> Option<f64> {
+    let (n, m) = (x.len(), y.len());
+    assert!(n > 0 && m > 0, "dtw_banded_distance_cutoff: empty series");
+    let slope = band_slope(n, m);
+    let inf = f64::INFINITY;
+    let mut prev = vec![inf; m];
+    let mut cur = vec![inf; m];
+
+    let (lo0, hi0) = band_edges(0, slope, r, m);
+    debug_assert_eq!(lo0, 0);
+    cur[0] = local_cost(x[0], y[0]);
+    let mut row_min = cur[0];
+    for j in lo0.max(1)..=hi0 {
+        cur[j] = cur[j - 1] + local_cost(x[0], y[j]);
+        row_min = row_min.min(cur[j]);
+    }
+    if row_min > cutoff {
+        return None;
+    }
+    std::mem::swap(&mut prev, &mut cur);
+
+    for i in 1..n {
+        let (lo, hi) = band_edges(i, slope, r, m);
+        cur.iter_mut().for_each(|v| *v = inf);
+        let mut row_min = inf;
+        for j in lo..=hi {
+            let d = local_cost(x[i], y[j]);
+            let diag = if j > 0 { prev[j - 1] } else { inf };
+            let up = prev[j];
+            let left = if j > lo { cur[j - 1] } else { inf };
+            // Same value selection as dtw_banded (vertical group then left).
+            let vg = if diag <= up { diag } else { up };
+            let best = if left < vg { left } else { vg };
+            cur[j] = best + d;
+            row_min = row_min.min(cur[j]);
+        }
+        if row_min > cutoff {
+            return None;
+        }
+        std::mem::swap(&mut prev, &mut cur);
+    }
+    Some(prev[m - 1])
 }
 
 #[cfg(test)]
@@ -138,5 +182,38 @@ mod tests {
     fn identical_series_zero_even_tight_band() {
         let x: Vec<f64> = (0..50).map(|i| (i as f64 * 0.17).cos()).collect();
         assert_eq!(dtw_banded(&x, &x, 1).distance, 0.0);
+    }
+
+    #[test]
+    fn cutoff_infinite_is_bit_identical_to_banded() {
+        let mut g = Pcg32::new(12, 3);
+        for _ in 0..25 {
+            let lx = 4 + g.below(80) as usize;
+            let x = rand_series(&mut g, lx);
+            let ly = 4 + g.below(80) as usize;
+            let y = rand_series(&mut g, ly);
+            let r = crate::dtw::band_radius(x.len(), y.len());
+            let exact = dtw_banded(&x, &y, r).distance;
+            let ea = dtw_banded_distance_cutoff(&x, &y, r, f64::INFINITY)
+                .expect("infinite cutoff never abandons");
+            assert_eq!(exact.to_bits(), ea.to_bits(), "exact {exact} vs ea {ea}");
+        }
+    }
+
+    #[test]
+    fn cutoff_abandons_hopeless_pairs_and_keeps_close_ones() {
+        let x: Vec<f64> = (0..120).map(|i| 0.5 + 0.4 * (i as f64 * 0.2).sin()).collect();
+        let far: Vec<f64> = (0..120).map(|i| if i % 2 == 0 { 0.0 } else { 1.0 }).collect();
+        let r = crate::dtw::band_radius(120, 120);
+        let d_far = dtw_banded(&x, &far, r).distance;
+        // Tight cutoff: the distant pair must abandon early.
+        assert_eq!(dtw_banded_distance_cutoff(&x, &far, r, d_far / 10.0), None);
+        // Loose cutoff: it completes with the exact distance.
+        assert_eq!(
+            dtw_banded_distance_cutoff(&x, &far, r, d_far * 2.0),
+            Some(d_far)
+        );
+        // Self comparison never abandons for any nonnegative cutoff.
+        assert_eq!(dtw_banded_distance_cutoff(&x, &x, r, 0.0), Some(0.0));
     }
 }

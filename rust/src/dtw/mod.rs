@@ -34,7 +34,28 @@ pub fn local_cost(a: f64, b: f64) -> f64 {
 /// band always stays connected. Shared with the Pallas kernel
 /// (`python/compile/kernels/dtw.py`) — keep the two formulas in sync.
 pub fn band_radius(n: usize, m: usize) -> usize {
-    let drift = (m.max(2) - 1) as f64 / (n.max(2) - 1) as f64;
+    let drift = band_slope(n, m);
     let r = (0.1 * n.max(m) as f64).max(drift + 2.0);
     r.ceil() as usize
+}
+
+/// Warping slope for unequal lengths: the band is centered on the line
+/// `j = slope * i` so it always connects `(0,0)` to `(n-1,m-1)`.
+pub fn band_slope(n: usize, m: usize) -> f64 {
+    (m.max(2) - 1) as f64 / (n.max(2) - 1) as f64
+}
+
+/// Column range (inclusive) of row `i` inside the slope-corrected
+/// Sakoe–Chiba band of radius `r` against a series of length `m`.
+///
+/// This is THE band geometry: [`banded::dtw_banded`], the early-abandoning
+/// [`banded::dtw_banded_distance_cutoff`] and the index lower bounds
+/// (`crate::index::lb`) all use it, which is what makes the pruning
+/// cascade an exact filter for the banded distance.
+#[inline]
+pub fn band_edges(i: usize, slope: f64, r: usize, m: usize) -> (usize, usize) {
+    let c = i as f64 * slope;
+    let lo = (c - r as f64).floor().max(0.0) as usize;
+    let hi = ((c + r as f64).ceil() as usize).min(m - 1);
+    (lo, hi)
 }

@@ -1,0 +1,387 @@
+//! [`IndexedDb`]: a [`ReferenceDb`] plus the envelope cache and a
+//! config-set secondary index, kept in sync on every insert and persisted
+//! alongside the JSON store.
+//!
+//! The wrapper owns the database: mutations go through
+//! [`IndexedDb::insert`] (which rebuilds exactly the envelope of the
+//! replaced/added entry) so the cache can never go stale. Loading reuses a
+//! previously saved sidecar when it still matches the store and silently
+//! rebuilds otherwise — the cache is derived data, never authoritative.
+
+use super::envelope::Envelope;
+use super::knn::{brute_force_knn, knn, Neighbor};
+use super::{SearchStats, DEFAULT_BLOCK};
+use crate::database::profile::ProfileEntry;
+use crate::database::store::{OptimalConfig, ReferenceDb};
+use crate::util::json::Json;
+use crate::workloads::AppId;
+use anyhow::{Context, Result};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// Reference database with an always-in-sync similarity index.
+#[derive(Debug, Default)]
+pub struct IndexedDb {
+    db: ReferenceDb,
+    /// Parallel to `db.entries()`.
+    envelopes: Vec<Envelope>,
+    /// Config label → entry positions (the matching phase only compares
+    /// same-config patterns, so searches are usually over one bucket).
+    by_config: BTreeMap<String, Vec<usize>>,
+}
+
+impl IndexedDb {
+    pub fn new() -> IndexedDb {
+        IndexedDb::default()
+    }
+
+    /// Index an existing database (bulk build, O(total samples)).
+    pub fn from_db(db: ReferenceDb) -> IndexedDb {
+        let envelopes = db
+            .entries()
+            .iter()
+            .map(|e| Envelope::build(&e.series, DEFAULT_BLOCK))
+            .collect();
+        let mut idx = IndexedDb {
+            db,
+            envelopes,
+            by_config: BTreeMap::new(),
+        };
+        idx.rebuild_config_index();
+        idx
+    }
+
+    fn rebuild_config_index(&mut self) {
+        self.by_config.clear();
+        for (i, e) in self.db.entries().iter().enumerate() {
+            self.by_config.entry(e.config_key()).or_default().push(i);
+        }
+    }
+
+    /// Insert a profiled run, replacing any previous entry for the same
+    /// app + config set, and refresh exactly the affected envelope.
+    pub fn insert(&mut self, entry: ProfileEntry) {
+        let label = entry.config_key();
+        let env = Envelope::build(&entry.series, DEFAULT_BLOCK);
+        let replaced = self.db.insert(entry);
+        if let Some(p) = replaced {
+            // Mirror ReferenceDb::insert: the old entry is removed from
+            // position `p`, shifting every later entry down by one.
+            self.envelopes.remove(p);
+            for positions in self.by_config.values_mut() {
+                positions.retain(|&i| i != p);
+                for i in positions.iter_mut() {
+                    if *i > p {
+                        *i -= 1;
+                    }
+                }
+            }
+        }
+        self.envelopes.push(env);
+        self.by_config
+            .entry(label)
+            .or_default()
+            .push(self.db.len() - 1);
+        debug_assert_eq!(self.envelopes.len(), self.db.len());
+    }
+
+    /// Borrow the underlying database (read-only; inserts must go through
+    /// the wrapper so the cache stays coherent).
+    pub fn db(&self) -> &ReferenceDb {
+        &self.db
+    }
+
+    /// Unwrap, dropping the index.
+    pub fn into_db(self) -> ReferenceDb {
+        self.db
+    }
+
+    pub fn len(&self) -> usize {
+        self.db.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.db.is_empty()
+    }
+
+    pub fn entries(&self) -> &[ProfileEntry] {
+        self.db.entries()
+    }
+
+    pub fn apps(&self) -> Vec<AppId> {
+        self.db.apps()
+    }
+
+    pub fn by_config(&self, key: &str) -> Vec<&ProfileEntry> {
+        self.db.by_config(key)
+    }
+
+    /// Record an optimal configuration (does not touch pattern entries, so
+    /// no cache maintenance is needed).
+    pub fn set_optimal(&mut self, app: AppId, best: OptimalConfig) {
+        self.db.set_optimal(app, best);
+    }
+
+    pub fn optimal(&self, app: AppId) -> Option<&OptimalConfig> {
+        self.db.optimal(app)
+    }
+
+    /// The cached envelope of entry `i`.
+    pub fn envelope(&self, i: usize) -> &Envelope {
+        &self.envelopes[i]
+    }
+
+    /// Entry positions stored under a config label (empty if none).
+    pub fn config_positions(&self, label: &str) -> &[usize] {
+        self.by_config.get(label).map(Vec::as_slice).unwrap_or(&[])
+    }
+
+    /// Exact top-`k` nearest entries (banded-DTW distance) over the whole
+    /// database. `query` must already be preprocessed like stored series
+    /// (see `coordinator::batcher::prepare_query`).
+    pub fn knn(&self, query: &[f64], k: usize) -> (Vec<Neighbor>, SearchStats) {
+        let entries = self.db.entries();
+        knn(
+            query,
+            (0..entries.len()).map(|i| (i, entries[i].series.as_slice(), &self.envelopes[i])),
+            k,
+        )
+    }
+
+    /// Exact top-`k` restricted to entries captured under one config set —
+    /// the matching phase's per-configuration search.
+    pub fn knn_in_config(&self, query: &[f64], label: &str, k: usize) -> (Vec<Neighbor>, SearchStats) {
+        let entries = self.db.entries();
+        knn(
+            query,
+            self.config_positions(label)
+                .iter()
+                .map(|&i| (i, entries[i].series.as_slice(), &self.envelopes[i])),
+            k,
+        )
+    }
+
+    /// Brute-force baseline over the whole database (same contract as
+    /// [`IndexedDb::knn`]; evaluates every candidate).
+    pub fn brute_force(&self, query: &[f64], k: usize) -> Vec<Neighbor> {
+        let entries = self.db.entries();
+        brute_force_knn(
+            query,
+            (0..entries.len()).map(|i| (i, entries[i].series.as_slice())),
+            k,
+        )
+    }
+
+    /// Sidecar path for the envelope cache of a store at `path`
+    /// (`db.json` → `db.envelopes.json`).
+    pub fn envelope_path(path: &Path) -> PathBuf {
+        path.with_extension("envelopes.json")
+    }
+
+    /// Persist the store (same JSON format as [`ReferenceDb::save`]) plus
+    /// the envelope cache sidecar.
+    pub fn save(&self, path: &Path) -> Result<()> {
+        self.db.save(path)?;
+        let entries = self
+            .db
+            .entries()
+            .iter()
+            .zip(&self.envelopes)
+            .map(|(e, env)| {
+                Json::obj(vec![
+                    ("app", Json::Str(e.app.name().to_string())),
+                    ("config", Json::Str(e.config_key())),
+                    ("envelope", env.to_json()),
+                ])
+            })
+            .collect();
+        let sidecar = Json::obj(vec![
+            ("version", Json::Num(1.0)),
+            ("entries", Json::arr(entries)),
+        ]);
+        let sp = Self::envelope_path(path);
+        std::fs::write(&sp, sidecar.to_pretty())
+            .with_context(|| format!("writing {}", sp.display()))
+    }
+
+    /// Load a store and its envelope cache; if the sidecar is missing,
+    /// unreadable or stale (entry mismatch), the cache is rebuilt from the
+    /// series — envelopes are derived data.
+    pub fn load(path: &Path) -> Result<IndexedDb> {
+        let db = ReferenceDb::load(path)?;
+        match Self::load_envelopes(&db, &Self::envelope_path(path)) {
+            Some(envelopes) => {
+                let mut idx = IndexedDb {
+                    db,
+                    envelopes,
+                    by_config: BTreeMap::new(),
+                };
+                idx.rebuild_config_index();
+                Ok(idx)
+            }
+            None => {
+                log::info!(
+                    "index: envelope sidecar missing or stale for {}; rebuilding",
+                    path.display()
+                );
+                Ok(IndexedDb::from_db(db))
+            }
+        }
+    }
+
+    fn load_envelopes(db: &ReferenceDb, sidecar: &Path) -> Option<Vec<Envelope>> {
+        let text = std::fs::read_to_string(sidecar).ok()?;
+        let v = Json::parse(&text).ok()?;
+        let items = v.get("entries").and_then(Json::as_arr)?;
+        if items.len() != db.len() {
+            return None;
+        }
+        let mut envelopes = Vec::with_capacity(items.len());
+        for (item, entry) in items.iter().zip(db.entries()) {
+            let app = item.get("app").and_then(Json::as_str)?;
+            let config = item.get("config").and_then(Json::as_str)?;
+            if app != entry.app.name() || config != entry.config_key() {
+                return None;
+            }
+            let env = Envelope::from_json(item.get("envelope")?).ok()?;
+            // Containment, not just shape: a sidecar left over from an
+            // equal-length re-profile would pass the length check but could
+            // over-estimate and silently prune true neighbours. A containing
+            // envelope can only ever be loose, which keeps k-NN exact.
+            if !env.contains(&entry.series) {
+                return None;
+            }
+            envelopes.push(env);
+        }
+        Some(envelopes)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::simulator::job::JobConfig;
+    use crate::util::rng::Pcg32;
+
+    fn entry(app: AppId, mappers: usize, g: &mut Pcg32) -> ProfileEntry {
+        let len = 40 + g.below(120) as usize;
+        let mut v = 0.5;
+        let series = (0..len)
+            .map(|_| {
+                v = (v + (g.f64() - 0.5) * 0.2).clamp(0.0, 1.0);
+                v
+            })
+            .collect();
+        ProfileEntry {
+            app,
+            config: JobConfig::new(mappers, 2, 10.0, 20.0),
+            series,
+            raw_len: len,
+            completion_secs: 10.0,
+        }
+    }
+
+    fn build(g: &mut Pcg32) -> IndexedDb {
+        let mut idx = IndexedDb::new();
+        for m in 1..=12 {
+            idx.insert(entry(AppId::WordCount, m, g));
+            idx.insert(entry(AppId::TeraSort, m, g));
+        }
+        idx
+    }
+
+    #[test]
+    fn insert_keeps_cache_in_sync() {
+        let mut g = Pcg32::new(70, 1);
+        let mut idx = build(&mut g);
+        assert_eq!(idx.len(), 24);
+        // Replace an early entry: envelopes and config buckets must follow.
+        idx.insert(entry(AppId::WordCount, 3, &mut g));
+        assert_eq!(idx.len(), 24);
+        for (i, e) in idx.entries().iter().enumerate() {
+            assert_eq!(idx.envelope(i).len(), e.series.len(), "envelope {i} stale");
+        }
+        for (label, positions) in &idx.by_config {
+            for &p in positions {
+                assert_eq!(&idx.entries()[p].config_key(), label);
+            }
+        }
+        let bucket = idx.config_positions("M=3,R=2,FS=10M,I=20M");
+        assert_eq!(bucket.len(), 2, "one entry per app in the bucket");
+    }
+
+    #[test]
+    fn knn_in_config_only_sees_the_bucket() {
+        let mut g = Pcg32::new(71, 2);
+        let idx = build(&mut g);
+        let q = idx.entries()[idx.config_positions("M=5,R=2,FS=10M,I=20M")[0]]
+            .series
+            .clone();
+        let (top, stats) = idx.knn_in_config(&q, "M=5,R=2,FS=10M,I=20M", 2);
+        assert_eq!(stats.candidates, 2);
+        assert_eq!(top[0].distance, 0.0, "self entry is in the bucket");
+        let (_, all_stats) = idx.knn(&q, 2);
+        assert_eq!(all_stats.candidates, 24);
+        let (none, none_stats) = idx.knn_in_config(&q, "M=99,R=9,FS=1M,I=1M", 2);
+        assert!(none.is_empty());
+        assert_eq!(none_stats.candidates, 0);
+    }
+
+    #[test]
+    fn knn_agrees_with_brute_force_through_the_wrapper() {
+        let mut g = Pcg32::new(72, 3);
+        let idx = build(&mut g);
+        let probe = entry(AppId::Grep, 99, &mut g);
+        let (fast, _) = idx.knn(&probe.series, 3);
+        let slow = idx.brute_force(&probe.series, 3);
+        assert_eq!(fast.len(), slow.len());
+        for (a, b) in fast.iter().zip(&slow) {
+            assert_eq!(a.index, b.index);
+            assert_eq!(a.distance.to_bits(), b.distance.to_bits());
+        }
+    }
+
+    #[test]
+    fn save_load_roundtrip_with_sidecar() {
+        let mut g = Pcg32::new(73, 4);
+        let idx = build(&mut g);
+        let path = std::env::temp_dir().join("mrtuner_indexed_db_test.json");
+        idx.save(&path).unwrap();
+        assert!(IndexedDb::envelope_path(&path).exists());
+
+        let back = IndexedDb::load(&path).unwrap();
+        assert_eq!(back.len(), idx.len());
+        for i in 0..idx.len() {
+            // JSON number formatting may perturb the last ulp, so compare
+            // with tolerance, not bitwise.
+            assert_eq!(back.envelope(i).len(), idx.envelope(i).len());
+            for ((al, ah), (bl, bh)) in idx
+                .envelope(i)
+                .extrema()
+                .into_iter()
+                .zip(back.envelope(i).extrema())
+            {
+                assert!((al - bl).abs() < 1e-9 && (ah - bh).abs() < 1e-9);
+            }
+        }
+        // Same query, same neighbours after the round trip (distances may
+        // move by formatting ulps; the entries must not).
+        let q = idx.entries()[7].series.clone();
+        let (a, _) = idx.knn(&q, 3);
+        let (b, _) = back.knn(&q, 3);
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.index, y.index);
+            assert!((x.distance - y.distance).abs() < 1e-9);
+        }
+
+        // A stale sidecar (entry count mismatch) is ignored, not an error.
+        let mut bigger = IndexedDb::load(&path).unwrap();
+        bigger.insert(entry(AppId::Grep, 40, &mut g));
+        bigger.db().save(&path).unwrap(); // store only; sidecar now stale
+        let rebuilt = IndexedDb::load(&path).unwrap();
+        assert_eq!(rebuilt.len(), 25);
+        std::fs::remove_file(&path).ok();
+        std::fs::remove_file(IndexedDb::envelope_path(&path)).ok();
+    }
+}

@@ -1,0 +1,203 @@
+//! Per-entry envelope cache: blockwise extrema of a stored series.
+//!
+//! An [`Envelope`] is the precomputed side of the Sakoe–Chiba lower bounds:
+//! for each block of [`super::DEFAULT_BLOCK`] samples it keeps the min and
+//! max of the series. [`Envelope::cover_range`] then answers "what values
+//! can the reference take inside columns `[lo, hi]` of the band?" in
+//! O(width/block) time using the *block-aligned cover* of the range — a
+//! superset of the true range, so bounds built from it still under-estimate
+//! the banded distance (they are just slightly looser than exact-range
+//! envelopes would be).
+
+use crate::util::json::Json;
+use anyhow::{anyhow, Result};
+
+/// Blockwise min/max summary of one stored series.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Envelope {
+    block: usize,
+    len: usize,
+    lo: Vec<f64>,
+    hi: Vec<f64>,
+}
+
+impl Envelope {
+    /// Summarize `series` with `block`-sample blocks (the last block may be
+    /// shorter).
+    pub fn build(series: &[f64], block: usize) -> Envelope {
+        assert!(block > 0, "envelope: zero block size");
+        let len = series.len();
+        let blocks = (len + block - 1) / block;
+        let mut lo = Vec::with_capacity(blocks);
+        let mut hi = Vec::with_capacity(blocks);
+        for chunk in series.chunks(block) {
+            let mut l = f64::INFINITY;
+            let mut h = f64::NEG_INFINITY;
+            for &v in chunk {
+                l = l.min(v);
+                h = h.max(v);
+            }
+            lo.push(l);
+            hi.push(h);
+        }
+        Envelope { block, len, lo, hi }
+    }
+
+    /// Length of the summarized series.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Block size in samples.
+    pub fn block(&self) -> usize {
+        self.block
+    }
+
+    /// Number of blocks.
+    pub fn blocks(&self) -> usize {
+        self.lo.len()
+    }
+
+    /// Per-block `(min, max)` pairs.
+    pub fn extrema(&self) -> Vec<(f64, f64)> {
+        self.lo.iter().zip(&self.hi).map(|(&l, &h)| (l, h)).collect()
+    }
+
+    /// Whether every sample of `series` lies inside its block's interval.
+    /// This is the property the lower bounds need to stay *admissible*: a
+    /// containing envelope may be loose (weaker pruning) but can never
+    /// over-estimate, so exactness survives. Used to vet deserialized
+    /// envelopes against the store they claim to summarize.
+    ///
+    /// Allows ~1 ulp of slack per sample: both sides round-trip through the
+    /// JSON number formatter independently. The worst-case bound overshoot
+    /// this admits (series length × 1e-12) stays well inside the search's
+    /// pruning-cutoff margin (1e-9 relative, `index::knn`), so k-NN remains
+    /// exact.
+    pub fn contains(&self, series: &[f64]) -> bool {
+        if series.len() != self.len {
+            return false;
+        }
+        series.chunks(self.block).zip(self.lo.iter().zip(&self.hi)).all(
+            |(chunk, (&l, &h))| {
+                chunk.iter().all(|&v| {
+                    let eps = 1e-12 * (1.0 + v.abs());
+                    l - eps <= v && v <= h + eps
+                })
+            },
+        )
+    }
+
+    /// `(min, max)` of the series over the block-aligned cover of the
+    /// inclusive sample range `[lo_idx, hi_idx]`. Indices are clamped to
+    /// the series length.
+    pub fn cover_range(&self, lo_idx: usize, hi_idx: usize) -> (f64, f64) {
+        debug_assert!(!self.is_empty(), "cover_range on empty envelope");
+        debug_assert!(lo_idx <= hi_idx);
+        let b0 = (lo_idx / self.block).min(self.lo.len() - 1);
+        let b1 = (hi_idx / self.block).min(self.lo.len() - 1);
+        let mut l = f64::INFINITY;
+        let mut h = f64::NEG_INFINITY;
+        for b in b0..=b1 {
+            l = l.min(self.lo[b]);
+            h = h.max(self.hi[b]);
+        }
+        (l, h)
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("block", Json::Num(self.block as f64)),
+            ("len", Json::Num(self.len as f64)),
+            ("lo", Json::nums(&self.lo)),
+            ("hi", Json::nums(&self.hi)),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> Result<Envelope> {
+        let block = v
+            .get("block")
+            .and_then(Json::as_usize)
+            .filter(|&b| b > 0)
+            .ok_or_else(|| anyhow!("envelope: bad block"))?;
+        let len = v
+            .get("len")
+            .and_then(Json::as_usize)
+            .ok_or_else(|| anyhow!("envelope: missing len"))?;
+        let nums = |k: &str| -> Result<Vec<f64>> {
+            Ok(v.get(k)
+                .and_then(Json::as_arr)
+                .ok_or_else(|| anyhow!("envelope: missing {k}"))?
+                .iter()
+                .filter_map(Json::as_f64)
+                .collect())
+        };
+        let lo = nums("lo")?;
+        let hi = nums("hi")?;
+        if lo.len() != hi.len() || lo.len() != (len + block - 1) / block {
+            return Err(anyhow!(
+                "envelope: inconsistent shapes (len={len}, block={block}, lo={}, hi={})",
+                lo.len(),
+                hi.len()
+            ));
+        }
+        Ok(Envelope { block, len, lo, hi })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg32;
+
+    #[test]
+    fn build_shapes_and_extrema() {
+        let s: Vec<f64> = (0..37).map(|i| i as f64).collect();
+        let e = Envelope::build(&s, 16);
+        assert_eq!(e.len(), 37);
+        assert_eq!(e.blocks(), 3);
+        assert_eq!(e.cover_range(0, 0), (0.0, 15.0)); // block-aligned cover
+        assert_eq!(e.cover_range(0, 36), (0.0, 36.0));
+        assert_eq!(e.cover_range(32, 36), (32.0, 36.0));
+    }
+
+    #[test]
+    fn cover_range_contains_true_range() {
+        let mut g = Pcg32::new(40, 1);
+        let s: Vec<f64> = (0..200).map(|_| g.f64()).collect();
+        let e = Envelope::build(&s, 16);
+        for _ in 0..200 {
+            let a = g.below(200) as usize;
+            let b = g.below(200) as usize;
+            let (lo_idx, hi_idx) = (a.min(b), a.max(b));
+            let (cl, ch) = e.cover_range(lo_idx, hi_idx);
+            let true_min = s[lo_idx..=hi_idx].iter().cloned().fold(f64::INFINITY, f64::min);
+            let true_max = s[lo_idx..=hi_idx]
+                .iter()
+                .cloned()
+                .fold(f64::NEG_INFINITY, f64::max);
+            assert!(cl <= true_min && ch >= true_max, "cover not a superset");
+        }
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let s: Vec<f64> = (0..50).map(|i| (i as f64 * 0.3).sin()).collect();
+        let e = Envelope::build(&s, 16);
+        let back =
+            Envelope::from_json(&Json::parse(&e.to_json().to_string()).unwrap()).unwrap();
+        assert_eq!(e, back);
+    }
+
+    #[test]
+    fn malformed_json_rejected() {
+        let v = Json::parse(r#"{"block":16,"len":40,"lo":[1.0],"hi":[1.0]}"#).unwrap();
+        assert!(Envelope::from_json(&v).is_err(), "wrong block count accepted");
+        let v = Json::parse(r#"{"len":4,"lo":[],"hi":[]}"#).unwrap();
+        assert!(Envelope::from_json(&v).is_err(), "missing block accepted");
+    }
+}

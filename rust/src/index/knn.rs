@@ -1,0 +1,252 @@
+//! Exact k-nearest-neighbour search with the lower-bound cascade.
+//!
+//! [`knn`] returns the same neighbours (same indices, same distances) as
+//! [`brute_force_knn`] over the same candidates — the cascade only ever
+//! skips candidates that provably cannot enter the result. Ties on
+//! distance resolve to the lower candidate id, exactly like the linear
+//! scan, so the two are interchangeable in tests.
+
+use super::envelope::Envelope;
+use super::lb::{lb_keogh, lb_kim, lb_paa, query_extrema};
+use super::{SearchStats, DEFAULT_BLOCK};
+use crate::dtw::banded::dtw_banded_distance_cutoff;
+use crate::dtw::band_radius;
+
+/// One search result: candidate id (position in the candidate set / the
+/// database) and its exact banded-DTW distance to the query.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Neighbor {
+    pub index: usize,
+    pub distance: f64,
+}
+
+/// Queries shorter than this skip the PAA stage — the O(n) Keogh bound is
+/// already nearly free there.
+const PAA_MIN_LEN: usize = 64;
+
+/// Absolute + relative slack added to the best-so-far cutoff so f64
+/// rounding in the (mathematically admissible) bounds can never prune a
+/// true neighbour.
+fn cutoff(bsf: f64) -> f64 {
+    if bsf.is_finite() {
+        bsf + 1e-9 * (1.0 + bsf.abs())
+    } else {
+        bsf
+    }
+}
+
+/// Insert into a (distance, index)-sorted top-k list; a linear scan that
+/// updates on strict improvement keeps exactly the same set.
+fn push_neighbor(best: &mut Vec<Neighbor>, k: usize, nb: Neighbor) {
+    let pos = best
+        .partition_point(|b| (b.distance, b.index) <= (nb.distance, nb.index));
+    if pos < k {
+        best.insert(pos, nb);
+        best.truncate(k);
+    }
+}
+
+/// Exact top-`k` under banded DTW via the pruning cascade
+/// (LB_Kim → LB_PAA → LB_Keogh → early-abandoning DP). Candidates are
+/// `(id, series, envelope)`; empty series are skipped.
+pub fn knn<'a>(
+    query: &[f64],
+    candidates: impl IntoIterator<Item = (usize, &'a [f64], &'a Envelope)>,
+    k: usize,
+) -> (Vec<Neighbor>, SearchStats) {
+    let mut stats = SearchStats::default();
+    let mut best: Vec<Neighbor> = Vec::new();
+    if k == 0 || query.is_empty() {
+        return (best, stats);
+    }
+    let n = query.len();
+    // The PAA stage is skipped for short queries, so don't pay its
+    // query-side summary there either.
+    let qext = if n >= PAA_MIN_LEN {
+        query_extrema(query, DEFAULT_BLOCK)
+    } else {
+        Vec::new()
+    };
+
+    for (index, series, env) in candidates {
+        if series.is_empty() {
+            continue;
+        }
+        debug_assert_eq!(env.len(), series.len(), "envelope out of sync");
+        stats.candidates += 1;
+        let bsf = if best.len() == k {
+            best[k - 1].distance
+        } else {
+            f64::INFINITY
+        };
+        let cut = cutoff(bsf);
+
+        if lb_kim(query, series) > cut {
+            stats.pruned_lb_kim += 1;
+            continue;
+        }
+        let r = band_radius(n, series.len());
+        if n >= PAA_MIN_LEN && lb_paa(&qext, n, DEFAULT_BLOCK, env, r) > cut {
+            stats.pruned_lb_paa += 1;
+            continue;
+        }
+        if lb_keogh(query, env, r) > cut {
+            stats.pruned_lb_keogh += 1;
+            continue;
+        }
+        match dtw_banded_distance_cutoff(query, series, r, cut) {
+            None => stats.abandoned += 1,
+            Some(distance) => {
+                stats.dtw_evals += 1;
+                push_neighbor(&mut best, k, Neighbor { index, distance });
+            }
+        }
+    }
+    (best, stats)
+}
+
+/// Reference implementation: evaluate the banded DTW on every candidate.
+/// Same result contract as [`knn`]; used by the property tests and the
+/// `index_perf` bench as the baseline.
+pub fn brute_force_knn<'a>(
+    query: &[f64],
+    candidates: impl IntoIterator<Item = (usize, &'a [f64])>,
+    k: usize,
+) -> Vec<Neighbor> {
+    let mut best: Vec<Neighbor> = Vec::new();
+    if k == 0 || query.is_empty() {
+        return best;
+    }
+    for (index, series) in candidates {
+        if series.is_empty() {
+            continue;
+        }
+        let r = band_radius(query.len(), series.len());
+        let distance = dtw_banded_distance_cutoff(query, series, r, f64::INFINITY)
+            .expect("infinite cutoff never abandons");
+        push_neighbor(&mut best, k, Neighbor { index, distance });
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg32;
+
+    fn series(g: &mut Pcg32, len: usize) -> Vec<f64> {
+        let mut v = 0.5;
+        (0..len)
+            .map(|_| {
+                v = (v + (g.f64() - 0.5) * 0.25).clamp(0.0, 1.0);
+                v
+            })
+            .collect()
+    }
+
+    fn corpus(g: &mut Pcg32, n: usize) -> Vec<Vec<f64>> {
+        (0..n).map(|_| series(g, 40 + g.below(160) as usize)).collect()
+    }
+
+    fn with_envelopes(corpus: &[Vec<f64>]) -> Vec<Envelope> {
+        corpus.iter().map(|s| Envelope::build(s, DEFAULT_BLOCK)).collect()
+    }
+
+    #[test]
+    fn knn_matches_brute_force_exactly() {
+        let mut g = Pcg32::new(60, 1);
+        for round in 0..8 {
+            let refs = corpus(&mut g, 30);
+            let envs = with_envelopes(&refs);
+            let q = series(&mut g, 30 + g.below(200) as usize);
+            for k in [1usize, 3, 7] {
+                let (fast, stats) = knn(
+                    &q,
+                    refs.iter()
+                        .zip(&envs)
+                        .enumerate()
+                        .map(|(i, (s, e))| (i, s.as_slice(), e)),
+                    k,
+                );
+                let slow =
+                    brute_force_knn(&q, refs.iter().enumerate().map(|(i, s)| (i, s.as_slice())), k);
+                assert_eq!(fast.len(), slow.len());
+                for (a, b) in fast.iter().zip(&slow) {
+                    assert_eq!(a.index, b.index, "round {round} k={k}");
+                    assert_eq!(
+                        a.distance.to_bits(),
+                        b.distance.to_bits(),
+                        "round {round} k={k}: {} vs {}",
+                        a.distance,
+                        b.distance
+                    );
+                }
+                assert_eq!(stats.candidates, 30);
+                assert_eq!(stats.pruned() + stats.dtw_started(), stats.candidates);
+            }
+        }
+    }
+
+    #[test]
+    fn self_neighbour_is_found_with_distance_zero() {
+        let mut g = Pcg32::new(61, 2);
+        let refs = corpus(&mut g, 20);
+        let envs = with_envelopes(&refs);
+        let q = refs[13].clone();
+        let (top, _) = knn(
+            &q,
+            refs.iter()
+                .zip(&envs)
+                .enumerate()
+                .map(|(i, (s, e))| (i, s.as_slice(), e)),
+            1,
+        );
+        assert_eq!(top[0].index, 13);
+        assert_eq!(top[0].distance, 0.0);
+    }
+
+    #[test]
+    fn pruning_actually_happens_on_a_spread_corpus() {
+        // Corpus of well-separated constant levels: once the first close
+        // candidate is seen, the far levels must die in the bounds.
+        let refs: Vec<Vec<f64>> = (0..50)
+            .map(|i| vec![(i % 10) as f64 / 10.0; 128])
+            .collect();
+        let envs = with_envelopes(&refs);
+        let q = vec![0.02_f64; 128];
+        let (top, stats) = knn(
+            &q,
+            refs.iter()
+                .zip(&envs)
+                .enumerate()
+                .map(|(i, (s, e))| (i, s.as_slice(), e)),
+            1,
+        );
+        assert_eq!(top[0].index, 0, "level 0.0 is closest to 0.02");
+        assert!(
+            stats.pruned() + stats.abandoned > stats.candidates / 2,
+            "no pruning on an easy corpus: {stats}"
+        );
+    }
+
+    #[test]
+    fn degenerate_inputs() {
+        let refs: Vec<Vec<f64>> = vec![vec![0.5; 10], Vec::new()];
+        let envs = with_envelopes(&refs);
+        let cands = || {
+            refs.iter()
+                .zip(&envs)
+                .enumerate()
+                .map(|(i, (s, e))| (i, s.as_slice(), e))
+        };
+        let (empty_k, _) = knn(&[0.1, 0.2], cands(), 0);
+        assert!(empty_k.is_empty());
+        let (empty_q, _) = knn(&[], cands(), 3);
+        assert!(empty_q.is_empty());
+        // Empty candidate series is skipped, not an error.
+        let (top, stats) = knn(&[0.1, 0.2, 0.3], cands(), 5);
+        assert_eq!(top.len(), 1);
+        assert_eq!(stats.candidates, 1);
+        assert!(brute_force_knn(&[0.5], refs.iter().enumerate().map(|(i, s)| (i, s.as_slice())), 2).len() == 1);
+    }
+}

@@ -1,0 +1,159 @@
+//! Lower bounds on the banded DTW distance.
+//!
+//! All bounds are *admissible* for
+//! [`crate::dtw::banded::dtw_banded`] with the same radius: they never
+//! exceed the true banded distance (up to f64 rounding, which the search
+//! absorbs with a tiny cutoff margin). They are **not** mutually ordered
+//! with each other in general — `lb_kim` uses exact endpoint costs while
+//! the envelope bounds relax values to block extrema — but
+//! `lb_paa <= lb_keogh` always holds because the PAA bound relaxes the
+//! query side of the Keogh bound as well. The search cascade orders them
+//! by cost, cheapest first.
+
+use super::envelope::Envelope;
+use crate::dtw::{band_edges, band_slope};
+
+/// O(1) endpoint bound (Kim's three-point bound reduced to the two corner
+/// cells): every admissible warping path starts at `(0,0)` and ends at
+/// `(n-1,m-1)`, so it pays at least those two local costs (one cost when
+/// both series are singletons and the corners coincide).
+pub fn lb_kim(x: &[f64], y: &[f64]) -> f64 {
+    debug_assert!(!x.is_empty() && !y.is_empty());
+    let first = (x[0] - y[0]).abs();
+    if x.len() == 1 && y.len() == 1 {
+        return first;
+    }
+    first + (x[x.len() - 1] - y[y.len() - 1]).abs()
+}
+
+/// Per-row Sakoe–Chiba envelope bound (LB_Keogh adapted to unequal lengths
+/// via the production band geometry): every path visits every query row
+/// `i` at some column inside [`band_edges`]`(i)`, paying at least the
+/// distance from `x[i]` to the envelope of the reference over those
+/// columns. O(n) rows, O(width/block) per range query.
+pub fn lb_keogh(x: &[f64], env: &Envelope, r: usize) -> f64 {
+    let n = x.len();
+    let m = env.len();
+    debug_assert!(n > 0 && m > 0);
+    let slope = band_slope(n, m);
+    let mut sum = 0.0;
+    for (i, &v) in x.iter().enumerate() {
+        let (lo, hi) = band_edges(i, slope, r, m);
+        let (l, u) = env.cover_range(lo, hi);
+        if v > u {
+            sum += v - u;
+        } else if v < l {
+            sum += l - v;
+        }
+    }
+    sum
+}
+
+/// Blockwise extrema of the query, `block` samples per block — the query
+/// side of [`lb_paa`]. Computed once per search and reused across all
+/// candidates. (Same summary an [`Envelope`] holds for stored series.)
+pub fn query_extrema(x: &[f64], block: usize) -> Vec<(f64, f64)> {
+    Envelope::build(x, block).extrema()
+}
+
+/// PAA-summarized envelope bound: [`lb_keogh`] relaxed to block
+/// resolution on *both* sides. For each query block the rows inside it can
+/// only reach columns between the band edge of the block's first row and
+/// that of its last row; each of the block's rows pays at least the
+/// interval-to-interval distance between the query block's value range and
+/// the reference envelope over those columns. O(n/block) per candidate.
+pub fn lb_paa(qext: &[(f64, f64)], n: usize, block: usize, env: &Envelope, r: usize) -> f64 {
+    let m = env.len();
+    debug_assert!(n > 0 && m > 0);
+    debug_assert_eq!(qext.len(), (n + block - 1) / block);
+    let slope = band_slope(n, m);
+    let mut sum = 0.0;
+    for (k, &(qlo, qhi)) in qext.iter().enumerate() {
+        let i0 = k * block;
+        let i1 = (i0 + block - 1).min(n - 1);
+        let (clo, _) = band_edges(i0, slope, r, m);
+        let (_, chi) = band_edges(i1, slope, r, m);
+        let (ylo, yhi) = env.cover_range(clo, chi);
+        let gap = if qlo > yhi {
+            qlo - yhi
+        } else if ylo > qhi {
+            ylo - qhi
+        } else {
+            0.0
+        };
+        sum += (i1 - i0 + 1) as f64 * gap;
+    }
+    sum
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dtw::banded::dtw_banded;
+    use crate::dtw::band_radius;
+    use crate::index::DEFAULT_BLOCK;
+    use crate::util::rng::Pcg32;
+
+    fn series(g: &mut Pcg32, len: usize) -> Vec<f64> {
+        let mut v = 0.5;
+        (0..len)
+            .map(|_| {
+                v = (v + (g.f64() - 0.5) * 0.25).clamp(0.0, 1.0);
+                v
+            })
+            .collect()
+    }
+
+    #[test]
+    fn bounds_are_admissible_for_banded_dtw() {
+        let mut g = Pcg32::new(50, 1);
+        for _ in 0..60 {
+            let n = 2 + g.below(180) as usize;
+            let m = 2 + g.below(180) as usize;
+            let x = series(&mut g, n);
+            let y = series(&mut g, m);
+            let r = band_radius(n, m);
+            let env = Envelope::build(&y, DEFAULT_BLOCK);
+            let qext = query_extrema(&x, DEFAULT_BLOCK);
+            let banded = dtw_banded(&x, &y, r).distance;
+            let kim = lb_kim(&x, &y);
+            let keogh = lb_keogh(&x, &env, r);
+            let paa = lb_paa(&qext, n, DEFAULT_BLOCK, &env, r);
+            assert!(kim <= banded + 1e-9, "kim {kim} > banded {banded}");
+            assert!(keogh <= banded + 1e-9, "keogh {keogh} > banded {banded}");
+            assert!(paa <= keogh + 1e-9, "paa {paa} > keogh {keogh}");
+        }
+    }
+
+    #[test]
+    fn identical_series_all_bounds_zero() {
+        let mut g = Pcg32::new(51, 2);
+        let x = series(&mut g, 100);
+        let env = Envelope::build(&x, DEFAULT_BLOCK);
+        let r = band_radius(100, 100);
+        assert_eq!(lb_kim(&x, &x), 0.0);
+        assert_eq!(lb_keogh(&x, &env, r), 0.0);
+        let qext = query_extrema(&x, DEFAULT_BLOCK);
+        assert_eq!(lb_paa(&qext, 100, DEFAULT_BLOCK, &env, r), 0.0);
+    }
+
+    #[test]
+    fn separated_series_get_nonzero_bounds() {
+        // Query around 0, reference around 1: every bound must see the gap.
+        let x = vec![0.0; 128];
+        let y = vec![1.0; 96];
+        let r = band_radius(128, 96);
+        let env = Envelope::build(&y, DEFAULT_BLOCK);
+        let qext = query_extrema(&x, DEFAULT_BLOCK);
+        assert!(lb_kim(&x, &y) >= 2.0 - 1e-12);
+        // Each of the 128 rows is 1.0 away from the envelope.
+        assert!((lb_keogh(&x, &env, r) - 128.0).abs() < 1e-9);
+        assert!((lb_paa(&qext, 128, DEFAULT_BLOCK, &env, r) - 128.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn singleton_series_kim_does_not_double_count() {
+        assert_eq!(lb_kim(&[0.3], &[0.8]), 0.5);
+        assert!((lb_kim(&[0.3], &[0.8, 0.9]) - (0.5 + 0.6)).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,139 @@
+//! Similarity index: sublinear k-nearest-neighbour search over the
+//! reference database under the production banded-DTW distance.
+//!
+//! The paper's matching phase compares the query against *every* stored
+//! pattern with full DTW — fine for 3 apps × 6 configs, hopeless for a
+//! reference service holding thousands of profiled patterns. This module
+//! implements the standard lower-bound pruning cascade so that most
+//! candidates are rejected in O(1)–O(n) time and the exact dynamic program
+//! only runs on the few that could still win:
+//!
+//! 1. [`lb::lb_kim`] — constant-time endpoint bound (any warping path must
+//!    pay the two corner cells);
+//! 2. [`lb::lb_paa`] — PAA-summarized Sakoe–Chiba envelope bound using only
+//!    the per-entry blockwise extrema cached in [`envelope::Envelope`]
+//!    (O(n/B), used for long series);
+//! 3. [`lb::lb_keogh`] — per-row envelope bound over the same band geometry
+//!    the banded DTW uses ([`crate::dtw::band_edges`], O(n));
+//! 4. [`crate::dtw::banded::dtw_banded_distance_cutoff`] — the exact
+//!    early-abandoning fallback, bit-identical to `dtw_banded` when it
+//!    completes.
+//!
+//! Every bound under-estimates the banded distance, so [`knn::knn`] returns
+//! **exactly** the same neighbours (indices *and* distances) as a brute
+//! force scan — the speedup is free of approximation. [`db::IndexedDb`]
+//! wraps [`crate::database::store::ReferenceDb`], keeps the envelope cache
+//! in sync on insert, and persists it alongside the JSON store.
+//!
+//! Integration points: `coordinator::matcher::Matcher::match_app_indexed`
+//! (index-backed matching phase), the `knn` command of
+//! `coordinator::server`, and the pruning counters in
+//! `coordinator::metrics::Metrics`. `benches/index_perf.rs` measures the
+//! brute-force vs indexed crossover.
+
+pub mod db;
+pub mod envelope;
+pub mod knn;
+pub mod lb;
+
+pub use db::IndexedDb;
+pub use envelope::Envelope;
+pub use knn::{brute_force_knn, knn, Neighbor};
+
+/// Block size (samples per envelope block) used for the cached envelopes
+/// and the PAA-summarized bound. 16 keeps the cache ~12% of the series
+/// size while still amortizing the per-row range queries.
+pub const DEFAULT_BLOCK: usize = 16;
+
+/// Where each candidate of one search was culled (or not). The counters
+/// partition the candidate set:
+/// `candidates = pruned_* + abandoned + dtw_evals`.
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+pub struct SearchStats {
+    /// Candidates examined.
+    pub candidates: u64,
+    /// Rejected by the O(1) endpoint bound.
+    pub pruned_lb_kim: u64,
+    /// Rejected by the PAA-summarized envelope bound.
+    pub pruned_lb_paa: u64,
+    /// Rejected by the per-row envelope bound.
+    pub pruned_lb_keogh: u64,
+    /// Entered the dynamic program but abandoned before completion.
+    pub abandoned: u64,
+    /// Full banded-DTW evaluations that ran to completion.
+    pub dtw_evals: u64,
+}
+
+impl SearchStats {
+    /// Accumulate another search's counters into this one.
+    pub fn merge(&mut self, other: &SearchStats) {
+        self.candidates += other.candidates;
+        self.pruned_lb_kim += other.pruned_lb_kim;
+        self.pruned_lb_paa += other.pruned_lb_paa;
+        self.pruned_lb_keogh += other.pruned_lb_keogh;
+        self.abandoned += other.abandoned;
+        self.dtw_evals += other.dtw_evals;
+    }
+
+    /// Candidates rejected by a lower bound alone (no DP cell computed).
+    pub fn pruned(&self) -> u64 {
+        self.pruned_lb_kim + self.pruned_lb_paa + self.pruned_lb_keogh
+    }
+
+    /// Candidates on which the dynamic program was started at all.
+    pub fn dtw_started(&self) -> u64 {
+        self.abandoned + self.dtw_evals
+    }
+
+    /// Fraction of candidates that reached the dynamic program — the
+    /// headline "full/banded DTW evaluations NOT avoided" ratio.
+    pub fn dtw_fraction(&self) -> f64 {
+        if self.candidates == 0 {
+            0.0
+        } else {
+            self.dtw_started() as f64 / self.candidates as f64
+        }
+    }
+}
+
+impl std::fmt::Display for SearchStats {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "candidates={} pruned[kim={} paa={} keogh={}] abandoned={} dtw_evals={} ({:.1}% reached DTW)",
+            self.candidates,
+            self.pruned_lb_kim,
+            self.pruned_lb_paa,
+            self.pruned_lb_keogh,
+            self.abandoned,
+            self.dtw_evals,
+            self.dtw_fraction() * 100.0,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_partition_and_merge() {
+        let mut a = SearchStats {
+            candidates: 10,
+            pruned_lb_kim: 3,
+            pruned_lb_paa: 2,
+            pruned_lb_keogh: 1,
+            abandoned: 1,
+            dtw_evals: 3,
+        };
+        assert_eq!(a.pruned() + a.dtw_started(), a.candidates);
+        assert!((a.dtw_fraction() - 0.4).abs() < 1e-12);
+        let b = a;
+        a.merge(&b);
+        assert_eq!(a.candidates, 20);
+        assert_eq!(a.dtw_evals, 6);
+        assert_eq!(SearchStats::default().dtw_fraction(), 0.0);
+        let line = a.to_string();
+        assert!(line.contains("candidates=20"), "{line}");
+    }
+}

@@ -15,13 +15,26 @@
 //!
 //! Python never runs on the request path: `make artifacts` lowers the HLO
 //! once, and [`runtime`] loads and executes it through the PJRT C API
-//! (`xla` crate). Every runtime computation also has a bit-compatible pure
-//! Rust fallback ([`signal`], [`dtw`]) used when artifacts are absent and to
-//! cross-check the compiled path in tests.
+//! (`xla` crate, behind the `pjrt` cargo feature). Every runtime
+//! computation also has a bit-compatible pure Rust fallback ([`signal`],
+//! [`dtw`]) used when artifacts are absent and to cross-check the compiled
+//! path in tests.
+//!
+//! On top of the paper's brute-force matching phase sits the [`index`]
+//! layer: a lower-bound-cascade similarity index
+//! (LB_Kim → PAA envelope → LB_Keogh → early-abandoning banded DTW) that
+//! makes k-nearest-neighbour retrieval sublinear in reference-database
+//! size while returning exactly the brute-force neighbours. The
+//! coordinator exposes it as
+//! [`coordinator::matcher::Matcher::match_app_indexed`] and the serve
+//! loop's `knn` command; pruning effectiveness is tracked in
+//! [`coordinator::metrics::Metrics`] and measured by
+//! `benches/index_perf.rs`.
 
 pub mod coordinator;
 pub mod database;
 pub mod dtw;
+pub mod index;
 pub mod runtime;
 pub mod signal;
 pub mod simulator;
@@ -39,6 +52,7 @@ pub mod prelude {
     };
     pub use crate::database::{profile::ProfileEntry, store::ReferenceDb};
     pub use crate::dtw::{corr::similarity_percent, full::DtwResult};
+    pub use crate::index::{IndexedDb, Neighbor, SearchStats};
     pub use crate::simulator::job::JobConfig;
     pub use crate::workloads::AppId;
 }

@@ -133,8 +133,10 @@ fn main() -> anyhow::Result<()> {
             let mut sys = system(&args);
             let port = args.opt::<u16>("port", 7070);
             let runtime = sys.runtime();
+            // Wrap the store in the similarity index once at startup; every
+            // connection then shares the immutable envelope cache.
             let state = ServerState {
-                db: std::mem::take(&mut sys.db),
+                db: mrtuner::index::IndexedDb::from_db(std::mem::take(&mut sys.db)),
                 runtime,
                 metrics: mrtuner::coordinator::metrics::Metrics::new(),
             };

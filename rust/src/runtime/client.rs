@@ -4,9 +4,13 @@
 //! `Rc`-based); [`super::executor::RuntimeHandle`] wraps it in a dedicated
 //! service thread for the multi-threaded coordinator.
 
+#[cfg(feature = "pjrt")]
 use super::artifacts::{EntryKind, Manifest};
+#[cfg(feature = "pjrt")]
 use anyhow::{anyhow, Context, Result};
+#[cfg(feature = "pjrt")]
 use std::collections::BTreeMap;
+#[cfg(feature = "pjrt")]
 use std::path::Path;
 
 /// A padded, fixed-bucket f32 series plus its true length.
@@ -54,11 +58,18 @@ impl BatchOutput {
 }
 
 /// Compiled executables keyed by artifact name.
+///
+/// Only compiled with the `pjrt` cargo feature (which needs the `xla`
+/// PJRT bindings — see `Cargo.toml`); the default build uses the pure-Rust
+/// fallbacks everywhere and [`super::executor::RuntimeService::start`]
+/// reports the runtime as unavailable.
+#[cfg(feature = "pjrt")]
 pub struct Runtime {
     manifest: Manifest,
     executables: BTreeMap<String, xla::PjRtLoadedExecutable>,
 }
 
+#[cfg(feature = "pjrt")]
 impl Runtime {
     /// Load every artifact in `dir` and compile it on the PJRT CPU client.
     pub fn load(dir: &Path) -> Result<Runtime> {

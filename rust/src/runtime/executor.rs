@@ -2,9 +2,11 @@
 //! non-`Send` [`Runtime`]; [`RuntimeHandle`] is a cheap, cloneable,
 //! `Send + Sync` handle the coordinator's worker threads use.
 
-use super::client::{BatchOutput, Padded, Runtime};
+use super::client::{BatchOutput, Padded};
+#[cfg(feature = "pjrt")]
+use super::client::Runtime;
 use anyhow::{anyhow, Result};
-use std::path::{Path, PathBuf};
+use std::path::Path;
 use std::sync::mpsc;
 use std::thread;
 
@@ -42,8 +44,21 @@ pub struct RuntimeService {
 
 impl RuntimeService {
     /// Start the service, compiling artifacts from `dir`.
+    ///
+    /// Without the `pjrt` cargo feature there is no PJRT client to compile
+    /// them on, so this always errors and callers fall back to pure Rust.
+    #[cfg(not(feature = "pjrt"))]
     pub fn start(dir: &Path) -> Result<RuntimeService> {
-        let dir: PathBuf = dir.to_path_buf();
+        Err(anyhow!(
+            "built without the `pjrt` feature; cannot load artifacts from {}",
+            dir.display()
+        ))
+    }
+
+    /// Start the service, compiling artifacts from `dir`.
+    #[cfg(feature = "pjrt")]
+    pub fn start(dir: &Path) -> Result<RuntimeService> {
+        let dir = dir.to_path_buf();
         let (tx, rx) = mpsc::channel::<Request>();
         let (ready_tx, ready_rx) = mpsc::channel::<Result<(usize, Vec<usize>)>>();
         let join = thread::Builder::new()

@@ -71,6 +71,50 @@ fn five_app_database_still_ranks_text_apps_together() {
 }
 
 #[test]
+fn indexed_matching_agrees_with_brute_force_end_to_end() {
+    use mrtuner::coordinator::matcher::Matcher;
+
+    // Four reference apps over the small grid, like a production DB slice.
+    // Grid seed 11 is the one profile_match_tune_end_to_end already pins
+    // to the paper's Exim -> WordCount headline result.
+    let grid = ConfigGrid::small(11);
+    let mut sys = system();
+    for app in [
+        AppId::WordCount,
+        AppId::TeraSort,
+        AppId::Grep,
+        AppId::InvertedIndex,
+    ] {
+        sys.profile_app(app, &grid);
+    }
+    let m = Matcher::new(&sys.config, None);
+    let brute = m.match_app(AppId::EximParse, &grid, &sys.db);
+    let idx = IndexedDb::from_db(std::mem::take(&mut sys.db));
+
+    // Full re-rank (k >= bucket size): vote-for-vote identical to brute
+    // force by construction.
+    let (full, full_stats) = m.match_app_indexed(AppId::EximParse, &grid, &idx, usize::MAX);
+    assert_eq!(full.winner, brute.winner);
+    assert_eq!(full.tally, brute.tally);
+    assert_eq!(full_stats.candidates, 4 * grid.len() as u64);
+
+    // Sublinear retrieval (top-1 by banded-DTW distance) on the paper's
+    // two-reference-app scenario: the headline winner must not change, and
+    // only one correlation per config is paid.
+    let mut sys2 = system();
+    sys2.profile_app(AppId::WordCount, &grid);
+    sys2.profile_app(AppId::TeraSort, &grid);
+    let brute2 = m.match_app(AppId::EximParse, &grid, &sys2.db);
+    assert_eq!(brute2.winner, Some(AppId::WordCount), "paper's headline result");
+    let idx2 = IndexedDb::from_db(std::mem::take(&mut sys2.db));
+    let (fast, stats) = m.match_app_indexed(AppId::EximParse, &grid, &idx2, 1);
+    assert_eq!(fast.winner, brute2.winner, "tally {:?}", fast.tally);
+    assert_eq!(fast.cells.len(), grid.len());
+    assert_eq!(stats.candidates, 2 * grid.len() as u64);
+    assert_eq!(stats.pruned() + stats.dtw_started(), stats.candidates);
+}
+
+#[test]
 fn real_execution_calibration_is_sane() {
     // The calibrate path really executes the map/reduce functions; its
     // measured selectivities must be close to the cost-model constants the

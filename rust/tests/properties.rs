@@ -1,7 +1,13 @@
 //! Seeded property sweeps across module boundaries (proptest is not
 //! vendorable offline; `util::rng::Pcg32` drives the case generation).
 
-use mrtuner::dtw::{band_radius, banded::dtw_banded, fastdtw::fastdtw, full};
+use mrtuner::dtw::{
+    band_radius,
+    banded::{dtw_banded, dtw_banded_distance_cutoff},
+    fastdtw::fastdtw,
+    full,
+};
+use mrtuner::index::{lb, Envelope, IndexedDb, DEFAULT_BLOCK};
 use mrtuner::signal::{self, chebyshev::Sos, normalize, resample, wavelet};
 use mrtuner::simulator::cluster::ClusterConfig;
 use mrtuner::simulator::engine::simulate;
@@ -38,6 +44,89 @@ fn dtw_impl_ordering_invariants() {
         assert!(fd >= f - 1e-9, "fastdtw below exact: {fd} < {f}");
         let wide = dtw_banded(&x, &y, n.max(m)).distance;
         assert!((wide - f).abs() < 1e-9);
+    }
+}
+
+#[test]
+fn lower_bound_cascade_invariant() {
+    // Every pruning stage under-estimates the banded distance it gates
+    // (that is what makes the index exact), the PAA bound never exceeds
+    // the Keogh bound it summarizes, and the unconstrained DTW never
+    // exceeds the banded one. Note LB_Kim and LB_Keogh are *not* mutually
+    // ordered: Kim uses exact endpoint costs, Keogh relaxed envelopes.
+    let mut g = Pcg32::new(120, 1);
+    for _ in 0..40 {
+        let n = 4 + g.below(200) as usize;
+        let m = 4 + g.below(200) as usize;
+        let x = series(&mut g, n);
+        let y = series(&mut g, m);
+        let r = band_radius(n, m);
+        let env = Envelope::build(&y, DEFAULT_BLOCK);
+        let qext = lb::query_extrema(&x, DEFAULT_BLOCK);
+
+        let banded = dtw_banded(&x, &y, r).distance;
+        let exact = full::dtw_distance(&x, &y);
+        let kim = lb::lb_kim(&x, &y);
+        let keogh = lb::lb_keogh(&x, &env, r);
+        let paa = lb::lb_paa(&qext, n, DEFAULT_BLOCK, &env, r);
+
+        assert!(kim <= exact + 1e-9, "LB_Kim {kim} > full {exact}");
+        assert!(kim <= banded + 1e-9, "LB_Kim {kim} > banded {banded}");
+        assert!(paa <= keogh + 1e-9, "LB_PAA {paa} > LB_Keogh {keogh}");
+        assert!(keogh <= banded + 1e-9, "LB_Keogh {keogh} > banded {banded}");
+        assert!(exact <= banded + 1e-9, "full {exact} > banded {banded}");
+
+        // The early-abandoning DP is bit-identical to the banded DP when
+        // it completes, and only abandons above the cutoff.
+        let ea = dtw_banded_distance_cutoff(&x, &y, r, f64::INFINITY).unwrap();
+        assert_eq!(ea.to_bits(), banded.to_bits());
+        match dtw_banded_distance_cutoff(&x, &y, r, banded * 0.5) {
+            None => assert!(banded > 0.0),
+            Some(d) => assert_eq!(d.to_bits(), banded.to_bits()),
+        }
+    }
+}
+
+#[test]
+fn indexed_top1_matches_brute_force_across_seeds() {
+    // The cascade is a pure accelerator: for any seed, database and query,
+    // indexed top-1 (and top-3) equal the brute-force scan — same entry,
+    // bit-identical distance.
+    use mrtuner::database::profile::ProfileEntry;
+    use mrtuner::database::store::ReferenceDb;
+    for seed in 1..=6u64 {
+        let mut g = Pcg32::new(200 + seed, seed);
+        let mut db = ReferenceDb::new();
+        let apps = [AppId::WordCount, AppId::TeraSort, AppId::EximParse];
+        for i in 0..40usize {
+            let len = 30 + g.below(300) as usize;
+            db.insert(ProfileEntry {
+                app: apps[i % apps.len()],
+                config: JobConfig::new(1 + i, 2, 10.0, 20.0),
+                series: series(&mut g, len),
+                raw_len: len,
+                completion_secs: 1.0,
+            });
+        }
+        let idx = IndexedDb::from_db(db);
+        for _ in 0..5 {
+            let q = series(&mut g, 30 + g.below(300) as usize);
+            let (fast, stats) = idx.knn(&q, 3);
+            let slow = idx.brute_force(&q, 3);
+            assert_eq!(fast.len(), slow.len());
+            for (a, b) in fast.iter().zip(&slow) {
+                assert_eq!(a.index, b.index, "seed {seed}");
+                assert_eq!(
+                    a.distance.to_bits(),
+                    b.distance.to_bits(),
+                    "seed {seed}: {} vs {}",
+                    a.distance,
+                    b.distance
+                );
+            }
+            assert_eq!(stats.candidates, 40);
+            assert_eq!(stats.pruned() + stats.dtw_started(), stats.candidates);
+        }
     }
 }
 
