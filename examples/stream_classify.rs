@@ -1,0 +1,95 @@
+//! Streaming classification quickstart: profile a reference database,
+//! then classify a *live* CPU stream while the job is still running.
+//!
+//! A `StreamSession` ingests the capture batch by batch (here replayed
+//! from a simulated run via `LiveStream`), tightens monotone lower bounds
+//! per reference as samples arrive, culls hopeless candidates, and
+//! declares an early decision once the margin policy is satisfied —
+//! typically well before the job finishes. Closing the session runs the
+//! exact indexed search over the full capture for comparison.
+//!
+//! Run with: `cargo run --release --example stream_classify`
+
+use mrtuner::coordinator::profiler::Profiler;
+use mrtuner::coordinator::{ConfigGrid, SystemConfig};
+use mrtuner::prelude::*;
+use mrtuner::simulator::engine::simulate;
+use mrtuner::util::rng::Rng;
+use mrtuner::workloads::workload_for;
+
+fn main() {
+    mrtuner::util::logging::init();
+    let grid = ConfigGrid::small(1);
+    let sc = SystemConfig {
+        use_runtime: false,
+        ..SystemConfig::default()
+    };
+
+    // Reference database: WordCount and TeraSort profiled over the grid.
+    let p = Profiler::new(&sc, None);
+    let mut idx = IndexedDb::new();
+    for app in [AppId::WordCount, AppId::TeraSort] {
+        for entry in p.profile(app, &grid) {
+            idx.insert(entry);
+        }
+    }
+    println!("reference DB: {} entries over {} config sets", idx.len(), grid.len());
+
+    // A "new" job starts: WordCount under the first config set, fresh
+    // noise seed. We only get to see its CPU samples as they happen.
+    let cfg = grid.configs[0];
+    let run = simulate(
+        workload_for(AppId::WordCount).as_ref(),
+        &cfg,
+        &sc.cluster,
+        &sc.noise,
+        &mut Rng::new(2024),
+    );
+    let mut source = run.live_stream();
+    let total = source.final_len();
+    println!(
+        "live job started under {} ({total} samples total, but nobody knows the pattern yet)",
+        cfg.label(),
+    );
+
+    let mut session = StreamSession::open(
+        &idx,
+        Some(&cfg),
+        FinalLen::Known(total),
+        DecisionPolicy::default(),
+    );
+
+    // Feed 10-second SysStat batches until the session declares.
+    while let Some(batch) = source.next_batch(10) {
+        let decision = session.push(&idx, batch).cloned();
+        if let Some(d) = decision {
+            println!(
+                "EARLY DECISION after {} of {total} samples ({:.0}% observed): {} (similarity {:.1}%, {} candidates culled)",
+                d.at_sample,
+                d.fraction * 100.0,
+                d.app.name(),
+                d.similarity,
+                session.stats().culled,
+            );
+            break;
+        }
+    }
+
+    // Drain the rest of the run and compare with the exact offline answer.
+    while let Some(batch) = source.next_batch(10) {
+        session.push(&idx, batch);
+    }
+    let (top, stats) = session.finalize(&idx, 1);
+    let offline = idx.entries()[top[0].index].app;
+    println!(
+        "offline full-series answer: {} (distance {:.4}; search: {})",
+        offline.name(),
+        top[0].distance,
+        stats
+    );
+    match session.decision() {
+        Some(d) if d.app == offline => println!("early decision AGREES with the full series"),
+        Some(d) => println!("early decision ({}) disagrees with the full series", d.app.name()),
+        None => println!("policy never fired; the exact finalize answered instead"),
+    }
+}

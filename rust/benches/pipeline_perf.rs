@@ -54,6 +54,7 @@ fn main() {
         },
         runtime: sys.runtime(),
         metrics: Metrics::new(),
+        sessions: mrtuner::streaming::SessionManager::new(),
     };
     let req = Json::obj(vec![
         ("cmd", Json::Str("match".into())),

@@ -1,0 +1,218 @@
+//! Perf bench (streaming layer): anytime classification of live CPU
+//! streams vs the full-series indexed matcher.
+//!
+//! For each reference-DB size (50 and 500 entries: 5 apps × 10/100 config
+//! sets) a fleet of simulator-generated sessions is streamed into the
+//! online classifier. Per session we record whether the early-exit policy
+//! declared the same application the full-series indexed search declares,
+//! how much of the series it observed before deciding, and the wall-clock
+//! feed cost. The acceptance bar at DB=500: >= 95% agreement while
+//! observing <= 60% of the series on average.
+//!
+//! Results go to stdout and `BENCH_stream.json` (the perf trajectory
+//! file). `MRTUNER_BENCH_SMOKE=1` shrinks the sweep for CI.
+//!
+//! Run with: `cargo bench --bench stream_perf`
+
+use mrtuner::coordinator::batcher::prepare_query;
+use mrtuner::coordinator::profiler::Profiler;
+use mrtuner::coordinator::{ConfigGrid, SystemConfig};
+use mrtuner::index::IndexedDb;
+use mrtuner::simulator::engine::simulate;
+use mrtuner::simulator::job::JobConfig;
+use mrtuner::streaming::{DecisionPolicy, FinalLen, StreamSession, StreamStats};
+use mrtuner::util::json::Json;
+use mrtuner::util::rng::Rng;
+use mrtuner::workloads::{workload_for, AppId};
+use std::time::Instant;
+
+/// SysStat upload period, in 1 Hz samples per feed batch.
+const FEED_BATCH: usize = 10;
+
+/// Short-job config ranges so streams stay inside the incremental regime
+/// (the paper's full ranges produce multi-thousand-second runs that the
+/// pipeline resamples; streaming those defers every answer to finalize).
+fn stream_grid(n: usize, seed: u64) -> ConfigGrid {
+    let mut rng = Rng::new(seed ^ 0x57ea_4042);
+    let configs = (0..n)
+        .map(|_| {
+            JobConfig::new(
+                rng.range_u64(2, 13) as usize,
+                rng.range_u64(1, 7) as usize,
+                rng.range_u64(5, 21) as f64,
+                rng.range_u64(30, 101) as f64,
+            )
+        })
+        .collect();
+    ConfigGrid { configs }
+}
+
+struct SizeResult {
+    db: usize,
+    sessions: usize,
+    agreement: f64,
+    early_rate: f64,
+    mean_fraction: f64,
+    mean_decision_sample: f64,
+    mean_session_ms: f64,
+    culled_per_session: f64,
+    stream: StreamStats,
+}
+
+/// `session_configs` picks how many of the grid's config sets are driven
+/// as live sessions (one session per config set per app).
+fn run_size(db_configs: usize, session_configs: usize, sc: &SystemConfig) -> SizeResult {
+    let grid = stream_grid(db_configs, 1);
+    let profiler = Profiler::new(sc, None);
+    let mut idx = IndexedDb::new();
+    for &app in AppId::all() {
+        for entry in profiler.profile(app, &grid) {
+            idx.insert(entry);
+        }
+    }
+    println!(
+        "  reference DB: {} entries ({} apps x {} config sets)",
+        idx.len(),
+        AppId::all().len(),
+        grid.len()
+    );
+
+    let policy = DecisionPolicy::default();
+    let mut sessions = 0usize;
+    let mut agree = 0usize;
+    let mut early = 0usize;
+    let mut fraction_sum = 0.0;
+    let mut decision_sample_sum = 0.0;
+    let mut wall_sum = 0.0;
+    let mut stream = StreamStats::default();
+
+    for (si, cfg) in grid.configs.iter().take(session_configs.min(grid.len())).enumerate() {
+        for (ai, &app) in AppId::all().iter().enumerate() {
+            // Fresh capture of a known app under a profiled config set —
+            // different noise seed than the stored reference.
+            let w = workload_for(app);
+            let r = simulate(
+                w.as_ref(),
+                cfg,
+                &sc.cluster,
+                &sc.noise,
+                &mut Rng::new(0xbeef ^ ((si as u64) << 8) ^ (ai as u64)),
+            );
+
+            // Offline truth: full-series indexed top-1 in this bucket.
+            let q = prepare_query(&r.cpu_noisy);
+            let (offline, _) = idx.knn_in_config(&q, &cfg.label(), 1);
+            let offline_app = idx.entries()[offline[0].index].app;
+
+            let mut session = StreamSession::open(
+                &idx,
+                Some(cfg),
+                FinalLen::Known(r.cpu_noisy.len()),
+                policy,
+            );
+            let mut source = r.live_stream();
+            let t0 = Instant::now();
+            while let Some(chunk) = source.next_batch(FEED_BATCH) {
+                if session.push(&idx, chunk).is_some() {
+                    break;
+                }
+            }
+            wall_sum += t0.elapsed().as_secs_f64();
+
+            sessions += 1;
+            stream.merge(&session.stats());
+            match session.decision() {
+                Some(d) => {
+                    early += 1;
+                    fraction_sum += d.fraction;
+                    decision_sample_sum += d.at_sample as f64;
+                    if d.app == offline_app {
+                        agree += 1;
+                    }
+                }
+                None => {
+                    // Ran to completion: the exact finalize IS the offline
+                    // answer, at fraction 1.0.
+                    fraction_sum += 1.0;
+                    decision_sample_sum += r.cpu_noisy.len() as f64;
+                    agree += 1;
+                }
+            }
+        }
+    }
+
+    SizeResult {
+        db: idx.len(),
+        sessions,
+        agreement: agree as f64 / sessions as f64,
+        early_rate: early as f64 / sessions as f64,
+        mean_fraction: fraction_sum / sessions as f64,
+        mean_decision_sample: decision_sample_sum / sessions as f64,
+        mean_session_ms: wall_sum / sessions as f64 * 1e3,
+        culled_per_session: stream.culled as f64 / sessions as f64,
+        stream,
+    }
+}
+
+fn main() {
+    mrtuner::util::logging::init();
+    let smoke = std::env::var("MRTUNER_BENCH_SMOKE").is_ok();
+    let sc = SystemConfig {
+        use_runtime: false,
+        ..SystemConfig::default()
+    };
+
+    // (db config sets, session config sets): DB entries = configs x 5
+    // apps, sessions = session configs x 5 apps.
+    let plan: &[(usize, usize)] = if smoke {
+        &[(10, 4)] // DB=50, 20 sessions
+    } else {
+        &[(10, 10), (100, 20)] // DB=50 (50 sessions), DB=500 (100 sessions)
+    };
+
+    let mut size_rows = Vec::new();
+    for &(db_configs, session_configs) in plan {
+        println!("== streaming classification, DB = {} entries ==", db_configs * AppId::all().len());
+        let r = run_size(db_configs, session_configs, &sc);
+        println!(
+            "  sessions={} agreement={:.1}% early={:.1}% mean_fraction={:.2} mean_decision_sample={:.0} mean_session={:.2}ms culled/session={:.1}",
+            r.sessions,
+            r.agreement * 100.0,
+            r.early_rate * 100.0,
+            r.mean_fraction,
+            r.mean_decision_sample,
+            r.mean_session_ms,
+            r.culled_per_session,
+        );
+        println!("  work: {}", r.stream);
+        if r.db >= 500 {
+            let pass = r.agreement >= 0.95 && r.mean_fraction <= 0.60;
+            println!(
+                "  acceptance (DB=500): agreement >= 95% and mean_fraction <= 0.60: {}",
+                if pass { "PASS" } else { "FAIL" }
+            );
+        }
+        size_rows.push(Json::obj(vec![
+            ("db", Json::Num(r.db as f64)),
+            ("sessions", Json::Num(r.sessions as f64)),
+            ("agreement", Json::Num(r.agreement)),
+            ("early_rate", Json::Num(r.early_rate)),
+            ("mean_fraction", Json::Num(r.mean_fraction)),
+            ("mean_decision_sample", Json::Num(r.mean_decision_sample)),
+            ("mean_session_ms", Json::Num(r.mean_session_ms)),
+            ("culled_per_session", Json::Num(r.culled_per_session)),
+            ("lb_evals", Json::Num(r.stream.lb_evals as f64)),
+            ("dp_evals", Json::Num(r.stream.dp_evals as f64)),
+            ("dp_abandoned", Json::Num(r.stream.dp_abandoned as f64)),
+        ]));
+    }
+
+    let report = Json::obj(vec![
+        ("bench", Json::Str("stream_perf".into())),
+        ("smoke", Json::Bool(smoke)),
+        ("feed_batch", Json::Num(FEED_BATCH as f64)),
+        ("sizes", Json::arr(size_rows)),
+    ]);
+    std::fs::write("BENCH_stream.json", report.to_pretty()).expect("write BENCH_stream.json");
+    println!("wrote BENCH_stream.json");
+}

@@ -6,11 +6,13 @@
 
 use super::batcher::{prepare_query, similarities_auto};
 use super::{ConfigGrid, SystemConfig};
+use crate::database::profile::ProfileEntry;
 use crate::database::store::ReferenceDb;
 use crate::dtw::corr::{similarity_percent_banded, MATCH_THRESHOLD};
-use crate::index::{IndexedDb, SearchStats};
+use crate::index::{IndexedDb, Neighbor, SearchStats};
 use crate::runtime::RuntimeHandle;
 use crate::simulator::job::JobConfig;
+use crate::streaming::{DecisionPolicy, FinalLen, StreamSession, StreamStats};
 use crate::util::pool::par_map;
 use crate::workloads::AppId;
 use std::collections::BTreeMap;
@@ -45,6 +47,24 @@ pub struct MatchOutcome {
     pub winner: Option<AppId>,
     /// Votes per app.
     pub tally: BTreeMap<&'static str, usize>,
+}
+
+/// Outcome of the streaming matching phase ([`Matcher::match_stream`]).
+#[derive(Debug, Clone)]
+pub struct StreamMatchReport {
+    /// Votes/winner in the same shape as the offline matching phase.
+    pub outcome: MatchOutcome,
+    /// Index-search counters from sessions that ran to completion.
+    pub search: SearchStats,
+    /// Aggregated per-session streaming work counters.
+    pub stream: StreamStats,
+    /// Sessions whose vote was fixed before the run completed.
+    pub early_decisions: usize,
+    /// Sessions driven (one per grid config).
+    pub sessions: usize,
+    /// Mean fraction of each run observed before its vote was fixed
+    /// (1.0 for sessions that ran to completion).
+    pub mean_fraction: f64,
 }
 
 /// Runs the matching phase.
@@ -168,30 +188,7 @@ impl Matcher {
             par_map(&grid.configs, self.config.workers, |cfg| {
                 let q = prepare_query(&self.profile_query(app, cfg).cpu_noisy);
                 let (neighbors, stats) = idx.knn_in_config(&q, &cfg.label(), rerank);
-
-                let entries = idx.entries();
-                let mut cells = Vec::with_capacity(neighbors.len());
-                let mut best: Option<(AppId, f64)> = None;
-                for nb in &neighbors {
-                    let e = &entries[nb.index];
-                    let s = similarity_percent_banded(&q, &e.series);
-                    cells.push(SimilarityCell {
-                        config: *cfg,
-                        reference_app: e.app,
-                        reference_config: e.config,
-                        similarity: s,
-                    });
-                    if best.map_or(true, |(_, bs)| s > bs) {
-                        best = Some((e.app, s));
-                    }
-                }
-                let vote = ConfigVote {
-                    config: *cfg,
-                    best_app: best
-                        .filter(|(_, s)| *s >= MATCH_THRESHOLD)
-                        .map(|(a, _)| a),
-                    best_similarity: best.map(|(_, s)| s).unwrap_or(0.0),
-                };
+                let (cells, vote) = score_neighbors(&q, &neighbors, idx.entries(), cfg);
                 (cells, vote, stats)
             });
 
@@ -214,6 +211,124 @@ impl Matcher {
             },
             stats,
         )
+    }
+
+    /// Streaming matching phase: each per-config query is *streamed* into
+    /// a [`StreamSession`] batch by batch instead of being captured whole,
+    /// and its vote is fixed the moment the session's early-exit policy
+    /// declares — before the simulated job finishes. Sessions that never
+    /// declare run to completion and finalize through the exact indexed
+    /// search, so with [`DecisionPolicy::never`] this reproduces
+    /// [`Matcher::match_app_indexed`] vote for vote (pinned in tests).
+    ///
+    /// `batch` is the feed granularity in samples (a SysStat agent's
+    /// upload period); `rerank` bounds the finalists scored on
+    /// finalization, exactly like `match_app_indexed`.
+    pub fn match_stream(
+        &self,
+        app: AppId,
+        grid: &ConfigGrid,
+        idx: &IndexedDb,
+        batch: usize,
+        rerank: usize,
+        policy: DecisionPolicy,
+    ) -> StreamMatchReport {
+        let batch = batch.max(1);
+        let rerank = rerank.max(1);
+        struct PerConfig {
+            cells: Vec<SimilarityCell>,
+            vote: ConfigVote,
+            search: SearchStats,
+            stream: StreamStats,
+            fraction: f64,
+            early: bool,
+        }
+        let per_config: Vec<PerConfig> = par_map(&grid.configs, self.config.workers, |cfg| {
+            let sim = self.profile_query(app, cfg);
+            let mut source = sim.live_stream();
+            let mut session = StreamSession::open(
+                idx,
+                Some(cfg),
+                FinalLen::Known(source.final_len()),
+                policy,
+            );
+            while let Some(chunk) = source.next_batch(batch) {
+                if session.push(idx, chunk).is_some() {
+                    break;
+                }
+            }
+            let entries = idx.entries();
+            match session.decision().cloned() {
+                Some(d) => PerConfig {
+                    cells: vec![SimilarityCell {
+                        config: *cfg,
+                        reference_app: d.app,
+                        reference_config: d.config,
+                        similarity: d.similarity,
+                    }],
+                    vote: ConfigVote {
+                        config: *cfg,
+                        best_app: Some(d.app).filter(|_| d.similarity >= MATCH_THRESHOLD),
+                        best_similarity: d.similarity,
+                    },
+                    search: SearchStats::default(),
+                    stream: session.stats(),
+                    fraction: d.fraction,
+                    early: true,
+                },
+                None => {
+                    // Ran to completion: identical to the offline indexed
+                    // path (same query preparation, same search, same
+                    // correlation re-rank via the shared scorer).
+                    let (neighbors, search) = session.finalize(idx, rerank);
+                    let q = prepare_query(&sim.cpu_noisy);
+                    let (cells, vote) = score_neighbors(&q, &neighbors, entries, cfg);
+                    PerConfig {
+                        cells,
+                        vote,
+                        search,
+                        stream: session.stats(),
+                        fraction: 1.0,
+                        early: false,
+                    }
+                }
+            }
+        });
+
+        let mut cells = Vec::new();
+        let mut votes = Vec::new();
+        let mut search = SearchStats::default();
+        let mut stream = StreamStats::default();
+        let mut early_decisions = 0;
+        let mut fraction_sum = 0.0;
+        let sessions = per_config.len();
+        for pc in per_config {
+            cells.extend(pc.cells);
+            votes.push(pc.vote);
+            search.merge(&pc.search);
+            stream.merge(&pc.stream);
+            early_decisions += pc.early as usize;
+            fraction_sum += pc.fraction;
+        }
+        let (tally, winner) = tally_votes(&votes);
+        StreamMatchReport {
+            outcome: MatchOutcome {
+                query_app: app,
+                cells,
+                votes,
+                winner,
+                tally,
+            },
+            search,
+            stream,
+            early_decisions,
+            sessions,
+            mean_fraction: if sessions == 0 {
+                0.0
+            } else {
+                fraction_sum / sessions as f64
+            },
+        }
     }
 
     /// Cross-config similarity table (Table 1 reproduction): the query app
@@ -260,6 +375,39 @@ impl Matcher {
         }
         h
     }
+}
+
+/// Correlation re-rank of retrieved neighbours into similarity cells and
+/// the per-config vote. Shared by the offline indexed path and the
+/// streaming finalization path so the two can never drift — the
+/// never-policy equivalence test pins them to each other.
+fn score_neighbors(
+    q: &[f64],
+    neighbors: &[Neighbor],
+    entries: &[ProfileEntry],
+    cfg: &JobConfig,
+) -> (Vec<SimilarityCell>, ConfigVote) {
+    let mut cells = Vec::with_capacity(neighbors.len());
+    let mut best: Option<(AppId, f64)> = None;
+    for nb in neighbors {
+        let e = &entries[nb.index];
+        let s = similarity_percent_banded(q, &e.series);
+        cells.push(SimilarityCell {
+            config: *cfg,
+            reference_app: e.app,
+            reference_config: e.config,
+            similarity: s,
+        });
+        if best.map_or(true, |(_, bs)| s > bs) {
+            best = Some((e.app, s));
+        }
+    }
+    let vote = ConfigVote {
+        config: *cfg,
+        best_app: best.filter(|(_, s)| *s >= MATCH_THRESHOLD).map(|(a, _)| a),
+        best_similarity: best.map(|(_, s)| s).unwrap_or(0.0),
+    };
+    (cells, vote)
 }
 
 /// Per-config votes → (votes per app, app with the most accepted CORRs).
@@ -393,6 +541,64 @@ mod tests {
         assert_eq!(outcome.winner, None);
         assert!(outcome.cells.is_empty());
         assert_eq!(stats.candidates, 0);
+    }
+
+    #[test]
+    fn stream_match_with_never_policy_equals_indexed() {
+        // Sessions that are never allowed to exit early must reproduce the
+        // offline indexed matching phase vote for vote.
+        let grid = ConfigGrid::small(7);
+        let db = build_db(&grid);
+        let m = Matcher::new(&sysconfig(), None);
+        let idx = IndexedDb::from_db(db);
+        let (offline, _) = m.match_app_indexed(AppId::EximParse, &grid, &idx, 1);
+        let report = m.match_stream(
+            AppId::EximParse,
+            &grid,
+            &idx,
+            16,
+            1,
+            crate::streaming::DecisionPolicy::never(),
+        );
+        assert_eq!(report.early_decisions, 0);
+        assert!((report.mean_fraction - 1.0).abs() < 1e-12);
+        assert_eq!(report.outcome.winner, offline.winner);
+        assert_eq!(report.outcome.tally, offline.tally);
+        for (a, b) in report.outcome.votes.iter().zip(&offline.votes) {
+            assert_eq!(a.best_app, b.best_app, "config {}", a.config.label());
+            assert!(
+                (a.best_similarity - b.best_similarity).abs() < 1e-12,
+                "config {}: {} vs {}",
+                a.config.label(),
+                a.best_similarity,
+                b.best_similarity
+            );
+        }
+    }
+
+    #[test]
+    fn stream_match_early_policy_still_finds_the_right_app() {
+        let grid = ConfigGrid::small(1);
+        let db = build_db(&grid);
+        let m = Matcher::new(&sysconfig(), None);
+        let idx = IndexedDb::from_db(db);
+        let report = m.match_stream(
+            AppId::WordCount,
+            &grid,
+            &idx,
+            16,
+            1,
+            crate::streaming::DecisionPolicy::default(),
+        );
+        assert_eq!(report.outcome.winner, Some(AppId::WordCount));
+        assert_eq!(report.sessions, grid.len());
+        assert!(
+            report.early_decisions >= 1,
+            "early-exit policy never fired: mean_fraction={}",
+            report.mean_fraction
+        );
+        assert!(report.mean_fraction <= 1.0);
+        assert!(report.stream.samples > 0 && report.stream.lb_evals > 0);
     }
 
     #[test]

@@ -2,6 +2,7 @@
 //! the perf benches.
 
 use crate::index::SearchStats;
+use crate::streaming::StreamStats;
 use crate::util::stats::Welford;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
@@ -23,7 +24,21 @@ pub struct Metrics {
     pub index_pruned_lb_keogh: AtomicU64,
     pub index_abandoned: AtomicU64,
     pub index_dtw_evals: AtomicU64,
+    /// Streaming-session counters: lifecycle, per-session work folded in
+    /// at close/reap time, and early decisions.
+    pub stream_opened: AtomicU64,
+    pub stream_closed: AtomicU64,
+    pub stream_reaped: AtomicU64,
+    pub stream_batches: AtomicU64,
+    pub stream_culled: AtomicU64,
+    pub stream_decisions: AtomicU64,
     latency: Mutex<Welford>,
+    /// Prefix fraction observed when a session declared its decision —
+    /// the streaming classifier's headline "how early" number.
+    decision_fraction: Mutex<Welford>,
+    /// Samples observed at decision time (decision latency in samples;
+    /// at the 1 Hz SysStat rate this is seconds of job runtime).
+    decision_samples: Mutex<Welford>,
 }
 
 impl Metrics {
@@ -72,6 +87,45 @@ impl Metrics {
         }
     }
 
+    pub fn inc_stream_opened(&self) {
+        self.stream_opened.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn inc_stream_closed(&self) {
+        self.stream_closed.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn add_stream_reaped(&self, n: u64) {
+        self.stream_reaped.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Fold one finished session's work counters into the registry.
+    pub fn record_stream_session(&self, s: &StreamStats) {
+        self.stream_batches.fetch_add(s.batches, Ordering::Relaxed);
+        self.stream_culled.fetch_add(s.culled, Ordering::Relaxed);
+    }
+
+    /// Record an early decision: at which sample and prefix fraction it
+    /// was declared.
+    pub fn record_stream_decision(&self, at_sample: usize, fraction: f64) {
+        self.stream_decisions.fetch_add(1, Ordering::Relaxed);
+        self.decision_samples
+            .lock()
+            .expect("decision samples lock")
+            .push(at_sample as f64);
+        self.decision_fraction
+            .lock()
+            .expect("decision fraction lock")
+            .push(fraction);
+    }
+
+    /// Snapshot: (decisions, mean samples at decision, mean fraction).
+    pub fn decision_summary(&self) -> (u64, f64, f64) {
+        let s = self.decision_samples.lock().expect("decision samples lock");
+        let f = self.decision_fraction.lock().expect("decision fraction lock");
+        (s.count(), s.mean(), f.mean())
+    }
+
     /// Record a request latency.
     pub fn observe_latency(&self, seconds: f64) {
         self.latency.lock().expect("latency lock").push(seconds);
@@ -94,8 +148,9 @@ impl Metrics {
     /// One-line human-readable report.
     pub fn report(&self) -> String {
         let (n, mean, std, min, max) = self.latency_summary();
+        let (decisions, mean_at, mean_frac) = self.decision_summary();
         format!(
-            "requests={} comparisons={} batches={} errors={} latency: n={} mean={:.1}ms sd={:.1}ms min={:.1}ms max={:.1}ms index: {}",
+            "requests={} comparisons={} batches={} errors={} latency: n={} mean={:.1}ms sd={:.1}ms min={:.1}ms max={:.1}ms index: {} stream: opened={} closed={} reaped={} batches={} culled={} decisions={} mean_at={:.0} mean_frac={:.2}",
             self.requests.load(Ordering::Relaxed),
             self.comparisons.load(Ordering::Relaxed),
             self.batches.load(Ordering::Relaxed),
@@ -106,6 +161,14 @@ impl Metrics {
             min * 1e3,
             max * 1e3,
             self.search_stats(),
+            self.stream_opened.load(Ordering::Relaxed),
+            self.stream_closed.load(Ordering::Relaxed),
+            self.stream_reaped.load(Ordering::Relaxed),
+            self.stream_batches.load(Ordering::Relaxed),
+            self.stream_culled.load(Ordering::Relaxed),
+            decisions,
+            mean_at,
+            mean_frac,
         )
     }
 }
@@ -145,6 +208,31 @@ mod tests {
         assert_eq!(total.dtw_evals, 4);
         assert!((total.dtw_fraction() - 0.3).abs() < 1e-12);
         assert!(m.report().contains("candidates=20"), "{}", m.report());
+    }
+
+    #[test]
+    fn stream_counters_accumulate() {
+        let m = Metrics::new();
+        m.inc_stream_opened();
+        m.inc_stream_opened();
+        m.inc_stream_closed();
+        m.add_stream_reaped(1);
+        m.record_stream_session(&StreamStats {
+            samples: 100,
+            batches: 10,
+            lb_evals: 50,
+            dp_evals: 20,
+            dp_abandoned: 5,
+            culled: 3,
+        });
+        m.record_stream_decision(60, 0.5);
+        m.record_stream_decision(40, 0.3);
+        let (n, mean_at, mean_frac) = m.decision_summary();
+        assert_eq!(n, 2);
+        assert!((mean_at - 50.0).abs() < 1e-9);
+        assert!((mean_frac - 0.4).abs() < 1e-9);
+        let r = m.report();
+        assert!(r.contains("opened=2") && r.contains("culled=3"), "{r}");
     }
 
     #[test]

@@ -7,6 +7,11 @@
 //!   {"cmd": "match", "series": [..], "config": {"mappers": M, "reducers": R,
 //!    "split_mb": FS, "input_mb": I}}
 //!   {"cmd": "knn", "series": [..], "k": K[, "config": {..}]}
+//!   {"cmd": "stream_open"[, "config": {..}][, "final_len": N][, "max_len": N]
+//!    [, "min_fraction": F][, "margin": M][, "min_samples": S]}
+//!   {"cmd": "stream_feed", "session": ID, "samples": [..]}
+//!   {"cmd": "stream_poll", "session": ID[, "k": K]}
+//!   {"cmd": "stream_close", "session": ID}
 //!
 //! The `match` request carries a *raw* captured CPU series (what a real
 //! deployment's SysStat agent would send); the server preprocesses it,
@@ -19,6 +24,19 @@
 //! neighbour's correlation similarity and the pruning counters for this
 //! search. The state holds an [`IndexedDb`], so concurrent connections
 //! share one immutable envelope cache.
+//!
+//! The `stream_*` commands expose the online classifier
+//! (`crate::streaming`): `stream_open` registers a live session (scoped to
+//! one configuration set, or the whole database), `stream_feed` ingests
+//! raw CPU sample batches and reports the anytime state (including the
+//! early decision the moment the session's exit policy declares one),
+//! `stream_poll` returns the current top-k without feeding, and
+//! `stream_close` finalizes with the exact indexed search over the full
+//! capture. Because live streams hold their connection open for the whole
+//! job, the read loop tolerates idle timeouts instead of dropping the
+//! peer: each timeout tick re-checks the server stop flag (so shutdown is
+//! never wedged by a blocked read) and sweeps sessions abandoned by dead
+//! clients.
 
 use super::batcher::{prepare_query, similarities_auto};
 use super::metrics::Metrics;
@@ -26,6 +44,9 @@ use crate::dtw::corr::MATCH_THRESHOLD;
 use crate::index::IndexedDb;
 use crate::runtime::RuntimeHandle;
 use crate::simulator::job::JobConfig;
+use crate::streaming::{
+    DecisionPolicy, FinalLen, SessionManager, StreamDecision, StreamSession, MAX_STREAM_LEN,
+};
 use crate::util::json::Json;
 use crate::util::pool::ThreadPool;
 use anyhow::{anyhow, Result};
@@ -33,12 +54,31 @@ use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
+use std::time::Duration;
+
+/// Per-connection read timeout: the cadence at which blocked readers
+/// re-check the stop flag and sweep idle sessions. A single timeout does
+/// NOT close the connection — live streams legitimately sit idle between
+/// feeds — but a connection idle past [`CONN_IDLE`] is dropped, so a pool
+/// worker can never be pinned for long by a dead client.
+pub const READ_TIMEOUT: Duration = Duration::from_secs(5);
+
+/// Connections idle this long are dropped. Harmless to live streams:
+/// sessions are addressed by id and survive reconnects, and a SysStat
+/// feeder sends every few seconds anyway.
+pub const CONN_IDLE: Duration = Duration::from_secs(60);
+
+/// Sessions untouched for this long belong to dead clients and are
+/// reaped (checked on every idle tick and on every `stream_open`, so
+/// abandoned sessions die even when no connection is idling).
+pub const SESSION_IDLE: Duration = Duration::from_secs(600);
 
 /// Shared server state.
 pub struct ServerState {
     pub db: IndexedDb,
     pub runtime: Option<RuntimeHandle>,
     pub metrics: Metrics,
+    pub sessions: SessionManager,
 }
 
 /// The TCP server.
@@ -64,14 +104,20 @@ impl MatchServer {
         Ok(self.listener.local_addr()?)
     }
 
-    /// Stop handle: set true and connect once to unblock accept().
+    /// Stop handle: set true and connect once to unblock accept(). Workers
+    /// blocked on idle connections notice within one [`READ_TIMEOUT`].
     pub fn stop_flag(&self) -> Arc<AtomicBool> {
         Arc::clone(&self.stop)
     }
 
+    /// Serve until the stop flag is raised (default read timeout).
+    pub fn serve(&self, workers: usize) -> Result<()> {
+        self.serve_with(workers, READ_TIMEOUT)
+    }
+
     /// Serve until the stop flag is raised. Each connection is handled on
     /// the pool; one line per request, one line per response.
-    pub fn serve(&self, workers: usize) -> Result<()> {
+    pub fn serve_with(&self, workers: usize, read_timeout: Duration) -> Result<()> {
         let pool = ThreadPool::new(workers.max(1));
         log::info!("serving on {}", self.listener.local_addr()?);
         for conn in self.listener.incoming() {
@@ -81,8 +127,9 @@ impl MatchServer {
             match conn {
                 Ok(stream) => {
                     let state = Arc::clone(&self.state);
+                    let stop = Arc::clone(&self.stop);
                     pool.execute(move || {
-                        if let Err(e) = handle_connection(stream, &state) {
+                        if let Err(e) = handle_connection(stream, &state, &stop, read_timeout) {
                             log::debug!("connection ended: {e:#}");
                         }
                     });
@@ -94,19 +141,53 @@ impl MatchServer {
     }
 }
 
-fn handle_connection(stream: TcpStream, state: &ServerState) -> Result<()> {
-    // Bound how long an idle connection can pin a pool worker.
-    stream.set_read_timeout(Some(std::time::Duration::from_secs(30)))?;
+fn handle_connection(
+    stream: TcpStream,
+    state: &ServerState,
+    stop: &AtomicBool,
+    read_timeout: Duration,
+) -> Result<()> {
+    stream.set_read_timeout(Some(read_timeout))?;
     let peer = stream.peer_addr()?;
     let mut writer = stream.try_clone()?;
-    let reader = BufReader::new(stream);
-    for line in reader.lines() {
-        let line = line?;
+    let mut reader = BufReader::new(stream);
+    let mut line = String::new();
+    let mut last_activity = std::time::Instant::now();
+    loop {
+        if stop.load(Ordering::SeqCst) {
+            break;
+        }
+        match reader.read_line(&mut line) {
+            Ok(0) => break, // peer closed
+            Ok(_) => last_activity = std::time::Instant::now(),
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                ) =>
+            {
+                // Idle tick: keep the connection (a live stream may simply
+                // have nothing to feed yet), sweep abandoned sessions, and
+                // loop back to the stop-flag check so shutdown can never be
+                // wedged by a blocked read. Partially read bytes stay in
+                // `line` for the next pass. Connections idle past
+                // [`CONN_IDLE`] are dropped so idle clients cannot pin
+                // pool workers; their sessions live on until reaped.
+                reap_sessions(state);
+                if last_activity.elapsed() > CONN_IDLE {
+                    log::debug!("dropping connection idle for {:?}", last_activity.elapsed());
+                    break;
+                }
+                continue;
+            }
+            Err(e) => return Err(e.into()),
+        }
         if line.trim().is_empty() {
+            line.clear();
             continue;
         }
         state.metrics.inc_requests();
-        let response = state.metrics.time(|| match handle_request(&line, state) {
+        let response = state.metrics.time(|| match handle_request(line.trim(), state) {
             Ok(v) => v,
             Err(e) => {
                 state.metrics.inc_errors();
@@ -116,6 +197,7 @@ fn handle_connection(stream: TcpStream, state: &ServerState) -> Result<()> {
                 ])
             }
         });
+        line.clear();
         writer.write_all(response.to_string().as_bytes())?;
         writer.write_all(b"\n")?;
     }
@@ -135,6 +217,7 @@ pub fn handle_request(line: &str, state: &ServerState) -> Result<Json> {
             ("ok", Json::Bool(true)),
             ("report", Json::Str(state.metrics.report())),
             ("db_entries", Json::Num(state.db.len() as f64)),
+            ("live_sessions", Json::Num(state.sessions.len() as f64)),
         ])),
         Some("apps") => Ok(Json::obj(vec![
             ("ok", Json::Bool(true)),
@@ -152,6 +235,10 @@ pub fn handle_request(line: &str, state: &ServerState) -> Result<Json> {
         ])),
         Some("match") => handle_match(&req, state),
         Some("knn") => handle_knn(&req, state),
+        Some("stream_open") => handle_stream_open(&req, state),
+        Some("stream_feed") => handle_stream_feed(&req, state),
+        Some("stream_poll") => handle_stream_poll(&req, state),
+        Some("stream_close") => handle_stream_close(&req, state),
         _ => Err(anyhow!("unknown cmd")),
     }
 }
@@ -183,6 +270,187 @@ fn parse_config(v: &Json) -> Result<JobConfig> {
         num("split_mb")?,
         num("input_mb")?,
     ))
+}
+
+/// Sweep sessions abandoned by dead clients into the metrics counters.
+fn reap_sessions(state: &ServerState) {
+    let reaped = state.sessions.reap_idle(SESSION_IDLE);
+    if reaped > 0 {
+        state.metrics.add_stream_reaped(reaped as u64);
+        log::debug!("reaped {reaped} idle stream sessions");
+    }
+}
+
+fn parse_session_id(req: &Json) -> Result<u64> {
+    req.get("session")
+        .and_then(Json::as_usize)
+        .map(|id| id as u64)
+        .ok_or_else(|| anyhow!("missing session id"))
+}
+
+fn decision_json(d: &StreamDecision) -> Json {
+    Json::obj(vec![
+        ("app", Json::Str(d.app.name().to_string())),
+        ("config", Json::Str(d.config.label())),
+        ("entry", Json::Num(d.entry as f64)),
+        ("distance", Json::Num(d.distance)),
+        ("similarity", Json::Num(d.similarity)),
+        ("at_sample", Json::Num(d.at_sample as f64)),
+        ("fraction", Json::Num(d.fraction)),
+    ])
+}
+
+/// Open a live classification session.
+fn handle_stream_open(req: &Json, state: &ServerState) -> Result<Json> {
+    // Every open sweeps stale sessions, so open-and-abandon clients cannot
+    // grow the registry even when no connection ever sits idle.
+    reap_sessions(state);
+    let config = match req.get("config") {
+        Some(c) => Some(parse_config(c)?),
+        None => None,
+    };
+    // A Known hint beyond the incremental cap only wastes DP width and
+    // disables the fraction gate; clamp it like max_len.
+    let final_len = match req.get("final_len").and_then(Json::as_usize) {
+        Some(n) if n > 0 => FinalLen::Known(n.min(MAX_STREAM_LEN)),
+        _ => FinalLen::AtMost(
+            req.get("max_len")
+                .and_then(Json::as_usize)
+                .unwrap_or(MAX_STREAM_LEN)
+                .clamp(1, MAX_STREAM_LEN),
+        ),
+    };
+    let mut policy = DecisionPolicy::default();
+    if let Some(f) = req.get("min_fraction").and_then(Json::as_f64) {
+        policy.min_fraction = f.clamp(0.0, 2.0);
+    }
+    if let Some(m) = req.get("margin").and_then(Json::as_f64) {
+        policy.margin = m.max(1.0);
+    }
+    if let Some(s) = req.get("min_samples").and_then(Json::as_usize) {
+        policy.min_samples = s;
+    }
+    let session = StreamSession::open(&state.db, config.as_ref(), final_len, policy);
+    let candidates = session.candidates();
+    let id = state.sessions.open(session);
+    state.metrics.inc_stream_opened();
+    Ok(Json::obj(vec![
+        ("ok", Json::Bool(true)),
+        ("session", Json::Num(id as f64)),
+        ("candidates", Json::Num(candidates as f64)),
+    ]))
+}
+
+/// Feed one batch of raw CPU samples into a live session.
+fn handle_stream_feed(req: &Json, state: &ServerState) -> Result<Json> {
+    let id = parse_session_id(req)?;
+    let samples: Vec<f64> = req
+        .get("samples")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| anyhow!("missing samples"))?
+        .iter()
+        .filter_map(Json::as_f64)
+        .collect();
+    if samples.is_empty() {
+        return Err(anyhow!("empty samples"));
+    }
+    let (decided_now, decision, observed, live) = state.sessions.with(id, |s| {
+        let had = s.decision().is_some();
+        s.push(&state.db, &samples);
+        let d = s.decision().cloned();
+        (d.is_some() && !had, d, s.observed(), s.live_candidates())
+    })?;
+    if decided_now {
+        if let Some(d) = &decision {
+            state.metrics.record_stream_decision(d.at_sample, d.fraction);
+        }
+    }
+    Ok(Json::obj(vec![
+        ("ok", Json::Bool(true)),
+        ("observed", Json::Num(observed as f64)),
+        ("live_candidates", Json::Num(live as f64)),
+        (
+            "decision",
+            decision.as_ref().map(decision_json).unwrap_or(Json::Null),
+        ),
+    ]))
+}
+
+/// Report a live session's anytime top-k without feeding it.
+fn handle_stream_poll(req: &Json, state: &ServerState) -> Result<Json> {
+    let id = parse_session_id(req)?;
+    let k = req.get("k").and_then(Json::as_usize).unwrap_or(3).clamp(1, 20);
+    let (top, decision, observed, live, culled) = state.sessions.with(id, |s| {
+        (
+            s.top(&state.db, k),
+            s.decision().cloned(),
+            s.observed(),
+            s.live_candidates(),
+            s.stats().culled,
+        )
+    })?;
+    let rows = top
+        .iter()
+        .map(|t| {
+            Json::obj(vec![
+                ("app", Json::Str(t.app.name().to_string())),
+                ("config", Json::Str(t.config.label())),
+                ("entry", Json::Num(t.entry as f64)),
+                (
+                    "distance",
+                    t.distance.map(Json::Num).unwrap_or(Json::Null),
+                ),
+                ("lower_bound", Json::Num(t.lower_bound)),
+            ])
+        })
+        .collect();
+    Ok(Json::obj(vec![
+        ("ok", Json::Bool(true)),
+        ("observed", Json::Num(observed as f64)),
+        ("live_candidates", Json::Num(live as f64)),
+        ("culled", Json::Num(culled as f64)),
+        ("top", Json::arr(rows)),
+        (
+            "decision",
+            decision.as_ref().map(decision_json).unwrap_or(Json::Null),
+        ),
+    ]))
+}
+
+/// Close a session: exact final search over the whole capture.
+fn handle_stream_close(req: &Json, state: &ServerState) -> Result<Json> {
+    let id = parse_session_id(req)?;
+    let session = state.sessions.close(id)?;
+    state.metrics.inc_stream_closed();
+    state.metrics.record_stream_session(&session.stats());
+    let (neighbors, stats) = session.finalize(&state.db, 1);
+    state.metrics.record_search(&stats);
+    let entries = state.db.entries();
+    let final_json = match neighbors.first() {
+        Some(nb) => {
+            let e = &entries[nb.index];
+            let q = prepare_query(session.raw());
+            let sim = crate::dtw::corr::similarity_percent_banded(&q, &e.series);
+            Json::obj(vec![
+                ("app", Json::Str(e.app.name().to_string())),
+                ("config", Json::Str(e.config_key())),
+                ("entry", Json::Num(nb.index as f64)),
+                ("distance", Json::Num(nb.distance)),
+                ("similarity", Json::Num(sim)),
+                ("matched", Json::Bool(sim >= MATCH_THRESHOLD)),
+            ])
+        }
+        None => Json::Null,
+    };
+    Ok(Json::obj(vec![
+        ("ok", Json::Bool(true)),
+        ("observed", Json::Num(session.observed() as f64)),
+        ("final", final_json),
+        (
+            "decision",
+            session.decision().map(decision_json).unwrap_or(Json::Null),
+        ),
+    ]))
 }
 
 /// Index-backed k-NN: exact nearest references under the banded-DTW
@@ -277,9 +545,15 @@ mod tests {
     use crate::database::profile::ProfileEntry;
     use crate::workloads::AppId;
 
+    fn raw_wave(freq: f64) -> Vec<f64> {
+        (0..64)
+            .map(|i| (0.5 + 0.4 * ((i as f64) * freq).sin()).clamp(0.0, 1.0))
+            .collect()
+    }
+
     fn state_with_db() -> ServerState {
         let mut db = IndexedDb::new();
-        let series: Vec<f64> = (0..64).map(|i| 0.5 + 0.5 * ((i as f64) * 0.2).sin()).collect();
+        let series = raw_wave(0.2);
         db.insert(ProfileEntry {
             app: AppId::WordCount,
             config: JobConfig::new(4, 2, 10.0, 20.0),
@@ -287,9 +561,7 @@ mod tests {
             raw_len: 64,
             completion_secs: 100.0,
         });
-        let shifted: Vec<f64> = (0..64)
-            .map(|i| 0.5 + 0.5 * (((i + 40) as f64) * 0.2).sin())
-            .collect();
+        let shifted = raw_wave(0.55);
         db.insert(ProfileEntry {
             app: AppId::TeraSort,
             config: JobConfig::new(4, 2, 10.0, 20.0),
@@ -301,7 +573,17 @@ mod tests {
             db,
             runtime: None,
             metrics: Metrics::new(),
+            sessions: SessionManager::new(),
         }
+    }
+
+    fn config_json() -> Json {
+        Json::obj(vec![
+            ("mappers", Json::Num(4.0)),
+            ("reducers", Json::Num(2.0)),
+            ("split_mb", Json::Num(10.0)),
+            ("input_mb", Json::Num(20.0)),
+        ])
     }
 
     #[test]
@@ -314,19 +596,11 @@ mod tests {
     #[test]
     fn match_request_finds_similar_series() {
         let state = state_with_db();
-        let series: Vec<f64> = (0..64).map(|i| 0.5 + 0.5 * ((i as f64) * 0.2).sin()).collect();
+        let series: Vec<f64> = raw_wave(0.2);
         let req = Json::obj(vec![
             ("cmd", Json::Str("match".into())),
             ("series", Json::nums(&series)),
-            (
-                "config",
-                Json::obj(vec![
-                    ("mappers", Json::Num(4.0)),
-                    ("reducers", Json::Num(2.0)),
-                    ("split_mb", Json::Num(10.0)),
-                    ("input_mb", Json::Num(20.0)),
-                ]),
-            ),
+            ("config", config_json()),
         ]);
         let resp = handle_request(&req.to_string(), &state).unwrap();
         assert_eq!(resp.get("ok"), Some(&Json::Bool(true)));
@@ -343,12 +617,16 @@ mod tests {
         assert!(handle_request(r#"{"cmd":"match"}"#, &state).is_err());
         assert!(handle_request(r#"{"cmd":"knn"}"#, &state).is_err());
         assert!(handle_request(r#"{"cmd":"knn","series":[1,2]}"#, &state).is_err());
+        assert!(handle_request(r#"{"cmd":"stream_feed","samples":[1]}"#, &state).is_err());
+        assert!(handle_request(r#"{"cmd":"stream_feed","session":99,"samples":[0.5]}"#, &state).is_err());
+        assert!(handle_request(r#"{"cmd":"stream_poll","session":99}"#, &state).is_err());
+        assert!(handle_request(r#"{"cmd":"stream_close","session":99}"#, &state).is_err());
     }
 
     #[test]
     fn knn_request_returns_neighbors_and_stats() {
         let state = state_with_db();
-        let series: Vec<f64> = (0..64).map(|i| 0.5 + 0.5 * ((i as f64) * 0.2).sin()).collect();
+        let series: Vec<f64> = raw_wave(0.2);
         let req = Json::obj(vec![
             ("cmd", Json::Str("knn".into())),
             ("series", Json::nums(&series)),
@@ -374,15 +652,7 @@ mod tests {
             ("cmd", Json::Str("knn".into())),
             ("series", Json::nums(&series)),
             ("k", Json::Num(5.0)),
-            (
-                "config",
-                Json::obj(vec![
-                    ("mappers", Json::Num(4.0)),
-                    ("reducers", Json::Num(2.0)),
-                    ("split_mb", Json::Num(10.0)),
-                    ("input_mb", Json::Num(20.0)),
-                ]),
-            ),
+            ("config", config_json()),
         ]);
         let resp = handle_request(&scoped.to_string(), &state).unwrap();
         let neighbors = resp.get("neighbors").and_then(Json::as_arr).unwrap();
@@ -390,9 +660,66 @@ mod tests {
     }
 
     #[test]
+    fn stream_lifecycle_end_to_end() {
+        let state = state_with_db();
+        // Open a session scoped to the stored config set.
+        let open = Json::obj(vec![
+            ("cmd", Json::Str("stream_open".into())),
+            ("config", config_json()),
+            ("final_len", Json::Num(64.0)),
+        ]);
+        let resp = handle_request(&open.to_string(), &state).unwrap();
+        assert_eq!(resp.get("ok"), Some(&Json::Bool(true)));
+        assert_eq!(resp.get("candidates").and_then(Json::as_f64), Some(2.0));
+        let id = resp.get("session").and_then(Json::as_f64).unwrap();
+        assert_eq!(state.sessions.len(), 1);
+
+        // Feed the wordcount-shaped capture in batches.
+        let series = raw_wave(0.2);
+        let mut decided = false;
+        for chunk in series.chunks(16) {
+            let feed = Json::obj(vec![
+                ("cmd", Json::Str("stream_feed".into())),
+                ("session", Json::Num(id)),
+                ("samples", Json::nums(chunk)),
+            ]);
+            let resp = handle_request(&feed.to_string(), &state).unwrap();
+            assert_eq!(resp.get("ok"), Some(&Json::Bool(true)));
+            decided |= resp.get("decision") != Some(&Json::Null);
+        }
+
+        // Poll: the anytime top-1 must be the wordcount reference.
+        let poll = Json::obj(vec![
+            ("cmd", Json::Str("stream_poll".into())),
+            ("session", Json::Num(id)),
+            ("k", Json::Num(2.0)),
+        ]);
+        let resp = handle_request(&poll.to_string(), &state).unwrap();
+        let top = resp.get("top").and_then(Json::as_arr).unwrap();
+        assert!(!top.is_empty());
+        assert_eq!(top[0].get("app").and_then(Json::as_str), Some("wordcount"));
+        assert_eq!(resp.get("observed").and_then(Json::as_f64), Some(64.0));
+
+        // Close: exact final answer.
+        let close = Json::obj(vec![
+            ("cmd", Json::Str("stream_close".into())),
+            ("session", Json::Num(id)),
+        ]);
+        let resp = handle_request(&close.to_string(), &state).unwrap();
+        let final_obj = resp.get("final").expect("final result");
+        assert_eq!(final_obj.get("app").and_then(Json::as_str), Some("wordcount"));
+        assert_eq!(state.sessions.len(), 0);
+        if decided {
+            assert_eq!(state.metrics.stream_decisions.load(std::sync::atomic::Ordering::Relaxed), 1);
+        }
+        assert_eq!(state.metrics.stream_opened.load(std::sync::atomic::Ordering::Relaxed), 1);
+        assert_eq!(state.metrics.stream_closed.load(std::sync::atomic::Ordering::Relaxed), 1);
+    }
+
+    #[test]
     fn concurrent_knn_requests_share_the_index() {
         let state = std::sync::Arc::new(state_with_db());
-        let series: Vec<f64> = (0..64).map(|i| 0.5 + 0.5 * ((i as f64) * 0.2).sin()).collect();
+        let series: Vec<f64> = raw_wave(0.2);
         let req = Json::obj(vec![
             ("cmd", Json::Str("knn".into())),
             ("series", Json::nums(&series)),
@@ -419,7 +746,7 @@ mod tests {
         let server = MatchServer::bind("127.0.0.1:0", state_with_db()).unwrap();
         let addr = server.local_addr().unwrap();
         let stop = server.stop_flag();
-        let handle = std::thread::spawn(move || server.serve(2));
+        let handle = std::thread::spawn(move || server.serve_with(2, Duration::from_millis(50)));
 
         let mut stream = TcpStream::connect(addr).unwrap();
         stream.write_all(b"{\"cmd\":\"ping\"}\n").unwrap();
@@ -433,10 +760,34 @@ mod tests {
         reader.read_line(&mut line2).unwrap();
         assert!(line2.contains("wordcount"));
 
-        // Shut down: close our connection first (a pool worker is blocked
-        // reading it and serve() joins the pool before returning).
         drop(reader);
         drop(stream);
+        stop.store(true, Ordering::SeqCst);
+        let _ = TcpStream::connect(addr); // unblock accept
+        handle.join().unwrap().unwrap();
+    }
+
+    #[test]
+    fn idle_connections_survive_timeouts_and_do_not_wedge_shutdown() {
+        let server = MatchServer::bind("127.0.0.1:0", state_with_db()).unwrap();
+        let addr = server.local_addr().unwrap();
+        let stop = server.stop_flag();
+        let handle = std::thread::spawn(move || server.serve_with(2, Duration::from_millis(50)));
+
+        let mut stream = TcpStream::connect(addr).unwrap();
+        let mut reader = BufReader::new(stream.try_clone().unwrap());
+
+        // Idle well past several read timeouts: the connection must still
+        // be served (pre-fix behaviour was to drop it on the first one).
+        std::thread::sleep(Duration::from_millis(200));
+        stream.write_all(b"{\"cmd\":\"ping\"}\n").unwrap();
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        assert!(line.contains("pong"), "idle connection was dropped: {line}");
+
+        // Shut down WITHOUT closing our connection: the worker blocked on
+        // our socket must notice the stop flag within one timeout tick
+        // (pre-fix behaviour held the pool open indefinitely).
         stop.store(true, Ordering::SeqCst);
         let _ = TcpStream::connect(addr); // unblock accept
         handle.join().unwrap().unwrap();

@@ -30,6 +30,13 @@
 //! loop's `knn` command; pruning effectiveness is tracked in
 //! [`coordinator::metrics::Metrics`] and measured by
 //! `benches/index_perf.rs`.
+//!
+//! The [`streaming`] layer turns that index into an *online* classifier:
+//! a [`streaming::StreamSession`] ingests a live CPU capture batch by
+//! batch, maintains monotone prefix lower bounds over the index's
+//! envelope cache, and declares an anytime decision before the job
+//! finishes ([`coordinator::matcher::Matcher::match_stream`], the serve
+//! loop's `stream_*` commands, `benches/stream_perf.rs`).
 
 pub mod coordinator;
 pub mod database;
@@ -38,6 +45,7 @@ pub mod index;
 pub mod runtime;
 pub mod signal;
 pub mod simulator;
+pub mod streaming;
 pub mod util;
 pub mod workloads;
 
@@ -54,5 +62,8 @@ pub mod prelude {
     pub use crate::dtw::{corr::similarity_percent, full::DtwResult};
     pub use crate::index::{IndexedDb, Neighbor, SearchStats};
     pub use crate::simulator::job::JobConfig;
+    pub use crate::streaming::{
+        DecisionPolicy, FinalLen, SessionManager, StreamDecision, StreamSession,
+    };
     pub use crate::workloads::AppId;
 }

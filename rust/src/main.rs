@@ -139,6 +139,7 @@ fn main() -> anyhow::Result<()> {
                 db: mrtuner::index::IndexedDb::from_db(std::mem::take(&mut sys.db)),
                 runtime,
                 metrics: mrtuner::coordinator::metrics::Metrics::new(),
+                sessions: mrtuner::streaming::SessionManager::new(),
             };
             let server = MatchServer::bind(&format!("127.0.0.1:{port}"), state)?;
             println!("serving on {}", server.local_addr()?);

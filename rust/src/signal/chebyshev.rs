@@ -173,6 +173,76 @@ impl Sos {
     pub fn is_stable(&self) -> bool {
         self.sections.iter().all(|s| s.a2 < 1.0 && s.a1.abs() < 1.0 + s.a2)
     }
+
+    /// Start a causal streaming run of this cascade (zero initial state).
+    /// Pushing a series sample-by-sample produces **bit-identical** output
+    /// to [`Sos::filter`] on the whole series: each section is causal, so
+    /// per-sample cascade order and per-section batch order perform the
+    /// same arithmetic in the same sequence. This is what lets the
+    /// streaming classifier filter a live CPU capture incrementally while
+    /// guaranteeing the completed prefix equals the batch-preprocessed
+    /// series.
+    pub fn stream(&self) -> SosState {
+        SosState {
+            sections: self.sections.clone(),
+            state: vec![(0.0, 0.0); self.sections.len()],
+        }
+    }
+
+    /// Conservative bounds on any output sample of this cascade for inputs
+    /// confined to `[input_lo, input_hi]`, from the truncated impulse
+    /// response: `y_t = Σ h_k · x_{t-k}`, so `y_t` is bounded by summing
+    /// each tap against whichever input extreme it favours. `horizon` is
+    /// the truncation length; the default filter's impulse response decays
+    /// below 1e-12 well within 1024 samples, and both bounds include `0`
+    /// per tap, so they also cover the partial sums of the zero-state
+    /// start-up. Used by the streaming prefix bounds to cap where the
+    /// running min/max of a filtered live capture can still go.
+    pub fn output_bounds(&self, input_lo: f64, input_hi: f64, horizon: usize) -> (f64, f64) {
+        assert!(input_lo <= input_hi, "output_bounds: inverted input range");
+        let mut impulse = vec![0.0; horizon.max(1)];
+        impulse[0] = 1.0;
+        let h = self.filter(&impulse);
+        let mut lo = 0.0;
+        let mut hi = 0.0;
+        for &hk in &h {
+            lo += (hk * input_lo).min(hk * input_hi).min(0.0);
+            hi += (hk * input_lo).max(hk * input_hi).max(0.0);
+        }
+        (lo, hi)
+    }
+}
+
+/// Streaming state of one [`Sos`] cascade: per-section Direct Form II
+/// transposed delay registers. Created by [`Sos::stream`].
+#[derive(Debug, Clone)]
+pub struct SosState {
+    sections: Vec<Biquad>,
+    /// `(s1, s2)` per section.
+    state: Vec<(f64, f64)>,
+}
+
+impl SosState {
+    /// Filter one sample through the cascade.
+    pub fn push(&mut self, x: f64) -> f64 {
+        let mut v = x;
+        for (sec, st) in self.sections.iter().zip(self.state.iter_mut()) {
+            let yo = sec.b[0] * v + st.0;
+            st.0 = sec.b[1] * v - sec.a1 * yo + st.1;
+            st.1 = sec.b[2] * v - sec.a2 * yo;
+            v = yo;
+        }
+        v
+    }
+
+    /// Filter a batch of samples, appending the outputs to `out`.
+    pub fn extend(&mut self, xs: &[f64], out: &mut Vec<f64>) {
+        out.reserve(xs.len());
+        for &x in xs {
+            let y = self.push(x);
+            out.push(y);
+        }
+    }
 }
 
 #[cfg(test)]
@@ -242,6 +312,44 @@ mod tests {
         let eps = (10f64.powf(0.5 / 10.0) - 1.0).sqrt();
         let want = 1.0 / (1.0 + eps * eps).sqrt();
         assert!((sos.dc_gain() - want).abs() < 1e-9, "{}", sos.dc_gain());
+    }
+
+    #[test]
+    fn streaming_filter_is_bit_identical_to_batch() {
+        let sos = Sos::lowpass_default();
+        let x: Vec<f64> = (0..500)
+            .map(|i| 0.5 + 0.4 * ((i as f64) * 0.21).sin() + 0.05 * ((i as f64) * 1.7).cos())
+            .collect();
+        let batch = sos.filter(&x);
+        let mut st = sos.stream();
+        let mut streamed = Vec::new();
+        // Mixed push/extend batching must not matter.
+        streamed.push(st.push(x[0]));
+        st.extend(&x[1..7], &mut streamed);
+        st.extend(&x[7..], &mut streamed);
+        assert_eq!(batch.len(), streamed.len());
+        for (a, b) in batch.iter().zip(&streamed) {
+            assert_eq!(a.to_bits(), b.to_bits(), "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn output_bounds_contain_all_outputs() {
+        let sos = Sos::lowpass_default();
+        let (lo, hi) = sos.output_bounds(0.0, 1.0, 1024);
+        assert!(lo <= 0.0 && hi >= sos.dc_gain(), "lo={lo} hi={hi}");
+        // Adversarial bounded inputs: square waves at several periods try
+        // to pump the transient; outputs must stay inside the bounds.
+        for period in [2usize, 5, 11, 40] {
+            let x: Vec<f64> = (0..800)
+                .map(|i| if (i / period) % 2 == 0 { 1.0 } else { 0.0 })
+                .collect();
+            for v in sos.filter(&x) {
+                assert!(lo <= v && v <= hi, "period {period}: {v} outside [{lo},{hi}]");
+            }
+        }
+        // The bounds are tight-ish: well inside [-1, 2] for a unit input.
+        assert!(lo > -1.0 && hi < 2.0, "suspiciously loose: [{lo},{hi}]");
     }
 
     #[test]

@@ -1,33 +1,176 @@
 //! Magnitude normalization (paper §3.1.1: series bounded into `[0,1]`).
+//!
+//! Both normalizations exist in two forms: the batch functions
+//! ([`min_max`], [`z_score`]) used when the whole series is available, and
+//! incremental accumulators ([`OnlineMinMax`], [`OnlineZScore`]) for the
+//! streaming classifier, which must re-normalize a *growing* prefix as
+//! samples arrive. The batch functions delegate to the online structs, so
+//! the two paths can never drift apart.
+
+use crate::util::stats::Welford;
+
+/// Incremental min/max tracker — the online form of [`min_max`].
+///
+/// Feed samples with [`push`](OnlineMinMax::push) /
+/// [`observe`](OnlineMinMax::observe), then map any value through
+/// [`normalize_value`](OnlineMinMax::normalize_value) using the extrema
+/// seen *so far*. Observing an entire series and then normalizing it
+/// reproduces the batch [`min_max`] output exactly (same fold order, same
+/// arithmetic). The extrema are monotone: `lo` only ever decreases and `hi`
+/// only ever increases as more samples arrive — the property the streaming
+/// prefix bounds (`crate::streaming::prefix_lb`) rely on.
+#[derive(Debug, Clone)]
+pub struct OnlineMinMax {
+    lo: f64,
+    hi: f64,
+    n: usize,
+}
+
+impl Default for OnlineMinMax {
+    fn default() -> Self {
+        OnlineMinMax::new()
+    }
+}
+
+impl OnlineMinMax {
+    pub fn new() -> OnlineMinMax {
+        OnlineMinMax {
+            lo: f64::INFINITY,
+            hi: f64::NEG_INFINITY,
+            n: 0,
+        }
+    }
+
+    /// Observe one sample.
+    pub fn push(&mut self, x: f64) {
+        self.lo = self.lo.min(x);
+        self.hi = self.hi.max(x);
+        self.n += 1;
+    }
+
+    /// Observe a batch of samples.
+    pub fn observe(&mut self, xs: &[f64]) {
+        for &x in xs {
+            self.push(x);
+        }
+    }
+
+    /// Samples observed so far.
+    pub fn count(&self) -> usize {
+        self.n
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.n == 0
+    }
+
+    /// Smallest sample seen (`+inf` before any sample).
+    pub fn lo(&self) -> f64 {
+        self.lo
+    }
+
+    /// Largest sample seen (`-inf` before any sample).
+    pub fn hi(&self) -> f64 {
+        self.hi
+    }
+
+    /// `hi - lo`; `0.0` before any sample.
+    pub fn span(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.hi - self.lo
+        }
+    }
+
+    /// Normalize one value with the extrema seen so far. Degenerate ranges
+    /// (constant or empty prefix) map to `0.0`, matching [`min_max`].
+    pub fn normalize_value(&self, x: f64) -> f64 {
+        let span = self.span();
+        if span <= 0.0 {
+            0.0
+        } else {
+            (x - self.lo) / span
+        }
+    }
+
+    /// Normalize a slice with the extrema seen so far.
+    pub fn normalize(&self, xs: &[f64]) -> Vec<f64> {
+        xs.iter().map(|&x| self.normalize_value(x)).collect()
+    }
+}
+
+/// Incremental mean/stddev tracker — the online form of [`z_score`],
+/// backed by the same Welford accumulator the metrics registry uses.
+#[derive(Debug, Clone, Default)]
+pub struct OnlineZScore {
+    w: Welford,
+}
+
+impl OnlineZScore {
+    pub fn new() -> OnlineZScore {
+        OnlineZScore::default()
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.w.push(x);
+    }
+
+    pub fn observe(&mut self, xs: &[f64]) {
+        for &x in xs {
+            self.push(x);
+        }
+    }
+
+    pub fn count(&self) -> u64 {
+        self.w.count()
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.w.mean()
+    }
+
+    /// Population standard deviation of the samples seen so far.
+    pub fn stddev(&self) -> f64 {
+        self.w.stddev()
+    }
+
+    /// Standardize one value with the moments seen so far. Degenerate
+    /// spreads (constant or empty prefix) map to `0.0`, matching
+    /// [`z_score`].
+    pub fn normalize_value(&self, x: f64) -> f64 {
+        let s = self.stddev();
+        if s <= 0.0 {
+            0.0
+        } else {
+            (x - self.mean()) / s
+        }
+    }
+
+    pub fn normalize(&self, xs: &[f64]) -> Vec<f64> {
+        xs.iter().map(|&x| self.normalize_value(x)).collect()
+    }
+}
 
 /// Min-max normalize into `[0,1]`. A constant series maps to all-zeros
 /// (no information; avoids division by zero).
 pub fn min_max(xs: &[f64]) -> Vec<f64> {
-    if xs.is_empty() {
-        return Vec::new();
-    }
-    let lo = xs.iter().cloned().fold(f64::INFINITY, f64::min);
-    let hi = xs.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
-    let span = hi - lo;
-    if span <= 0.0 {
-        return vec![0.0; xs.len()];
-    }
-    xs.iter().map(|x| (x - lo) / span).collect()
+    let mut mm = OnlineMinMax::new();
+    mm.observe(xs);
+    mm.normalize(xs)
 }
 
 /// Z-score normalize (mean 0, stddev 1); constant series maps to zeros.
 pub fn z_score(xs: &[f64]) -> Vec<f64> {
-    let m = crate::util::stats::mean(xs);
-    let s = crate::util::stats::stddev(xs);
-    if s <= 0.0 {
-        return vec![0.0; xs.len()];
-    }
-    xs.iter().map(|x| (x - m) / s).collect()
+    let mut zs = OnlineZScore::new();
+    zs.observe(xs);
+    zs.normalize(xs)
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::rng::Pcg32;
 
     #[test]
     fn min_max_bounds() {
@@ -66,8 +209,8 @@ mod tests {
     fn z_score_moments() {
         let xs: Vec<f64> = (0..100).map(|i| i as f64 * 0.7 - 3.0).collect();
         let y = z_score(&xs);
-        assert!(crate::util::stats::mean(&y).abs() < 1e-12);
-        assert!((crate::util::stats::stddev(&y) - 1.0).abs() < 1e-12);
+        assert!(crate::util::stats::mean(&y).abs() < 1e-9);
+        assert!((crate::util::stats::stddev(&y) - 1.0).abs() < 1e-9);
     }
 
     #[test]
@@ -75,5 +218,94 @@ mod tests {
         let xs = [1.0, 2.0, 5.0, 3.0];
         let scaled: Vec<f64> = xs.iter().map(|x| 10.0 * x + 4.0).collect();
         assert_eq!(min_max(&xs), min_max(&scaled));
+    }
+
+    /// Reference implementations of the pre-delegation batch formulas; the
+    /// online structs must reproduce them.
+    fn batch_min_max(xs: &[f64]) -> Vec<f64> {
+        if xs.is_empty() {
+            return Vec::new();
+        }
+        let lo = xs.iter().cloned().fold(f64::INFINITY, f64::min);
+        let hi = xs.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+        let span = hi - lo;
+        if span <= 0.0 {
+            return vec![0.0; xs.len()];
+        }
+        xs.iter().map(|x| (x - lo) / span).collect()
+    }
+
+    fn batch_z_score(xs: &[f64]) -> Vec<f64> {
+        let m = crate::util::stats::mean(xs);
+        let s = crate::util::stats::stddev(xs);
+        if s <= 0.0 {
+            return vec![0.0; xs.len()];
+        }
+        xs.iter().map(|x| (x - m) / s).collect()
+    }
+
+    #[test]
+    fn online_min_max_equals_batch_exactly() {
+        let mut g = Pcg32::new(130, 1);
+        for _ in 0..30 {
+            let len = 1 + g.below(200) as usize;
+            let xs: Vec<f64> = (0..len).map(|_| (g.f64() - 0.5) * 40.0).collect();
+            let got = min_max(&xs);
+            let want = batch_min_max(&xs);
+            assert_eq!(got.len(), want.len());
+            for (a, b) in got.iter().zip(&want) {
+                assert_eq!(a.to_bits(), b.to_bits(), "{a} vs {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn online_z_score_equals_batch_within_rounding() {
+        // Welford accumulates mean/variance incrementally, so agreement is
+        // to rounding, not bitwise.
+        let mut g = Pcg32::new(131, 2);
+        for _ in 0..30 {
+            let len = 2 + g.below(200) as usize;
+            let xs: Vec<f64> = (0..len).map(|_| (g.f64() - 0.5) * 40.0).collect();
+            let got = z_score(&xs);
+            let want = batch_z_score(&xs);
+            for (a, b) in got.iter().zip(&want) {
+                assert!((a - b).abs() < 1e-9, "{a} vs {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn online_extrema_are_monotone_and_prefix_consistent() {
+        // Normalizing a prefix with an OnlineMinMax fed exactly that prefix
+        // matches batch-normalizing the prefix; lo/hi move monotonically.
+        let mut g = Pcg32::new(132, 3);
+        let xs: Vec<f64> = (0..120).map(|_| g.f64() * 3.0 - 1.0).collect();
+        let mut mm = OnlineMinMax::new();
+        let (mut last_lo, mut last_hi) = (f64::INFINITY, f64::NEG_INFINITY);
+        for p in 1..=xs.len() {
+            mm.push(xs[p - 1]);
+            assert!(mm.lo() <= last_lo && mm.hi() >= last_hi);
+            last_lo = mm.lo();
+            last_hi = mm.hi();
+            let want = batch_min_max(&xs[..p]);
+            let got = mm.normalize(&xs[..p]);
+            for (a, b) in got.iter().zip(&want) {
+                assert_eq!(a.to_bits(), b.to_bits());
+            }
+        }
+        assert_eq!(mm.count(), xs.len());
+    }
+
+    #[test]
+    fn online_empty_and_degenerate() {
+        let mm = OnlineMinMax::new();
+        assert!(mm.is_empty());
+        assert_eq!(mm.span(), 0.0);
+        assert_eq!(mm.normalize_value(3.0), 0.0);
+        let mut zs = OnlineZScore::new();
+        assert_eq!(zs.normalize_value(3.0), 0.0);
+        zs.push(5.0);
+        assert_eq!(zs.normalize_value(5.0), 0.0, "single sample has no spread");
     }
 }

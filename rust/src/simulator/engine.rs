@@ -53,6 +53,56 @@ pub struct SimResult {
     pub counters: SimCounters,
 }
 
+impl SimResult {
+    /// Replay this run's noisy CPU capture as a live stream — what a real
+    /// deployment's SysStat agent would deliver to the streaming
+    /// classifier, batch by batch.
+    pub fn live_stream(&self) -> LiveStream {
+        LiveStream::new(self.cpu_noisy.clone())
+    }
+}
+
+/// A recorded CPU capture replayed incrementally: the simulator-side
+/// source for `streaming::StreamSession` feeds.
+#[derive(Debug, Clone)]
+pub struct LiveStream {
+    series: Vec<f64>,
+    pos: usize,
+}
+
+impl LiveStream {
+    pub fn new(series: Vec<f64>) -> LiveStream {
+        LiveStream { series, pos: 0 }
+    }
+
+    /// Total length of the underlying capture (the streaming session's
+    /// `FinalLen::Known` hint; a real deployment would predict this from
+    /// the job's progress counters).
+    pub fn final_len(&self) -> usize {
+        self.series.len()
+    }
+
+    /// Samples not yet delivered.
+    pub fn remaining(&self) -> usize {
+        self.series.len() - self.pos
+    }
+
+    pub fn is_done(&self) -> bool {
+        self.pos >= self.series.len()
+    }
+
+    /// Deliver up to `n` more samples, or `None` when the run is over.
+    pub fn next_batch(&mut self, n: usize) -> Option<&[f64]> {
+        if self.is_done() || n == 0 {
+            return None;
+        }
+        let end = (self.pos + n).min(self.series.len());
+        let batch = &self.series[self.pos..end];
+        self.pos = end;
+        Some(batch)
+    }
+}
+
 /// One running attempt of a logical task.
 #[derive(Debug, Clone)]
 struct Attempt {
@@ -526,6 +576,23 @@ mod tests {
         assert!(a.completion_secs > 0.0);
         assert_eq!(a.completion_secs, b.completion_secs);
         assert_eq!(a.cpu_clean, b.cpu_clean);
+    }
+
+    #[test]
+    fn live_stream_replays_the_capture_exactly() {
+        let r = run(AppId::WordCount, JobConfig::new(4, 2, 10.0, 20.0), 9);
+        let mut stream = r.live_stream();
+        assert_eq!(stream.final_len(), r.cpu_noisy.len());
+        let mut replayed = Vec::new();
+        while let Some(batch) = stream.next_batch(7) {
+            assert!(batch.len() <= 7 && !batch.is_empty());
+            replayed.extend_from_slice(batch);
+        }
+        assert!(stream.is_done());
+        assert_eq!(stream.remaining(), 0);
+        assert_eq!(replayed, r.cpu_noisy);
+        assert!(stream.next_batch(7).is_none());
+        assert!(LiveStream::new(Vec::new()).next_batch(4).is_none());
     }
 
     #[test]

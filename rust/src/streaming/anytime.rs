@@ -1,0 +1,145 @@
+//! Anytime banded-DTW: the exact dynamic program over only the rows
+//! observed so far.
+//!
+//! [`prefix_dtw`] runs the same recurrence as
+//! [`crate::dtw::banded::dtw_banded_distance_cutoff`] — same band
+//! geometry, same value-selection order — but stops after the prefix's
+//! rows and reports the minimum of the last computed row. That minimum is
+//! the cost of the cheapest band-legal partial path covering every
+//! observed row, so (for a fixed normalization of the prefix) it lower
+//! bounds the full distance and is monotone in the number of rows. When
+//! the prefix *is* the whole query it degenerates to the exact banded
+//! distance, bit-identical to `dtw_banded`.
+//!
+//! Unlike the envelope bound in [`super::prefix_lb`], the DP must be
+//! re-run from row 0 whenever online normalization re-scales the prefix,
+//! so sessions reserve it for the few lowest-bound finalists per batch
+//! (with early abandoning against the best so far).
+
+use crate::dtw::{band_edges, band_radius, band_slope, local_cost};
+
+/// Result of one prefix DP.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PrefixDp {
+    /// Minimum over the last observed row — the anytime distance.
+    pub row_min: f64,
+    /// Exact banded distance (the corner cell), present only when the
+    /// prefix spans the whole assumed final length.
+    pub exact: Option<f64>,
+}
+
+/// Banded-DTW DP over the first `qp.len()` rows of the final
+/// `(n_final × y.len())` alignment, abandoning as soon as every cell of
+/// some row exceeds `cutoff` (returns `None`; no completion below the row
+/// minimum is possible). `n_final < qp.len()` self-corrects to
+/// `qp.len()`.
+pub fn prefix_dtw(qp: &[f64], y: &[f64], n_final: usize, cutoff: f64) -> Option<PrefixDp> {
+    let (p, m) = (qp.len(), y.len());
+    assert!(p > 0 && m > 0, "prefix_dtw: empty series");
+    let n = n_final.max(p);
+    let slope = band_slope(n, m);
+    let r = band_radius(n, m);
+    let inf = f64::INFINITY;
+    let mut prev = vec![inf; m];
+    let mut cur = vec![inf; m];
+
+    let (lo0, hi0) = band_edges(0, slope, r, m);
+    debug_assert_eq!(lo0, 0);
+    cur[0] = local_cost(qp[0], y[0]);
+    let mut row_min = cur[0];
+    for j in lo0.max(1)..=hi0 {
+        cur[j] = cur[j - 1] + local_cost(qp[0], y[j]);
+        row_min = row_min.min(cur[j]);
+    }
+    if row_min > cutoff {
+        return None;
+    }
+    std::mem::swap(&mut prev, &mut cur);
+    let mut last_row_min = row_min;
+
+    for i in 1..p {
+        let (lo, hi) = band_edges(i, slope, r, m);
+        cur.iter_mut().for_each(|v| *v = inf);
+        let mut row_min = inf;
+        for j in lo..=hi {
+            let d = local_cost(qp[i], y[j]);
+            let diag = if j > 0 { prev[j - 1] } else { inf };
+            let up = prev[j];
+            let left = if j > lo { cur[j - 1] } else { inf };
+            // Same value selection as dtw_banded (vertical group then left).
+            let vg = if diag <= up { diag } else { up };
+            let best = if left < vg { left } else { vg };
+            cur[j] = best + d;
+            row_min = row_min.min(cur[j]);
+        }
+        if row_min > cutoff {
+            return None;
+        }
+        std::mem::swap(&mut prev, &mut cur);
+        last_row_min = row_min;
+    }
+
+    Some(PrefixDp {
+        row_min: last_row_min,
+        exact: if p == n { Some(prev[m - 1]) } else { None },
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dtw::banded::dtw_banded;
+    use crate::util::rng::Pcg32;
+
+    fn series(g: &mut Pcg32, len: usize) -> Vec<f64> {
+        let mut v = 0.5;
+        (0..len)
+            .map(|_| {
+                v = (v + (g.f64() - 0.5) * 0.25).clamp(0.0, 1.0);
+                v
+            })
+            .collect()
+    }
+
+    #[test]
+    fn full_prefix_is_bit_identical_to_banded() {
+        let mut g = Pcg32::new(150, 1);
+        for _ in 0..20 {
+            let n = 4 + g.below(120) as usize;
+            let m = 4 + g.below(120) as usize;
+            let x = series(&mut g, n);
+            let y = series(&mut g, m);
+            let exact = dtw_banded(&x, &y, band_radius(n, m)).distance;
+            let dp = prefix_dtw(&x, &y, n, f64::INFINITY).expect("no cutoff");
+            assert_eq!(dp.exact.unwrap().to_bits(), exact.to_bits());
+        }
+    }
+
+    #[test]
+    fn row_min_is_monotone_and_bounds_the_final_distance() {
+        let mut g = Pcg32::new(151, 2);
+        for _ in 0..10 {
+            let n = 20 + g.below(100) as usize;
+            let m = 20 + g.below(100) as usize;
+            let x = series(&mut g, n);
+            let y = series(&mut g, m);
+            let exact = dtw_banded(&x, &y, band_radius(n, m)).distance;
+            let mut last = 0.0;
+            for p in 1..=n {
+                let dp = prefix_dtw(&x[..p], &y, n, f64::INFINITY).unwrap();
+                assert!(dp.row_min >= last - 1e-12, "row_min fell at p={p}");
+                assert!(dp.row_min <= exact + 1e-9, "row_min {p}: {} > {exact}", dp.row_min);
+                last = dp.row_min;
+                assert_eq!(dp.exact.is_some(), p == n);
+            }
+        }
+    }
+
+    #[test]
+    fn cutoff_abandons_far_pairs() {
+        let x = vec![0.0; 100];
+        let y = vec![1.0; 100];
+        assert!(prefix_dtw(&x[..40], &y, 100, 1.0).is_none());
+        assert!(prefix_dtw(&x[..40], &y, 100, f64::INFINITY).is_some());
+    }
+}

@@ -1,0 +1,162 @@
+//! Session multiplexer: many concurrent live streams behind the blocking
+//! server.
+//!
+//! The registry lock is held only to look up / insert / remove a session
+//! slot; per-session work (bound refreshes, prefix DPs) runs under that
+//! session's own lock, so concurrent connections feeding *different*
+//! sessions never serialize. Sessions left behind by dead clients are
+//! swept by [`SessionManager::reap_idle`], which the server calls from its
+//! read-timeout tick.
+
+use super::session::StreamSession;
+use anyhow::{anyhow, Result};
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+struct Slot {
+    session: Mutex<StreamSession>,
+    touched: Mutex<Instant>,
+}
+
+/// Registry of live [`StreamSession`]s keyed by server-assigned id.
+#[derive(Default)]
+pub struct SessionManager {
+    next: AtomicU64,
+    slots: Mutex<HashMap<u64, Arc<Slot>>>,
+}
+
+impl SessionManager {
+    pub fn new() -> SessionManager {
+        SessionManager::default()
+    }
+
+    /// Register a session, returning its id.
+    pub fn open(&self, session: StreamSession) -> u64 {
+        let id = self.next.fetch_add(1, Ordering::Relaxed) + 1;
+        let slot = Arc::new(Slot {
+            session: Mutex::new(session),
+            touched: Mutex::new(Instant::now()),
+        });
+        self.slots.lock().expect("session registry").insert(id, slot);
+        id
+    }
+
+    /// Run `f` against a session, refreshing its idle clock.
+    pub fn with<T>(&self, id: u64, f: impl FnOnce(&mut StreamSession) -> T) -> Result<T> {
+        let slot = self
+            .slots
+            .lock()
+            .expect("session registry")
+            .get(&id)
+            .cloned()
+            .ok_or_else(|| anyhow!("unknown session {id}"))?;
+        *slot.touched.lock().expect("session clock") = Instant::now();
+        let mut session = slot.session.lock().expect("session state");
+        Ok(f(&mut session))
+    }
+
+    /// Remove a session, returning its final state.
+    pub fn close(&self, id: u64) -> Result<StreamSession> {
+        let slot = self
+            .slots
+            .lock()
+            .expect("session registry")
+            .remove(&id)
+            .ok_or_else(|| anyhow!("unknown session {id}"))?;
+        match Arc::try_unwrap(slot) {
+            Ok(s) => Ok(s.session.into_inner().expect("session state")),
+            // Another connection is mid-call on this session; hand the
+            // caller a snapshot and let the straggler's Arc drop.
+            Err(arc) => Ok(arc.session.lock().expect("session state").clone()),
+        }
+    }
+
+    /// Drop sessions idle for longer than `max_idle`; returns how many.
+    pub fn reap_idle(&self, max_idle: Duration) -> usize {
+        let mut slots = self.slots.lock().expect("session registry");
+        let before = slots.len();
+        slots.retain(|_, slot| {
+            slot.touched
+                .lock()
+                .map(|t| t.elapsed() <= max_idle)
+                .unwrap_or(false)
+        });
+        before - slots.len()
+    }
+
+    /// Live session count.
+    pub fn len(&self) -> usize {
+        self.slots.lock().expect("session registry").len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::index::IndexedDb;
+    use crate::streaming::{DecisionPolicy, FinalLen};
+
+    fn session() -> StreamSession {
+        let idx = IndexedDb::new();
+        StreamSession::open(&idx, None, FinalLen::AtMost(512), DecisionPolicy::default())
+    }
+
+    #[test]
+    fn open_with_close_roundtrip() {
+        let mgr = SessionManager::new();
+        let idx = IndexedDb::new();
+        let a = mgr.open(session());
+        let b = mgr.open(session());
+        assert_ne!(a, b);
+        assert_eq!(mgr.len(), 2);
+        mgr.with(a, |s| s.push(&idx, &[0.1, 0.2])).unwrap();
+        let closed = mgr.close(a).unwrap();
+        assert_eq!(closed.observed(), 2);
+        assert_eq!(mgr.len(), 1);
+        assert!(mgr.with(a, |s| s.observed()).is_err(), "closed id resolves");
+        assert!(mgr.close(a).is_err());
+        mgr.close(b).unwrap();
+        assert!(mgr.is_empty());
+    }
+
+    #[test]
+    fn reaping_spares_touched_sessions() {
+        let mgr = SessionManager::new();
+        let id = mgr.open(session());
+        let _stale = mgr.open(session());
+        std::thread::sleep(Duration::from_millis(30));
+        mgr.with(id, |_| ()).unwrap(); // refresh one clock
+        let reaped = mgr.reap_idle(Duration::from_millis(20));
+        assert_eq!(reaped, 1);
+        assert_eq!(mgr.len(), 1);
+        assert!(mgr.with(id, |_| ()).is_ok());
+    }
+
+    #[test]
+    fn concurrent_feeds_do_not_lose_samples() {
+        let mgr = std::sync::Arc::new(SessionManager::new());
+        let idx = std::sync::Arc::new(IndexedDb::new());
+        let id = mgr.open(session());
+        std::thread::scope(|s| {
+            for _ in 0..4 {
+                let mgr = std::sync::Arc::clone(&mgr);
+                let idx = std::sync::Arc::clone(&idx);
+                s.spawn(move || {
+                    for _ in 0..50 {
+                        mgr.with(id, |sess| {
+                            sess.push(&idx, &[0.5]);
+                        })
+                        .unwrap();
+                    }
+                });
+            }
+        });
+        assert_eq!(mgr.with(id, |s| s.observed()).unwrap(), 200);
+    }
+}

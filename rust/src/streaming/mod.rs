@@ -1,0 +1,117 @@
+//! Streaming online classification: anytime DTW matching over live CPU
+//! streams.
+//!
+//! The paper's pipeline classifies a job only after its full CPU series is
+//! captured — forfeiting most of the tuning benefit, since the answer
+//! arrives when the job is done. This subsystem classifies a job *while it
+//! is still running*: a [`session::StreamSession`] ingests CPU samples one
+//! batch at a time and maintains an anytime top-k over the reference
+//! database, declaring a [`session::StreamDecision`] as soon as the
+//! evidence is safe under the configured [`session::DecisionPolicy`].
+//!
+//! The moving parts, bottom-up:
+//!
+//! * **Online preprocessing** — the paper's §3.1.1 chain (causal Chebyshev
+//!   low-pass + min-max normalization) runs incrementally:
+//!   [`crate::signal::chebyshev::SosState`] filters sample-by-sample
+//!   (bit-identical to the batch filter) and
+//!   [`crate::signal::normalize::OnlineMinMax`] tracks the growing
+//!   prefix's extrema, whose monotone widening is what the bounds below
+//!   exploit.
+//! * **Monotone prefix lower bounds** — [`prefix_lb::prefix_lb`] bounds
+//!   the *final* banded-DTW distance of the completed query to each
+//!   reference from only the prefix, the reference's cached
+//!   [`crate::index::Envelope`], and the shared
+//!   [`crate::dtw::band_edges`] geometry. The bound is monotone
+//!   non-decreasing as samples arrive and never exceeds the final
+//!   distance (see the module docs for the proof sketch), so a candidate
+//!   whose bound has grown past the current best can be culled for the
+//!   rest of the stream.
+//! * **Anytime ranking** — [`anytime::prefix_dtw`] runs the exact banded
+//!   DP over the observed rows with early abandoning, giving each
+//!   finalist a tight current distance (and the exact
+//!   [`crate::dtw::banded::dtw_banded`] distance once the stream
+//!   completes).
+//! * **Sessions and multiplexing** — [`session::StreamSession`] holds one
+//!   live stream's state; [`manager::SessionManager`] multiplexes many
+//!   concurrent sessions behind the blocking server
+//!   (`coordinator::server` commands `stream_open` / `stream_feed` /
+//!   `stream_poll` / `stream_close`).
+//!
+//! Two guarantees anchor the design (pinned by `rust/tests/properties.rs`):
+//! the prefix lower bound is monotone and admissible for streams up to the
+//! pipeline's 512-sample resample cap, and a session fed to completion and
+//! finalized returns exactly the neighbours of
+//! `Matcher::match_app_indexed` on the full series — culling and early
+//! exit accelerate the *anytime* answer, never the final one.
+
+pub mod anytime;
+pub mod manager;
+pub mod prefix_lb;
+pub mod session;
+
+pub use manager::SessionManager;
+pub use prefix_lb::FinalLen;
+pub use session::{DecisionPolicy, StreamDecision, StreamSession, MAX_STREAM_LEN};
+
+/// Per-session work counters; the streaming analogue of
+/// [`crate::index::SearchStats`].
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+pub struct StreamStats {
+    /// Samples ingested.
+    pub samples: u64,
+    /// Feed batches processed.
+    pub batches: u64,
+    /// Prefix lower-bound refreshes.
+    pub lb_evals: u64,
+    /// Prefix DPs run to the last observed row.
+    pub dp_evals: u64,
+    /// Prefix DPs abandoned early against the best-so-far cutoff.
+    pub dp_abandoned: u64,
+    /// Candidates culled for the rest of the stream.
+    pub culled: u64,
+}
+
+impl StreamStats {
+    /// Accumulate another session's counters into this one.
+    pub fn merge(&mut self, other: &StreamStats) {
+        self.samples += other.samples;
+        self.batches += other.batches;
+        self.lb_evals += other.lb_evals;
+        self.dp_evals += other.dp_evals;
+        self.dp_abandoned += other.dp_abandoned;
+        self.culled += other.culled;
+    }
+}
+
+impl std::fmt::Display for StreamStats {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "samples={} batches={} lb_evals={} dp[evals={} abandoned={}] culled={}",
+            self.samples, self.batches, self.lb_evals, self.dp_evals, self.dp_abandoned, self.culled,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_merge_and_display() {
+        let mut a = StreamStats {
+            samples: 10,
+            batches: 2,
+            lb_evals: 5,
+            dp_evals: 3,
+            dp_abandoned: 1,
+            culled: 4,
+        };
+        let b = a;
+        a.merge(&b);
+        assert_eq!(a.samples, 20);
+        assert_eq!(a.culled, 8);
+        assert!(a.to_string().contains("culled=8"), "{a}");
+    }
+}

@@ -1,0 +1,284 @@
+//! Monotone, admissible prefix lower bounds on the final banded-DTW
+//! distance of a live stream.
+//!
+//! The difficulty is that the stored references are min-max normalized
+//! over their *whole* series (§3.1.1), while mid-stream we only know the
+//! extrema of the prefix — future samples can still widen the range and
+//! retroactively re-scale every value we have seen. The bound therefore
+//! scores each observed row against an *interval* of values its final
+//! normalization can still take, and each interval only ever shrinks:
+//!
+//! * Let `v = filtered[i]` be a (causally) filtered sample, `[lo_p, hi_p]`
+//!   the prefix extrema so far and `[L, H]` the value domain of the filter
+//!   (every filtered sample of a `[0,1]` raw capture lies in it — see
+//!   [`crate::signal::chebyshev::Sos::output_bounds`]). The final extrema
+//!   `(lo_f, hi_f)` satisfy `L <= lo_f <= lo_p` and `hi_p <= hi_f <= H`,
+//!   and the final normalized value `(v - lo_f) / (hi_f - lo_f)` is
+//!   monotone decreasing in both `lo_f` and `hi_f`, so it lies in
+//!   `[(v - lo_p) / (H - lo_p), (v - L) / (hi_p - L)]` (clamped to
+//!   `[0,1]`). As samples arrive `lo_p` only decreases and `hi_p` only
+//!   increases, so the interval nests — contributions never shrink.
+//! * Every admissible warping path of the final alignment visits every
+//!   query row `i` at some reference column inside the Sakoe–Chiba band
+//!   ([`crate::dtw::band_edges`]). Row `i`'s contribution is therefore at
+//!   least the gap between its value interval and the reference envelope
+//!   over a *cover* of those columns; with the final length known the
+//!   cover is the exact band row, with only an upper bound on the length
+//!   it is the union of the band rows over all lengths still possible —
+//!   again shrinking as the prefix grows.
+//!
+//! Summing the per-row gaps gives a bound that is monotone non-decreasing
+//! in stream length and never exceeds the final banded distance
+//! (`rust/tests/properties.rs` sweeps both properties). The guarantee
+//! covers streams up to the matching pipeline's 512-sample resample cap
+//! ([`super::MAX_STREAM_LEN`]); past it the pipeline resamples the raw
+//! capture and prefix geometry no longer applies, so sessions fall back
+//! to exact finalization.
+
+use crate::dtw::{band_edges, band_radius, band_slope};
+use crate::index::Envelope;
+use crate::signal::normalize::OnlineMinMax;
+
+/// What is known about the final length of a live stream.
+///
+/// MapReduce completion times are predictable mid-run (companion work,
+/// arXiv:1303.3632), so [`FinalLen::Known`] is the common case for
+/// simulator-driven sessions; [`FinalLen::AtMost`] only assumes the
+/// pipeline's resample cap.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FinalLen {
+    /// The final series length is known (or reliably predicted).
+    Known(usize),
+    /// Only an upper bound on the final length is known.
+    AtMost(usize),
+}
+
+impl FinalLen {
+    /// The length the bound geometry assumes, given `observed` samples so
+    /// far: a `Known` hint shorter than the observed prefix self-corrects
+    /// (the hint was wrong; monotonicity holds again once the geometry
+    /// stabilizes).
+    pub fn expected(&self, observed: usize) -> usize {
+        match *self {
+            FinalLen::Known(n) => n.max(observed),
+            FinalLen::AtMost(n) => n.max(observed),
+        }
+    }
+}
+
+/// Lower bound on the banded-DTW distance between the *completed* query
+/// (filtered + min-max normalized over its full length) and a stored
+/// reference summarized by `env`.
+///
+/// * `filtered` — causally filtered prefix (`p` samples).
+/// * `norm` — running extrema of exactly `filtered`.
+/// * `domain` — `(L, H)` bounds on any filtered sample (see module docs).
+/// * `final_len` — what is known about the final query length.
+///
+/// Returns `0.0` for empty prefixes/references — a trivially admissible
+/// answer.
+pub fn prefix_lb(
+    filtered: &[f64],
+    norm: &OnlineMinMax,
+    domain: (f64, f64),
+    final_len: FinalLen,
+    env: &Envelope,
+) -> f64 {
+    let p = filtered.len();
+    if p == 0 || env.is_empty() {
+        return 0.0;
+    }
+    debug_assert_eq!(norm.count(), p, "norm out of sync with prefix");
+    let m = env.len();
+    let (lo_p, hi_p) = (norm.lo(), norm.hi());
+    // Defensive widening: the domain must contain the observed extrema for
+    // the interval argument to hold (it does for a correctly configured
+    // session; widening keeps the bound admissible either way).
+    let dl = domain.0.min(lo_p);
+    let dh = domain.1.max(hi_p);
+    // A constant prefix could still become the all-zeros normalization of
+    // a constant final series, so its rows carry no information yet.
+    let degenerate = hi_p - lo_p <= 0.0;
+
+    // Column-cover geometry for each observed row.
+    #[derive(Clone, Copy)]
+    enum Cols {
+        Exact { slope: f64, r: usize },
+        Union { slope_min: f64, slope_now: f64, r: usize },
+    }
+    let cols = match final_len {
+        FinalLen::Known(n) => {
+            let n = n.max(p);
+            Cols::Exact {
+                slope: band_slope(n, m),
+                r: band_radius(n, m),
+            }
+        }
+        FinalLen::AtMost(n_max) => {
+            let n_max = n_max.max(p);
+            // r(n) = ceil(max(incr(n), decr(n))) is bounded over [p, n_max]
+            // by the max of its endpoint values.
+            Cols::Union {
+                slope_min: band_slope(n_max, m),
+                slope_now: band_slope(p, m),
+                r: band_radius(p, m).max(band_radius(n_max, m)),
+            }
+        }
+    };
+
+    let mut sum = 0.0;
+    for (i, &v) in filtered.iter().enumerate() {
+        let (q_lo, q_hi) = if degenerate {
+            (0.0, 1.0)
+        } else {
+            let nl = if dh - lo_p > 0.0 {
+                ((v - lo_p) / (dh - lo_p)).clamp(0.0, 1.0)
+            } else {
+                0.0
+            };
+            let nh = if hi_p - dl > 0.0 {
+                ((v - dl) / (hi_p - dl)).clamp(0.0, 1.0)
+            } else {
+                1.0
+            };
+            (nl, nh)
+        };
+        let (c_lo, c_hi) = match cols {
+            Cols::Exact { slope, r } => band_edges(i, slope, r, m),
+            Cols::Union {
+                slope_min,
+                slope_now,
+                r,
+            } => {
+                let lo = (i as f64 * slope_min - r as f64).floor().max(0.0) as usize;
+                let hi = ((i as f64 * slope_now).ceil() as usize + r).min(m - 1);
+                (lo.min(m - 1), hi)
+            }
+        };
+        let (y_lo, y_hi) = env.cover_range(c_lo, c_hi);
+        if q_lo > y_hi {
+            sum += q_lo - y_hi;
+        } else if y_lo > q_hi {
+            sum += y_lo - q_hi;
+        }
+    }
+    sum
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dtw::banded::dtw_banded;
+    use crate::index::DEFAULT_BLOCK;
+    use crate::signal::chebyshev::Sos;
+    use crate::signal::normalize::min_max;
+    use crate::util::rng::Pcg32;
+
+    fn raw_series(g: &mut Pcg32, len: usize) -> Vec<f64> {
+        let mut v = 0.5;
+        (0..len)
+            .map(|_| {
+                v = (v + (g.f64() - 0.5) * 0.3).clamp(0.0, 1.0);
+                v
+            })
+            .collect()
+    }
+
+    /// Drive the online pipeline over `raw`, checking the bound at every
+    /// prefix length against the final banded distance.
+    fn check_stream(raw: &[f64], reference: &[f64], final_len: FinalLen) {
+        let sos = Sos::lowpass_default();
+        let domain = sos.output_bounds(0.0, 1.0, 1024);
+        let env = Envelope::build(reference, DEFAULT_BLOCK);
+
+        let final_q = min_max(&sos.filter(raw));
+        let n = raw.len();
+        let m = reference.len();
+        let final_dist = dtw_banded(&final_q, reference, band_radius(n, m)).distance;
+
+        let mut st = sos.stream();
+        let mut filtered = Vec::new();
+        let mut norm = OnlineMinMax::new();
+        let mut last = 0.0;
+        for &x in raw {
+            let y = st.push(x);
+            filtered.push(y);
+            norm.push(y);
+            let lb = prefix_lb(&filtered, &norm, domain, final_len, &env);
+            assert!(
+                lb >= last - 1e-12,
+                "bound not monotone: {lb} after {last} at p={}",
+                filtered.len()
+            );
+            assert!(
+                lb <= final_dist + 1e-9,
+                "bound {lb} exceeds final distance {final_dist} at p={}",
+                filtered.len()
+            );
+            last = lb;
+        }
+    }
+
+    #[test]
+    fn monotone_and_admissible_known_length() {
+        let mut g = Pcg32::new(140, 1);
+        for _ in 0..10 {
+            let n = 40 + g.below(200) as usize;
+            let m = 40 + g.below(200) as usize;
+            let raw = raw_series(&mut g, n);
+            let reference = min_max(&Sos::lowpass_default().filter(&raw_series(&mut g, m)));
+            check_stream(&raw, &reference, FinalLen::Known(n));
+        }
+    }
+
+    #[test]
+    fn monotone_and_admissible_bounded_length() {
+        let mut g = Pcg32::new(141, 2);
+        for _ in 0..10 {
+            let n = 40 + g.below(200) as usize;
+            let m = 40 + g.below(200) as usize;
+            let raw = raw_series(&mut g, n);
+            let reference = min_max(&Sos::lowpass_default().filter(&raw_series(&mut g, m)));
+            check_stream(&raw, &reference, FinalLen::AtMost(512));
+        }
+    }
+
+    #[test]
+    fn separated_series_eventually_get_a_positive_bound() {
+        // Raw stream pinned high, reference pinned low: once the prefix has
+        // spread, the bound must see the gap.
+        let mut g = Pcg32::new(142, 3);
+        let raw: Vec<f64> = (0..200)
+            .map(|_| (0.9 + (g.f64() - 0.5) * 0.1).clamp(0.0, 1.0))
+            .collect();
+        // Reference hugging zero with one unit spike so its envelope spans
+        // a narrow band near 0 except one block.
+        let mut reference = vec![0.02; 200];
+        reference[100] = 1.0;
+        let sos = Sos::lowpass_default();
+        let domain = sos.output_bounds(0.0, 1.0, 1024);
+        let env = Envelope::build(&reference, DEFAULT_BLOCK);
+        let filtered = sos.filter(&raw);
+        let mut norm = OnlineMinMax::new();
+        norm.observe(&filtered);
+        let lb = prefix_lb(&filtered, &norm, domain, FinalLen::Known(200), &env);
+        assert!(lb > 1.0, "expected a clearly positive bound, got {lb}");
+    }
+
+    #[test]
+    fn empty_inputs_are_zero() {
+        let env = Envelope::build(&[0.5; 32], DEFAULT_BLOCK);
+        let norm = OnlineMinMax::new();
+        assert_eq!(
+            prefix_lb(&[], &norm, (0.0, 1.0), FinalLen::Known(10), &env),
+            0.0
+        );
+    }
+
+    #[test]
+    fn expected_length_self_corrects() {
+        assert_eq!(FinalLen::Known(100).expected(40), 100);
+        assert_eq!(FinalLen::Known(100).expected(140), 140);
+        assert_eq!(FinalLen::AtMost(512).expected(40), 512);
+    }
+}

@@ -1,0 +1,601 @@
+//! One live classification session: a growing CPU capture, its online
+//! preprocessing state, and the anytime top-k over a candidate set of the
+//! reference database.
+//!
+//! Lifecycle: [`StreamSession::open`] resolves the candidate set (one
+//! configuration bucket, or the whole database), [`StreamSession::push`]
+//! ingests sample batches and refreshes bounds / rankings / the early-exit
+//! check, and [`StreamSession::finalize`] runs the exact indexed search on
+//! the full capture — identical to `Matcher::match_app_indexed`'s per
+//! config search, which is what makes a completed session agree with the
+//! offline pipeline no matter what was culled along the way.
+
+use super::anytime::prefix_dtw;
+use super::prefix_lb::{prefix_lb, FinalLen};
+use super::StreamStats;
+use crate::dtw::corr::similarity_percent_banded;
+use crate::index::knn::{knn, Neighbor};
+use crate::index::{IndexedDb, SearchStats};
+use crate::signal::chebyshev::{Sos, SosState};
+use crate::signal::normalize::OnlineMinMax;
+use crate::simulator::job::JobConfig;
+use crate::workloads::AppId;
+
+/// Streams longer than this leave the incremental regime: the matching
+/// pipeline linearly resamples raw captures above 512 samples
+/// (`coordinator::batcher::prepare_query`), which invalidates per-row
+/// prefix geometry. Sessions keep accepting samples past the cap but stop
+/// updating bounds; the answer then comes from [`StreamSession::finalize`].
+pub const MAX_STREAM_LEN: usize = 512;
+
+/// Hard cap on retained raw samples per session (18 hours at the 1 Hz
+/// SysStat rate, ~512 KB): a client cannot grow server memory without
+/// bound through `stream_feed`. Samples past the cap are counted but
+/// dropped; `finalize` then answers from the retained capture.
+pub const MAX_RETAINED: usize = 1 << 16;
+
+/// Minimum number of candidates (ranked by lower bound) whose exact
+/// prefix DP is refreshed per batch. Beyond this, candidates are probed
+/// only while their bound is still inside the decision margin bar — an
+/// unprobed candidate is then provably irrelevant to both the anytime
+/// top-1 and the exit check.
+const PROBE_WIDTH: usize = 4;
+
+/// When to declare an early decision.
+#[derive(Debug, Clone, Copy)]
+pub struct DecisionPolicy {
+    /// Minimum fraction of the expected final length that must be observed.
+    pub min_fraction: f64,
+    /// The runner-up's final-distance lower bound must exceed the best
+    /// candidate's current distance by this factor.
+    pub margin: f64,
+    /// Absolute floor on observed samples.
+    pub min_samples: usize,
+}
+
+impl Default for DecisionPolicy {
+    fn default() -> Self {
+        DecisionPolicy {
+            min_fraction: 0.25,
+            margin: 1.2,
+            min_samples: 24,
+        }
+    }
+}
+
+impl DecisionPolicy {
+    /// A policy that never declares early — sessions then behave exactly
+    /// like the offline pipeline (used by the equivalence tests).
+    pub fn never() -> DecisionPolicy {
+        DecisionPolicy {
+            min_fraction: 2.0,
+            ..DecisionPolicy::default()
+        }
+    }
+}
+
+/// An early classification declared mid-stream.
+#[derive(Debug, Clone)]
+pub struct StreamDecision {
+    /// Application of the winning reference entry.
+    pub app: AppId,
+    /// Configuration set of the winning reference entry.
+    pub config: JobConfig,
+    /// Position of the winning entry in the database.
+    pub entry: usize,
+    /// Anytime prefix distance of the winner at declaration time.
+    pub distance: f64,
+    /// Correlation similarity (%) of the normalized prefix vs the winner.
+    pub similarity: f64,
+    /// Samples observed when the decision was declared.
+    pub at_sample: usize,
+    /// `at_sample / expected final length`.
+    pub fraction: f64,
+}
+
+/// One candidate's live state.
+#[derive(Debug, Clone)]
+struct Candidate {
+    /// Entry position in the database.
+    pos: usize,
+    /// Monotone lower bound on the final banded distance.
+    lb: f64,
+    /// Anytime prefix distance (None when not probed or abandoned).
+    dist: Option<f64>,
+    /// This round's best floor on the candidate's distance for the exit
+    /// check: `max(lb, dp row-min)` when probed, `max(lb, abandon
+    /// cutoff)` when the DP provably cleared the margin bar, plain `lb`
+    /// when it never needed probing.
+    floor: f64,
+    /// Permanently out of the anytime race (never out of `finalize`).
+    culled: bool,
+}
+
+/// A ranked row of the anytime top-k.
+#[derive(Debug, Clone)]
+pub struct TopEntry {
+    pub entry: usize,
+    pub app: AppId,
+    pub config: JobConfig,
+    /// Anytime prefix distance, if this candidate was probed.
+    pub distance: Option<f64>,
+    /// Monotone lower bound on its final distance.
+    pub lower_bound: f64,
+}
+
+/// One live stream's classification state.
+#[derive(Debug, Clone)]
+pub struct StreamSession {
+    /// Candidate scope: a config label, or the whole database.
+    bucket: Option<String>,
+    final_len: FinalLen,
+    policy: DecisionPolicy,
+    /// Value domain of the filtered signal (`Sos::output_bounds`).
+    domain: (f64, f64),
+    raw: Vec<f64>,
+    filt: SosState,
+    filtered: Vec<f64>,
+    norm: OnlineMinMax,
+    cands: Vec<Candidate>,
+    decision: Option<StreamDecision>,
+    stats: StreamStats,
+    overflow: bool,
+}
+
+impl StreamSession {
+    /// Open a session over one configuration bucket (`Some(config)`) or the
+    /// whole database (`None`). The candidate set is resolved once; later
+    /// database inserts are not observed (sessions are short-lived).
+    pub fn open(
+        idx: &IndexedDb,
+        config: Option<&JobConfig>,
+        final_len: FinalLen,
+        policy: DecisionPolicy,
+    ) -> StreamSession {
+        let bucket = config.map(|c| c.label());
+        let positions: Vec<usize> = match &bucket {
+            Some(label) => idx.config_positions(label).to_vec(),
+            None => (0..idx.len()).collect(),
+        };
+        let sos = Sos::lowpass_default();
+        // Raw CPU utilization is confined to [0,1] by the samplers.
+        let domain = sos.output_bounds(0.0, 1.0, 1024);
+        StreamSession {
+            bucket,
+            final_len,
+            policy,
+            domain,
+            raw: Vec::new(),
+            filt: sos.stream(),
+            filtered: Vec::new(),
+            norm: OnlineMinMax::new(),
+            cands: positions
+                .into_iter()
+                .map(|pos| Candidate {
+                    pos,
+                    lb: 0.0,
+                    dist: None,
+                    floor: 0.0,
+                    culled: false,
+                })
+                .collect(),
+            decision: None,
+            stats: StreamStats::default(),
+            overflow: false,
+        }
+    }
+
+    /// Ingest one batch of raw CPU samples and refresh the anytime state.
+    /// Returns the (frozen) early decision, if one has been declared.
+    pub fn push(&mut self, idx: &IndexedDb, samples: &[f64]) -> Option<&StreamDecision> {
+        self.stats.batches += 1;
+        self.stats.samples += samples.len() as u64;
+        let room = MAX_RETAINED.saturating_sub(self.raw.len());
+        self.raw.extend_from_slice(&samples[..samples.len().min(room)]);
+        if self.overflow || self.raw.len() > MAX_STREAM_LEN {
+            self.overflow = true;
+            return self.decision.as_ref();
+        }
+        let start = self.filtered.len();
+        let (filt, filtered) = (&mut self.filt, &mut self.filtered);
+        filt.extend(samples, filtered);
+        self.norm.observe(&self.filtered[start..]);
+        self.update(idx);
+        self.decision.as_ref()
+    }
+
+    /// Refresh bounds, probe finalists, cull, and check the exit policy.
+    fn update(&mut self, idx: &IndexedDb) {
+        let p = self.filtered.len();
+        if p < 4 || self.cands.is_empty() {
+            return;
+        }
+        let flen = self.final_len;
+        let domain = self.domain;
+
+        // 1. Monotone lower bounds for every live candidate. Prefix
+        //    distances from earlier rounds were computed under an older
+        //    normalization, so drop them; only this round's probes count.
+        for c in self.cands.iter_mut().filter(|c| !c.culled) {
+            c.lb = prefix_lb(&self.filtered, &self.norm, domain, flen, idx.envelope(c.pos));
+            c.dist = None;
+            c.floor = c.lb;
+            self.stats.lb_evals += 1;
+        }
+
+        // 2. Exact prefix DP in ascending-bound order: always the first
+        //    PROBE_WIDTH finalists, then only candidates whose bound is
+        //    still inside the margin bar (everyone past that point has an
+        //    even larger bound and can affect neither the anytime top-1
+        //    nor the exit check). The DP abandons at the margin bar, which
+        //    still proves a floor above it.
+        let qp = self.norm.normalize(&self.filtered);
+        let dp_len = flen.expected(p);
+        let mut order: Vec<usize> = (0..self.cands.len())
+            .filter(|&i| !self.cands[i].culled)
+            .collect();
+        order.sort_by(|&a, &b| {
+            self.cands[a]
+                .lb
+                .partial_cmp(&self.cands[b].lb)
+                .unwrap_or(std::cmp::Ordering::Equal)
+        });
+        let entries = idx.entries();
+        let margin = self.policy.margin.max(1.0);
+        let mut bsf = f64::INFINITY;
+        let mut best_ci: Option<usize> = None;
+        let mut probed = 0usize;
+        for &ci in &order {
+            let lb = self.cands[ci].lb;
+            if probed >= PROBE_WIDTH && lb > bsf * margin {
+                break; // order is ascending: nobody later matters either
+            }
+            let series = entries[self.cands[ci].pos].series.as_slice();
+            if series.is_empty() {
+                continue;
+            }
+            let cut = if bsf.is_finite() {
+                bsf * margin + 1e-9 * (1.0 + bsf)
+            } else {
+                bsf
+            };
+            match prefix_dtw(&qp, series, dp_len, cut) {
+                None => {
+                    // Abandoned above the bar: final-for-this-round floor.
+                    self.cands[ci].floor = lb.max(cut);
+                    self.stats.dp_abandoned += 1;
+                }
+                Some(dp) => {
+                    self.cands[ci].dist = Some(dp.row_min);
+                    self.cands[ci].floor = lb.max(dp.row_min);
+                    self.stats.dp_evals += 1;
+                    if dp.row_min < bsf {
+                        bsf = dp.row_min;
+                        best_ci = Some(ci);
+                    }
+                }
+            }
+            probed += 1;
+        }
+
+        // 3. Cull candidates whose guaranteed-minimum final cost already
+        //    exceeds the best candidate's current prefix distance. This is
+        //    the anytime race only — finalize() always re-scans everyone.
+        if let Some(best) = best_ci {
+            let cut = bsf + 1e-9 * (1.0 + bsf);
+            for (i, c) in self.cands.iter_mut().enumerate() {
+                if i != best && !c.culled && c.lb > cut {
+                    c.culled = true;
+                    self.stats.culled += 1;
+                }
+            }
+            if self.decision.is_none() {
+                self.maybe_decide(entries, &qp, bsf, best);
+            }
+        }
+    }
+
+    /// Declare an early decision when the margin policy is satisfied.
+    fn maybe_decide(
+        &mut self,
+        entries: &[crate::database::profile::ProfileEntry],
+        qp: &[f64],
+        best_dist: f64,
+        best_ci: usize,
+    ) {
+        let p = self.filtered.len();
+        let expected = self.final_len.expected(p);
+        let fraction = p as f64 / expected as f64;
+        if p < self.policy.min_samples || fraction < self.policy.min_fraction {
+            return;
+        }
+        let best_pos = self.cands[best_ci].pos;
+        let best_app = entries[best_pos].app;
+        // Tightest available floor on any differently-classified
+        // candidate's distance. Culled candidates still contest through
+        // their frozen envelope bound: it was admissible for their final
+        // distance when computed, and the best's distance may have *risen*
+        // since they were culled — only the bound-vs-margin comparison
+        // below decides, never the cull itself.
+        let mut runner = f64::INFINITY;
+        for c in &self.cands {
+            if entries[c.pos].app != best_app {
+                runner = runner.min(if c.culled { c.lb } else { c.floor });
+            }
+        }
+        if runner > best_dist * self.policy.margin + 1e-12 {
+            let series = &entries[best_pos].series;
+            self.decision = Some(StreamDecision {
+                app: best_app,
+                config: entries[best_pos].config,
+                entry: best_pos,
+                distance: best_dist,
+                similarity: similarity_percent_banded(qp, series),
+                at_sample: p,
+                fraction,
+            });
+        }
+    }
+
+    /// Exact top-`k` over the session's candidate set using the *full*
+    /// capture and the offline preprocessing path — byte-for-byte the
+    /// search `Matcher::match_app_indexed` runs for this bucket.
+    pub fn finalize(&self, idx: &IndexedDb, k: usize) -> (Vec<Neighbor>, SearchStats) {
+        let q = crate::coordinator::batcher::prepare_query(&self.raw);
+        let entries = idx.entries();
+        knn(
+            &q,
+            self.cands
+                .iter()
+                .map(|c| (c.pos, entries[c.pos].series.as_slice(), idx.envelope(c.pos))),
+            k,
+        )
+    }
+
+    /// Current anytime ranking of the live candidates: probed candidates
+    /// by prefix distance, then unprobed ones by lower bound.
+    pub fn top(&self, idx: &IndexedDb, k: usize) -> Vec<TopEntry> {
+        let entries = idx.entries();
+        let mut rows: Vec<TopEntry> = self
+            .cands
+            .iter()
+            .filter(|c| !c.culled)
+            .map(|c| TopEntry {
+                entry: c.pos,
+                app: entries[c.pos].app,
+                config: entries[c.pos].config,
+                distance: c.dist,
+                lower_bound: c.lb,
+            })
+            .collect();
+        rows.sort_by(|a, b| {
+            let ka = (a.distance.is_none(), a.distance.unwrap_or(a.lower_bound));
+            let kb = (b.distance.is_none(), b.distance.unwrap_or(b.lower_bound));
+            ka.partial_cmp(&kb).unwrap_or(std::cmp::Ordering::Equal)
+        });
+        rows.truncate(k);
+        rows
+    }
+
+    /// The early decision, if one has been declared.
+    pub fn decision(&self) -> Option<&StreamDecision> {
+        self.decision.as_ref()
+    }
+
+    /// Raw samples observed so far.
+    pub fn observed(&self) -> usize {
+        self.raw.len()
+    }
+
+    /// The raw capture accumulated so far.
+    pub fn raw(&self) -> &[f64] {
+        &self.raw
+    }
+
+    /// Fraction of the expected final length observed so far.
+    pub fn fraction_observed(&self) -> f64 {
+        let p = self.raw.len();
+        if p == 0 {
+            0.0
+        } else {
+            p as f64 / self.final_len.expected(p) as f64
+        }
+    }
+
+    /// Total candidates in scope.
+    pub fn candidates(&self) -> usize {
+        self.cands.len()
+    }
+
+    /// Candidates still in the anytime race.
+    pub fn live_candidates(&self) -> usize {
+        self.cands.iter().filter(|c| !c.culled).count()
+    }
+
+    /// Whether the capture outgrew the incremental regime (see
+    /// [`MAX_STREAM_LEN`]).
+    pub fn overflowed(&self) -> bool {
+        self.overflow
+    }
+
+    /// The config bucket this session is scoped to, if any.
+    pub fn bucket(&self) -> Option<&str> {
+        self.bucket.as_deref()
+    }
+
+    /// Work counters.
+    pub fn stats(&self) -> StreamStats {
+        self.stats
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::database::profile::ProfileEntry;
+    use crate::signal;
+    use crate::util::rng::Rng;
+
+    /// Two distinguishable pattern families under one config set — the
+    /// frequencies differ enough that the Sakoe–Chiba band cannot absorb
+    /// one into the other.
+    fn sine_raw(len: usize, freq: f64, seed: u64) -> Vec<f64> {
+        let mut rng = Rng::new(seed);
+        (0..len)
+            .map(|i| {
+                (0.5 + 0.4 * ((i as f64) * freq).sin() + rng.normal_ms(0.0, 0.02))
+                    .clamp(0.0, 1.0)
+            })
+            .collect()
+    }
+
+    const WC_FREQ: f64 = 0.05;
+    const TS_FREQ: f64 = 0.3;
+
+    fn test_db() -> IndexedDb {
+        let mut idx = IndexedDb::new();
+        let cfg = JobConfig::new(4, 2, 10.0, 20.0);
+        for (app, freq) in [(AppId::WordCount, WC_FREQ), (AppId::TeraSort, TS_FREQ)] {
+            let raw = sine_raw(200, freq, 7);
+            idx.insert(ProfileEntry {
+                app,
+                config: cfg,
+                series: signal::preprocess(&raw),
+                raw_len: 200,
+                completion_secs: 200.0,
+            });
+        }
+        idx
+    }
+
+    fn cfg() -> JobConfig {
+        JobConfig::new(4, 2, 10.0, 20.0)
+    }
+
+    #[test]
+    fn fed_to_completion_matches_offline_search() {
+        let idx = test_db();
+        let raw = sine_raw(200, WC_FREQ, 99); // wordcount-shaped, new noise
+        let mut s = StreamSession::open(
+            &idx,
+            Some(&cfg()),
+            FinalLen::Known(raw.len()),
+            DecisionPolicy::never(),
+        );
+        for chunk in raw.chunks(17) {
+            s.push(&idx, chunk);
+        }
+        assert!(s.decision().is_none(), "never-policy must not declare");
+        let (top, _) = s.finalize(&idx, 1);
+        // Offline reference: the indexed search over the same bucket.
+        let q = crate::coordinator::batcher::prepare_query(&raw);
+        let (want, _) = idx.knn_in_config(&q, &cfg().label(), 1);
+        assert_eq!(top[0].index, want[0].index);
+        assert_eq!(top[0].distance.to_bits(), want[0].distance.to_bits());
+        assert_eq!(idx.entries()[top[0].index].app, AppId::WordCount);
+    }
+
+    #[test]
+    fn early_decision_finds_the_right_app_and_fraction() {
+        let idx = test_db();
+        let raw = sine_raw(200, WC_FREQ, 41);
+        let mut s = StreamSession::open(
+            &idx,
+            Some(&cfg()),
+            FinalLen::Known(raw.len()),
+            DecisionPolicy::default(),
+        );
+        let mut decided_at = None;
+        for (bi, chunk) in raw.chunks(10).enumerate() {
+            if s.push(&idx, chunk).is_some() && decided_at.is_none() {
+                decided_at = Some(bi);
+            }
+        }
+        let d = s.decision().expect("clearly-separated patterns must decide");
+        assert_eq!(d.app, AppId::WordCount);
+        assert!(d.fraction < 1.0, "decided only at the very end: {}", d.fraction);
+        assert!(d.at_sample <= raw.len());
+        assert!((0.0..=100.0).contains(&d.similarity));
+        assert!(s.stats().dp_evals > 0 && s.stats().lb_evals > 0);
+    }
+
+    #[test]
+    fn anytime_top_ranks_the_matching_pattern_first() {
+        let idx = test_db();
+        let raw = sine_raw(200, TS_FREQ, 55); // terasort-shaped
+        let mut s = StreamSession::open(
+            &idx,
+            Some(&cfg()),
+            FinalLen::Known(raw.len()),
+            DecisionPolicy::never(),
+        );
+        for chunk in raw.chunks(25) {
+            s.push(&idx, chunk);
+        }
+        let top = s.top(&idx, 2);
+        assert!(!top.is_empty());
+        assert_eq!(top[0].app, AppId::TeraSort);
+        assert_eq!(s.observed(), 200);
+        assert!((s.fraction_observed() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn whole_db_scope_and_overflow() {
+        let idx = test_db();
+        let mut s = StreamSession::open(
+            &idx,
+            None,
+            FinalLen::AtMost(MAX_STREAM_LEN),
+            DecisionPolicy::default(),
+        );
+        assert_eq!(s.candidates(), idx.len());
+        assert!(s.bucket().is_none());
+        // Overrun the cap: the session flags overflow but finalize still
+        // answers (via the resampling offline path).
+        let long = sine_raw(MAX_STREAM_LEN + 100, WC_FREQ, 3);
+        for chunk in long.chunks(64) {
+            s.push(&idx, chunk);
+        }
+        assert!(s.overflowed());
+        let (top, _) = s.finalize(&idx, 1);
+        assert_eq!(top.len(), 1);
+        let q = crate::coordinator::batcher::prepare_query(&long);
+        let (want, _) = idx.knn(&q, 1);
+        assert_eq!(top[0].index, want[0].index);
+    }
+
+    #[test]
+    fn retention_cap_bounds_memory() {
+        let idx = test_db();
+        let mut s = StreamSession::open(
+            &idx,
+            None,
+            FinalLen::AtMost(MAX_STREAM_LEN),
+            DecisionPolicy::default(),
+        );
+        let chunk = vec![0.5; 4096];
+        for _ in 0..20 {
+            s.push(&idx, &chunk); // 81920 samples offered
+        }
+        assert_eq!(s.observed(), MAX_RETAINED, "retention must cap at MAX_RETAINED");
+        assert_eq!(s.stats().samples, 20 * 4096, "all offered samples are counted");
+        assert!(s.overflowed());
+    }
+
+    #[test]
+    fn empty_bucket_is_harmless() {
+        let idx = test_db();
+        let other = JobConfig::new(9, 9, 9.0, 9.0);
+        let mut s = StreamSession::open(
+            &idx,
+            Some(&other),
+            FinalLen::AtMost(MAX_STREAM_LEN),
+            DecisionPolicy::default(),
+        );
+        assert_eq!(s.candidates(), 0);
+        s.push(&idx, &[0.1, 0.2, 0.3, 0.4, 0.5]);
+        assert!(s.decision().is_none());
+        let (top, _) = s.finalize(&idx, 3);
+        assert!(top.is_empty());
+    }
+}

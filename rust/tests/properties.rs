@@ -353,6 +353,122 @@ fn mapreduce_engine_keys_partition_disjointly() {
 }
 
 #[test]
+fn streaming_prefix_bound_monotone_and_admissible() {
+    // Property (a) of the streaming classifier: at every prefix length the
+    // lower bound is monotone non-decreasing and never exceeds the final
+    // full-series banded DTW distance — under both final-length models,
+    // with the online filter + normalization actually driving the state.
+    use mrtuner::signal::normalize::OnlineMinMax;
+    use mrtuner::streaming::prefix_lb::prefix_lb;
+    use mrtuner::streaming::FinalLen;
+
+    let mut g = Pcg32::new(300, 1);
+    let sos = Sos::lowpass_default();
+    let domain = sos.output_bounds(0.0, 1.0, 1024);
+    for round in 0..12 {
+        let n = 40 + g.below(220) as usize;
+        let m = 40 + g.below(220) as usize;
+        let raw = series(&mut g, n);
+        let reference = signal::preprocess(&series(&mut g, m));
+        let env = Envelope::build(&reference, DEFAULT_BLOCK);
+        let final_q = signal::preprocess(&raw);
+        let final_dist = dtw_banded(&final_q, &reference, band_radius(n, m)).distance;
+
+        let flen = if round % 2 == 0 {
+            FinalLen::Known(n)
+        } else {
+            FinalLen::AtMost(512)
+        };
+        let mut st = sos.stream();
+        let mut filtered = Vec::new();
+        let mut norm = OnlineMinMax::new();
+        let mut last = 0.0;
+        for &x in &raw {
+            let y = st.push(x);
+            filtered.push(y);
+            norm.push(y);
+            let lb = prefix_lb(&filtered, &norm, domain, flen, &env);
+            assert!(
+                lb >= last - 1e-12,
+                "round {round}: bound fell from {last} to {lb} at p={}",
+                filtered.len()
+            );
+            assert!(
+                lb <= final_dist + 1e-9,
+                "round {round}: bound {lb} > final banded distance {final_dist} at p={}",
+                filtered.len()
+            );
+            last = lb;
+        }
+    }
+}
+
+#[test]
+fn completed_stream_session_equals_offline_indexed_top1() {
+    // Property (b): a session fed to completion finalizes to exactly the
+    // top-1 the offline indexed matcher computes on the full series —
+    // same entry, bit-identical distance — for every config bucket.
+    use mrtuner::coordinator::batcher::prepare_query;
+    use mrtuner::coordinator::profiler::Profiler;
+    use mrtuner::coordinator::{ConfigGrid, SystemConfig};
+    use mrtuner::database::store::ReferenceDb;
+    use mrtuner::index::IndexedDb as Idx;
+    use mrtuner::streaming::{DecisionPolicy, FinalLen, StreamSession};
+
+    let sc = SystemConfig {
+        workers: 2,
+        use_runtime: false,
+        ..SystemConfig::default()
+    };
+    let grid = ConfigGrid::small(9);
+    let profiler = Profiler::new(&sc, None);
+    let mut db = ReferenceDb::new();
+    for app in [AppId::WordCount, AppId::TeraSort] {
+        for e in profiler.profile(app, &grid) {
+            db.insert(e);
+        }
+    }
+    let idx = Idx::from_db(db);
+
+    for (ci, cfg) in grid.configs.iter().enumerate() {
+        let w = workload_for(AppId::EximParse);
+        let r = simulate(
+            w.as_ref(),
+            cfg,
+            &sc.cluster,
+            &NoiseModel::default(),
+            &mut Rng::new(4242 + ci as u64),
+        );
+        let mut session = StreamSession::open(
+            &idx,
+            Some(cfg),
+            FinalLen::Known(r.cpu_noisy.len()),
+            DecisionPolicy::never(),
+        );
+        let mut source = r.live_stream();
+        while let Some(chunk) = source.next_batch(23) {
+            session.push(&idx, chunk);
+        }
+        assert!(session.decision().is_none());
+        let (top, _) = session.finalize(&idx, 1);
+        let q = prepare_query(&r.cpu_noisy);
+        let (want, _) = idx.knn_in_config(&q, &cfg.label(), 1);
+        assert_eq!(top.len(), want.len(), "config {}", cfg.label());
+        if let (Some(a), Some(b)) = (top.first(), want.first()) {
+            assert_eq!(a.index, b.index, "config {}", cfg.label());
+            assert_eq!(
+                a.distance.to_bits(),
+                b.distance.to_bits(),
+                "config {}: {} vs {}",
+                cfg.label(),
+                a.distance,
+                b.distance
+            );
+        }
+    }
+}
+
+#[test]
 fn normalization_idempotent() {
     let mut g = Pcg32::new(110, 11);
     for _ in 0..20 {
