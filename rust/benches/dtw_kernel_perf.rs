@@ -1,0 +1,357 @@
+//! Perf bench (DTW execution layer): scratch-arena kernels and the
+//! parallel/batched k-NN engine vs the seed-grade path.
+//!
+//! Part 1 — kernel microbenchmarks: ns/call *and heap allocations per
+//! call* (counted by a wrapping global allocator) for the banded
+//! path-producing DP, the early-abandoning distance-only DP and the
+//! streaming prefix DP, each through (a) a warm reused [`DtwScratch`],
+//! (b) the seed-signature wrapper (thread-local arena) and (c) a fresh
+//! arena per call — the seed's allocation behaviour. The acceptance bar:
+//! **zero** allocations per call for the warm distance-only kernel.
+//!
+//! Part 2 — k-NN scaling at DB sizes {50, 500, 5000}: the seed-grade
+//! search loop (serial, fresh rows per DTW call) vs today's serial engine
+//! vs the cutoff-sharing parallel engine. The acceptance bar at DB=5000:
+//! parallel + scratch >= 2x over the seed-grade path, with results proven
+//! identical.
+//!
+//! Part 3 — batched multi-query search at batch sizes {1, 8, 64}:
+//! `IndexedDb::knn_batch` (one envelope pass per entry per length group)
+//! vs one `knn` call per query.
+//!
+//! Results go to stdout and `BENCH_dtw.json`. `MRTUNER_BENCH_SMOKE=1`
+//! shrinks the sweep for CI.
+//!
+//! Run with: `cargo bench --bench dtw_kernel_perf`
+
+#[path = "harness.rs"]
+mod harness;
+
+use harness::bench;
+use mrtuner::coordinator::batcher::prepare_query;
+use mrtuner::database::profile::ProfileEntry;
+use mrtuner::database::store::ReferenceDb;
+use mrtuner::dtw::banded::{dtw_banded_distance_cutoff, dtw_banded_distance_cutoff_with, dtw_banded_with};
+use mrtuner::dtw::{band_radius, DtwScratch};
+use mrtuner::index::{lb, IndexedDb, Neighbor, DEFAULT_BLOCK};
+use mrtuner::simulator::job::JobConfig;
+use mrtuner::streaming::anytime::prefix_dtw_with;
+use mrtuner::util::json::Json;
+use mrtuner::util::pool::default_workers;
+use mrtuner::util::rng::Rng;
+use mrtuner::workloads::AppId;
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Instant;
+
+/// Counting wrapper around the system allocator: lets the bench report
+/// heap allocations per kernel call, not just wall-clock.
+struct CountingAlloc;
+
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc_zeroed(layout)
+    }
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+#[global_allocator]
+static ALLOCATOR: CountingAlloc = CountingAlloc;
+
+/// Time `f` over `iters` calls after a short warmup, also reporting the
+/// mean number of heap allocations per call.
+fn measure<T>(iters: usize, mut f: impl FnMut() -> T) -> (f64, f64) {
+    for _ in 0..iters.min(5) {
+        std::hint::black_box(f());
+    }
+    let a0 = ALLOCS.load(Ordering::Relaxed);
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        std::hint::black_box(f());
+    }
+    let dt = t0.elapsed().as_secs_f64();
+    let da = ALLOCS.load(Ordering::Relaxed) - a0;
+    (dt / iters as f64 * 1e9, da as f64 / iters as f64)
+}
+
+/// Synthetic CPU-like pattern, preprocessed exactly like stored profiles.
+fn wave(len: usize, seed: u64) -> Vec<f64> {
+    let mut rng = Rng::new(seed);
+    let f = 0.04 + rng.f64() * 0.12;
+    let phase = rng.f64() * 6.28;
+    prepare_query(
+        &(0..len)
+            .map(|i| {
+                (0.55 + 0.35 * ((i as f64) * f + phase).sin() + rng.normal_ms(0.0, 0.04))
+                    .clamp(0.0, 1.0)
+            })
+            .collect::<Vec<_>>(),
+    )
+}
+
+fn synthetic_db(n: usize) -> IndexedDb {
+    let mut db = ReferenceDb::new();
+    for i in 0..n {
+        // Unique (M, R, FS) triple for every i < 42*40*50.
+        let cfg = JobConfig::new(
+            i % 42 + 1,
+            (i / 42) % 40 + 1,
+            (i / (42 * 40) + 1) as f64,
+            100.0,
+        );
+        let len = 64 + (i * 37) % 256;
+        db.insert(ProfileEntry {
+            app: AppId::all()[i % AppId::all().len()],
+            config: cfg,
+            series: wave(len, i as u64),
+            raw_len: len,
+            completion_secs: 100.0,
+        });
+    }
+    IndexedDb::from_db(db)
+}
+
+/// The seed-grade search loop: identical cascade and tie-breaks, but
+/// serial and with fresh DP rows allocated for every DTW call — what
+/// `index::knn` cost before the scratch/parallel engine.
+fn knn_seed_grade(query: &[f64], idx: &IndexedDb, k: usize) -> Vec<Neighbor> {
+    let n = query.len();
+    let qext = lb::query_extrema(query, DEFAULT_BLOCK);
+    let mut best: Vec<Neighbor> = Vec::new();
+    for i in 0..idx.len() {
+        let series = idx.entries()[i].series.as_slice();
+        if series.is_empty() {
+            continue;
+        }
+        let env = idx.envelope(i);
+        let bsf = if best.len() == k {
+            best[k - 1].distance
+        } else {
+            f64::INFINITY
+        };
+        let cut = if bsf.is_finite() {
+            bsf + 1e-9 * (1.0 + bsf.abs())
+        } else {
+            bsf
+        };
+        if lb::lb_kim(query, series) > cut {
+            continue;
+        }
+        let r = band_radius(n, series.len());
+        if n >= 64 && lb::lb_paa(&qext, n, DEFAULT_BLOCK, env, r) > cut {
+            continue;
+        }
+        if lb::lb_keogh(query, env, r) > cut {
+            continue;
+        }
+        // Fresh arena per call == seed allocation behaviour.
+        if let Some(distance) =
+            dtw_banded_distance_cutoff_with(&mut DtwScratch::new(), query, series, r, cut)
+        {
+            let pos = best.partition_point(|b| (b.distance, b.index) <= (distance, i));
+            if pos < k {
+                best.insert(pos, Neighbor { index: i, distance });
+                best.truncate(k);
+            }
+        }
+    }
+    best
+}
+
+fn kernel_micro(smoke: bool) -> Vec<Json> {
+    println!("== kernel microbenchmarks (256 x 256, ns/call and allocs/call) ==");
+    let x = wave(256, 1);
+    let y = wave(256, 2);
+    let r = band_radius(x.len(), y.len());
+    let iters = if smoke { 200 } else { 2000 };
+    let mut rows = Vec::new();
+    let mut emit = |name: &str, ns: f64, allocs: f64| {
+        println!("    {name:44} {ns:>12.0} ns/call  {allocs:>6.2} allocs/call");
+        rows.push(Json::obj(vec![
+            ("kernel", Json::Str(name.to_string())),
+            ("ns_per_call", Json::Num(ns)),
+            ("allocs_per_call", Json::Num(allocs)),
+        ]));
+    };
+
+    let mut warm = DtwScratch::new();
+    // Grow the arena once before measuring the steady state.
+    std::hint::black_box(dtw_banded_distance_cutoff_with(&mut warm, &x, &y, r, f64::INFINITY));
+
+    let (ns, al) = measure(iters, || {
+        dtw_banded_distance_cutoff_with(&mut warm, &x, &y, r, f64::INFINITY)
+    });
+    let zero_alloc_cutoff = al == 0.0;
+    emit("banded cutoff DP, warm scratch", ns, al);
+    let (ns, al) = measure(iters, || dtw_banded_distance_cutoff(&x, &y, r, f64::INFINITY));
+    emit("banded cutoff DP, thread-local wrapper", ns, al);
+    let (ns, al) = measure(iters, || {
+        dtw_banded_distance_cutoff_with(&mut DtwScratch::new(), &x, &y, r, f64::INFINITY)
+    });
+    emit("banded cutoff DP, fresh arena (seed)", ns, al);
+
+    let (ns, al) = measure(iters, || prefix_dtw_with(&mut warm, &x[..128], &y, 256, f64::INFINITY));
+    emit("prefix DP (128/256), warm scratch", ns, al);
+    let (ns, al) = measure(iters, || {
+        prefix_dtw_with(&mut DtwScratch::new(), &x[..128], &y, 256, f64::INFINITY)
+    });
+    emit("prefix DP (128/256), fresh arena (seed)", ns, al);
+
+    // The path-producing kernel's result allocates by contract (the path
+    // itself); the interesting delta is DP-buffer reuse.
+    let (ns, al) = measure(iters / 2, || dtw_banded_with(&mut warm, &x, &y, r));
+    emit("banded full DP + path, warm scratch", ns, al);
+    let (ns, al) = measure(iters / 2, || dtw_banded_with(&mut DtwScratch::new(), &x, &y, r));
+    emit("banded full DP + path, fresh arena (seed)", ns, al);
+
+    println!(
+        "    steady-state banded cutoff kernel zero-alloc: {}",
+        if zero_alloc_cutoff { "PASS" } else { "FAIL" }
+    );
+    rows.push(Json::obj(vec![
+        ("kernel", Json::Str("zero_alloc_acceptance".into())),
+        ("pass", Json::Bool(zero_alloc_cutoff)),
+    ]));
+    rows
+}
+
+fn knn_scaling(smoke: bool) -> (Vec<Json>, Option<Json>) {
+    println!("\n== k-NN scaling: seed-grade vs serial engine vs parallel engine ==");
+    let sizes: &[usize] = if smoke { &[50, 200] } else { &[50, 500, 5000] };
+    let workers = default_workers();
+    let mut rows = Vec::new();
+    let mut acceptance = None;
+    for &n in sizes {
+        let idx = synthetic_db(n);
+        let queries: Vec<Vec<f64>> = (0..5)
+            .map(|qi| wave(96 + qi * 40, (qi * 7 + 3) as u64))
+            .collect();
+        // Exactness first: parallel == serial == seed-grade, bit for bit.
+        for q in &queries {
+            let (serial, _) = idx.knn(q, 1);
+            let (par, _) = idx.knn_parallel(q, 1, workers);
+            let seed = knn_seed_grade(q, &idx, 1);
+            assert_eq!(serial[0].index, par[0].index, "parallel winner mismatch");
+            assert_eq!(serial[0].distance.to_bits(), par[0].distance.to_bits());
+            assert_eq!(serial[0].index, seed[0].index, "seed-grade winner mismatch");
+            assert_eq!(serial[0].distance.to_bits(), seed[0].distance.to_bits());
+        }
+        let samples = if n >= 5000 { 3 } else { 8 };
+        let seed = bench(&format!("seed-grade serial top-1   DB={n}"), 1, samples, || {
+            queries.iter().map(|q| knn_seed_grade(q, &idx, 1)).collect::<Vec<_>>()
+        });
+        let serial = bench(&format!("scratch serial top-1      DB={n}"), 1, samples, || {
+            queries.iter().map(|q| idx.knn(q, 1)).collect::<Vec<_>>()
+        });
+        let par = bench(
+            &format!("scratch parallel top-1    DB={n} (w={workers})"),
+            1,
+            samples,
+            || queries.iter().map(|q| idx.knn_parallel(q, 1, workers)).collect::<Vec<_>>(),
+        );
+        let speedup = seed.mean_s / par.mean_s;
+        println!(
+            "    DB={n}: parallel+scratch vs seed-grade speedup {speedup:.2}x (serial-only {:.2}x)",
+            seed.mean_s / serial.mean_s
+        );
+        if n == 5000 {
+            let pass = speedup >= 2.0;
+            println!(
+                "    acceptance (DB=5000): parallel+scratch >= 2x seed path: {}",
+                if pass { "PASS" } else { "FAIL" }
+            );
+            acceptance = Some(Json::obj(vec![
+                ("db", Json::Num(5000.0)),
+                ("speedup_parallel_vs_seed", Json::Num(speedup)),
+                ("pass", Json::Bool(pass)),
+            ]));
+        }
+        rows.push(Json::obj(vec![
+            ("db", Json::Num(n as f64)),
+            ("workers", Json::Num(workers as f64)),
+            ("seed_ms", Json::Num(seed.mean_s * 1e3)),
+            ("serial_ms", Json::Num(serial.mean_s * 1e3)),
+            ("parallel_ms", Json::Num(par.mean_s * 1e3)),
+            ("speedup_parallel_vs_seed", Json::Num(speedup)),
+            ("speedup_serial_vs_seed", Json::Num(seed.mean_s / serial.mean_s)),
+        ]));
+    }
+    (rows, acceptance)
+}
+
+fn batch_scaling(smoke: bool) -> Vec<Json> {
+    println!("\n== batched multi-query search: knn_batch vs one knn per query ==");
+    let db_size = if smoke { 200 } else { 500 };
+    let idx = synthetic_db(db_size);
+    let mut rows = Vec::new();
+    for &b in &[1usize, 8, 64] {
+        // Four distinct lengths: realistic concurrency (same resample cap
+        // buckets) and enough duplication for the shared envelope pass.
+        let queries: Vec<Vec<f64>> = (0..b)
+            .map(|i| wave(96 + (i % 4) * 40, 100 + i as u64))
+            .collect();
+        let qrefs: Vec<&[f64]> = queries.iter().map(Vec::as_slice).collect();
+        // Exactness: every batched row equals its per-query search.
+        let got = idx.knn_batch(&qrefs, 1);
+        for (qi, q) in qrefs.iter().enumerate() {
+            let (want, _) = idx.knn(q, 1);
+            assert_eq!(got[qi].0[0].index, want[0].index, "batch mismatch at {qi}");
+            assert_eq!(got[qi].0[0].distance.to_bits(), want[0].distance.to_bits());
+        }
+        let samples = if smoke { 3 } else { 8 };
+        let batched = bench(&format!("knn_batch  DB={db_size} batch={b:>2}"), 1, samples, || {
+            idx.knn_batch(&qrefs, 1)
+        });
+        let one_by_one = bench(&format!("knn x{b:<3}   DB={db_size} batch={b:>2}"), 1, samples, || {
+            qrefs.iter().map(|q| idx.knn(q, 1)).collect::<Vec<_>>()
+        });
+        let speedup = one_by_one.mean_s / batched.mean_s;
+        println!(
+            "    batch={b}: {:.3} ms/query batched vs {:.3} ms/query serial ({speedup:.2}x)",
+            batched.mean_s / b as f64 * 1e3,
+            one_by_one.mean_s / b as f64 * 1e3
+        );
+        rows.push(Json::obj(vec![
+            ("db", Json::Num(db_size as f64)),
+            ("batch", Json::Num(b as f64)),
+            ("batched_ms_per_query", Json::Num(batched.mean_s / b as f64 * 1e3)),
+            ("serial_ms_per_query", Json::Num(one_by_one.mean_s / b as f64 * 1e3)),
+            ("speedup", Json::Num(speedup)),
+        ]));
+    }
+    rows
+}
+
+fn main() {
+    mrtuner::util::logging::init();
+    let smoke = std::env::var("MRTUNER_BENCH_SMOKE").is_ok();
+
+    let kernels = kernel_micro(smoke);
+    let (knn_rows, acceptance) = knn_scaling(smoke);
+    let batch_rows = batch_scaling(smoke);
+
+    let report = Json::obj(vec![
+        ("bench", Json::Str("dtw_kernel_perf".into())),
+        ("smoke", Json::Bool(smoke)),
+        ("workers", Json::Num(default_workers() as f64)),
+        ("kernels", Json::arr(kernels)),
+        ("knn", Json::arr(knn_rows)),
+        ("batch", Json::arr(batch_rows)),
+        ("acceptance", acceptance.unwrap_or(Json::Null)),
+    ]);
+    std::fs::write("BENCH_dtw.json", report.to_pretty()).expect("write BENCH_dtw.json");
+    println!("wrote BENCH_dtw.json");
+}

@@ -213,6 +213,75 @@ impl Matcher {
         )
     }
 
+    /// Batched index-backed matching phase: classify several unknown apps
+    /// in one pass. Per configuration set, every app's query is profiled
+    /// and then searched together through
+    /// [`IndexedDb::knn_batch_in_config`], whose entry-major walk shares
+    /// one envelope pass per reference entry across the whole query batch
+    /// — the per-(query, entry) envelope work of `B` separate
+    /// [`Matcher::match_app_indexed`] calls collapses to one. Results are
+    /// returned in `apps` order and are identical — votes, winners,
+    /// similarities and search counters — to calling `match_app_indexed`
+    /// once per app (pinned by `rust/tests/query_engine.rs`).
+    pub fn match_apps_indexed(
+        &self,
+        apps: &[AppId],
+        grid: &ConfigGrid,
+        idx: &IndexedDb,
+        rerank: usize,
+    ) -> Vec<(MatchOutcome, SearchStats)> {
+        let rerank = rerank.max(1);
+        if apps.is_empty() {
+            return Vec::new();
+        }
+        // Config-major: one batched search per configuration set, every
+        // app riding in the same batch.
+        let per_config: Vec<Vec<(Vec<SimilarityCell>, ConfigVote, SearchStats)>> =
+            par_map(&grid.configs, self.config.workers, |cfg| {
+                let queries: Vec<Vec<f64>> = apps
+                    .iter()
+                    .map(|&app| prepare_query(&self.profile_query(app, cfg).cpu_noisy))
+                    .collect();
+                let qrefs: Vec<&[f64]> = queries.iter().map(Vec::as_slice).collect();
+                let results = idx.knn_batch_in_config(&qrefs, &cfg.label(), rerank);
+                queries
+                    .iter()
+                    .zip(results)
+                    .map(|(q, (neighbors, stats))| {
+                        let (cells, vote) = score_neighbors(q, &neighbors, idx.entries(), cfg);
+                        (cells, vote, stats)
+                    })
+                    .collect()
+            });
+
+        // Transpose back to per-app outcomes in input order.
+        apps.iter()
+            .enumerate()
+            .map(|(ai, &app)| {
+                let mut cells = Vec::new();
+                let mut votes = Vec::new();
+                let mut stats = SearchStats::default();
+                for cfg_rows in &per_config {
+                    let (c, v, s) = &cfg_rows[ai];
+                    cells.extend(c.iter().cloned());
+                    votes.push(v.clone());
+                    stats.merge(s);
+                }
+                let (tally, winner) = tally_votes(&votes);
+                (
+                    MatchOutcome {
+                        query_app: app,
+                        cells,
+                        votes,
+                        winner,
+                        tally,
+                    },
+                    stats,
+                )
+            })
+            .collect()
+    }
+
     /// Streaming matching phase: each per-config query is *streamed* into
     /// a [`StreamSession`] batch by batch instead of being captured whole,
     /// and its vote is fixed the moment the session's early-exit policy
@@ -541,6 +610,34 @@ mod tests {
         assert_eq!(outcome.winner, None);
         assert!(outcome.cells.is_empty());
         assert_eq!(stats.candidates, 0);
+    }
+
+    #[test]
+    fn batched_matcher_equals_per_app_indexed() {
+        let grid = ConfigGrid::small(4);
+        let db = build_db(&grid);
+        let m = Matcher::new(&sysconfig(), None);
+        let idx = IndexedDb::from_db(db);
+        let apps = [AppId::EximParse, AppId::WordCount];
+        let batch = m.match_apps_indexed(&apps, &grid, &idx, 1);
+        assert_eq!(batch.len(), apps.len());
+        for (i, &app) in apps.iter().enumerate() {
+            let (want, wstats) = m.match_app_indexed(app, &grid, &idx, 1);
+            assert_eq!(batch[i].0.winner, want.winner, "app {}", app.name());
+            assert_eq!(batch[i].0.tally, want.tally);
+            assert_eq!(batch[i].1, wstats, "app {}", app.name());
+            assert_eq!(batch[i].0.votes.len(), want.votes.len());
+            for (a, b) in batch[i].0.votes.iter().zip(&want.votes) {
+                assert_eq!(a.best_app, b.best_app, "config {}", a.config.label());
+                assert_eq!(
+                    a.best_similarity.to_bits(),
+                    b.best_similarity.to_bits(),
+                    "config {}",
+                    a.config.label()
+                );
+            }
+        }
+        assert!(m.match_apps_indexed(&[], &grid, &idx, 1).is_empty());
     }
 
     #[test]

@@ -32,6 +32,13 @@ pub struct Metrics {
     pub stream_batches: AtomicU64,
     pub stream_culled: AtomicU64,
     pub stream_decisions: AtomicU64,
+    /// Batched k-NN counters: how many `knn_batch` requests ran and how
+    /// many queries they carried (queries / batches = realized batch
+    /// size — the envelope-pass sharing factor).
+    pub knn_batches: AtomicU64,
+    pub knn_batch_queries: AtomicU64,
+    /// Wall-clock of each whole batch (not per query).
+    knn_batch_latency: Mutex<Welford>,
     latency: Mutex<Welford>,
     /// Prefix fraction observed when a session declared its decision —
     /// the streaming classifier's headline "how early" number.
@@ -105,6 +112,27 @@ impl Metrics {
         self.stream_culled.fetch_add(s.culled, Ordering::Relaxed);
     }
 
+    /// Fold one batched k-NN request into the registry: how many queries
+    /// it carried and the whole batch's wall-clock.
+    pub fn record_knn_batch(&self, queries: u64, seconds: f64) {
+        self.knn_batches.fetch_add(1, Ordering::Relaxed);
+        self.knn_batch_queries.fetch_add(queries, Ordering::Relaxed);
+        self.knn_batch_latency
+            .lock()
+            .expect("batch latency lock")
+            .push(seconds);
+    }
+
+    /// Snapshot: (batches, queries, mean batch latency in seconds).
+    pub fn knn_batch_summary(&self) -> (u64, u64, f64) {
+        let w = self.knn_batch_latency.lock().expect("batch latency lock");
+        (
+            self.knn_batches.load(Ordering::Relaxed),
+            self.knn_batch_queries.load(Ordering::Relaxed),
+            w.mean(),
+        )
+    }
+
     /// Record an early decision: at which sample and prefix fraction it
     /// was declared.
     pub fn record_stream_decision(&self, at_sample: usize, fraction: f64) {
@@ -149,8 +177,9 @@ impl Metrics {
     pub fn report(&self) -> String {
         let (n, mean, std, min, max) = self.latency_summary();
         let (decisions, mean_at, mean_frac) = self.decision_summary();
+        let (kb, kbq, kb_mean) = self.knn_batch_summary();
         format!(
-            "requests={} comparisons={} batches={} errors={} latency: n={} mean={:.1}ms sd={:.1}ms min={:.1}ms max={:.1}ms index: {} stream: opened={} closed={} reaped={} batches={} culled={} decisions={} mean_at={:.0} mean_frac={:.2}",
+            "requests={} comparisons={} batches={} errors={} latency: n={} mean={:.1}ms sd={:.1}ms min={:.1}ms max={:.1}ms index: {} knn_batch: n={} queries={} mean={:.1}ms stream: opened={} closed={} reaped={} batches={} culled={} decisions={} mean_at={:.0} mean_frac={:.2}",
             self.requests.load(Ordering::Relaxed),
             self.comparisons.load(Ordering::Relaxed),
             self.batches.load(Ordering::Relaxed),
@@ -161,6 +190,9 @@ impl Metrics {
             min * 1e3,
             max * 1e3,
             self.search_stats(),
+            kb,
+            kbq,
+            kb_mean * 1e3,
             self.stream_opened.load(Ordering::Relaxed),
             self.stream_closed.load(Ordering::Relaxed),
             self.stream_reaped.load(Ordering::Relaxed),
@@ -233,6 +265,19 @@ mod tests {
         assert!((mean_frac - 0.4).abs() < 1e-9);
         let r = m.report();
         assert!(r.contains("opened=2") && r.contains("culled=3"), "{r}");
+    }
+
+    #[test]
+    fn knn_batch_counters_accumulate() {
+        let m = Metrics::new();
+        m.record_knn_batch(8, 0.010);
+        m.record_knn_batch(64, 0.030);
+        let (batches, queries, mean) = m.knn_batch_summary();
+        assert_eq!(batches, 2);
+        assert_eq!(queries, 72);
+        assert!((mean - 0.020).abs() < 1e-9);
+        let r = m.report();
+        assert!(r.contains("knn_batch: n=2 queries=72"), "{r}");
     }
 
     #[test]

@@ -7,10 +7,12 @@
 //!   {"cmd": "match", "series": [..], "config": {"mappers": M, "reducers": R,
 //!    "split_mb": FS, "input_mb": I}}
 //!   {"cmd": "knn", "series": [..], "k": K[, "config": {..}]}
+//!   {"cmd": "knn_batch", "queries": [[..], ..], "k": K[, "config": {..}]}
 //!   {"cmd": "stream_open"[, "config": {..}][, "final_len": N][, "max_len": N]
 //!    [, "min_fraction": F][, "margin": M][, "min_samples": S]}
 //!   {"cmd": "stream_feed", "session": ID, "samples": [..]}
 //!   {"cmd": "stream_poll", "session": ID[, "k": K]}
+//!   {"cmd": "stream_poll_all"[, "k": K]}
 //!   {"cmd": "stream_close", "session": ID}
 //!
 //! The `match` request carries a *raw* captured CPU series (what a real
@@ -22,8 +24,14 @@
 //! nearest references under the banded-DTW distance — over the whole
 //! database, or one configuration set when `config` is given — plus each
 //! neighbour's correlation similarity and the pruning counters for this
-//! search. The state holds an [`IndexedDb`], so concurrent connections
-//! share one immutable envelope cache.
+//! search. Whole-database searches are scored across the worker cores
+//! with a shared early-abandoning cutoff (`IndexedDb::knn_parallel`,
+//! result identical to the serial scan). `knn_batch` carries many queries
+//! in one request and answers them in one entry-major pass that shares
+//! envelope work across same-length queries (`IndexedDb::knn_batch`); the
+//! per-batch size and latency land in the metrics report. The state holds
+//! an [`IndexedDb`], so concurrent connections share one immutable
+//! envelope cache.
 //!
 //! The `stream_*` commands expose the online classifier
 //! (`crate::streaming`): `stream_open` registers a live session (scoped to
@@ -41,18 +49,19 @@
 use super::batcher::{prepare_query, similarities_auto};
 use super::metrics::Metrics;
 use crate::dtw::corr::MATCH_THRESHOLD;
-use crate::index::IndexedDb;
+use crate::index::{IndexedDb, SearchStats};
 use crate::runtime::RuntimeHandle;
 use crate::simulator::job::JobConfig;
 use crate::streaming::{
-    DecisionPolicy, FinalLen, SessionManager, StreamDecision, StreamSession, MAX_STREAM_LEN,
+    DecisionPolicy, FinalLen, SessionManager, StreamDecision, StreamSession, TopEntry,
+    MAX_STREAM_LEN,
 };
 use crate::util::json::Json;
-use crate::util::pool::ThreadPool;
+use crate::util::pool::{default_workers, ThreadPool};
 use anyhow::{anyhow, Result};
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::Arc;
 use std::time::Duration;
 
@@ -235,9 +244,11 @@ pub fn handle_request(line: &str, state: &ServerState) -> Result<Json> {
         ])),
         Some("match") => handle_match(&req, state),
         Some("knn") => handle_knn(&req, state),
+        Some("knn_batch") => handle_knn_batch(&req, state),
         Some("stream_open") => handle_stream_open(&req, state),
         Some("stream_feed") => handle_stream_feed(&req, state),
         Some("stream_poll") => handle_stream_poll(&req, state),
+        Some("stream_poll_all") => handle_stream_poll_all(&req, state),
         Some("stream_close") => handle_stream_close(&req, state),
         _ => Err(anyhow!("unknown cmd")),
     }
@@ -376,6 +387,26 @@ fn handle_stream_feed(req: &Json, state: &ServerState) -> Result<Json> {
     ]))
 }
 
+/// Anytime top rows shared by `stream_poll` and `stream_poll_all`.
+fn top_json(top: &[TopEntry]) -> Json {
+    Json::arr(
+        top.iter()
+            .map(|t| {
+                Json::obj(vec![
+                    ("app", Json::Str(t.app.name().to_string())),
+                    ("config", Json::Str(t.config.label())),
+                    ("entry", Json::Num(t.entry as f64)),
+                    (
+                        "distance",
+                        t.distance.map(Json::Num).unwrap_or(Json::Null),
+                    ),
+                    ("lower_bound", Json::Num(t.lower_bound)),
+                ])
+            })
+            .collect(),
+    )
+}
+
 /// Report a live session's anytime top-k without feeding it.
 fn handle_stream_poll(req: &Json, state: &ServerState) -> Result<Json> {
     let id = parse_session_id(req)?;
@@ -389,31 +420,43 @@ fn handle_stream_poll(req: &Json, state: &ServerState) -> Result<Json> {
             s.stats().culled,
         )
     })?;
-    let rows = top
-        .iter()
-        .map(|t| {
-            Json::obj(vec![
-                ("app", Json::Str(t.app.name().to_string())),
-                ("config", Json::Str(t.config.label())),
-                ("entry", Json::Num(t.entry as f64)),
-                (
-                    "distance",
-                    t.distance.map(Json::Num).unwrap_or(Json::Null),
-                ),
-                ("lower_bound", Json::Num(t.lower_bound)),
-            ])
-        })
-        .collect();
     Ok(Json::obj(vec![
         ("ok", Json::Bool(true)),
         ("observed", Json::Num(observed as f64)),
         ("live_candidates", Json::Num(live as f64)),
         ("culled", Json::Num(culled as f64)),
-        ("top", Json::arr(rows)),
+        ("top", top_json(&top)),
         (
             "decision",
             decision.as_ref().map(decision_json).unwrap_or(Json::Null),
         ),
+    ]))
+}
+
+/// Snapshot every live session in one request — the fleet dashboard's
+/// poll, backed by `SessionManager::poll_all`.
+fn handle_stream_poll_all(req: &Json, state: &ServerState) -> Result<Json> {
+    let k = req.get("k").and_then(Json::as_usize).unwrap_or(3).clamp(1, 20);
+    let polls = state.sessions.poll_all(&state.db, k);
+    let rows = polls
+        .iter()
+        .map(|p| {
+            Json::obj(vec![
+                ("session", Json::Num(p.id as f64)),
+                ("observed", Json::Num(p.observed as f64)),
+                ("live_candidates", Json::Num(p.live_candidates as f64)),
+                ("culled", Json::Num(p.culled as f64)),
+                ("top", top_json(&p.top)),
+                (
+                    "decision",
+                    p.decision.as_ref().map(decision_json).unwrap_or(Json::Null),
+                ),
+            ])
+        })
+        .collect();
+    Ok(Json::obj(vec![
+        ("ok", Json::Bool(true)),
+        ("sessions", Json::arr(rows)),
     ]))
 }
 
@@ -453,8 +496,65 @@ fn handle_stream_close(req: &Json, state: &ServerState) -> Result<Json> {
     ]))
 }
 
+/// Pruning counters as a response object.
+fn stats_json(stats: &SearchStats) -> Json {
+    Json::obj(vec![
+        ("candidates", Json::Num(stats.candidates as f64)),
+        ("pruned_lb_kim", Json::Num(stats.pruned_lb_kim as f64)),
+        ("pruned_lb_paa", Json::Num(stats.pruned_lb_paa as f64)),
+        ("pruned_lb_keogh", Json::Num(stats.pruned_lb_keogh as f64)),
+        ("abandoned", Json::Num(stats.abandoned as f64)),
+        ("dtw_evals", Json::Num(stats.dtw_evals as f64)),
+    ])
+}
+
+/// One neighbour as a response row (with its correlation similarity).
+fn neighbor_json(state: &ServerState, q: &[f64], nb: &crate::index::Neighbor) -> Json {
+    let e = &state.db.entries()[nb.index];
+    Json::obj(vec![
+        ("app", Json::Str(e.app.name().to_string())),
+        ("config", Json::Str(e.config_key())),
+        ("distance", Json::Num(nb.distance)),
+        (
+            "similarity",
+            Json::Num(crate::dtw::corr::similarity_percent_banded(q, &e.series)),
+        ),
+    ])
+}
+
+/// Whole-DB k-NN searches currently fanning out (process-wide). The
+/// physical cores are one shared budget: a lone request gets them all,
+/// concurrent requests split them, so CPU-bound scan threads never
+/// oversubscribe the machine however many pool workers are serving.
+static KNN_IN_FLIGHT: AtomicUsize = AtomicUsize::new(0);
+
+/// RAII share of the core budget for one whole-DB search.
+struct KnnFanout;
+
+impl KnnFanout {
+    fn enter() -> KnnFanout {
+        KNN_IN_FLIGHT.fetch_add(1, Ordering::Relaxed);
+        KnnFanout
+    }
+    /// Cores this search may use: total divided by searches in flight
+    /// (including this one), floored at 1 (= serial scan).
+    fn workers(&self) -> usize {
+        (default_workers() / KNN_IN_FLIGHT.load(Ordering::Relaxed).max(1)).max(1)
+    }
+}
+
+impl Drop for KnnFanout {
+    fn drop(&mut self) {
+        KNN_IN_FLIGHT.fetch_sub(1, Ordering::Relaxed);
+    }
+}
+
 /// Index-backed k-NN: exact nearest references under the banded-DTW
-/// distance via the lower-bound cascade.
+/// distance via the lower-bound cascade. Whole-database searches fan the
+/// candidate scan over the cores with a shared cutoff
+/// (`IndexedDb::knn_parallel`, result identical to the serial scan),
+/// splitting the core budget across concurrent requests; config-scoped
+/// buckets are small and stay serial.
 fn handle_knn(req: &Json, state: &ServerState) -> Result<Json> {
     let series = parse_series(req)?;
     let k = req
@@ -465,41 +565,95 @@ fn handle_knn(req: &Json, state: &ServerState) -> Result<Json> {
     let q = prepare_query(&series);
     let (neighbors, stats) = match req.get("config") {
         Some(cfg) => state.db.knn_in_config(&q, &parse_config(cfg)?.label(), k),
-        None => state.db.knn(&q, k),
+        None => {
+            let fanout = KnnFanout::enter();
+            state.db.knn_parallel(&q, k, fanout.workers())
+        }
     };
     state.metrics.record_search(&stats);
     state.metrics.inc_comparisons(stats.dtw_evals);
 
-    let entries = state.db.entries();
-    let results = neighbors
-        .iter()
-        .map(|nb| {
-            let e = &entries[nb.index];
-            Json::obj(vec![
-                ("app", Json::Str(e.app.name().to_string())),
-                ("config", Json::Str(e.config_key())),
-                ("distance", Json::Num(nb.distance)),
-                (
-                    "similarity",
-                    Json::Num(crate::dtw::corr::similarity_percent_banded(&q, &e.series)),
-                ),
-            ])
-        })
-        .collect();
+    let results = neighbors.iter().map(|nb| neighbor_json(state, &q, nb)).collect();
     Ok(Json::obj(vec![
         ("ok", Json::Bool(true)),
         ("neighbors", Json::arr(results)),
-        (
-            "stats",
+        ("stats", stats_json(&stats)),
+    ]))
+}
+
+/// Largest accepted `knn_batch` request — bounds per-request work the
+/// same way `k` is clamped.
+const MAX_KNN_BATCH: usize = 256;
+
+/// Batched k-NN: many queries answered in one entry-major pass that
+/// shares envelope work across same-length queries. Response carries one
+/// result row per query (input order) plus the merged pruning counters;
+/// the batch size and wall-clock land in the metrics registry.
+fn handle_knn_batch(req: &Json, state: &ServerState) -> Result<Json> {
+    let queries_json = req
+        .get("queries")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| anyhow!("missing queries"))?;
+    if queries_json.is_empty() {
+        return Err(anyhow!("empty queries"));
+    }
+    if queries_json.len() > MAX_KNN_BATCH {
+        return Err(anyhow!(
+            "batch too large ({} queries, max {MAX_KNN_BATCH})",
+            queries_json.len()
+        ));
+    }
+    let k = req
+        .get("k")
+        .and_then(Json::as_usize)
+        .unwrap_or(1)
+        .clamp(1, 100);
+    let mut prepared: Vec<Vec<f64>> = Vec::with_capacity(queries_json.len());
+    for (qi, qj) in queries_json.iter().enumerate() {
+        let series: Vec<f64> = qj
+            .as_arr()
+            .ok_or_else(|| anyhow!("query {qi}: not an array"))?
+            .iter()
+            .filter_map(Json::as_f64)
+            .collect();
+        if series.len() < 4 {
+            return Err(anyhow!("query {qi}: series too short"));
+        }
+        prepared.push(prepare_query(&series));
+    }
+    let qrefs: Vec<&[f64]> = prepared.iter().map(Vec::as_slice).collect();
+    let t0 = std::time::Instant::now();
+    let results = match req.get("config") {
+        Some(cfg) => state
+            .db
+            .knn_batch_in_config(&qrefs, &parse_config(cfg)?.label(), k),
+        None => state.db.knn_batch(&qrefs, k),
+    };
+    state
+        .metrics
+        .record_knn_batch(qrefs.len() as u64, t0.elapsed().as_secs_f64());
+
+    let mut merged = SearchStats::default();
+    let rows = results
+        .iter()
+        .zip(&prepared)
+        .map(|((neighbors, stats), q)| {
+            merged.merge(stats);
             Json::obj(vec![
-                ("candidates", Json::Num(stats.candidates as f64)),
-                ("pruned_lb_kim", Json::Num(stats.pruned_lb_kim as f64)),
-                ("pruned_lb_paa", Json::Num(stats.pruned_lb_paa as f64)),
-                ("pruned_lb_keogh", Json::Num(stats.pruned_lb_keogh as f64)),
-                ("abandoned", Json::Num(stats.abandoned as f64)),
-                ("dtw_evals", Json::Num(stats.dtw_evals as f64)),
-            ]),
-        ),
+                (
+                    "neighbors",
+                    Json::arr(neighbors.iter().map(|nb| neighbor_json(state, q, nb)).collect()),
+                ),
+                ("stats", stats_json(stats)),
+            ])
+        })
+        .collect();
+    state.metrics.record_search(&merged);
+    state.metrics.inc_comparisons(merged.dtw_evals);
+    Ok(Json::obj(vec![
+        ("ok", Json::Bool(true)),
+        ("results", Json::arr(rows)),
+        ("stats", stats_json(&merged)),
     ]))
 }
 
@@ -657,6 +811,77 @@ mod tests {
         let resp = handle_request(&scoped.to_string(), &state).unwrap();
         let neighbors = resp.get("neighbors").and_then(Json::as_arr).unwrap();
         assert_eq!(neighbors.len(), 2, "both entries share the config set");
+    }
+
+    #[test]
+    fn knn_batch_request_answers_every_query() {
+        let state = state_with_db();
+        let q1 = raw_wave(0.2); // wordcount-shaped
+        let q2 = raw_wave(0.55); // terasort-shaped
+        let req = Json::obj(vec![
+            ("cmd", Json::Str("knn_batch".into())),
+            ("queries", Json::arr(vec![Json::nums(&q1), Json::nums(&q2)])),
+            ("k", Json::Num(1.0)),
+        ]);
+        let resp = handle_request(&req.to_string(), &state).unwrap();
+        assert_eq!(resp.get("ok"), Some(&Json::Bool(true)));
+        let results = resp.get("results").and_then(Json::as_arr).unwrap();
+        assert_eq!(results.len(), 2);
+        let top_app = |i: usize| {
+            results[i]
+                .get("neighbors")
+                .and_then(Json::as_arr)
+                .unwrap()[0]
+                .get("app")
+                .and_then(Json::as_str)
+                .unwrap()
+                .to_string()
+        };
+        assert_eq!(top_app(0), "wordcount");
+        assert_eq!(top_app(1), "terasort");
+        // Merged counters: 2 queries x 2 candidates.
+        let stats = resp.get("stats").unwrap();
+        assert_eq!(stats.get("candidates").and_then(Json::as_f64), Some(4.0));
+        let (batches, queries, _) = state.metrics.knn_batch_summary();
+        assert_eq!((batches, queries), (1, 2));
+        assert_eq!(state.metrics.search_stats().candidates, 4);
+
+        // Malformed batches error cleanly.
+        assert!(handle_request(r#"{"cmd":"knn_batch"}"#, &state).is_err());
+        assert!(handle_request(r#"{"cmd":"knn_batch","queries":[]}"#, &state).is_err());
+        assert!(
+            handle_request(r#"{"cmd":"knn_batch","queries":[[1,2]]}"#, &state).is_err(),
+            "short series accepted"
+        );
+    }
+
+    #[test]
+    fn stream_poll_all_snapshots_sessions() {
+        let state = state_with_db();
+        for _ in 0..2 {
+            let open = Json::obj(vec![
+                ("cmd", Json::Str("stream_open".into())),
+                ("config", config_json()),
+                ("final_len", Json::Num(64.0)),
+            ]);
+            handle_request(&open.to_string(), &state).unwrap();
+        }
+        // Feed only the first session.
+        let feed = Json::obj(vec![
+            ("cmd", Json::Str("stream_feed".into())),
+            ("session", Json::Num(1.0)),
+            ("samples", Json::nums(&raw_wave(0.2)[..16])),
+        ]);
+        handle_request(&feed.to_string(), &state).unwrap();
+        let resp =
+            handle_request(r#"{"cmd":"stream_poll_all","k":2}"#, &state).unwrap();
+        assert_eq!(resp.get("ok"), Some(&Json::Bool(true)));
+        let sessions = resp.get("sessions").and_then(Json::as_arr).unwrap();
+        assert_eq!(sessions.len(), 2);
+        assert_eq!(sessions[0].get("session").and_then(Json::as_f64), Some(1.0));
+        assert_eq!(sessions[0].get("observed").and_then(Json::as_f64), Some(16.0));
+        assert_eq!(sessions[1].get("observed").and_then(Json::as_f64), Some(0.0));
+        assert!(sessions[0].get("top").and_then(Json::as_arr).is_some());
     }
 
     #[test]

@@ -4,13 +4,24 @@
 //! unequal lengths), cutting work from O(N·M) to O(r·max(N,M)). Exact when
 //! the optimal path stays inside the band — which holds for the CPU series
 //! here, whose misalignment is bounded by a few map-wave lengths.
+//!
+//! Both kernels exist in a seed-signature form (buffers from the
+//! thread-local arena) and a `*_with` form taking an explicit
+//! [`DtwScratch`]; the latter is what the query engine threads through so
+//! a candidate scan performs no per-call heap allocations.
 
 use super::full::{backtrack, DtwResult};
+use super::scratch::{with_thread_scratch, DtwScratch};
 use super::{band_edges, band_slope, local_cost, CHOICE_DIAG, CHOICE_LEFT, CHOICE_UP};
 
 /// Banded DTW with Sakoe–Chiba radius `r` (in samples, on the `y` axis after
 /// slope correction). `r >= max(n,m)` degenerates to full DTW.
 pub fn dtw_banded(x: &[f64], y: &[f64], r: usize) -> DtwResult {
+    with_thread_scratch(|scratch| dtw_banded_with(scratch, x, y, r))
+}
+
+/// [`dtw_banded`] with caller-provided scratch buffers (bit-identical).
+pub fn dtw_banded_with(scratch: &mut DtwScratch, x: &[f64], y: &[f64], r: usize) -> DtwResult {
     let (n, m) = (x.len(), y.len());
     assert!(n > 0 && m > 0, "dtw_banded: empty series");
     let slope = band_slope(n, m);
@@ -18,11 +29,12 @@ pub fn dtw_banded(x: &[f64], y: &[f64], r: usize) -> DtwResult {
 
     // Row j-ranges; forced to overlap between consecutive rows and to
     // include the corners so a connected path always exists.
-    let bounds: Vec<(usize, usize)> = (0..n).map(|i| band_edges(i, slope, r, m)).collect();
+    let mut bounds = scratch.range_buf();
+    bounds.extend((0..n).map(|i| band_edges(i, slope, r, m)));
 
-    let mut choices = vec![CHOICE_DIAG; n * m];
-    let mut prev = vec![inf; m];
-    let mut cur = vec![inf; m];
+    let mut choices = scratch.choice_buf(n * m, CHOICE_DIAG);
+    let mut prev = scratch.row(m, inf);
+    let mut cur = scratch.row(m, inf);
 
     let (lo0, hi0) = bounds[0];
     debug_assert_eq!(lo0, 0);
@@ -60,6 +72,10 @@ pub fn dtw_banded(x: &[f64], y: &[f64], r: usize) -> DtwResult {
         "band too narrow to connect corners (r={r}, n={n}, m={m})"
     );
     let path = backtrack(&choices, n, m);
+    scratch.put_row(prev);
+    scratch.put_row(cur);
+    scratch.put_choice_buf(choices);
+    scratch.put_range_buf(bounds);
     DtwResult {
         distance,
         normalized: distance / (n + m) as f64,
@@ -75,12 +91,41 @@ pub fn dtw_banded(x: &[f64], y: &[f64], r: usize) -> DtwResult {
 /// order, hence bit-identical — which is what lets the similarity index
 /// (`crate::index`) guarantee brute-force-identical k-NN results.
 pub fn dtw_banded_distance_cutoff(x: &[f64], y: &[f64], r: usize, cutoff: f64) -> Option<f64> {
+    with_thread_scratch(|scratch| dtw_banded_distance_cutoff_with(scratch, x, y, r, cutoff))
+}
+
+/// [`dtw_banded_distance_cutoff`] with caller-provided scratch buffers:
+/// the query engine's steady-state **zero-allocation** kernel.
+pub fn dtw_banded_distance_cutoff_with(
+    scratch: &mut DtwScratch,
+    x: &[f64],
+    y: &[f64],
+    r: usize,
+    cutoff: f64,
+) -> Option<f64> {
     let (n, m) = (x.len(), y.len());
     assert!(n > 0 && m > 0, "dtw_banded_distance_cutoff: empty series");
+    let mut prev = scratch.row(m, f64::INFINITY);
+    let mut cur = scratch.row(m, f64::INFINITY);
+    let out = cutoff_dp(x, y, r, cutoff, &mut prev, &mut cur);
+    scratch.put_row(prev);
+    scratch.put_row(cur);
+    out
+}
+
+/// The early-abandoning DP over caller-provided rows (both pre-filled with
+/// `+inf`). Split out so every early `return None` still recycles the rows.
+fn cutoff_dp(
+    x: &[f64],
+    y: &[f64],
+    r: usize,
+    cutoff: f64,
+    prev: &mut Vec<f64>,
+    cur: &mut Vec<f64>,
+) -> Option<f64> {
+    let (n, m) = (x.len(), y.len());
     let slope = band_slope(n, m);
     let inf = f64::INFINITY;
-    let mut prev = vec![inf; m];
-    let mut cur = vec![inf; m];
 
     let (lo0, hi0) = band_edges(0, slope, r, m);
     debug_assert_eq!(lo0, 0);
@@ -93,7 +138,7 @@ pub fn dtw_banded_distance_cutoff(x: &[f64], y: &[f64], r: usize, cutoff: f64) -
     if row_min > cutoff {
         return None;
     }
-    std::mem::swap(&mut prev, &mut cur);
+    std::mem::swap(prev, cur);
 
     for i in 1..n {
         let (lo, hi) = band_edges(i, slope, r, m);
@@ -113,7 +158,7 @@ pub fn dtw_banded_distance_cutoff(x: &[f64], y: &[f64], r: usize, cutoff: f64) -
         if row_min > cutoff {
             return None;
         }
-        std::mem::swap(&mut prev, &mut cur);
+        std::mem::swap(prev, cur);
     }
     Some(prev[m - 1])
 }
@@ -215,5 +260,26 @@ mod tests {
         );
         // Self comparison never abandons for any nonnegative cutoff.
         assert_eq!(dtw_banded_distance_cutoff(&x, &x, r, 0.0), Some(0.0));
+    }
+
+    #[test]
+    fn reused_scratch_matches_fresh_scratch() {
+        let mut g = Pcg32::new(13, 4);
+        let mut warm = DtwScratch::new();
+        for _ in 0..20 {
+            let lx = 2 + g.below(60) as usize;
+            let x = rand_series(&mut g, lx);
+            let ly = 2 + g.below(60) as usize;
+            let y = rand_series(&mut g, ly);
+            let r = crate::dtw::band_radius(x.len(), y.len());
+            let a = dtw_banded_with(&mut warm, &x, &y, r);
+            let b = dtw_banded_with(&mut DtwScratch::new(), &x, &y, r);
+            assert_eq!(a.distance.to_bits(), b.distance.to_bits());
+            assert_eq!(a.path, b.path);
+            let ca = dtw_banded_distance_cutoff_with(&mut warm, &x, &y, r, a.distance * 0.8);
+            let cb =
+                dtw_banded_distance_cutoff_with(&mut DtwScratch::new(), &x, &y, r, a.distance * 0.8);
+            assert_eq!(ca.map(f64::to_bits), cb.map(f64::to_bits));
+        }
     }
 }

@@ -4,26 +4,45 @@
 //! Multiresolution scheme: coarsen both series by 2, solve recursively,
 //! project the coarse path onto the finer grid, and re-solve inside a
 //! window of the projection expanded by `radius`.
+//!
+//! All temporaries — the O(log n) coarsened copies, the per-level window,
+//! and the windowed DP's rows/choices — come from a [`DtwScratch`] pool,
+//! so repeated calls stop allocating once the pool has grown to the
+//! deepest recursion seen.
 
-use super::full::{dtw, DtwResult};
+use super::full::{dtw_with, DtwResult};
+use super::scratch::{with_thread_scratch, DtwScratch};
 use super::{local_cost, CHOICE_DIAG, CHOICE_LEFT, CHOICE_UP};
 
 /// FastDTW with the given radius. Larger radius → closer to exact, slower.
 pub fn fastdtw(x: &[f64], y: &[f64], radius: usize) -> DtwResult {
-    let min_size = radius + 2;
-    if x.len() <= min_size || y.len() <= min_size {
-        return dtw(x, y);
-    }
-    let xs = coarsen(x);
-    let ys = coarsen(y);
-    let coarse = fastdtw(&xs, &ys, radius);
-    let window = expand_window(&coarse.path, x.len(), y.len(), radius);
-    windowed_dtw(x, y, &window)
+    with_thread_scratch(|scratch| fastdtw_with(scratch, x, y, radius))
 }
 
-/// Halve resolution by averaging adjacent pairs (odd tail carried over).
-fn coarsen(xs: &[f64]) -> Vec<f64> {
-    let mut out = Vec::with_capacity(xs.len().div_ceil(2));
+/// [`fastdtw`] with caller-provided scratch buffers (bit-identical).
+pub fn fastdtw_with(scratch: &mut DtwScratch, x: &[f64], y: &[f64], radius: usize) -> DtwResult {
+    let min_size = radius + 2;
+    if x.len() <= min_size || y.len() <= min_size {
+        return dtw_with(scratch, x, y);
+    }
+    let mut xs = scratch.raw_row();
+    coarsen_into(x, &mut xs);
+    let mut ys = scratch.raw_row();
+    coarsen_into(y, &mut ys);
+    let coarse = fastdtw_with(scratch, &xs, &ys, radius);
+    scratch.put_row(xs);
+    scratch.put_row(ys);
+    let mut window = scratch.range_buf();
+    expand_window_into(&coarse.path, x.len(), y.len(), radius, &mut window);
+    let out = windowed_dtw_with(scratch, x, y, &window);
+    scratch.put_range_buf(window);
+    out
+}
+
+/// Halve resolution by averaging adjacent pairs (odd tail carried over),
+/// writing into a reusable buffer.
+fn coarsen_into(xs: &[f64], out: &mut Vec<f64>) {
+    out.clear();
     let mut i = 0;
     while i + 1 < xs.len() {
         out.push(0.5 * (xs[i] + xs[i + 1]));
@@ -32,38 +51,41 @@ fn coarsen(xs: &[f64]) -> Vec<f64> {
     if i < xs.len() {
         out.push(xs[i]);
     }
-    out
 }
 
 /// Project a coarse path to the finer grid and expand by `radius`;
-/// returns per-row inclusive `(lo, hi)` j-ranges, made monotone/connected.
-fn expand_window(
+/// fills `window` with per-row inclusive `(lo, hi)` j-ranges, made
+/// monotone/connected.
+fn expand_window_into(
     coarse_path: &[(usize, usize)],
     n: usize,
     m: usize,
     radius: usize,
-) -> Vec<(usize, usize)> {
-    let mut lo = vec![usize::MAX; n];
-    let mut hi = vec![0usize; n];
-    let mut mark = |i: usize, j: usize| {
-        if i < n {
-            let jlo = j.saturating_sub(radius);
-            let jhi = (j + radius).min(m - 1);
-            lo[i] = lo[i].min(jlo);
-            hi[i] = hi[i].max(jhi);
-        }
-    };
-    for &(ci, cj) in coarse_path {
-        // Each coarse cell covers a 2×2 block of fine cells.
-        for di in 0..2 {
-            for dj in 0..2 {
-                let i = 2 * ci + di;
-                let j = (2 * cj + dj).min(m - 1);
-                // Expand by radius in i as well by marking neighbours.
-                let ilo = i.saturating_sub(radius);
-                let ihi = (i + radius).min(n - 1);
-                for ii in ilo..=ihi {
-                    mark(ii, j);
+    window: &mut Vec<(usize, usize)>,
+) {
+    window.clear();
+    window.resize(n, (usize::MAX, 0));
+    {
+        let mut mark = |i: usize, j: usize| {
+            if i < n {
+                let jlo = j.saturating_sub(radius);
+                let jhi = (j + radius).min(m - 1);
+                window[i].0 = window[i].0.min(jlo);
+                window[i].1 = window[i].1.max(jhi);
+            }
+        };
+        for &(ci, cj) in coarse_path {
+            // Each coarse cell covers a 2×2 block of fine cells.
+            for di in 0..2 {
+                for dj in 0..2 {
+                    let i = 2 * ci + di;
+                    let j = (2 * cj + dj).min(m - 1);
+                    // Expand by radius in i as well by marking neighbours.
+                    let ilo = i.saturating_sub(radius);
+                    let ihi = (i + radius).min(n - 1);
+                    for ii in ilo..=ihi {
+                        mark(ii, j);
+                    }
                 }
             }
         }
@@ -72,31 +94,34 @@ fn expand_window(
     // enforce per-row connectivity with the previous row.
     let mut prev_hi = 0usize;
     for i in 0..n {
-        if lo[i] == usize::MAX {
-            lo[i] = prev_hi;
-            hi[i] = prev_hi;
+        if window[i].0 == usize::MAX {
+            window[i] = (prev_hi, prev_hi);
         }
         // A legal step needs overlap or adjacency with the previous row.
-        if lo[i] > prev_hi {
-            lo[i] = prev_hi;
+        if window[i].0 > prev_hi {
+            window[i].0 = prev_hi;
         }
-        if hi[i] < lo[i] {
-            hi[i] = lo[i];
+        if window[i].1 < window[i].0 {
+            window[i].1 = window[i].0;
         }
-        prev_hi = hi[i];
+        prev_hi = window[i].1;
     }
-    lo[0] = 0;
-    hi[n - 1] = m - 1;
-    lo.into_iter().zip(hi).collect()
+    window[0].0 = 0;
+    window[n - 1].1 = m - 1;
 }
 
 /// DTW restricted to per-row `(lo, hi)` windows.
-fn windowed_dtw(x: &[f64], y: &[f64], window: &[(usize, usize)]) -> DtwResult {
+fn windowed_dtw_with(
+    scratch: &mut DtwScratch,
+    x: &[f64],
+    y: &[f64],
+    window: &[(usize, usize)],
+) -> DtwResult {
     let (n, m) = (x.len(), y.len());
     let inf = f64::INFINITY;
-    let mut choices = vec![CHOICE_DIAG; n * m];
-    let mut prev = vec![inf; m];
-    let mut cur = vec![inf; m];
+    let mut choices = scratch.choice_buf(n * m, CHOICE_DIAG);
+    let mut prev = scratch.row(m, inf);
+    let mut cur = scratch.row(m, inf);
 
     let (lo0, hi0) = window[0];
     cur[lo0] = local_cost(x[0], y[lo0]);
@@ -130,6 +155,9 @@ fn windowed_dtw(x: &[f64], y: &[f64], window: &[(usize, usize)]) -> DtwResult {
     let distance = prev[m - 1];
     assert!(distance.is_finite(), "window disconnected");
     let path = super::full::backtrack(&choices, n, m);
+    scratch.put_row(prev);
+    scratch.put_row(cur);
+    scratch.put_choice_buf(choices);
     DtwResult {
         distance,
         normalized: distance / (n + m) as f64,
@@ -220,7 +248,24 @@ mod tests {
 
     #[test]
     fn coarsen_halves_and_averages() {
-        assert_eq!(coarsen(&[1.0, 3.0, 5.0, 7.0]), vec![2.0, 6.0]);
-        assert_eq!(coarsen(&[1.0, 3.0, 9.0]), vec![2.0, 9.0]);
+        let mut out = Vec::new();
+        coarsen_into(&[1.0, 3.0, 5.0, 7.0], &mut out);
+        assert_eq!(out, vec![2.0, 6.0]);
+        coarsen_into(&[1.0, 3.0, 9.0], &mut out);
+        assert_eq!(out, vec![2.0, 9.0]);
+    }
+
+    #[test]
+    fn pooled_scratch_matches_fresh_scratch() {
+        let mut g = Pcg32::new(24, 5);
+        let mut warm = DtwScratch::new();
+        for _ in 0..5 {
+            let x = rand_walk(&mut g, 150 + g.below(150) as usize);
+            let y = rand_walk(&mut g, 150 + g.below(150) as usize);
+            let a = fastdtw_with(&mut warm, &x, &y, 6);
+            let b = fastdtw_with(&mut DtwScratch::new(), &x, &y, 6);
+            assert_eq!(a.distance.to_bits(), b.distance.to_bits());
+            assert_eq!(a.path, b.path);
+        }
     }
 }

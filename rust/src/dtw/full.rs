@@ -1,5 +1,6 @@
 //! Exact O(N·M) DTW with traceback and warped-series construction.
 
+use super::scratch::{with_thread_scratch, DtwScratch};
 use super::{local_cost, CHOICE_DIAG, CHOICE_LEFT, CHOICE_UP};
 
 /// Result of a DTW alignment.
@@ -32,11 +33,16 @@ impl DtwResult {
 /// `min(D[i-1,j], D[i-1,j-1])` wins over `D[i,j-1]` (left) on ties, and the
 /// diagonal wins over up on ties within the group.
 pub fn dtw(x: &[f64], y: &[f64]) -> DtwResult {
+    with_thread_scratch(|scratch| dtw_with(scratch, x, y))
+}
+
+/// [`dtw`] with caller-provided scratch buffers (bit-identical).
+pub fn dtw_with(scratch: &mut DtwScratch, x: &[f64], y: &[f64]) -> DtwResult {
     let (n, m) = (x.len(), y.len());
     assert!(n > 0 && m > 0, "dtw: empty series");
-    let mut choices = vec![0u8; n * m];
-    let mut prev = vec![0.0f64; m];
-    let mut cur = vec![0.0f64; m];
+    let mut choices = scratch.choice_buf(n * m, 0u8);
+    let mut prev = scratch.row(m, 0.0);
+    let mut cur = scratch.row(m, 0.0);
 
     // Row 0.
     cur[0] = local_cost(x[0], y[0]);
@@ -73,6 +79,9 @@ pub fn dtw(x: &[f64], y: &[f64]) -> DtwResult {
 
     let distance = prev[m - 1];
     let path = backtrack(&choices, n, m);
+    scratch.put_row(prev);
+    scratch.put_row(cur);
+    scratch.put_choice_buf(choices);
     DtwResult {
         distance,
         normalized: distance / (n + m) as f64,
@@ -117,10 +126,15 @@ pub fn backtrack(choices: &[u8], n: usize, m: usize) -> Vec<(usize, usize)> {
 /// Distance-only DTW (two rolling rows, no choices) — used by FastDTW's
 /// accuracy tests and anywhere the path is not needed.
 pub fn dtw_distance(x: &[f64], y: &[f64]) -> f64 {
+    with_thread_scratch(|scratch| dtw_distance_with(scratch, x, y))
+}
+
+/// [`dtw_distance`] with caller-provided scratch buffers (bit-identical).
+pub fn dtw_distance_with(scratch: &mut DtwScratch, x: &[f64], y: &[f64]) -> f64 {
     let (n, m) = (x.len(), y.len());
     assert!(n > 0 && m > 0);
-    let mut prev = vec![0.0f64; m];
-    let mut cur = vec![0.0f64; m];
+    let mut prev = scratch.row(m, 0.0);
+    let mut cur = scratch.row(m, 0.0);
     cur[0] = local_cost(x[0], y[0]);
     for j in 1..m {
         cur[j] = cur[j - 1] + local_cost(x[0], y[j]);
@@ -134,7 +148,10 @@ pub fn dtw_distance(x: &[f64], y: &[f64]) -> f64 {
         }
         std::mem::swap(&mut prev, &mut cur);
     }
-    prev[m - 1]
+    let distance = prev[m - 1];
+    scratch.put_row(prev);
+    scratch.put_row(cur);
+    distance
 }
 
 #[cfg(test)]

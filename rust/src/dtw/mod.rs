@@ -12,11 +12,20 @@
 //! `0` = diagonal `(i-1,j-1)`, `1` = up `(i-1,j)`, `2` = left `(i,j-1)`;
 //! ties resolve vertical-group-first, diagonal-within-group (see
 //! [`full::dtw`]). `rust/tests/parity.rs` pins the two implementations.
+//!
+//! Every dynamic program here comes in two flavours: the seed signature
+//! (allocation behaviour hidden behind a thread-local arena) and a
+//! `*_with` variant taking an explicit [`scratch::DtwScratch`] so hot
+//! loops — the k-NN engine, stream sessions — reuse DP buffers across
+//! calls with zero steady-state heap allocations.
 
 pub mod banded;
 pub mod corr;
 pub mod fastdtw;
 pub mod full;
+pub mod scratch;
+
+pub use scratch::DtwScratch;
 
 /// Traceback choice: predecessor of a DP cell.
 pub const CHOICE_DIAG: u8 = 0;

@@ -1,0 +1,168 @@
+//! Scratch arena for the DTW execution layer: grown-once, reused-forever
+//! buffers behind every dynamic program in the crate.
+//!
+//! The seed kernels heap-allocated their DP rows (and, for the
+//! path-producing variants, the traceback matrix and band bounds) on every
+//! call. At query-engine rates — thousands of candidate comparisons per
+//! k-NN search, one bound/DP refresh per live stream batch — those
+//! allocations dominate the constant factor. A [`DtwScratch`] owns pools
+//! of the buffer shapes the kernels need; a kernel *takes* buffers out,
+//! runs, and *puts* them back, so the steady state performs **zero heap
+//! allocations** for the distance-only kernels (pinned by
+//! `benches/dtw_kernel_perf.rs`).
+//!
+//! Two ways to use it:
+//!
+//! * Explicit: hold a `DtwScratch` and call the `*_with` kernel variants
+//!   ([`crate::dtw::banded::dtw_banded_with`],
+//!   [`crate::dtw::banded::dtw_banded_distance_cutoff_with`],
+//!   [`crate::dtw::full::dtw_with`], [`crate::dtw::fastdtw::fastdtw_with`],
+//!   [`crate::streaming::anytime::prefix_dtw_with`]). This is what the
+//!   k-NN engine and stream sessions do.
+//! * Implicit: the seed-signature wrappers (`dtw_banded`, `fastdtw`, …)
+//!   route through a thread-local arena via [`with_thread_scratch`], so
+//!   legacy callers get the reuse for free.
+//!
+//! Buffer reuse never changes results: a taken buffer is cleared/refilled
+//! to exactly the values a fresh allocation would hold, so every `*_with`
+//! kernel is bit-identical to its seed counterpart (pinned by
+//! `rust/tests/query_engine.rs`).
+
+use std::cell::RefCell;
+
+/// Pooled buffers for the DTW dynamic programs. Cheap to create (empty
+/// pools); grows to the working-set high-water mark and stays there.
+#[derive(Debug, Default, Clone)]
+pub struct DtwScratch {
+    /// f64 buffers: DP rows, FastDTW coarsened series.
+    rows: Vec<Vec<f64>>,
+    /// Traceback matrices (`n * m` choice bytes).
+    choices: Vec<Vec<u8>>,
+    /// `(lo, hi)` index ranges: band bounds, FastDTW windows.
+    ranges: Vec<Vec<(usize, usize)>>,
+    /// `(min, max)` value pairs: query block extrema, batched Keogh rows.
+    extrema: Vec<Vec<(f64, f64)>>,
+}
+
+impl DtwScratch {
+    pub fn new() -> DtwScratch {
+        DtwScratch::default()
+    }
+
+    /// Take an f64 buffer of exactly `len` elements, each set to `fill` —
+    /// value-identical to a fresh `vec![fill; len]`.
+    pub(crate) fn row(&mut self, len: usize, fill: f64) -> Vec<f64> {
+        let mut b = self.rows.pop().unwrap_or_default();
+        b.clear();
+        b.resize(len, fill);
+        b
+    }
+
+    /// Take an empty f64 buffer (capacity retained from earlier use).
+    pub(crate) fn raw_row(&mut self) -> Vec<f64> {
+        let mut b = self.rows.pop().unwrap_or_default();
+        b.clear();
+        b
+    }
+
+    /// Return an f64 buffer to the pool.
+    pub(crate) fn put_row(&mut self, b: Vec<f64>) {
+        self.rows.push(b);
+    }
+
+    /// Take a choice matrix of exactly `len` bytes, each set to `fill`.
+    pub(crate) fn choice_buf(&mut self, len: usize, fill: u8) -> Vec<u8> {
+        let mut b = self.choices.pop().unwrap_or_default();
+        b.clear();
+        b.resize(len, fill);
+        b
+    }
+
+    /// Return a choice matrix to the pool.
+    pub(crate) fn put_choice_buf(&mut self, b: Vec<u8>) {
+        self.choices.push(b);
+    }
+
+    /// Take an empty `(lo, hi)` range buffer.
+    pub(crate) fn range_buf(&mut self) -> Vec<(usize, usize)> {
+        let mut b = self.ranges.pop().unwrap_or_default();
+        b.clear();
+        b
+    }
+
+    /// Return a range buffer to the pool.
+    pub(crate) fn put_range_buf(&mut self, b: Vec<(usize, usize)>) {
+        self.ranges.push(b);
+    }
+
+    /// Take an empty `(min, max)` extrema buffer.
+    pub(crate) fn extrema_buf(&mut self) -> Vec<(f64, f64)> {
+        let mut b = self.extrema.pop().unwrap_or_default();
+        b.clear();
+        b
+    }
+
+    /// Return an extrema buffer to the pool.
+    pub(crate) fn put_extrema_buf(&mut self, b: Vec<(f64, f64)>) {
+        self.extrema.push(b);
+    }
+}
+
+thread_local! {
+    static THREAD_SCRATCH: RefCell<DtwScratch> = RefCell::new(DtwScratch::new());
+}
+
+/// Run `f` against this thread's shared scratch arena — the reuse path
+/// behind the seed-signature kernel wrappers. Re-entrant calls (a wrapper
+/// invoked while the thread scratch is already borrowed) fall back to a
+/// fresh arena instead of panicking; results are identical either way.
+pub fn with_thread_scratch<T>(f: impl FnOnce(&mut DtwScratch) -> T) -> T {
+    THREAD_SCRATCH.with(|s| match s.try_borrow_mut() {
+        Ok(mut scratch) => f(&mut scratch),
+        Err(_) => f(&mut DtwScratch::new()),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn buffers_are_reused_and_refilled() {
+        let mut s = DtwScratch::new();
+        let mut a = s.row(8, f64::INFINITY);
+        assert_eq!(a.len(), 8);
+        assert!(a.iter().all(|v| v.is_infinite()));
+        a[3] = 1.5;
+        let cap = a.capacity();
+        s.put_row(a);
+        // Same storage comes back, fully re-initialized.
+        let b = s.row(4, 0.0);
+        assert_eq!(b.len(), 4);
+        assert!(b.iter().all(|&v| v == 0.0));
+        assert_eq!(b.capacity(), cap);
+        s.put_row(b);
+
+        let c = s.choice_buf(10, 7);
+        assert!(c.iter().all(|&v| v == 7));
+        s.put_choice_buf(c);
+        let mut r = s.range_buf();
+        assert!(r.is_empty());
+        r.push((1, 2));
+        s.put_range_buf(r);
+        assert!(s.range_buf().is_empty());
+    }
+
+    #[test]
+    fn thread_scratch_is_reentrant_safe() {
+        let out = with_thread_scratch(|outer| {
+            let row = outer.row(4, 1.0);
+            // Nested borrow must not panic: it gets a fresh arena.
+            let inner = with_thread_scratch(|s| s.row(2, 2.0)[0]);
+            let v = row[0] + inner;
+            outer.put_row(row);
+            v
+        });
+        assert_eq!(out, 3.0);
+    }
+}

@@ -9,7 +9,7 @@
 //! rebuilds otherwise — the cache is derived data, never authoritative.
 
 use super::envelope::Envelope;
-use super::knn::{brute_force_knn, knn, Neighbor};
+use super::knn::{brute_force_knn, knn, knn_batch, knn_parallel, Neighbor};
 use super::{SearchStats, DEFAULT_BLOCK};
 use crate::database::profile::ProfileEntry;
 use crate::database::store::{OptimalConfig, ReferenceDb};
@@ -159,6 +159,56 @@ impl IndexedDb {
                 .map(|&i| (i, entries[i].series.as_slice(), &self.envelopes[i])),
             k,
         )
+    }
+
+    /// All entries as `(position, series, envelope)` candidate triples.
+    fn all_candidates(&self) -> Vec<(usize, &[f64], &Envelope)> {
+        let entries = self.db.entries();
+        (0..entries.len())
+            .map(|i| (i, entries[i].series.as_slice(), &self.envelopes[i]))
+            .collect()
+    }
+
+    /// One config bucket as candidate triples.
+    fn config_candidates(&self, label: &str) -> Vec<(usize, &[f64], &Envelope)> {
+        let entries = self.db.entries();
+        self.config_positions(label)
+            .iter()
+            .map(|&i| (i, entries[i].series.as_slice(), &self.envelopes[i]))
+            .collect()
+    }
+
+    /// Exact top-`k` over the whole database, scored across `workers`
+    /// threads with a shared early-abandoning cutoff — same result as
+    /// [`IndexedDb::knn`], bit for bit (see
+    /// [`crate::index::knn::knn_parallel`]).
+    pub fn knn_parallel(
+        &self,
+        query: &[f64],
+        k: usize,
+        workers: usize,
+    ) -> (Vec<Neighbor>, SearchStats) {
+        knn_parallel(query, &self.all_candidates(), k, workers)
+    }
+
+    /// Exact top-`k` for a whole batch of queries in one entry-major pass
+    /// over the database: same-length queries share one envelope pass per
+    /// reference entry. Each query's result (neighbours *and* counters)
+    /// is identical to [`IndexedDb::knn`] on that query alone.
+    pub fn knn_batch(&self, queries: &[&[f64]], k: usize) -> Vec<(Vec<Neighbor>, SearchStats)> {
+        knn_batch(queries, &self.all_candidates(), k)
+    }
+
+    /// [`IndexedDb::knn_batch`] restricted to one config bucket — the
+    /// batched form of [`IndexedDb::knn_in_config`], used by the matcher
+    /// to classify several unknown apps per configuration set in one pass.
+    pub fn knn_batch_in_config(
+        &self,
+        queries: &[&[f64]],
+        label: &str,
+        k: usize,
+    ) -> Vec<(Vec<Neighbor>, SearchStats)> {
+        knn_batch(queries, &self.config_candidates(label), k)
     }
 
     /// Brute-force baseline over the whole database (same contract as

@@ -1,16 +1,37 @@
 //! Exact k-nearest-neighbour search with the lower-bound cascade.
 //!
-//! [`knn`] returns the same neighbours (same indices, same distances) as
-//! [`brute_force_knn`] over the same candidates — the cascade only ever
-//! skips candidates that provably cannot enter the result. Ties on
-//! distance resolve to the lower candidate id, exactly like the linear
-//! scan, so the two are interchangeable in tests.
+//! Three execution strategies over one candidate contract:
+//!
+//! * [`knn`] — the serial scan. Same neighbours (same indices, same
+//!   distances) as [`brute_force_knn`] over the same candidates: the
+//!   cascade only ever skips candidates that provably cannot enter the
+//!   result. Ties on distance resolve to the lower candidate id, exactly
+//!   like the linear scan.
+//! * [`knn_parallel`] — candidates fanned over `crate::util::pool::par_map`
+//!   workers that **share one best-k cutoff** through an atomic `u64`
+//!   (f64-bits, CAS-min), so a tight distance found on one core abandons
+//!   hopeless DPs on every other core. The deterministic
+//!   `(distance, index)` merge makes the result equal the serial top-k
+//!   *exactly* (bit-identical distances; pinned by
+//!   `rust/tests/query_engine.rs`).
+//! * [`knn_batch`] — many queries against one candidate set, walked
+//!   entry-major: per reference entry, all same-length queries share a
+//!   single envelope pass ([`lb::keogh_rows_into`]) instead of paying one
+//!   per (query, entry). Per query the candidate order, cutoffs and
+//!   arithmetic are identical to [`knn`], so every result (and its
+//!   [`SearchStats`]) equals the per-query search exactly.
+//!
+//! All DPs run through a [`DtwScratch`] arena — zero steady-state heap
+//! allocations on the candidate scan.
 
 use super::envelope::Envelope;
-use super::lb::{lb_keogh, lb_kim, lb_paa, query_extrema};
+use super::lb::{keogh_rows_into, lb_keogh, lb_keogh_rows, lb_kim, lb_paa, query_extrema_into};
 use super::{SearchStats, DEFAULT_BLOCK};
-use crate::dtw::banded::dtw_banded_distance_cutoff;
 use crate::dtw::band_radius;
+use crate::dtw::banded::dtw_banded_distance_cutoff_with;
+use crate::dtw::scratch::{with_thread_scratch, DtwScratch};
+use crate::util::pool::par_map;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 
 /// One search result: candidate id (position in the candidate set / the
 /// database) and its exact banded-DTW distance to the query.
@@ -23,6 +44,10 @@ pub struct Neighbor {
 /// Queries shorter than this skip the PAA stage — the O(n) Keogh bound is
 /// already nearly free there.
 const PAA_MIN_LEN: usize = 64;
+
+/// Below this candidate count [`knn_parallel`] falls back to the serial
+/// scan: spinning up scoped workers costs more than the whole search.
+const PARALLEL_MIN_CANDIDATES: usize = 32;
 
 /// Absolute + relative slack added to the best-so-far cutoff so f64
 /// rounding in the (mathematically admissible) bounds can never prune a
@@ -46,10 +71,33 @@ fn push_neighbor(best: &mut Vec<Neighbor>, k: usize, nb: Neighbor) {
     }
 }
 
+/// Publish `v` into the shared cutoff if it is smaller (CAS-min on the
+/// f64 bit pattern; distances are finite and non-negative).
+fn publish_min(shared: &AtomicU64, v: f64) {
+    let mut cur = shared.load(Ordering::Relaxed);
+    while v < f64::from_bits(cur) {
+        match shared.compare_exchange_weak(cur, v.to_bits(), Ordering::Relaxed, Ordering::Relaxed)
+        {
+            Ok(_) => break,
+            Err(seen) => cur = seen,
+        }
+    }
+}
+
 /// Exact top-`k` under banded DTW via the pruning cascade
 /// (LB_Kim → LB_PAA → LB_Keogh → early-abandoning DP). Candidates are
 /// `(id, series, envelope)`; empty series are skipped.
 pub fn knn<'a>(
+    query: &[f64],
+    candidates: impl IntoIterator<Item = (usize, &'a [f64], &'a Envelope)>,
+    k: usize,
+) -> (Vec<Neighbor>, SearchStats) {
+    with_thread_scratch(|scratch| knn_with(scratch, query, candidates, k))
+}
+
+/// [`knn`] with caller-provided scratch buffers (identical results).
+pub fn knn_with<'a>(
+    scratch: &mut DtwScratch,
     query: &[f64],
     candidates: impl IntoIterator<Item = (usize, &'a [f64], &'a Envelope)>,
     k: usize,
@@ -62,11 +110,10 @@ pub fn knn<'a>(
     let n = query.len();
     // The PAA stage is skipped for short queries, so don't pay its
     // query-side summary there either.
-    let qext = if n >= PAA_MIN_LEN {
-        query_extrema(query, DEFAULT_BLOCK)
-    } else {
-        Vec::new()
-    };
+    let mut qext = scratch.extrema_buf();
+    if n >= PAA_MIN_LEN {
+        query_extrema_into(query, DEFAULT_BLOCK, &mut qext);
+    }
 
     for (index, series, env) in candidates {
         if series.is_empty() {
@@ -94,7 +141,7 @@ pub fn knn<'a>(
             stats.pruned_lb_keogh += 1;
             continue;
         }
-        match dtw_banded_distance_cutoff(query, series, r, cut) {
+        match dtw_banded_distance_cutoff_with(scratch, query, series, r, cut) {
             None => stats.abandoned += 1,
             Some(distance) => {
                 stats.dtw_evals += 1;
@@ -102,7 +149,214 @@ pub fn knn<'a>(
             }
         }
     }
+    scratch.put_extrema_buf(qext);
     (best, stats)
+}
+
+/// Exact top-`k` scored across up to `workers` threads. Each worker
+/// claims candidate ranges off a shared counter and scans them with its
+/// own scratch arena and a local top-k that **persists across claims**
+/// (so its cutoff accumulates over its whole share, exactly like the
+/// serial scan's does), while the tightest k-th-best distance any worker
+/// has proven is published through a shared atomic — early-abandoning
+/// cutoffs tighten *across* threads, not just within one scan. The
+/// published value is always the k-th smallest of `k` actually-evaluated
+/// candidate distances, hence an upper bound on the true k-th-best: no
+/// true neighbour can be pruned, and the `(distance, index)` merge
+/// returns exactly the serial [`knn`] result. [`SearchStats`] keep their
+/// partition invariant but the per-stage split depends on thread timing
+/// (a luckier cutoff prunes more).
+pub fn knn_parallel<'a>(
+    query: &[f64],
+    candidates: &[(usize, &'a [f64], &'a Envelope)],
+    k: usize,
+    workers: usize,
+) -> (Vec<Neighbor>, SearchStats) {
+    if k == 0 || query.is_empty() {
+        return (Vec::new(), SearchStats::default());
+    }
+    let workers = workers.max(1);
+    if workers == 1 || candidates.len() < PARALLEL_MIN_CANDIDATES {
+        return knn(query, candidates.iter().copied(), k);
+    }
+    let n = query.len();
+    let qext: Vec<(f64, f64)> = if n >= PAA_MIN_LEN {
+        super::lb::query_extrema(query, DEFAULT_BLOCK)
+    } else {
+        Vec::new()
+    };
+    let shared = AtomicU64::new(f64::INFINITY.to_bits());
+    let next = AtomicUsize::new(0);
+    // Small claim ranges keep the load balanced when candidate costs vary;
+    // each claim is one atomic increment.
+    let chunk = candidates.len().div_ceil(workers * 4).max(1);
+    let worker_ids: Vec<usize> = (0..workers).collect();
+
+    let parts: Vec<(Vec<Neighbor>, SearchStats)> = par_map(&worker_ids, workers, |_| {
+        with_thread_scratch(|scratch| {
+            let mut stats = SearchStats::default();
+            let mut best: Vec<Neighbor> = Vec::new();
+            loop {
+                let start = next.fetch_add(chunk, Ordering::Relaxed);
+                if start >= candidates.len() {
+                    break;
+                }
+                let end = (start + chunk).min(candidates.len());
+                for &(index, series, env) in &candidates[start..end] {
+                    if series.is_empty() {
+                        continue;
+                    }
+                    debug_assert_eq!(env.len(), series.len(), "envelope out of sync");
+                    stats.candidates += 1;
+                    let local = if best.len() == k {
+                        best[k - 1].distance
+                    } else {
+                        f64::INFINITY
+                    };
+                    let bsf = f64::from_bits(shared.load(Ordering::Relaxed)).min(local);
+                    let cut = cutoff(bsf);
+
+                    if lb_kim(query, series) > cut {
+                        stats.pruned_lb_kim += 1;
+                        continue;
+                    }
+                    let r = band_radius(n, series.len());
+                    if n >= PAA_MIN_LEN && lb_paa(&qext, n, DEFAULT_BLOCK, env, r) > cut {
+                        stats.pruned_lb_paa += 1;
+                        continue;
+                    }
+                    if lb_keogh(query, env, r) > cut {
+                        stats.pruned_lb_keogh += 1;
+                        continue;
+                    }
+                    match dtw_banded_distance_cutoff_with(scratch, query, series, r, cut) {
+                        None => stats.abandoned += 1,
+                        Some(distance) => {
+                            stats.dtw_evals += 1;
+                            push_neighbor(&mut best, k, Neighbor { index, distance });
+                            if best.len() == k {
+                                publish_min(&shared, best[k - 1].distance);
+                            }
+                        }
+                    }
+                }
+            }
+            (best, stats)
+        })
+    });
+
+    let mut stats = SearchStats::default();
+    let mut all: Vec<Neighbor> = Vec::new();
+    for (part, s) in parts {
+        all.extend(part);
+        stats.merge(&s);
+    }
+    // Deterministic merge: the same (distance, index) order push_neighbor
+    // maintains, over the union of the per-worker survivors.
+    all.sort_by(|a, b| {
+        (a.distance, a.index)
+            .partial_cmp(&(b.distance, b.index))
+            .unwrap_or(std::cmp::Ordering::Equal)
+    });
+    all.truncate(k);
+    (all, stats)
+}
+
+/// Exact top-`k` for every query of a batch in one entry-major pass over
+/// the candidates. Queries are ordered by length so all same-length
+/// queries reuse a single precomputed envelope pass per reference entry
+/// ([`lb::keogh_rows_into`]); per query, candidates are still seen in slice
+/// order with the query's own best-so-far cutoff, so each result and its
+/// counters are exactly what [`knn`] returns for that query alone.
+/// Results come back in input order (empty queries yield empty results).
+pub fn knn_batch<'a>(
+    queries: &[&[f64]],
+    candidates: &[(usize, &'a [f64], &'a Envelope)],
+    k: usize,
+) -> Vec<(Vec<Neighbor>, SearchStats)> {
+    let mut out: Vec<(Vec<Neighbor>, SearchStats)> = queries
+        .iter()
+        .map(|_| (Vec::new(), SearchStats::default()))
+        .collect();
+    if k == 0 || queries.is_empty() {
+        return out;
+    }
+    // Length-sorted walk order (stable within a length by input position).
+    let mut order: Vec<usize> = (0..queries.len()).filter(|&i| !queries[i].is_empty()).collect();
+    order.sort_by_key(|&i| (queries[i].len(), i));
+    // Per-query PAA summaries, computed once for the whole batch.
+    let qexts: Vec<Vec<(f64, f64)>> = queries
+        .iter()
+        .map(|q| {
+            if q.len() >= PAA_MIN_LEN {
+                super::lb::query_extrema(q, DEFAULT_BLOCK)
+            } else {
+                Vec::new()
+            }
+        })
+        .collect();
+
+    with_thread_scratch(|scratch| {
+        let mut rows = scratch.extrema_buf();
+        for &(index, series, env) in candidates {
+            if series.is_empty() {
+                continue;
+            }
+            debug_assert_eq!(env.len(), series.len(), "envelope out of sync");
+            let mut gi = 0;
+            while gi < order.len() {
+                // One run of same-length queries shares this entry's
+                // envelope pass; the pass itself is computed lazily, only
+                // if some query in the run reaches the Keogh stage.
+                let len = queries[order[gi]].len();
+                let mut ge = gi;
+                while ge < order.len() && queries[order[ge]].len() == len {
+                    ge += 1;
+                }
+                let r = band_radius(len, series.len());
+                let mut rows_ready = false;
+                for &qi in &order[gi..ge] {
+                    let query = queries[qi];
+                    let (best, stats) = &mut out[qi];
+                    stats.candidates += 1;
+                    let bsf = if best.len() == k {
+                        best[k - 1].distance
+                    } else {
+                        f64::INFINITY
+                    };
+                    let cut = cutoff(bsf);
+
+                    if lb_kim(query, series) > cut {
+                        stats.pruned_lb_kim += 1;
+                        continue;
+                    }
+                    if len >= PAA_MIN_LEN && lb_paa(&qexts[qi], len, DEFAULT_BLOCK, env, r) > cut
+                    {
+                        stats.pruned_lb_paa += 1;
+                        continue;
+                    }
+                    if !rows_ready {
+                        keogh_rows_into(env, len, r, &mut rows);
+                        rows_ready = true;
+                    }
+                    if lb_keogh_rows(query, &rows) > cut {
+                        stats.pruned_lb_keogh += 1;
+                        continue;
+                    }
+                    match dtw_banded_distance_cutoff_with(scratch, query, series, r, cut) {
+                        None => stats.abandoned += 1,
+                        Some(distance) => {
+                            stats.dtw_evals += 1;
+                            push_neighbor(best, k, Neighbor { index, distance });
+                        }
+                    }
+                }
+                gi = ge;
+            }
+        }
+        scratch.put_extrema_buf(rows);
+    });
+    out
 }
 
 /// Reference implementation: evaluate the banded DTW on every candidate.
@@ -117,15 +371,18 @@ pub fn brute_force_knn<'a>(
     if k == 0 || query.is_empty() {
         return best;
     }
-    for (index, series) in candidates {
-        if series.is_empty() {
-            continue;
+    with_thread_scratch(|scratch| {
+        for (index, series) in candidates {
+            if series.is_empty() {
+                continue;
+            }
+            let r = band_radius(query.len(), series.len());
+            let distance =
+                dtw_banded_distance_cutoff_with(scratch, query, series, r, f64::INFINITY)
+                    .expect("infinite cutoff never abandons");
+            push_neighbor(&mut best, k, Neighbor { index, distance });
         }
-        let r = band_radius(query.len(), series.len());
-        let distance = dtw_banded_distance_cutoff(query, series, r, f64::INFINITY)
-            .expect("infinite cutoff never abandons");
-        push_neighbor(&mut best, k, Neighbor { index, distance });
-    }
+    });
     best
 }
 
@@ -150,6 +407,17 @@ mod tests {
 
     fn with_envelopes(corpus: &[Vec<f64>]) -> Vec<Envelope> {
         corpus.iter().map(|s| Envelope::build(s, DEFAULT_BLOCK)).collect()
+    }
+
+    fn candidates<'a>(
+        refs: &'a [Vec<f64>],
+        envs: &'a [Envelope],
+    ) -> Vec<(usize, &'a [f64], &'a Envelope)> {
+        refs.iter()
+            .zip(envs)
+            .enumerate()
+            .map(|(i, (s, e))| (i, s.as_slice(), e))
+            .collect()
     }
 
     #[test]
@@ -248,5 +516,68 @@ mod tests {
         assert_eq!(top.len(), 1);
         assert_eq!(stats.candidates, 1);
         assert!(brute_force_knn(&[0.5], refs.iter().enumerate().map(|(i, s)| (i, s.as_slice())), 2).len() == 1);
+    }
+
+    #[test]
+    fn parallel_equals_serial_and_respects_fallback() {
+        let mut g = Pcg32::new(62, 3);
+        let refs = corpus(&mut g, 80);
+        let envs = with_envelopes(&refs);
+        let cands = candidates(&refs, &envs);
+        let q = series(&mut g, 120);
+        for k in [1usize, 4] {
+            let (serial, sstats) = knn(&q, cands.iter().copied(), k);
+            for workers in [1usize, 2, 8] {
+                let (par, pstats) = knn_parallel(&q, &cands, k, workers);
+                assert_eq!(par.len(), serial.len(), "k={k} w={workers}");
+                for (a, b) in par.iter().zip(&serial) {
+                    assert_eq!(a.index, b.index, "k={k} w={workers}");
+                    assert_eq!(a.distance.to_bits(), b.distance.to_bits());
+                }
+                assert_eq!(pstats.candidates, sstats.candidates);
+                assert_eq!(pstats.pruned() + pstats.dtw_started(), pstats.candidates);
+            }
+        }
+        // Below the fallback threshold the parallel entry point is the
+        // serial scan (identical stats included).
+        let few = &cands[..8];
+        let (a, astats) = knn_parallel(&q, few, 2, 8);
+        let (b, bstats) = knn(&q, few.iter().copied(), 2);
+        assert_eq!(a.len(), b.len());
+        assert_eq!(astats, bstats);
+        // Degenerate parallel inputs.
+        assert!(knn_parallel(&q, &cands, 0, 4).0.is_empty());
+        assert!(knn_parallel(&[], &cands, 3, 4).0.is_empty());
+    }
+
+    #[test]
+    fn batch_equals_per_query_including_stats() {
+        let mut g = Pcg32::new(63, 4);
+        let refs = corpus(&mut g, 40);
+        let envs = with_envelopes(&refs);
+        let cands = candidates(&refs, &envs);
+        // Duplicate lengths on purpose: the shared envelope pass must not
+        // perturb any query's cascade.
+        let lens = [80usize, 80, 40, 120, 80, 120, 200, 64, 40];
+        let queries: Vec<Vec<f64>> = lens.iter().map(|&l| series(&mut g, l)).collect();
+        let mut qrefs: Vec<&[f64]> = queries.iter().map(Vec::as_slice).collect();
+        qrefs.push(&[]); // empty query rides along harmlessly
+        for k in [1usize, 3] {
+            let batch = knn_batch(&qrefs, &cands, k);
+            assert_eq!(batch.len(), qrefs.len());
+            for (qi, q) in qrefs.iter().enumerate() {
+                let (want, wstats) = knn(q, cands.iter().copied(), k);
+                let (got, gstats) = &batch[qi];
+                assert_eq!(got.len(), want.len(), "query {qi} k={k}");
+                for (a, b) in got.iter().zip(&want) {
+                    assert_eq!(a.index, b.index, "query {qi} k={k}");
+                    assert_eq!(a.distance.to_bits(), b.distance.to_bits());
+                }
+                assert_eq!(*gstats, wstats, "query {qi} k={k}");
+            }
+        }
+        // k = 0 returns one empty row per query.
+        let empty = knn_batch(&qrefs, &cands, 0);
+        assert!(empty.iter().all(|(nbs, s)| nbs.is_empty() && s.candidates == 0));
     }
 }

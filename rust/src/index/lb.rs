@@ -53,7 +53,60 @@ pub fn lb_keogh(x: &[f64], env: &Envelope, r: usize) -> f64 {
 /// side of [`lb_paa`]. Computed once per search and reused across all
 /// candidates. (Same summary an [`Envelope`] holds for stored series.)
 pub fn query_extrema(x: &[f64], block: usize) -> Vec<(f64, f64)> {
-    Envelope::build(x, block).extrema()
+    let mut out = Vec::new();
+    query_extrema_into(x, block, &mut out);
+    out
+}
+
+/// [`query_extrema`] into a reusable buffer (value-identical): the fold
+/// order matches [`Envelope::build`], so bounds built from either agree
+/// bitwise. Lets the search engine keep one extrema buffer in its scratch
+/// arena instead of allocating per query.
+pub fn query_extrema_into(x: &[f64], block: usize, out: &mut Vec<(f64, f64)>) {
+    assert!(block > 0, "query_extrema: zero block size");
+    out.clear();
+    for chunk in x.chunks(block) {
+        let mut l = f64::INFINITY;
+        let mut h = f64::NEG_INFINITY;
+        for &v in chunk {
+            l = l.min(v);
+            h = h.max(v);
+        }
+        out.push((l, h));
+    }
+}
+
+/// Precompute the per-row envelope intervals of [`lb_keogh`] for query
+/// length `n` against one reference envelope. The intervals depend only on
+/// `(n, env, r)` — not on the query's values — so a batch of same-length
+/// queries shares one envelope pass per reference entry
+/// ([`crate::index::knn::knn_batch`]) instead of walking the envelope once
+/// per (query, entry).
+pub fn keogh_rows_into(env: &Envelope, n: usize, r: usize, out: &mut Vec<(f64, f64)>) {
+    let m = env.len();
+    debug_assert!(n > 0 && m > 0);
+    let slope = band_slope(n, m);
+    out.clear();
+    for i in 0..n {
+        let (lo, hi) = band_edges(i, slope, r, m);
+        out.push(env.cover_range(lo, hi));
+    }
+}
+
+/// [`lb_keogh`] evaluated against intervals precomputed by
+/// [`keogh_rows_into`] — same per-row values, same accumulation order,
+/// hence bit-identical to calling [`lb_keogh`] directly.
+pub fn lb_keogh_rows(x: &[f64], rows: &[(f64, f64)]) -> f64 {
+    debug_assert_eq!(x.len(), rows.len());
+    let mut sum = 0.0;
+    for (&v, &(l, u)) in x.iter().zip(rows) {
+        if v > u {
+            sum += v - u;
+        } else if v < l {
+            sum += l - v;
+        }
+    }
+    sum
 }
 
 /// PAA-summarized envelope bound: [`lb_keogh`] relaxed to block
@@ -155,5 +208,41 @@ mod tests {
     fn singleton_series_kim_does_not_double_count() {
         assert_eq!(lb_kim(&[0.3], &[0.8]), 0.5);
         assert!((lb_kim(&[0.3], &[0.8, 0.9]) - (0.5 + 0.6)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn precomputed_keogh_rows_are_bit_identical() {
+        let mut g = Pcg32::new(52, 3);
+        let mut rows = Vec::new();
+        for _ in 0..30 {
+            let n = 2 + g.below(180) as usize;
+            let m = 2 + g.below(180) as usize;
+            let x = series(&mut g, n);
+            let y = series(&mut g, m);
+            let r = band_radius(n, m);
+            let env = Envelope::build(&y, DEFAULT_BLOCK);
+            keogh_rows_into(&env, n, r, &mut rows);
+            assert_eq!(
+                lb_keogh_rows(&x, &rows).to_bits(),
+                lb_keogh(&x, &env, r).to_bits()
+            );
+        }
+    }
+
+    #[test]
+    fn query_extrema_into_matches_envelope_build() {
+        let mut g = Pcg32::new(53, 4);
+        let mut buf = Vec::new();
+        for _ in 0..20 {
+            let n = 1 + g.below(200) as usize;
+            let x = series(&mut g, n);
+            query_extrema_into(&x, DEFAULT_BLOCK, &mut buf);
+            let want = Envelope::build(&x, DEFAULT_BLOCK).extrema();
+            assert_eq!(buf.len(), want.len());
+            for ((al, ah), (bl, bh)) in buf.iter().zip(&want) {
+                assert_eq!(al.to_bits(), bl.to_bits());
+                assert_eq!(ah.to_bits(), bh.to_bits());
+            }
+        }
     }
 }

@@ -25,11 +25,21 @@
 //! wraps [`crate::database::store::ReferenceDb`], keeps the envelope cache
 //! in sync on insert, and persists it alongside the JSON store.
 //!
+//! The execution layer is a zero-allocation query engine: every DP runs
+//! on a reusable [`crate::dtw::DtwScratch`] arena, [`knn::knn_parallel`]
+//! fans candidates over the cores with a shared atomic best-k cutoff
+//! (result identical to the serial scan), and [`knn::knn_batch`] answers
+//! many queries in one entry-major pass that shares envelope work across
+//! same-length queries (per-query results and counters identical to
+//! standalone searches).
+//!
 //! Integration points: `coordinator::matcher::Matcher::match_app_indexed`
-//! (index-backed matching phase), the `knn` command of
-//! `coordinator::server`, and the pruning counters in
-//! `coordinator::metrics::Metrics`. `benches/index_perf.rs` measures the
-//! brute-force vs indexed crossover.
+//! and `match_apps_indexed` (index-backed matching phases), the `knn` and
+//! `knn_batch` commands of `coordinator::server`, and the pruning/batch
+//! counters in `coordinator::metrics::Metrics`. `benches/index_perf.rs`
+//! measures the brute-force vs indexed crossover;
+//! `benches/dtw_kernel_perf.rs` measures the engine against the
+//! seed-grade path.
 
 pub mod db;
 pub mod envelope;
@@ -38,7 +48,7 @@ pub mod lb;
 
 pub use db::IndexedDb;
 pub use envelope::Envelope;
-pub use knn::{brute_force_knn, knn, Neighbor};
+pub use knn::{brute_force_knn, knn, knn_batch, knn_parallel, Neighbor};
 
 /// Block size (samples per envelope block) used for the cached envelopes
 /// and the PAA-summarized bound. 16 keeps the cache ~12% of the series

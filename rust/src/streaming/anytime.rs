@@ -16,6 +16,7 @@
 //! so sessions reserve it for the few lowest-bound finalists per batch
 //! (with early abandoning against the best so far).
 
+use crate::dtw::scratch::{with_thread_scratch, DtwScratch};
 use crate::dtw::{band_edges, band_radius, band_slope, local_cost};
 
 /// Result of one prefix DP.
@@ -34,14 +35,44 @@ pub struct PrefixDp {
 /// minimum is possible). `n_final < qp.len()` self-corrects to
 /// `qp.len()`.
 pub fn prefix_dtw(qp: &[f64], y: &[f64], n_final: usize, cutoff: f64) -> Option<PrefixDp> {
+    with_thread_scratch(|scratch| prefix_dtw_with(scratch, qp, y, n_final, cutoff))
+}
+
+/// [`prefix_dtw`] with caller-provided scratch buffers (bit-identical) —
+/// sessions hold one arena and refresh every finalist through it without
+/// re-allocating DP rows each batch.
+pub fn prefix_dtw_with(
+    scratch: &mut DtwScratch,
+    qp: &[f64],
+    y: &[f64],
+    n_final: usize,
+    cutoff: f64,
+) -> Option<PrefixDp> {
+    let m = y.len();
+    assert!(!qp.is_empty() && m > 0, "prefix_dtw: empty series");
+    let mut prev = scratch.row(m, f64::INFINITY);
+    let mut cur = scratch.row(m, f64::INFINITY);
+    let out = prefix_dp(qp, y, n_final, cutoff, &mut prev, &mut cur);
+    scratch.put_row(prev);
+    scratch.put_row(cur);
+    out
+}
+
+/// The prefix DP over caller-provided rows (both pre-filled with `+inf`);
+/// split out so every early abandon still recycles the rows.
+fn prefix_dp(
+    qp: &[f64],
+    y: &[f64],
+    n_final: usize,
+    cutoff: f64,
+    prev: &mut Vec<f64>,
+    cur: &mut Vec<f64>,
+) -> Option<PrefixDp> {
     let (p, m) = (qp.len(), y.len());
-    assert!(p > 0 && m > 0, "prefix_dtw: empty series");
     let n = n_final.max(p);
     let slope = band_slope(n, m);
     let r = band_radius(n, m);
     let inf = f64::INFINITY;
-    let mut prev = vec![inf; m];
-    let mut cur = vec![inf; m];
 
     let (lo0, hi0) = band_edges(0, slope, r, m);
     debug_assert_eq!(lo0, 0);
@@ -54,7 +85,7 @@ pub fn prefix_dtw(qp: &[f64], y: &[f64], n_final: usize, cutoff: f64) -> Option<
     if row_min > cutoff {
         return None;
     }
-    std::mem::swap(&mut prev, &mut cur);
+    std::mem::swap(prev, cur);
     let mut last_row_min = row_min;
 
     for i in 1..p {
@@ -75,7 +106,7 @@ pub fn prefix_dtw(qp: &[f64], y: &[f64], n_final: usize, cutoff: f64) -> Option<
         if row_min > cutoff {
             return None;
         }
-        std::mem::swap(&mut prev, &mut cur);
+        std::mem::swap(prev, cur);
         last_row_min = row_min;
     }
 

@@ -8,7 +8,8 @@
 //! swept by [`SessionManager::reap_idle`], which the server calls from its
 //! read-timeout tick.
 
-use super::session::StreamSession;
+use super::session::{StreamDecision, StreamSession, TopEntry};
+use crate::index::IndexedDb;
 use anyhow::{anyhow, Result};
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -25,6 +26,18 @@ struct Slot {
 pub struct SessionManager {
     next: AtomicU64,
     slots: Mutex<HashMap<u64, Arc<Slot>>>,
+}
+
+/// One live session's anytime snapshot, as returned by
+/// [`SessionManager::poll_all`].
+#[derive(Debug, Clone)]
+pub struct SessionPoll {
+    pub id: u64,
+    pub observed: usize,
+    pub live_candidates: usize,
+    pub culled: u64,
+    pub top: Vec<TopEntry>,
+    pub decision: Option<StreamDecision>,
 }
 
 impl SessionManager {
@@ -71,6 +84,43 @@ impl SessionManager {
             // caller a snapshot and let the straggler's Arc drop.
             Err(arc) => Ok(arc.session.lock().expect("session state").clone()),
         }
+    }
+
+    /// Poll every live session in one pass: the batched form of per-session
+    /// `stream_poll`, so a dashboard (or the tuner watching a whole fleet)
+    /// pays one request instead of one per session. Snapshots are taken
+    /// under each session's own lock — concurrent feeds never serialize
+    /// against each other — and returned sorted by session id for a
+    /// deterministic wire order. Unlike [`SessionManager::with`], polling
+    /// is read-only and does **not** refresh idle clocks: a fleet
+    /// dashboard polling forever must not keep abandoned sessions alive
+    /// past [`SessionManager::reap_idle`]'s deadline.
+    pub fn poll_all(&self, idx: &IndexedDb, k: usize) -> Vec<SessionPoll> {
+        // Snapshot the registry first; per-session locks are taken outside
+        // the registry lock so a slow session cannot block open/close.
+        let slots: Vec<(u64, Arc<Slot>)> = self
+            .slots
+            .lock()
+            .expect("session registry")
+            .iter()
+            .map(|(&id, slot)| (id, Arc::clone(slot)))
+            .collect();
+        let mut polls: Vec<SessionPoll> = slots
+            .into_iter()
+            .map(|(id, slot)| {
+                let s = slot.session.lock().expect("session state");
+                SessionPoll {
+                    id,
+                    observed: s.observed(),
+                    live_candidates: s.live_candidates(),
+                    culled: s.stats().culled,
+                    top: s.top(idx, k),
+                    decision: s.decision().cloned(),
+                }
+            })
+            .collect();
+        polls.sort_by_key(|p| p.id);
+        polls
     }
 
     /// Drop sessions idle for longer than `max_idle`; returns how many.
@@ -136,6 +186,34 @@ mod tests {
         assert_eq!(reaped, 1);
         assert_eq!(mgr.len(), 1);
         assert!(mgr.with(id, |_| ()).is_ok());
+    }
+
+    #[test]
+    fn poll_all_snapshots_every_session_sorted() {
+        let mgr = SessionManager::new();
+        let idx = IndexedDb::new();
+        let a = mgr.open(session());
+        let b = mgr.open(session());
+        let c = mgr.open(session());
+        mgr.with(b, |s| {
+            s.push(&idx, &[0.1, 0.2, 0.3]);
+        })
+        .unwrap();
+        let polls = mgr.poll_all(&idx, 3);
+        assert_eq!(polls.len(), 3);
+        assert!(polls.windows(2).all(|w| w[0].id < w[1].id), "ids not sorted");
+        assert_eq!(polls.iter().find(|p| p.id == a).unwrap().observed, 0);
+        assert_eq!(polls.iter().find(|p| p.id == b).unwrap().observed, 3);
+        assert!(polls.iter().all(|p| p.decision.is_none()));
+        mgr.close(c).unwrap();
+        assert_eq!(mgr.poll_all(&idx, 1).len(), 2);
+
+        // Polling is read-only: it must NOT refresh idle clocks, so a
+        // permanently polling dashboard cannot keep dead sessions alive.
+        std::thread::sleep(Duration::from_millis(30));
+        mgr.poll_all(&idx, 1);
+        assert_eq!(mgr.reap_idle(Duration::from_millis(20)), 2);
+        assert!(mgr.is_empty());
     }
 
     #[test]

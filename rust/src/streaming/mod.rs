@@ -50,9 +50,9 @@ pub mod manager;
 pub mod prefix_lb;
 pub mod session;
 
-pub use manager::SessionManager;
+pub use manager::{SessionManager, SessionPoll};
 pub use prefix_lb::FinalLen;
-pub use session::{DecisionPolicy, StreamDecision, StreamSession, MAX_STREAM_LEN};
+pub use session::{DecisionPolicy, StreamDecision, StreamSession, TopEntry, MAX_STREAM_LEN};
 
 /// Per-session work counters; the streaming analogue of
 /// [`crate::index::SearchStats`].

@@ -10,9 +10,10 @@
 //! config search, which is what makes a completed session agree with the
 //! offline pipeline no matter what was culled along the way.
 
-use super::anytime::prefix_dtw;
+use super::anytime::prefix_dtw_with;
 use super::prefix_lb::{prefix_lb, FinalLen};
 use super::StreamStats;
+use crate::dtw::scratch::DtwScratch;
 use crate::dtw::corr::similarity_percent_banded;
 use crate::index::knn::{knn, Neighbor};
 use crate::index::{IndexedDb, SearchStats};
@@ -140,6 +141,8 @@ pub struct StreamSession {
     decision: Option<StreamDecision>,
     stats: StreamStats,
     overflow: bool,
+    /// DP buffer arena reused across every probe this session ever runs.
+    scratch: DtwScratch,
 }
 
 impl StreamSession {
@@ -182,6 +185,7 @@ impl StreamSession {
             decision: None,
             stats: StreamStats::default(),
             overflow: false,
+            scratch: DtwScratch::new(),
         }
     }
 
@@ -259,7 +263,7 @@ impl StreamSession {
             } else {
                 bsf
             };
-            match prefix_dtw(&qp, series, dp_len, cut) {
+            match prefix_dtw_with(&mut self.scratch, &qp, series, dp_len, cut) {
                 None => {
                     // Abandoned above the bar: final-for-this-round floor.
                     self.cands[ci].floor = lb.max(cut);

@@ -1,0 +1,260 @@
+//! Property sweeps for the zero-allocation parallel DTW query engine:
+//!
+//! * scratch-arena kernels are bit-identical whether the arena is fresh
+//!   per call (the seed's allocation behaviour) or reused forever;
+//! * the cutoff-sharing parallel k-NN returns exactly the serial top-k
+//!   (indices, order, bit-identical distances) with valid counters;
+//! * the batched multi-query search equals the per-query search exactly,
+//!   counters included, for any mix of query lengths;
+//! * the batched matcher equals the per-app indexed matcher.
+
+use mrtuner::coordinator::profiler::Profiler;
+use mrtuner::coordinator::{ConfigGrid, SystemConfig};
+use mrtuner::database::store::ReferenceDb;
+use mrtuner::dtw::banded::{
+    dtw_banded, dtw_banded_distance_cutoff, dtw_banded_distance_cutoff_with, dtw_banded_with,
+};
+use mrtuner::dtw::fastdtw::{fastdtw, fastdtw_with};
+use mrtuner::dtw::full::{dtw, dtw_distance_with, dtw_with};
+use mrtuner::dtw::{band_radius, DtwScratch};
+use mrtuner::index::{knn, knn_parallel, Envelope, IndexedDb, DEFAULT_BLOCK};
+use mrtuner::prelude::*;
+use mrtuner::streaming::anytime::{prefix_dtw, prefix_dtw_with};
+use mrtuner::util::rng::Pcg32;
+use mrtuner::workloads::AppId;
+
+fn series(g: &mut Pcg32, len: usize) -> Vec<f64> {
+    let mut v = 0.5;
+    (0..len)
+        .map(|_| {
+            v = (v + (g.f64() - 0.5) * 0.2).clamp(0.0, 1.0);
+            v
+        })
+        .collect()
+}
+
+#[test]
+fn scratch_kernels_bit_identical_fresh_vs_reused() {
+    // One arena reused across all rounds vs a fresh arena per call (the
+    // seed's allocation pattern) vs the seed-signature wrappers: every
+    // kernel must agree to the bit, paths included.
+    let mut g = Pcg32::new(700, 1);
+    let mut warm = DtwScratch::new();
+    for round in 0..25 {
+        let n = 2 + g.below(120) as usize;
+        let m = 2 + g.below(120) as usize;
+        let x = series(&mut g, n);
+        let y = series(&mut g, m);
+        let r = band_radius(n, m);
+
+        let a = dtw_banded_with(&mut warm, &x, &y, r);
+        let b = dtw_banded_with(&mut DtwScratch::new(), &x, &y, r);
+        let c = dtw_banded(&x, &y, r);
+        assert_eq!(a.distance.to_bits(), b.distance.to_bits(), "round {round}");
+        assert_eq!(a.distance.to_bits(), c.distance.to_bits(), "round {round}");
+        assert_eq!(a.path, b.path);
+        assert_eq!(a.path, c.path);
+
+        for cutoff in [f64::INFINITY, a.distance, a.distance * 0.6] {
+            let ca = dtw_banded_distance_cutoff_with(&mut warm, &x, &y, r, cutoff);
+            let cb = dtw_banded_distance_cutoff_with(&mut DtwScratch::new(), &x, &y, r, cutoff);
+            let cc = dtw_banded_distance_cutoff(&x, &y, r, cutoff);
+            assert_eq!(ca.map(f64::to_bits), cb.map(f64::to_bits), "round {round}");
+            assert_eq!(ca.map(f64::to_bits), cc.map(f64::to_bits), "round {round}");
+        }
+
+        let fa = dtw_with(&mut warm, &x, &y);
+        let fb = dtw(&x, &y);
+        assert_eq!(fa.distance.to_bits(), fb.distance.to_bits());
+        assert_eq!(fa.path, fb.path);
+        let da = dtw_distance_with(&mut warm, &x, &y);
+        let db = dtw_distance_with(&mut DtwScratch::new(), &x, &y);
+        assert_eq!(da.to_bits(), db.to_bits());
+
+        let ga = fastdtw_with(&mut warm, &x, &y, 4);
+        let gb = fastdtw(&x, &y, 4);
+        assert_eq!(ga.distance.to_bits(), gb.distance.to_bits());
+        assert_eq!(ga.path, gb.path);
+
+        let p = 1 + g.below(n as u32) as usize;
+        let pa = prefix_dtw_with(&mut warm, &x[..p], &y, n, f64::INFINITY);
+        let pb = prefix_dtw(&x[..p], &y, n, f64::INFINITY);
+        match (pa, pb) {
+            (Some(a), Some(b)) => {
+                assert_eq!(a.row_min.to_bits(), b.row_min.to_bits(), "round {round}");
+                assert_eq!(a.exact.map(f64::to_bits), b.exact.map(f64::to_bits));
+            }
+            (None, None) => {}
+            other => panic!("round {round}: prefix DP disagreed: {other:?}"),
+        }
+    }
+}
+
+#[test]
+fn parallel_knn_equals_serial_knn_across_seeds() {
+    // For any database, query, k and worker count, the parallel engine
+    // returns exactly the serial top-k: same candidates seen, same
+    // neighbours in the same order, bit-identical distances, and counters
+    // that still partition the candidate set.
+    for seed in 1..=3u64 {
+        let mut g = Pcg32::new(710 + seed, seed);
+        let refs: Vec<Vec<f64>> = (0..120)
+            .map(|_| series(&mut g, 30 + g.below(220) as usize))
+            .collect();
+        let envs: Vec<Envelope> = refs.iter().map(|s| Envelope::build(s, DEFAULT_BLOCK)).collect();
+        let cands: Vec<(usize, &[f64], &Envelope)> = refs
+            .iter()
+            .zip(&envs)
+            .enumerate()
+            .map(|(i, (s, e))| (i, s.as_slice(), e))
+            .collect();
+        for qi in 0..4 {
+            let q = series(&mut g, 40 + g.below(220) as usize);
+            for k in [1usize, 3, 10] {
+                let (serial, sstats) = knn(&q, cands.iter().copied(), k);
+                for workers in [2usize, 3, 8] {
+                    let (par, pstats) = knn_parallel(&q, &cands, k, workers);
+                    assert_eq!(
+                        par.len(),
+                        serial.len(),
+                        "seed {seed} q{qi} k={k} w={workers}"
+                    );
+                    for (a, b) in par.iter().zip(&serial) {
+                        assert_eq!(a.index, b.index, "seed {seed} q{qi} k={k} w={workers}");
+                        assert_eq!(
+                            a.distance.to_bits(),
+                            b.distance.to_bits(),
+                            "seed {seed} q{qi} k={k} w={workers}: {} vs {}",
+                            a.distance,
+                            b.distance
+                        );
+                    }
+                    assert_eq!(pstats.candidates, sstats.candidates);
+                    assert_eq!(
+                        pstats.pruned() + pstats.dtw_started(),
+                        pstats.candidates,
+                        "seed {seed}: counters do not partition"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn batched_knn_equals_per_query_knn_across_seeds() {
+    // Entry-major batching with shared envelope passes must be invisible:
+    // per query, neighbours AND counters equal the standalone search.
+    for seed in 1..=3u64 {
+        let mut g = Pcg32::new(720 + seed, seed);
+        let mut idx = IndexedDb::new();
+        for i in 0..35usize {
+            let len = 30 + g.below(250) as usize;
+            idx.insert(ProfileEntry {
+                app: AppId::all()[i % AppId::all().len()],
+                config: JobConfig::new(1 + i, 2, 10.0, 20.0),
+                series: series(&mut g, len),
+                raw_len: len,
+                completion_secs: 1.0,
+            });
+        }
+        // Length profile with heavy duplication (the sharing case) plus
+        // unique lengths and one PAA-skipping short query.
+        let lens = [128usize, 128, 128, 64, 200, 64, 40, 128, 96];
+        let queries: Vec<Vec<f64>> = lens.iter().map(|&l| series(&mut g, l)).collect();
+        let qrefs: Vec<&[f64]> = queries.iter().map(Vec::as_slice).collect();
+        for k in [1usize, 4] {
+            let batch = idx.knn_batch(&qrefs, k);
+            assert_eq!(batch.len(), qrefs.len());
+            for (qi, q) in qrefs.iter().enumerate() {
+                let (want, wstats) = idx.knn(q, k);
+                let (got, gstats) = &batch[qi];
+                assert_eq!(got.len(), want.len(), "seed {seed} query {qi} k={k}");
+                for (a, b) in got.iter().zip(&want) {
+                    assert_eq!(a.index, b.index, "seed {seed} query {qi} k={k}");
+                    assert_eq!(a.distance.to_bits(), b.distance.to_bits());
+                }
+                assert_eq!(*gstats, wstats, "seed {seed} query {qi} k={k}");
+            }
+        }
+        // Config-scoped batches agree with the scoped per-query search.
+        let label = idx.entries()[0].config_key();
+        let scoped = idx.knn_batch_in_config(&qrefs, &label, 2);
+        for (qi, q) in qrefs.iter().enumerate() {
+            let (want, wstats) = idx.knn_in_config(q, &label, 2);
+            assert_eq!(scoped[qi].0.len(), want.len());
+            for (a, b) in scoped[qi].0.iter().zip(&want) {
+                assert_eq!(a.index, b.index);
+                assert_eq!(a.distance.to_bits(), b.distance.to_bits());
+            }
+            assert_eq!(scoped[qi].1, wstats);
+        }
+    }
+}
+
+#[test]
+fn db_parallel_knn_equals_serial_through_the_wrapper() {
+    let mut g = Pcg32::new(730, 1);
+    let mut idx = IndexedDb::new();
+    for i in 0..60usize {
+        let len = 40 + g.below(200) as usize;
+        idx.insert(ProfileEntry {
+            app: AppId::WordCount,
+            config: JobConfig::new(1 + i, 2, 10.0, 20.0),
+            series: series(&mut g, len),
+            raw_len: len,
+            completion_secs: 1.0,
+        });
+    }
+    for _ in 0..5 {
+        let q = series(&mut g, 60 + g.below(200) as usize);
+        let (serial, _) = idx.knn(&q, 3);
+        let (par, pstats) = idx.knn_parallel(&q, 3, 8);
+        assert_eq!(par.len(), serial.len());
+        for (a, b) in par.iter().zip(&serial) {
+            assert_eq!(a.index, b.index);
+            assert_eq!(a.distance.to_bits(), b.distance.to_bits());
+        }
+        assert_eq!(pstats.candidates, 60);
+    }
+}
+
+#[test]
+fn batched_matcher_equals_per_app_matcher_end_to_end() {
+    // Full-pipeline equivalence: profiling + batched per-config search +
+    // correlation re-rank must reproduce the per-app indexed matcher.
+    let sc = SystemConfig {
+        workers: 2,
+        use_runtime: false,
+        ..SystemConfig::default()
+    };
+    let grid = ConfigGrid::small(11);
+    let profiler = Profiler::new(&sc, None);
+    let mut db = ReferenceDb::new();
+    for app in [AppId::WordCount, AppId::TeraSort] {
+        for e in profiler.profile(app, &grid) {
+            db.insert(e);
+        }
+    }
+    let idx = IndexedDb::from_db(db);
+    let m = Matcher::new(&sc, None);
+    let apps = [AppId::EximParse, AppId::TeraSort];
+    let batch = m.match_apps_indexed(&apps, &grid, &idx, 2);
+    assert_eq!(batch.len(), apps.len());
+    for (i, &app) in apps.iter().enumerate() {
+        let (want, wstats) = m.match_app_indexed(app, &grid, &idx, 2);
+        assert_eq!(batch[i].0.winner, want.winner, "app {}", app.name());
+        assert_eq!(batch[i].0.tally, want.tally, "app {}", app.name());
+        assert_eq!(batch[i].1, wstats, "app {}", app.name());
+        assert_eq!(batch[i].0.cells.len(), want.cells.len());
+        for (a, b) in batch[i].0.votes.iter().zip(&want.votes) {
+            assert_eq!(a.best_app, b.best_app, "config {}", a.config.label());
+            assert_eq!(
+                a.best_similarity.to_bits(),
+                b.best_similarity.to_bits(),
+                "config {}",
+                a.config.label()
+            );
+        }
+    }
+}
