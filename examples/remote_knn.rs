@@ -1,0 +1,145 @@
+//! Multi-node serving end to end: two shard servers, one router, typed
+//! clients — all in one process on ephemeral ports.
+//!
+//! The reference database is profiled once, then **partitioned by
+//! configuration set** into two shards (exactly what
+//! `mrtuner serve --shard-of ...` does). A [`ShardRouter`] connects to
+//! both, learns ownership through the `shard_info` handshake, and answers
+//! `knn`/`knn_batch` by pipelined fan-out + deterministic
+//! `(distance, global index)` merge — bit-identical to searching the
+//! union database on one node, which this example verifies live.
+//!
+//! Run with: `cargo run --release --example remote_knn`
+
+use mrtuner::coordinator::metrics::Metrics;
+use mrtuner::coordinator::profiler::Profiler;
+use mrtuner::coordinator::server::{MatchServer, ServerState};
+use mrtuner::coordinator::{ConfigGrid, SystemConfig};
+use mrtuner::prelude::*;
+use mrtuner::simulator::engine::simulate;
+use mrtuner::util::rng::Rng;
+use mrtuner::workloads::workload_for;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Spawn a `MatchServer` over `db`, returning its address and stop handle.
+fn spawn_shard(
+    db: IndexedDb,
+) -> (
+    String,
+    Arc<AtomicBool>,
+    std::thread::JoinHandle<anyhow::Result<()>>,
+) {
+    let state = ServerState {
+        db,
+        runtime: None,
+        metrics: Metrics::new(),
+        sessions: mrtuner::streaming::SessionManager::new(),
+    };
+    let server = MatchServer::bind("127.0.0.1:0", state).expect("bind shard");
+    let addr = server.local_addr().expect("addr").to_string();
+    let stop = server.stop_flag();
+    let handle = std::thread::spawn(move || server.serve_with(2, Duration::from_millis(50)));
+    (addr, stop, handle)
+}
+
+fn main() {
+    mrtuner::util::logging::init();
+    let grid = ConfigGrid::small(1);
+    let sc = SystemConfig {
+        use_runtime: false,
+        ..SystemConfig::default()
+    };
+
+    // Profile the full reference database once.
+    let p = Profiler::new(&sc, None);
+    let mut entries = Vec::new();
+    for app in [AppId::WordCount, AppId::TeraSort] {
+        entries.extend(p.profile(app, &grid));
+    }
+
+    // Partition by configuration set: even-indexed configs to shard A,
+    // odd to shard B — and build the single-node union database in the
+    // SAME shard order (A's entries, then B's), which is the ordering the
+    // router's global index space reproduces.
+    let shard_a_labels: Vec<String> = grid
+        .configs
+        .iter()
+        .enumerate()
+        .filter(|(i, _)| i % 2 == 0)
+        .map(|(_, c)| c.label())
+        .collect();
+    let (mut shard_a, mut shard_b) = (IndexedDb::new(), IndexedDb::new());
+    for e in &entries {
+        if shard_a_labels.contains(&e.config_key()) {
+            shard_a.insert(e.clone());
+        } else {
+            shard_b.insert(e.clone());
+        }
+    }
+    let mut union = IndexedDb::new();
+    for e in shard_a.entries().iter().chain(shard_b.entries()) {
+        union.insert(e.clone());
+    }
+    println!(
+        "partitioned {} entries: shard A={} shard B={}",
+        union.len(),
+        shard_a.len(),
+        shard_b.len()
+    );
+
+    let (addr_a, stop_a, join_a) = spawn_shard(shard_a);
+    let (addr_b, stop_b, join_b) = spawn_shard(shard_b);
+
+    // A plain typed client against one shard: pipelined pings + knn.
+    let mut client = MrtunerClient::connect(&addr_a).expect("connect shard A");
+    let info = client.shard_info().expect("shard_info");
+    println!(
+        "shard A owns {} entries over configs {:?}",
+        info.entries, info.configs
+    );
+
+    // The router composes both shards into one logical database.
+    let metrics = Arc::new(Metrics::new());
+    let mut router =
+        ShardRouter::connect(&[addr_a.clone(), addr_b.clone()], Arc::clone(&metrics))
+            .expect("router connect");
+    println!(
+        "router composed {} shards into {} entries",
+        router.shards().len(),
+        router.total_entries()
+    );
+
+    // A fresh capture to search for (WordCount, first config set).
+    let run = simulate(
+        workload_for(AppId::WordCount).as_ref(),
+        &grid.configs[0],
+        &sc.cluster,
+        &sc.noise,
+        &mut Rng::new(77),
+    );
+    let queries: Vec<Vec<f64>> = vec![run.cpu_noisy.clone()];
+
+    // Routed k-NN vs single-node k-NN over the union database.
+    let routed = router.knn_batch(&queries, 3, None).expect("routed knn");
+    let prepared = mrtuner::coordinator::batcher::prepare_query(&queries[0]);
+    let local = union.knn_batch(&[prepared.as_slice()], 3);
+    println!("\ntop-3 via router (global index / app / distance):");
+    for (row, local_nb) in routed.results[0].neighbors.iter().zip(&local[0].0) {
+        let bit_identical =
+            row.index == local_nb.index && row.distance.to_bits() == local_nb.distance.to_bits();
+        println!(
+            "  entry {:3}  {:12} d={:.6}  single-node agrees bit-for-bit: {}",
+            row.index, row.app, row.distance, bit_identical
+        );
+        assert!(bit_identical, "routed result diverged from single node");
+    }
+    println!("\nrouter metrics: {}", metrics.report());
+
+    for (stop, join, addr) in [(stop_a, join_a, addr_a), (stop_b, join_b, addr_b)] {
+        stop.store(true, Ordering::SeqCst);
+        let _ = std::net::TcpStream::connect(&addr); // unblock accept
+        join.join().expect("shard thread").expect("serve");
+    }
+}

@@ -1,21 +1,29 @@
-//! Streaming classification quickstart: profile a reference database,
-//! then classify a *live* CPU stream while the job is still running.
+//! Streaming classification quickstart — now over the wire: profile a
+//! reference database, serve it, then classify a *live* CPU stream
+//! through [`MrtunerClient`] while the job is still running.
 //!
-//! A `StreamSession` ingests the capture batch by batch (here replayed
-//! from a simulated run via `LiveStream`), tightens monotone lower bounds
-//! per reference as samples arrive, culls hopeless candidates, and
-//! declares an early decision once the margin policy is satisfied —
-//! typically well before the job finishes. Closing the session runs the
-//! exact indexed search over the full capture for comparison.
+//! The server side is the real `MatchServer` (the same thing
+//! `mrtuner serve` runs), started in-process on an ephemeral port. The
+//! client side talks protocol v2 only: `stream_open` registers the live
+//! session, `stream_feed` ships SysStat-sized sample batches and reports
+//! the anytime state (including the early decision the moment the
+//! session's margin policy declares one), and `stream_close` answers with
+//! the exact indexed search over the full capture for comparison.
+//! Sessions are addressed by id, not by connection — a feeder may
+//! reconnect mid-job and keep feeding the same session.
 //!
 //! Run with: `cargo run --release --example stream_classify`
 
+use mrtuner::coordinator::metrics::Metrics;
 use mrtuner::coordinator::profiler::Profiler;
+use mrtuner::coordinator::server::{MatchServer, ServerState};
 use mrtuner::coordinator::{ConfigGrid, SystemConfig};
 use mrtuner::prelude::*;
 use mrtuner::simulator::engine::simulate;
 use mrtuner::util::rng::Rng;
 use mrtuner::workloads::workload_for;
+use std::sync::atomic::Ordering;
+use std::time::Duration;
 
 fn main() {
     mrtuner::util::logging::init();
@@ -35,6 +43,20 @@ fn main() {
     }
     println!("reference DB: {} entries over {} config sets", idx.len(), grid.len());
 
+    // Serve it — the same server `mrtuner serve` runs, ephemeral port.
+    let state = ServerState {
+        db: idx,
+        runtime: None,
+        metrics: Metrics::new(),
+        sessions: mrtuner::streaming::SessionManager::new(),
+    };
+    let server = MatchServer::bind("127.0.0.1:0", state).expect("bind");
+    let addr = server.local_addr().expect("addr");
+    let stop = server.stop_flag();
+    let server_thread =
+        std::thread::spawn(move || server.serve_with(2, Duration::from_millis(50)));
+    println!("match service listening on {addr}");
+
     // A "new" job starts: WordCount under the first config set, fresh
     // noise seed. We only get to see its CPU samples as they happen.
     let cfg = grid.configs[0];
@@ -52,44 +74,52 @@ fn main() {
         cfg.label(),
     );
 
-    let mut session = StreamSession::open(
-        &idx,
-        Some(&cfg),
-        FinalLen::Known(total),
-        DecisionPolicy::default(),
+    // The feeder is a protocol-v2 client; the session lives server-side.
+    let mut client = MrtunerClient::connect(&addr.to_string()).expect("connect");
+    let opened = client
+        .stream_open(Some(&cfg), Some(total))
+        .expect("stream_open");
+    println!(
+        "session {} open against {} candidate references",
+        opened.session, opened.candidates
     );
 
     // Feed 10-second SysStat batches until the session declares.
+    let mut early = None;
     while let Some(batch) = source.next_batch(10) {
-        let decision = session.push(&idx, batch).cloned();
-        if let Some(d) = decision {
+        let fed = client.stream_feed(opened.session, batch).expect("stream_feed");
+        if let Some(d) = fed.decision {
             println!(
-                "EARLY DECISION after {} of {total} samples ({:.0}% observed): {} (similarity {:.1}%, {} candidates culled)",
+                "EARLY DECISION after {} of {total} samples ({:.0}% observed): {} (similarity {:.1}%)",
                 d.at_sample,
                 d.fraction * 100.0,
-                d.app.name(),
+                d.app,
                 d.similarity,
-                session.stats().culled,
             );
+            early = Some(d);
             break;
         }
     }
 
-    // Drain the rest of the run and compare with the exact offline answer.
+    // Drain the rest of the run, then close: the exact offline answer.
     while let Some(batch) = source.next_batch(10) {
-        session.push(&idx, batch);
+        client.stream_feed(opened.session, batch).expect("stream_feed");
     }
-    let (top, stats) = session.finalize(&idx, 1);
-    let offline = idx.entries()[top[0].index].app;
+    let closed = client.stream_close(opened.session).expect("stream_close");
+    let final_match = closed.final_match.expect("final answer over the capture");
     println!(
-        "offline full-series answer: {} (distance {:.4}; search: {})",
-        offline.name(),
-        top[0].distance,
-        stats
+        "offline full-series answer: {} (distance {:.4}, similarity {:.1}%)",
+        final_match.app, final_match.distance, final_match.similarity
     );
-    match session.decision() {
-        Some(d) if d.app == offline => println!("early decision AGREES with the full series"),
-        Some(d) => println!("early decision ({}) disagrees with the full series", d.app.name()),
+    match &early {
+        Some(d) if d.app == final_match.app => {
+            println!("early decision AGREES with the full series")
+        }
+        Some(d) => println!("early decision ({}) disagrees with the full series", d.app),
         None => println!("policy never fired; the exact finalize answered instead"),
     }
+
+    stop.store(true, Ordering::SeqCst);
+    let _ = std::net::TcpStream::connect(addr); // unblock accept
+    server_thread.join().expect("server thread").expect("serve");
 }

@@ -1,0 +1,446 @@
+//! [`MrtunerClient`]: a reconnecting, pipelining protocol-v2 client for
+//! the match service.
+//!
+//! * **Typed**: requests go out as [`Request`], replies come back as
+//!   [`Response`] bodies — no JSON at call sites. Server-side failures
+//!   surface as [`ClientError::Server`] with their [`ErrorCode`] intact.
+//! * **Pipelining**: [`MrtunerClient::send`] writes a request and returns
+//!   its id immediately; [`MrtunerClient::recv`] reads until that id's
+//!   reply arrives, stashing any other reply it passes. A caller can
+//!   write N requests back-to-back and collect the replies afterwards —
+//!   one round trip instead of N. This is what the shard router uses to
+//!   overlap fan-out across shards without threads.
+//! * **Reconnecting**: the client remembers its address. A dead
+//!   connection (the server drops peers idle past `CONN_IDLE`) is
+//!   re-established transparently on the next send; [`MrtunerClient::call`]
+//!   additionally replays the request once if the failure hit an
+//!   [idempotent](Request::is_idempotent) request mid-flight. Stream
+//!   *sessions* survive reconnects by design — they are addressed by id,
+//!   not by connection — but non-idempotent stream mutations
+//!   (`stream_feed`/`open`/`close`) are never auto-replayed, because the
+//!   client cannot know whether the server applied them before the
+//!   connection died.
+
+use crate::protocol::{
+    decode_reply, ErrorCode, KnnBatchBody, KnnBody, MatchBody, Request, Response, ServerError,
+    ShardInfoBody, StatsBody, StreamCloseBody, StreamFeedBody, StreamOpenBody, StreamPollBody,
+};
+use crate::simulator::job::JobConfig;
+use std::collections::BTreeMap;
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::time::Duration;
+
+/// Why a client call failed.
+#[derive(Debug)]
+pub enum ClientError {
+    /// The connection could not be (re)established, died mid-call, or the
+    /// request was lost to a reconnect.
+    Io(std::io::Error),
+    /// The server answered something that is not a valid v2 reply.
+    Wire(String),
+    /// The server answered a structured error.
+    Server(ServerError),
+}
+
+impl ClientError {
+    /// The server's error code, when this is a structured server error.
+    pub fn code(&self) -> Option<ErrorCode> {
+        match self {
+            ClientError::Server(e) => Some(e.code),
+            _ => None,
+        }
+    }
+}
+
+impl std::fmt::Display for ClientError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ClientError::Io(e) => write!(f, "io: {e}"),
+            ClientError::Wire(m) => write!(f, "wire: {m}"),
+            ClientError::Server(e) => write!(f, "server: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for ClientError {}
+
+impl From<std::io::Error> for ClientError {
+    fn from(e: std::io::Error) -> ClientError {
+        ClientError::Io(e)
+    }
+}
+
+struct Conn {
+    writer: TcpStream,
+    reader: BufReader<TcpStream>,
+}
+
+/// Recognize an id-less legacy-shaped reject (`{"error":msg,"ok":false}`)
+/// and lift it into a typed error. The code is reconstructed from the
+/// message, since the legacy shape carries none.
+fn legacy_reject(line: &str) -> Option<ServerError> {
+    let v = crate::util::json::Json::parse(line).ok()?;
+    if v.get("ok").and_then(crate::util::json::Json::as_bool) != Some(false) {
+        return None;
+    }
+    let msg = v.get("error").and_then(crate::util::json::Json::as_str)?;
+    let code = if msg.contains("too large") {
+        ErrorCode::TooLarge
+    } else {
+        ErrorCode::BadRequest
+    };
+    Some(ServerError::new(code, msg))
+}
+
+/// A blocking protocol-v2 client (see module docs).
+pub struct MrtunerClient {
+    addr: String,
+    conn: Option<Conn>,
+    timeout: Option<Duration>,
+    next_id: u64,
+    /// Connection generation; bumps on every reconnect so ids sent on a
+    /// dead connection fail loudly instead of blocking forever.
+    epoch: u64,
+    /// Outstanding ids → the epoch they were written under.
+    sent: BTreeMap<u64, u64>,
+    /// Replies read while scanning for a different id.
+    pending: BTreeMap<u64, Result<Response, ServerError>>,
+}
+
+impl MrtunerClient {
+    /// Connect to `addr` (`host:port`). Fails fast if the server is
+    /// unreachable; later disconnects are repaired on the next call.
+    pub fn connect(addr: &str) -> Result<MrtunerClient, ClientError> {
+        MrtunerClient::connect_opts(addr, None)
+    }
+
+    /// [`MrtunerClient::connect`] with a read timeout on replies.
+    pub fn connect_timeout(addr: &str, timeout: Duration) -> Result<MrtunerClient, ClientError> {
+        MrtunerClient::connect_opts(addr, Some(timeout))
+    }
+
+    fn connect_opts(addr: &str, timeout: Option<Duration>) -> Result<MrtunerClient, ClientError> {
+        let mut client = MrtunerClient {
+            addr: addr.to_string(),
+            conn: None,
+            timeout,
+            next_id: 0,
+            epoch: 0,
+            sent: BTreeMap::new(),
+            pending: BTreeMap::new(),
+        };
+        client.ensure_connected()?;
+        Ok(client)
+    }
+
+    /// The address this client (re)connects to.
+    pub fn addr(&self) -> &str {
+        &self.addr
+    }
+
+    fn ensure_connected(&mut self) -> Result<(), ClientError> {
+        if self.conn.is_none() {
+            let stream = TcpStream::connect(&self.addr)?;
+            let _ = stream.set_nodelay(true);
+            if let Some(t) = self.timeout {
+                stream.set_read_timeout(Some(t))?;
+            }
+            let writer = stream.try_clone()?;
+            self.conn = Some(Conn {
+                writer,
+                reader: BufReader::new(stream),
+            });
+            self.epoch += 1;
+        }
+        Ok(())
+    }
+
+    fn drop_conn(&mut self) {
+        self.conn = None;
+    }
+
+    fn try_write(&mut self, line: &str) -> std::io::Result<()> {
+        let conn = self.conn.as_mut().expect("connected");
+        conn.writer.write_all(line.as_bytes())?;
+        conn.writer.write_all(b"\n")?;
+        conn.writer.flush()
+    }
+
+    /// Write one request and return its id without waiting for the reply —
+    /// the pipelining half. A failed write triggers one transparent
+    /// reconnect + rewrite. This is safe even for non-idempotent requests:
+    /// a write error means the line's newline never reached the kernel,
+    /// and the server executes a line only once its newline arrives
+    /// (unterminated tails are rejected at EOF, never applied).
+    pub fn send(&mut self, req: &Request) -> Result<u64, ClientError> {
+        self.next_id += 1;
+        let id = self.next_id;
+        let line = req.to_v2(id).to_string();
+        self.ensure_connected()?;
+        if let Err(e) = self.try_write(&line) {
+            log::debug!("client {}: write failed ({e}); reconnecting", self.addr);
+            self.drop_conn();
+            self.ensure_connected()?;
+            self.try_write(&line)?;
+        }
+        self.sent.insert(id, self.epoch);
+        Ok(id)
+    }
+
+    /// Abandon an in-flight request: it will never be `recv`'d, and its
+    /// eventual reply (if any) is dropped on arrival instead of being
+    /// stashed forever. Fan-out callers that abort early (the shard
+    /// router, when one shard fails mid-fan) use this to keep the
+    /// pending/sent maps bounded.
+    pub fn forget(&mut self, id: u64) {
+        self.sent.remove(&id);
+        self.pending.remove(&id);
+    }
+
+    /// Read replies until `id`'s arrives (replies to other in-flight ids
+    /// are stashed for their own `recv`; replies to forgotten or unknown
+    /// ids are dropped). Errors if the id was never sent or was lost to a
+    /// reconnect.
+    pub fn recv(&mut self, id: u64) -> Result<Response, ClientError> {
+        if let Some(r) = self.pending.remove(&id) {
+            self.sent.remove(&id);
+            return r.map_err(ClientError::Server);
+        }
+        match self.sent.get(&id).copied() {
+            None => return Err(ClientError::Wire(format!("unknown request id {id}"))),
+            Some(epoch) if epoch != self.epoch || self.conn.is_none() => {
+                self.sent.remove(&id);
+                return Err(ClientError::Io(std::io::Error::new(
+                    std::io::ErrorKind::ConnectionReset,
+                    format!("request {id} was lost to a reconnect"),
+                )));
+            }
+            Some(_) => {}
+        }
+        loop {
+            let mut line = String::new();
+            let conn = self
+                .conn
+                .as_mut()
+                .ok_or_else(|| ClientError::Wire("not connected".to_string()))?;
+            match conn.reader.read_line(&mut line) {
+                Ok(0) => {
+                    self.drop_conn();
+                    self.sent.remove(&id);
+                    return Err(ClientError::Io(std::io::Error::new(
+                        std::io::ErrorKind::UnexpectedEof,
+                        "server closed the connection",
+                    )));
+                }
+                Ok(_) => {}
+                Err(e) => {
+                    self.drop_conn();
+                    self.sent.remove(&id);
+                    return Err(ClientError::Io(e));
+                }
+            }
+            let (rid, result) = match decode_reply(line.trim()) {
+                Ok(decoded) => decoded,
+                // The server rejects what it cannot parse far enough to
+                // know the envelope (oversized lines, invalid UTF-8) in
+                // the id-less legacy shape. It answers strictly in order,
+                // so such a reject belongs to the oldest id still
+                // outstanding on this connection.
+                Err(wire_err) => match legacy_reject(line.trim()) {
+                    Some(err) => {
+                        let oldest = self
+                            .sent
+                            .iter()
+                            .find(|&(_, &epoch)| epoch == self.epoch)
+                            .map(|(&rid, _)| rid);
+                        match oldest {
+                            Some(rid) => (rid, Err(err)),
+                            None => return Err(ClientError::Wire(wire_err)),
+                        }
+                    }
+                    None => return Err(ClientError::Wire(wire_err)),
+                },
+            };
+            let known = self.sent.remove(&rid).is_some();
+            if rid == id {
+                return result.map_err(ClientError::Server);
+            }
+            if known {
+                self.pending.insert(rid, result);
+            }
+            // else: a reply to a forgotten id — dropped.
+        }
+    }
+
+    /// One blocking round trip. If the connection dies mid-call and the
+    /// request is [idempotent](Request::is_idempotent), it is replayed
+    /// once on a fresh connection.
+    pub fn call(&mut self, req: &Request) -> Result<Response, ClientError> {
+        let id = self.send(req)?;
+        match self.recv(id) {
+            Err(ClientError::Io(e)) if req.is_idempotent() => {
+                log::debug!(
+                    "client {}: {} lost to {e}; replaying once",
+                    self.addr,
+                    req.type_name()
+                );
+                let id = self.send(req)?;
+                self.recv(id)
+            }
+            other => other,
+        }
+    }
+
+    fn unexpected(want: &str, got: &Response) -> ClientError {
+        ClientError::Wire(format!(
+            "expected {want} response, got {}",
+            got.type_name()
+        ))
+    }
+
+    // ---------- typed convenience wrappers ----------
+
+    pub fn ping(&mut self) -> Result<(), ClientError> {
+        match self.call(&Request::Ping)? {
+            Response::Pong => Ok(()),
+            other => Err(Self::unexpected("pong", &other)),
+        }
+    }
+
+    pub fn stats(&mut self) -> Result<StatsBody, ClientError> {
+        match self.call(&Request::Stats)? {
+            Response::Stats(s) => Ok(s),
+            other => Err(Self::unexpected("stats", &other)),
+        }
+    }
+
+    pub fn apps(&mut self) -> Result<Vec<String>, ClientError> {
+        match self.call(&Request::Apps)? {
+            Response::Apps(a) => Ok(a),
+            other => Err(Self::unexpected("apps", &other)),
+        }
+    }
+
+    pub fn shard_info(&mut self) -> Result<ShardInfoBody, ClientError> {
+        match self.call(&Request::ShardInfo)? {
+            Response::ShardInfo(s) => Ok(s),
+            other => Err(Self::unexpected("shard_info", &other)),
+        }
+    }
+
+    /// Exact k-NN over the server's database (or one config bucket).
+    pub fn knn(
+        &mut self,
+        series: &[f64],
+        k: usize,
+        config: Option<&JobConfig>,
+    ) -> Result<KnnBody, ClientError> {
+        let req = Request::Knn {
+            series: series.to_vec(),
+            k,
+            config: config.copied(),
+        };
+        match self.call(&req)? {
+            Response::Knn(b) => Ok(b),
+            other => Err(Self::unexpected("knn", &other)),
+        }
+    }
+
+    /// Batched k-NN: many queries in one request, one entry-major pass
+    /// server-side.
+    pub fn knn_batch(
+        &mut self,
+        queries: &[Vec<f64>],
+        k: usize,
+        config: Option<&JobConfig>,
+    ) -> Result<KnnBatchBody, ClientError> {
+        let req = Request::KnnBatch {
+            queries: queries.to_vec(),
+            k,
+            config: config.copied(),
+        };
+        match self.call(&req)? {
+            Response::KnnBatch(b) => Ok(b),
+            other => Err(Self::unexpected("knn_batch", &other)),
+        }
+    }
+
+    /// The paper's matching phase: similarity of a raw capture against
+    /// every reference of one configuration set.
+    pub fn match_series(
+        &mut self,
+        series: &[f64],
+        config: &JobConfig,
+    ) -> Result<MatchBody, ClientError> {
+        let req = Request::Match {
+            series: series.to_vec(),
+            config: *config,
+        };
+        match self.call(&req)? {
+            Response::Match(b) => Ok(b),
+            other => Err(Self::unexpected("match", &other)),
+        }
+    }
+
+    /// Open a live classification session (scoped to `config`, or the
+    /// whole database) with an optional known/maximum final length.
+    pub fn stream_open(
+        &mut self,
+        config: Option<&JobConfig>,
+        final_len: Option<usize>,
+    ) -> Result<StreamOpenBody, ClientError> {
+        self.stream_open_with(Request::StreamOpen {
+            config: config.copied(),
+            final_len,
+            max_len: None,
+            min_fraction: None,
+            margin: None,
+            min_samples: None,
+        })
+    }
+
+    /// [`MrtunerClient::stream_open`] with full policy control (pass a
+    /// [`Request::StreamOpen`]; any other variant is rejected).
+    pub fn stream_open_with(&mut self, req: Request) -> Result<StreamOpenBody, ClientError> {
+        if !matches!(req, Request::StreamOpen { .. }) {
+            return Err(ClientError::Wire("stream_open_with needs a StreamOpen request".into()));
+        }
+        match self.call(&req)? {
+            Response::StreamOpened(b) => Ok(b),
+            other => Err(Self::unexpected("stream_opened", &other)),
+        }
+    }
+
+    /// Feed raw CPU samples into a live session.
+    pub fn stream_feed(
+        &mut self,
+        session: u64,
+        samples: &[f64],
+    ) -> Result<StreamFeedBody, ClientError> {
+        let req = Request::StreamFeed {
+            session,
+            samples: samples.to_vec(),
+        };
+        match self.call(&req)? {
+            Response::StreamFed(b) => Ok(b),
+            other => Err(Self::unexpected("stream_fed", &other)),
+        }
+    }
+
+    /// A live session's anytime top-k.
+    pub fn stream_poll(&mut self, session: u64, k: usize) -> Result<StreamPollBody, ClientError> {
+        match self.call(&Request::StreamPoll { session, k })? {
+            Response::StreamTop(b) => Ok(b),
+            other => Err(Self::unexpected("stream_top", &other)),
+        }
+    }
+
+    /// Close a session: the exact final answer over the whole capture.
+    pub fn stream_close(&mut self, session: u64) -> Result<StreamCloseBody, ClientError> {
+        match self.call(&Request::StreamClose { session })? {
+            Response::StreamClosed(b) => Ok(b),
+            other => Err(Self::unexpected("stream_closed", &other)),
+        }
+    }
+}

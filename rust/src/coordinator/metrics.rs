@@ -2,8 +2,10 @@
 //! the perf benches.
 
 use crate::index::SearchStats;
+use crate::protocol::ErrorCode;
 use crate::streaming::StreamStats;
 use crate::util::stats::Welford;
+use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 use std::time::Instant;
@@ -40,6 +42,13 @@ pub struct Metrics {
     /// Wall-clock of each whole batch (not per query).
     knn_batch_latency: Mutex<Welford>,
     latency: Mutex<Welford>,
+    /// Protocol rejects by [`ErrorCode`] (indexed by `ErrorCode::index`):
+    /// malformed lines, unknown commands/sessions, wrong versions, ... —
+    /// the serve loop counts every structured error response here.
+    proto_errors: [AtomicU64; ErrorCode::ALL.len()],
+    /// Per-shard fan-out latency (send → merged reply) recorded by the
+    /// router, keyed by shard position.
+    shard_fanout: Mutex<BTreeMap<usize, Welford>>,
     /// Prefix fraction observed when a session declared its decision —
     /// the streaming classifier's headline "how early" number.
     decision_fraction: Mutex<Welford>,
@@ -154,6 +163,44 @@ impl Metrics {
         (s.count(), s.mean(), f.mean())
     }
 
+    /// Count one protocol reject under its error code.
+    pub fn inc_proto_error(&self, code: ErrorCode) {
+        self.proto_errors[code.index()].fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Rejects recorded under one code.
+    pub fn proto_error_count(&self, code: ErrorCode) -> u64 {
+        self.proto_errors[code.index()].load(Ordering::Relaxed)
+    }
+
+    /// Rejects across every code.
+    pub fn proto_errors_total(&self) -> u64 {
+        self.proto_errors
+            .iter()
+            .map(|c| c.load(Ordering::Relaxed))
+            .sum()
+    }
+
+    /// Record one shard's fan-out round trip (send → reply merged).
+    pub fn record_shard_fanout(&self, shard: usize, seconds: f64) {
+        self.shard_fanout
+            .lock()
+            .expect("shard fanout lock")
+            .entry(shard)
+            .or_default()
+            .push(seconds);
+    }
+
+    /// Snapshot: per shard `(shard, calls, mean_s, max_s)`, shard-ordered.
+    pub fn shard_fanout_summary(&self) -> Vec<(usize, u64, f64, f64)> {
+        self.shard_fanout
+            .lock()
+            .expect("shard fanout lock")
+            .iter()
+            .map(|(&s, w)| (s, w.count(), w.mean(), w.max()))
+            .collect()
+    }
+
     /// Record a request latency.
     pub fn observe_latency(&self, seconds: f64) {
         self.latency.lock().expect("latency lock").push(seconds);
@@ -178,8 +225,26 @@ impl Metrics {
         let (n, mean, std, min, max) = self.latency_summary();
         let (decisions, mean_at, mean_frac) = self.decision_summary();
         let (kb, kbq, kb_mean) = self.knn_batch_summary();
+        let mut proto = format!(" proto_errors: total={}", self.proto_errors_total());
+        for code in ErrorCode::ALL {
+            let n = self.proto_error_count(code);
+            if n > 0 {
+                proto.push_str(&format!(" {}={n}", code.as_str()));
+            }
+        }
+        let mut fanout = String::new();
+        for (s, n, mean, max) in self.shard_fanout_summary() {
+            fanout.push_str(&format!(
+                " shard{s}: n={n} mean={:.1}ms max={:.1}ms",
+                mean * 1e3,
+                max * 1e3
+            ));
+        }
+        if !fanout.is_empty() {
+            fanout.insert_str(0, " fanout:");
+        }
         format!(
-            "requests={} comparisons={} batches={} errors={} latency: n={} mean={:.1}ms sd={:.1}ms min={:.1}ms max={:.1}ms index: {} knn_batch: n={} queries={} mean={:.1}ms stream: opened={} closed={} reaped={} batches={} culled={} decisions={} mean_at={:.0} mean_frac={:.2}",
+            "requests={} comparisons={} batches={} errors={} latency: n={} mean={:.1}ms sd={:.1}ms min={:.1}ms max={:.1}ms index: {} knn_batch: n={} queries={} mean={:.1}ms stream: opened={} closed={} reaped={} batches={} culled={} decisions={} mean_at={:.0} mean_frac={:.2}{proto}{fanout}",
             self.requests.load(Ordering::Relaxed),
             self.comparisons.load(Ordering::Relaxed),
             self.batches.load(Ordering::Relaxed),
@@ -278,6 +343,42 @@ mod tests {
         assert!((mean - 0.020).abs() < 1e-9);
         let r = m.report();
         assert!(r.contains("knn_batch: n=2 queries=72"), "{r}");
+    }
+
+    #[test]
+    fn proto_error_counters_accumulate_per_code() {
+        let m = Metrics::new();
+        m.inc_proto_error(ErrorCode::BadRequest);
+        m.inc_proto_error(ErrorCode::BadRequest);
+        m.inc_proto_error(ErrorCode::UnknownSession);
+        assert_eq!(m.proto_error_count(ErrorCode::BadRequest), 2);
+        assert_eq!(m.proto_error_count(ErrorCode::UnknownSession), 1);
+        assert_eq!(m.proto_error_count(ErrorCode::WrongVersion), 0);
+        assert_eq!(m.proto_errors_total(), 3);
+        let r = m.report();
+        assert!(
+            r.contains("proto_errors: total=3 bad_request=2 unknown_session=1"),
+            "{r}"
+        );
+        assert!(!r.contains("wrong_version"), "zero codes stay silent: {r}");
+    }
+
+    #[test]
+    fn shard_fanout_latency_accumulates_per_shard() {
+        let m = Metrics::new();
+        m.record_shard_fanout(0, 0.010);
+        m.record_shard_fanout(0, 0.030);
+        m.record_shard_fanout(2, 0.005);
+        let summary = m.shard_fanout_summary();
+        assert_eq!(summary.len(), 2);
+        assert_eq!(summary[0].0, 0);
+        assert_eq!(summary[0].1, 2);
+        assert!((summary[0].2 - 0.020).abs() < 1e-9);
+        assert!((summary[0].3 - 0.030).abs() < 1e-9);
+        assert_eq!(summary[1].0, 2);
+        let r = m.report();
+        assert!(r.contains("fanout: shard0: n=2"), "{r}");
+        assert!(r.contains("shard2: n=1"), "{r}");
     }
 
     #[test]

@@ -6,6 +6,7 @@ pub mod batcher;
 pub mod matcher;
 pub mod metrics;
 pub mod profiler;
+pub mod router;
 pub mod server;
 pub mod tuner;
 

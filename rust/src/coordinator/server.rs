@@ -1,9 +1,22 @@
 //! Match-as-a-service: a line-delimited JSON protocol over TCP.
 //!
-//! Requests (one JSON object per line):
+//! The wire surface is defined by [`crate::protocol`] (see `PROTOCOL.md`
+//! at the repository root): every line is decoded into one typed
+//! [`Request`], dispatched by [`dispatch`] into a typed [`Response`] or a
+//! typed [`ServerError`], and rendered back in the envelope the line
+//! arrived in. Protocol v2 wraps commands as
+//! `{"v":2,"id":N,"type":"...",...}` with per-request ids (pipelining
+//! safe); legacy v1 lines — any line without a `"v"` key — keep the
+//! pre-envelope `{"cmd": ...}` command set and are answered
+//! byte-compatibly (pinned by golden tests in
+//! `rust/tests/server_protocol.rs`).
+//!
+//! Requests (v1 spelling; v2 uses `"type"` instead of `"cmd"` plus the
+//! envelope keys):
 //!   {"cmd": "ping"}
 //!   {"cmd": "stats"}
 //!   {"cmd": "apps"}
+//!   {"cmd": "shard_info"}
 //!   {"cmd": "match", "series": [..], "config": {"mappers": M, "reducers": R,
 //!    "split_mb": FS, "input_mb": I}}
 //!   {"cmd": "knn", "series": [..], "k": K[, "config": {..}]}
@@ -33,6 +46,11 @@
 //! an [`IndexedDb`], so concurrent connections share one immutable
 //! envelope cache.
 //!
+//! The `shard_info` request reports what this server owns — entry count,
+//! applications, configuration-set labels, live session ids. It is the
+//! handshake [`crate::coordinator::router::ShardRouter`] uses to compose
+//! per-config shards into one logical database.
+//!
 //! The `stream_*` commands expose the online classifier
 //! (`crate::streaming`): `stream_open` registers a live session (scoped to
 //! one configuration set, or the whole database), `stream_feed` ingests
@@ -40,18 +58,31 @@
 //! early decision the moment the session's exit policy declares one),
 //! `stream_poll` returns the current top-k without feeding, and
 //! `stream_close` finalizes with the exact indexed search over the full
-//! capture. Because live streams hold their connection open for the whole
-//! job, the read loop tolerates idle timeouts instead of dropping the
-//! peer: each timeout tick re-checks the server stop flag (so shutdown is
-//! never wedged by a blocked read) and sweeps sessions abandoned by dead
-//! clients.
+//! capture. Sessions are addressed by id, not by connection: they survive
+//! reconnects, so a feeder may open on one TCP connection and feed, poll
+//! or close from another. Because live streams hold their connection open
+//! for the whole job, the read loop tolerates idle timeouts instead of
+//! dropping the peer: each timeout tick re-checks the server stop flag (so
+//! shutdown is never wedged by a blocked read) and sweeps sessions
+//! abandoned by dead clients.
+//!
+//! Hardening: every malformed line — unparseable JSON, nesting past the
+//! parser's depth bound, invalid UTF-8, unknown commands, missing fields,
+//! oversized lines or batches — is answered with a structured error
+//! response and the connection stays up; rejects are counted per
+//! [`ErrorCode`] in [`Metrics`].
 
 use super::batcher::{prepare_query, similarities_auto};
 use super::metrics::Metrics;
 use crate::dtw::corr::MATCH_THRESHOLD;
 use crate::index::{IndexedDb, SearchStats};
+use crate::protocol::{
+    decode_line, encode_reply, DecisionBody, ErrorCode, FinalBody, KnnBatchBody, KnnBody,
+    MatchBody, MatchRow, NeighborRow, Request, Response, ServerError, SessionPollBody,
+    ShardInfoBody, StatsBody, StreamCloseBody, StreamFeedBody, StreamOpenBody, StreamPollBody,
+    TopRow, Wire,
+};
 use crate::runtime::RuntimeHandle;
-use crate::simulator::job::JobConfig;
 use crate::streaming::{
     DecisionPolicy, FinalLen, SessionManager, StreamDecision, StreamSession, TopEntry,
     MAX_STREAM_LEN,
@@ -81,6 +112,14 @@ pub const CONN_IDLE: Duration = Duration::from_secs(60);
 /// reaped (checked on every idle tick and on every `stream_open`, so
 /// abandoned sessions die even when no connection is idling).
 pub const SESSION_IDLE: Duration = Duration::from_secs(600);
+
+/// Largest accepted request line. A full-width `knn_batch` (256 queries of
+/// 512 samples) serializes to ~3 MB; anything past this bound is rejected
+/// with a structured `too_large` error. The bound is enforced *while
+/// framing* ([`read_line_bounded`]): a hostile newline-free stream never
+/// buffers more than this plus one `BufReader` block, it is discarded as
+/// it arrives.
+pub const MAX_LINE_BYTES: usize = 16 << 20;
 
 /// Shared server state.
 pub struct ServerState {
@@ -156,131 +195,304 @@ fn handle_connection(
     stop: &AtomicBool,
     read_timeout: Duration,
 ) -> Result<()> {
-    stream.set_read_timeout(Some(read_timeout))?;
     let peer = stream.peer_addr()?;
+    let result = serve_connection_lines(
+        stream,
+        &state.metrics,
+        stop,
+        read_timeout,
+        || reap_sessions(state),
+        |line| handle_line(line, state),
+    );
+    log::debug!("peer {peer} disconnected");
+    result
+}
+
+/// One read of the bounded line framer.
+enum LineRead {
+    /// A complete line is in the buffer (newline consumed, not included).
+    Line,
+    /// Peer closed; any unterminated trailing bytes are in the buffer.
+    Eof,
+    /// The line crossed [`MAX_LINE_BYTES`]. `complete` says whether its
+    /// newline has already been consumed; if not, the caller must discard
+    /// until the next newline before framing resumes.
+    Overflow { complete: bool },
+}
+
+/// Read one `\n`-terminated line into `buf`, never holding more than
+/// `max` bytes of it in memory — unlike `BufRead::read_line`, which
+/// buffers the whole line before any length check can run, this caps a
+/// hostile newline-free stream at `max` + one `BufReader` block. Partial
+/// bytes accumulate in `buf` across timeout ticks (the error is returned
+/// to the caller's idle handling).
+fn read_line_bounded(
+    reader: &mut BufReader<TcpStream>,
+    buf: &mut Vec<u8>,
+    max: usize,
+) -> std::io::Result<LineRead> {
+    loop {
+        let available = reader.fill_buf()?;
+        if available.is_empty() {
+            return Ok(LineRead::Eof);
+        }
+        match available.iter().position(|&b| b == b'\n') {
+            Some(pos) => {
+                if buf.len() + pos > max {
+                    buf.clear();
+                    reader.consume(pos + 1);
+                    return Ok(LineRead::Overflow { complete: true });
+                }
+                buf.extend_from_slice(&available[..pos]);
+                reader.consume(pos + 1);
+                return Ok(LineRead::Line);
+            }
+            None => {
+                let n = available.len();
+                if buf.len() + n > max {
+                    buf.clear();
+                    reader.consume(n);
+                    return Ok(LineRead::Overflow { complete: false });
+                }
+                buf.extend_from_slice(available);
+                reader.consume(n);
+            }
+        }
+    }
+}
+
+/// Drop bytes until (and including) the next newline: the tail of an
+/// oversized line. `Ok(true)` means the newline was found, `Ok(false)`
+/// EOF; timeout errors surface to the caller's idle handling.
+fn discard_to_newline(reader: &mut BufReader<TcpStream>) -> std::io::Result<bool> {
+    loop {
+        let available = reader.fill_buf()?;
+        if available.is_empty() {
+            return Ok(false);
+        }
+        match available.iter().position(|&b| b == b'\n') {
+            Some(pos) => {
+                reader.consume(pos + 1);
+                return Ok(true);
+            }
+            None => {
+                let n = available.len();
+                reader.consume(n);
+            }
+        }
+    }
+}
+
+fn is_idle_error(e: &std::io::Error) -> bool {
+    matches!(
+        e.kind(),
+        std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+    )
+}
+
+/// Drive one connection's read loop: memory-bounded line framing, idle
+/// ticks that tolerate read timeouts (re-checking the stop flag so
+/// shutdown can never be wedged by a blocked read; connections idle past
+/// [`CONN_IDLE`] are dropped so dead clients cannot pin pool workers),
+/// and structured rejects for invalid UTF-8 and oversized lines — a
+/// garbage line never costs the peer its connection. `on_idle` runs every
+/// timeout tick (the match server sweeps abandoned sessions there);
+/// `on_line` answers one trimmed request line. Shared by [`MatchServer`]
+/// and `router::RouterServer`, so their read-loop hardening cannot
+/// diverge.
+pub(crate) fn serve_connection_lines(
+    stream: TcpStream,
+    metrics: &Metrics,
+    stop: &AtomicBool,
+    read_timeout: Duration,
+    mut on_idle: impl FnMut(),
+    mut on_line: impl FnMut(&str) -> Json,
+) -> Result<()> {
+    stream.set_read_timeout(Some(read_timeout))?;
     let mut writer = stream.try_clone()?;
     let mut reader = BufReader::new(stream);
-    let mut line = String::new();
+    let mut buf: Vec<u8> = Vec::new();
+    let mut discarding = false;
     let mut last_activity = std::time::Instant::now();
+    let reject = |writer: &mut TcpStream, err: ServerError| -> std::io::Result<()> {
+        metrics.inc_requests();
+        metrics.inc_errors();
+        metrics.inc_proto_error(err.code);
+        write_reply(writer, &encode_reply(&Wire::V1, &Err(err)))
+    };
     loop {
         if stop.load(Ordering::SeqCst) {
             break;
         }
-        match reader.read_line(&mut line) {
-            Ok(0) => break, // peer closed
-            Ok(_) => last_activity = std::time::Instant::now(),
-            Err(e)
-                if matches!(
-                    e.kind(),
-                    std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
-                ) =>
-            {
+        if discarding {
+            // Mid-discard of an oversized line (already answered).
+            match discard_to_newline(&mut reader) {
+                Ok(true) => {
+                    discarding = false;
+                    last_activity = std::time::Instant::now();
+                }
+                Ok(false) => break, // EOF
+                Err(e) if is_idle_error(&e) => {
+                    on_idle();
+                    if last_activity.elapsed() > CONN_IDLE {
+                        break;
+                    }
+                }
+                Err(e) => return Err(e.into()),
+            }
+            continue;
+        }
+        match read_line_bounded(&mut reader, &mut buf, MAX_LINE_BYTES) {
+            Ok(LineRead::Line) => {
+                last_activity = std::time::Instant::now();
+                let text: Option<String> =
+                    std::str::from_utf8(&buf).ok().map(|s| s.trim().to_string());
+                buf.clear();
+                match text {
+                    None => reject(
+                        &mut writer,
+                        ServerError::bad_request("request line is not valid utf-8"),
+                    )?,
+                    Some(t) if t.is_empty() => {}
+                    Some(t) => {
+                        metrics.inc_requests();
+                        let r = metrics.time(|| on_line(&t));
+                        write_reply(&mut writer, &r)?;
+                    }
+                }
+            }
+            Ok(LineRead::Overflow { complete }) => {
+                last_activity = std::time::Instant::now();
+                reject(
+                    &mut writer,
+                    ServerError::new(
+                        ErrorCode::TooLarge,
+                        format!("request line too large (max {MAX_LINE_BYTES} bytes)"),
+                    ),
+                )?;
+                discarding = !complete;
+            }
+            Ok(LineRead::Eof) => {
+                // A line is a request only once its newline arrives:
+                // unterminated trailing bytes are NEVER executed — that is
+                // what makes a client's rewrite-after-failed-write safe
+                // even for non-idempotent requests (a half-delivered line
+                // cannot have been applied). Answer a structured, counted
+                // reject (best-effort: the peer may be gone) so a
+                // half-closed sender still learns its tail was dropped.
+                if !buf.is_empty() {
+                    buf.clear();
+                    let _ = reject(
+                        &mut writer,
+                        ServerError::bad_request("request line is not terminated"),
+                    );
+                }
+                break;
+            }
+            Err(e) if is_idle_error(&e) => {
                 // Idle tick: keep the connection (a live stream may simply
-                // have nothing to feed yet), sweep abandoned sessions, and
-                // loop back to the stop-flag check so shutdown can never be
-                // wedged by a blocked read. Partially read bytes stay in
-                // `line` for the next pass. Connections idle past
-                // [`CONN_IDLE`] are dropped so idle clients cannot pin
-                // pool workers; their sessions live on until reaped.
-                reap_sessions(state);
+                // have nothing to feed yet); partial bytes stay in `buf`.
+                on_idle();
                 if last_activity.elapsed() > CONN_IDLE {
                     log::debug!("dropping connection idle for {:?}", last_activity.elapsed());
                     break;
                 }
-                continue;
             }
             Err(e) => return Err(e.into()),
         }
-        if line.trim().is_empty() {
-            line.clear();
-            continue;
-        }
-        state.metrics.inc_requests();
-        let response = state.metrics.time(|| match handle_request(line.trim(), state) {
-            Ok(v) => v,
-            Err(e) => {
-                state.metrics.inc_errors();
-                Json::obj(vec![
-                    ("ok", Json::Bool(false)),
-                    ("error", Json::Str(format!("{e:#}"))),
-                ])
-            }
-        });
-        line.clear();
-        writer.write_all(response.to_string().as_bytes())?;
-        writer.write_all(b"\n")?;
     }
-    log::debug!("peer {peer} disconnected");
     Ok(())
 }
 
-/// Dispatch one request line.
+fn write_reply(writer: &mut TcpStream, reply: &Json) -> std::io::Result<()> {
+    writer.write_all(reply.to_string().as_bytes())?;
+    writer.write_all(b"\n")
+}
+
+/// Decode, dispatch and render one request line. Never fails: malformed
+/// input becomes a structured error response (counted per [`ErrorCode`]
+/// in the metrics registry), rendered in the envelope the line arrived in.
+pub fn handle_line(line: &str, state: &ServerState) -> Json {
+    let (wire, decoded) = decode_line(line);
+    let result = decoded.and_then(|req| dispatch(&req, state));
+    if let Err(e) = &result {
+        state.metrics.inc_errors();
+        state.metrics.inc_proto_error(e.code);
+    }
+    encode_reply(&wire, &result)
+}
+
+/// Legacy entry point kept for benches/tests: dispatch one request line,
+/// reporting protocol errors as `Err` (the pre-envelope contract) instead
+/// of rendering them. Does not touch the error counters — errors are
+/// accounted where responses are written, in the read loop / `handle_line`.
 pub fn handle_request(line: &str, state: &ServerState) -> Result<Json> {
-    let req = Json::parse(line).map_err(|e| anyhow!("bad json: {e}"))?;
-    match req.get("cmd").and_then(Json::as_str) {
-        Some("ping") => Ok(Json::obj(vec![
-            ("ok", Json::Bool(true)),
-            ("pong", Json::Bool(true)),
-        ])),
-        Some("stats") => Ok(Json::obj(vec![
-            ("ok", Json::Bool(true)),
-            ("report", Json::Str(state.metrics.report())),
-            ("db_entries", Json::Num(state.db.len() as f64)),
-            ("live_sessions", Json::Num(state.sessions.len() as f64)),
-        ])),
-        Some("apps") => Ok(Json::obj(vec![
-            ("ok", Json::Bool(true)),
-            (
-                "apps",
-                Json::arr(
-                    state
-                        .db
-                        .apps()
-                        .iter()
-                        .map(|a| Json::Str(a.name().to_string()))
-                        .collect(),
-                ),
-            ),
-        ])),
-        Some("match") => handle_match(&req, state),
-        Some("knn") => handle_knn(&req, state),
-        Some("knn_batch") => handle_knn_batch(&req, state),
-        Some("stream_open") => handle_stream_open(&req, state),
-        Some("stream_feed") => handle_stream_feed(&req, state),
-        Some("stream_poll") => handle_stream_poll(&req, state),
-        Some("stream_poll_all") => handle_stream_poll_all(&req, state),
-        Some("stream_close") => handle_stream_close(&req, state),
-        _ => Err(anyhow!("unknown cmd")),
+    let (wire, decoded) = decode_line(line);
+    match decoded.and_then(|req| dispatch(&req, state)) {
+        Ok(resp) => Ok(encode_reply(&wire, &Ok(resp))),
+        Err(e) => Err(anyhow!("{}", e.message)),
     }
 }
 
-/// Parse the optional/required pieces shared by `match` and `knn`.
-fn parse_series(req: &Json) -> Result<Vec<f64>> {
-    let series = req
-        .get("series")
-        .and_then(Json::as_arr)
-        .ok_or_else(|| anyhow!("missing series"))?
+/// Dispatch one typed request against the server state. This is the single
+/// execution path behind both envelope flavors — and the reason they can
+/// never drift: v1 and v2 differ only in decode/render.
+pub fn dispatch(req: &Request, state: &ServerState) -> Result<Response, ServerError> {
+    match req {
+        Request::Ping => Ok(Response::Pong),
+        Request::Stats => Ok(Response::Stats(StatsBody {
+            report: state.metrics.report(),
+            db_entries: state.db.len(),
+            live_sessions: state.sessions.len(),
+        })),
+        Request::Apps => Ok(Response::Apps(app_names(state))),
+        Request::ShardInfo => Ok(Response::ShardInfo(ShardInfoBody {
+            entries: state.db.len(),
+            apps: app_names(state),
+            configs: state.db.config_labels(),
+            sessions: state.sessions.ids(),
+        })),
+        Request::Match { series, config } => handle_match(series, config, state),
+        Request::Knn { series, k, config } => handle_knn(series, *k, config.as_ref(), state),
+        Request::KnnBatch { queries, k, config } => {
+            handle_knn_batch(queries, *k, config.as_ref(), state)
+        }
+        Request::StreamOpen {
+            config,
+            final_len,
+            max_len,
+            min_fraction,
+            margin,
+            min_samples,
+        } => handle_stream_open(
+            config.as_ref(),
+            *final_len,
+            *max_len,
+            *min_fraction,
+            *margin,
+            *min_samples,
+            state,
+        ),
+        Request::StreamFeed { session, samples } => handle_stream_feed(*session, samples, state),
+        Request::StreamPoll { session, k } => handle_stream_poll(*session, *k, state),
+        Request::StreamPollAll { k } => handle_stream_poll_all(*k, state),
+        Request::StreamClose { session } => handle_stream_close(*session, state),
+    }
+}
+
+fn app_names(state: &ServerState) -> Vec<String> {
+    state
+        .db
+        .apps()
         .iter()
-        .filter_map(Json::as_f64)
-        .collect::<Vec<f64>>();
-    if series.len() < 4 {
-        return Err(anyhow!("series too short"));
-    }
-    Ok(series)
+        .map(|a| a.name().to_string())
+        .collect()
 }
 
-fn parse_config(v: &Json) -> Result<JobConfig> {
-    let num = |k: &str| -> Result<f64> {
-        v.get(k)
-            .and_then(Json::as_f64)
-            .ok_or_else(|| anyhow!("config missing {k}"))
-    };
-    Ok(JobConfig::new(
-        num("mappers")? as usize,
-        num("reducers")? as usize,
-        num("split_mb")?,
-        num("input_mb")?,
-    ))
+/// Session-registry misses become the typed `unknown_session` code (the
+/// message stays byte-compatible with the legacy error string).
+fn session_err(e: anyhow::Error) -> ServerError {
+    ServerError::new(ErrorCode::UnknownSession, format!("{e:#}"))
 }
 
 /// Sweep sessions abandoned by dead clients into the metrics counters.
@@ -292,234 +504,179 @@ fn reap_sessions(state: &ServerState) {
     }
 }
 
-fn parse_session_id(req: &Json) -> Result<u64> {
-    req.get("session")
-        .and_then(Json::as_usize)
-        .map(|id| id as u64)
-        .ok_or_else(|| anyhow!("missing session id"))
+fn decision_body(d: &StreamDecision) -> DecisionBody {
+    DecisionBody {
+        app: d.app.name().to_string(),
+        config: d.config.label(),
+        entry: d.entry,
+        distance: d.distance,
+        similarity: d.similarity,
+        at_sample: d.at_sample,
+        fraction: d.fraction,
+    }
 }
 
-fn decision_json(d: &StreamDecision) -> Json {
-    Json::obj(vec![
-        ("app", Json::Str(d.app.name().to_string())),
-        ("config", Json::Str(d.config.label())),
-        ("entry", Json::Num(d.entry as f64)),
-        ("distance", Json::Num(d.distance)),
-        ("similarity", Json::Num(d.similarity)),
-        ("at_sample", Json::Num(d.at_sample as f64)),
-        ("fraction", Json::Num(d.fraction)),
-    ])
+fn top_rows(top: &[TopEntry]) -> Vec<TopRow> {
+    top.iter()
+        .map(|t| TopRow {
+            entry: t.entry,
+            app: t.app.name().to_string(),
+            config: t.config.label(),
+            distance: t.distance,
+            lower_bound: t.lower_bound,
+        })
+        .collect()
 }
 
 /// Open a live classification session.
-fn handle_stream_open(req: &Json, state: &ServerState) -> Result<Json> {
+#[allow(clippy::too_many_arguments)]
+fn handle_stream_open(
+    config: Option<&crate::simulator::job::JobConfig>,
+    final_len: Option<usize>,
+    max_len: Option<usize>,
+    min_fraction: Option<f64>,
+    margin: Option<f64>,
+    min_samples: Option<usize>,
+    state: &ServerState,
+) -> Result<Response, ServerError> {
     // Every open sweeps stale sessions, so open-and-abandon clients cannot
     // grow the registry even when no connection ever sits idle.
     reap_sessions(state);
-    let config = match req.get("config") {
-        Some(c) => Some(parse_config(c)?),
-        None => None,
-    };
     // A Known hint beyond the incremental cap only wastes DP width and
     // disables the fraction gate; clamp it like max_len.
-    let final_len = match req.get("final_len").and_then(Json::as_usize) {
+    let final_len = match final_len {
         Some(n) if n > 0 => FinalLen::Known(n.min(MAX_STREAM_LEN)),
-        _ => FinalLen::AtMost(
-            req.get("max_len")
-                .and_then(Json::as_usize)
-                .unwrap_or(MAX_STREAM_LEN)
-                .clamp(1, MAX_STREAM_LEN),
-        ),
+        _ => FinalLen::AtMost(max_len.unwrap_or(MAX_STREAM_LEN).clamp(1, MAX_STREAM_LEN)),
     };
     let mut policy = DecisionPolicy::default();
-    if let Some(f) = req.get("min_fraction").and_then(Json::as_f64) {
+    if let Some(f) = min_fraction {
         policy.min_fraction = f.clamp(0.0, 2.0);
     }
-    if let Some(m) = req.get("margin").and_then(Json::as_f64) {
+    if let Some(m) = margin {
         policy.margin = m.max(1.0);
     }
-    if let Some(s) = req.get("min_samples").and_then(Json::as_usize) {
+    if let Some(s) = min_samples {
         policy.min_samples = s;
     }
-    let session = StreamSession::open(&state.db, config.as_ref(), final_len, policy);
+    let session = StreamSession::open(&state.db, config, final_len, policy);
     let candidates = session.candidates();
     let id = state.sessions.open(session);
     state.metrics.inc_stream_opened();
-    Ok(Json::obj(vec![
-        ("ok", Json::Bool(true)),
-        ("session", Json::Num(id as f64)),
-        ("candidates", Json::Num(candidates as f64)),
-    ]))
+    Ok(Response::StreamOpened(StreamOpenBody {
+        session: id,
+        candidates,
+    }))
 }
 
 /// Feed one batch of raw CPU samples into a live session.
-fn handle_stream_feed(req: &Json, state: &ServerState) -> Result<Json> {
-    let id = parse_session_id(req)?;
-    let samples: Vec<f64> = req
-        .get("samples")
-        .and_then(Json::as_arr)
-        .ok_or_else(|| anyhow!("missing samples"))?
-        .iter()
-        .filter_map(Json::as_f64)
-        .collect();
-    if samples.is_empty() {
-        return Err(anyhow!("empty samples"));
-    }
-    let (decided_now, decision, observed, live) = state.sessions.with(id, |s| {
-        let had = s.decision().is_some();
-        s.push(&state.db, &samples);
-        let d = s.decision().cloned();
-        (d.is_some() && !had, d, s.observed(), s.live_candidates())
-    })?;
+fn handle_stream_feed(
+    id: u64,
+    samples: &[f64],
+    state: &ServerState,
+) -> Result<Response, ServerError> {
+    let (decided_now, decision, observed, live) = state
+        .sessions
+        .with(id, |s| {
+            let had = s.decision().is_some();
+            s.push(&state.db, samples);
+            let d = s.decision().cloned();
+            (d.is_some() && !had, d, s.observed(), s.live_candidates())
+        })
+        .map_err(session_err)?;
     if decided_now {
         if let Some(d) = &decision {
             state.metrics.record_stream_decision(d.at_sample, d.fraction);
         }
     }
-    Ok(Json::obj(vec![
-        ("ok", Json::Bool(true)),
-        ("observed", Json::Num(observed as f64)),
-        ("live_candidates", Json::Num(live as f64)),
-        (
-            "decision",
-            decision.as_ref().map(decision_json).unwrap_or(Json::Null),
-        ),
-    ]))
-}
-
-/// Anytime top rows shared by `stream_poll` and `stream_poll_all`.
-fn top_json(top: &[TopEntry]) -> Json {
-    Json::arr(
-        top.iter()
-            .map(|t| {
-                Json::obj(vec![
-                    ("app", Json::Str(t.app.name().to_string())),
-                    ("config", Json::Str(t.config.label())),
-                    ("entry", Json::Num(t.entry as f64)),
-                    (
-                        "distance",
-                        t.distance.map(Json::Num).unwrap_or(Json::Null),
-                    ),
-                    ("lower_bound", Json::Num(t.lower_bound)),
-                ])
-            })
-            .collect(),
-    )
+    Ok(Response::StreamFed(StreamFeedBody {
+        observed,
+        live_candidates: live,
+        decision: decision.as_ref().map(decision_body),
+    }))
 }
 
 /// Report a live session's anytime top-k without feeding it.
-fn handle_stream_poll(req: &Json, state: &ServerState) -> Result<Json> {
-    let id = parse_session_id(req)?;
-    let k = req.get("k").and_then(Json::as_usize).unwrap_or(3).clamp(1, 20);
-    let (top, decision, observed, live, culled) = state.sessions.with(id, |s| {
-        (
-            s.top(&state.db, k),
-            s.decision().cloned(),
-            s.observed(),
-            s.live_candidates(),
-            s.stats().culled,
-        )
-    })?;
-    Ok(Json::obj(vec![
-        ("ok", Json::Bool(true)),
-        ("observed", Json::Num(observed as f64)),
-        ("live_candidates", Json::Num(live as f64)),
-        ("culled", Json::Num(culled as f64)),
-        ("top", top_json(&top)),
-        (
-            "decision",
-            decision.as_ref().map(decision_json).unwrap_or(Json::Null),
-        ),
-    ]))
+fn handle_stream_poll(id: u64, k: usize, state: &ServerState) -> Result<Response, ServerError> {
+    let (top, decision, observed, live, culled) = state
+        .sessions
+        .with(id, |s| {
+            (
+                s.top(&state.db, k),
+                s.decision().cloned(),
+                s.observed(),
+                s.live_candidates(),
+                s.stats().culled,
+            )
+        })
+        .map_err(session_err)?;
+    Ok(Response::StreamTop(StreamPollBody {
+        observed,
+        live_candidates: live,
+        culled,
+        top: top_rows(&top),
+        decision: decision.as_ref().map(decision_body),
+    }))
 }
 
 /// Snapshot every live session in one request — the fleet dashboard's
 /// poll, backed by `SessionManager::poll_all`.
-fn handle_stream_poll_all(req: &Json, state: &ServerState) -> Result<Json> {
-    let k = req.get("k").and_then(Json::as_usize).unwrap_or(3).clamp(1, 20);
+fn handle_stream_poll_all(k: usize, state: &ServerState) -> Result<Response, ServerError> {
     let polls = state.sessions.poll_all(&state.db, k);
     let rows = polls
         .iter()
-        .map(|p| {
-            Json::obj(vec![
-                ("session", Json::Num(p.id as f64)),
-                ("observed", Json::Num(p.observed as f64)),
-                ("live_candidates", Json::Num(p.live_candidates as f64)),
-                ("culled", Json::Num(p.culled as f64)),
-                ("top", top_json(&p.top)),
-                (
-                    "decision",
-                    p.decision.as_ref().map(decision_json).unwrap_or(Json::Null),
-                ),
-            ])
+        .map(|p| SessionPollBody {
+            session: p.id,
+            poll: StreamPollBody {
+                observed: p.observed,
+                live_candidates: p.live_candidates,
+                culled: p.culled,
+                top: top_rows(&p.top),
+                decision: p.decision.as_ref().map(decision_body),
+            },
         })
         .collect();
-    Ok(Json::obj(vec![
-        ("ok", Json::Bool(true)),
-        ("sessions", Json::arr(rows)),
-    ]))
+    Ok(Response::Sessions(rows))
 }
 
 /// Close a session: exact final search over the whole capture.
-fn handle_stream_close(req: &Json, state: &ServerState) -> Result<Json> {
-    let id = parse_session_id(req)?;
-    let session = state.sessions.close(id)?;
+fn handle_stream_close(id: u64, state: &ServerState) -> Result<Response, ServerError> {
+    let session = state.sessions.close(id).map_err(session_err)?;
     state.metrics.inc_stream_closed();
     state.metrics.record_stream_session(&session.stats());
     let (neighbors, stats) = session.finalize(&state.db, 1);
     state.metrics.record_search(&stats);
     let entries = state.db.entries();
-    let final_json = match neighbors.first() {
-        Some(nb) => {
-            let e = &entries[nb.index];
-            let q = prepare_query(session.raw());
-            let sim = crate::dtw::corr::similarity_percent_banded(&q, &e.series);
-            Json::obj(vec![
-                ("app", Json::Str(e.app.name().to_string())),
-                ("config", Json::Str(e.config_key())),
-                ("entry", Json::Num(nb.index as f64)),
-                ("distance", Json::Num(nb.distance)),
-                ("similarity", Json::Num(sim)),
-                ("matched", Json::Bool(sim >= MATCH_THRESHOLD)),
-            ])
+    let final_match = neighbors.first().map(|nb| {
+        let e = &entries[nb.index];
+        let q = prepare_query(session.raw());
+        let sim = crate::dtw::corr::similarity_percent_banded(&q, &e.series);
+        FinalBody {
+            app: e.app.name().to_string(),
+            config: e.config_key(),
+            entry: nb.index,
+            distance: nb.distance,
+            similarity: sim,
+            matched: sim >= MATCH_THRESHOLD,
         }
-        None => Json::Null,
-    };
-    Ok(Json::obj(vec![
-        ("ok", Json::Bool(true)),
-        ("observed", Json::Num(session.observed() as f64)),
-        ("final", final_json),
-        (
-            "decision",
-            session.decision().map(decision_json).unwrap_or(Json::Null),
-        ),
-    ]))
+    });
+    Ok(Response::StreamClosed(StreamCloseBody {
+        observed: session.observed(),
+        final_match,
+        decision: session.decision().map(decision_body),
+    }))
 }
 
-/// Pruning counters as a response object.
-fn stats_json(stats: &SearchStats) -> Json {
-    Json::obj(vec![
-        ("candidates", Json::Num(stats.candidates as f64)),
-        ("pruned_lb_kim", Json::Num(stats.pruned_lb_kim as f64)),
-        ("pruned_lb_paa", Json::Num(stats.pruned_lb_paa as f64)),
-        ("pruned_lb_keogh", Json::Num(stats.pruned_lb_keogh as f64)),
-        ("abandoned", Json::Num(stats.abandoned as f64)),
-        ("dtw_evals", Json::Num(stats.dtw_evals as f64)),
-    ])
-}
-
-/// One neighbour as a response row (with its correlation similarity).
-fn neighbor_json(state: &ServerState, q: &[f64], nb: &crate::index::Neighbor) -> Json {
+/// One neighbour as a typed response row (with its correlation similarity
+/// and its database position, which the shard router rebases).
+fn neighbor_row(state: &ServerState, q: &[f64], nb: &crate::index::Neighbor) -> NeighborRow {
     let e = &state.db.entries()[nb.index];
-    Json::obj(vec![
-        ("app", Json::Str(e.app.name().to_string())),
-        ("config", Json::Str(e.config_key())),
-        ("distance", Json::Num(nb.distance)),
-        (
-            "similarity",
-            Json::Num(crate::dtw::corr::similarity_percent_banded(q, &e.series)),
-        ),
-    ])
+    NeighborRow {
+        index: nb.index,
+        app: e.app.name().to_string(),
+        config: e.config_key(),
+        distance: nb.distance,
+        similarity: crate::dtw::corr::similarity_percent_banded(q, &e.series),
+    }
 }
 
 /// Whole-DB k-NN searches currently fanning out (process-wide). The
@@ -554,17 +711,17 @@ impl Drop for KnnFanout {
 /// candidate scan over the cores with a shared cutoff
 /// (`IndexedDb::knn_parallel`, result identical to the serial scan),
 /// splitting the core budget across concurrent requests; config-scoped
-/// buckets are small and stay serial.
-fn handle_knn(req: &Json, state: &ServerState) -> Result<Json> {
-    let series = parse_series(req)?;
-    let k = req
-        .get("k")
-        .and_then(Json::as_usize)
-        .unwrap_or(1)
-        .clamp(1, 100);
-    let q = prepare_query(&series);
-    let (neighbors, stats) = match req.get("config") {
-        Some(cfg) => state.db.knn_in_config(&q, &parse_config(cfg)?.label(), k),
+/// buckets are small and stay serial. `k = 0` (reachable through v2 only)
+/// answers cleanly with zero neighbours.
+fn handle_knn(
+    series: &[f64],
+    k: usize,
+    config: Option<&crate::simulator::job::JobConfig>,
+    state: &ServerState,
+) -> Result<Response, ServerError> {
+    let q = prepare_query(series);
+    let (neighbors, stats) = match config {
+        Some(cfg) => state.db.knn_in_config(&q, &cfg.label(), k),
         None => {
             let fanout = KnnFanout::enter();
             state.db.knn_parallel(&q, k, fanout.workers())
@@ -573,60 +730,28 @@ fn handle_knn(req: &Json, state: &ServerState) -> Result<Json> {
     state.metrics.record_search(&stats);
     state.metrics.inc_comparisons(stats.dtw_evals);
 
-    let results = neighbors.iter().map(|nb| neighbor_json(state, &q, nb)).collect();
-    Ok(Json::obj(vec![
-        ("ok", Json::Bool(true)),
-        ("neighbors", Json::arr(results)),
-        ("stats", stats_json(&stats)),
-    ]))
+    let rows = neighbors.iter().map(|nb| neighbor_row(state, &q, nb)).collect();
+    Ok(Response::Knn(KnnBody {
+        neighbors: rows,
+        stats,
+    }))
 }
-
-/// Largest accepted `knn_batch` request — bounds per-request work the
-/// same way `k` is clamped.
-const MAX_KNN_BATCH: usize = 256;
 
 /// Batched k-NN: many queries answered in one entry-major pass that
 /// shares envelope work across same-length queries. Response carries one
 /// result row per query (input order) plus the merged pruning counters;
 /// the batch size and wall-clock land in the metrics registry.
-fn handle_knn_batch(req: &Json, state: &ServerState) -> Result<Json> {
-    let queries_json = req
-        .get("queries")
-        .and_then(Json::as_arr)
-        .ok_or_else(|| anyhow!("missing queries"))?;
-    if queries_json.is_empty() {
-        return Err(anyhow!("empty queries"));
-    }
-    if queries_json.len() > MAX_KNN_BATCH {
-        return Err(anyhow!(
-            "batch too large ({} queries, max {MAX_KNN_BATCH})",
-            queries_json.len()
-        ));
-    }
-    let k = req
-        .get("k")
-        .and_then(Json::as_usize)
-        .unwrap_or(1)
-        .clamp(1, 100);
-    let mut prepared: Vec<Vec<f64>> = Vec::with_capacity(queries_json.len());
-    for (qi, qj) in queries_json.iter().enumerate() {
-        let series: Vec<f64> = qj
-            .as_arr()
-            .ok_or_else(|| anyhow!("query {qi}: not an array"))?
-            .iter()
-            .filter_map(Json::as_f64)
-            .collect();
-        if series.len() < 4 {
-            return Err(anyhow!("query {qi}: series too short"));
-        }
-        prepared.push(prepare_query(&series));
-    }
+fn handle_knn_batch(
+    queries: &[Vec<f64>],
+    k: usize,
+    config: Option<&crate::simulator::job::JobConfig>,
+    state: &ServerState,
+) -> Result<Response, ServerError> {
+    let prepared: Vec<Vec<f64>> = queries.iter().map(|q| prepare_query(q)).collect();
     let qrefs: Vec<&[f64]> = prepared.iter().map(Vec::as_slice).collect();
     let t0 = std::time::Instant::now();
-    let results = match req.get("config") {
-        Some(cfg) => state
-            .db
-            .knn_batch_in_config(&qrefs, &parse_config(cfg)?.label(), k),
+    let results = match config {
+        Some(cfg) => state.db.knn_batch_in_config(&qrefs, &cfg.label(), k),
         None => state.db.knn_batch(&qrefs, k),
     };
     state
@@ -639,64 +764,58 @@ fn handle_knn_batch(req: &Json, state: &ServerState) -> Result<Json> {
         .zip(&prepared)
         .map(|((neighbors, stats), q)| {
             merged.merge(stats);
-            Json::obj(vec![
-                (
-                    "neighbors",
-                    Json::arr(neighbors.iter().map(|nb| neighbor_json(state, q, nb)).collect()),
-                ),
-                ("stats", stats_json(stats)),
-            ])
+            KnnBody {
+                neighbors: neighbors.iter().map(|nb| neighbor_row(state, q, nb)).collect(),
+                stats: *stats,
+            }
         })
         .collect();
     state.metrics.record_search(&merged);
     state.metrics.inc_comparisons(merged.dtw_evals);
-    Ok(Json::obj(vec![
-        ("ok", Json::Bool(true)),
-        ("results", Json::arr(rows)),
-        ("stats", stats_json(&merged)),
-    ]))
+    Ok(Response::KnnBatch(KnnBatchBody {
+        results: rows,
+        stats: merged,
+    }))
 }
 
-fn handle_match(req: &Json, state: &ServerState) -> Result<Json> {
-    let series = parse_series(req)?;
-    let config = parse_config(
-        req.get("config")
-            .ok_or_else(|| anyhow!("match: missing config"))?,
-    )?;
-
+fn handle_match(
+    series: &[f64],
+    config: &crate::simulator::job::JobConfig,
+    state: &ServerState,
+) -> Result<Response, ServerError> {
     let refs = state.db.by_config(&config.label());
     let ref_series: Vec<Vec<f64>> = refs.iter().map(|e| e.series.clone()).collect();
-    let sims = similarities_auto(state.runtime.as_ref(), &series, &ref_series);
+    let sims = similarities_auto(state.runtime.as_ref(), series, &ref_series);
     state.metrics.inc_comparisons(sims.len() as u64);
 
     let mut results = Vec::new();
     let mut best: Option<(&str, f64)> = None;
     for (e, s) in refs.iter().zip(&sims) {
-        results.push(Json::obj(vec![
-            ("app", Json::Str(e.app.name().to_string())),
-            ("similarity", Json::Num(*s)),
-        ]));
+        results.push(MatchRow {
+            app: e.app.name().to_string(),
+            similarity: *s,
+        });
         if best.map_or(true, |(_, bs)| *s > bs) {
             best = Some((e.app.name(), *s));
         }
     }
-    let (match_app, match_sim) = match best {
-        Some((a, s)) if s >= MATCH_THRESHOLD => (Json::Str(a.to_string()), Json::Num(s)),
-        Some((_, s)) => (Json::Null, Json::Num(s)),
-        None => (Json::Null, Json::Num(0.0)),
+    let (matched, best_similarity) = match best {
+        Some((a, s)) if s >= MATCH_THRESHOLD => (Some(a.to_string()), s),
+        Some((_, s)) => (None, s),
+        None => (None, 0.0),
     };
-    Ok(Json::obj(vec![
-        ("ok", Json::Bool(true)),
-        ("results", Json::arr(results)),
-        ("match", match_app),
-        ("best_similarity", match_sim),
-    ]))
+    Ok(Response::Match(MatchBody {
+        results,
+        matched,
+        best_similarity,
+    }))
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::database::profile::ProfileEntry;
+    use crate::simulator::job::JobConfig;
     use crate::workloads::AppId;
 
     fn raw_wave(freq: f64) -> Vec<f64> {
@@ -778,6 +897,133 @@ mod tests {
     }
 
     #[test]
+    fn handle_line_answers_structured_errors_and_counts_rejects() {
+        let state = state_with_db();
+        // v1 flavor: legacy error shape.
+        let resp = handle_line("not json", &state);
+        assert_eq!(resp.get("ok"), Some(&Json::Bool(false)));
+        assert!(resp.get("error").and_then(Json::as_str).unwrap().starts_with("bad json"));
+        assert_eq!(state.metrics.proto_error_count(ErrorCode::BadRequest), 1);
+
+        // v2 flavor: typed code + echoed id.
+        let resp = handle_line(r#"{"v":2,"id":41,"type":"stream_poll","session":99}"#, &state);
+        assert_eq!(resp.get("ok"), Some(&Json::Bool(false)));
+        assert_eq!(resp.get("id").and_then(Json::as_u64), Some(41));
+        assert_eq!(
+            resp.get("error").and_then(|e| e.get("code")).and_then(Json::as_str),
+            Some("unknown_session")
+        );
+        assert_eq!(state.metrics.proto_error_count(ErrorCode::UnknownSession), 1);
+
+        // Wrong version: typed code, never misparsed as v1.
+        let resp = handle_line(r#"{"v":1,"id":2,"type":"ping"}"#, &state);
+        assert_eq!(
+            resp.get("error").and_then(|e| e.get("code")).and_then(Json::as_str),
+            Some("wrong_version")
+        );
+        assert_eq!(state.metrics.proto_error_count(ErrorCode::WrongVersion), 1);
+        assert_eq!(state.metrics.errors.load(Ordering::Relaxed), 3);
+        assert_eq!(state.metrics.proto_errors_total(), 3);
+    }
+
+    #[test]
+    fn v2_envelope_roundtrip_through_dispatch() {
+        let state = state_with_db();
+        let series = raw_wave(0.2);
+        let req = Request::Knn {
+            series: series.clone(),
+            k: 2,
+            config: None,
+        };
+        let resp = handle_line(&req.to_v2(7).to_string(), &state);
+        assert_eq!(resp.get("v").and_then(Json::as_u64), Some(2));
+        assert_eq!(resp.get("id").and_then(Json::as_u64), Some(7));
+        assert_eq!(resp.get("ok"), Some(&Json::Bool(true)));
+        assert_eq!(resp.get("type").and_then(Json::as_str), Some("knn"));
+        let body = resp.get("body").unwrap();
+        let rows = body.get("neighbors").and_then(Json::as_arr).unwrap();
+        assert_eq!(rows.len(), 2);
+        // v2 rows carry the entry index (the router's merge key).
+        assert_eq!(rows[0].get("entry").and_then(Json::as_usize), Some(0));
+        assert_eq!(rows[0].get("app").and_then(Json::as_str), Some("wordcount"));
+    }
+
+    #[test]
+    fn v2_knn_k_zero_answers_empty_not_error() {
+        let state = state_with_db();
+        let series = raw_wave(0.2);
+        let req = Request::Knn {
+            series: series.clone(),
+            k: 0,
+            config: None,
+        };
+        let resp = handle_line(&req.to_v2(1).to_string(), &state);
+        assert_eq!(resp.get("ok"), Some(&Json::Bool(true)), "{resp}");
+        let body = resp.get("body").unwrap();
+        assert!(body.get("neighbors").and_then(Json::as_arr).unwrap().is_empty());
+
+        // Batched form: one empty row per query.
+        let req = Request::KnnBatch {
+            queries: vec![series.clone(), series],
+            k: 0,
+            config: None,
+        };
+        let resp = handle_line(&req.to_v2(2).to_string(), &state);
+        assert_eq!(resp.get("ok"), Some(&Json::Bool(true)), "{resp}");
+        let results = resp.get("body").unwrap().get("results").and_then(Json::as_arr).unwrap();
+        assert_eq!(results.len(), 2);
+        for r in results {
+            assert!(r.get("neighbors").and_then(Json::as_arr).unwrap().is_empty());
+        }
+    }
+
+    #[test]
+    fn knn_k_beyond_db_len_clamps_to_everything() {
+        let state = state_with_db();
+        let series = raw_wave(0.2);
+        for line in [
+            // v1 and v2 both: k far beyond the 2 stored entries.
+            format!(
+                r#"{{"cmd":"knn","series":{},"k":50}}"#,
+                Json::nums(&series)
+            ),
+            Request::Knn {
+                series: series.clone(),
+                k: 50,
+                config: None,
+            }
+            .to_v2(1)
+            .to_string(),
+        ] {
+            let resp = handle_line(&line, &state);
+            assert_eq!(resp.get("ok"), Some(&Json::Bool(true)), "{line}");
+            let rows = match resp.get("neighbors") {
+                Some(n) => n.as_arr().unwrap(),
+                None => resp
+                    .get("body")
+                    .unwrap()
+                    .get("neighbors")
+                    .and_then(Json::as_arr)
+                    .unwrap(),
+            };
+            assert_eq!(rows.len(), 2, "every entry, no phantom rows: {line}");
+        }
+    }
+
+    #[test]
+    fn shard_info_reports_ownership() {
+        let state = state_with_db();
+        let resp = handle_request(r#"{"cmd":"shard_info"}"#, &state).unwrap();
+        assert_eq!(resp.get("entries").and_then(Json::as_usize), Some(2));
+        let configs = resp.get("configs").and_then(Json::as_arr).unwrap();
+        assert_eq!(configs.len(), 1);
+        assert_eq!(configs[0].as_str(), Some("M=4,R=2,FS=10M,I=20M"));
+        let apps = resp.get("apps").and_then(Json::as_arr).unwrap();
+        assert_eq!(apps.len(), 2);
+        assert!(resp.get("sessions").and_then(Json::as_arr).unwrap().is_empty());
+    }
+
+    #[test]
     fn knn_request_returns_neighbors_and_stats() {
         let state = state_with_db();
         let series: Vec<f64> = raw_wave(0.2);
@@ -796,6 +1042,8 @@ mod tests {
             Some("wordcount")
         );
         assert_eq!(neighbors[0].get("distance").and_then(Json::as_f64), Some(0.0));
+        // v1 rows must not leak the v2-only entry index.
+        assert!(neighbors[0].get("entry").is_none());
         let stats = resp.get("stats").unwrap();
         assert_eq!(stats.get("candidates").and_then(Json::as_f64), Some(2.0));
         // The search was folded into the shared metrics registry.

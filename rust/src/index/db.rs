@@ -136,6 +136,12 @@ impl IndexedDb {
         self.by_config.get(label).map(Vec::as_slice).unwrap_or(&[])
     }
 
+    /// Every configuration-set label with at least one entry, sorted —
+    /// what a shard advertises through the `shard_info` command.
+    pub fn config_labels(&self) -> Vec<String> {
+        self.by_config.keys().cloned().collect()
+    }
+
     /// Exact top-`k` nearest entries (banded-DTW distance) over the whole
     /// database. `query` must already be preprocessed like stored series
     /// (see `coordinator::batcher::prepare_query`).

@@ -37,11 +37,21 @@
 //! envelope cache, and declares an anytime decision before the job
 //! finishes ([`coordinator::matcher::Matcher::match_stream`], the serve
 //! loop's `stream_*` commands, `benches/stream_perf.rs`).
+//!
+//! The service boundary is typed: [`protocol`] defines the full wire
+//! surface (versioned v2 envelope with per-request ids, `Request` /
+//! `Response` enums, `ErrorCode`s) with a byte-compatible v1 shim;
+//! [`client::MrtunerClient`] is the reconnecting, pipelining client; and
+//! [`coordinator::router::ShardRouter`] composes per-config shard servers
+//! into one logical database whose routed k-NN answers are bit-identical
+//! to a single node over the union (see `PROTOCOL.md`).
 
+pub mod client;
 pub mod coordinator;
 pub mod database;
 pub mod dtw;
 pub mod index;
+pub mod protocol;
 pub mod runtime;
 pub mod signal;
 pub mod simulator;
@@ -52,6 +62,8 @@ pub mod workloads;
 /// Convenient re-exports covering the public API surface used by the
 /// examples and the CLI.
 pub mod prelude {
+    pub use crate::client::MrtunerClient;
+    pub use crate::coordinator::router::{RouterServer, ShardRouter};
     pub use crate::coordinator::{
         matcher::{MatchOutcome, Matcher},
         profiler::Profiler,
@@ -61,6 +73,7 @@ pub mod prelude {
     pub use crate::database::{profile::ProfileEntry, store::ReferenceDb};
     pub use crate::dtw::{corr::similarity_percent, full::DtwResult};
     pub use crate::index::{IndexedDb, Neighbor, SearchStats};
+    pub use crate::protocol::{ErrorCode, Request, Response};
     pub use crate::simulator::job::JobConfig;
     pub use crate::streaming::{
         DecisionPolicy, FinalLen, SessionManager, StreamDecision, StreamSession,

@@ -6,15 +6,27 @@
 //! mrtuner tune    --app exim      --grid small  --db db.json
 //! mrtuner table1  [--seed N]                  # reproduce the paper's Table 1
 //! mrtuner serve   --db db.json --port 7070    # match-as-a-service
+//! mrtuner serve   --db db.json --port 7071 \
+//!         --shard-of "M=11,R=6,FS=20M,I=30M;M=21,R=30,FS=10M,I=80M"
+//!                                             # serve only those config sets
+//! mrtuner route   --shards 127.0.0.1:7071,127.0.0.1:7072 --port 7070
+//!                                             # route over shard servers
 //! mrtuner calibrate --app terasort            # re-measure cost model
 //! ```
+//!
+//! `--shard-of` takes `;`-separated configuration-set labels (labels
+//! contain commas); `route --shards` takes a comma-separated address
+//! list whose order defines the composed database's global index space.
 
+use mrtuner::coordinator::metrics::Metrics;
+use mrtuner::coordinator::router::{RouterServer, ShardRouter};
 use mrtuner::coordinator::server::{MatchServer, ServerState};
 use mrtuner::coordinator::{matcher::Matcher, ConfigGrid, SystemConfig, TuningSystem};
 use mrtuner::database::store::ReferenceDb;
 use mrtuner::util::cli::Args;
 use mrtuner::workloads::{workload_for, AppId};
 use std::path::PathBuf;
+use std::sync::Arc;
 
 fn grid_from(args: &Args) -> ConfigGrid {
     let seed = args.opt::<u64>("seed", 1);
@@ -133,16 +145,69 @@ fn main() -> anyhow::Result<()> {
             let mut sys = system(&args);
             let port = args.opt::<u16>("port", 7070);
             let runtime = sys.runtime();
+            let mut db = std::mem::take(&mut sys.db);
+            // Shard mode: keep only the entries of the owned config sets
+            // (`;`-separated labels — the labels themselves contain commas).
+            let shard_of = args.opt_str("shard-of", "");
+            if !shard_of.is_empty() {
+                let labels: std::collections::BTreeSet<String> = shard_of
+                    .split(';')
+                    .map(|s| s.trim().to_string())
+                    .filter(|s| !s.is_empty())
+                    .collect();
+                let total = db.len();
+                let mut shard = ReferenceDb::new();
+                for e in db.entries() {
+                    if labels.contains(&e.config_key()) {
+                        shard.insert(e.clone());
+                    }
+                }
+                println!(
+                    "shard owns {} of {total} entries across {} config sets",
+                    shard.len(),
+                    labels.len()
+                );
+                db = shard;
+            }
             // Wrap the store in the similarity index once at startup; every
             // connection then shares the immutable envelope cache.
             let state = ServerState {
-                db: mrtuner::index::IndexedDb::from_db(std::mem::take(&mut sys.db)),
+                db: mrtuner::index::IndexedDb::from_db(db),
                 runtime,
-                metrics: mrtuner::coordinator::metrics::Metrics::new(),
+                metrics: Metrics::new(),
                 sessions: mrtuner::streaming::SessionManager::new(),
             };
             let server = MatchServer::bind(&format!("127.0.0.1:{port}"), state)?;
             println!("serving on {}", server.local_addr()?);
+            server.serve(args.opt::<usize>("workers", 4))?;
+        }
+        Some("route") => {
+            let shards_arg = args.opt_str("shards", "");
+            let addrs: Vec<String> = shards_arg
+                .split(',')
+                .map(|s| s.trim().to_string())
+                .filter(|s| !s.is_empty())
+                .collect();
+            if addrs.is_empty() {
+                eprintln!("route: --shards host:port[,host:port...] is required");
+                std::process::exit(2);
+            }
+            let metrics = Arc::new(Metrics::new());
+            let router = match ShardRouter::connect(&addrs, metrics) {
+                Ok(r) => r,
+                Err(e) => {
+                    eprintln!("route: {e}");
+                    std::process::exit(1);
+                }
+            };
+            println!(
+                "routing over {} shards / {} entries",
+                router.shards().len(),
+                router.total_entries()
+            );
+            let port = args.opt::<u16>("port", 7070);
+            let server = RouterServer::bind(&format!("127.0.0.1:{port}"), router)?;
+            println!("routing on {}", server.local_addr()?);
             server.serve(args.opt::<usize>("workers", 4))?;
         }
         Some("calibrate") => {
@@ -158,9 +223,10 @@ fn main() -> anyhow::Result<()> {
         }
         _ => {
             println!(
-                "usage: mrtuner <profile|match|tune|table1|serve|calibrate> \
+                "usage: mrtuner <profile|match|tune|table1|serve|route|calibrate> \
                  [--app NAME] [--grid table1|grid50|small|N] [--db FILE] \
-                 [--seed N] [--workers N] [--port N] [--no-runtime] [--no-noise]"
+                 [--seed N] [--workers N] [--port N] [--no-runtime] [--no-noise] \
+                 [--shard-of \"LABEL;LABEL...\"] [--shards host:port,host:port]"
             );
         }
     }

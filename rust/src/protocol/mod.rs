@@ -1,0 +1,353 @@
+//! The wire surface as Rust types: protocol v2 envelope, typed
+//! requests/responses, and error codes.
+//!
+//! The service protocol is line-delimited JSON over TCP. Version 2 wraps
+//! every request in a small envelope:
+//!
+//! ```text
+//! {"v":2,"id":7,"type":"knn","series":[..],"k":3}
+//! ```
+//!
+//! and every response in a matching one:
+//!
+//! ```text
+//! {"body":{..},"id":7,"ok":true,"type":"knn","v":2}
+//! {"error":{"code":"bad_request","message":".."},"id":7,"ok":false,"v":2}
+//! ```
+//!
+//! * `v` pins the protocol version — a line carrying any other version is
+//!   answered with [`ErrorCode::WrongVersion`], never silently misparsed.
+//! * `id` is chosen by the client and echoed verbatim, which is what makes
+//!   pipelining safe: a client may write many requests before reading any
+//!   response and match replies by id ([`crate::client::MrtunerClient`]
+//!   does exactly this).
+//! * `type` selects the command; the remaining fields are the command's
+//!   parameters, flat beside the envelope keys.
+//!
+//! **v1 compatibility:** any line *without* a `"v"` key is decoded as the
+//! legacy `{"cmd": ...}` command set and answered in the legacy shapes
+//! (`{"ok":true,...}` / `{"error":"...","ok":false}`), byte-compatibly —
+//! pinned by the golden tests in `rust/tests/server_protocol.rs`. Both
+//! paths parse into the same [`Request`] enum and render from the same
+//! [`Response`] enum; only the envelope and the error rendering differ.
+//! See `PROTOCOL.md` at the repository root for the full surface.
+//!
+//! Everything here converts to/from [`crate::util::json::Json`] by hand —
+//! no serde — so the wire shapes are explicit and the round-trip property
+//! tests in [`request`] / [`response`] pin them.
+
+pub mod request;
+pub mod response;
+
+pub use request::Request;
+pub use response::{
+    DecisionBody, FinalBody, KnnBatchBody, KnnBody, MatchBody, MatchRow, NeighborRow, Response,
+    SessionPollBody, ShardInfoBody, StatsBody, StreamCloseBody, StreamFeedBody, StreamOpenBody,
+    StreamPollBody, TopRow,
+};
+
+use crate::util::json::Json;
+
+/// The protocol version this build speaks (and the only one it accepts in
+/// a `"v"` envelope; versionless lines take the v1 compatibility path).
+pub const PROTOCOL_VERSION: u64 = 2;
+
+/// Largest accepted `knn_batch` request — bounds per-request work the same
+/// way `k` is clamped.
+pub const MAX_KNN_BATCH: usize = 256;
+
+/// Upper clamp on `k` for `knn`/`knn_batch` requests.
+pub const MAX_K: usize = 100;
+
+/// Upper clamp on `k` for `stream_poll`/`stream_poll_all` requests.
+pub const MAX_POLL_K: usize = 20;
+
+/// Machine-readable error classes. The string forms are wire-stable: v2
+/// error responses carry them in `error.code`, and
+/// [`crate::coordinator::metrics::Metrics`] counts rejects per code.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ErrorCode {
+    /// Malformed JSON, missing/invalid fields, or an unroutable command.
+    BadRequest,
+    /// The `cmd`/`type` names no known command.
+    UnknownCommand,
+    /// A `stream_*` request named a session id that is not (or no longer)
+    /// registered.
+    UnknownSession,
+    /// The `"v"` envelope carried a version this server does not speak.
+    WrongVersion,
+    /// The request exceeded a size bound (batch width, line length).
+    TooLarge,
+    /// A shard behind the router could not be reached or answered
+    /// malformed data.
+    ShardUnavailable,
+    /// Unexpected server-side failure.
+    Internal,
+}
+
+impl ErrorCode {
+    /// Every code, in metrics-index order.
+    pub const ALL: [ErrorCode; 7] = [
+        ErrorCode::BadRequest,
+        ErrorCode::UnknownCommand,
+        ErrorCode::UnknownSession,
+        ErrorCode::WrongVersion,
+        ErrorCode::TooLarge,
+        ErrorCode::ShardUnavailable,
+        ErrorCode::Internal,
+    ];
+
+    /// Stable wire string.
+    pub fn as_str(self) -> &'static str {
+        match self {
+            ErrorCode::BadRequest => "bad_request",
+            ErrorCode::UnknownCommand => "unknown_command",
+            ErrorCode::UnknownSession => "unknown_session",
+            ErrorCode::WrongVersion => "wrong_version",
+            ErrorCode::TooLarge => "too_large",
+            ErrorCode::ShardUnavailable => "shard_unavailable",
+            ErrorCode::Internal => "internal",
+        }
+    }
+
+    /// Inverse of [`ErrorCode::as_str`].
+    pub fn parse(s: &str) -> Option<ErrorCode> {
+        ErrorCode::ALL.iter().copied().find(|c| c.as_str() == s)
+    }
+
+    /// Dense index (for per-code metric counters).
+    pub fn index(self) -> usize {
+        ErrorCode::ALL
+            .iter()
+            .position(|c| *c == self)
+            .expect("code in ALL")
+    }
+}
+
+impl std::fmt::Display for ErrorCode {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+/// A typed protocol error: machine-readable code + human message.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ServerError {
+    pub code: ErrorCode,
+    pub message: String,
+}
+
+impl ServerError {
+    pub fn new(code: ErrorCode, message: impl Into<String>) -> ServerError {
+        ServerError {
+            code,
+            message: message.into(),
+        }
+    }
+
+    /// The workhorse constructor: malformed/missing fields.
+    pub fn bad_request(message: impl Into<String>) -> ServerError {
+        ServerError::new(ErrorCode::BadRequest, message)
+    }
+}
+
+impl std::fmt::Display for ServerError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}: {}", self.code.as_str(), self.message)
+    }
+}
+
+impl std::error::Error for ServerError {}
+
+/// Which envelope a request line arrived in — decides how its reply is
+/// rendered.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Wire {
+    /// Legacy versionless `{"cmd": ...}` line.
+    V1,
+    /// Protocol v2 envelope; `id` is echoed into the reply.
+    V2 { id: u64 },
+}
+
+/// Decode one request line into its envelope flavor and (if well-formed)
+/// the typed [`Request`]. Never panics, whatever the bytes: parse failures
+/// come back as a [`ServerError`] paired with the envelope the reply must
+/// use. Both the match server and the shard router build their read loops
+/// on this.
+pub fn decode_line(line: &str) -> (Wire, Result<Request, ServerError>) {
+    let req = match Json::parse(line) {
+        Ok(r) => r,
+        Err(e) => {
+            // Without a parse we cannot know the envelope; legacy error
+            // rendering is the conservative answer (v1 clients predate
+            // envelopes, v2 clients tolerate it by construction).
+            return (Wire::V1, Err(ServerError::bad_request(format!("bad json: {e}"))));
+        }
+    };
+    match req.get("v") {
+        None => (Wire::V1, Request::from_v1(&req)),
+        Some(v) => {
+            let id = req.get("id").and_then(Json::as_u64).unwrap_or(0);
+            let wire = Wire::V2 { id };
+            if v.as_f64() != Some(PROTOCOL_VERSION as f64) {
+                let err = ServerError::new(
+                    ErrorCode::WrongVersion,
+                    format!("unsupported protocol version {v} (this server speaks v{PROTOCOL_VERSION})"),
+                );
+                (wire, Err(err))
+            } else if req.get("id").and_then(Json::as_u64).is_none() {
+                (wire, Err(ServerError::bad_request("missing request id")))
+            } else {
+                (wire, Request::from_v2(&req))
+            }
+        }
+    }
+}
+
+/// Render a dispatch outcome into the reply shape `wire` demands.
+pub fn encode_reply(wire: &Wire, result: &Result<Response, ServerError>) -> Json {
+    match (wire, result) {
+        (Wire::V1, Ok(resp)) => resp.to_v1(),
+        (Wire::V1, Err(e)) => Json::obj(vec![
+            ("ok", Json::Bool(false)),
+            ("error", Json::Str(e.message.clone())),
+        ]),
+        (Wire::V2 { id }, Ok(resp)) => Json::obj(vec![
+            ("v", Json::Num(PROTOCOL_VERSION as f64)),
+            ("id", Json::Num(*id as f64)),
+            ("ok", Json::Bool(true)),
+            ("type", Json::Str(resp.type_name().to_string())),
+            ("body", resp.to_body_json()),
+        ]),
+        (Wire::V2 { id }, Err(e)) => Json::obj(vec![
+            ("v", Json::Num(PROTOCOL_VERSION as f64)),
+            ("id", Json::Num(*id as f64)),
+            ("ok", Json::Bool(false)),
+            (
+                "error",
+                Json::obj(vec![
+                    ("code", Json::Str(e.code.as_str().to_string())),
+                    ("message", Json::Str(e.message.clone())),
+                ]),
+            ),
+        ]),
+    }
+}
+
+/// Decode one v2 response line (the client side of [`encode_reply`]):
+/// `(id, Ok(response) | Err(typed server error))`, or a description of why
+/// the line is not a valid v2 response at all.
+pub fn decode_reply(line: &str) -> Result<(u64, Result<Response, ServerError>), String> {
+    let v = Json::parse(line).map_err(|e| format!("bad response json: {e}"))?;
+    if v.get("v").and_then(Json::as_u64) != Some(PROTOCOL_VERSION) {
+        return Err(format!("response is not protocol v{PROTOCOL_VERSION}: {line}"));
+    }
+    let id = v
+        .get("id")
+        .and_then(Json::as_u64)
+        .ok_or_else(|| "response missing id".to_string())?;
+    match v.get("ok").and_then(Json::as_bool) {
+        Some(true) => {
+            let t = v
+                .get("type")
+                .and_then(Json::as_str)
+                .ok_or_else(|| "response missing type".to_string())?;
+            let body = v
+                .get("body")
+                .ok_or_else(|| "response missing body".to_string())?;
+            let resp = Response::from_body(t, body).map_err(|e| format!("bad {t} body: {e}"))?;
+            Ok((id, Ok(resp)))
+        }
+        Some(false) => {
+            let eobj = v
+                .get("error")
+                .ok_or_else(|| "error response missing error object".to_string())?;
+            let code = eobj
+                .get("code")
+                .and_then(Json::as_str)
+                .and_then(ErrorCode::parse)
+                .unwrap_or(ErrorCode::Internal);
+            let msg = eobj
+                .get("message")
+                .and_then(Json::as_str)
+                .unwrap_or("")
+                .to_string();
+            Ok((id, Err(ServerError::new(code, msg))))
+        }
+        None => Err("response missing ok".to_string()),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn error_codes_roundtrip_their_wire_strings() {
+        for code in ErrorCode::ALL {
+            assert_eq!(ErrorCode::parse(code.as_str()), Some(code));
+            assert_eq!(ErrorCode::ALL[code.index()], code);
+        }
+        assert_eq!(ErrorCode::parse("nope"), None);
+    }
+
+    #[test]
+    fn decode_line_classifies_envelopes() {
+        let (wire, req) = decode_line(r#"{"cmd":"ping"}"#);
+        assert_eq!(wire, Wire::V1);
+        assert_eq!(req.unwrap(), Request::Ping);
+
+        let (wire, req) = decode_line(r#"{"v":2,"id":9,"type":"ping"}"#);
+        assert_eq!(wire, Wire::V2 { id: 9 });
+        assert_eq!(req.unwrap(), Request::Ping);
+
+        let (wire, req) = decode_line(r#"{"v":3,"id":1,"type":"ping"}"#);
+        assert_eq!(wire, Wire::V2 { id: 1 });
+        assert_eq!(req.unwrap_err().code, ErrorCode::WrongVersion);
+
+        let (wire, req) = decode_line(r#"{"v":2,"type":"ping"}"#);
+        assert_eq!(wire, Wire::V2 { id: 0 });
+        assert_eq!(req.unwrap_err().code, ErrorCode::BadRequest);
+
+        let (wire, req) = decode_line("not json at all");
+        assert_eq!(wire, Wire::V1);
+        assert_eq!(req.unwrap_err().code, ErrorCode::BadRequest);
+    }
+
+    #[test]
+    fn v1_error_rendering_is_legacy_shaped() {
+        let err = ServerError::bad_request("missing series");
+        let line = encode_reply(&Wire::V1, &Err(err)).to_string();
+        assert_eq!(line, r#"{"error":"missing series","ok":false}"#);
+    }
+
+    #[test]
+    fn v2_error_rendering_carries_code_and_id() {
+        let err = ServerError::new(ErrorCode::UnknownSession, "unknown session 5");
+        let v = encode_reply(&Wire::V2 { id: 12 }, &Err(err));
+        assert_eq!(v.get("v").and_then(Json::as_u64), Some(2));
+        assert_eq!(v.get("id").and_then(Json::as_u64), Some(12));
+        assert_eq!(v.get("ok"), Some(&Json::Bool(false)));
+        let e = v.get("error").unwrap();
+        assert_eq!(e.get("code").and_then(Json::as_str), Some("unknown_session"));
+        assert_eq!(e.get("message").and_then(Json::as_str), Some("unknown session 5"));
+    }
+
+    #[test]
+    fn reply_roundtrip_ok_and_err() {
+        let resp = Response::Pong;
+        let line = encode_reply(&Wire::V2 { id: 4 }, &Ok(resp.clone())).to_string();
+        let (id, back) = decode_reply(&line).unwrap();
+        assert_eq!(id, 4);
+        assert_eq!(back.unwrap(), resp);
+
+        let err = ServerError::new(ErrorCode::TooLarge, "batch too large");
+        let line = encode_reply(&Wire::V2 { id: 5 }, &Err(err.clone())).to_string();
+        let (id, back) = decode_reply(&line).unwrap();
+        assert_eq!(id, 5);
+        assert_eq!(back.unwrap_err(), err);
+
+        assert!(decode_reply("garbage").is_err());
+        assert!(decode_reply(r#"{"ok":true}"#).is_err(), "missing v");
+    }
+}

@@ -1,0 +1,526 @@
+//! Typed requests: every wire command as one enum, with hand-rolled
+//! conversions from both envelope flavors and a serializer for v2 client
+//! lines. Field validation (and its error messages) lives here so the v1
+//! shim and the v2 path can never drift apart.
+
+use super::{ErrorCode, ServerError, MAX_K, MAX_KNN_BATCH, MAX_POLL_K, PROTOCOL_VERSION};
+use crate::simulator::job::JobConfig;
+use crate::util::json::Json;
+
+/// One parsed request, whatever envelope it arrived in.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Request {
+    Ping,
+    Stats,
+    Apps,
+    /// What this server owns: entry count, apps, config labels, live
+    /// session ids. The shard router's handshake.
+    ShardInfo,
+    /// Preprocess a raw capture and score it against every reference of
+    /// one configuration set (the paper's matching phase).
+    Match { series: Vec<f64>, config: JobConfig },
+    /// Index-backed exact k-NN (whole database, or one config bucket).
+    Knn {
+        series: Vec<f64>,
+        k: usize,
+        config: Option<JobConfig>,
+    },
+    /// Many k-NN queries answered in one entry-major pass.
+    KnnBatch {
+        queries: Vec<Vec<f64>>,
+        k: usize,
+        config: Option<JobConfig>,
+    },
+    /// Open a live classification session. Options are kept raw here; the
+    /// server applies the same clamping rules to both envelope flavors.
+    StreamOpen {
+        config: Option<JobConfig>,
+        final_len: Option<usize>,
+        max_len: Option<usize>,
+        min_fraction: Option<f64>,
+        margin: Option<f64>,
+        min_samples: Option<usize>,
+    },
+    /// Feed one batch of raw CPU samples into a live session.
+    StreamFeed { session: u64, samples: Vec<f64> },
+    /// A live session's anytime top-k without feeding it.
+    StreamPoll { session: u64, k: usize },
+    /// Snapshot every live session in one request.
+    StreamPollAll { k: usize },
+    /// Close a session: exact final search over the whole capture.
+    StreamClose { session: u64 },
+}
+
+fn parse_series_field(req: &Json) -> Result<Vec<f64>, ServerError> {
+    let series = req
+        .get("series")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| ServerError::bad_request("missing series"))?
+        .iter()
+        .filter_map(Json::as_f64)
+        .collect::<Vec<f64>>();
+    if series.len() < 4 {
+        return Err(ServerError::bad_request("series too short"));
+    }
+    Ok(series)
+}
+
+/// Parse a `{"mappers":..,"reducers":..,"split_mb":..,"input_mb":..}`
+/// object (shared by every command that scopes to a configuration set).
+pub fn parse_config(v: &Json) -> Result<JobConfig, ServerError> {
+    let num = |k: &str| -> Result<f64, ServerError> {
+        v.get(k)
+            .and_then(Json::as_f64)
+            .ok_or_else(|| ServerError::bad_request(format!("config missing {k}")))
+    };
+    Ok(JobConfig::new(
+        num("mappers")? as usize,
+        num("reducers")? as usize,
+        num("split_mb")?,
+        num("input_mb")?,
+    ))
+}
+
+/// Serialize a configuration set the way [`parse_config`] reads it.
+pub fn config_to_json(c: &JobConfig) -> Json {
+    Json::obj(vec![
+        ("mappers", Json::Num(c.mappers as f64)),
+        ("reducers", Json::Num(c.reducers as f64)),
+        ("split_mb", Json::Num(c.split_mb)),
+        ("input_mb", Json::Num(c.input_mb)),
+    ])
+}
+
+fn opt_config(req: &Json) -> Result<Option<JobConfig>, ServerError> {
+    match req.get("config") {
+        Some(c) => Ok(Some(parse_config(c)?)),
+        None => Ok(None),
+    }
+}
+
+fn parse_session_field(req: &Json) -> Result<u64, ServerError> {
+    req.get("session")
+        .and_then(Json::as_usize)
+        .map(|id| id as u64)
+        .ok_or_else(|| ServerError::bad_request("missing session id"))
+}
+
+fn parse_samples_field(req: &Json) -> Result<Vec<f64>, ServerError> {
+    let samples: Vec<f64> = req
+        .get("samples")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| ServerError::bad_request("missing samples"))?
+        .iter()
+        .filter_map(Json::as_f64)
+        .collect();
+    if samples.is_empty() {
+        return Err(ServerError::bad_request("empty samples"));
+    }
+    Ok(samples)
+}
+
+fn parse_queries_field(req: &Json) -> Result<Vec<Vec<f64>>, ServerError> {
+    let queries_json = req
+        .get("queries")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| ServerError::bad_request("missing queries"))?;
+    if queries_json.is_empty() {
+        return Err(ServerError::bad_request("empty queries"));
+    }
+    if queries_json.len() > MAX_KNN_BATCH {
+        return Err(ServerError::new(
+            ErrorCode::TooLarge,
+            format!(
+                "batch too large ({} queries, max {MAX_KNN_BATCH})",
+                queries_json.len()
+            ),
+        ));
+    }
+    let mut queries: Vec<Vec<f64>> = Vec::with_capacity(queries_json.len());
+    for (qi, qj) in queries_json.iter().enumerate() {
+        let series: Vec<f64> = qj
+            .as_arr()
+            .ok_or_else(|| ServerError::bad_request(format!("query {qi}: not an array")))?
+            .iter()
+            .filter_map(Json::as_f64)
+            .collect();
+        if series.len() < 4 {
+            return Err(ServerError::bad_request(format!("query {qi}: series too short")));
+        }
+        queries.push(series);
+    }
+    Ok(queries)
+}
+
+fn stream_open_fields(req: &Json) -> Result<Request, ServerError> {
+    Ok(Request::StreamOpen {
+        config: opt_config(req)?,
+        final_len: req.get("final_len").and_then(Json::as_usize),
+        max_len: req.get("max_len").and_then(Json::as_usize),
+        min_fraction: req.get("min_fraction").and_then(Json::as_f64),
+        margin: req.get("margin").and_then(Json::as_f64),
+        min_samples: req.get("min_samples").and_then(Json::as_usize),
+    })
+}
+
+impl Request {
+    /// Decode a legacy `{"cmd": ...}` command object. Defaults and clamps
+    /// mirror the pre-envelope server exactly (`k` is forced to at least
+    /// 1), so v1 lines keep answering byte-compatibly.
+    pub fn from_v1(req: &Json) -> Result<Request, ServerError> {
+        Request::from_tagged(req, "cmd", 1, "unknown cmd")
+    }
+
+    /// Decode the body of a v2 envelope (the caller has already checked
+    /// `v` and `id`). Unlike v1, `k = 0` is legal and means "answer with
+    /// nothing" — the edge case v1's lower clamp papered over.
+    pub fn from_v2(req: &Json) -> Result<Request, ServerError> {
+        Request::from_tagged(req, "type", 0, "unknown type")
+    }
+
+    /// The one decode body behind both envelope flavors: they differ only
+    /// in the tag key, the `k` floor, and the unknown-command message —
+    /// so command parsing can never drift between v1 and v2.
+    fn from_tagged(
+        req: &Json,
+        tag: &str,
+        k_floor: usize,
+        unknown: &'static str,
+    ) -> Result<Request, ServerError> {
+        let k_knn = || {
+            req.get("k")
+                .and_then(Json::as_usize)
+                .unwrap_or(1)
+                .clamp(k_floor, MAX_K)
+        };
+        let k_poll = || {
+            req.get("k")
+                .and_then(Json::as_usize)
+                .unwrap_or(3)
+                .clamp(k_floor, MAX_POLL_K)
+        };
+        match req.get(tag).and_then(Json::as_str) {
+            Some("ping") => Ok(Request::Ping),
+            Some("stats") => Ok(Request::Stats),
+            Some("apps") => Ok(Request::Apps),
+            Some("shard_info") => Ok(Request::ShardInfo),
+            Some("match") => {
+                let series = parse_series_field(req)?;
+                let config = parse_config(
+                    req.get("config")
+                        .ok_or_else(|| ServerError::bad_request("match: missing config"))?,
+                )?;
+                Ok(Request::Match { series, config })
+            }
+            Some("knn") => Ok(Request::Knn {
+                series: parse_series_field(req)?,
+                k: k_knn(),
+                config: opt_config(req)?,
+            }),
+            Some("knn_batch") => Ok(Request::KnnBatch {
+                queries: parse_queries_field(req)?,
+                k: k_knn(),
+                config: opt_config(req)?,
+            }),
+            Some("stream_open") => stream_open_fields(req),
+            Some("stream_feed") => Ok(Request::StreamFeed {
+                session: parse_session_field(req)?,
+                samples: parse_samples_field(req)?,
+            }),
+            Some("stream_poll") => Ok(Request::StreamPoll {
+                session: parse_session_field(req)?,
+                k: k_poll(),
+            }),
+            Some("stream_poll_all") => Ok(Request::StreamPollAll { k: k_poll() }),
+            Some("stream_close") => Ok(Request::StreamClose {
+                session: parse_session_field(req)?,
+            }),
+            _ => Err(ServerError::new(ErrorCode::UnknownCommand, unknown)),
+        }
+    }
+
+    /// The `type` tag this request serializes under.
+    pub fn type_name(&self) -> &'static str {
+        match self {
+            Request::Ping => "ping",
+            Request::Stats => "stats",
+            Request::Apps => "apps",
+            Request::ShardInfo => "shard_info",
+            Request::Match { .. } => "match",
+            Request::Knn { .. } => "knn",
+            Request::KnnBatch { .. } => "knn_batch",
+            Request::StreamOpen { .. } => "stream_open",
+            Request::StreamFeed { .. } => "stream_feed",
+            Request::StreamPoll { .. } => "stream_poll",
+            Request::StreamPollAll { .. } => "stream_poll_all",
+            Request::StreamClose { .. } => "stream_close",
+        }
+    }
+
+    /// True when replaying the request after a lost connection cannot
+    /// change server state — what lets the client retry transparently.
+    pub fn is_idempotent(&self) -> bool {
+        !matches!(
+            self,
+            Request::StreamOpen { .. } | Request::StreamFeed { .. } | Request::StreamClose { .. }
+        )
+    }
+
+    /// Serialize as one v2 request line (envelope + flat parameters).
+    pub fn to_v2(&self, id: u64) -> Json {
+        let mut pairs: Vec<(&str, Json)> = vec![
+            ("v", Json::Num(PROTOCOL_VERSION as f64)),
+            ("id", Json::Num(id as f64)),
+            ("type", Json::Str(self.type_name().to_string())),
+        ];
+        match self {
+            Request::Ping | Request::Stats | Request::Apps | Request::ShardInfo => {}
+            Request::Match { series, config } => {
+                pairs.push(("series", Json::nums(series)));
+                pairs.push(("config", config_to_json(config)));
+            }
+            Request::Knn { series, k, config } => {
+                pairs.push(("series", Json::nums(series)));
+                pairs.push(("k", Json::Num(*k as f64)));
+                if let Some(c) = config {
+                    pairs.push(("config", config_to_json(c)));
+                }
+            }
+            Request::KnnBatch { queries, k, config } => {
+                pairs.push((
+                    "queries",
+                    Json::arr(queries.iter().map(|q| Json::nums(q)).collect()),
+                ));
+                pairs.push(("k", Json::Num(*k as f64)));
+                if let Some(c) = config {
+                    pairs.push(("config", config_to_json(c)));
+                }
+            }
+            Request::StreamOpen {
+                config,
+                final_len,
+                max_len,
+                min_fraction,
+                margin,
+                min_samples,
+            } => {
+                if let Some(c) = config {
+                    pairs.push(("config", config_to_json(c)));
+                }
+                if let Some(n) = final_len {
+                    pairs.push(("final_len", Json::Num(*n as f64)));
+                }
+                if let Some(n) = max_len {
+                    pairs.push(("max_len", Json::Num(*n as f64)));
+                }
+                if let Some(f) = min_fraction {
+                    pairs.push(("min_fraction", Json::Num(*f)));
+                }
+                if let Some(m) = margin {
+                    pairs.push(("margin", Json::Num(*m)));
+                }
+                if let Some(s) = min_samples {
+                    pairs.push(("min_samples", Json::Num(*s as f64)));
+                }
+            }
+            Request::StreamFeed { session, samples } => {
+                pairs.push(("session", Json::Num(*session as f64)));
+                pairs.push(("samples", Json::nums(samples)));
+            }
+            Request::StreamPoll { session, k } => {
+                pairs.push(("session", Json::Num(*session as f64)));
+                pairs.push(("k", Json::Num(*k as f64)));
+            }
+            Request::StreamPollAll { k } => {
+                pairs.push(("k", Json::Num(*k as f64)));
+            }
+            Request::StreamClose { session } => {
+                pairs.push(("session", Json::Num(*session as f64)));
+            }
+        }
+        Json::obj(pairs)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Dyadic sample values so the JSON number round trip is bit-exact.
+    fn series(n: usize) -> Vec<f64> {
+        (0..n).map(|i| (i % 17) as f64 / 16.0).collect()
+    }
+
+    fn sample_requests() -> Vec<Request> {
+        let cfg = JobConfig::new(4, 2, 10.0, 20.0);
+        vec![
+            Request::Ping,
+            Request::Stats,
+            Request::Apps,
+            Request::ShardInfo,
+            Request::Match {
+                series: series(16),
+                config: cfg,
+            },
+            Request::Knn {
+                series: series(8),
+                k: 3,
+                config: None,
+            },
+            Request::Knn {
+                series: series(8),
+                k: 0,
+                config: Some(cfg),
+            },
+            Request::KnnBatch {
+                queries: vec![series(8), series(12)],
+                k: 5,
+                config: None,
+            },
+            Request::KnnBatch {
+                queries: vec![series(4)],
+                k: 1,
+                config: Some(cfg),
+            },
+            Request::StreamOpen {
+                config: Some(cfg),
+                final_len: Some(64),
+                max_len: None,
+                min_fraction: Some(0.25),
+                margin: Some(1.5),
+                min_samples: Some(24),
+            },
+            Request::StreamOpen {
+                config: None,
+                final_len: None,
+                max_len: Some(128),
+                min_fraction: None,
+                margin: None,
+                min_samples: None,
+            },
+            Request::StreamFeed {
+                session: 7,
+                samples: series(5),
+            },
+            Request::StreamPoll { session: 7, k: 2 },
+            Request::StreamPollAll { k: 4 },
+            Request::StreamClose { session: 7 },
+        ]
+    }
+
+    #[test]
+    fn v2_roundtrip_is_exact() {
+        for (i, req) in sample_requests().into_iter().enumerate() {
+            let line = req.to_v2(i as u64 + 1).to_string();
+            let parsed = Json::parse(&line).unwrap();
+            assert_eq!(parsed.get("v").and_then(Json::as_u64), Some(2), "case {i}");
+            assert_eq!(
+                parsed.get("id").and_then(Json::as_u64),
+                Some(i as u64 + 1),
+                "case {i}"
+            );
+            let back = Request::from_v2(&parsed).unwrap();
+            assert_eq!(back, req, "case {i}: {line}");
+        }
+    }
+
+    #[test]
+    fn v1_and_v2_parse_agree_on_shared_commands() {
+        let series_json = Json::nums(&series(8));
+        let v1 = Json::obj(vec![
+            ("cmd", Json::Str("knn".into())),
+            ("series", series_json.clone()),
+            ("k", Json::Num(3.0)),
+        ]);
+        let v2 = Json::obj(vec![
+            ("v", Json::Num(2.0)),
+            ("id", Json::Num(1.0)),
+            ("type", Json::Str("knn".into())),
+            ("series", series_json),
+            ("k", Json::Num(3.0)),
+        ]);
+        assert_eq!(Request::from_v1(&v1).unwrap(), Request::from_v2(&v2).unwrap());
+    }
+
+    #[test]
+    fn k_clamps_differ_between_envelopes_only_at_zero() {
+        let mk = |k: f64| {
+            Json::obj(vec![
+                ("cmd", Json::Str("knn".into())),
+                ("type", Json::Str("knn".into())),
+                ("series", Json::nums(&series(8))),
+                ("k", Json::Num(k)),
+            ])
+        };
+        // v1 forces k >= 1 (legacy behavior, byte-compat pinned).
+        match Request::from_v1(&mk(0.0)).unwrap() {
+            Request::Knn { k, .. } => assert_eq!(k, 1),
+            other => panic!("{other:?}"),
+        }
+        // v2 lets k = 0 through: the server answers with an empty result.
+        match Request::from_v2(&mk(0.0)).unwrap() {
+            Request::Knn { k, .. } => assert_eq!(k, 0),
+            other => panic!("{other:?}"),
+        }
+        // Both cap at MAX_K.
+        let parsers: [fn(&Json) -> Result<Request, ServerError>; 2] =
+            [Request::from_v1, Request::from_v2];
+        for parse in parsers {
+            match parse(&mk(1e6)).unwrap() {
+                Request::Knn { k, .. } => assert_eq!(k, MAX_K),
+                other => panic!("{other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn validation_errors_keep_legacy_messages() {
+        let cases = [
+            (r#"{"cmd":"match"}"#, "missing series"),
+            (r#"{"cmd":"knn","series":[1,2]}"#, "series too short"),
+            (r#"{"cmd":"knn_batch"}"#, "missing queries"),
+            (r#"{"cmd":"knn_batch","queries":[]}"#, "empty queries"),
+            (
+                r#"{"cmd":"knn_batch","queries":[[1,2]]}"#,
+                "query 0: series too short",
+            ),
+            (r#"{"cmd":"stream_feed","samples":[1]}"#, "missing session id"),
+            (
+                r#"{"cmd":"stream_feed","session":1,"samples":[]}"#,
+                "empty samples",
+            ),
+            (r#"{"cmd":"nope"}"#, "unknown cmd"),
+        ];
+        for (line, want) in cases {
+            let req = Json::parse(line).unwrap();
+            let err = Request::from_v1(&req).unwrap_err();
+            assert_eq!(err.message, want, "line={line}");
+        }
+    }
+
+    #[test]
+    fn oversized_batches_are_too_large() {
+        let q: Vec<Json> = (0..MAX_KNN_BATCH + 1)
+            .map(|_| Json::nums(&series(4)))
+            .collect();
+        let req = Json::obj(vec![
+            ("cmd", Json::Str("knn_batch".into())),
+            ("queries", Json::arr(q)),
+        ]);
+        let err = Request::from_v1(&req).unwrap_err();
+        assert_eq!(err.code, ErrorCode::TooLarge);
+        assert!(err.message.contains("batch too large"), "{}", err.message);
+    }
+
+    #[test]
+    fn idempotency_classification() {
+        assert!(Request::Ping.is_idempotent());
+        assert!(Request::StreamPoll { session: 1, k: 1 }.is_idempotent());
+        assert!(!Request::StreamFeed {
+            session: 1,
+            samples: vec![0.5]
+        }
+        .is_idempotent());
+        assert!(!Request::StreamClose { session: 1 }.is_idempotent());
+    }
+}

@@ -1,0 +1,901 @@
+//! Typed responses: every reply body as a plain struct, with the v2 body
+//! serialization, the byte-compatible legacy (v1) rendering, and the
+//! client-side decoder.
+//!
+//! The v1 renderings reproduce the pre-envelope server's output **exactly**
+//! (same keys, same values — object keys are `BTreeMap`-sorted either way),
+//! which is what the golden tests in `rust/tests/server_protocol.rs` pin.
+//! The v2 bodies carry strictly more information (k-NN rows gain the
+//! database `entry` index the shard router needs for its deterministic
+//! merge); v1 rendering simply drops the additions.
+
+use crate::index::SearchStats;
+use crate::util::json::Json;
+
+/// One k-NN result row. `index` is the entry's position in the answering
+/// database — the shard router rebases it by the shard's offset so routed
+/// results are comparable across shards.
+#[derive(Debug, Clone, PartialEq)]
+pub struct NeighborRow {
+    pub index: usize,
+    pub app: String,
+    pub config: String,
+    pub distance: f64,
+    pub similarity: f64,
+}
+
+/// One `knn` answer: rows plus the cascade's pruning counters.
+#[derive(Debug, Clone, PartialEq)]
+pub struct KnnBody {
+    pub neighbors: Vec<NeighborRow>,
+    pub stats: SearchStats,
+}
+
+/// One `knn_batch` answer: per-query results (input order) plus merged
+/// counters.
+#[derive(Debug, Clone, PartialEq)]
+pub struct KnnBatchBody {
+    pub results: Vec<KnnBody>,
+    pub stats: SearchStats,
+}
+
+/// One per-app similarity row of a `match` answer.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MatchRow {
+    pub app: String,
+    pub similarity: f64,
+}
+
+/// A `match` answer: all per-app similarities, the winner if it cleared
+/// the threshold, and the best similarity either way.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MatchBody {
+    pub results: Vec<MatchRow>,
+    pub matched: Option<String>,
+    pub best_similarity: f64,
+}
+
+/// A `stats` answer.
+#[derive(Debug, Clone, PartialEq)]
+pub struct StatsBody {
+    pub report: String,
+    pub db_entries: usize,
+    pub live_sessions: usize,
+}
+
+/// A `shard_info` answer: what this server owns.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ShardInfoBody {
+    pub entries: usize,
+    pub apps: Vec<String>,
+    pub configs: Vec<String>,
+    pub sessions: Vec<u64>,
+}
+
+/// An early decision, as reported over the wire.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DecisionBody {
+    pub app: String,
+    pub config: String,
+    pub entry: usize,
+    pub distance: f64,
+    pub similarity: f64,
+    pub at_sample: usize,
+    pub fraction: f64,
+}
+
+/// One anytime top-k row.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TopRow {
+    pub entry: usize,
+    pub app: String,
+    pub config: String,
+    pub distance: Option<f64>,
+    pub lower_bound: f64,
+}
+
+/// A `stream_open` answer.
+#[derive(Debug, Clone, PartialEq)]
+pub struct StreamOpenBody {
+    pub session: u64,
+    pub candidates: usize,
+}
+
+/// A `stream_feed` answer.
+#[derive(Debug, Clone, PartialEq)]
+pub struct StreamFeedBody {
+    pub observed: usize,
+    pub live_candidates: usize,
+    pub decision: Option<DecisionBody>,
+}
+
+/// A `stream_poll` answer.
+#[derive(Debug, Clone, PartialEq)]
+pub struct StreamPollBody {
+    pub observed: usize,
+    pub live_candidates: usize,
+    pub culled: u64,
+    pub top: Vec<TopRow>,
+    pub decision: Option<DecisionBody>,
+}
+
+/// One row of a `stream_poll_all` answer.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SessionPollBody {
+    pub session: u64,
+    pub poll: StreamPollBody,
+}
+
+/// The exact final answer of a closed session.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FinalBody {
+    pub app: String,
+    pub config: String,
+    pub entry: usize,
+    pub distance: f64,
+    pub similarity: f64,
+    pub matched: bool,
+}
+
+/// A `stream_close` answer.
+#[derive(Debug, Clone, PartialEq)]
+pub struct StreamCloseBody {
+    pub observed: usize,
+    pub final_match: Option<FinalBody>,
+    pub decision: Option<DecisionBody>,
+}
+
+/// One typed response, whatever envelope it will be rendered into.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Response {
+    Pong,
+    Stats(StatsBody),
+    Apps(Vec<String>),
+    ShardInfo(ShardInfoBody),
+    Match(MatchBody),
+    Knn(KnnBody),
+    KnnBatch(KnnBatchBody),
+    StreamOpened(StreamOpenBody),
+    StreamFed(StreamFeedBody),
+    StreamTop(StreamPollBody),
+    Sessions(Vec<SessionPollBody>),
+    StreamClosed(StreamCloseBody),
+}
+
+// ---------- field-level (de)serialization helpers ----------
+
+/// Pruning counters as a response object (same keys in v1 and v2).
+pub fn stats_to_json(stats: &SearchStats) -> Json {
+    Json::obj(vec![
+        ("candidates", Json::Num(stats.candidates as f64)),
+        ("pruned_lb_kim", Json::Num(stats.pruned_lb_kim as f64)),
+        ("pruned_lb_paa", Json::Num(stats.pruned_lb_paa as f64)),
+        ("pruned_lb_keogh", Json::Num(stats.pruned_lb_keogh as f64)),
+        ("abandoned", Json::Num(stats.abandoned as f64)),
+        ("dtw_evals", Json::Num(stats.dtw_evals as f64)),
+    ])
+}
+
+fn stats_from_json(v: &Json) -> Result<SearchStats, String> {
+    let num = |k: &str| -> Result<u64, String> {
+        v.get(k)
+            .and_then(Json::as_u64)
+            .ok_or_else(|| format!("stats missing {k}"))
+    };
+    Ok(SearchStats {
+        candidates: num("candidates")?,
+        pruned_lb_kim: num("pruned_lb_kim")?,
+        pruned_lb_paa: num("pruned_lb_paa")?,
+        pruned_lb_keogh: num("pruned_lb_keogh")?,
+        abandoned: num("abandoned")?,
+        dtw_evals: num("dtw_evals")?,
+    })
+}
+
+fn str_field(v: &Json, k: &str) -> Result<String, String> {
+    v.get(k)
+        .and_then(Json::as_str)
+        .map(str::to_string)
+        .ok_or_else(|| format!("missing {k}"))
+}
+
+fn f64_field(v: &Json, k: &str) -> Result<f64, String> {
+    v.get(k).and_then(Json::as_f64).ok_or_else(|| format!("missing {k}"))
+}
+
+fn usize_field(v: &Json, k: &str) -> Result<usize, String> {
+    v.get(k).and_then(Json::as_usize).ok_or_else(|| format!("missing {k}"))
+}
+
+fn neighbor_to_json(r: &NeighborRow, with_entry: bool) -> Json {
+    let mut pairs = vec![
+        ("app", Json::Str(r.app.clone())),
+        ("config", Json::Str(r.config.clone())),
+        ("distance", Json::Num(r.distance)),
+        ("similarity", Json::Num(r.similarity)),
+    ];
+    if with_entry {
+        pairs.push(("entry", Json::Num(r.index as f64)));
+    }
+    Json::obj(pairs)
+}
+
+fn neighbor_from_json(v: &Json) -> Result<NeighborRow, String> {
+    Ok(NeighborRow {
+        index: usize_field(v, "entry")?,
+        app: str_field(v, "app")?,
+        config: str_field(v, "config")?,
+        distance: f64_field(v, "distance")?,
+        similarity: f64_field(v, "similarity")?,
+    })
+}
+
+fn knn_to_json(b: &KnnBody, with_entry: bool) -> Json {
+    Json::obj(vec![
+        (
+            "neighbors",
+            Json::arr(b.neighbors.iter().map(|r| neighbor_to_json(r, with_entry)).collect()),
+        ),
+        ("stats", stats_to_json(&b.stats)),
+    ])
+}
+
+fn knn_from_json(v: &Json) -> Result<KnnBody, String> {
+    let rows = v
+        .get("neighbors")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| "missing neighbors".to_string())?
+        .iter()
+        .map(neighbor_from_json)
+        .collect::<Result<Vec<_>, _>>()?;
+    Ok(KnnBody {
+        neighbors: rows,
+        stats: stats_from_json(v.get("stats").ok_or_else(|| "missing stats".to_string())?)?,
+    })
+}
+
+fn decision_to_json(d: &DecisionBody) -> Json {
+    Json::obj(vec![
+        ("app", Json::Str(d.app.clone())),
+        ("config", Json::Str(d.config.clone())),
+        ("entry", Json::Num(d.entry as f64)),
+        ("distance", Json::Num(d.distance)),
+        ("similarity", Json::Num(d.similarity)),
+        ("at_sample", Json::Num(d.at_sample as f64)),
+        ("fraction", Json::Num(d.fraction)),
+    ])
+}
+
+fn decision_from_json(v: &Json) -> Result<DecisionBody, String> {
+    Ok(DecisionBody {
+        app: str_field(v, "app")?,
+        config: str_field(v, "config")?,
+        entry: usize_field(v, "entry")?,
+        distance: f64_field(v, "distance")?,
+        similarity: f64_field(v, "similarity")?,
+        at_sample: usize_field(v, "at_sample")?,
+        fraction: f64_field(v, "fraction")?,
+    })
+}
+
+fn opt_decision_json(d: &Option<DecisionBody>) -> Json {
+    d.as_ref().map(decision_to_json).unwrap_or(Json::Null)
+}
+
+fn opt_decision_from_json(v: Option<&Json>) -> Result<Option<DecisionBody>, String> {
+    match v {
+        None | Some(Json::Null) => Ok(None),
+        Some(d) => decision_from_json(d).map(Some),
+    }
+}
+
+fn top_to_json(top: &[TopRow]) -> Json {
+    Json::arr(
+        top.iter()
+            .map(|t| {
+                Json::obj(vec![
+                    ("app", Json::Str(t.app.clone())),
+                    ("config", Json::Str(t.config.clone())),
+                    ("entry", Json::Num(t.entry as f64)),
+                    ("distance", t.distance.map(Json::Num).unwrap_or(Json::Null)),
+                    ("lower_bound", Json::Num(t.lower_bound)),
+                ])
+            })
+            .collect(),
+    )
+}
+
+fn top_from_json(v: &Json) -> Result<Vec<TopRow>, String> {
+    v.as_arr()
+        .ok_or_else(|| "top is not an array".to_string())?
+        .iter()
+        .map(|t| {
+            Ok(TopRow {
+                entry: usize_field(t, "entry")?,
+                app: str_field(t, "app")?,
+                config: str_field(t, "config")?,
+                distance: match t.get("distance") {
+                    None | Some(Json::Null) => None,
+                    Some(d) => Some(d.as_f64().ok_or_else(|| "bad distance".to_string())?),
+                },
+                lower_bound: f64_field(t, "lower_bound")?,
+            })
+        })
+        .collect()
+}
+
+fn poll_pairs(p: &StreamPollBody) -> Vec<(&'static str, Json)> {
+    vec![
+        ("observed", Json::Num(p.observed as f64)),
+        ("live_candidates", Json::Num(p.live_candidates as f64)),
+        ("culled", Json::Num(p.culled as f64)),
+        ("top", top_to_json(&p.top)),
+        ("decision", opt_decision_json(&p.decision)),
+    ]
+}
+
+fn poll_from_json(v: &Json) -> Result<StreamPollBody, String> {
+    Ok(StreamPollBody {
+        observed: usize_field(v, "observed")?,
+        live_candidates: usize_field(v, "live_candidates")?,
+        culled: v.get("culled").and_then(Json::as_u64).ok_or_else(|| "missing culled".to_string())?,
+        top: top_from_json(v.get("top").ok_or_else(|| "missing top".to_string())?)?,
+        decision: opt_decision_from_json(v.get("decision"))?,
+    })
+}
+
+fn final_to_json(fb: &Option<FinalBody>) -> Json {
+    match fb {
+        Some(f) => Json::obj(vec![
+            ("app", Json::Str(f.app.clone())),
+            ("config", Json::Str(f.config.clone())),
+            ("entry", Json::Num(f.entry as f64)),
+            ("distance", Json::Num(f.distance)),
+            ("similarity", Json::Num(f.similarity)),
+            ("matched", Json::Bool(f.matched)),
+        ]),
+        None => Json::Null,
+    }
+}
+
+fn final_from_json(v: Option<&Json>) -> Result<Option<FinalBody>, String> {
+    match v {
+        None | Some(Json::Null) => Ok(None),
+        Some(f) => Ok(Some(FinalBody {
+            app: str_field(f, "app")?,
+            config: str_field(f, "config")?,
+            entry: usize_field(f, "entry")?,
+            distance: f64_field(f, "distance")?,
+            similarity: f64_field(f, "similarity")?,
+            matched: f.get("matched").and_then(Json::as_bool).ok_or_else(|| "missing matched".to_string())?,
+        })),
+    }
+}
+
+fn match_pairs(m: &MatchBody) -> Vec<(&'static str, Json)> {
+    vec![
+        (
+            "results",
+            Json::arr(
+                m.results
+                    .iter()
+                    .map(|r| {
+                        Json::obj(vec![
+                            ("app", Json::Str(r.app.clone())),
+                            ("similarity", Json::Num(r.similarity)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+        (
+            "match",
+            m.matched
+                .as_ref()
+                .map(|a| Json::Str(a.clone()))
+                .unwrap_or(Json::Null),
+        ),
+        ("best_similarity", Json::Num(m.best_similarity)),
+    ]
+}
+
+fn match_from_json(v: &Json) -> Result<MatchBody, String> {
+    let results = v
+        .get("results")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| "missing results".to_string())?
+        .iter()
+        .map(|r| {
+            Ok(MatchRow {
+                app: str_field(r, "app")?,
+                similarity: f64_field(r, "similarity")?,
+            })
+        })
+        .collect::<Result<Vec<_>, String>>()?;
+    let matched = match v.get("match") {
+        None | Some(Json::Null) => None,
+        Some(a) => Some(a.as_str().ok_or_else(|| "bad match".to_string())?.to_string()),
+    };
+    Ok(MatchBody {
+        results,
+        matched,
+        best_similarity: f64_field(v, "best_similarity")?,
+    })
+}
+
+fn shard_info_to_json(s: &ShardInfoBody) -> Json {
+    Json::obj(vec![
+        ("entries", Json::Num(s.entries as f64)),
+        (
+            "apps",
+            Json::arr(s.apps.iter().map(|a| Json::Str(a.clone())).collect()),
+        ),
+        (
+            "configs",
+            Json::arr(s.configs.iter().map(|c| Json::Str(c.clone())).collect()),
+        ),
+        (
+            "sessions",
+            Json::arr(s.sessions.iter().map(|&id| Json::Num(id as f64)).collect()),
+        ),
+    ])
+}
+
+fn shard_info_from_json(v: &Json) -> Result<ShardInfoBody, String> {
+    let strings = |k: &str| -> Result<Vec<String>, String> {
+        v.get(k)
+            .and_then(Json::as_arr)
+            .ok_or_else(|| format!("missing {k}"))?
+            .iter()
+            .map(|s| s.as_str().map(str::to_string).ok_or_else(|| format!("bad {k} entry")))
+            .collect()
+    };
+    Ok(ShardInfoBody {
+        entries: usize_field(v, "entries")?,
+        apps: strings("apps")?,
+        configs: strings("configs")?,
+        sessions: v
+            .get("sessions")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| "missing sessions".to_string())?
+            .iter()
+            .map(|s| s.as_u64().ok_or_else(|| "bad session id".to_string()))
+            .collect::<Result<Vec<_>, _>>()?,
+    })
+}
+
+// ---------- Response-level rendering ----------
+
+impl Response {
+    /// The `type` tag this response serializes under.
+    pub fn type_name(&self) -> &'static str {
+        match self {
+            Response::Pong => "pong",
+            Response::Stats(_) => "stats",
+            Response::Apps(_) => "apps",
+            Response::ShardInfo(_) => "shard_info",
+            Response::Match(_) => "match",
+            Response::Knn(_) => "knn",
+            Response::KnnBatch(_) => "knn_batch",
+            Response::StreamOpened(_) => "stream_opened",
+            Response::StreamFed(_) => "stream_fed",
+            Response::StreamTop(_) => "stream_top",
+            Response::Sessions(_) => "sessions",
+            Response::StreamClosed(_) => "stream_closed",
+        }
+    }
+
+    /// The v2 `body` object.
+    pub fn to_body_json(&self) -> Json {
+        match self {
+            Response::Pong => Json::obj(vec![("pong", Json::Bool(true))]),
+            Response::Stats(s) => Json::obj(vec![
+                ("report", Json::Str(s.report.clone())),
+                ("db_entries", Json::Num(s.db_entries as f64)),
+                ("live_sessions", Json::Num(s.live_sessions as f64)),
+            ]),
+            Response::Apps(apps) => Json::obj(vec![(
+                "apps",
+                Json::arr(apps.iter().map(|a| Json::Str(a.clone())).collect()),
+            )]),
+            Response::ShardInfo(s) => shard_info_to_json(s),
+            Response::Match(m) => Json::Obj(
+                match_pairs(m)
+                    .into_iter()
+                    .map(|(k, v)| (k.to_string(), v))
+                    .collect(),
+            ),
+            Response::Knn(b) => knn_to_json(b, true),
+            Response::KnnBatch(b) => Json::obj(vec![
+                (
+                    "results",
+                    Json::arr(b.results.iter().map(|r| knn_to_json(r, true)).collect()),
+                ),
+                ("stats", stats_to_json(&b.stats)),
+            ]),
+            Response::StreamOpened(o) => Json::obj(vec![
+                ("session", Json::Num(o.session as f64)),
+                ("candidates", Json::Num(o.candidates as f64)),
+            ]),
+            Response::StreamFed(f) => Json::obj(vec![
+                ("observed", Json::Num(f.observed as f64)),
+                ("live_candidates", Json::Num(f.live_candidates as f64)),
+                ("decision", opt_decision_json(&f.decision)),
+            ]),
+            Response::StreamTop(p) => Json::Obj(
+                poll_pairs(p)
+                    .into_iter()
+                    .map(|(k, v)| (k.to_string(), v))
+                    .collect(),
+            ),
+            Response::Sessions(rows) => Json::obj(vec![(
+                "sessions",
+                Json::arr(
+                    rows.iter()
+                        .map(|r| {
+                            let mut pairs = vec![("session", Json::Num(r.session as f64))];
+                            pairs.extend(poll_pairs(&r.poll));
+                            Json::obj(pairs)
+                        })
+                        .collect(),
+                ),
+            )]),
+            Response::StreamClosed(c) => Json::obj(vec![
+                ("observed", Json::Num(c.observed as f64)),
+                ("final", final_to_json(&c.final_match)),
+                ("decision", opt_decision_json(&c.decision)),
+            ]),
+        }
+    }
+
+    /// The legacy rendering: exactly the object the pre-envelope server
+    /// answered for this command (byte-compatible; pinned by golden tests).
+    pub fn to_v1(&self) -> Json {
+        let ok = ("ok", Json::Bool(true));
+        match self {
+            Response::Pong => Json::obj(vec![ok, ("pong", Json::Bool(true))]),
+            Response::Stats(s) => Json::obj(vec![
+                ok,
+                ("report", Json::Str(s.report.clone())),
+                ("db_entries", Json::Num(s.db_entries as f64)),
+                ("live_sessions", Json::Num(s.live_sessions as f64)),
+            ]),
+            Response::Apps(apps) => Json::obj(vec![
+                ok,
+                (
+                    "apps",
+                    Json::arr(apps.iter().map(|a| Json::Str(a.clone())).collect()),
+                ),
+            ]),
+            // v1 never had shard_info; render the v2 body plus "ok" so a
+            // legacy-framed probe still gets a useful answer.
+            Response::ShardInfo(s) => {
+                let mut obj = match shard_info_to_json(s) {
+                    Json::Obj(m) => m,
+                    _ => unreachable!("shard info serializes as an object"),
+                };
+                obj.insert("ok".to_string(), Json::Bool(true));
+                Json::Obj(obj)
+            }
+            Response::Match(m) => {
+                let mut pairs = vec![ok];
+                pairs.extend(match_pairs(m));
+                Json::obj(pairs)
+            }
+            Response::Knn(b) => Json::obj(vec![
+                ok,
+                (
+                    "neighbors",
+                    Json::arr(b.neighbors.iter().map(|r| neighbor_to_json(r, false)).collect()),
+                ),
+                ("stats", stats_to_json(&b.stats)),
+            ]),
+            Response::KnnBatch(b) => Json::obj(vec![
+                ok,
+                (
+                    "results",
+                    Json::arr(b.results.iter().map(|r| knn_to_json(r, false)).collect()),
+                ),
+                ("stats", stats_to_json(&b.stats)),
+            ]),
+            Response::StreamOpened(o) => Json::obj(vec![
+                ok,
+                ("session", Json::Num(o.session as f64)),
+                ("candidates", Json::Num(o.candidates as f64)),
+            ]),
+            Response::StreamFed(f) => Json::obj(vec![
+                ok,
+                ("observed", Json::Num(f.observed as f64)),
+                ("live_candidates", Json::Num(f.live_candidates as f64)),
+                ("decision", opt_decision_json(&f.decision)),
+            ]),
+            Response::StreamTop(p) => {
+                let mut pairs = vec![ok];
+                pairs.extend(poll_pairs(p));
+                Json::obj(pairs)
+            }
+            Response::Sessions(rows) => Json::obj(vec![
+                ok,
+                (
+                    "sessions",
+                    Json::arr(
+                        rows.iter()
+                            .map(|r| {
+                                let mut pairs = vec![("session", Json::Num(r.session as f64))];
+                                pairs.extend(poll_pairs(&r.poll));
+                                Json::obj(pairs)
+                            })
+                            .collect(),
+                    ),
+                ),
+            ]),
+            Response::StreamClosed(c) => Json::obj(vec![
+                ok,
+                ("observed", Json::Num(c.observed as f64)),
+                ("final", final_to_json(&c.final_match)),
+                ("decision", opt_decision_json(&c.decision)),
+            ]),
+        }
+    }
+
+    /// Decode a v2 body by its `type` tag (the client side).
+    pub fn from_body(type_name: &str, body: &Json) -> Result<Response, String> {
+        match type_name {
+            "pong" => Ok(Response::Pong),
+            "stats" => Ok(Response::Stats(StatsBody {
+                report: str_field(body, "report")?,
+                db_entries: usize_field(body, "db_entries")?,
+                live_sessions: usize_field(body, "live_sessions")?,
+            })),
+            "apps" => Ok(Response::Apps(
+                body.get("apps")
+                    .and_then(Json::as_arr)
+                    .ok_or_else(|| "missing apps".to_string())?
+                    .iter()
+                    .map(|a| a.as_str().map(str::to_string).ok_or_else(|| "bad app".to_string()))
+                    .collect::<Result<Vec<_>, _>>()?,
+            )),
+            "shard_info" => shard_info_from_json(body).map(Response::ShardInfo),
+            "match" => match_from_json(body).map(Response::Match),
+            "knn" => knn_from_json(body).map(Response::Knn),
+            "knn_batch" => {
+                let results = body
+                    .get("results")
+                    .and_then(Json::as_arr)
+                    .ok_or_else(|| "missing results".to_string())?
+                    .iter()
+                    .map(knn_from_json)
+                    .collect::<Result<Vec<_>, _>>()?;
+                Ok(Response::KnnBatch(KnnBatchBody {
+                    results,
+                    stats: stats_from_json(
+                        body.get("stats").ok_or_else(|| "missing stats".to_string())?,
+                    )?,
+                }))
+            }
+            "stream_opened" => Ok(Response::StreamOpened(StreamOpenBody {
+                session: body
+                    .get("session")
+                    .and_then(Json::as_u64)
+                    .ok_or_else(|| "missing session".to_string())?,
+                candidates: usize_field(body, "candidates")?,
+            })),
+            "stream_fed" => Ok(Response::StreamFed(StreamFeedBody {
+                observed: usize_field(body, "observed")?,
+                live_candidates: usize_field(body, "live_candidates")?,
+                decision: opt_decision_from_json(body.get("decision"))?,
+            })),
+            "stream_top" => poll_from_json(body).map(Response::StreamTop),
+            "sessions" => {
+                let rows = body
+                    .get("sessions")
+                    .and_then(Json::as_arr)
+                    .ok_or_else(|| "missing sessions".to_string())?
+                    .iter()
+                    .map(|r| {
+                        Ok(SessionPollBody {
+                            session: r
+                                .get("session")
+                                .and_then(Json::as_u64)
+                                .ok_or_else(|| "missing session".to_string())?,
+                            poll: poll_from_json(r)?,
+                        })
+                    })
+                    .collect::<Result<Vec<_>, String>>()?;
+                Ok(Response::Sessions(rows))
+            }
+            "stream_closed" => Ok(Response::StreamClosed(StreamCloseBody {
+                observed: usize_field(body, "observed")?,
+                final_match: final_from_json(body.get("final"))?,
+                decision: opt_decision_from_json(body.get("decision"))?,
+            })),
+            other => Err(format!("unknown response type {other:?}")),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_stats() -> SearchStats {
+        SearchStats {
+            candidates: 10,
+            pruned_lb_kim: 3,
+            pruned_lb_paa: 2,
+            pruned_lb_keogh: 1,
+            abandoned: 1,
+            dtw_evals: 3,
+        }
+    }
+
+    fn sample_decision() -> DecisionBody {
+        DecisionBody {
+            app: "wordcount".into(),
+            config: "M=4,R=2,FS=10M,I=20M".into(),
+            entry: 2,
+            distance: 0.5,
+            similarity: 97.25,
+            at_sample: 32,
+            fraction: 0.5,
+        }
+    }
+
+    fn sample_responses() -> Vec<Response> {
+        let knn = KnnBody {
+            neighbors: vec![
+                NeighborRow {
+                    index: 4,
+                    app: "wordcount".into(),
+                    config: "M=4,R=2,FS=10M,I=20M".into(),
+                    distance: 0.25,
+                    similarity: 98.5,
+                },
+                NeighborRow {
+                    index: 0,
+                    app: "terasort".into(),
+                    config: "M=4,R=2,FS=10M,I=20M".into(),
+                    distance: 1.5,
+                    similarity: 40.0,
+                },
+            ],
+            stats: sample_stats(),
+        };
+        vec![
+            Response::Pong,
+            Response::Stats(StatsBody {
+                report: "requests=1".into(),
+                db_entries: 24,
+                live_sessions: 2,
+            }),
+            Response::Apps(vec!["terasort".into(), "wordcount".into()]),
+            Response::ShardInfo(ShardInfoBody {
+                entries: 12,
+                apps: vec!["wordcount".into()],
+                configs: vec!["M=4,R=2,FS=10M,I=20M".into()],
+                sessions: vec![1, 3],
+            }),
+            Response::Match(MatchBody {
+                results: vec![
+                    MatchRow {
+                        app: "wordcount".into(),
+                        similarity: 95.5,
+                    },
+                    MatchRow {
+                        app: "terasort".into(),
+                        similarity: 41.25,
+                    },
+                ],
+                matched: Some("wordcount".into()),
+                best_similarity: 95.5,
+            }),
+            Response::Match(MatchBody {
+                results: vec![],
+                matched: None,
+                best_similarity: 0.0,
+            }),
+            Response::Knn(knn.clone()),
+            Response::KnnBatch(KnnBatchBody {
+                results: vec![knn.clone(), KnnBody {
+                    neighbors: vec![],
+                    stats: SearchStats::default(),
+                }],
+                stats: sample_stats(),
+            }),
+            Response::StreamOpened(StreamOpenBody {
+                session: 7,
+                candidates: 12,
+            }),
+            Response::StreamFed(StreamFeedBody {
+                observed: 48,
+                live_candidates: 3,
+                decision: Some(sample_decision()),
+            }),
+            Response::StreamFed(StreamFeedBody {
+                observed: 8,
+                live_candidates: 12,
+                decision: None,
+            }),
+            Response::StreamTop(StreamPollBody {
+                observed: 48,
+                live_candidates: 3,
+                culled: 9,
+                top: vec![TopRow {
+                    entry: 4,
+                    app: "wordcount".into(),
+                    config: "M=4,R=2,FS=10M,I=20M".into(),
+                    distance: Some(0.5),
+                    lower_bound: 0.25,
+                }, TopRow {
+                    entry: 1,
+                    app: "terasort".into(),
+                    config: "M=4,R=2,FS=10M,I=20M".into(),
+                    distance: None,
+                    lower_bound: 1.75,
+                }],
+                decision: None,
+            }),
+            Response::Sessions(vec![SessionPollBody {
+                session: 1,
+                poll: StreamPollBody {
+                    observed: 16,
+                    live_candidates: 2,
+                    culled: 0,
+                    top: vec![],
+                    decision: Some(sample_decision()),
+                },
+            }]),
+            Response::StreamClosed(StreamCloseBody {
+                observed: 64,
+                final_match: Some(FinalBody {
+                    app: "wordcount".into(),
+                    config: "M=4,R=2,FS=10M,I=20M".into(),
+                    entry: 4,
+                    distance: 0.125,
+                    similarity: 99.5,
+                    matched: true,
+                }),
+                decision: None,
+            }),
+            Response::StreamClosed(StreamCloseBody {
+                observed: 0,
+                final_match: None,
+                decision: None,
+            }),
+        ]
+    }
+
+    #[test]
+    fn v2_body_roundtrip_is_exact() {
+        for (i, resp) in sample_responses().into_iter().enumerate() {
+            let body = resp.to_body_json();
+            // Through the serializer, like the real wire path.
+            let reparsed = Json::parse(&body.to_string()).unwrap();
+            let back = Response::from_body(resp.type_name(), &reparsed).unwrap();
+            assert_eq!(back, resp, "case {i}");
+        }
+    }
+
+    #[test]
+    fn v1_rendering_has_legacy_shape() {
+        let responses = sample_responses();
+        for resp in &responses {
+            let v1 = resp.to_v1();
+            assert_eq!(v1.get("ok"), Some(&Json::Bool(true)), "{}", resp.type_name());
+        }
+        // v1 k-NN rows must NOT leak the v2 entry field.
+        let knn = responses.iter().find(|r| matches!(r, Response::Knn(_))).unwrap();
+        let rows = knn.to_v1();
+        let row0 = &rows.get("neighbors").and_then(Json::as_arr).unwrap()[0];
+        assert!(row0.get("entry").is_none());
+        assert!(row0.get("app").is_some());
+        // ...while the v2 body carries it.
+        let row0v2 = &knn.to_body_json().get("neighbors").and_then(Json::as_arr).unwrap()[0];
+        assert_eq!(row0v2.get("entry").and_then(Json::as_usize), Some(4));
+    }
+
+    #[test]
+    fn unknown_body_type_is_an_error() {
+        assert!(Response::from_body("nope", &Json::obj(vec![])).is_err());
+    }
+}

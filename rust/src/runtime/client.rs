@@ -3,14 +3,22 @@
 //! [`Runtime`] is **not** `Send` (the `xla` crate's `PjRtClient` is
 //! `Rc`-based); [`super::executor::RuntimeHandle`] wraps it in a dedicated
 //! service thread for the multi-threaded coordinator.
+//!
+//! The `xla` PJRT bindings are not on crates.io (the deployment image
+//! vendors them), so the real client compiles only when the build also
+//! sets `--cfg pjrt_vendored` (RUSTFLAGS) *and* adds the dependency —
+//! see `Cargo.toml`. With the `pjrt` cargo feature alone, a stub
+//! [`Runtime`] with the same API always fails to load, keeping
+//! `--all-features` builds (CI clippy) compiling while every runtime
+//! call falls back to the bit-compatible pure-Rust path.
 
-#[cfg(feature = "pjrt")]
+#[cfg(all(feature = "pjrt", pjrt_vendored))]
 use super::artifacts::{EntryKind, Manifest};
-#[cfg(feature = "pjrt")]
+#[cfg(all(feature = "pjrt", pjrt_vendored))]
 use anyhow::{anyhow, Context, Result};
-#[cfg(feature = "pjrt")]
+#[cfg(all(feature = "pjrt", pjrt_vendored))]
 use std::collections::BTreeMap;
-#[cfg(feature = "pjrt")]
+#[cfg(all(feature = "pjrt", pjrt_vendored))]
 use std::path::Path;
 
 /// A padded, fixed-bucket f32 series plus its true length.
@@ -57,19 +65,60 @@ impl BatchOutput {
     }
 }
 
+/// Stub runtime for `pjrt` builds without the vendored `xla` bindings:
+/// same API as the real [`Runtime`], but loading always fails, so
+/// [`super::executor::RuntimeService::start`] reports the runtime as
+/// unavailable and callers fall back to pure Rust. The post-load methods
+/// are unreachable (no stub can be constructed).
+#[cfg(all(feature = "pjrt", not(pjrt_vendored)))]
+pub enum Runtime {}
+
+#[cfg(all(feature = "pjrt", not(pjrt_vendored)))]
+impl Runtime {
+    pub fn load(dir: &std::path::Path) -> anyhow::Result<Runtime> {
+        Err(anyhow::anyhow!(
+            "pjrt feature enabled but the xla backend is not vendored \
+             (build with RUSTFLAGS=\"--cfg pjrt_vendored\" and an xla dependency); \
+             cannot load artifacts from {}",
+            dir.display()
+        ))
+    }
+
+    pub fn manifest(&self) -> &super::artifacts::Manifest {
+        match *self {}
+    }
+
+    pub fn preprocess(&self, _series: &Padded) -> anyhow::Result<Padded> {
+        match *self {}
+    }
+
+    pub fn dtw_batch(&self, _query: &Padded, _refs: &[Padded]) -> anyhow::Result<BatchOutput> {
+        match *self {}
+    }
+
+    pub fn match_one(
+        &self,
+        _raw_query: &Padded,
+        _refs: &[Padded],
+    ) -> anyhow::Result<(Padded, BatchOutput)> {
+        match *self {}
+    }
+}
+
 /// Compiled executables keyed by artifact name.
 ///
-/// Only compiled with the `pjrt` cargo feature (which needs the `xla`
-/// PJRT bindings — see `Cargo.toml`); the default build uses the pure-Rust
-/// fallbacks everywhere and [`super::executor::RuntimeService::start`]
-/// reports the runtime as unavailable.
-#[cfg(feature = "pjrt")]
+/// Only compiled with the `pjrt` cargo feature plus the `pjrt_vendored`
+/// cfg (which needs the `xla` PJRT bindings — see `Cargo.toml`); the
+/// default build uses the pure-Rust fallbacks everywhere and
+/// [`super::executor::RuntimeService::start`] reports the runtime as
+/// unavailable.
+#[cfg(all(feature = "pjrt", pjrt_vendored))]
 pub struct Runtime {
     manifest: Manifest,
     executables: BTreeMap<String, xla::PjRtLoadedExecutable>,
 }
 
-#[cfg(feature = "pjrt")]
+#[cfg(all(feature = "pjrt", pjrt_vendored))]
 impl Runtime {
     /// Load every artifact in `dir` and compile it on the PJRT CPU client.
     pub fn load(dir: &Path) -> Result<Runtime> {

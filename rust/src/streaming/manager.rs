@@ -136,6 +136,23 @@ impl SessionManager {
         before - slots.len()
     }
 
+    /// Live session ids, sorted. Sessions are addressed by id, not by
+    /// connection — a client may open on one TCP connection and feed,
+    /// poll or close from another (reconnects are routine for day-long
+    /// jobs) — so the id list is the whole observable registry state and
+    /// is what `shard_info` reports.
+    pub fn ids(&self) -> Vec<u64> {
+        let mut ids: Vec<u64> = self
+            .slots
+            .lock()
+            .expect("session registry")
+            .keys()
+            .copied()
+            .collect();
+        ids.sort_unstable();
+        ids
+    }
+
     /// Live session count.
     pub fn len(&self) -> usize {
         self.slots.lock().expect("session registry").len()
@@ -165,6 +182,7 @@ mod tests {
         let b = mgr.open(session());
         assert_ne!(a, b);
         assert_eq!(mgr.len(), 2);
+        assert_eq!(mgr.ids(), vec![a, b]);
         mgr.with(a, |s| s.push(&idx, &[0.1, 0.2])).unwrap();
         let closed = mgr.close(a).unwrap();
         assert_eq!(closed.observed(), 2);

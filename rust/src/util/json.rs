@@ -180,11 +180,14 @@ impl Json {
         }
     }
 
-    /// Parse a JSON document. Errors carry the byte offset.
+    /// Parse a JSON document. Errors carry the byte offset. Nesting is
+    /// bounded at [`MAX_PARSE_DEPTH`] so hostile input (e.g. a request
+    /// line of 100k `[`s) is a parse error, never a recursion blow-up.
     pub fn parse(text: &str) -> Result<Json, JsonError> {
         let mut p = Parser {
             bytes: text.as_bytes(),
             pos: 0,
+            depth: 0,
         };
         p.skip_ws();
         let v = p.value()?;
@@ -238,9 +241,15 @@ pub struct JsonError {
     pub msg: String,
 }
 
+/// Maximum container nesting accepted by [`Json::parse`]. The parser is
+/// recursive-descent, so unbounded depth is unbounded stack; every sane
+/// payload of ours is < 10 levels deep.
+pub const MAX_PARSE_DEPTH: usize = 128;
+
 struct Parser<'a> {
     bytes: &'a [u8],
     pos: usize,
+    depth: usize,
 }
 
 impl<'a> Parser<'a> {
@@ -379,12 +388,22 @@ impl<'a> Parser<'a> {
             .map_err(|_| self.err("bad number"))
     }
 
+    fn enter(&mut self) -> Result<(), JsonError> {
+        self.depth += 1;
+        if self.depth > MAX_PARSE_DEPTH {
+            return Err(self.err("nesting too deep"));
+        }
+        Ok(())
+    }
+
     fn array(&mut self) -> Result<Json, JsonError> {
         self.expect(b'[')?;
+        self.enter()?;
         let mut items = Vec::new();
         self.skip_ws();
         if self.peek() == Some(b']') {
             self.pos += 1;
+            self.depth -= 1;
             return Ok(Json::Arr(items));
         }
         loop {
@@ -393,7 +412,10 @@ impl<'a> Parser<'a> {
             self.skip_ws();
             match self.bump() {
                 Some(b',') => continue,
-                Some(b']') => return Ok(Json::Arr(items)),
+                Some(b']') => {
+                    self.depth -= 1;
+                    return Ok(Json::Arr(items));
+                }
                 _ => return Err(self.err("expected ',' or ']'")),
             }
         }
@@ -401,10 +423,12 @@ impl<'a> Parser<'a> {
 
     fn object(&mut self) -> Result<Json, JsonError> {
         self.expect(b'{')?;
+        self.enter()?;
         let mut map = BTreeMap::new();
         self.skip_ws();
         if self.peek() == Some(b'}') {
             self.pos += 1;
+            self.depth -= 1;
             return Ok(Json::Obj(map));
         }
         loop {
@@ -418,7 +442,10 @@ impl<'a> Parser<'a> {
             self.skip_ws();
             match self.bump() {
                 Some(b',') => continue,
-                Some(b'}') => return Ok(Json::Obj(map)),
+                Some(b'}') => {
+                    self.depth -= 1;
+                    return Ok(Json::Obj(map));
+                }
                 _ => return Err(self.err("expected ',' or '}'")),
             }
         }
@@ -458,6 +485,28 @@ mod tests {
         for src in ["", "{", "[1,", "{\"a\":}", "tru", "1.2.3", "[1] x"] {
             assert!(Json::parse(src).is_err(), "src={src}");
         }
+    }
+
+    #[test]
+    fn nesting_is_bounded_not_a_stack_overflow() {
+        // Hostile depth: must be a clean parse error however deep.
+        for deep in ["[".repeat(100_000), "{\"a\":".repeat(50_000)] {
+            let err = Json::parse(&deep).unwrap_err();
+            assert!(err.msg.contains("nesting too deep"), "{err}");
+        }
+        // Sane nesting (well inside the bound) still parses, and the depth
+        // counter unwinds correctly across siblings.
+        let mut src = String::new();
+        for _ in 0..MAX_PARSE_DEPTH / 2 {
+            src.push('[');
+        }
+        src.push('1');
+        for _ in 0..MAX_PARSE_DEPTH / 2 {
+            src.push(']');
+        }
+        assert!(Json::parse(&src).is_ok());
+        let siblings = format!("[{}]", vec![src; 4].join(","));
+        assert!(Json::parse(&siblings).is_ok(), "siblings must not accumulate depth");
     }
 
     #[test]

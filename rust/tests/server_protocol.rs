@@ -1,0 +1,700 @@
+//! Wire-protocol integration tests: golden v1 byte-compatibility through
+//! the v2 dispatch path, malformed-input hardening of the read loop,
+//! session lifecycle across reconnects, and client pipelining.
+
+use mrtuner::client::MrtunerClient;
+use mrtuner::coordinator::metrics::Metrics;
+use mrtuner::coordinator::server::{handle_line, MatchServer, ServerState};
+use mrtuner::database::profile::ProfileEntry;
+use mrtuner::index::{IndexedDb, SearchStats};
+use mrtuner::protocol::Request;
+use mrtuner::simulator::job::JobConfig;
+use mrtuner::streaming::SessionManager;
+use mrtuner::util::json::Json;
+use mrtuner::workloads::AppId;
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::sync::atomic::Ordering;
+use std::time::Duration;
+
+fn raw_wave(freq: f64) -> Vec<f64> {
+    (0..64)
+        .map(|i| (0.5 + 0.4 * ((i as f64) * freq).sin()).clamp(0.0, 1.0))
+        .collect()
+}
+
+fn state_with_db() -> ServerState {
+    let mut db = IndexedDb::new();
+    db.insert(ProfileEntry {
+        app: AppId::WordCount,
+        config: JobConfig::new(4, 2, 10.0, 20.0),
+        series: mrtuner::signal::preprocess(&raw_wave(0.2)),
+        raw_len: 64,
+        completion_secs: 100.0,
+    });
+    db.insert(ProfileEntry {
+        app: AppId::TeraSort,
+        config: JobConfig::new(4, 2, 10.0, 20.0),
+        series: mrtuner::signal::preprocess(&raw_wave(0.55)),
+        raw_len: 64,
+        completion_secs: 80.0,
+    });
+    ServerState {
+        db,
+        runtime: None,
+        metrics: Metrics::new(),
+        sessions: SessionManager::new(),
+    }
+}
+
+fn spawn_server(state: ServerState) -> (std::net::SocketAddr, impl FnOnce()) {
+    let server = MatchServer::bind("127.0.0.1:0", state).unwrap();
+    let addr = server.local_addr().unwrap();
+    let stop = server.stop_flag();
+    let handle = std::thread::spawn(move || server.serve_with(2, Duration::from_millis(50)));
+    let shutdown = move || {
+        stop.store(true, Ordering::SeqCst);
+        let _ = TcpStream::connect(addr);
+        handle.join().unwrap().unwrap();
+    };
+    (addr, shutdown)
+}
+
+// ---------------------------------------------------------------------
+// Golden v1 compatibility: the legacy renderer below is the pre-envelope
+// server's handler code, kept verbatim as the oracle. Every documented v1
+// command line must answer byte-identically through the new typed path.
+// ---------------------------------------------------------------------
+
+mod legacy {
+    use super::*;
+    use mrtuner::coordinator::batcher::{prepare_query, similarities_auto};
+    use mrtuner::dtw::corr::MATCH_THRESHOLD;
+    use mrtuner::streaming::{
+        DecisionPolicy, FinalLen, StreamDecision, StreamSession, TopEntry, MAX_STREAM_LEN,
+    };
+    use mrtuner::util::pool::default_workers;
+
+    pub fn handle_request(line: &str, state: &ServerState) -> anyhow::Result<Json> {
+        use anyhow::anyhow;
+        let req = Json::parse(line).map_err(|e| anyhow!("bad json: {e}"))?;
+        match req.get("cmd").and_then(Json::as_str) {
+            Some("ping") => Ok(Json::obj(vec![
+                ("ok", Json::Bool(true)),
+                ("pong", Json::Bool(true)),
+            ])),
+            Some("stats") => Ok(Json::obj(vec![
+                ("ok", Json::Bool(true)),
+                ("report", Json::Str(state.metrics.report())),
+                ("db_entries", Json::Num(state.db.len() as f64)),
+                ("live_sessions", Json::Num(state.sessions.len() as f64)),
+            ])),
+            Some("apps") => Ok(Json::obj(vec![
+                ("ok", Json::Bool(true)),
+                (
+                    "apps",
+                    Json::arr(
+                        state
+                            .db
+                            .apps()
+                            .iter()
+                            .map(|a| Json::Str(a.name().to_string()))
+                            .collect(),
+                    ),
+                ),
+            ])),
+            Some("match") => handle_match(&req, state),
+            Some("knn") => handle_knn(&req, state),
+            Some("knn_batch") => handle_knn_batch(&req, state),
+            Some("stream_open") => handle_stream_open(&req, state),
+            Some("stream_feed") => handle_stream_feed(&req, state),
+            Some("stream_poll") => handle_stream_poll(&req, state),
+            Some("stream_poll_all") => handle_stream_poll_all(&req, state),
+            Some("stream_close") => handle_stream_close(&req, state),
+            _ => Err(anyhow!("unknown cmd")),
+        }
+    }
+
+    fn parse_series(req: &Json) -> anyhow::Result<Vec<f64>> {
+        use anyhow::anyhow;
+        let series = req
+            .get("series")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("missing series"))?
+            .iter()
+            .filter_map(Json::as_f64)
+            .collect::<Vec<f64>>();
+        if series.len() < 4 {
+            return Err(anyhow!("series too short"));
+        }
+        Ok(series)
+    }
+
+    fn parse_config(v: &Json) -> anyhow::Result<JobConfig> {
+        use anyhow::anyhow;
+        let num = |k: &str| -> anyhow::Result<f64> {
+            v.get(k)
+                .and_then(Json::as_f64)
+                .ok_or_else(|| anyhow!("config missing {k}"))
+        };
+        Ok(JobConfig::new(
+            num("mappers")? as usize,
+            num("reducers")? as usize,
+            num("split_mb")?,
+            num("input_mb")?,
+        ))
+    }
+
+    fn parse_session_id(req: &Json) -> anyhow::Result<u64> {
+        use anyhow::anyhow;
+        req.get("session")
+            .and_then(Json::as_usize)
+            .map(|id| id as u64)
+            .ok_or_else(|| anyhow!("missing session id"))
+    }
+
+    fn decision_json(d: &StreamDecision) -> Json {
+        Json::obj(vec![
+            ("app", Json::Str(d.app.name().to_string())),
+            ("config", Json::Str(d.config.label())),
+            ("entry", Json::Num(d.entry as f64)),
+            ("distance", Json::Num(d.distance)),
+            ("similarity", Json::Num(d.similarity)),
+            ("at_sample", Json::Num(d.at_sample as f64)),
+            ("fraction", Json::Num(d.fraction)),
+        ])
+    }
+
+    fn handle_stream_open(req: &Json, state: &ServerState) -> anyhow::Result<Json> {
+        let config = match req.get("config") {
+            Some(c) => Some(parse_config(c)?),
+            None => None,
+        };
+        let final_len = match req.get("final_len").and_then(Json::as_usize) {
+            Some(n) if n > 0 => FinalLen::Known(n.min(MAX_STREAM_LEN)),
+            _ => FinalLen::AtMost(
+                req.get("max_len")
+                    .and_then(Json::as_usize)
+                    .unwrap_or(MAX_STREAM_LEN)
+                    .clamp(1, MAX_STREAM_LEN),
+            ),
+        };
+        let mut policy = DecisionPolicy::default();
+        if let Some(f) = req.get("min_fraction").and_then(Json::as_f64) {
+            policy.min_fraction = f.clamp(0.0, 2.0);
+        }
+        if let Some(m) = req.get("margin").and_then(Json::as_f64) {
+            policy.margin = m.max(1.0);
+        }
+        if let Some(s) = req.get("min_samples").and_then(Json::as_usize) {
+            policy.min_samples = s;
+        }
+        let session = StreamSession::open(&state.db, config.as_ref(), final_len, policy);
+        let candidates = session.candidates();
+        let id = state.sessions.open(session);
+        state.metrics.inc_stream_opened();
+        Ok(Json::obj(vec![
+            ("ok", Json::Bool(true)),
+            ("session", Json::Num(id as f64)),
+            ("candidates", Json::Num(candidates as f64)),
+        ]))
+    }
+
+    fn handle_stream_feed(req: &Json, state: &ServerState) -> anyhow::Result<Json> {
+        use anyhow::anyhow;
+        let id = parse_session_id(req)?;
+        let samples: Vec<f64> = req
+            .get("samples")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("missing samples"))?
+            .iter()
+            .filter_map(Json::as_f64)
+            .collect();
+        if samples.is_empty() {
+            return Err(anyhow!("empty samples"));
+        }
+        let (_decided_now, decision, observed, live) = state.sessions.with(id, |s| {
+            let had = s.decision().is_some();
+            s.push(&state.db, &samples);
+            let d = s.decision().cloned();
+            (d.is_some() && !had, d, s.observed(), s.live_candidates())
+        })?;
+        Ok(Json::obj(vec![
+            ("ok", Json::Bool(true)),
+            ("observed", Json::Num(observed as f64)),
+            ("live_candidates", Json::Num(live as f64)),
+            (
+                "decision",
+                decision.as_ref().map(decision_json).unwrap_or(Json::Null),
+            ),
+        ]))
+    }
+
+    fn top_json(top: &[TopEntry]) -> Json {
+        Json::arr(
+            top.iter()
+                .map(|t| {
+                    Json::obj(vec![
+                        ("app", Json::Str(t.app.name().to_string())),
+                        ("config", Json::Str(t.config.label())),
+                        ("entry", Json::Num(t.entry as f64)),
+                        ("distance", t.distance.map(Json::Num).unwrap_or(Json::Null)),
+                        ("lower_bound", Json::Num(t.lower_bound)),
+                    ])
+                })
+                .collect(),
+        )
+    }
+
+    fn handle_stream_poll(req: &Json, state: &ServerState) -> anyhow::Result<Json> {
+        let id = parse_session_id(req)?;
+        let k = req.get("k").and_then(Json::as_usize).unwrap_or(3).clamp(1, 20);
+        let (top, decision, observed, live, culled) = state.sessions.with(id, |s| {
+            (
+                s.top(&state.db, k),
+                s.decision().cloned(),
+                s.observed(),
+                s.live_candidates(),
+                s.stats().culled,
+            )
+        })?;
+        Ok(Json::obj(vec![
+            ("ok", Json::Bool(true)),
+            ("observed", Json::Num(observed as f64)),
+            ("live_candidates", Json::Num(live as f64)),
+            ("culled", Json::Num(culled as f64)),
+            ("top", top_json(&top)),
+            (
+                "decision",
+                decision.as_ref().map(decision_json).unwrap_or(Json::Null),
+            ),
+        ]))
+    }
+
+    fn handle_stream_poll_all(req: &Json, state: &ServerState) -> anyhow::Result<Json> {
+        let k = req.get("k").and_then(Json::as_usize).unwrap_or(3).clamp(1, 20);
+        let polls = state.sessions.poll_all(&state.db, k);
+        let rows = polls
+            .iter()
+            .map(|p| {
+                Json::obj(vec![
+                    ("session", Json::Num(p.id as f64)),
+                    ("observed", Json::Num(p.observed as f64)),
+                    ("live_candidates", Json::Num(p.live_candidates as f64)),
+                    ("culled", Json::Num(p.culled as f64)),
+                    ("top", top_json(&p.top)),
+                    (
+                        "decision",
+                        p.decision.as_ref().map(decision_json).unwrap_or(Json::Null),
+                    ),
+                ])
+            })
+            .collect();
+        Ok(Json::obj(vec![
+            ("ok", Json::Bool(true)),
+            ("sessions", Json::arr(rows)),
+        ]))
+    }
+
+    fn handle_stream_close(req: &Json, state: &ServerState) -> anyhow::Result<Json> {
+        let id = parse_session_id(req)?;
+        let session = state.sessions.close(id)?;
+        state.metrics.inc_stream_closed();
+        state.metrics.record_stream_session(&session.stats());
+        let (neighbors, stats) = session.finalize(&state.db, 1);
+        state.metrics.record_search(&stats);
+        let entries = state.db.entries();
+        let final_json = match neighbors.first() {
+            Some(nb) => {
+                let e = &entries[nb.index];
+                let q = prepare_query(session.raw());
+                let sim = mrtuner::dtw::corr::similarity_percent_banded(&q, &e.series);
+                Json::obj(vec![
+                    ("app", Json::Str(e.app.name().to_string())),
+                    ("config", Json::Str(e.config_key())),
+                    ("entry", Json::Num(nb.index as f64)),
+                    ("distance", Json::Num(nb.distance)),
+                    ("similarity", Json::Num(sim)),
+                    ("matched", Json::Bool(sim >= MATCH_THRESHOLD)),
+                ])
+            }
+            None => Json::Null,
+        };
+        Ok(Json::obj(vec![
+            ("ok", Json::Bool(true)),
+            ("observed", Json::Num(session.observed() as f64)),
+            ("final", final_json),
+            (
+                "decision",
+                session.decision().map(decision_json).unwrap_or(Json::Null),
+            ),
+        ]))
+    }
+
+    fn stats_json(stats: &SearchStats) -> Json {
+        Json::obj(vec![
+            ("candidates", Json::Num(stats.candidates as f64)),
+            ("pruned_lb_kim", Json::Num(stats.pruned_lb_kim as f64)),
+            ("pruned_lb_paa", Json::Num(stats.pruned_lb_paa as f64)),
+            ("pruned_lb_keogh", Json::Num(stats.pruned_lb_keogh as f64)),
+            ("abandoned", Json::Num(stats.abandoned as f64)),
+            ("dtw_evals", Json::Num(stats.dtw_evals as f64)),
+        ])
+    }
+
+    fn neighbor_json(state: &ServerState, q: &[f64], nb: &mrtuner::index::Neighbor) -> Json {
+        let e = &state.db.entries()[nb.index];
+        Json::obj(vec![
+            ("app", Json::Str(e.app.name().to_string())),
+            ("config", Json::Str(e.config_key())),
+            ("distance", Json::Num(nb.distance)),
+            (
+                "similarity",
+                Json::Num(mrtuner::dtw::corr::similarity_percent_banded(q, &e.series)),
+            ),
+        ])
+    }
+
+    fn handle_knn(req: &Json, state: &ServerState) -> anyhow::Result<Json> {
+        let series = parse_series(req)?;
+        let k = req.get("k").and_then(Json::as_usize).unwrap_or(1).clamp(1, 100);
+        let q = prepare_query(&series);
+        let (neighbors, stats) = match req.get("config") {
+            Some(cfg) => state.db.knn_in_config(&q, &parse_config(cfg)?.label(), k),
+            None => state.db.knn_parallel(&q, k, default_workers()),
+        };
+        state.metrics.record_search(&stats);
+        state.metrics.inc_comparisons(stats.dtw_evals);
+        let results = neighbors.iter().map(|nb| neighbor_json(state, &q, nb)).collect();
+        Ok(Json::obj(vec![
+            ("ok", Json::Bool(true)),
+            ("neighbors", Json::arr(results)),
+            ("stats", stats_json(&stats)),
+        ]))
+    }
+
+    fn handle_knn_batch(req: &Json, state: &ServerState) -> anyhow::Result<Json> {
+        use anyhow::anyhow;
+        let queries_json = req
+            .get("queries")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("missing queries"))?;
+        if queries_json.is_empty() {
+            return Err(anyhow!("empty queries"));
+        }
+        let k = req.get("k").and_then(Json::as_usize).unwrap_or(1).clamp(1, 100);
+        let mut prepared: Vec<Vec<f64>> = Vec::with_capacity(queries_json.len());
+        for (qi, qj) in queries_json.iter().enumerate() {
+            let series: Vec<f64> = qj
+                .as_arr()
+                .ok_or_else(|| anyhow!("query {qi}: not an array"))?
+                .iter()
+                .filter_map(Json::as_f64)
+                .collect();
+            if series.len() < 4 {
+                return Err(anyhow!("query {qi}: series too short"));
+            }
+            prepared.push(prepare_query(&series));
+        }
+        let qrefs: Vec<&[f64]> = prepared.iter().map(Vec::as_slice).collect();
+        let t0 = std::time::Instant::now();
+        let results = match req.get("config") {
+            Some(cfg) => state
+                .db
+                .knn_batch_in_config(&qrefs, &parse_config(cfg)?.label(), k),
+            None => state.db.knn_batch(&qrefs, k),
+        };
+        state
+            .metrics
+            .record_knn_batch(qrefs.len() as u64, t0.elapsed().as_secs_f64());
+        let mut merged = SearchStats::default();
+        let rows = results
+            .iter()
+            .zip(&prepared)
+            .map(|((neighbors, stats), q)| {
+                merged.merge(stats);
+                Json::obj(vec![
+                    (
+                        "neighbors",
+                        Json::arr(neighbors.iter().map(|nb| neighbor_json(state, q, nb)).collect()),
+                    ),
+                    ("stats", stats_json(stats)),
+                ])
+            })
+            .collect();
+        state.metrics.record_search(&merged);
+        state.metrics.inc_comparisons(merged.dtw_evals);
+        Ok(Json::obj(vec![
+            ("ok", Json::Bool(true)),
+            ("results", Json::arr(rows)),
+            ("stats", stats_json(&merged)),
+        ]))
+    }
+
+    fn handle_match(req: &Json, state: &ServerState) -> anyhow::Result<Json> {
+        use anyhow::anyhow;
+        let series = parse_series(req)?;
+        let config = parse_config(
+            req.get("config")
+                .ok_or_else(|| anyhow!("match: missing config"))?,
+        )?;
+        let refs = state.db.by_config(&config.label());
+        let ref_series: Vec<Vec<f64>> = refs.iter().map(|e| e.series.clone()).collect();
+        let sims = similarities_auto(state.runtime.as_ref(), &series, &ref_series);
+        state.metrics.inc_comparisons(sims.len() as u64);
+        let mut results = Vec::new();
+        let mut best: Option<(&str, f64)> = None;
+        for (e, s) in refs.iter().zip(&sims) {
+            results.push(Json::obj(vec![
+                ("app", Json::Str(e.app.name().to_string())),
+                ("similarity", Json::Num(*s)),
+            ]));
+            if best.map_or(true, |(_, bs)| *s > bs) {
+                best = Some((e.app.name(), *s));
+            }
+        }
+        let (match_app, match_sim) = match best {
+            Some((a, s)) if s >= MATCH_THRESHOLD => (Json::Str(a.to_string()), Json::Num(s)),
+            Some((_, s)) => (Json::Null, Json::Num(s)),
+            None => (Json::Null, Json::Num(0.0)),
+        };
+        Ok(Json::obj(vec![
+            ("ok", Json::Bool(true)),
+            ("results", Json::arr(results)),
+            ("match", match_app),
+            ("best_similarity", match_sim),
+        ]))
+    }
+}
+
+/// What the pre-envelope connection loop wrote for an error.
+fn legacy_error_json(e: &anyhow::Error) -> Json {
+    Json::obj(vec![
+        ("ok", Json::Bool(false)),
+        ("error", Json::Str(format!("{e:#}"))),
+    ])
+}
+
+#[test]
+fn golden_v1_commands_answer_byte_identically() {
+    // Twin states, driven in lockstep: `new` answers through the typed v2
+    // dispatch path, `old` through the verbatim legacy handlers above.
+    let new_state = state_with_db();
+    let old_state = state_with_db();
+    let series = Json::nums(&raw_wave(0.2)).to_string();
+    let q2 = Json::nums(&raw_wave(0.55)).to_string();
+    let chunk = Json::nums(&raw_wave(0.2)[..16]).to_string();
+    let config = r#"{"input_mb":20,"mappers":4,"reducers":2,"split_mb":10}"#;
+    // Every documented command from the server.rs header, plus error
+    // cases; stats goes first so both reports are all-zero deterministic.
+    let lines = vec![
+        r#"{"cmd":"ping"}"#.to_string(),
+        r#"{"cmd":"stats"}"#.to_string(),
+        r#"{"cmd":"apps"}"#.to_string(),
+        format!(r#"{{"cmd":"match","series":{series},"config":{config}}}"#),
+        format!(r#"{{"cmd":"knn","series":{series},"k":2}}"#),
+        format!(r#"{{"cmd":"knn","series":{series},"k":5,"config":{config}}}"#),
+        format!(r#"{{"cmd":"knn_batch","queries":[{series},{q2}],"k":1}}"#),
+        format!(r#"{{"cmd":"stream_open","config":{config},"final_len":64}}"#),
+        format!(r#"{{"cmd":"stream_feed","session":1,"samples":{chunk}}}"#),
+        r#"{"cmd":"stream_poll","session":1,"k":2}"#.to_string(),
+        r#"{"cmd":"stream_poll_all","k":2}"#.to_string(),
+        r#"{"cmd":"stream_close","session":1}"#.to_string(),
+        // Error paths must keep the legacy error shape byte-for-byte too.
+        "not json".to_string(),
+        r#"{"cmd":"nope"}"#.to_string(),
+        r#"{"cmd":"match"}"#.to_string(),
+        r#"{"cmd":"knn","series":[1,2]}"#.to_string(),
+        r#"{"cmd":"stream_poll","session":99}"#.to_string(),
+    ];
+    for line in &lines {
+        let got = handle_line(line, &new_state).to_string();
+        let want = match legacy::handle_request(line, &old_state) {
+            Ok(v) => v.to_string(),
+            Err(e) => legacy_error_json(&e).to_string(),
+        };
+        assert_eq!(got, want, "v1 byte compatibility broke for line: {line}");
+    }
+}
+
+// ---------------------------------------------------------------------
+// Malformed-input hardening: every garbage line gets a structured error
+// response over the SAME connection — never a drop, never a panic — and
+// rejects are counted in the metrics report.
+// ---------------------------------------------------------------------
+
+#[test]
+fn malformed_lines_get_structured_errors_not_disconnects() {
+    let (addr, shutdown) = spawn_server(state_with_db());
+    let mut stream = TcpStream::connect(addr).unwrap();
+    stream
+        .set_read_timeout(Some(Duration::from_secs(30)))
+        .unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+
+    let garbage: Vec<Vec<u8>> = vec![
+        b"not json".to_vec(),
+        b"{".to_vec(),
+        b"[1,2".to_vec(),
+        b"\"unterminated".to_vec(),
+        b"123".to_vec(),
+        b"null".to_vec(),
+        b"{\"cmd\":\"nope\"}".to_vec(),
+        b"{\"cmd\":\"knn\"}".to_vec(),
+        b"{\"v\":99,\"id\":1,\"type\":\"ping\"}".to_vec(),
+        b"{\"v\":2,\"id\":1,\"type\":\"gibberish\"}".to_vec(),
+        // Deep nesting: must be a parse error, not a recursion blow-up.
+        "[".repeat(20_000).into_bytes(),
+        "{\"a\":".repeat(10_000).into_bytes(),
+        // Invalid UTF-8: rejected, connection kept.
+        vec![0xff, 0xfe, 0x80, b'x'],
+        // Control bytes that ARE valid UTF-8.
+        vec![0x00, 0x01, 0x02],
+        // A line past MAX_LINE_BYTES: rejected while framing (the server
+        // never buffers it whole), surplus discarded, connection kept.
+        vec![b'a'; mrtuner::coordinator::server::MAX_LINE_BYTES + 1024],
+    ];
+    for (i, g) in garbage.iter().enumerate() {
+        stream.write_all(g).unwrap();
+        stream.write_all(b"\n").unwrap();
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        let resp = Json::parse(line.trim())
+            .unwrap_or_else(|e| panic!("case {i}: response not json ({e}): {line}"));
+        assert_eq!(
+            resp.get("ok"),
+            Some(&Json::Bool(false)),
+            "case {i}: expected structured error, got {line}"
+        );
+        assert!(
+            resp.get("error").is_some(),
+            "case {i}: error field missing: {line}"
+        );
+    }
+
+    // The connection is still alive and serving.
+    stream.write_all(b"{\"cmd\":\"ping\"}\n").unwrap();
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    assert!(line.contains("pong"), "connection died after garbage: {line}");
+
+    // Every reject was counted (the metrics report travels in stats).
+    stream.write_all(b"{\"cmd\":\"stats\"}\n").unwrap();
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    let resp = Json::parse(line.trim()).unwrap();
+    let report = resp.get("report").and_then(Json::as_str).unwrap();
+    assert!(
+        report.contains(&format!("proto_errors: total={}", garbage.len())),
+        "rejects not counted: {report}"
+    );
+    assert!(report.contains("bad_request="), "{report}");
+    assert!(report.contains("wrong_version=1"), "{report}");
+
+    drop(reader);
+    drop(stream);
+    shutdown();
+}
+
+// ---------------------------------------------------------------------
+// Session lifecycle across reconnects: sessions are addressed by id and
+// must survive the connection that opened them (per the CONN_IDLE doc).
+// ---------------------------------------------------------------------
+
+#[test]
+fn stream_sessions_survive_reconnects() {
+    let (addr, shutdown) = spawn_server(state_with_db());
+    let cfg = JobConfig::new(4, 2, 10.0, 20.0);
+    let series = raw_wave(0.2);
+
+    // Connection 1: open the session, feed the first quarter, vanish
+    // without closing anything (a crashed feeder).
+    let session = {
+        let mut c1 = MrtunerClient::connect(&addr.to_string()).unwrap();
+        let opened = c1.stream_open(Some(&cfg), Some(64)).unwrap();
+        assert_eq!(opened.candidates, 2);
+        let fed = c1.stream_feed(opened.session, &series[..16]).unwrap();
+        assert_eq!(fed.observed, 16);
+        opened.session
+        // c1 dropped here: TCP connection closes, session must live on.
+    };
+
+    // Connection 2: the restarted feeder picks the session up by id.
+    let mut c2 = MrtunerClient::connect(&addr.to_string()).unwrap();
+    let fed = c2.stream_feed(session, &series[16..48]).unwrap();
+    assert_eq!(fed.observed, 48, "session lost its state across reconnect");
+    let poll = c2.stream_poll(session, 2).unwrap();
+    assert_eq!(poll.observed, 48);
+    assert!(!poll.top.is_empty());
+    assert_eq!(poll.top[0].app, "wordcount");
+
+    // A third connection closes it and gets the exact final answer.
+    let mut c3 = MrtunerClient::connect(&addr.to_string()).unwrap();
+    c3.stream_feed(session, &series[48..]).unwrap();
+    let closed = c3.stream_close(session).unwrap();
+    assert_eq!(closed.observed, 64);
+    assert_eq!(closed.final_match.unwrap().app, "wordcount");
+    // Closed means gone, for every connection.
+    let err = c2.stream_poll(session, 1).unwrap_err();
+    assert_eq!(
+        err.code(),
+        Some(mrtuner::protocol::ErrorCode::UnknownSession),
+        "{err}"
+    );
+
+    shutdown();
+}
+
+// ---------------------------------------------------------------------
+// Client pipelining: many requests in flight, replies matched by id.
+// ---------------------------------------------------------------------
+
+#[test]
+fn client_pipelines_and_matches_replies_by_id() {
+    let (addr, shutdown) = spawn_server(state_with_db());
+    let mut client = MrtunerClient::connect(&addr.to_string()).unwrap();
+    let series = raw_wave(0.2);
+
+    // Write three requests back-to-back before reading anything.
+    let id_ping = client.send(&Request::Ping).unwrap();
+    let id_knn = client
+        .send(&Request::Knn {
+            series: series.clone(),
+            k: 1,
+            config: None,
+        })
+        .unwrap();
+    let id_apps = client.send(&Request::Apps).unwrap();
+    assert!(id_ping < id_knn && id_knn < id_apps);
+
+    // Collect them out of order: the pending map does the reordering.
+    match client.recv(id_apps).unwrap() {
+        mrtuner::protocol::Response::Apps(apps) => assert_eq!(apps.len(), 2),
+        other => panic!("{other:?}"),
+    }
+    match client.recv(id_ping).unwrap() {
+        mrtuner::protocol::Response::Pong => {}
+        other => panic!("{other:?}"),
+    }
+    match client.recv(id_knn).unwrap() {
+        mrtuner::protocol::Response::Knn(b) => {
+            assert_eq!(b.neighbors.len(), 1);
+            assert_eq!(b.neighbors[0].app, "wordcount");
+            assert_eq!(b.neighbors[0].distance, 0.0);
+        }
+        other => panic!("{other:?}"),
+    }
+    // Unknown ids fail loudly instead of blocking.
+    assert!(client.recv(9999).is_err());
+
+    // k = 0 over the wire (v2 only): clean empty answer.
+    let body = client.knn(&series, 0, None).unwrap();
+    assert!(body.neighbors.is_empty());
+    assert_eq!(body.stats, SearchStats::default());
+
+    // k far beyond the database: clamped to everything, no phantom rows.
+    let body = client.knn(&series, 100, None).unwrap();
+    assert_eq!(body.neighbors.len(), 2);
+
+    shutdown();
+}

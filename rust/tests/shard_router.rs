@@ -1,0 +1,303 @@
+//! Multi-node integration: N in-process shard servers behind a
+//! [`ShardRouter`] must answer k-NN **bit-identically** to a single-node
+//! `IndexedDb` over the union database (distances, indices, order), and
+//! routed matching must equal single-node dispatch. Also pins the
+//! `shard_unavailable` failure surface.
+
+use mrtuner::coordinator::metrics::Metrics;
+use mrtuner::coordinator::router::{dispatch_routed, route_line, RouterServer, ShardRouter};
+use mrtuner::coordinator::server::{dispatch, MatchServer, ServerState};
+use mrtuner::database::profile::ProfileEntry;
+use mrtuner::index::IndexedDb;
+use mrtuner::protocol::{Request, Response};
+use mrtuner::simulator::job::JobConfig;
+use mrtuner::streaming::SessionManager;
+use mrtuner::util::json::Json;
+use mrtuner::workloads::AppId;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+fn raw_wave(freq: f64, len: usize) -> Vec<f64> {
+    (0..len)
+        .map(|i| (0.5 + 0.4 * ((i as f64) * freq).sin()).clamp(0.0, 1.0))
+        .collect()
+}
+
+fn entry(app: AppId, cfg: JobConfig, freq: f64, len: usize) -> ProfileEntry {
+    ProfileEntry {
+        app,
+        config: cfg,
+        series: mrtuner::signal::preprocess(&raw_wave(freq, len)),
+        raw_len: len,
+        completion_secs: 100.0,
+    }
+}
+
+/// Three config sets, two apps each, distinct shapes per entry. Returns
+/// (per-shard databases in shard order, the union in the same order).
+fn partitioned_dbs() -> (Vec<IndexedDb>, IndexedDb, Vec<JobConfig>) {
+    let configs = vec![
+        JobConfig::new(4, 2, 10.0, 20.0),
+        JobConfig::new(8, 4, 20.0, 40.0),
+        JobConfig::new(16, 8, 30.0, 80.0),
+    ];
+    let mut shards: Vec<IndexedDb> = Vec::new();
+    for (ci, cfg) in configs.iter().enumerate() {
+        let mut db = IndexedDb::new();
+        for (ai, app) in [AppId::WordCount, AppId::TeraSort].into_iter().enumerate() {
+            // Distinct frequency and length per (app, config).
+            let freq = 0.15 + 0.11 * (ci * 2 + ai) as f64;
+            let len = 48 + 16 * ci;
+            db.insert(entry(app, *cfg, freq, len));
+        }
+        shards.push(db);
+    }
+    let mut union = IndexedDb::new();
+    for shard in &shards {
+        for e in shard.entries() {
+            union.insert(e.clone());
+        }
+    }
+    (shards, union, configs)
+}
+
+fn state_over(db: IndexedDb) -> ServerState {
+    ServerState {
+        db,
+        runtime: None,
+        metrics: Metrics::new(),
+        sessions: SessionManager::new(),
+    }
+}
+
+struct Fleet {
+    addrs: Vec<String>,
+    stops: Vec<Arc<AtomicBool>>,
+    joins: Vec<std::thread::JoinHandle<anyhow::Result<()>>>,
+}
+
+fn spawn_fleet(shards: Vec<IndexedDb>) -> Fleet {
+    let mut fleet = Fleet {
+        addrs: Vec::new(),
+        stops: Vec::new(),
+        joins: Vec::new(),
+    };
+    for db in shards {
+        let server = MatchServer::bind("127.0.0.1:0", state_over(db)).unwrap();
+        fleet.addrs.push(server.local_addr().unwrap().to_string());
+        fleet.stops.push(server.stop_flag());
+        fleet
+            .joins
+            .push(std::thread::spawn(move || server.serve_with(2, Duration::from_millis(50))));
+    }
+    fleet
+}
+
+impl Fleet {
+    fn shutdown(self) {
+        for (stop, addr) in self.stops.iter().zip(&self.addrs) {
+            stop.store(true, Ordering::SeqCst);
+            let _ = std::net::TcpStream::connect(addr);
+        }
+        for j in self.joins {
+            j.join().unwrap().unwrap();
+        }
+    }
+}
+
+#[test]
+fn routed_knn_is_bit_identical_to_single_node() {
+    let (shards, union, configs) = partitioned_dbs();
+    let fleet = spawn_fleet(shards);
+    let metrics = Arc::new(Metrics::new());
+    let mut router = ShardRouter::connect(&fleet.addrs, Arc::clone(&metrics)).unwrap();
+    assert_eq!(router.total_entries(), union.len());
+    assert_eq!(router.shards().len(), 3);
+    for (si, shard) in router.shards().iter().enumerate() {
+        assert_eq!(shard.base, si * 2, "bases are running entry sums");
+        assert_eq!(shard.entries, 2);
+        assert_eq!(shard.configs, vec![configs[si].label()]);
+    }
+
+    // A batch of queries of assorted lengths and shapes, including one
+    // that exactly matches a stored entry (distance 0 through the stack).
+    let queries: Vec<Vec<f64>> = vec![
+        raw_wave(0.15, 48),
+        raw_wave(0.7, 100),
+        raw_wave(0.3, 64),
+        raw_wave(0.48, 80),
+    ];
+    for k in [1usize, 3, 6, 10] {
+        let routed = router.knn_batch(&queries, k, None).unwrap();
+        let prepared: Vec<Vec<f64>> =
+            queries.iter().map(|q| mrtuner::coordinator::batcher::prepare_query(q)).collect();
+        let qrefs: Vec<&[f64]> = prepared.iter().map(Vec::as_slice).collect();
+        let local = union.knn_batch(&qrefs, k);
+        assert_eq!(routed.results.len(), local.len());
+        for (qi, (routed_body, (local_nbs, local_stats))) in
+            routed.results.iter().zip(&local).enumerate()
+        {
+            assert_eq!(
+                routed_body.neighbors.len(),
+                local_nbs.len(),
+                "query {qi} k={k}: row count"
+            );
+            for (r, l) in routed_body.neighbors.iter().zip(local_nbs) {
+                assert_eq!(r.index, l.index, "query {qi} k={k}: neighbour index");
+                assert_eq!(
+                    r.distance.to_bits(),
+                    l.distance.to_bits(),
+                    "query {qi} k={k}: distance bits ({} vs {})",
+                    r.distance,
+                    l.distance
+                );
+                // The row's app/config must name the union entry it claims.
+                let e = &union.entries()[r.index];
+                assert_eq!(r.app, e.app.name());
+                assert_eq!(r.config, e.config_key());
+            }
+            // Candidate coverage matches the union scan (the per-stage
+            // pruning split legitimately differs across shard cutoffs).
+            assert_eq!(routed_body.stats.candidates, local_stats.candidates);
+        }
+    }
+
+    // The self-query finds its own entry at distance zero.
+    let routed = router.knn(&raw_wave(0.15, 48), 1, None).unwrap();
+    assert_eq!(routed.neighbors[0].distance, 0.0);
+    assert_eq!(routed.neighbors[0].index, 0);
+
+    // Config-scoped routing consults only the owning shard.
+    let scoped = router.knn(&raw_wave(0.3, 64), 4, Some(&configs[1])).unwrap();
+    assert_eq!(scoped.stats.candidates, 2, "one shard's bucket only");
+    for r in &scoped.neighbors {
+        assert_eq!(r.config, configs[1].label());
+        assert!(r.index >= 2 && r.index < 4, "global index in shard 1's range");
+    }
+    // Unknown config: empty, not an error.
+    let none = router
+        .knn(&raw_wave(0.3, 64), 4, Some(&JobConfig::new(99, 9, 1.0, 1.0)))
+        .unwrap();
+    assert!(none.neighbors.is_empty());
+
+    // Per-shard fan-out latency was recorded for every shard.
+    let fanout = metrics.shard_fanout_summary();
+    assert_eq!(fanout.len(), 3, "{fanout:?}");
+    assert!(fanout.iter().all(|&(_, n, _, _)| n > 0));
+
+    fleet.shutdown();
+}
+
+#[test]
+fn routed_match_equals_single_node_dispatch() {
+    let (shards, union, configs) = partitioned_dbs();
+    let fleet = spawn_fleet(shards);
+    let metrics = Arc::new(Metrics::new());
+    let mut router = ShardRouter::connect(&fleet.addrs, metrics).unwrap();
+
+    let union_state = state_over(union);
+    let series = raw_wave(0.15, 48);
+    let req = Request::Match {
+        series: series.clone(),
+        config: configs[0],
+    };
+    let local = match dispatch(&req, &union_state).unwrap() {
+        Response::Match(b) => b,
+        other => panic!("{other:?}"),
+    };
+    let routed = router.match_config(&series, &configs[0]).unwrap();
+    assert_eq!(routed, local, "routed match diverged from single node");
+    assert_eq!(routed.matched.as_deref(), Some("wordcount"));
+
+    fleet.shutdown();
+}
+
+#[test]
+fn router_server_front_end_speaks_both_envelopes() {
+    let (shards, union, _configs) = partitioned_dbs();
+    let fleet = spawn_fleet(shards);
+    let metrics = Arc::new(Metrics::new());
+    let router = ShardRouter::connect(&fleet.addrs, metrics).unwrap();
+    let front = RouterServer::bind("127.0.0.1:0", router).unwrap();
+    let addr = front.local_addr().unwrap();
+    let stop = front.stop_flag();
+    let join = std::thread::spawn(move || front.serve_with(2, Duration::from_millis(50)));
+
+    // Typed v2 client against the router front-end.
+    let mut client = mrtuner::client::MrtunerClient::connect(&addr.to_string()).unwrap();
+    client.ping().unwrap();
+    let info = client.shard_info().unwrap();
+    assert_eq!(info.entries, union.len());
+    assert_eq!(info.configs.len(), 3);
+    let knn = client.knn(&raw_wave(0.15, 48), 2, None).unwrap();
+    assert_eq!(knn.neighbors.len(), 2);
+    assert_eq!(knn.neighbors[0].distance, 0.0);
+    // Stream commands are not routed: typed bad_request.
+    let err = client.stream_poll(1, 1).unwrap_err();
+    assert_eq!(err.code(), Some(mrtuner::protocol::ErrorCode::BadRequest));
+
+    // Legacy v1 framing works against the router too.
+    use std::io::{BufRead, BufReader, Write};
+    let mut raw = std::net::TcpStream::connect(addr).unwrap();
+    raw.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+    let mut reader = BufReader::new(raw.try_clone().unwrap());
+    raw.write_all(b"{\"cmd\":\"apps\"}\n").unwrap();
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    let resp = Json::parse(line.trim()).unwrap();
+    assert_eq!(resp.get("ok"), Some(&Json::Bool(true)));
+    assert_eq!(
+        resp.get("apps").and_then(Json::as_arr).map(|a| a.len()),
+        Some(2)
+    );
+
+    drop(reader);
+    drop(raw);
+    stop.store(true, Ordering::SeqCst);
+    let _ = std::net::TcpStream::connect(addr);
+    join.join().unwrap().unwrap();
+    fleet.shutdown();
+}
+
+#[test]
+fn dead_shard_surfaces_as_shard_unavailable() {
+    let (shards, _union, _configs) = partitioned_dbs();
+    let fleet = spawn_fleet(shards);
+    let metrics = Arc::new(Metrics::new());
+    let router = ShardRouter::connect(&fleet.addrs, metrics).unwrap();
+
+    // Kill shard 1 out from under the router.
+    fleet.stops[1].store(true, Ordering::SeqCst);
+    let _ = std::net::TcpStream::connect(&fleet.addrs[1]);
+    // Wait for the listener to actually close.
+    std::thread::sleep(Duration::from_millis(150));
+
+    let router = Mutex::new(router);
+    let req = Request::Knn {
+        series: raw_wave(0.3, 64),
+        k: 1,
+        config: None,
+    };
+    let err = dispatch_routed(&req, &router).unwrap_err();
+    assert_eq!(err.code, mrtuner::protocol::ErrorCode::ShardUnavailable, "{err}");
+
+    // The routed line path renders it as a typed v2 error.
+    let m = Metrics::new();
+    let resp = route_line(&req.to_v2(5).to_string(), &router, &m);
+    assert_eq!(resp.get("ok"), Some(&Json::Bool(false)));
+    assert_eq!(
+        resp.get("error").and_then(|e| e.get("code")).and_then(Json::as_str),
+        Some("shard_unavailable")
+    );
+    assert_eq!(m.proto_error_count(mrtuner::protocol::ErrorCode::ShardUnavailable), 1);
+
+    // Shards 0 and 2 still need a clean shutdown.
+    for i in [0usize, 2] {
+        fleet.stops[i].store(true, Ordering::SeqCst);
+        let _ = std::net::TcpStream::connect(&fleet.addrs[i]);
+    }
+    for j in fleet.joins {
+        j.join().unwrap().unwrap();
+    }
+}
