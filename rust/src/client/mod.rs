@@ -161,7 +161,13 @@ impl MrtunerClient {
     }
 
     fn try_write(&mut self, line: &str) -> std::io::Result<()> {
-        let conn = self.conn.as_mut().expect("connected");
+        let conn = match self.conn.as_mut() {
+            Some(conn) => conn,
+            None => {
+                let e = std::io::Error::new(std::io::ErrorKind::NotConnected, "not connected");
+                return Err(e);
+            }
+        };
         conn.writer.write_all(line.as_bytes())?;
         conn.writer.write_all(b"\n")?;
         conn.writer.flush()

@@ -17,6 +17,10 @@ pub struct Metrics {
     pub batches: AtomicU64,
     pub requests: AtomicU64,
     pub errors: AtomicU64,
+    /// Jobs that panicked inside the serve pool and were caught by a
+    /// worker (wired via [`crate::util::pool::PanicHook`]). Nonzero means
+    /// a handler bug: the pool survived, but the connection died mid-line.
+    pub pool_panics: AtomicU64,
     /// Index-search counters (see [`SearchStats`]): candidates examined and
     /// where the cascade culled them. `index_dtw_evals / index_candidates`
     /// is the live "DTW evaluations not avoided" ratio.
@@ -76,6 +80,10 @@ impl Metrics {
 
     pub fn inc_errors(&self) {
         self.errors.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn inc_pool_panics(&self) {
+        self.pool_panics.fetch_add(1, Ordering::Relaxed);
     }
 
     /// Fold one index search's pruning counters into the registry.
@@ -244,11 +252,12 @@ impl Metrics {
             fanout.insert_str(0, " fanout:");
         }
         format!(
-            "requests={} comparisons={} batches={} errors={} latency: n={} mean={:.1}ms sd={:.1}ms min={:.1}ms max={:.1}ms index: {} knn_batch: n={} queries={} mean={:.1}ms stream: opened={} closed={} reaped={} batches={} culled={} decisions={} mean_at={:.0} mean_frac={:.2}{proto}{fanout}",
+            "requests={} comparisons={} batches={} errors={} pool_panics={} latency: n={} mean={:.1}ms sd={:.1}ms min={:.1}ms max={:.1}ms index: {} knn_batch: n={} queries={} mean={:.1}ms stream: opened={} closed={} reaped={} batches={} culled={} decisions={} mean_at={:.0} mean_frac={:.2}{proto}{fanout}",
             self.requests.load(Ordering::Relaxed),
             self.comparisons.load(Ordering::Relaxed),
             self.batches.load(Ordering::Relaxed),
             self.errors.load(Ordering::Relaxed),
+            self.pool_panics.load(Ordering::Relaxed),
             n,
             mean * 1e3,
             std * 1e3,
@@ -283,8 +292,11 @@ mod tests {
         m.inc_batches();
         m.inc_requests();
         m.inc_errors();
+        m.inc_pool_panics();
         assert_eq!(m.comparisons.load(Ordering::Relaxed), 8);
+        assert_eq!(m.pool_panics.load(Ordering::Relaxed), 1);
         assert!(m.report().contains("comparisons=8"));
+        assert!(m.report().contains("pool_panics=1"));
     }
 
     #[test]

@@ -104,15 +104,16 @@ impl ShardRouter {
                 info.entries,
                 info.configs.len()
             );
+            let entries = info.entries;
             shards.push(Shard {
                 addr: addr.clone(),
                 base,
-                entries: info.entries,
+                entries,
                 apps: info.apps,
                 configs: info.configs,
                 client,
             });
-            base += shards.last().expect("just pushed").entries;
+            base += entries;
         }
         Ok(ShardRouter { shards, metrics })
     }
@@ -432,7 +433,13 @@ pub fn dispatch_routed(
         ClientError::Server(se) => se,
         other => ServerError::new(ErrorCode::ShardUnavailable, other.to_string()),
     };
-    let mut r = router.lock().expect("router lock");
+    // A panic while the lock was held (a bug elsewhere) poisons it; report
+    // that as a typed Internal error rather than cascading the panic into
+    // every later connection.
+    let mut r = match router.lock() {
+        Ok(guard) => guard,
+        Err(_) => return Err(ServerError::new(ErrorCode::Internal, "router lock poisoned")),
+    };
     match req {
         Request::Ping => Ok(Response::Pong),
         Request::Apps => Ok(Response::Apps(r.apps())),

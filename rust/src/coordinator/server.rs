@@ -88,7 +88,7 @@ use crate::streaming::{
     MAX_STREAM_LEN,
 };
 use crate::util::json::Json;
-use crate::util::pool::{default_workers, ThreadPool};
+use crate::util::pool::{default_workers, PanicHook, ThreadPool};
 use anyhow::{anyhow, Result};
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
@@ -166,7 +166,14 @@ impl MatchServer {
     /// Serve until the stop flag is raised. Each connection is handled on
     /// the pool; one line per request, one line per response.
     pub fn serve_with(&self, workers: usize, read_timeout: Duration) -> Result<()> {
-        let pool = ThreadPool::new(workers.max(1));
+        // A panicking handler is a bug, not a reason to shed a worker:
+        // the pool catches the unwind and this hook surfaces it in the
+        // metrics report as `pool_panics`.
+        let hook: PanicHook = {
+            let state = Arc::clone(&self.state);
+            Arc::new(move || state.metrics.inc_pool_panics())
+        };
+        let pool = ThreadPool::with_panic_hook(workers.max(1), Some(hook));
         log::info!("serving on {}", self.listener.local_addr()?);
         for conn in self.listener.incoming() {
             if self.stop.load(Ordering::SeqCst) {
@@ -690,18 +697,22 @@ struct KnnFanout;
 
 impl KnnFanout {
     fn enter() -> KnnFanout {
+        // relaxed: advisory load estimate — a stale count only mis-sizes a
+        // worker split, it never affects result correctness.
         KNN_IN_FLIGHT.fetch_add(1, Ordering::Relaxed);
         KnnFanout
     }
     /// Cores this search may use: total divided by searches in flight
     /// (including this one), floored at 1 (= serial scan).
     fn workers(&self) -> usize {
+        // relaxed: advisory — see `enter`.
         (default_workers() / KNN_IN_FLIGHT.load(Ordering::Relaxed).max(1)).max(1)
     }
 }
 
 impl Drop for KnnFanout {
     fn drop(&mut self) {
+        // relaxed: advisory — see `enter`.
         KNN_IN_FLIGHT.fetch_sub(1, Ordering::Relaxed);
     }
 }

@@ -8,9 +8,11 @@
 //!   result. Ties on distance resolve to the lower candidate id, exactly
 //!   like the linear scan.
 //! * [`knn_parallel`] — candidates fanned over `crate::util::pool::par_map`
-//!   workers that **share one best-k cutoff** through an atomic `u64`
-//!   (f64-bits, CAS-min), so a tight distance found on one core abandons
-//!   hopeless DPs on every other core. The deterministic
+//!   workers that **share one best-k cutoff** through
+//!   [`crate::util::sync::AtomicF64Min`] (CAS-min over the f64 bit
+//!   pattern; exhaustively model-checked by `tools/loom-models`), so a
+//!   tight distance found on one core abandons hopeless DPs on every
+//!   other core. The deterministic
 //!   `(distance, index)` merge makes the result equal the serial top-k
 //!   *exactly* (bit-identical distances; pinned by
 //!   `rust/tests/query_engine.rs`).
@@ -31,7 +33,8 @@ use crate::dtw::band_radius;
 use crate::dtw::banded::dtw_banded_distance_cutoff_with;
 use crate::dtw::scratch::{with_thread_scratch, DtwScratch};
 use crate::util::pool::par_map;
-use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use crate::util::sync::AtomicF64Min;
+use std::sync::atomic::{AtomicUsize, Ordering};
 
 /// One search result: candidate id (position in the candidate set / the
 /// database) and its exact banded-DTW distance to the query.
@@ -71,16 +74,33 @@ fn push_neighbor(best: &mut Vec<Neighbor>, k: usize, nb: Neighbor) {
     }
 }
 
-/// Publish `v` into the shared cutoff if it is smaller (CAS-min on the
-/// f64 bit pattern; distances are finite and non-negative).
-fn publish_min(shared: &AtomicU64, v: f64) {
-    let mut cur = shared.load(Ordering::Relaxed);
-    while v < f64::from_bits(cur) {
-        match shared.compare_exchange_weak(cur, v.to_bits(), Ordering::Relaxed, Ordering::Relaxed)
-        {
-            Ok(_) => break,
-            Err(seen) => cur = seen,
-        }
+/// Under `--features audit`, assert the cascade's admissibility for one
+/// candidate that survived to an exact DP evaluation: every lower bound
+/// that let it through must be ≤ the exact banded distance (plus the same
+/// f64 slack [`cutoff`] grants the pruning direction). An inadmissible
+/// bound here means some *other* candidate may have been wrongly pruned —
+/// this tripwire fires on real query traffic, not just synthetic tests.
+#[cfg(feature = "audit")]
+fn audit_admissible(query: &[f64], series: &[f64], env: &Envelope, r: usize, distance: f64) {
+    let slack = 1e-9 * (1.0 + distance.abs());
+    let kim = lb_kim(query, series);
+    debug_assert!(
+        kim <= distance + slack,
+        "audit: LB_Kim {kim} exceeds exact banded DTW {distance}"
+    );
+    let keogh = lb_keogh(query, env, r);
+    debug_assert!(
+        keogh <= distance + slack,
+        "audit: LB_Keogh {keogh} exceeds exact banded DTW {distance}"
+    );
+    let n = query.len();
+    if n >= PAA_MIN_LEN {
+        let qext = super::lb::query_extrema(query, DEFAULT_BLOCK);
+        let paa = lb_paa(&qext, n, DEFAULT_BLOCK, env, r);
+        debug_assert!(
+            paa <= distance + slack,
+            "audit: LB_PAA {paa} exceeds exact banded DTW {distance}"
+        );
     }
 }
 
@@ -145,6 +165,8 @@ pub fn knn_with<'a>(
             None => stats.abandoned += 1,
             Some(distance) => {
                 stats.dtw_evals += 1;
+                #[cfg(feature = "audit")]
+                audit_admissible(query, series, env, r, distance);
                 push_neighbor(&mut best, k, Neighbor { index, distance });
             }
         }
@@ -185,7 +207,7 @@ pub fn knn_parallel<'a>(
     } else {
         Vec::new()
     };
-    let shared = AtomicU64::new(f64::INFINITY.to_bits());
+    let shared = AtomicF64Min::new(f64::INFINITY);
     let next = AtomicUsize::new(0);
     // Small claim ranges keep the load balanced when candidate costs vary;
     // each claim is one atomic increment.
@@ -197,6 +219,9 @@ pub fn knn_parallel<'a>(
             let mut stats = SearchStats::default();
             let mut best: Vec<Neighbor> = Vec::new();
             loop {
+                // relaxed: monotone claim counter — the fetch_add itself
+                // is what makes claims disjoint; candidate data is shared
+                // read-only, so no release/acquire pairing is needed.
                 let start = next.fetch_add(chunk, Ordering::Relaxed);
                 if start >= candidates.len() {
                     break;
@@ -213,7 +238,7 @@ pub fn knn_parallel<'a>(
                     } else {
                         f64::INFINITY
                     };
-                    let bsf = f64::from_bits(shared.load(Ordering::Relaxed)).min(local);
+                    let bsf = shared.load().min(local);
                     let cut = cutoff(bsf);
 
                     if lb_kim(query, series) > cut {
@@ -233,9 +258,11 @@ pub fn knn_parallel<'a>(
                         None => stats.abandoned += 1,
                         Some(distance) => {
                             stats.dtw_evals += 1;
+                            #[cfg(feature = "audit")]
+                            audit_admissible(query, series, env, r, distance);
                             push_neighbor(&mut best, k, Neighbor { index, distance });
                             if best.len() == k {
-                                publish_min(&shared, best[k - 1].distance);
+                                shared.fetch_min(best[k - 1].distance);
                             }
                         }
                     }
@@ -347,6 +374,8 @@ pub fn knn_batch<'a>(
                         None => stats.abandoned += 1,
                         Some(distance) => {
                             stats.dtw_evals += 1;
+                            #[cfg(feature = "audit")]
+                            audit_admissible(query, series, env, r, distance);
                             push_neighbor(best, k, Neighbor { index, distance });
                         }
                     }

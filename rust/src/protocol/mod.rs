@@ -115,12 +115,18 @@ impl ErrorCode {
         ErrorCode::ALL.iter().copied().find(|c| c.as_str() == s)
     }
 
-    /// Dense index (for per-code metric counters).
+    /// Dense index (for per-code metric counters). Matches the order of
+    /// [`ErrorCode::ALL`] by construction.
     pub fn index(self) -> usize {
-        ErrorCode::ALL
-            .iter()
-            .position(|c| *c == self)
-            .expect("code in ALL")
+        match self {
+            ErrorCode::BadRequest => 0,
+            ErrorCode::UnknownCommand => 1,
+            ErrorCode::UnknownSession => 2,
+            ErrorCode::WrongVersion => 3,
+            ErrorCode::TooLarge => 4,
+            ErrorCode::ShardUnavailable => 5,
+            ErrorCode::Internal => 6,
+        }
     }
 }
 

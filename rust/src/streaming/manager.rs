@@ -47,6 +47,8 @@ impl SessionManager {
 
     /// Register a session, returning its id.
     pub fn open(&self, session: StreamSession) -> u64 {
+        // relaxed: monotone id counter — uniqueness is all that matters,
+        // no other memory is published through it.
         let id = self.next.fetch_add(1, Ordering::Relaxed) + 1;
         let slot = Arc::new(Slot {
             session: Mutex::new(session),

@@ -220,8 +220,24 @@ impl StreamSession {
         // 1. Monotone lower bounds for every live candidate. Prefix
         //    distances from earlier rounds were computed under an older
         //    normalization, so drop them; only this round's probes count.
+        //    Under `--features audit`, the documented monotonicity (the
+        //    bound never decreases as the stream grows) is asserted on
+        //    every live candidate — but only while the band geometry is
+        //    stable: a `Known`/`AtMost` hint the prefix has outgrown
+        //    self-corrects and legitimately resets the bound.
+        #[cfg(feature = "audit")]
+        let geometry_stable = match flen {
+            FinalLen::Known(n) | FinalLen::AtMost(n) => p <= n,
+        };
         for c in self.cands.iter_mut().filter(|c| !c.culled) {
-            c.lb = prefix_lb(&self.filtered, &self.norm, domain, flen, idx.envelope(c.pos));
+            let lb = prefix_lb(&self.filtered, &self.norm, domain, flen, idx.envelope(c.pos));
+            #[cfg(feature = "audit")]
+            debug_assert!(
+                !geometry_stable || lb >= c.lb - 1e-9 * (1.0 + c.lb.abs()),
+                "audit: prefix_lb regressed from {} to {lb} at p={p}",
+                c.lb
+            );
+            c.lb = lb;
             c.dist = None;
             c.floor = c.lb;
             self.stats.lb_evals += 1;

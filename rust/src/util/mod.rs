@@ -14,3 +14,4 @@ pub mod logging;
 pub mod pool;
 pub mod rng;
 pub mod stats;
+pub mod sync;

@@ -4,8 +4,17 @@
 //! are simple: fan a batch of independent comparisons / simulations over the
 //! cores and join. `par_map` uses `std::thread::scope`, so closures can
 //! borrow from the caller without `'static` bounds.
+//!
+//! Both primitives have exact panic semantics (pinned by the tests below):
+//! a panic inside `par_map`'s closure propagates to the caller once the
+//! scope joins, while a panic inside a [`ThreadPool`] job is *contained* —
+//! the worker catches the unwind, bumps a counter (and the optional
+//! [`PanicHook`], which the server wires to its metrics), and keeps
+//! serving. The chunk-claim protocol is additionally model-checked by
+//! `tools/loom-models`.
 
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
 use std::thread;
 
@@ -16,7 +25,10 @@ pub fn default_workers() -> usize {
 }
 
 /// Apply `f` to every element of `items` using up to `workers` threads,
-/// preserving input order in the output. Panics in `f` propagate.
+/// preserving input order in the output. Panics in `f` propagate: the
+/// scope joins every worker and resumes the unwind in the caller (other
+/// workers finish the chunks they already claimed; no deadlock, no
+/// poisoned slot is ever read).
 ///
 /// Work is claimed in contiguous chunks through one atomic counter and
 /// each chunk's results are written through its own disjoint `&mut` output
@@ -52,6 +64,10 @@ where
     thread::scope(|scope| {
         for _ in 0..workers {
             scope.spawn(|| loop {
+                // relaxed: monotone claim counter — fetch_add alone makes
+                // the claims disjoint, and the chunk's data is handed
+                // over through the Mutex (model-checked in
+                // tools/loom-models).
                 let ci = next.fetch_add(1, Ordering::Relaxed);
                 if ci >= tasks.len() {
                     break;
@@ -71,10 +87,17 @@ where
     out.into_iter().map(|r| r.expect("worker filled slot")).collect()
 }
 
-/// Long-lived FIFO thread pool for the serve loop: jobs are boxed closures.
+/// Shared callback invoked once per job panic a pool worker catches —
+/// the server installs one that bumps its `Metrics` counter.
+pub type PanicHook = Arc<dyn Fn() + Send + Sync>;
+
+/// Long-lived FIFO thread pool for the serve loop: jobs are boxed
+/// closures. Panicking jobs are caught and counted, never fatal — see
+/// [`ThreadPool::panics`].
 pub struct ThreadPool {
     tx: Option<mpsc::Sender<Job>>,
     handles: Vec<thread::JoinHandle<()>>,
+    panics: Arc<AtomicU64>,
 }
 
 type Job = Box<dyn FnOnce() + Send + 'static>;
@@ -82,25 +105,54 @@ type Job = Box<dyn FnOnce() + Send + 'static>;
 impl ThreadPool {
     /// Spawn a pool with `workers` threads.
     pub fn new(workers: usize) -> Self {
+        ThreadPool::with_panic_hook(workers, None)
+    }
+
+    /// [`ThreadPool::new`], additionally invoking `hook` every time a
+    /// worker catches a panicking job.
+    pub fn with_panic_hook(workers: usize, hook: Option<PanicHook>) -> Self {
         let workers = workers.max(1);
         let (tx, rx) = mpsc::channel::<Job>();
         let rx = Arc::new(Mutex::new(rx));
+        let panics = Arc::new(AtomicU64::new(0));
         let handles = (0..workers)
             .map(|i| {
                 let rx = Arc::clone(&rx);
+                let panics = Arc::clone(&panics);
+                let hook = hook.clone();
                 thread::Builder::new()
                     .name(format!("mrtuner-worker-{i}"))
                     .spawn(move || loop {
+                        // The receiver guard is a temporary of this
+                        // statement — dropped before the job runs, so a
+                        // panicking job can never poison the rx lock.
                         let job = rx.lock().expect("pool rx lock").recv();
                         match job {
-                            Ok(job) => job(),
+                            Ok(job) => {
+                                // A worker must survive a hostile job:
+                                // before this catch, every panic killed
+                                // its worker and silently shrank the pool
+                                // until execute() died on a channel with
+                                // no receivers left.
+                                if catch_unwind(AssertUnwindSafe(job)).is_err() {
+                                    // relaxed: monotone statistics counter.
+                                    panics.fetch_add(1, Ordering::Relaxed);
+                                    if let Some(hook) = &hook {
+                                        hook();
+                                    }
+                                }
+                            }
                             Err(_) => break, // all senders dropped
                         }
                     })
                     .expect("spawn worker")
             })
             .collect();
-        ThreadPool { tx: Some(tx), handles }
+        ThreadPool {
+            tx: Some(tx),
+            handles,
+            panics,
+        }
     }
 
     /// Enqueue a job.
@@ -110,6 +162,12 @@ impl ThreadPool {
             .expect("pool is live")
             .send(Box::new(f))
             .expect("pool worker alive");
+    }
+
+    /// Jobs that panicked (and were caught) since the pool started.
+    pub fn panics(&self) -> u64 {
+        // relaxed: monotone statistics counter.
+        self.panics.load(Ordering::Relaxed)
     }
 }
 
@@ -125,7 +183,7 @@ impl Drop for ThreadPool {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use std::sync::atomic::AtomicU64;
+    use crate::util::rng::Pcg32;
 
     #[test]
     fn par_map_preserves_order() {
@@ -167,6 +225,41 @@ mod tests {
     }
 
     #[test]
+    fn par_map_panics_propagate() {
+        // The doc claim, made real: a panic in `f` reaches the caller
+        // (via the scope join) instead of deadlocking on a half-filled
+        // slot vector or being swallowed.
+        let xs: Vec<u64> = (0..64).collect();
+        let result = catch_unwind(|| {
+            par_map(&xs, 4, |&x| {
+                assert!(x != 13, "injected failure");
+                x
+            })
+        });
+        assert!(result.is_err(), "panic in f must propagate to the caller");
+    }
+
+    #[test]
+    fn par_map_survives_yield_injection() {
+        // Seeded schedule perturbation for the chunk-claim path: random
+        // yields inside `f` shuffle which worker claims which chunk.
+        // Whatever the interleaving, every slot must be filled exactly
+        // once and order preserved.
+        let want: Vec<u64> = (0..257).map(|x| x * 3).collect();
+        for seed in 0..8u64 {
+            let xs: Vec<u64> = (0..257).collect();
+            let ys = par_map(&xs, 4, |&x| {
+                let mut g = Pcg32::new(seed, x);
+                for _ in 0..g.below(4) {
+                    thread::yield_now();
+                }
+                x * 3
+            });
+            assert_eq!(ys, want, "seed={seed}");
+        }
+    }
+
+    #[test]
     fn pool_runs_all_jobs() {
         let counter = Arc::new(AtomicU64::new(0));
         {
@@ -180,5 +273,48 @@ mod tests {
             // Drop joins: all jobs must have completed.
         }
         assert_eq!(counter.load(Ordering::SeqCst), 100);
+    }
+
+    #[test]
+    fn pool_survives_panicking_jobs() {
+        let counter = Arc::new(AtomicU64::new(0));
+        let caught = Arc::new(AtomicU64::new(0));
+        {
+            let c = Arc::clone(&caught);
+            let hook: PanicHook = Arc::new(move || {
+                c.fetch_add(1, Ordering::SeqCst);
+            });
+            // One worker = worst case: every later job depends on that
+            // single thread outliving both hostile jobs.
+            let pool = ThreadPool::with_panic_hook(1, Some(hook));
+            pool.execute(|| panic!("hostile first job"));
+            for i in 0..100u64 {
+                let c = Arc::clone(&counter);
+                pool.execute(move || {
+                    c.fetch_add(1, Ordering::SeqCst);
+                });
+                if i == 50 {
+                    pool.execute(|| panic!("hostile mid-stream job"));
+                }
+            }
+            // Drop joins; under the old kill-on-panic behavior this
+            // deadlocked (no worker left) or execute() panicked.
+        }
+        assert_eq!(counter.load(Ordering::SeqCst), 100, "jobs lost after a panic");
+        assert_eq!(caught.load(Ordering::SeqCst), 2, "hook fires once per caught panic");
+    }
+
+    #[test]
+    fn pool_counts_caught_panics() {
+        let pool = ThreadPool::new(2);
+        assert_eq!(pool.panics(), 0);
+        pool.execute(|| panic!("a"));
+        pool.execute(|| panic!("b"));
+        let deadline = std::time::Instant::now() + std::time::Duration::from_secs(30);
+        while pool.panics() < 2 {
+            assert!(std::time::Instant::now() < deadline, "panics never counted");
+            thread::yield_now();
+        }
+        assert_eq!(pool.panics(), 2);
     }
 }

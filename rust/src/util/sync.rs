@@ -1,0 +1,134 @@
+//! Loom-switchable atomic primitives for the concurrent scan paths.
+//!
+//! This module is deliberately self-contained (std only, no `crate::`
+//! references): the workspace-excluded `tools/loom-models` crate includes
+//! it textually via `#[path]` and compiles it with `--cfg loom`, swapping
+//! the std atomics for loom's model-checked ones. That makes the exact
+//! code running in production the code loom exhaustively interleaves —
+//! not a hand-copied replica that can drift.
+
+#[cfg(loom)]
+use loom::sync::atomic::{AtomicU64, Ordering};
+#[cfg(not(loom))]
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// A shared f64 that only ever decreases: CAS-min over the bit pattern.
+///
+/// This is the cross-thread best-so-far cutoff of
+/// `crate::index::knn::knn_parallel`. Distances are finite and
+/// non-negative, so their IEEE-754 bit patterns order like the values and
+/// a `u64` compare-exchange implements min exactly. A NaN argument is
+/// never published (`v < cur` is false), and the value read by [`load`]
+/// is always either the initial value or something some thread passed to
+/// [`fetch_min`] — never a torn mix.
+///
+/// All accesses are `Relaxed` on purpose: the cutoff is *advisory*. A
+/// stale read can only make a bound check less aggressive (a candidate
+/// survives that a fresher cutoff would have pruned); it can never prune
+/// a true neighbour, because every published value is a genuine k-th-best
+/// distance some thread proved. Correctness never rides on this cell's
+/// ordering — only wasted work does.
+///
+/// [`load`]: AtomicF64Min::load
+/// [`fetch_min`]: AtomicF64Min::fetch_min
+#[derive(Debug)]
+pub struct AtomicF64Min {
+    bits: AtomicU64,
+}
+
+impl AtomicF64Min {
+    /// A new cell holding `v` (normally `f64::INFINITY`).
+    pub fn new(v: f64) -> AtomicF64Min {
+        AtomicF64Min {
+            bits: AtomicU64::new(v.to_bits()),
+        }
+    }
+
+    /// Current value. May be stale by the time the caller uses it — see
+    /// the type docs for why that is fine.
+    pub fn load(&self) -> f64 {
+        // relaxed: advisory cutoff — staleness costs work, not answers.
+        f64::from_bits(self.bits.load(Ordering::Relaxed))
+    }
+
+    /// Lower the cell to `v` if `v` is smaller than the current value.
+    /// Lock-free CAS loop; concurrent calls converge to the global min.
+    /// No other memory is released through this cell — the value is the
+    /// whole payload — hence the relaxed orderings throughout.
+    pub fn fetch_min(&self, v: f64) {
+        // relaxed: advisory cutoff, the value is the whole payload.
+        let mut cur = self.bits.load(Ordering::Relaxed);
+        while v < f64::from_bits(cur) {
+            match self.bits.compare_exchange_weak(
+                cur,
+                v.to_bits(),
+                Ordering::Relaxed, // relaxed: advisory cutoff (success)
+                Ordering::Relaxed, // relaxed: advisory cutoff (failure)
+            ) {
+                Ok(_) => break,
+                Err(seen) => cur = seen,
+            }
+        }
+    }
+}
+
+// Loom atomics panic when used outside `loom::model`, so these std-based
+// unit tests must not compile under --cfg loom; the loom-models crate has
+// the model-checked equivalents.
+#[cfg(all(test, not(loom)))]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn starts_at_initial_value() {
+        let m = AtomicF64Min::new(f64::INFINITY);
+        assert_eq!(m.load(), f64::INFINITY);
+    }
+
+    #[test]
+    fn keeps_the_minimum_of_published_values() {
+        let m = AtomicF64Min::new(f64::INFINITY);
+        m.fetch_min(3.5);
+        assert_eq!(m.load(), 3.5);
+        m.fetch_min(7.0);
+        assert_eq!(m.load(), 3.5, "larger value must not raise the cell");
+        m.fetch_min(1.25);
+        assert_eq!(m.load(), 1.25);
+    }
+
+    #[test]
+    fn nan_is_never_published() {
+        let m = AtomicF64Min::new(2.0);
+        m.fetch_min(f64::NAN);
+        assert_eq!(m.load(), 2.0);
+    }
+
+    #[test]
+    fn zero_and_negative_zero() {
+        let m = AtomicF64Min::new(0.0);
+        m.fetch_min(-0.0);
+        // -0.0 < 0.0 is false, so the bit pattern stays +0.0.
+        assert_eq!(m.load().to_bits(), 0.0_f64.to_bits());
+    }
+
+    #[test]
+    fn concurrent_publishers_converge_to_global_min() {
+        let m = Arc::new(AtomicF64Min::new(f64::INFINITY));
+        let mut handles = Vec::new();
+        for t in 0..8u32 {
+            let m = Arc::clone(&m);
+            handles.push(std::thread::spawn(move || {
+                for i in 0..1000u32 {
+                    let v = f64::from(t * 1000 + i) + 1.0;
+                    m.fetch_min(v);
+                    assert!(m.load() <= v, "cell above a published value");
+                }
+            }));
+        }
+        for h in handles {
+            h.join().expect("publisher thread");
+        }
+        assert_eq!(m.load(), 1.0, "global min is thread 0's first publish");
+    }
+}

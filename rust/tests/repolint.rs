@@ -1,0 +1,17 @@
+//! Tier-1 enforcement of the repo's own static-analysis pass: the whole
+//! `rust/src` tree must be clean under every mrtuner-lint rule. See
+//! `tools/mrtuner-lint/README.md` for the rules and the pragma syntax.
+
+use std::path::Path;
+
+#[test]
+fn src_tree_is_lint_clean() {
+    let root = Path::new(concat!(env!("CARGO_MANIFEST_DIR"), "/src"));
+    let violations = mrtuner_lint::lint_dir(root).expect("walk rust/src");
+    assert!(
+        violations.is_empty(),
+        "mrtuner-lint found {} violation(s):\n{}",
+        violations.len(),
+        mrtuner_lint::render(&violations)
+    );
+}

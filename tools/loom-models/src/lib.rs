@@ -1,0 +1,152 @@
+//! Exhaustive interleaving checks (loom) for mrtuner's concurrency
+//! primitives. Run from this directory with:
+//!
+//! ```sh
+//! RUSTFLAGS="--cfg loom" cargo test --release
+//! ```
+//!
+//! Three models:
+//!
+//! 1. [`sync::AtomicF64Min`] — the *production source file*
+//!    (`rust/src/util/sync.rs`, included below via `#[path]`, which swaps
+//!    its std atomics for loom's under `--cfg loom`): concurrent
+//!    `fetch_min` publishers must converge to the global minimum and a
+//!    `load` can never observe a value above one the loading thread
+//!    already published.
+//! 2. The `par_map` chunk-claim protocol (`rust/src/util/pool.rs`): a
+//!    relaxed `fetch_add` claim counter must hand every index to exactly
+//!    one worker — the disjointness that makes the unsynchronized
+//!    result-slot writes race-free.
+//! 3. The `ThreadPool` shutdown protocol (`Drop` closes the channel, the
+//!    worker drains then exits): modeled with a claim counter plus a
+//!    closed flag, since loom has no mpsc — queued jobs all run before
+//!    the worker terminates, under every interleaving of the close.
+//!
+//! Without `--cfg loom` the models compile away and `cargo test` just
+//! runs `sync.rs`'s std-based unit tests.
+
+#[path = "../../../rust/src/util/sync.rs"]
+pub mod sync;
+
+#[cfg(all(loom, test))]
+mod models {
+    use crate::sync::AtomicF64Min;
+    use loom::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+    use loom::sync::Arc;
+    use loom::thread;
+
+    #[test]
+    fn atomic_f64_min_converges_and_never_rises() {
+        loom::model(|| {
+            let m = Arc::new(AtomicF64Min::new(f64::INFINITY));
+            let handles: Vec<_> = [3.0_f64, 1.0, 2.0]
+                .iter()
+                .map(|&v| {
+                    let m = Arc::clone(&m);
+                    thread::spawn(move || {
+                        m.fetch_min(v);
+                        // After publishing v, no load may exceed v.
+                        assert!(m.load() <= v, "cell above a published value");
+                    })
+                })
+                .collect();
+            for h in handles {
+                h.join().expect("publisher");
+            }
+            assert_eq!(m.load(), 1.0, "global minimum lost");
+        });
+    }
+
+    #[test]
+    fn atomic_f64_min_load_sees_only_published_values() {
+        loom::model(|| {
+            let m = Arc::new(AtomicF64Min::new(f64::INFINITY));
+            let writer = {
+                let m = Arc::clone(&m);
+                thread::spawn(move || m.fetch_min(0.5))
+            };
+            // Concurrent reader: the only legal observations are the
+            // initial value and the published one — a torn or invented
+            // bit pattern would fail both comparisons.
+            let seen = m.load();
+            assert!(seen == f64::INFINITY || seen == 0.5, "torn read: {seen}");
+            writer.join().expect("writer");
+            assert_eq!(m.load(), 0.5);
+        });
+    }
+
+    #[test]
+    fn par_map_chunk_claims_are_disjoint_and_cover() {
+        loom::model(|| {
+            // The exact claim protocol of pool.rs::par_map (chunk = 1 for
+            // tractability): workers fetch_add(Relaxed) a shared counter
+            // and own [start, start+chunk). Every index must be claimed by
+            // exactly one worker.
+            let next = Arc::new(AtomicUsize::new(0));
+            let n = 3usize;
+            let handles: Vec<_> = (0..2)
+                .map(|_| {
+                    let next = Arc::clone(&next);
+                    thread::spawn(move || {
+                        let mut mine = Vec::new();
+                        loop {
+                            // relaxed: mirrors the production claim order.
+                            let i = next.fetch_add(1, Ordering::Relaxed);
+                            if i >= n {
+                                break;
+                            }
+                            mine.push(i);
+                        }
+                        mine
+                    })
+                })
+                .collect();
+            let mut all: Vec<usize> = Vec::new();
+            for h in handles {
+                all.extend(h.join().expect("worker"));
+            }
+            all.sort_unstable();
+            assert_eq!(all, vec![0, 1, 2], "claims must partition the input");
+        });
+    }
+
+    #[test]
+    fn thread_pool_shutdown_drains_queue_before_exit() {
+        loom::model(|| {
+            // ThreadPool::drop closes the sender, then joins; the worker
+            // keeps receiving until the channel reports closed-and-empty.
+            // Modeled as: claim jobs off a counter; exit only once closed
+            // AND nothing is left to claim.
+            let todo = Arc::new(AtomicUsize::new(2));
+            let done = Arc::new(AtomicUsize::new(0));
+            let closed = Arc::new(AtomicBool::new(false));
+            let worker = {
+                let todo = Arc::clone(&todo);
+                let done = Arc::clone(&done);
+                let closed = Arc::clone(&closed);
+                thread::spawn(move || loop {
+                    let left = todo.load(Ordering::Acquire);
+                    if left > 0 {
+                        let claim = todo.compare_exchange(
+                            left,
+                            left - 1,
+                            Ordering::AcqRel,
+                            Ordering::Acquire,
+                        );
+                        if claim.is_ok() {
+                            done.fetch_add(1, Ordering::Release);
+                        }
+                    } else if closed.load(Ordering::Acquire) {
+                        break;
+                    } else {
+                        thread::yield_now();
+                    }
+                })
+            };
+            closed.store(true, Ordering::Release);
+            worker.join().expect("worker");
+            assert_eq!(done.load(Ordering::Acquire), 2, "job dropped at shutdown");
+            assert_eq!(todo.load(Ordering::Acquire), 0);
+        });
+    }
+}

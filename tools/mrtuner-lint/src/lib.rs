@@ -1,0 +1,763 @@
+//! Repo-native static analysis for the mrtuner tree.
+//!
+//! rustc and clippy cannot see repo-level policy: which modules must answer
+//! with typed `ErrorCode` replies instead of panicking, which atomics may be
+//! `Relaxed` without an explanation, which kernels must not allocate. This
+//! crate is a small, dependency-free lexer plus rule engine that encodes
+//! those invariants. It runs offline as part of tier-1 (the
+//! `rust/tests/repolint.rs` integration test links it as a dev-dependency)
+//! and as a CLI: `cargo run -p mrtuner-lint -- rust/src`.
+//!
+//! The lexer is comment/string/char-literal aware (line and nested block
+//! comments, escapes, raw strings, byte strings, lifetimes vs char
+//! literals) but deliberately not a parser: rules are token scans over
+//! masked source, with `#[cfg(test)]` items and non-kernel functions
+//! excluded by brace matching.
+//!
+//! Rules (paths are relative to the linted root, normally `rust/src`):
+//!
+//! - `no-panic` — no `.unwrap()` / `.expect(` / `panic!` in non-test code
+//!   under `protocol/`, `client/`, `coordinator/server.rs`,
+//!   `coordinator/router.rs`. Those layers answer malformed input with
+//!   typed `ErrorCode` replies; a panic there tears down a connection (or
+//!   poisons a lock) instead of reporting the error.
+//! - `relaxed-comment` — every `Ordering::Relaxed` outside `metrics.rs`
+//!   must carry a `// relaxed:` justification on the same line or in the
+//!   contiguous comment block directly above (a code line in between
+//!   breaks the block). Relaxed is correct in this codebase exactly when
+//!   the value is a monotone counter or an advisory cutoff; the comment
+//!   forces the author to say which.
+//! - `kernel-alloc` — no allocation constructs (`Vec::new`, `vec![`,
+//!   `.to_vec(`, `.collect`, `Box::new`, `.clone()`) inside the zero-alloc
+//!   `*_with` kernel functions of `dtw/`. Those functions are the
+//!   scratch-arena hot path; an allocation there silently reintroduces the
+//!   per-call cost the arenas removed.
+//! - `no-io` — no `std::time` / `println!` / `eprintln!` in `dtw/`,
+//!   `signal/`, `index/` library code. Kernels stay deterministic and
+//!   side-effect free; timing and reporting belong to the coordinator.
+//!
+//! Any finding can be silenced with an inline pragma on the same or the
+//! preceding line: `// lint: allow(<rule>)`.
+
+use std::fmt;
+use std::fs;
+use std::io;
+use std::path::{Path, PathBuf};
+
+/// Rule id: panics banned in typed-error zones.
+pub const NO_PANIC: &str = "no-panic";
+/// Rule id: `Ordering::Relaxed` needs a `// relaxed:` justification.
+pub const RELAXED_COMMENT: &str = "relaxed-comment";
+/// Rule id: no allocation constructs in `*_with` kernels under `dtw/`.
+pub const KERNEL_ALLOC: &str = "kernel-alloc";
+/// Rule id: no time/printing in kernel library code.
+pub const NO_IO: &str = "no-io";
+
+/// One finding, ready to print as `file:line: [rule] message`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Violation {
+    pub file: String,
+    pub line: usize,
+    pub rule: &'static str,
+    pub message: String,
+}
+
+impl fmt::Display for Violation {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}:{}: [{}] {}", self.file, self.line, self.rule, self.message)
+    }
+}
+
+/// Source split into two equal-shape ASCII masks: `code` keeps only bytes
+/// outside comments and literals, `comment` keeps only comment text.
+/// Newlines survive in both, so line numbers align with the input; every
+/// masked or non-ASCII byte becomes a space.
+pub struct Masked {
+    pub code: String,
+    pub comment: String,
+}
+
+fn is_ident_byte(b: u8) -> bool {
+    b == b'_' || b.is_ascii_alphanumeric()
+}
+
+fn put(src: &[u8], mask: &mut [u8], i: usize) {
+    if i < src.len() && src[i].is_ascii() && src[i] != b'\n' {
+        mask[i] = src[i];
+    }
+}
+
+fn skip_string(s: &[u8], open: usize) -> usize {
+    let n = s.len();
+    let mut i = open + 1;
+    while i < n {
+        match s[i] {
+            b'\\' => i += 2,
+            b'"' => return i + 1,
+            _ => i += 1,
+        }
+    }
+    n
+}
+
+fn skip_raw_string(s: &[u8], content_start: usize, hashes: usize) -> usize {
+    let n = s.len();
+    let mut i = content_start;
+    while i < n {
+        if s[i] == b'"' {
+            let tail = &s[i + 1..];
+            if tail.len() >= hashes && tail[..hashes].iter().all(|&b| b == b'#') {
+                return i + 1 + hashes;
+            }
+        }
+        i += 1;
+    }
+    n
+}
+
+fn skip_char(s: &[u8], open: usize) -> usize {
+    let n = s.len();
+    let mut i = open + 1;
+    if i < n && s[i] == b'\\' {
+        i += 2;
+    }
+    while i < n && s[i] != b'\'' {
+        i += 1;
+    }
+    (i + 1).min(n)
+}
+
+fn utf8_len(b: u8) -> usize {
+    if b < 0x80 {
+        1
+    } else if b >= 0xf0 {
+        4
+    } else if b >= 0xe0 {
+        3
+    } else {
+        2
+    }
+}
+
+/// Lex `src` into code and comment masks. Never fails: unterminated
+/// literals or comments simply mask through to the end of input.
+pub fn mask(src: &str) -> Masked {
+    let s = src.as_bytes();
+    let n = s.len();
+    let mut code = vec![b' '; n];
+    let mut comment = vec![b' '; n];
+    for (i, &b) in s.iter().enumerate() {
+        if b == b'\n' {
+            code[i] = b'\n';
+            comment[i] = b'\n';
+        }
+    }
+    let mut i = 0;
+    while i < n {
+        let b = s[i];
+        if b == b'/' && i + 1 < n && s[i + 1] == b'/' {
+            while i < n && s[i] != b'\n' {
+                put(s, &mut comment, i);
+                i += 1;
+            }
+        } else if b == b'/' && i + 1 < n && s[i + 1] == b'*' {
+            put(s, &mut comment, i);
+            put(s, &mut comment, i + 1);
+            i += 2;
+            let mut depth = 1usize;
+            while i < n && depth > 0 {
+                if s[i] == b'/' && i + 1 < n && s[i + 1] == b'*' {
+                    depth += 1;
+                    put(s, &mut comment, i);
+                    put(s, &mut comment, i + 1);
+                    i += 2;
+                } else if s[i] == b'*' && i + 1 < n && s[i + 1] == b'/' {
+                    depth -= 1;
+                    put(s, &mut comment, i);
+                    put(s, &mut comment, i + 1);
+                    i += 2;
+                } else {
+                    put(s, &mut comment, i);
+                    i += 1;
+                }
+            }
+        } else if b == b'"' {
+            i = skip_string(s, i);
+        } else if (b == b'r' || b == b'b') && (i == 0 || !is_ident_byte(s[i - 1])) {
+            // Possible literal prefix: r", r#", b", br", br#", b'x'.
+            let mut j = i + 1;
+            let mut raw = b == b'r';
+            if b == b'b' && j < n && s[j] == b'r' {
+                raw = true;
+                j += 1;
+            }
+            if raw {
+                let mut hashes = 0usize;
+                while j < n && s[j] == b'#' {
+                    hashes += 1;
+                    j += 1;
+                }
+                if j < n && s[j] == b'"' {
+                    i = skip_raw_string(s, j + 1, hashes);
+                } else {
+                    // `r#ident` raw identifier or a plain identifier.
+                    put(s, &mut code, i);
+                    i += 1;
+                }
+            } else if j < n && s[j] == b'"' {
+                i = skip_string(s, j);
+            } else if j < n && s[j] == b'\'' {
+                i = skip_char(s, j);
+            } else {
+                put(s, &mut code, i);
+                i += 1;
+            }
+        } else if b == b'\'' {
+            // Char literal ('x', '\n', possibly multi-byte) vs lifetime
+            // ('a in types, loop labels): a literal has a closing quote
+            // right after one escaped or plain character.
+            if i + 1 < n && s[i + 1] == b'\\' {
+                i = skip_char(s, i);
+            } else {
+                let mut j = i + 1;
+                if j < n {
+                    j += utf8_len(s[j]);
+                }
+                if i + 1 < n && j < n && s[j] == b'\'' {
+                    i = j + 1;
+                } else {
+                    put(s, &mut code, i);
+                    i += 1;
+                }
+            }
+        } else {
+            put(s, &mut code, i);
+            i += 1;
+        }
+    }
+    Masked {
+        code: String::from_utf8(code).expect("code mask is ascii"),
+        comment: String::from_utf8(comment).expect("comment mask is ascii"),
+    }
+}
+
+fn match_brace(b: &[u8], open: usize) -> usize {
+    let mut depth = 0i64;
+    let mut i = open;
+    while i < b.len() {
+        match b[i] {
+            b'{' => depth += 1,
+            b'}' => {
+                depth -= 1;
+                if depth == 0 {
+                    return i + 1;
+                }
+            }
+            _ => {}
+        }
+        i += 1;
+    }
+    b.len()
+}
+
+/// Byte ranges of `#[cfg(test)]` items (attribute through the matching
+/// closing brace, or through `;` for brace-less items).
+fn test_ranges(code: &str) -> Vec<(usize, usize)> {
+    const ATTR: &str = "#[cfg(test)]";
+    let b = code.as_bytes();
+    let mut out = Vec::new();
+    let mut from = 0;
+    while let Some(p) = code[from..].find(ATTR) {
+        let start = from + p;
+        let mut j = start + ATTR.len();
+        let mut end = b.len();
+        while j < b.len() {
+            if b[j] == b';' {
+                end = j + 1;
+                break;
+            }
+            if b[j] == b'{' {
+                end = match_brace(b, j);
+                break;
+            }
+            j += 1;
+        }
+        out.push((start, end));
+        from = end.max(start + ATTR.len());
+    }
+    out
+}
+
+/// Byte ranges of the bodies of functions whose name ends in `_with` —
+/// the zero-alloc kernel convention established by the scratch arenas.
+fn kernel_fn_ranges(code: &str) -> Vec<(usize, usize)> {
+    let b = code.as_bytes();
+    let mut out = Vec::new();
+    let mut from = 0;
+    while let Some(p) = code[from..].find("fn ") {
+        let at = from + p;
+        from = at + 3;
+        if at > 0 && is_ident_byte(b[at - 1]) {
+            continue;
+        }
+        let mut j = at + 3;
+        while j < b.len() && b[j] == b' ' {
+            j += 1;
+        }
+        let name_start = j;
+        while j < b.len() && is_ident_byte(b[j]) {
+            j += 1;
+        }
+        if !code[name_start..j].ends_with("_with") {
+            continue;
+        }
+        let mut k = j;
+        while k < b.len() && b[k] != b'{' && b[k] != b';' {
+            k += 1;
+        }
+        if k < b.len() && b[k] == b'{' {
+            out.push((k, match_brace(b, k)));
+        }
+    }
+    out
+}
+
+/// Byte span of each line (newline included), for mapping byte ranges to
+/// per-line flags.
+fn line_spans(text: &str) -> Vec<(usize, usize)> {
+    let mut out = Vec::new();
+    let mut start = 0;
+    for (i, c) in text.char_indices() {
+        if c == '\n' {
+            out.push((start, i + 1));
+            start = i + 1;
+        }
+    }
+    if start < text.len() {
+        out.push((start, text.len()));
+    }
+    out
+}
+
+fn span_flags(spans: &[(usize, usize)], ranges: &[(usize, usize)]) -> Vec<bool> {
+    spans
+        .iter()
+        .map(|&(a, b)| ranges.iter().any(|&(x, y)| a < y && b > x))
+        .collect()
+}
+
+/// Substring search with an identifier boundary before the match (so
+/// `println!` does not fire inside `eprintln!`). Tokens starting with `.`
+/// skip the boundary check.
+fn has_token(line: &str, token: &str) -> bool {
+    let lb = line.as_bytes();
+    let boundary = !token.starts_with('.');
+    let mut from = 0;
+    while let Some(p) = line[from..].find(token) {
+        let at = from + p;
+        if !boundary || at == 0 || !is_ident_byte(lb[at - 1]) {
+            return true;
+        }
+        from = at + 1;
+    }
+    false
+}
+
+fn allows(comment: &str, rule: &str) -> bool {
+    let needle = format!("lint: allow({rule})");
+    comment.contains(&needle)
+}
+
+fn violation(path: &str, ln: usize, rule: &'static str, message: String) -> Violation {
+    Violation {
+        file: path.to_string(),
+        line: ln + 1,
+        rule,
+        message,
+    }
+}
+
+/// Lint one file's source. `rel_path` is the path relative to the linted
+/// root (normally `rust/src`) and selects which rules apply.
+pub fn lint_str(rel_path: &str, src: &str) -> Vec<Violation> {
+    let path = rel_path.replace('\\', "/");
+    let masked = mask(src);
+    let spans = line_spans(&masked.code);
+    let is_test = span_flags(&spans, &test_ranges(&masked.code));
+    let in_kernel = span_flags(&spans, &kernel_fn_ranges(&masked.code));
+    let code_lines: Vec<&str> = masked.code.lines().collect();
+    let comment_lines: Vec<&str> = masked.comment.lines().collect();
+
+    let no_panic_zone = path.starts_with("protocol/")
+        || path.starts_with("client/")
+        || path == "coordinator/server.rs"
+        || path == "coordinator/router.rs";
+    let relaxed_zone = !(path.ends_with("/metrics.rs") || path == "metrics.rs");
+    let kernel_zone = path.starts_with("dtw/");
+    let io_zone = path.starts_with("dtw/")
+        || path.starts_with("signal/")
+        || path.starts_with("index/");
+
+    let mut out = Vec::new();
+    for (ln, code_line) in code_lines.iter().enumerate() {
+        if is_test.get(ln).copied().unwrap_or(false) {
+            continue;
+        }
+        let comment_line = comment_lines.get(ln).copied().unwrap_or("");
+        let prev_comment = ln
+            .checked_sub(1)
+            .and_then(|p| comment_lines.get(p))
+            .copied()
+            .unwrap_or("");
+        let allowed = |rule: &str| allows(comment_line, rule) || allows(prev_comment, rule);
+
+        if no_panic_zone && !allowed(NO_PANIC) {
+            for tok in [".unwrap()", ".expect(", "panic!"] {
+                if has_token(code_line, tok) {
+                    let msg = format!("`{tok}` in a no-panic zone: reply with ErrorCode");
+                    out.push(violation(&path, ln, NO_PANIC, msg));
+                    break;
+                }
+            }
+        }
+        // A `relaxed:` justification may sit on the same line or anywhere
+        // in the contiguous comment block directly above it (multi-line
+        // explanations are encouraged, not penalized).
+        let relaxed_justified = || {
+            if comment_line.contains("relaxed:") {
+                return true;
+            }
+            let mut i = ln;
+            while i > 0 {
+                i -= 1;
+                let code_above = code_lines.get(i).copied().unwrap_or("");
+                let comment_above = comment_lines.get(i).copied().unwrap_or("");
+                if !code_above.trim().is_empty() || comment_above.trim().is_empty() {
+                    return false;
+                }
+                if comment_above.contains("relaxed:") {
+                    return true;
+                }
+            }
+            false
+        };
+        if relaxed_zone
+            && has_token(code_line, "Ordering::Relaxed")
+            && !relaxed_justified()
+            && !allowed(RELAXED_COMMENT)
+        {
+            let msg = "Ordering::Relaxed without a `// relaxed:` justification".to_string();
+            out.push(violation(&path, ln, RELAXED_COMMENT, msg));
+        }
+        if kernel_zone && in_kernel.get(ln).copied().unwrap_or(false) && !allowed(KERNEL_ALLOC) {
+            for tok in ["Vec::new", "vec![", ".to_vec(", ".collect", "Box::new", ".clone()"] {
+                if has_token(code_line, tok) {
+                    let msg = format!("`{tok}` inside a zero-alloc `*_with` kernel");
+                    out.push(violation(&path, ln, KERNEL_ALLOC, msg));
+                    break;
+                }
+            }
+        }
+        if io_zone && !allowed(NO_IO) {
+            for tok in ["std::time", "println!", "eprintln!"] {
+                if has_token(code_line, tok) {
+                    let msg = format!("`{tok}` in kernel library code");
+                    out.push(violation(&path, ln, NO_IO, msg));
+                    break;
+                }
+            }
+        }
+    }
+    out
+}
+
+fn collect_rs_files(dir: &Path, out: &mut Vec<PathBuf>) -> io::Result<()> {
+    if dir.is_file() {
+        if dir.extension().is_some_and(|e| e == "rs") {
+            out.push(dir.to_path_buf());
+        }
+        return Ok(());
+    }
+    for entry in fs::read_dir(dir)? {
+        let path = entry?.path();
+        if path.is_dir() {
+            collect_rs_files(&path, out)?;
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            out.push(path.to_path_buf());
+        }
+    }
+    Ok(())
+}
+
+/// Lint every `.rs` file under `root` (recursively, deterministic order).
+/// Violations report the on-disk path; rule selection uses the path
+/// relative to `root`.
+pub fn lint_dir(root: &Path) -> io::Result<Vec<Violation>> {
+    let mut files = Vec::new();
+    collect_rs_files(root, &mut files)?;
+    files.sort();
+    let mut out = Vec::new();
+    for file in &files {
+        let rel = file
+            .strip_prefix(root)
+            .unwrap_or(file)
+            .to_string_lossy()
+            .replace('\\', "/");
+        let src = fs::read_to_string(file)?;
+        for mut v in lint_str(&rel, &src) {
+            v.file = file.display().to_string();
+            out.push(v);
+        }
+    }
+    Ok(out)
+}
+
+/// Render violations one per line (for test failure messages).
+pub fn render(violations: &[Violation]) -> String {
+    let mut s = String::new();
+    for v in violations {
+        s.push_str(&v.to_string());
+        s.push('\n');
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rules_of(vs: &[Violation]) -> Vec<&'static str> {
+        vs.iter().map(|v| v.rule).collect()
+    }
+
+    // ---------- lexer ----------
+
+    #[test]
+    fn mask_blanks_strings_comments_and_chars() {
+        let src = "let s = \".unwrap()\"; // .unwrap() here\nlet c = '{';\n";
+        let m = mask(src);
+        assert!(!m.code.contains(".unwrap()"));
+        assert!(!m.code.contains('{'));
+        assert!(m.comment.contains(".unwrap() here"));
+        assert_eq!(m.code.len(), src.len());
+        assert_eq!(m.code.matches('\n').count(), 2);
+    }
+
+    #[test]
+    fn mask_handles_raw_strings_and_nested_block_comments() {
+        let src = "let r = r#\"panic!(\"x\")\"#;\n/* a /* panic!(x) */ .unwrap() */\nfn f() {}\n";
+        let m = mask(src);
+        assert!(!m.code.contains("panic!"));
+        assert!(!m.code.contains(".unwrap()"));
+        assert!(m.code.contains("fn f()"));
+        assert!(m.comment.contains(".unwrap()"));
+    }
+
+    #[test]
+    fn mask_keeps_lifetimes_as_code() {
+        let src = "fn f<'a>(x: &'a str) -> &'a str { x }\n";
+        let m = mask(src);
+        assert!(m.code.contains("<'a>"));
+        assert!(m.code.contains("&'a str"));
+    }
+
+    #[test]
+    fn mask_blanks_escaped_char_literals() {
+        let src = "let a = '\\n'; let b = '\\''; let c = 'x';\n";
+        let m = mask(src);
+        assert!(!m.code.contains("\\n"));
+        assert!(!m.code.contains('x'));
+        assert!(m.code.contains("let a ="));
+    }
+
+    #[test]
+    fn mask_handles_byte_literals() {
+        let src = "let a = b\"panic!\"; let b = b'x'; let c = br#\"vec![\"#;\n";
+        let m = mask(src);
+        assert!(!m.code.contains("panic!"));
+        assert!(!m.code.contains("vec!["));
+        assert!(m.code.contains("let a ="));
+    }
+
+    // ---------- no-panic ----------
+
+    #[test]
+    fn no_panic_fires_in_zone_files() {
+        let bad = "fn f() -> u32 {\n    x.unwrap()\n}\n";
+        for path in ["protocol/mod.rs", "client/mod.rs", "coordinator/server.rs"] {
+            let vs = lint_str(path, bad);
+            assert_eq!(rules_of(&vs), vec![NO_PANIC], "{path}");
+            assert_eq!(vs[0].line, 2, "{path}");
+        }
+        // Outside the zones the same source is fine.
+        assert!(lint_str("streaming/session.rs", bad).is_empty());
+        assert!(lint_str("coordinator/matcher.rs", bad).is_empty());
+    }
+
+    #[test]
+    fn no_panic_covers_expect_and_panic_tokens() {
+        let expect = "fn f() -> u32 {\n    x.expect(\"set\")\n}\n";
+        assert_eq!(rules_of(&lint_str("protocol/request.rs", expect)), vec![NO_PANIC]);
+        let panics = "fn f() {\n    panic!(\"boom\");\n}\n";
+        assert_eq!(rules_of(&lint_str("coordinator/router.rs", panics)), vec![NO_PANIC]);
+        // Non-panicking relatives stay legal.
+        let ok = "fn f() -> u32 {\n    x.unwrap_or(0)\n}\n";
+        assert!(lint_str("protocol/mod.rs", ok).is_empty());
+    }
+
+    #[test]
+    fn no_panic_pragma_silences_same_and_previous_line() {
+        let prev = "fn f() {\n    // lint: allow(no-panic)\n    x.unwrap()\n}\n";
+        assert!(lint_str("protocol/mod.rs", prev).is_empty());
+        let same = "fn f() {\n    x.unwrap() // lint: allow(no-panic)\n}\n";
+        assert!(lint_str("protocol/mod.rs", same).is_empty());
+    }
+
+    #[test]
+    fn no_panic_skips_test_modules_and_literals() {
+        let src = concat!(
+            "pub fn f() {}\n\n",
+            "#[cfg(test)]\nmod tests {\n",
+            "    fn t() {\n        x.unwrap();\n    }\n}\n"
+        );
+        assert!(lint_str("protocol/mod.rs", src).is_empty());
+        let in_str = "fn f() -> &'static str {\n    \".unwrap() and panic!\"\n}\n";
+        assert!(lint_str("protocol/mod.rs", in_str).is_empty());
+    }
+
+    // ---------- relaxed-comment ----------
+
+    #[test]
+    fn relaxed_requires_justification_comment() {
+        let bad = "fn f() -> u64 {\n    c.load(Ordering::Relaxed)\n}\n";
+        let vs = lint_str("util/pool.rs", bad);
+        assert_eq!(rules_of(&vs), vec![RELAXED_COMMENT]);
+        assert_eq!(vs[0].line, 2);
+
+        let prev = "fn f() -> u64 {\n    // relaxed: monotone\n    c.load(Ordering::Relaxed)\n}\n";
+        assert!(lint_str("util/pool.rs", prev).is_empty());
+        let same = "fn f() -> u64 {\n    c.load(Ordering::Relaxed) // relaxed: monotone\n}\n";
+        assert!(lint_str("util/pool.rs", same).is_empty());
+    }
+
+    #[test]
+    fn relaxed_justification_may_open_a_comment_block() {
+        // The marker sits two comment lines above the atomic op — still
+        // the same contiguous block, so it counts.
+        let block = concat!(
+            "fn f() -> u64 {\n",
+            "    // relaxed: monotone counter, and\n",
+            "    // nothing else rides on it.\n",
+            "    c.load(Ordering::Relaxed)\n}\n"
+        );
+        assert!(lint_str("util/pool.rs", block).is_empty());
+        // A code line between the marker and the op breaks the block.
+        let broken = concat!(
+            "fn f() -> u64 {\n",
+            "    // relaxed: monotone\n    let x = 1;\n",
+            "    c.load(Ordering::Relaxed) + x\n}\n"
+        );
+        assert_eq!(rules_of(&lint_str("util/pool.rs", broken)), vec![RELAXED_COMMENT]);
+    }
+
+    #[test]
+    fn relaxed_exempts_metrics_and_accepts_pragma() {
+        let bad = "fn f() -> u64 {\n    c.load(Ordering::Relaxed)\n}\n";
+        assert!(lint_str("coordinator/metrics.rs", bad).is_empty());
+        assert_eq!(rules_of(&lint_str("coordinator/server.rs", bad)), vec![RELAXED_COMMENT]);
+        let ok = concat!(
+            "fn f() {\n    // lint: allow(relaxed-comment)\n",
+            "    c.load(Ordering::Relaxed);\n}\n"
+        );
+        assert!(lint_str("util/pool.rs", ok).is_empty());
+    }
+
+    // ---------- kernel-alloc ----------
+
+    #[test]
+    fn kernel_alloc_fires_only_inside_with_kernels_under_dtw() {
+        let bad = concat!(
+            "pub fn dtw_with(s: &mut S) -> f64 {\n",
+            "    let v = xs.iter().collect();\n    v\n}\n"
+        );
+        let vs = lint_str("dtw/banded.rs", bad);
+        assert_eq!(rules_of(&vs), vec![KERNEL_ALLOC]);
+        assert_eq!(vs[0].line, 2);
+        // Same construct outside dtw/ or outside a kernel fn is fine.
+        assert!(lint_str("streaming/session.rs", bad).is_empty());
+        let non_kernel = "pub fn dtw(xs: &[f64]) -> Vec<f64> {\n    xs.to_vec()\n}\n";
+        assert!(lint_str("dtw/full.rs", non_kernel).is_empty());
+    }
+
+    #[test]
+    fn kernel_alloc_catches_each_construct_and_pragma_silences() {
+        for line in [
+            "let a = Vec::new();",
+            "let b = vec![0.0; 4];",
+            "let c = xs.to_vec();",
+            "let d = Box::new(0.0);",
+            "let e = xs.clone();",
+        ] {
+            let bad = format!("pub fn k_with(xs: &[f64]) -> f64 {{\n    {line}\n    0.0\n}}\n");
+            assert_eq!(rules_of(&lint_str("dtw/full.rs", &bad)), vec![KERNEL_ALLOC], "{line}");
+            let pragma = bad.replace(line, &format!("{line} // lint: allow(kernel-alloc)"));
+            assert!(lint_str("dtw/full.rs", &pragma).is_empty(), "{line}");
+        }
+    }
+
+    #[test]
+    fn kernel_alloc_brace_matching_survives_char_literals() {
+        let src = concat!(
+            "fn open_with(c: char) -> bool {\n    c == '{'\n}\n\n",
+            "fn after() {\n    vec![1];\n}\n"
+        );
+        assert!(lint_str("dtw/full.rs", src).is_empty());
+    }
+
+    // ---------- no-io ----------
+
+    #[test]
+    fn no_io_fires_in_kernel_dirs_only() {
+        let bad = "pub fn trace(x: f64) {\n    println!(\"{x}\");\n}\n";
+        for path in ["dtw/mod.rs", "signal/noise.rs", "index/knn.rs"] {
+            assert_eq!(rules_of(&lint_str(path, bad)), vec![NO_IO], "{path}");
+        }
+        // The coordinator may print and time.
+        assert!(lint_str("coordinator/server.rs", bad).is_empty());
+        let timed = "pub fn slow() {\n    let t = std::time::Instant::now();\n    drop(t);\n}\n";
+        assert_eq!(rules_of(&lint_str("index/db.rs", timed)), vec![NO_IO]);
+        assert!(lint_str("coordinator/profiler.rs", timed).is_empty());
+    }
+
+    #[test]
+    fn no_io_eprintln_boundary_and_pragma() {
+        let e = "pub fn warn() {\n    eprintln!(\"x\");\n}\n";
+        let vs = lint_str("dtw/mod.rs", e);
+        assert_eq!(rules_of(&vs), vec![NO_IO]);
+        assert!(vs[0].message.contains("eprintln!"), "{}", vs[0].message);
+        let ok = "pub fn warn() {\n    eprintln!(\"x\"); // lint: allow(no-io)\n}\n";
+        assert!(lint_str("dtw/mod.rs", ok).is_empty());
+    }
+
+    // ---------- engine plumbing ----------
+
+    #[test]
+    fn one_violation_per_rule_per_line() {
+        let bad = "fn f() -> u32 {\n    x.unwrap(); x.expect(\"two\")\n}\n";
+        assert_eq!(lint_str("protocol/mod.rs", bad).len(), 1);
+    }
+
+    #[test]
+    fn display_format_is_file_line_rule() {
+        let bad = "fn f() -> u32 {\n    x.unwrap()\n}\n";
+        let vs = lint_str("protocol/mod.rs", bad);
+        let line = vs[0].to_string();
+        assert!(line.starts_with("protocol/mod.rs:2: [no-panic]"), "{line}");
+    }
+
+    #[test]
+    fn pragma_for_one_rule_does_not_silence_another() {
+        let src = "fn f() {\n    // lint: allow(no-panic)\n    c.load(Ordering::Relaxed);\n}\n";
+        assert_eq!(rules_of(&lint_str("util/pool.rs", src)), vec![RELAXED_COMMENT]);
+    }
+}

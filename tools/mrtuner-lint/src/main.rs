@@ -1,0 +1,36 @@
+//! CLI driver: `mrtuner-lint [DIR ...]` — lint the given roots (default
+//! `rust/src`), print violations to stderr, exit nonzero if any.
+
+use std::path::Path;
+use std::process::ExitCode;
+
+fn main() -> ExitCode {
+    let mut roots: Vec<String> = std::env::args().skip(1).collect();
+    if roots.iter().any(|a| a == "--help" || a == "-h") {
+        eprintln!("usage: mrtuner-lint [DIR ...]   (default: rust/src)");
+        return ExitCode::SUCCESS;
+    }
+    if roots.is_empty() {
+        roots.push("rust/src".to_string());
+    }
+    let mut total = 0usize;
+    for root in &roots {
+        match mrtuner_lint::lint_dir(Path::new(root)) {
+            Ok(violations) => {
+                for v in &violations {
+                    eprintln!("{v}");
+                }
+                total += violations.len();
+            }
+            Err(e) => {
+                eprintln!("mrtuner-lint: {root}: {e}");
+                return ExitCode::from(2);
+            }
+        }
+    }
+    if total > 0 {
+        eprintln!("mrtuner-lint: {total} violation(s)");
+        return ExitCode::FAILURE;
+    }
+    ExitCode::SUCCESS
+}
