@@ -36,6 +36,7 @@ fn spawn_shard(
         runtime: None,
         metrics: Metrics::new(),
         sessions: mrtuner::streaming::SessionManager::new(),
+        tracer: mrtuner::trace::TraceHandle::disabled(),
     };
     let server = MatchServer::bind("127.0.0.1:0", state).expect("bind shard");
     let addr = server.local_addr().expect("addr").to_string();

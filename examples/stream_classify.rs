@@ -49,6 +49,7 @@ fn main() {
         runtime: None,
         metrics: Metrics::new(),
         sessions: mrtuner::streaming::SessionManager::new(),
+        tracer: mrtuner::trace::TraceHandle::disabled(),
     };
     let server = MatchServer::bind("127.0.0.1:0", state).expect("bind");
     let addr = server.local_addr().expect("addr");

@@ -55,6 +55,7 @@ fn main() {
         runtime: sys.runtime(),
         metrics: Metrics::new(),
         sessions: mrtuner::streaming::SessionManager::new(),
+        tracer: mrtuner::trace::TraceHandle::disabled(),
     };
     let req = Json::obj(vec![
         ("cmd", Json::Str("match".into())),

@@ -1,0 +1,130 @@
+//! Tracing overhead bench (PR 7 acceptance gate): the span-instrumented
+//! k-NN path with the default [`NullTracker`] must cost no more than 2%
+//! over the untraced baseline — tracing compiled in but disabled has to
+//! be free enough to leave on everywhere. Live backends
+//! ([`InMemoryTracker`], [`ChromeTracker`]) are measured too, for scale.
+//!
+//! Results go to stdout and `BENCH_trace.json`. `MRTUNER_BENCH_SMOKE=1`
+//! shrinks the workload for CI.
+//!
+//! Run with: `cargo bench --bench trace_overhead`
+
+#[path = "harness.rs"]
+mod harness;
+
+use harness::bench;
+use mrtuner::database::profile::ProfileEntry;
+use mrtuner::prelude::*;
+use mrtuner::signal;
+use mrtuner::trace::{ChromeTracker, InMemoryTracker, NullTracker, TraceHandle, Tracker};
+use mrtuner::util::json::Json;
+use mrtuner::util::rng::Rng;
+use mrtuner::workloads::AppId;
+use std::sync::Arc;
+
+/// Noisy sine, preprocessed exactly like stored profiles.
+fn wave(len: usize, seed: u64) -> Vec<f64> {
+    let mut rng = Rng::new(seed);
+    let f = 0.04 + rng.f64() * 0.12;
+    let phase = rng.f64() * 6.28;
+    signal::preprocess(
+        &(0..len)
+            .map(|i| {
+                (0.55 + 0.35 * ((i as f64) * f + phase).sin() + rng.normal_ms(0.0, 0.04))
+                    .clamp(0.0, 1.0)
+            })
+            .collect::<Vec<_>>(),
+    )
+}
+
+fn synthetic_db(n: usize) -> IndexedDb {
+    let mut db = ReferenceDb::new();
+    for i in 0..n {
+        let cfg = JobConfig::new(
+            i % 42 + 1,
+            (i / 42) % 40 + 1,
+            (i / (42 * 40) + 1) as f64,
+            100.0,
+        );
+        let len = 64 + (i * 37) % 192;
+        db.insert(ProfileEntry {
+            app: AppId::all()[i % AppId::all().len()],
+            config: cfg,
+            series: wave(len, i as u64),
+            raw_len: len,
+            completion_secs: 100.0,
+        });
+    }
+    IndexedDb::from_db(db)
+}
+
+fn main() {
+    mrtuner::util::logging::init();
+    let smoke = std::env::var("MRTUNER_BENCH_SMOKE").is_ok();
+    let (db_n, n_queries, samples) = if smoke { (120, 4, 5) } else { (800, 8, 20) };
+
+    let idx = synthetic_db(db_n);
+    let queries: Vec<Vec<f64>> = (0..n_queries)
+        .map(|qi| wave(96 + qi * 24, (qi * 7 + 3) as u64))
+        .collect();
+    let qrefs: Vec<&[f64]> = queries.iter().map(Vec::as_slice).collect();
+    let k = 5;
+
+    println!("== knn_batch ({n_queries} queries, DB={db_n}, k={k}): untraced vs traced ==");
+    let baseline = bench("untraced  idx.knn_batch", 3, samples, || idx.knn_batch(&qrefs, k));
+
+    let variants: Vec<(&str, Arc<dyn Tracker>)> = vec![
+        ("null", Arc::new(NullTracker)),
+        ("memory", Arc::new(InMemoryTracker::new())),
+        ("chrome", Arc::new(ChromeTracker::new())),
+    ];
+    let mut rows = Vec::new();
+    let mut null_overhead_pct = f64::NAN;
+    for (name, tracker) in variants {
+        let tracer = TraceHandle::new(tracker);
+        let stats = bench(&format!("traced    knn_batch [{name:6}]"), 3, samples, || {
+            let root = tracer.root("request");
+            let span = root.child("knn_batch");
+            idx.knn_batch_traced(&qrefs, k, &span)
+        });
+        // p50 over p50: the median is robust to the odd scheduler blip
+        // that would otherwise dominate a percent-level comparison.
+        let overhead_pct = (stats.p50_s / baseline.p50_s - 1.0) * 100.0;
+        println!("    {name}: {overhead_pct:+.2}% vs untraced");
+        if name == "null" {
+            null_overhead_pct = overhead_pct;
+        }
+        rows.push(Json::obj(vec![
+            ("tracker", Json::Str(name.into())),
+            ("mean_ms", Json::Num(stats.mean_s * 1e3)),
+            ("p50_ms", Json::Num(stats.p50_s * 1e3)),
+            ("overhead_pct", Json::Num(overhead_pct)),
+        ]));
+    }
+
+    let pass = null_overhead_pct <= 2.0;
+    println!(
+        "    acceptance: NullTracker overhead {null_overhead_pct:+.2}% (target <= 2%): {}",
+        if pass { "PASS" } else { "FAIL" }
+    );
+
+    let report = Json::obj(vec![
+        ("bench", Json::Str("trace_overhead".into())),
+        ("smoke", Json::Bool(smoke)),
+        ("db", Json::Num(db_n as f64)),
+        ("queries", Json::Num(n_queries as f64)),
+        ("k", Json::Num(k as f64)),
+        ("baseline_p50_ms", Json::Num(baseline.p50_s * 1e3)),
+        ("variants", Json::arr(rows)),
+        (
+            "acceptance",
+            Json::obj(vec![
+                ("target_pct", Json::Num(2.0)),
+                ("null_overhead_pct", Json::Num(null_overhead_pct)),
+                ("pass", Json::Bool(pass)),
+            ]),
+        ),
+    ]);
+    std::fs::write("BENCH_trace.json", report.to_pretty()).expect("write BENCH_trace.json");
+    println!("wrote BENCH_trace.json");
+}

@@ -180,9 +180,17 @@ impl MrtunerClient {
     /// and the server executes a line only once its newline arrives
     /// (unterminated tails are rejected at EOF, never applied).
     pub fn send(&mut self, req: &Request) -> Result<u64, ClientError> {
+        self.send_traced(req, 0)
+    }
+
+    /// [`MrtunerClient::send`] carrying a trace span id in the envelope's
+    /// optional `trace` field (0 = untraced, field omitted), so server-side
+    /// spans can nest under a caller-side span. The shard router uses this
+    /// to link each shard's request tree to its fan-out span.
+    pub fn send_traced(&mut self, req: &Request, trace: u64) -> Result<u64, ClientError> {
         self.next_id += 1;
         let id = self.next_id;
-        let line = req.to_v2(id).to_string();
+        let line = req.to_v2_traced(id, trace).to_string();
         self.ensure_connected()?;
         if let Err(e) = self.try_write(&line) {
             log::debug!("client {}: write failed ({e}); reconnecting", self.addr);
@@ -332,6 +340,15 @@ impl MrtunerClient {
         match self.call(&Request::ShardInfo)? {
             Response::ShardInfo(s) => Ok(s),
             other => Err(Self::unexpected("shard_info", &other)),
+        }
+    }
+
+    /// The server's structured metrics snapshot (counters, latency
+    /// quantiles, per-code protocol errors, per-shard fan-out).
+    pub fn metrics(&mut self) -> Result<crate::util::json::Json, ClientError> {
+        match self.call(&Request::Metrics)? {
+            Response::Metrics(m) => Ok(m),
+            other => Err(Self::unexpected("metrics", &other)),
         }
     }
 

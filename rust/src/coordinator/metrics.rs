@@ -4,11 +4,27 @@
 use crate::index::SearchStats;
 use crate::protocol::ErrorCode;
 use crate::streaming::StreamStats;
-use crate::util::stats::Welford;
+use crate::util::json::Json;
+use crate::util::stats::{LogHistogram, Welford};
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 use std::time::Instant;
+
+/// A [`Welford`] accumulator paired with a [`LogHistogram`]: exact
+/// mean/min/max plus factor-2-resolution p50/p95/p99, still O(1) memory.
+#[derive(Debug, Default)]
+struct LatencyTrack {
+    w: Welford,
+    h: LogHistogram,
+}
+
+impl LatencyTrack {
+    fn push(&mut self, secs: f64) {
+        self.w.push(secs);
+        self.h.record(secs);
+    }
+}
 
 /// Thread-safe metrics registry.
 #[derive(Debug, Default)]
@@ -44,15 +60,15 @@ pub struct Metrics {
     pub knn_batches: AtomicU64,
     pub knn_batch_queries: AtomicU64,
     /// Wall-clock of each whole batch (not per query).
-    knn_batch_latency: Mutex<Welford>,
-    latency: Mutex<Welford>,
+    knn_batch_latency: Mutex<LatencyTrack>,
+    latency: Mutex<LatencyTrack>,
     /// Protocol rejects by [`ErrorCode`] (indexed by `ErrorCode::index`):
     /// malformed lines, unknown commands/sessions, wrong versions, ... —
     /// the serve loop counts every structured error response here.
     proto_errors: [AtomicU64; ErrorCode::ALL.len()],
     /// Per-shard fan-out latency (send → merged reply) recorded by the
     /// router, keyed by shard position.
-    shard_fanout: Mutex<BTreeMap<usize, Welford>>,
+    shard_fanout: Mutex<BTreeMap<usize, LatencyTrack>>,
     /// Prefix fraction observed when a session declared its decision —
     /// the streaming classifier's headline "how early" number.
     decision_fraction: Mutex<Welford>,
@@ -142,12 +158,18 @@ impl Metrics {
 
     /// Snapshot: (batches, queries, mean batch latency in seconds).
     pub fn knn_batch_summary(&self) -> (u64, u64, f64) {
-        let w = self.knn_batch_latency.lock().expect("batch latency lock");
+        let t = self.knn_batch_latency.lock().expect("batch latency lock");
         (
             self.knn_batches.load(Ordering::Relaxed),
             self.knn_batch_queries.load(Ordering::Relaxed),
-            w.mean(),
+            t.w.mean(),
         )
+    }
+
+    /// Batch-latency quantiles: (p50_s, p95_s, p99_s).
+    pub fn knn_batch_quantiles(&self) -> (f64, f64, f64) {
+        let t = self.knn_batch_latency.lock().expect("batch latency lock");
+        (t.h.quantile(0.50), t.h.quantile(0.95), t.h.quantile(0.99))
     }
 
     /// Record an early decision: at which sample and prefix fraction it
@@ -205,7 +227,7 @@ impl Metrics {
             .lock()
             .expect("shard fanout lock")
             .iter()
-            .map(|(&s, w)| (s, w.count(), w.mean(), w.max()))
+            .map(|(&s, t)| (s, t.w.count(), t.w.mean(), t.w.max()))
             .collect()
     }
 
@@ -224,15 +246,23 @@ impl Metrics {
 
     /// Snapshot: (count, mean_s, stddev_s, min_s, max_s).
     pub fn latency_summary(&self) -> (u64, f64, f64, f64, f64) {
-        let w = self.latency.lock().expect("latency lock");
-        (w.count(), w.mean(), w.stddev(), w.min(), w.max())
+        let t = self.latency.lock().expect("latency lock");
+        (t.w.count(), t.w.mean(), t.w.stddev(), t.w.min(), t.w.max())
+    }
+
+    /// Request-latency quantiles: (p50_s, p95_s, p99_s).
+    pub fn latency_quantiles(&self) -> (f64, f64, f64) {
+        let t = self.latency.lock().expect("latency lock");
+        (t.h.quantile(0.50), t.h.quantile(0.95), t.h.quantile(0.99))
     }
 
     /// One-line human-readable report.
     pub fn report(&self) -> String {
         let (n, mean, std, min, max) = self.latency_summary();
+        let (p50, p95, p99) = self.latency_quantiles();
         let (decisions, mean_at, mean_frac) = self.decision_summary();
         let (kb, kbq, kb_mean) = self.knn_batch_summary();
+        let (kb_p50, kb_p95, kb_p99) = self.knn_batch_quantiles();
         let mut proto = format!(" proto_errors: total={}", self.proto_errors_total());
         for code in ErrorCode::ALL {
             let n = self.proto_error_count(code);
@@ -241,18 +271,20 @@ impl Metrics {
             }
         }
         let mut fanout = String::new();
-        for (s, n, mean, max) in self.shard_fanout_summary() {
+        for (s, t) in self.shard_fanout.lock().expect("shard fanout lock").iter() {
             fanout.push_str(&format!(
-                " shard{s}: n={n} mean={:.1}ms max={:.1}ms",
-                mean * 1e3,
-                max * 1e3
+                " shard{s}: n={} mean={:.1}ms max={:.1}ms p95={:.1}ms",
+                t.w.count(),
+                t.w.mean() * 1e3,
+                t.w.max() * 1e3,
+                t.h.quantile(0.95) * 1e3
             ));
         }
         if !fanout.is_empty() {
             fanout.insert_str(0, " fanout:");
         }
         format!(
-            "requests={} comparisons={} batches={} errors={} pool_panics={} latency: n={} mean={:.1}ms sd={:.1}ms min={:.1}ms max={:.1}ms index: {} knn_batch: n={} queries={} mean={:.1}ms stream: opened={} closed={} reaped={} batches={} culled={} decisions={} mean_at={:.0} mean_frac={:.2}{proto}{fanout}",
+            "requests={} comparisons={} batches={} errors={} pool_panics={} latency: n={} mean={:.1}ms sd={:.1}ms min={:.1}ms max={:.1}ms p50={:.1}ms p95={:.1}ms p99={:.1}ms index: {} knn_batch: n={} queries={} mean={:.1}ms p50={:.1}ms p95={:.1}ms p99={:.1}ms stream: opened={} closed={} reaped={} batches={} culled={} decisions={} mean_at={:.0} mean_frac={:.2}{proto}{fanout}",
             self.requests.load(Ordering::Relaxed),
             self.comparisons.load(Ordering::Relaxed),
             self.batches.load(Ordering::Relaxed),
@@ -263,10 +295,16 @@ impl Metrics {
             std * 1e3,
             min * 1e3,
             max * 1e3,
+            p50 * 1e3,
+            p95 * 1e3,
+            p99 * 1e3,
             self.search_stats(),
             kb,
             kbq,
             kb_mean * 1e3,
+            kb_p50 * 1e3,
+            kb_p95 * 1e3,
+            kb_p99 * 1e3,
             self.stream_opened.load(Ordering::Relaxed),
             self.stream_closed.load(Ordering::Relaxed),
             self.stream_reaped.load(Ordering::Relaxed),
@@ -276,6 +314,95 @@ impl Metrics {
             mean_at,
             mean_frac,
         )
+    }
+
+    /// The structured counterpart of [`Metrics::report`]: everything the
+    /// string report carries, as one JSON object with pinned field names
+    /// (served over the wire as the `metrics` request's body).
+    pub fn snapshot(&self) -> Json {
+        let (n, mean, std, min, max) = self.latency_summary();
+        let (p50, p95, p99) = self.latency_quantiles();
+        let (kb, kbq, kb_mean) = self.knn_batch_summary();
+        let (kb_p50, kb_p95, kb_p99) = self.knn_batch_quantiles();
+        let (decisions, mean_at, mean_frac) = self.decision_summary();
+        let s = self.search_stats();
+        let mut proto = vec![("total", Json::Num(self.proto_errors_total() as f64))];
+        for code in ErrorCode::ALL {
+            proto.push((code.as_str(), Json::Num(self.proto_error_count(code) as f64)));
+        }
+        let fanout = Json::arr(
+            self.shard_fanout
+                .lock()
+                .expect("shard fanout lock")
+                .iter()
+                .map(|(&shard, t)| {
+                    Json::obj(vec![
+                        ("shard", Json::Num(shard as f64)),
+                        ("n", Json::Num(t.w.count() as f64)),
+                        ("mean_ms", Json::Num(t.w.mean() * 1e3)),
+                        ("max_ms", Json::Num(t.w.max() * 1e3)),
+                        ("p95_ms", Json::Num(t.h.quantile(0.95) * 1e3)),
+                    ])
+                })
+                .collect(),
+        );
+        Json::obj(vec![
+            ("requests", Json::Num(self.requests.load(Ordering::Relaxed) as f64)),
+            ("comparisons", Json::Num(self.comparisons.load(Ordering::Relaxed) as f64)),
+            ("batches", Json::Num(self.batches.load(Ordering::Relaxed) as f64)),
+            ("errors", Json::Num(self.errors.load(Ordering::Relaxed) as f64)),
+            ("pool_panics", Json::Num(self.pool_panics.load(Ordering::Relaxed) as f64)),
+            (
+                "index",
+                Json::obj(vec![
+                    ("candidates", Json::Num(s.candidates as f64)),
+                    ("pruned_lb_kim", Json::Num(s.pruned_lb_kim as f64)),
+                    ("pruned_lb_paa", Json::Num(s.pruned_lb_paa as f64)),
+                    ("pruned_lb_keogh", Json::Num(s.pruned_lb_keogh as f64)),
+                    ("abandoned", Json::Num(s.abandoned as f64)),
+                    ("dtw_evals", Json::Num(s.dtw_evals as f64)),
+                ]),
+            ),
+            (
+                "latency",
+                Json::obj(vec![
+                    ("n", Json::Num(n as f64)),
+                    ("mean_ms", Json::Num(mean * 1e3)),
+                    ("sd_ms", Json::Num(std * 1e3)),
+                    ("min_ms", Json::Num(min * 1e3)),
+                    ("max_ms", Json::Num(max * 1e3)),
+                    ("p50_ms", Json::Num(p50 * 1e3)),
+                    ("p95_ms", Json::Num(p95 * 1e3)),
+                    ("p99_ms", Json::Num(p99 * 1e3)),
+                ]),
+            ),
+            (
+                "knn_batch",
+                Json::obj(vec![
+                    ("batches", Json::Num(kb as f64)),
+                    ("queries", Json::Num(kbq as f64)),
+                    ("mean_ms", Json::Num(kb_mean * 1e3)),
+                    ("p50_ms", Json::Num(kb_p50 * 1e3)),
+                    ("p95_ms", Json::Num(kb_p95 * 1e3)),
+                    ("p99_ms", Json::Num(kb_p99 * 1e3)),
+                ]),
+            ),
+            (
+                "stream",
+                Json::obj(vec![
+                    ("opened", Json::Num(self.stream_opened.load(Ordering::Relaxed) as f64)),
+                    ("closed", Json::Num(self.stream_closed.load(Ordering::Relaxed) as f64)),
+                    ("reaped", Json::Num(self.stream_reaped.load(Ordering::Relaxed) as f64)),
+                    ("batches", Json::Num(self.stream_batches.load(Ordering::Relaxed) as f64)),
+                    ("culled", Json::Num(self.stream_culled.load(Ordering::Relaxed) as f64)),
+                    ("decisions", Json::Num(decisions as f64)),
+                    ("mean_at", Json::Num(mean_at)),
+                    ("mean_frac", Json::Num(mean_frac)),
+                ]),
+            ),
+            ("proto_errors", Json::obj(proto)),
+            ("fanout", fanout),
+        ])
     }
 }
 
@@ -404,6 +531,70 @@ mod tests {
         assert!((mean - 0.020).abs() < 1e-9);
         assert_eq!(min, 0.010);
         assert_eq!(max, 0.030);
+    }
+
+    #[test]
+    fn report_carries_latency_quantiles() {
+        let m = Metrics::new();
+        for _ in 0..99 {
+            m.observe_latency(0.001);
+        }
+        m.observe_latency(0.100);
+        m.record_knn_batch(4, 0.010);
+        let r = m.report();
+        assert!(r.contains(" p50="), "{r}");
+        assert!(r.contains(" p95="), "{r}");
+        assert!(r.contains(" p99="), "{r}");
+        let (p50, _, p99) = m.latency_quantiles();
+        assert!((0.5e-3..=2e-3).contains(&p50), "p50={p50}");
+        assert!((50e-3..=200e-3).contains(&p99), "p99={p99}");
+    }
+
+    #[test]
+    fn snapshot_pins_the_wire_field_names() {
+        let m = Metrics::new();
+        m.inc_requests();
+        m.inc_comparisons(3);
+        m.observe_latency(0.002);
+        m.record_knn_batch(8, 0.010);
+        m.record_search(&SearchStats {
+            candidates: 10,
+            pruned_lb_kim: 4,
+            pruned_lb_paa: 1,
+            pruned_lb_keogh: 2,
+            abandoned: 1,
+            dtw_evals: 2,
+        });
+        m.inc_proto_error(ErrorCode::BadRequest);
+        m.record_shard_fanout(1, 0.005);
+        // Through the serializer, like the real wire path.
+        let snap = crate::util::json::Json::parse(&m.snapshot().to_string()).unwrap();
+        let num = |path: &[&str]| -> f64 {
+            let mut v = &snap;
+            for k in path {
+                v = v.get(k).unwrap_or_else(|| panic!("missing {path:?}"));
+            }
+            v.as_f64().unwrap_or_else(|| panic!("non-numeric {path:?}"))
+        };
+        assert_eq!(num(&["requests"]), 1.0);
+        assert_eq!(num(&["comparisons"]), 3.0);
+        assert_eq!(num(&["index", "candidates"]), 10.0);
+        assert_eq!(num(&["index", "dtw_evals"]), 2.0);
+        assert_eq!(num(&["latency", "n"]), 1.0);
+        assert!(num(&["latency", "p99_ms"]) > 0.0);
+        assert_eq!(num(&["knn_batch", "batches"]), 1.0);
+        assert_eq!(num(&["knn_batch", "queries"]), 8.0);
+        assert!(num(&["knn_batch", "p50_ms"]) > 0.0);
+        assert_eq!(num(&["stream", "opened"]), 0.0);
+        assert_eq!(num(&["proto_errors", "total"]), 1.0);
+        assert_eq!(num(&["proto_errors", "bad_request"]), 1.0);
+        // Every code is always present in the snapshot, even at zero.
+        assert_eq!(num(&["proto_errors", "wrong_version"]), 0.0);
+        let fanout = snap.get("fanout").and_then(crate::util::json::Json::as_arr).unwrap();
+        assert_eq!(fanout.len(), 1);
+        assert_eq!(fanout[0].get("shard").and_then(crate::util::json::Json::as_f64), Some(1.0));
+        assert_eq!(fanout[0].get("n").and_then(crate::util::json::Json::as_f64), Some(1.0));
+        assert!(fanout[0].get("p95_ms").and_then(crate::util::json::Json::as_f64).unwrap() > 0.0);
     }
 
     #[test]

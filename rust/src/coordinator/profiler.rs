@@ -6,6 +6,7 @@ use super::{ConfigGrid, SystemConfig};
 use crate::database::profile::ProfileEntry;
 use crate::runtime::{Padded, RuntimeHandle};
 use crate::simulator::{engine::simulate, job::JobConfig};
+use crate::trace::TraceHandle;
 use crate::util::pool::par_map;
 use crate::util::rng::Rng;
 use crate::workloads::{workload_for, AppId};
@@ -14,6 +15,9 @@ use crate::workloads::{workload_for, AppId};
 pub struct Profiler {
     config: SystemConfig,
     runtime: Option<RuntimeHandle>,
+    /// Span sink for grid runs; disabled by default
+    /// ([`Profiler::with_tracer`] to attach one).
+    tracer: TraceHandle,
 }
 
 impl Profiler {
@@ -21,7 +25,15 @@ impl Profiler {
         Profiler {
             config: config.clone(),
             runtime,
+            tracer: TraceHandle::disabled(),
         }
+    }
+
+    /// Attach a tracer (builder-style): each [`Profiler::profile`] call
+    /// becomes a root `profile` span carrying the app and grid size.
+    pub fn with_tracer(mut self, tracer: TraceHandle) -> Profiler {
+        self.tracer = tracer;
+        self
     }
 
     /// Deterministic per-(app, config) seed so re-profiling one set does
@@ -36,6 +48,11 @@ impl Profiler {
 
     /// Profile one application over the whole grid (parallel).
     pub fn profile(&self, app: AppId, grid: &ConfigGrid) -> Vec<ProfileEntry> {
+        let span = self.tracer.root("profile");
+        if span.active() {
+            span.note("app", app.name());
+        }
+        span.event("configs", grid.len() as u64);
         par_map(&grid.configs, self.config.workers, |cfg| {
             self.profile_one(app, cfg)
         })

@@ -36,16 +36,17 @@ use crate::dtw::corr::MATCH_THRESHOLD;
 use crate::index::SearchStats;
 use crate::protocol::{
     decode_line, encode_reply, ErrorCode, KnnBatchBody, KnnBody, MatchBody, Request, Response,
-    ServerError, ShardInfoBody, StatsBody,
+    ServerError, ShardInfoBody, StatsBody, Wire,
 };
 use crate::simulator::job::JobConfig;
+use crate::trace::{Span, TraceHandle};
 use crate::util::json::Json;
 use crate::util::pool::ThreadPool;
 use anyhow::Result;
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Mutex};
-use std::time::{Duration, Instant};
+use std::time::Duration;
 
 /// One connected shard: its client plus what the `shard_info` handshake
 /// reported it owns.
@@ -68,6 +69,10 @@ pub struct Shard {
 pub struct ShardRouter {
     shards: Vec<Shard>,
     metrics: Arc<Metrics>,
+    /// Span sink + clock for fan-out tracing; each per-shard round trip
+    /// gets a child span whose id rides the envelope's `trace` field, so
+    /// shard-side request trees nest under it. Disabled by default.
+    tracer: TraceHandle,
 }
 
 /// Map a shard-call failure onto the routed error surface: structured
@@ -115,7 +120,22 @@ impl ShardRouter {
             });
             base += entries;
         }
-        Ok(ShardRouter { shards, metrics })
+        Ok(ShardRouter {
+            shards,
+            metrics,
+            tracer: TraceHandle::disabled(),
+        })
+    }
+
+    /// Attach a tracer (builder-style; the default router is untraced).
+    pub fn with_tracer(mut self, tracer: TraceHandle) -> ShardRouter {
+        self.tracer = tracer;
+        self
+    }
+
+    /// The router's trace handle.
+    pub fn tracer(&self) -> &TraceHandle {
+        &self.tracer
     }
 
     /// The connected shards, in global-index order.
@@ -176,23 +196,32 @@ impl ShardRouter {
 
     /// Fan one request to `targets` (pipelined: all sends, then all
     /// receives), returning each shard's reply in target order and timing
-    /// each round trip into the metrics registry. On any failure, every
-    /// id still in flight is [`MrtunerClient::forget`]-gotten so stray
-    /// replies cannot accumulate in client buffers across shard flaps.
+    /// each round trip into the metrics registry. Each shard gets a child
+    /// span of `parent` covering its whole round trip; the span's id is
+    /// stamped into the request envelope's `trace` field so the shard's
+    /// own request tree nests under it. On any failure, every id still in
+    /// flight is [`MrtunerClient::forget`]-gotten so stray replies cannot
+    /// accumulate in client buffers across shard flaps.
     fn fan(
         &mut self,
         targets: &[usize],
         req: &Request,
+        parent: &Span,
     ) -> Result<Vec<Response>, ClientError> {
-        let mut sent: Vec<(usize, u64, Instant)> = Vec::with_capacity(targets.len());
+        let mut sent: Vec<(usize, u64, u64, Span)> = Vec::with_capacity(targets.len());
         for &si in targets {
             let addr = self.shards[si].addr.clone();
-            let t0 = Instant::now();
-            match self.shards[si].client.send(req) {
-                Ok(id) => sent.push((si, id, t0)),
+            let span = parent.child("shard");
+            span.event("shard", si as u64);
+            if span.active() {
+                span.note("addr", &addr);
+            }
+            let t0 = self.tracer.now_ns();
+            match self.shards[si].client.send_traced(req, span.id()) {
+                Ok(id) => sent.push((si, id, t0, span)),
                 Err(e) => {
-                    for &(sj, idj, _) in &sent {
-                        self.shards[sj].client.forget(idj);
+                    for (sj, idj, _, _) in &sent {
+                        self.shards[*sj].client.forget(*idj);
                     }
                     return Err(shard_err(&addr, e));
                 }
@@ -200,7 +229,7 @@ impl ShardRouter {
         }
         let mut replies = Vec::with_capacity(sent.len());
         let mut failed: Option<ClientError> = None;
-        for &(si, id, t0) in &sent {
+        for (si, id, t0, span) in sent {
             if failed.is_some() {
                 self.shards[si].client.forget(id);
                 continue;
@@ -209,7 +238,7 @@ impl ShardRouter {
             match self.shards[si].client.recv(id) {
                 Ok(resp) => {
                     self.metrics
-                        .record_shard_fanout(si, t0.elapsed().as_secs_f64());
+                        .record_shard_fanout(si, self.tracer.elapsed_secs(t0));
                     replies.push(resp);
                 }
                 // Shards drop connections idle past their CONN_IDLE; the
@@ -220,10 +249,11 @@ impl ShardRouter {
                 Err(ClientError::Io(first)) if req.is_idempotent() => {
                     self.shards[si].client.forget(id);
                     log::debug!("router: shard {addr} recv failed ({first}); replaying once");
+                    span.event("replayed", 1);
                     match self.shards[si].client.call(req) {
                         Ok(resp) => {
                             self.metrics
-                                .record_shard_fanout(si, t0.elapsed().as_secs_f64());
+                                .record_shard_fanout(si, self.tracer.elapsed_secs(t0));
                             replies.push(resp);
                         }
                         Err(e) => failed = Some(shard_err(&addr, e)),
@@ -234,6 +264,7 @@ impl ShardRouter {
                     failed = Some(shard_err(&addr, e));
                 }
             }
+            // `span` drops here: the per-shard span closes at reply merge.
         }
         match failed {
             Some(e) => Err(e),
@@ -271,8 +302,14 @@ impl ShardRouter {
     /// Routed batched k-NN from an already-decoded [`Request::KnnBatch`]
     /// — the front-end's hot path fans the request it parsed without
     /// re-cloning megabyte-scale payloads. Bit-identical to a single-node
-    /// `IndexedDb::knn_batch` over the union database.
-    pub fn route_knn_batch(&mut self, req: &Request) -> Result<KnnBatchBody, ClientError> {
+    /// `IndexedDb::knn_batch` over the union database. Per-shard round
+    /// trips become child spans of `parent` (pass [`Span::none`] when
+    /// untraced).
+    pub fn route_knn_batch(
+        &mut self,
+        req: &Request,
+        parent: &Span,
+    ) -> Result<KnnBatchBody, ClientError> {
         let (nqueries, k, config) = match req {
             Request::KnnBatch { queries, k, config } => (queries.len(), *k, config.as_ref()),
             _ => {
@@ -288,7 +325,7 @@ impl ShardRouter {
         let bodies: Vec<KnnBatchBody> = if targets.is_empty() {
             Vec::new()
         } else {
-            self.fan(&targets, req)?
+            self.fan(&targets, req, parent)?
                 .into_iter()
                 .map(|resp| match resp {
                     Response::KnnBatch(b) => Ok(b),
@@ -335,7 +372,7 @@ impl ShardRouter {
             k,
             config: config.copied(),
         };
-        self.route_knn_batch(&req)
+        self.route_knn_batch(&req, &Span::none())
     }
 
     /// Routed single-query k-NN (a batch of one; the series is copied
@@ -351,15 +388,35 @@ impl ShardRouter {
             k,
             config: config.copied(),
         };
-        let mut batch = self.route_knn_batch(&req)?;
+        let mut batch = self.route_knn_batch(&req, &Span::none())?;
+        Ok(batch.results.remove(0))
+    }
+
+    /// Routed single-query k-NN with fan-out tracing: same single-element
+    /// batch as [`ShardRouter::knn`], but per-shard spans nest under
+    /// `parent`.
+    fn knn_traced(
+        &mut self,
+        series: &[f64],
+        k: usize,
+        config: Option<&JobConfig>,
+        parent: &Span,
+    ) -> Result<KnnBody, ClientError> {
+        let req = Request::KnnBatch {
+            queries: vec![series.to_vec()],
+            k,
+            config: config.copied(),
+        };
+        let mut batch = self.route_knn_batch(&req, parent)?;
         Ok(batch.results.remove(0))
     }
 
     /// Routed matching phase from an already-decoded [`Request::Match`]:
     /// fan the raw capture to the shards owning the configuration set and
     /// merge their per-app rows in shard order — the same row order a
-    /// single node produces over the union database.
-    pub fn route_match(&mut self, req: &Request) -> Result<MatchBody, ClientError> {
+    /// single node produces over the union database. Per-shard round
+    /// trips become child spans of `parent`.
+    pub fn route_match(&mut self, req: &Request, parent: &Span) -> Result<MatchBody, ClientError> {
         let config = match req {
             Request::Match { config, .. } => config,
             _ => {
@@ -377,7 +434,7 @@ impl ShardRouter {
             });
         }
         let mut results = Vec::new();
-        for resp in self.fan(&targets, req)? {
+        for resp in self.fan(&targets, req, parent)? {
             match resp {
                 Response::Match(b) => results.extend(b.results),
                 other => {
@@ -419,7 +476,7 @@ impl ShardRouter {
             series: series.to_vec(),
             config: *config,
         };
-        self.route_match(&req)
+        self.route_match(&req, &Span::none())
     }
 }
 
@@ -428,6 +485,16 @@ impl ShardRouter {
 pub fn dispatch_routed(
     req: &Request,
     router: &Mutex<ShardRouter>,
+) -> Result<Response, ServerError> {
+    dispatch_routed_traced(req, router, &Span::none())
+}
+
+/// [`dispatch_routed`] with fan-out tracing: per-command spans (and the
+/// per-shard round-trip spans under them) nest under `parent`.
+pub fn dispatch_routed_traced(
+    req: &Request,
+    router: &Mutex<ShardRouter>,
+    parent: &Span,
 ) -> Result<Response, ServerError> {
     let to_server = |e: ClientError| match e {
         ClientError::Server(se) => se,
@@ -449,20 +516,29 @@ pub fn dispatch_routed(
             db_entries: r.total_entries(),
             live_sessions: 0,
         })),
-        Request::Knn { series, k, config } => r
-            .knn(series, *k, config.as_ref())
-            .map(Response::Knn)
-            .map_err(to_server),
+        Request::Metrics => Ok(Response::Metrics(r.metrics().snapshot())),
+        Request::Knn { series, k, config } => {
+            let span = parent.child("knn");
+            span.event("k", *k as u64);
+            r.knn_traced(series, *k, config.as_ref(), &span)
+                .map(Response::Knn)
+                .map_err(to_server)
+        }
         // Fan the decoded request itself — no payload re-clone on the
         // router's hot path.
-        Request::KnnBatch { .. } => r
-            .route_knn_batch(req)
-            .map(Response::KnnBatch)
-            .map_err(to_server),
-        Request::Match { .. } => r
-            .route_match(req)
-            .map(Response::Match)
-            .map_err(to_server),
+        Request::KnnBatch { queries, .. } => {
+            let span = parent.child("knn_batch");
+            span.event("queries", queries.len() as u64);
+            r.route_knn_batch(req, &span)
+                .map(Response::KnnBatch)
+                .map_err(to_server)
+        }
+        Request::Match { .. } => {
+            let span = parent.child("match");
+            r.route_match(req, &span)
+                .map(Response::Match)
+                .map_err(to_server)
+        }
         Request::StreamOpen { .. }
         | Request::StreamFeed { .. }
         | Request::StreamPoll { .. }
@@ -475,15 +551,38 @@ pub fn dispatch_routed(
 
 /// Decode, route and render one request line against the router —
 /// the router-side sibling of `server::handle_line` (same envelopes, same
-/// error accounting).
-pub fn route_line(line: &str, router: &Mutex<ShardRouter>, metrics: &Metrics) -> Json {
+/// error accounting, same `decode` / `handle` / `encode` span taxonomy).
+pub fn route_line(
+    line: &str,
+    router: &Mutex<ShardRouter>,
+    metrics: &Metrics,
+    tracer: &TraceHandle,
+) -> Json {
+    let t0 = tracer.timestamp();
     let (wire, decoded) = decode_line(line);
-    let result = decoded.and_then(|req| dispatch_routed(&req, router));
+    let t1 = tracer.timestamp();
+    let remote = match wire {
+        Wire::V2 { trace, .. } => trace,
+        Wire::V1 => 0,
+    };
+    let root = tracer.root_linked("request", remote);
+    tracer.span_at("decode", root.id(), t0, t1);
+    let result = {
+        let handle = root.child("handle");
+        decoded.and_then(|req| {
+            handle.note("type", req.type_name());
+            dispatch_routed_traced(&req, router, &handle)
+        })
+    };
     if let Err(e) = &result {
         metrics.inc_errors();
         metrics.inc_proto_error(e.code);
+        root.note("error", e.code.as_str());
     }
-    encode_reply(&wire, &result)
+    let encode = root.child("encode");
+    let reply = encode_reply(&wire, &result);
+    drop(encode);
+    reply
 }
 
 /// The routing front-end: a TCP server speaking the same line protocol as
@@ -493,19 +592,25 @@ pub struct RouterServer {
     listener: TcpListener,
     router: Arc<Mutex<ShardRouter>>,
     metrics: Arc<Metrics>,
+    /// The router's trace handle, cloned out before the router moves into
+    /// its lock so connection loops can time and span without locking.
+    tracer: TraceHandle,
     stop: Arc<AtomicBool>,
 }
 
 impl RouterServer {
     /// Bind to `addr` (port 0 for ephemeral). The router's own metrics
-    /// registry doubles as the server's.
+    /// registry doubles as the server's, and its tracer (if any —
+    /// [`ShardRouter::with_tracer`]) spans every front-end request.
     pub fn bind(addr: &str, router: ShardRouter) -> Result<RouterServer> {
         let metrics = Arc::clone(router.metrics());
+        let tracer = router.tracer.clone();
         let listener = TcpListener::bind(addr)?;
         Ok(RouterServer {
             listener,
             router: Arc::new(Mutex::new(router)),
             metrics,
+            tracer,
             stop: Arc::new(AtomicBool::new(false)),
         })
     }
@@ -539,11 +644,17 @@ impl RouterServer {
                 Ok(stream) => {
                     let router = Arc::clone(&self.router);
                     let metrics = Arc::clone(&self.metrics);
+                    let tracer = self.tracer.clone();
                     let stop = Arc::clone(&self.stop);
                     pool.execute(move || {
-                        if let Err(e) =
-                            route_connection(stream, &router, &metrics, &stop, read_timeout)
-                        {
+                        if let Err(e) = route_connection(
+                            stream,
+                            &router,
+                            &metrics,
+                            &tracer,
+                            &stop,
+                            read_timeout,
+                        ) {
                             log::debug!("router connection ended: {e:#}");
                         }
                     });
@@ -559,6 +670,7 @@ fn route_connection(
     stream: TcpStream,
     router: &Mutex<ShardRouter>,
     metrics: &Metrics,
+    tracer: &TraceHandle,
     stop: &AtomicBool,
     read_timeout: Duration,
 ) -> Result<()> {
@@ -567,10 +679,11 @@ fn route_connection(
     serve_connection_lines(
         stream,
         metrics,
+        tracer,
         stop,
         read_timeout,
         || (),
-        |line| route_line(line, router, metrics),
+        |line| route_line(line, router, metrics, tracer),
     )
 }
 
@@ -584,6 +697,7 @@ mod tests {
         let router = Mutex::new(ShardRouter {
             shards: Vec::new(),
             metrics: Arc::new(Metrics::new()),
+            tracer: TraceHandle::disabled(),
         });
         let err = dispatch_routed(&Request::StreamPollAll { k: 3 }, &router).unwrap_err();
         assert_eq!(err.code, ErrorCode::BadRequest);
@@ -625,6 +739,7 @@ mod tests {
                 },
             ],
             metrics: Arc::new(Metrics::new()),
+            tracer: TraceHandle::disabled(),
         };
         let row = |index: usize, distance: f64| NeighborRow {
             index,

@@ -87,6 +87,7 @@ use crate::streaming::{
     DecisionPolicy, FinalLen, SessionManager, StreamDecision, StreamSession, TopEntry,
     MAX_STREAM_LEN,
 };
+use crate::trace::{Span, TraceHandle};
 use crate::util::json::Json;
 use crate::util::pool::{default_workers, PanicHook, ThreadPool};
 use anyhow::{anyhow, Result};
@@ -127,6 +128,10 @@ pub struct ServerState {
     pub runtime: Option<RuntimeHandle>,
     pub metrics: Metrics,
     pub sessions: SessionManager,
+    /// Span sink + clock for this server's request tracing (see
+    /// `OBSERVABILITY.md`). [`TraceHandle::disabled`] — the default — costs
+    /// nothing on the request path.
+    pub tracer: TraceHandle,
 }
 
 /// The TCP server.
@@ -206,6 +211,7 @@ fn handle_connection(
     let result = serve_connection_lines(
         stream,
         &state.metrics,
+        &state.tracer,
         stop,
         read_timeout,
         || reap_sessions(state),
@@ -310,6 +316,7 @@ fn is_idle_error(e: &std::io::Error) -> bool {
 pub(crate) fn serve_connection_lines(
     stream: TcpStream,
     metrics: &Metrics,
+    tracer: &TraceHandle,
     stop: &AtomicBool,
     read_timeout: Duration,
     mut on_idle: impl FnMut(),
@@ -320,7 +327,10 @@ pub(crate) fn serve_connection_lines(
     let mut reader = BufReader::new(stream);
     let mut buf: Vec<u8> = Vec::new();
     let mut discarding = false;
-    let mut last_activity = std::time::Instant::now();
+    // Idle accounting goes through the tracer's clock, so tests can drive
+    // it virtually and the raw-clock lint stays scoped to `trace/`.
+    let idle_ns = CONN_IDLE.as_nanos() as u64;
+    let mut last_activity = tracer.now_ns();
     let reject = |writer: &mut TcpStream, err: ServerError| -> std::io::Result<()> {
         metrics.inc_requests();
         metrics.inc_errors();
@@ -336,12 +346,12 @@ pub(crate) fn serve_connection_lines(
             match discard_to_newline(&mut reader) {
                 Ok(true) => {
                     discarding = false;
-                    last_activity = std::time::Instant::now();
+                    last_activity = tracer.now_ns();
                 }
                 Ok(false) => break, // EOF
                 Err(e) if is_idle_error(&e) => {
                     on_idle();
-                    if last_activity.elapsed() > CONN_IDLE {
+                    if tracer.now_ns().saturating_sub(last_activity) > idle_ns {
                         break;
                     }
                 }
@@ -351,7 +361,7 @@ pub(crate) fn serve_connection_lines(
         }
         match read_line_bounded(&mut reader, &mut buf, MAX_LINE_BYTES) {
             Ok(LineRead::Line) => {
-                last_activity = std::time::Instant::now();
+                last_activity = tracer.now_ns();
                 let text: Option<String> =
                     std::str::from_utf8(&buf).ok().map(|s| s.trim().to_string());
                 buf.clear();
@@ -369,7 +379,7 @@ pub(crate) fn serve_connection_lines(
                 }
             }
             Ok(LineRead::Overflow { complete }) => {
-                last_activity = std::time::Instant::now();
+                last_activity = tracer.now_ns();
                 reject(
                     &mut writer,
                     ServerError::new(
@@ -400,8 +410,12 @@ pub(crate) fn serve_connection_lines(
                 // Idle tick: keep the connection (a live stream may simply
                 // have nothing to feed yet); partial bytes stay in `buf`.
                 on_idle();
-                if last_activity.elapsed() > CONN_IDLE {
-                    log::debug!("dropping connection idle for {:?}", last_activity.elapsed());
+                let idle = tracer.now_ns().saturating_sub(last_activity);
+                if idle > idle_ns {
+                    log::debug!(
+                        "dropping connection idle for {:?}",
+                        Duration::from_nanos(idle)
+                    );
                     break;
                 }
             }
@@ -419,14 +433,37 @@ fn write_reply(writer: &mut TcpStream, reply: &Json) -> std::io::Result<()> {
 /// Decode, dispatch and render one request line. Never fails: malformed
 /// input becomes a structured error response (counted per [`ErrorCode`]
 /// in the metrics registry), rendered in the envelope the line arrived in.
+///
+/// With tracing enabled, each line becomes one `request` span with
+/// `decode` / `handle` / `encode` children; a v2 envelope carrying a
+/// `trace` field links the request span under that remote span id, so a
+/// routed shard's tree nests below the router's fan-out span.
 pub fn handle_line(line: &str, state: &ServerState) -> Json {
+    let t0 = state.tracer.timestamp();
     let (wire, decoded) = decode_line(line);
-    let result = decoded.and_then(|req| dispatch(&req, state));
+    let t1 = state.tracer.timestamp();
+    let remote = match wire {
+        Wire::V2 { trace, .. } => trace,
+        Wire::V1 => 0,
+    };
+    let root = state.tracer.root_linked("request", remote);
+    state.tracer.span_at("decode", root.id(), t0, t1);
+    let result = {
+        let handle = root.child("handle");
+        decoded.and_then(|req| {
+            handle.note("type", req.type_name());
+            dispatch_traced(&req, state, &handle)
+        })
+    };
     if let Err(e) = &result {
         state.metrics.inc_errors();
         state.metrics.inc_proto_error(e.code);
+        root.note("error", e.code.as_str());
     }
-    encode_reply(&wire, &result)
+    let encode = root.child("encode");
+    let reply = encode_reply(&wire, &result);
+    drop(encode);
+    reply
 }
 
 /// Legacy entry point kept for benches/tests: dispatch one request line,
@@ -445,6 +482,16 @@ pub fn handle_request(line: &str, state: &ServerState) -> Result<Json> {
 /// execution path behind both envelope flavors — and the reason they can
 /// never drift: v1 and v2 differ only in decode/render.
 pub fn dispatch(req: &Request, state: &ServerState) -> Result<Response, ServerError> {
+    dispatch_traced(req, state, &Span::none())
+}
+
+/// [`dispatch`] under a parent span: command handlers that do real work
+/// (k-NN, streaming) get their own child spans; trivial lookups do not.
+pub fn dispatch_traced(
+    req: &Request,
+    state: &ServerState,
+    parent: &Span,
+) -> Result<Response, ServerError> {
     match req {
         Request::Ping => Ok(Response::Pong),
         Request::Stats => Ok(Response::Stats(StatsBody {
@@ -453,6 +500,7 @@ pub fn dispatch(req: &Request, state: &ServerState) -> Result<Response, ServerEr
             live_sessions: state.sessions.len(),
         })),
         Request::Apps => Ok(Response::Apps(app_names(state))),
+        Request::Metrics => Ok(Response::Metrics(state.metrics.snapshot())),
         Request::ShardInfo => Ok(Response::ShardInfo(ShardInfoBody {
             entries: state.db.len(),
             apps: app_names(state),
@@ -460,9 +508,15 @@ pub fn dispatch(req: &Request, state: &ServerState) -> Result<Response, ServerEr
             sessions: state.sessions.ids(),
         })),
         Request::Match { series, config } => handle_match(series, config, state),
-        Request::Knn { series, k, config } => handle_knn(series, *k, config.as_ref(), state),
+        Request::Knn { series, k, config } => {
+            let span = parent.child("knn");
+            span.event("k", *k as u64);
+            handle_knn(series, *k, config.as_ref(), state, &span)
+        }
         Request::KnnBatch { queries, k, config } => {
-            handle_knn_batch(queries, *k, config.as_ref(), state)
+            let span = parent.child("knn_batch");
+            span.event("queries", queries.len() as u64);
+            handle_knn_batch(queries, *k, config.as_ref(), state, &span)
         }
         Request::StreamOpen {
             config,
@@ -471,19 +525,32 @@ pub fn dispatch(req: &Request, state: &ServerState) -> Result<Response, ServerEr
             min_fraction,
             margin,
             min_samples,
-        } => handle_stream_open(
-            config.as_ref(),
-            *final_len,
-            *max_len,
-            *min_fraction,
-            *margin,
-            *min_samples,
-            state,
-        ),
-        Request::StreamFeed { session, samples } => handle_stream_feed(*session, samples, state),
+        } => {
+            let span = parent.child("stream_open");
+            handle_stream_open(
+                config.as_ref(),
+                *final_len,
+                *max_len,
+                *min_fraction,
+                *margin,
+                *min_samples,
+                state,
+                &span,
+            )
+        }
+        Request::StreamFeed { session, samples } => {
+            let span = parent.child("stream_feed");
+            span.event("session", *session);
+            span.event("samples", samples.len() as u64);
+            handle_stream_feed(*session, samples, state, &span)
+        }
         Request::StreamPoll { session, k } => handle_stream_poll(*session, *k, state),
         Request::StreamPollAll { k } => handle_stream_poll_all(*k, state),
-        Request::StreamClose { session } => handle_stream_close(*session, state),
+        Request::StreamClose { session } => {
+            let span = parent.child("stream_close");
+            span.event("session", *session);
+            handle_stream_close(*session, state, &span)
+        }
     }
 }
 
@@ -545,6 +612,7 @@ fn handle_stream_open(
     margin: Option<f64>,
     min_samples: Option<usize>,
     state: &ServerState,
+    span: &Span,
 ) -> Result<Response, ServerError> {
     // Every open sweeps stale sessions, so open-and-abandon clients cannot
     // grow the registry even when no connection ever sits idle.
@@ -569,6 +637,8 @@ fn handle_stream_open(
     let candidates = session.candidates();
     let id = state.sessions.open(session);
     state.metrics.inc_stream_opened();
+    span.event("session", id);
+    span.event("candidates", candidates as u64);
     Ok(Response::StreamOpened(StreamOpenBody {
         session: id,
         candidates,
@@ -580,6 +650,7 @@ fn handle_stream_feed(
     id: u64,
     samples: &[f64],
     state: &ServerState,
+    span: &Span,
 ) -> Result<Response, ServerError> {
     let (decided_now, decision, observed, live) = state
         .sessions
@@ -593,8 +664,11 @@ fn handle_stream_feed(
     if decided_now {
         if let Some(d) = &decision {
             state.metrics.record_stream_decision(d.at_sample, d.fraction);
+            span.event("decision_at", d.at_sample as u64);
+            span.note("decision", d.app.name());
         }
     }
+    span.event("live_candidates", live as u64);
     Ok(Response::StreamFed(StreamFeedBody {
         observed,
         live_candidates: live,
@@ -646,11 +720,19 @@ fn handle_stream_poll_all(k: usize, state: &ServerState) -> Result<Response, Ser
 }
 
 /// Close a session: exact final search over the whole capture.
-fn handle_stream_close(id: u64, state: &ServerState) -> Result<Response, ServerError> {
+fn handle_stream_close(
+    id: u64,
+    state: &ServerState,
+    span: &Span,
+) -> Result<Response, ServerError> {
     let session = state.sessions.close(id).map_err(session_err)?;
     state.metrics.inc_stream_closed();
     state.metrics.record_stream_session(&session.stats());
+    let finalize = span.child("finalize");
     let (neighbors, stats) = session.finalize(&state.db, 1);
+    finalize.event("candidates", stats.candidates);
+    finalize.event("dtw_evals", stats.dtw_evals);
+    drop(finalize);
     state.metrics.record_search(&stats);
     let entries = state.db.entries();
     let final_match = neighbors.first().map(|nb| {
@@ -729,13 +811,14 @@ fn handle_knn(
     k: usize,
     config: Option<&crate::simulator::job::JobConfig>,
     state: &ServerState,
+    span: &Span,
 ) -> Result<Response, ServerError> {
     let q = prepare_query(series);
     let (neighbors, stats) = match config {
-        Some(cfg) => state.db.knn_in_config(&q, &cfg.label(), k),
+        Some(cfg) => state.db.knn_in_config_traced(&q, &cfg.label(), k, span),
         None => {
             let fanout = KnnFanout::enter();
-            state.db.knn_parallel(&q, k, fanout.workers())
+            state.db.knn_parallel_traced(&q, k, fanout.workers(), span)
         }
     };
     state.metrics.record_search(&stats);
@@ -757,17 +840,18 @@ fn handle_knn_batch(
     k: usize,
     config: Option<&crate::simulator::job::JobConfig>,
     state: &ServerState,
+    span: &Span,
 ) -> Result<Response, ServerError> {
     let prepared: Vec<Vec<f64>> = queries.iter().map(|q| prepare_query(q)).collect();
     let qrefs: Vec<&[f64]> = prepared.iter().map(Vec::as_slice).collect();
-    let t0 = std::time::Instant::now();
+    let t0 = state.tracer.now_ns();
     let results = match config {
-        Some(cfg) => state.db.knn_batch_in_config(&qrefs, &cfg.label(), k),
-        None => state.db.knn_batch(&qrefs, k),
+        Some(cfg) => state.db.knn_batch_in_config_traced(&qrefs, &cfg.label(), k, span),
+        None => state.db.knn_batch_traced(&qrefs, k, span),
     };
     state
         .metrics
-        .record_knn_batch(qrefs.len() as u64, t0.elapsed().as_secs_f64());
+        .record_knn_batch(qrefs.len() as u64, state.tracer.elapsed_secs(t0));
 
     let mut merged = SearchStats::default();
     let rows = results
@@ -858,6 +942,7 @@ mod tests {
             runtime: None,
             metrics: Metrics::new(),
             sessions: SessionManager::new(),
+            tracer: TraceHandle::disabled(),
         }
     }
 
@@ -1198,6 +1283,73 @@ mod tests {
         }
         assert_eq!(state.metrics.stream_opened.load(std::sync::atomic::Ordering::Relaxed), 1);
         assert_eq!(state.metrics.stream_closed.load(std::sync::atomic::Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn metrics_request_answers_the_snapshot() {
+        let state = state_with_db();
+        let resp = handle_line(r#"{"v":2,"id":3,"type":"metrics"}"#, &state);
+        assert_eq!(resp.get("ok"), Some(&Json::Bool(true)), "{resp}");
+        let body = resp.get("body").unwrap();
+        assert!(body.get("requests").and_then(Json::as_u64).is_some());
+        assert!(body.get("latency").and_then(|l| l.get("p99_ms")).is_some());
+        assert!(body.get("proto_errors").and_then(|p| p.get("total")).is_some());
+        // The v1 spelling works too (shard_info-style "ok" merge).
+        let resp = handle_line(r#"{"cmd":"metrics"}"#, &state);
+        assert_eq!(resp.get("ok"), Some(&Json::Bool(true)), "{resp}");
+        assert!(resp.get("requests").and_then(Json::as_u64).is_some());
+    }
+
+    #[test]
+    fn handle_line_builds_the_span_taxonomy() {
+        use crate::trace::{InMemoryTracker, VirtualClock};
+        use std::sync::Arc;
+
+        let tracker = Arc::new(InMemoryTracker::new());
+        let clock = Arc::new(VirtualClock::new(10));
+        let mut state = state_with_db();
+        state.tracer = TraceHandle::with_clock(
+            Arc::clone(&tracker) as Arc<dyn crate::trace::Tracker>,
+            clock,
+        );
+
+        let req = Request::Knn {
+            series: raw_wave(0.2),
+            k: 1,
+            config: None,
+        };
+        let resp = handle_line(&req.to_v2_traced(1, 77).to_string(), &state);
+        assert_eq!(resp.get("ok"), Some(&Json::Bool(true)), "{resp}");
+
+        let spans = tracker.spans();
+        let root = spans.iter().find(|s| s.name == "request").expect("request span");
+        assert_eq!(root.parent, 0);
+        assert_eq!(root.remote_parent, 77, "router's span id propagated");
+        assert!(root.end_ns > root.start_ns);
+        for name in ["decode", "handle", "encode"] {
+            let s = spans.iter().find(|s| s.name == name).unwrap_or_else(|| panic!("{name} span"));
+            assert_eq!(s.parent, root.id, "{name} nests under request");
+            assert!(s.end_ns > s.start_ns, "{name} has a duration");
+        }
+        let handle = spans.iter().find(|s| s.name == "handle").unwrap();
+        let knn = spans.iter().find(|s| s.name == "knn").expect("knn span");
+        assert_eq!(knn.parent, handle.id);
+        let cascade = spans.iter().find(|s| s.name == "cascade").expect("cascade span");
+        assert_eq!(cascade.parent, knn.id);
+        for stage in ["lb_kim", "lb_paa", "lb_keogh", "dp"] {
+            let s = spans
+                .iter()
+                .find(|s| s.name == stage)
+                .unwrap_or_else(|| panic!("{stage} span"));
+            assert_eq!(s.parent, cascade.id, "{stage} nests under cascade");
+            assert!(s.end_ns > s.start_ns, "{stage} has a duration");
+        }
+        // An untraced request (trace absent) still gets a local root.
+        let resp = handle_line(&req.to_v2(2).to_string(), &state);
+        assert_eq!(resp.get("ok"), Some(&Json::Bool(true)));
+        let roots = tracker.roots();
+        assert_eq!(roots.len(), 2);
+        assert_eq!(roots[1].remote_parent, 0);
     }
 
     #[test]

@@ -13,11 +13,57 @@ use super::knn::{brute_force_knn, knn, knn_batch, knn_parallel, Neighbor};
 use super::{SearchStats, DEFAULT_BLOCK};
 use crate::database::profile::ProfileEntry;
 use crate::database::store::{OptimalConfig, ReferenceDb};
+use crate::trace::Span;
 use crate::util::json::Json;
 use crate::workloads::AppId;
 use anyhow::{Context, Result};
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
+
+/// Render one search's cascade breakdown as spans under `parent`: a
+/// `cascade` child carrying the candidate count, with one child per
+/// pruning stage (`lb_kim` / `lb_paa` / `lb_keogh`) and a `dp` child for
+/// the dynamic program. The spans are synthesized *after* the search from
+/// its [`SearchStats`] — the hot loop never sees the tracker, so a
+/// disabled tracer costs nothing here beyond one branch.
+fn record_cascade(parent: &Span, stats: &SearchStats) {
+    if !parent.active() {
+        return;
+    }
+    let cascade = parent.child("cascade");
+    cascade.event("candidates", stats.candidates);
+    {
+        let s = cascade.child("lb_kim");
+        s.event("pruned", stats.pruned_lb_kim);
+    }
+    {
+        let s = cascade.child("lb_paa");
+        s.event("pruned", stats.pruned_lb_paa);
+    }
+    {
+        let s = cascade.child("lb_keogh");
+        s.event("pruned", stats.pruned_lb_keogh);
+    }
+    {
+        let s = cascade.child("dp");
+        s.event("evals", stats.dtw_evals);
+        s.event("abandoned", stats.abandoned);
+    }
+}
+
+/// [`record_cascade`] over a batch: one merged cascade breakdown for the
+/// whole batch (per-query spans would drown the trace in small batches'
+/// worth of identical stages).
+fn record_cascade_batch(parent: &Span, results: &[(Vec<Neighbor>, SearchStats)]) {
+    if !parent.active() {
+        return;
+    }
+    let mut merged = SearchStats::default();
+    for (_, stats) in results {
+        merged.merge(stats);
+    }
+    record_cascade(parent, &merged);
+}
 
 /// Reference database with an always-in-sync similarity index.
 #[derive(Debug, Default)]
@@ -215,6 +261,74 @@ impl IndexedDb {
         k: usize,
     ) -> Vec<(Vec<Neighbor>, SearchStats)> {
         knn_batch(queries, &self.config_candidates(label), k)
+    }
+
+    /// [`IndexedDb::knn`] plus a post-hoc cascade-stage span breakdown
+    /// under `span` (see [`record_cascade`]). Results are identical to the
+    /// untraced call — tracing never touches the search itself.
+    pub fn knn_traced(
+        &self,
+        query: &[f64],
+        k: usize,
+        span: &Span,
+    ) -> (Vec<Neighbor>, SearchStats) {
+        let out = self.knn(query, k);
+        record_cascade(span, &out.1);
+        out
+    }
+
+    /// [`IndexedDb::knn_in_config`] with cascade-stage spans under `span`.
+    pub fn knn_in_config_traced(
+        &self,
+        query: &[f64],
+        label: &str,
+        k: usize,
+        span: &Span,
+    ) -> (Vec<Neighbor>, SearchStats) {
+        let out = self.knn_in_config(query, label, k);
+        record_cascade(span, &out.1);
+        out
+    }
+
+    /// [`IndexedDb::knn_parallel`] with cascade-stage spans under `span`
+    /// (one merged breakdown; per-worker attribution is not recorded).
+    pub fn knn_parallel_traced(
+        &self,
+        query: &[f64],
+        k: usize,
+        workers: usize,
+        span: &Span,
+    ) -> (Vec<Neighbor>, SearchStats) {
+        let out = self.knn_parallel(query, k, workers);
+        record_cascade(span, &out.1);
+        out
+    }
+
+    /// [`IndexedDb::knn_batch`] with one merged cascade breakdown for the
+    /// batch under `span`.
+    pub fn knn_batch_traced(
+        &self,
+        queries: &[&[f64]],
+        k: usize,
+        span: &Span,
+    ) -> Vec<(Vec<Neighbor>, SearchStats)> {
+        let results = self.knn_batch(queries, k);
+        record_cascade_batch(span, &results);
+        results
+    }
+
+    /// [`IndexedDb::knn_batch_in_config`] with one merged cascade
+    /// breakdown for the batch under `span`.
+    pub fn knn_batch_in_config_traced(
+        &self,
+        queries: &[&[f64]],
+        label: &str,
+        k: usize,
+        span: &Span,
+    ) -> Vec<(Vec<Neighbor>, SearchStats)> {
+        let results = self.knn_batch_in_config(queries, label, k);
+        record_cascade_batch(span, &results);
+        results
     }
 
     /// Brute-force baseline over the whole database (same contract as

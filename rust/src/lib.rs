@@ -45,6 +45,13 @@
 //! [`coordinator::router::ShardRouter`] composes per-config shard servers
 //! into one logical database whose routed k-NN answers are bit-identical
 //! to a single node over the union (see `PROTOCOL.md`).
+//!
+//! Observability is cross-cutting: [`trace`] provides per-request span
+//! trees with pluggable sinks (null / in-memory / text / Chrome
+//! `trace_event` JSON), threaded through server dispatch, router fan-out,
+//! the cascade and streaming sessions, with trace identity propagated
+//! across the wire via the v2 envelope's optional `trace` field (see
+//! `OBSERVABILITY.md`).
 
 pub mod client;
 pub mod coordinator;
@@ -56,6 +63,7 @@ pub mod runtime;
 pub mod signal;
 pub mod simulator;
 pub mod streaming;
+pub mod trace;
 pub mod util;
 pub mod workloads;
 
@@ -77,6 +85,9 @@ pub mod prelude {
     pub use crate::simulator::job::JobConfig;
     pub use crate::streaming::{
         DecisionPolicy, FinalLen, SessionManager, StreamDecision, StreamSession,
+    };
+    pub use crate::trace::{
+        ChromeTracker, InMemoryTracker, NullTracker, Span, TextTracker, TraceHandle,
     };
     pub use crate::workloads::AppId;
 }

@@ -176,6 +176,7 @@ fn main() -> anyhow::Result<()> {
                 runtime,
                 metrics: Metrics::new(),
                 sessions: mrtuner::streaming::SessionManager::new(),
+                tracer: mrtuner::trace::TraceHandle::disabled(),
             };
             let server = MatchServer::bind(&format!("127.0.0.1:{port}"), state)?;
             println!("serving on {}", server.local_addr()?);

@@ -23,6 +23,10 @@
 //!   does exactly this).
 //! * `type` selects the command; the remaining fields are the command's
 //!   parameters, flat beside the envelope keys.
+//! * `trace` (optional) carries the sender's span id so the receiver's
+//!   spans nest under it in a merged timeline (see `OBSERVABILITY.md`).
+//!   Absent by default — requests without it and all replies are
+//!   byte-identical to pre-trace traffic.
 //!
 //! **v1 compatibility:** any line *without* a `"v"` key is decoded as the
 //! legacy `{"cmd": ...}` command set and answered in the legacy shapes
@@ -171,8 +175,13 @@ impl std::error::Error for ServerError {}
 pub enum Wire {
     /// Legacy versionless `{"cmd": ...}` line.
     V1,
-    /// Protocol v2 envelope; `id` is echoed into the reply.
-    V2 { id: u64 },
+    /// Protocol v2 envelope; `id` is echoed into the reply. `trace` is
+    /// the optional trace-propagation field (0 when absent): the sender's
+    /// span id, recorded by the receiver as its root span's remote
+    /// parent so both sides' trees merge into one timeline. Replies
+    /// never carry it, and requests without it are byte-identical to
+    /// pre-trace traffic.
+    V2 { id: u64, trace: u64 },
 }
 
 /// Decode one request line into its envelope flavor and (if well-formed)
@@ -194,7 +203,8 @@ pub fn decode_line(line: &str) -> (Wire, Result<Request, ServerError>) {
         None => (Wire::V1, Request::from_v1(&req)),
         Some(v) => {
             let id = req.get("id").and_then(Json::as_u64).unwrap_or(0);
-            let wire = Wire::V2 { id };
+            let trace = req.get("trace").and_then(Json::as_u64).unwrap_or(0);
+            let wire = Wire::V2 { id, trace };
             if v.as_f64() != Some(PROTOCOL_VERSION as f64) {
                 let err = ServerError::new(
                     ErrorCode::WrongVersion,
@@ -218,14 +228,14 @@ pub fn encode_reply(wire: &Wire, result: &Result<Response, ServerError>) -> Json
             ("ok", Json::Bool(false)),
             ("error", Json::Str(e.message.clone())),
         ]),
-        (Wire::V2 { id }, Ok(resp)) => Json::obj(vec![
+        (Wire::V2 { id, .. }, Ok(resp)) => Json::obj(vec![
             ("v", Json::Num(PROTOCOL_VERSION as f64)),
             ("id", Json::Num(*id as f64)),
             ("ok", Json::Bool(true)),
             ("type", Json::Str(resp.type_name().to_string())),
             ("body", resp.to_body_json()),
         ]),
-        (Wire::V2 { id }, Err(e)) => Json::obj(vec![
+        (Wire::V2 { id, .. }, Err(e)) => Json::obj(vec![
             ("v", Json::Num(PROTOCOL_VERSION as f64)),
             ("id", Json::Num(*id as f64)),
             ("ok", Json::Bool(false)),
@@ -304,15 +314,19 @@ mod tests {
         assert_eq!(req.unwrap(), Request::Ping);
 
         let (wire, req) = decode_line(r#"{"v":2,"id":9,"type":"ping"}"#);
-        assert_eq!(wire, Wire::V2 { id: 9 });
+        assert_eq!(wire, Wire::V2 { id: 9, trace: 0 });
+        assert_eq!(req.unwrap(), Request::Ping);
+
+        let (wire, req) = decode_line(r#"{"v":2,"id":9,"trace":31,"type":"ping"}"#);
+        assert_eq!(wire, Wire::V2 { id: 9, trace: 31 });
         assert_eq!(req.unwrap(), Request::Ping);
 
         let (wire, req) = decode_line(r#"{"v":3,"id":1,"type":"ping"}"#);
-        assert_eq!(wire, Wire::V2 { id: 1 });
+        assert_eq!(wire, Wire::V2 { id: 1, trace: 0 });
         assert_eq!(req.unwrap_err().code, ErrorCode::WrongVersion);
 
         let (wire, req) = decode_line(r#"{"v":2,"type":"ping"}"#);
-        assert_eq!(wire, Wire::V2 { id: 0 });
+        assert_eq!(wire, Wire::V2 { id: 0, trace: 0 });
         assert_eq!(req.unwrap_err().code, ErrorCode::BadRequest);
 
         let (wire, req) = decode_line("not json at all");
@@ -330,7 +344,7 @@ mod tests {
     #[test]
     fn v2_error_rendering_carries_code_and_id() {
         let err = ServerError::new(ErrorCode::UnknownSession, "unknown session 5");
-        let v = encode_reply(&Wire::V2 { id: 12 }, &Err(err));
+        let v = encode_reply(&Wire::V2 { id: 12, trace: 0 }, &Err(err));
         assert_eq!(v.get("v").and_then(Json::as_u64), Some(2));
         assert_eq!(v.get("id").and_then(Json::as_u64), Some(12));
         assert_eq!(v.get("ok"), Some(&Json::Bool(false)));
@@ -342,13 +356,18 @@ mod tests {
     #[test]
     fn reply_roundtrip_ok_and_err() {
         let resp = Response::Pong;
-        let line = encode_reply(&Wire::V2 { id: 4 }, &Ok(resp.clone())).to_string();
+        let line = encode_reply(&Wire::V2 { id: 4, trace: 0 }, &Ok(resp.clone())).to_string();
         let (id, back) = decode_reply(&line).unwrap();
         assert_eq!(id, 4);
         assert_eq!(back.unwrap(), resp);
 
+        // The trace field influences request decoding only — replies are
+        // rendered identically whether or not the request carried one.
+        let traced = encode_reply(&Wire::V2 { id: 4, trace: 88 }, &Ok(resp.clone())).to_string();
+        assert_eq!(traced, line, "replies never echo the trace field");
+
         let err = ServerError::new(ErrorCode::TooLarge, "batch too large");
-        let line = encode_reply(&Wire::V2 { id: 5 }, &Err(err.clone())).to_string();
+        let line = encode_reply(&Wire::V2 { id: 5, trace: 0 }, &Err(err.clone())).to_string();
         let (id, back) = decode_reply(&line).unwrap();
         assert_eq!(id, 5);
         assert_eq!(back.unwrap_err(), err);

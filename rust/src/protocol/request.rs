@@ -16,6 +16,10 @@ pub enum Request {
     /// What this server owns: entry count, apps, config labels, live
     /// session ids. The shard router's handshake.
     ShardInfo,
+    /// Structured metrics snapshot (counters, latency summaries with
+    /// quantiles, per-code proto errors, per-shard fan-out) as JSON — the
+    /// machine-readable sibling of `stats`' human report string.
+    Metrics,
     /// Preprocess a raw capture and score it against every reference of
     /// one configuration set (the paper's matching phase).
     Match { series: Vec<f64>, config: JobConfig },
@@ -204,6 +208,7 @@ impl Request {
             Some("stats") => Ok(Request::Stats),
             Some("apps") => Ok(Request::Apps),
             Some("shard_info") => Ok(Request::ShardInfo),
+            Some("metrics") => Ok(Request::Metrics),
             Some("match") => {
                 let series = parse_series_field(req)?;
                 let config = parse_config(
@@ -246,6 +251,7 @@ impl Request {
             Request::Stats => "stats",
             Request::Apps => "apps",
             Request::ShardInfo => "shard_info",
+            Request::Metrics => "metrics",
             Request::Match { .. } => "match",
             Request::Knn { .. } => "knn",
             Request::KnnBatch { .. } => "knn_batch",
@@ -268,13 +274,28 @@ impl Request {
 
     /// Serialize as one v2 request line (envelope + flat parameters).
     pub fn to_v2(&self, id: u64) -> Json {
+        self.to_v2_traced(id, 0)
+    }
+
+    /// [`Request::to_v2`] with trace propagation: when `trace` is
+    /// non-zero it is emitted as the envelope's `trace` field (the
+    /// sender's span id), so the receiver's spans nest under it. A zero
+    /// trace emits nothing — the line is byte-identical to `to_v2`.
+    pub fn to_v2_traced(&self, id: u64, trace: u64) -> Json {
         let mut pairs: Vec<(&str, Json)> = vec![
             ("v", Json::Num(PROTOCOL_VERSION as f64)),
             ("id", Json::Num(id as f64)),
             ("type", Json::Str(self.type_name().to_string())),
         ];
+        if trace != 0 {
+            pairs.push(("trace", Json::Num(trace as f64)));
+        }
         match self {
-            Request::Ping | Request::Stats | Request::Apps | Request::ShardInfo => {}
+            Request::Ping
+            | Request::Stats
+            | Request::Apps
+            | Request::ShardInfo
+            | Request::Metrics => {}
             Request::Match { series, config } => {
                 pairs.push(("series", Json::nums(series)));
                 pairs.push(("config", config_to_json(config)));
@@ -358,6 +379,7 @@ mod tests {
             Request::Stats,
             Request::Apps,
             Request::ShardInfo,
+            Request::Metrics,
             Request::Match {
                 series: series(16),
                 config: cfg,
@@ -422,6 +444,23 @@ mod tests {
             let back = Request::from_v2(&parsed).unwrap();
             assert_eq!(back, req, "case {i}: {line}");
         }
+    }
+
+    #[test]
+    fn trace_field_is_optional_and_transparent() {
+        let req = Request::KnnBatch {
+            queries: vec![series(8)],
+            k: 2,
+            config: None,
+        };
+        // trace = 0 emits nothing: byte-identical to the untraced line.
+        assert_eq!(req.to_v2_traced(3, 0).to_string(), req.to_v2(3).to_string());
+        // A non-zero trace appears in the envelope and parses back to the
+        // same request (the field belongs to the envelope, not the body).
+        let line = req.to_v2_traced(3, 41).to_string();
+        assert!(line.contains(r#""trace":41"#), "{line}");
+        let parsed = Json::parse(&line).unwrap();
+        assert_eq!(Request::from_v2(&parsed).unwrap(), req);
     }
 
     #[test]

@@ -160,6 +160,11 @@ pub enum Response {
     StreamTop(StreamPollBody),
     Sessions(Vec<SessionPollBody>),
     StreamClosed(StreamCloseBody),
+    /// Structured metrics snapshot (the object built by
+    /// `coordinator::metrics::Metrics::snapshot`). Carried as opaque JSON so
+    /// the wire layer never chases the metrics schema; field names are
+    /// pinned by the metrics module's own tests.
+    Metrics(Json),
 }
 
 // ---------- field-level (de)serialization helpers ----------
@@ -482,6 +487,7 @@ impl Response {
             Response::StreamTop(_) => "stream_top",
             Response::Sessions(_) => "sessions",
             Response::StreamClosed(_) => "stream_closed",
+            Response::Metrics(_) => "metrics",
         }
     }
 
@@ -545,6 +551,7 @@ impl Response {
                 ("final", final_to_json(&c.final_match)),
                 ("decision", opt_decision_json(&c.decision)),
             ]),
+            Response::Metrics(m) => m.clone(),
         }
     }
 
@@ -635,6 +642,16 @@ impl Response {
                 ("final", final_to_json(&c.final_match)),
                 ("decision", opt_decision_json(&c.decision)),
             ]),
+            // v1 never had metrics; same treatment as shard_info — the v2
+            // body plus "ok" so a legacy-framed probe still gets an answer.
+            Response::Metrics(m) => {
+                let mut obj = match m.clone() {
+                    Json::Obj(map) => map,
+                    other => std::iter::once(("metrics".to_string(), other)).collect(),
+                };
+                obj.insert("ok".to_string(), Json::Bool(true));
+                Json::Obj(obj)
+            }
         }
     }
 
@@ -709,6 +726,7 @@ impl Response {
                 final_match: final_from_json(body.get("final"))?,
                 decision: opt_decision_from_json(body.get("decision"))?,
             })),
+            "metrics" => Ok(Response::Metrics(body.clone())),
             other => Err(format!("unknown response type {other:?}")),
         }
     }
@@ -862,6 +880,17 @@ mod tests {
                 final_match: None,
                 decision: None,
             }),
+            Response::Metrics(Json::obj(vec![
+                ("requests", Json::Num(12.0)),
+                (
+                    "latency",
+                    Json::obj(vec![
+                        ("n", Json::Num(12.0)),
+                        ("p99_ms", Json::Num(3.0)),
+                    ]),
+                ),
+                ("fanout", Json::arr(vec![])),
+            ])),
         ]
     }
 

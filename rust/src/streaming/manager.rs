@@ -52,6 +52,8 @@ impl SessionManager {
         let id = self.next.fetch_add(1, Ordering::Relaxed) + 1;
         let slot = Arc::new(Slot {
             session: Mutex::new(session),
+            // Idle-reaping bookkeeping, compared only against other
+            // Instants from this registry. lint: allow(no-raw-clock)
             touched: Mutex::new(Instant::now()),
         });
         self.slots.lock().expect("session registry").insert(id, slot);
@@ -67,6 +69,7 @@ impl SessionManager {
             .get(&id)
             .cloned()
             .ok_or_else(|| anyhow!("unknown session {id}"))?;
+        // lint: allow(no-raw-clock) same registry-internal idle clock.
         *slot.touched.lock().expect("session clock") = Instant::now();
         let mut session = slot.session.lock().expect("session state");
         Ok(f(&mut session))

@@ -1,0 +1,203 @@
+//! [`ChromeTracker`]: emits the Chrome/Perfetto `trace_event` JSON format
+//! (an array of complete `"ph":"X"` events), so a captured request opens
+//! directly in `chrome://tracing` or <https://ui.perfetto.dev>.
+//!
+//! Spans sharing one local root are grouped on one track (`tid` = the
+//! root span's id), so concurrent requests render as parallel rows of one
+//! process. Events and notes become the span's `args`.
+
+use super::{SpanId, Tracker};
+use crate::util::json::Json;
+use anyhow::{Context, Result};
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+struct Open {
+    name: &'static str,
+    parent: SpanId,
+    remote_parent: SpanId,
+    start_ns: u64,
+    /// Track id: the id of this span's local root.
+    tid: u64,
+    args: Vec<(String, Json)>,
+}
+
+#[derive(Default)]
+struct Inner {
+    open: HashMap<SpanId, Open>,
+    done: Vec<Json>,
+}
+
+/// Span sink accumulating finished `trace_event` records; drain with
+/// [`ChromeTracker::to_json`] or [`ChromeTracker::write_to`].
+#[derive(Default)]
+pub struct ChromeTracker {
+    next: AtomicU64,
+    inner: Mutex<Inner>,
+}
+
+impl ChromeTracker {
+    pub fn new() -> ChromeTracker {
+        ChromeTracker::default()
+    }
+
+    /// The complete trace document (finished spans only, begin order).
+    pub fn to_json(&self) -> Json {
+        let inner = self.guard();
+        Json::obj(vec![
+            ("displayTimeUnit", Json::Str("ms".to_string())),
+            ("traceEvents", Json::arr(inner.done.clone())),
+        ])
+    }
+
+    /// Number of finished spans captured so far.
+    pub fn len(&self) -> usize {
+        self.guard().done.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Write the trace document to `path` (pretty-printed; open the file
+    /// in a trace viewer).
+    pub fn write_to(&self, path: &Path) -> Result<()> {
+        std::fs::write(path, self.to_json().to_pretty())
+            .with_context(|| format!("writing {}", path.display()))
+    }
+
+    fn guard(&self) -> std::sync::MutexGuard<'_, Inner> {
+        self.inner.lock().unwrap_or_else(|e| e.into_inner())
+    }
+}
+
+impl std::fmt::Debug for ChromeTracker {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("ChromeTracker").field("finished", &self.len()).finish()
+    }
+}
+
+impl Tracker for ChromeTracker {
+    fn is_enabled(&self) -> bool {
+        true
+    }
+
+    fn begin(
+        &self,
+        name: &'static str,
+        parent: SpanId,
+        remote_parent: SpanId,
+        now_ns: u64,
+    ) -> SpanId {
+        // relaxed: monotone id counter — uniqueness is all that matters.
+        let id = self.next.fetch_add(1, Ordering::Relaxed) + 1;
+        let mut inner = self.guard();
+        let tid = inner.open.get(&parent).map(|p| p.tid).unwrap_or(id);
+        inner.open.insert(
+            id,
+            Open { name, parent, remote_parent, start_ns: now_ns, tid, args: Vec::new() },
+        );
+        id
+    }
+
+    fn end(&self, span: SpanId, now_ns: u64) {
+        let mut inner = self.guard();
+        if let Some(s) = inner.open.remove(&span) {
+            let mut args = vec![
+                ("span".to_string(), Json::Num(span as f64)),
+                ("parent".to_string(), Json::Num(s.parent as f64)),
+            ];
+            if s.remote_parent != 0 {
+                args.push(("remote_parent".to_string(), Json::Num(s.remote_parent as f64)));
+            }
+            args.extend(s.args);
+            let args_obj =
+                Json::obj(args.iter().map(|(k, v)| (k.as_str(), v.clone())).collect());
+            inner.done.push(Json::obj(vec![
+                ("name", Json::Str(s.name.to_string())),
+                ("cat", Json::Str("mrtuner".to_string())),
+                ("ph", Json::Str("X".to_string())),
+                ("ts", Json::Num(s.start_ns as f64 / 1e3)),
+                ("dur", Json::Num(now_ns.saturating_sub(s.start_ns) as f64 / 1e3)),
+                ("pid", Json::Num(1.0)),
+                ("tid", Json::Num(s.tid as f64)),
+                ("args", args_obj),
+            ]));
+        }
+    }
+
+    fn event(&self, span: SpanId, name: &'static str, value: u64, _now_ns: u64) {
+        let mut inner = self.guard();
+        if let Some(s) = inner.open.get_mut(&span) {
+            s.args.push((name.to_string(), Json::Num(value as f64)));
+        }
+    }
+
+    fn note(&self, span: SpanId, key: &'static str, text: &str, _now_ns: u64) {
+        let mut inner = self.guard();
+        if let Some(s) = inner.open.get_mut(&span) {
+            s.args.push((key.to_string(), Json::Str(text.to_string())));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn emits_complete_events_with_nested_track_ids() {
+        let t = ChromeTracker::new();
+        let root = t.begin("request", 0, 0, 2_000);
+        let child = t.begin("cascade", root, 0, 3_000);
+        t.event(child, "candidates", 24, 3_100);
+        t.note(child, "config", "M=2", 3_200);
+        t.end(child, 5_000);
+        t.end(root, 6_000);
+        assert_eq!(t.len(), 2);
+
+        let doc = t.to_json();
+        let events = doc.get("traceEvents").and_then(Json::as_arr).expect("traceEvents");
+        assert_eq!(events.len(), 2);
+        // `cascade` finished first, so it is events[0].
+        let cascade = &events[0];
+        assert_eq!(cascade.get("name").and_then(Json::as_str), Some("cascade"));
+        assert_eq!(cascade.get("ph").and_then(Json::as_str), Some("X"));
+        assert_eq!(cascade.get("ts").and_then(Json::as_f64), Some(3.0));
+        assert_eq!(cascade.get("dur").and_then(Json::as_f64), Some(2.0));
+        // Child inherits the root's track id.
+        let request = &events[1];
+        assert_eq!(cascade.get("tid").and_then(Json::as_f64), request.get("tid").and_then(Json::as_f64));
+        let args = cascade.get("args").expect("args");
+        assert_eq!(args.get("candidates").and_then(Json::as_f64), Some(24.0));
+        assert_eq!(args.get("config").and_then(Json::as_str), Some("M=2"));
+    }
+
+    #[test]
+    fn remote_parent_appears_in_args() {
+        let t = ChromeTracker::new();
+        let id = t.begin("request", 0, 41, 0);
+        t.end(id, 100);
+        let doc = t.to_json();
+        let events = doc.get("traceEvents").and_then(Json::as_arr).expect("traceEvents");
+        assert_eq!(
+            events[0].get("args").and_then(|a| a.get("remote_parent")).and_then(Json::as_f64),
+            Some(41.0)
+        );
+    }
+
+    #[test]
+    fn writes_a_parseable_file() {
+        let t = ChromeTracker::new();
+        let id = t.begin("request", 0, 0, 0);
+        t.end(id, 1_000);
+        let path = std::env::temp_dir().join("mrtuner_chrome_trace_test.json");
+        t.write_to(&path).expect("write trace");
+        let text = std::fs::read_to_string(&path).expect("read back");
+        let doc = Json::parse(&text).expect("valid json");
+        assert!(doc.get("traceEvents").and_then(Json::as_arr).is_some());
+        std::fs::remove_file(&path).ok();
+    }
+}

@@ -1,0 +1,110 @@
+//! Time sources for the tracing layer.
+//!
+//! All clock reads in the serving stack go through the [`Clock`] trait so
+//! tests (and loom models) can substitute a deterministic [`VirtualClock`]
+//! and the mrtuner-lint `no-raw-clock` rule can confine raw
+//! `Instant::now()` to this module plus `coordinator/metrics.rs`. Pure
+//! compute layers (`dtw/`, `signal/`, `index/`) never see a clock at all:
+//! spans are created by their callers and timestamps are read by the
+//! [`TraceHandle`](super::TraceHandle) that owns the clock.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Instant;
+
+/// A monotone nanosecond counter. Implementations must never go backwards;
+/// the zero point is arbitrary (only differences are meaningful).
+pub trait Clock: Send + Sync {
+    fn now_ns(&self) -> u64;
+}
+
+/// Production clock: monotone wall time anchored at construction, so the
+/// emitted nanosecond values stay small enough to survive the `f64` path
+/// through the hand-rolled JSON layer (2^53 ns ≈ 104 days of uptime).
+#[derive(Debug)]
+pub struct MonotonicClock {
+    start: Instant,
+}
+
+impl MonotonicClock {
+    pub fn new() -> MonotonicClock {
+        MonotonicClock { start: Instant::now() }
+    }
+}
+
+impl Default for MonotonicClock {
+    fn default() -> Self {
+        MonotonicClock::new()
+    }
+}
+
+impl Clock for MonotonicClock {
+    fn now_ns(&self) -> u64 {
+        // u64 truncation is safe for ~584 years of elapsed time.
+        self.start.elapsed().as_nanos() as u64
+    }
+}
+
+/// Deterministic test clock: every read advances time by a fixed tick, so
+/// any two reads observe strictly increasing values and every span gets a
+/// non-zero duration without sleeping. [`VirtualClock::advance`] injects
+/// larger jumps (e.g. to trigger idle deadlines).
+#[derive(Debug)]
+pub struct VirtualClock {
+    now: AtomicU64,
+    tick: u64,
+}
+
+impl VirtualClock {
+    /// A clock starting at zero that advances `tick_ns` per read.
+    pub fn new(tick_ns: u64) -> VirtualClock {
+        VirtualClock {
+            now: AtomicU64::new(0),
+            tick: tick_ns.max(1),
+        }
+    }
+
+    /// Jump the clock forward by `ns` without counting as a read.
+    pub fn advance(&self, ns: u64) {
+        // relaxed: monotone test-clock counter; readers only need *some*
+        // strictly increasing value, no other memory is published with it.
+        self.now.fetch_add(ns, Ordering::Relaxed);
+    }
+}
+
+impl Clock for VirtualClock {
+    fn now_ns(&self) -> u64 {
+        // relaxed: monotone test-clock counter (see advance); fetch_add
+        // keeps concurrent readers strictly ordered among themselves.
+        self.now.fetch_add(self.tick, Ordering::Relaxed) + self.tick
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn monotonic_clock_never_goes_backwards() {
+        let c = MonotonicClock::new();
+        let a = c.now_ns();
+        let b = c.now_ns();
+        assert!(b >= a);
+    }
+
+    #[test]
+    fn virtual_clock_ticks_per_read_and_advances() {
+        let c = VirtualClock::new(10);
+        assert_eq!(c.now_ns(), 10);
+        assert_eq!(c.now_ns(), 20);
+        c.advance(1_000);
+        assert_eq!(c.now_ns(), 1_030);
+    }
+
+    #[test]
+    fn virtual_clock_zero_tick_is_clamped() {
+        let c = VirtualClock::new(0);
+        let a = c.now_ns();
+        let b = c.now_ns();
+        assert!(b > a, "reads must remain strictly increasing");
+    }
+}

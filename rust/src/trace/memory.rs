@@ -1,0 +1,166 @@
+//! [`InMemoryTracker`]: records the whole span tree in memory for tests,
+//! CI assertions and post-hoc inspection.
+
+use super::{SpanId, Tracker};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+/// One recorded span. `end_ns == 0` means the span is still open (or was
+/// leaked); events and notes are in arrival order.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SpanRecord {
+    pub id: SpanId,
+    pub name: &'static str,
+    /// Enclosing local span (0 for roots).
+    pub parent: SpanId,
+    /// Span id received over the wire (0 if none) — links this tree under
+    /// a span recorded by a *different* tracker on the sending peer.
+    pub remote_parent: SpanId,
+    pub start_ns: u64,
+    pub end_ns: u64,
+    pub events: Vec<(&'static str, u64)>,
+    pub notes: Vec<(&'static str, String)>,
+}
+
+/// Span sink keeping every record; query helpers reconstruct the tree.
+#[derive(Debug, Default)]
+pub struct InMemoryTracker {
+    next: AtomicU64,
+    spans: Mutex<Vec<SpanRecord>>,
+}
+
+impl InMemoryTracker {
+    pub fn new() -> InMemoryTracker {
+        InMemoryTracker::default()
+    }
+
+    /// Snapshot of every span recorded so far, in begin order.
+    pub fn spans(&self) -> Vec<SpanRecord> {
+        self.guard().clone()
+    }
+
+    /// Recorded roots (spans with no local parent), in begin order.
+    pub fn roots(&self) -> Vec<SpanRecord> {
+        self.guard().iter().filter(|s| s.parent == 0).cloned().collect()
+    }
+
+    /// Direct children of `parent`, in begin order.
+    pub fn children_of(&self, parent: SpanId) -> Vec<SpanRecord> {
+        self.guard().iter().filter(|s| s.parent == parent).cloned().collect()
+    }
+
+    /// Every span named `name`, in begin order.
+    pub fn find(&self, name: &str) -> Vec<SpanRecord> {
+        self.guard().iter().filter(|s| s.name == name).cloned().collect()
+    }
+
+    /// Drop all recorded spans (the id counter keeps running).
+    pub fn clear(&self) {
+        self.guard().clear();
+    }
+
+    fn guard(&self) -> std::sync::MutexGuard<'_, Vec<SpanRecord>> {
+        // A panic while holding this lock can only come from Vec growth
+        // failing; the poisoned data is still just records, so recover it.
+        self.spans.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    fn with_span(&self, id: SpanId, f: impl FnOnce(&mut SpanRecord)) {
+        let mut spans = self.guard();
+        if let Some(s) = spans.iter_mut().rev().find(|s| s.id == id) {
+            f(s);
+        }
+    }
+}
+
+impl Tracker for InMemoryTracker {
+    fn is_enabled(&self) -> bool {
+        true
+    }
+
+    fn begin(
+        &self,
+        name: &'static str,
+        parent: SpanId,
+        remote_parent: SpanId,
+        now_ns: u64,
+    ) -> SpanId {
+        // relaxed: monotone id counter — uniqueness is all that matters,
+        // no other memory is published through it.
+        let id = self.next.fetch_add(1, Ordering::Relaxed) + 1;
+        self.guard().push(SpanRecord {
+            id,
+            name,
+            parent,
+            remote_parent,
+            start_ns: now_ns,
+            end_ns: 0,
+            events: Vec::new(),
+            notes: Vec::new(),
+        });
+        id
+    }
+
+    fn end(&self, span: SpanId, now_ns: u64) {
+        self.with_span(span, |s| s.end_ns = now_ns);
+    }
+
+    fn event(&self, span: SpanId, name: &'static str, value: u64, _now_ns: u64) {
+        self.with_span(span, |s| s.events.push((name, value)));
+    }
+
+    fn note(&self, span: SpanId, key: &'static str, text: &str, _now_ns: u64) {
+        self.with_span(span, |s| s.notes.push((key, text.to_string())));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_tree_shape_and_payloads() {
+        let t = InMemoryTracker::new();
+        let root = t.begin("request", 0, 42, 100);
+        let child = t.begin("handle", root, 0, 110);
+        t.event(child, "queries", 8, 111);
+        t.note(child, "config", "M=4,R=2", 112);
+        t.end(child, 120);
+        t.end(root, 130);
+
+        assert_eq!(t.spans().len(), 2);
+        let roots = t.roots();
+        assert_eq!(roots.len(), 1);
+        assert_eq!(roots[0].name, "request");
+        assert_eq!(roots[0].remote_parent, 42);
+        assert_eq!((roots[0].start_ns, roots[0].end_ns), (100, 130));
+
+        let kids = t.children_of(root);
+        assert_eq!(kids.len(), 1);
+        assert_eq!(kids[0].events, vec![("queries", 8)]);
+        assert_eq!(kids[0].notes, vec![("config", "M=4,R=2".to_string())]);
+
+        assert_eq!(t.find("handle").len(), 1);
+        assert!(t.find("missing").is_empty());
+    }
+
+    #[test]
+    fn ids_are_unique_and_clear_keeps_counting() {
+        let t = InMemoryTracker::new();
+        let a = t.begin("a", 0, 0, 1);
+        let b = t.begin("b", 0, 0, 2);
+        assert_ne!(a, b);
+        t.clear();
+        assert!(t.spans().is_empty());
+        let c = t.begin("c", 0, 0, 3);
+        assert!(c > b, "id counter survives clear");
+    }
+
+    #[test]
+    fn end_on_unknown_id_is_a_no_op() {
+        let t = InMemoryTracker::new();
+        t.end(999, 5);
+        t.event(999, "x", 1, 5);
+        assert!(t.spans().is_empty());
+    }
+}

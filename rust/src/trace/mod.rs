@@ -1,0 +1,298 @@
+//! Structured per-request tracing: nested spans with typed events, behind
+//! a pluggable [`Tracker`] sink.
+//!
+//! The serving stack (server dispatch, shard-router fan-out, the k-NN
+//! cascade, streaming sessions) is instrumented with cheap [`Span`] guards
+//! created through a [`TraceHandle`]. The handle bundles a tracker
+//! implementation with a [`Clock`], so:
+//!
+//! * the **disabled** path (the default, [`NullTracker`]) never reads the
+//!   clock and never allocates — `benches/trace_overhead.rs` pins it
+//!   within noise of the untraced hot path;
+//! * trackers themselves are clock-free: every `begin`/`end`/`event`
+//!   takes the timestamp as a parameter, so tests drive the whole span
+//!   tree from a deterministic [`VirtualClock`](clock::VirtualClock);
+//! * pure compute layers stay clock-free (mrtuner-lint's `no-raw-clock`
+//!   rule): they receive a parent `Span` and derive children from it.
+//!
+//! Backends: [`NullTracker`] (default), [`InMemoryTracker`] (queryable
+//! span tree for tests/CI), [`TextTracker`] (indented log to any `Write`
+//! sink), [`ChromeTracker`] (Chrome/Perfetto `trace_event` JSON — open
+//! the file in `chrome://tracing` or <https://ui.perfetto.dev>).
+//!
+//! Trace identity crosses the wire through the optional `trace` field of
+//! the v2 envelope: the router stamps each fan-out request with its
+//! per-shard span id, and the shard's root span records it as
+//! `remote_parent`, so both sides' trees merge into one timeline. See
+//! `OBSERVABILITY.md` for the span taxonomy.
+
+pub mod chrome;
+pub mod clock;
+pub mod memory;
+pub mod text;
+
+pub use chrome::ChromeTracker;
+pub use clock::{Clock, MonotonicClock, VirtualClock};
+pub use memory::{InMemoryTracker, SpanRecord};
+pub use text::TextTracker;
+
+use std::fmt;
+use std::sync::Arc;
+
+/// Identifier of one span within one tracker; `0` means "no span" (the
+/// disabled tracker hands it out for every begin).
+pub type SpanId = u64;
+
+/// A span sink. Implementations are clock-free: timestamps arrive as
+/// parameters (nanoseconds on the owning handle's [`Clock`]).
+pub trait Tracker: Send + Sync {
+    /// Whether spans should be recorded at all. `false` lets the handle
+    /// skip clock reads and id allocation entirely.
+    fn is_enabled(&self) -> bool;
+
+    /// Open a span. `parent` is the enclosing local span (0 for roots);
+    /// `remote_parent` is a span id received over the wire (0 if none).
+    fn begin(&self, name: &'static str, parent: SpanId, remote_parent: SpanId, now_ns: u64)
+        -> SpanId;
+
+    /// Close a span previously returned by `begin`.
+    fn end(&self, span: SpanId, now_ns: u64);
+
+    /// Attach a typed counter observation to an open span.
+    fn event(&self, span: SpanId, name: &'static str, value: u64, now_ns: u64);
+
+    /// Attach a free-text annotation to an open span.
+    fn note(&self, span: SpanId, key: &'static str, text: &str, now_ns: u64);
+}
+
+/// The zero-overhead default sink: reports itself disabled, so the
+/// [`TraceHandle`] short-circuits before reading the clock.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct NullTracker;
+
+impl Tracker for NullTracker {
+    fn is_enabled(&self) -> bool {
+        false
+    }
+    fn begin(&self, _: &'static str, _: SpanId, _: SpanId, _: u64) -> SpanId {
+        0
+    }
+    fn end(&self, _: SpanId, _: u64) {}
+    fn event(&self, _: SpanId, _: &'static str, _: u64, _: u64) {}
+    fn note(&self, _: SpanId, _: &'static str, _: &str, _: u64) {}
+}
+
+/// Cloneable handle pairing a [`Tracker`] with the [`Clock`] that stamps
+/// its spans. This is what `ServerState`, `ShardRouter`, `Profiler` and
+/// the benches carry.
+#[derive(Clone)]
+pub struct TraceHandle {
+    tracker: Arc<dyn Tracker>,
+    clock: Arc<dyn Clock>,
+    enabled: bool,
+}
+
+impl fmt::Debug for TraceHandle {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("TraceHandle").field("enabled", &self.enabled).finish()
+    }
+}
+
+impl Default for TraceHandle {
+    fn default() -> Self {
+        TraceHandle::disabled()
+    }
+}
+
+impl TraceHandle {
+    /// The default handle: a [`NullTracker`] — span creation is a branch
+    /// and nothing else.
+    pub fn disabled() -> TraceHandle {
+        TraceHandle::new(Arc::new(NullTracker))
+    }
+
+    /// A handle over `tracker` with the production [`MonotonicClock`].
+    pub fn new(tracker: Arc<dyn Tracker>) -> TraceHandle {
+        TraceHandle::with_clock(tracker, Arc::new(MonotonicClock::new()))
+    }
+
+    /// A handle with an explicit clock (tests use a
+    /// [`VirtualClock`](clock::VirtualClock) for deterministic
+    /// durations).
+    pub fn with_clock(tracker: Arc<dyn Tracker>, clock: Arc<dyn Clock>) -> TraceHandle {
+        let enabled = tracker.is_enabled();
+        TraceHandle { tracker, clock, enabled }
+    }
+
+    /// Whether spans are being recorded.
+    pub fn enabled(&self) -> bool {
+        self.enabled
+    }
+
+    /// Read the handle's clock (always live, even when tracing is
+    /// disabled) — the serving layers use this for metrics timing so raw
+    /// `Instant::now()` stays out of them.
+    pub fn now_ns(&self) -> u64 {
+        self.clock.now_ns()
+    }
+
+    /// Seconds elapsed since a previous [`TraceHandle::now_ns`] reading.
+    pub fn elapsed_secs(&self, start_ns: u64) -> f64 {
+        self.now_ns().saturating_sub(start_ns) as f64 * 1e-9
+    }
+
+    /// A clock reading for span bookkeeping: 0 when tracing is disabled,
+    /// so the hot path pays nothing.
+    pub fn timestamp(&self) -> u64 {
+        if self.enabled {
+            self.clock.now_ns()
+        } else {
+            0
+        }
+    }
+
+    /// Open a root span (no local parent).
+    pub fn root(&self, name: &'static str) -> Span {
+        self.span(name, 0, 0)
+    }
+
+    /// Open a root span whose parent lives on a remote peer (the `trace`
+    /// id carried by the v2 envelope).
+    pub fn root_linked(&self, name: &'static str, remote_parent: SpanId) -> Span {
+        self.span(name, 0, remote_parent)
+    }
+
+    /// Record an already-finished interval as a span (used to backdate
+    /// work — e.g. request decode — that ran before its ids were known).
+    pub fn span_at(&self, name: &'static str, parent: SpanId, start_ns: u64, end_ns: u64) {
+        if self.enabled {
+            let id = self.tracker.begin(name, parent, 0, start_ns);
+            self.tracker.end(id, end_ns);
+        }
+    }
+
+    fn span(&self, name: &'static str, parent: SpanId, remote_parent: SpanId) -> Span {
+        if !self.enabled {
+            return Span::none();
+        }
+        let now = self.clock.now_ns();
+        let id = self.tracker.begin(name, parent, remote_parent, now);
+        Span { id, handle: Some(self.clone()) }
+    }
+}
+
+/// RAII guard for one span: closed (with an end timestamp) on drop.
+/// Disabled spans carry no handle, so deriving children from them and
+/// attaching events are branches over a `None`.
+#[derive(Debug, Default)]
+pub struct Span {
+    id: SpanId,
+    handle: Option<TraceHandle>,
+}
+
+impl Span {
+    /// The inert span: everything derived from it is inert too.
+    pub fn none() -> Span {
+        Span { id: 0, handle: None }
+    }
+
+    /// This span's id — what the router sends as the envelope `trace`
+    /// field so the shard's spans nest under it. 0 when disabled.
+    pub fn id(&self) -> SpanId {
+        self.id
+    }
+
+    /// Whether this span records anything.
+    pub fn active(&self) -> bool {
+        self.handle.is_some()
+    }
+
+    /// Open a child span.
+    pub fn child(&self, name: &'static str) -> Span {
+        match &self.handle {
+            Some(h) => h.span(name, self.id, 0),
+            None => Span::none(),
+        }
+    }
+
+    /// Attach a typed counter observation.
+    pub fn event(&self, name: &'static str, value: u64) {
+        if let Some(h) = &self.handle {
+            h.tracker.event(self.id, name, value, h.clock.now_ns());
+        }
+    }
+
+    /// Attach a free-text annotation. The string is only materialized by
+    /// enabled sinks; callers guard expensive formatting with
+    /// [`Span::active`].
+    pub fn note(&self, key: &'static str, text: &str) {
+        if let Some(h) = &self.handle {
+            h.tracker.note(self.id, key, text, h.clock.now_ns());
+        }
+    }
+}
+
+impl Drop for Span {
+    fn drop(&mut self) {
+        if let Some(h) = &self.handle {
+            h.tracker.end(self.id, h.clock.now_ns());
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_handle_is_inert_and_clock_free_for_spans() {
+        let h = TraceHandle::disabled();
+        assert!(!h.enabled());
+        assert_eq!(h.timestamp(), 0);
+        let root = h.root("request");
+        assert!(!root.active());
+        assert_eq!(root.id(), 0);
+        let child = root.child("handle");
+        assert!(!child.active());
+        child.event("count", 3);
+        child.note("key", "value");
+    }
+
+    #[test]
+    fn disabled_handle_still_tells_time_for_metrics() {
+        let h = TraceHandle::disabled();
+        let t0 = h.now_ns();
+        let dt = h.elapsed_secs(t0);
+        assert!(dt >= 0.0);
+    }
+
+    #[test]
+    fn spans_nest_and_close_in_drop_order() {
+        let sink = Arc::new(InMemoryTracker::new());
+        let h = TraceHandle::with_clock(sink.clone(), Arc::new(VirtualClock::new(5)));
+        assert!(h.enabled());
+        {
+            let root = h.root_linked("request", 77);
+            let handle = root.child("handle");
+            handle.event("queries", 4);
+            handle.note("config", "M=2,R=1");
+            drop(handle);
+            h.span_at("decode", root.id(), 1, 2);
+        }
+        let spans = sink.spans();
+        assert_eq!(spans.len(), 3);
+        let root = &spans[0];
+        assert_eq!(root.name, "request");
+        assert_eq!(root.remote_parent, 77);
+        assert_eq!(root.parent, 0);
+        let handle = &spans[1];
+        assert_eq!(handle.name, "handle");
+        assert_eq!(handle.parent, root.id);
+        assert!(handle.end_ns > handle.start_ns, "virtual clock ticks");
+        assert_eq!(handle.events, vec![("queries", 4)]);
+        assert_eq!(handle.notes.len(), 1);
+        let decode = &spans[2];
+        assert_eq!((decode.start_ns, decode.end_ns), (1, 2));
+        assert!(root.end_ns >= handle.end_ns, "root closes last");
+    }
+}

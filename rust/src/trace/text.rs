@@ -1,0 +1,162 @@
+//! [`TextTracker`]: human-readable indented span log to any `Write` sink
+//! (stderr, a file, a `Vec<u8>` in tests).
+
+use super::{SpanId, Tracker};
+use std::collections::HashMap;
+use std::io::Write;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+struct OpenSpan {
+    name: &'static str,
+    depth: usize,
+    start_ns: u64,
+}
+
+struct Inner {
+    sink: Box<dyn Write + Send>,
+    open: HashMap<SpanId, OpenSpan>,
+}
+
+/// Streams an indented begin/end line per span plus one line per
+/// event/note. Output is best-effort: a full or broken sink never panics
+/// the traced request.
+pub struct TextTracker {
+    next: AtomicU64,
+    inner: Mutex<Inner>,
+}
+
+impl TextTracker {
+    pub fn new(sink: Box<dyn Write + Send>) -> TextTracker {
+        TextTracker {
+            next: AtomicU64::new(0),
+            inner: Mutex::new(Inner { sink, open: HashMap::new() }),
+        }
+    }
+
+    /// Convenience: log to stderr.
+    pub fn stderr() -> TextTracker {
+        TextTracker::new(Box::new(std::io::stderr()))
+    }
+
+    fn with_inner(&self, f: impl FnOnce(&mut Inner)) {
+        let mut g = self.inner.lock().unwrap_or_else(|e| e.into_inner());
+        f(&mut g);
+    }
+}
+
+impl std::fmt::Debug for TextTracker {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("TextTracker").finish_non_exhaustive()
+    }
+}
+
+fn indent(depth: usize) -> String {
+    "  ".repeat(depth)
+}
+
+impl Tracker for TextTracker {
+    fn is_enabled(&self) -> bool {
+        true
+    }
+
+    fn begin(
+        &self,
+        name: &'static str,
+        parent: SpanId,
+        remote_parent: SpanId,
+        now_ns: u64,
+    ) -> SpanId {
+        // relaxed: monotone id counter — uniqueness is all that matters.
+        let id = self.next.fetch_add(1, Ordering::Relaxed) + 1;
+        self.with_inner(|inner| {
+            let depth = inner.open.get(&parent).map(|p| p.depth + 1).unwrap_or(0);
+            let link = if remote_parent != 0 {
+                format!(" remote_parent={remote_parent}")
+            } else {
+                String::new()
+            };
+            let _ = writeln!(inner.sink, "{}> {name} [{id}]{link}", indent(depth));
+            inner.open.insert(id, OpenSpan { name, depth, start_ns: now_ns });
+        });
+        id
+    }
+
+    fn end(&self, span: SpanId, now_ns: u64) {
+        self.with_inner(|inner| {
+            if let Some(s) = inner.open.remove(&span) {
+                let us = now_ns.saturating_sub(s.start_ns) as f64 / 1e3;
+                let _ =
+                    writeln!(inner.sink, "{}< {} [{span}] {us:.1}us", indent(s.depth), s.name);
+                let _ = inner.sink.flush();
+            }
+        });
+    }
+
+    fn event(&self, span: SpanId, name: &'static str, value: u64, _now_ns: u64) {
+        self.with_inner(|inner| {
+            if let Some(s) = inner.open.get(&span) {
+                let _ = writeln!(inner.sink, "{}* {name}={value}", indent(s.depth + 1));
+            }
+        });
+    }
+
+    fn note(&self, span: SpanId, key: &'static str, text: &str, _now_ns: u64) {
+        self.with_inner(|inner| {
+            if let Some(s) = inner.open.get(&span) {
+                let _ = writeln!(inner.sink, "{}* {key}={text:?}", indent(s.depth + 1));
+            }
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    /// A `Write` sink the test can read back after the tracker took it.
+    #[derive(Clone, Default)]
+    struct Shared(Arc<Mutex<Vec<u8>>>);
+
+    impl Write for Shared {
+        fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+            self.0.lock().expect("test sink").extend_from_slice(buf);
+            Ok(buf.len())
+        }
+        fn flush(&mut self) -> std::io::Result<()> {
+            Ok(())
+        }
+    }
+
+    #[test]
+    fn renders_indented_tree_with_events() {
+        let sink = Shared::default();
+        let t = TextTracker::new(Box::new(sink.clone()));
+        let root = t.begin("request", 0, 0, 0);
+        let child = t.begin("cascade", root, 0, 1_000);
+        t.event(child, "candidates", 24, 1_500);
+        t.end(child, 3_000);
+        t.end(root, 4_000);
+
+        let bytes = sink.0.lock().expect("test sink").clone();
+        let out = String::from_utf8(bytes).expect("utf8 log");
+        let lines: Vec<&str> = out.lines().collect();
+        assert_eq!(lines[0], "> request [1]");
+        assert_eq!(lines[1], "  > cascade [2]");
+        assert_eq!(lines[2], "    * candidates=24");
+        assert_eq!(lines[3], "  < cascade [2] 2.0us");
+        assert_eq!(lines[4], "< request [1] 4.0us");
+    }
+
+    #[test]
+    fn remote_parent_is_printed_on_the_begin_line() {
+        let sink = Shared::default();
+        let t = TextTracker::new(Box::new(sink.clone()));
+        let id = t.begin("request", 0, 99, 0);
+        t.end(id, 10);
+        let bytes = sink.0.lock().expect("test sink").clone();
+        let out = String::from_utf8(bytes).expect("utf8 log");
+        assert!(out.contains("remote_parent=99"), "{out}");
+    }
+}

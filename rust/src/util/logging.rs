@@ -41,6 +41,8 @@ pub fn init() {
         Ok("trace") => LevelFilter::Trace,
         _ => LevelFilter::Info,
     };
+    // Process-start anchor for log timestamps; never measured against,
+    // so no Clock injection needed. lint: allow(no-raw-clock)
     let logger = Box::new(StderrLogger { start: Instant::now() });
     if log::set_boxed_logger(logger).is_ok() {
         log::set_max_level(level);

@@ -141,6 +141,65 @@ impl Welford {
     }
 }
 
+/// Fixed-bucket log₂-scale latency histogram: 32 buckets, bucket `i`
+/// covering `[2^(i+10), 2^(i+11))` nanoseconds, i.e. ~1 µs up to ~37 min
+/// with a factor-2 resolution. Paired with a [`Welford`] inside the
+/// metrics module so the serve loop gets p50/p95/p99 without ever storing
+/// sample vectors. Durations below the first bucket land in bucket 0 and
+/// above the last clamp into bucket 31.
+#[derive(Debug, Clone, Default)]
+pub struct LogHistogram {
+    counts: [u64; 32],
+    total: u64,
+}
+
+/// First bucket's low edge as a power of two (2^10 ns ≈ 1 µs).
+const HIST_SHIFT: u32 = 10;
+
+impl LogHistogram {
+    pub fn new() -> LogHistogram {
+        LogHistogram::default()
+    }
+
+    fn bucket_of(secs: f64) -> usize {
+        let ns = (secs * 1e9).max(0.0) as u64;
+        if ns == 0 {
+            return 0;
+        }
+        let log2 = 63 - ns.leading_zeros();
+        (log2.saturating_sub(HIST_SHIFT) as usize).min(31)
+    }
+
+    /// Record one duration in seconds.
+    pub fn record(&mut self, secs: f64) {
+        self.counts[Self::bucket_of(secs)] += 1;
+        self.total += 1;
+    }
+
+    pub fn count(&self) -> u64 {
+        self.total
+    }
+
+    /// The `q`-quantile (`q` in `[0, 1]`) in seconds: the geometric
+    /// representative (1.5 × low edge) of the bucket containing the
+    /// target rank. Exact to within the factor-2 bucket width; 0.0 when
+    /// empty.
+    pub fn quantile(&self, q: f64) -> f64 {
+        if self.total == 0 {
+            return 0.0;
+        }
+        let target = ((q.clamp(0.0, 1.0) * self.total as f64).ceil() as u64).max(1);
+        let mut cum = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            cum += c;
+            if cum >= target {
+                return (1u64 << (i as u32 + HIST_SHIFT)) as f64 * 1.5e-9;
+            }
+        }
+        (1u64 << (31 + HIST_SHIFT)) as f64 * 1.5e-9
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -175,6 +234,43 @@ mod tests {
         let xs = [1.0, 1.0, 1.0];
         let ys = [1.0, 2.0, 3.0];
         assert_eq!(pearson(&xs, &ys), 0.0);
+    }
+
+    #[test]
+    fn log_histogram_quantiles_track_the_distribution() {
+        let mut h = LogHistogram::new();
+        assert_eq!(h.quantile(0.5), 0.0, "empty histogram");
+        for _ in 0..90 {
+            h.record(1e-3); // 1 ms
+        }
+        for _ in 0..10 {
+            h.record(100e-3); // 100 ms
+        }
+        assert_eq!(h.count(), 100);
+        let p50 = h.quantile(0.50);
+        let p99 = h.quantile(0.99);
+        // Bucket resolution is a factor of 2 around the true value.
+        assert!((0.5e-3..=2e-3).contains(&p50), "p50={p50}");
+        assert!((50e-3..=200e-3).contains(&p99), "p99={p99}");
+        assert!(p99 > 10.0 * p50);
+        // Identical samples: every quantile lands in the same bucket.
+        let mut u = LogHistogram::new();
+        for _ in 0..32 {
+            u.record(5e-3);
+        }
+        assert_eq!(u.quantile(0.5), u.quantile(0.99));
+    }
+
+    #[test]
+    fn log_histogram_clamps_extremes() {
+        let mut h = LogHistogram::new();
+        h.record(0.0);
+        h.record(-1.0);
+        h.record(1e-9);
+        h.record(1e9); // far past the last bucket
+        assert_eq!(h.count(), 4);
+        assert!(h.quantile(0.0) > 0.0, "bucket representatives are positive");
+        assert!(h.quantile(1.0) < 1e9, "clamped into the last bucket");
     }
 
     #[test]

@@ -93,6 +93,8 @@ pub trait Workload: Send + Sync {
         let input = self.generate(sample_bytes, &mut rng);
         let mb = input.len() as f64 / (1024.0 * 1024.0);
 
+        // Calibration measures *real* host CPU time by design — a virtual
+        // clock would defeat its purpose. lint: allow(no-raw-clock)
         let t0 = std::time::Instant::now();
         let mut inter_bytes = 0usize;
         let mut pairs: Vec<(Vec<u8>, Vec<u8>)> = Vec::new();
@@ -103,6 +105,7 @@ pub trait Workload: Send + Sync {
         let map_s = t0.elapsed().as_secs_f64();
 
         // Group (sort) and combine — the spill-side cost.
+        // lint: allow(no-raw-clock) real host timing, as above.
         let t1 = std::time::Instant::now();
         pairs.sort();
         let mut combined_bytes = 0usize;
@@ -121,6 +124,7 @@ pub trait Workload: Send + Sync {
         let sort_s = t1.elapsed().as_secs_f64();
 
         // Reduce.
+        // lint: allow(no-raw-clock) real host timing, as above.
         let t2 = std::time::Instant::now();
         let mut out = Vec::new();
         for (k, vs) in &groups {

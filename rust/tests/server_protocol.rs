@@ -44,6 +44,7 @@ fn state_with_db() -> ServerState {
         runtime: None,
         metrics: Metrics::new(),
         sessions: SessionManager::new(),
+        tracer: mrtuner::trace::TraceHandle::disabled(),
     }
 }
 
@@ -773,10 +774,12 @@ fn every_error_code_is_reachable_from_wire_input() {
     let addrs = vec![shard_addr.to_string()];
     let router = Mutex::new(ShardRouter::connect(&addrs, Arc::clone(&metrics)).unwrap());
     shard_shutdown();
+    let tracer = mrtuner::trace::TraceHandle::disabled();
     let resp = route_line(
         r#"{"v":2,"id":5,"type":"knn","series":[1,2,3,4],"k":1}"#,
         &router,
         &metrics,
+        &tracer,
     );
     let got = code_of(resp.to_string());
     assert_eq!(got, ErrorCode::ShardUnavailable);
@@ -792,7 +795,7 @@ fn every_error_code_is_reachable_from_wire_input() {
         panic!("poison the router lock");
     })
     .join();
-    let resp = route_line(r#"{"v":2,"id":6,"type":"ping"}"#, &poisoned, &metrics);
+    let resp = route_line(r#"{"v":2,"id":6,"type":"ping"}"#, &poisoned, &metrics, &tracer);
     let got = code_of(resp.to_string());
     assert_eq!(got, ErrorCode::Internal);
     seen.push(got);

@@ -68,6 +68,7 @@ fn state_over(db: IndexedDb) -> ServerState {
         runtime: None,
         metrics: Metrics::new(),
         sessions: SessionManager::new(),
+        tracer: mrtuner::trace::TraceHandle::disabled(),
     }
 }
 
@@ -284,7 +285,8 @@ fn dead_shard_surfaces_as_shard_unavailable() {
 
     // The routed line path renders it as a typed v2 error.
     let m = Metrics::new();
-    let resp = route_line(&req.to_v2(5).to_string(), &router, &m);
+    let tracer = mrtuner::trace::TraceHandle::disabled();
+    let resp = route_line(&req.to_v2(5).to_string(), &router, &m, &tracer);
     assert_eq!(resp.get("ok"), Some(&Json::Bool(false)));
     assert_eq!(
         resp.get("error").and_then(|e| e.get("code")).and_then(Json::as_str),

@@ -1,0 +1,318 @@
+//! End-to-end observability (PR 7): drive a routed `knn_batch` through a
+//! [`RouterServer`] with an [`InMemoryTracker`] on *both* sides of the
+//! wire and assert the full distributed span tree — router-side
+//! `request → handle → knn_batch → shard×N`, each shard's own
+//! `request → handle → knn_batch → cascade → {lb_kim, lb_paa, lb_keogh,
+//! dp}` tree stitched underneath via the envelope's `trace` field — with
+//! strictly positive durations under a [`VirtualClock`] (no sleeps, fully
+//! deterministic, CI-runnable).
+//!
+//! With `MRTUNER_EMIT_TRACE` set, a second test repeats the round trip
+//! with a [`ChromeTracker`] and writes a `chrome://tracing` /
+//! [Perfetto](https://ui.perfetto.dev)-loadable `trace.json` (CI uploads
+//! it as an artifact).
+
+use mrtuner::client::MrtunerClient;
+use mrtuner::coordinator::metrics::Metrics;
+use mrtuner::coordinator::router::{RouterServer, ShardRouter};
+use mrtuner::coordinator::server::{MatchServer, ServerState};
+use mrtuner::database::profile::ProfileEntry;
+use mrtuner::index::IndexedDb;
+use mrtuner::protocol::Request;
+use mrtuner::simulator::job::JobConfig;
+use mrtuner::streaming::SessionManager;
+use mrtuner::trace::{
+    ChromeTracker, InMemoryTracker, SpanRecord, TraceHandle, Tracker, VirtualClock,
+};
+use mrtuner::util::json::Json;
+use mrtuner::workloads::AppId;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+fn raw_wave(freq: f64, len: usize) -> Vec<f64> {
+    (0..len)
+        .map(|i| (0.5 + 0.4 * ((i as f64) * freq).sin()).clamp(0.0, 1.0))
+        .collect()
+}
+
+fn entry(app: AppId, cfg: JobConfig, freq: f64, len: usize) -> ProfileEntry {
+    ProfileEntry {
+        app,
+        config: cfg,
+        series: mrtuner::signal::preprocess(&raw_wave(freq, len)),
+        raw_len: len,
+        completion_secs: 100.0,
+    }
+}
+
+/// Two shards, one config set and two apps each — small enough that the
+/// span tree is fully enumerable, big enough that every cascade stage
+/// sees candidates.
+fn two_shard_dbs() -> Vec<IndexedDb> {
+    let configs = [JobConfig::new(4, 2, 10.0, 20.0), JobConfig::new(8, 4, 20.0, 40.0)];
+    configs
+        .iter()
+        .enumerate()
+        .map(|(ci, cfg)| {
+            let mut db = IndexedDb::new();
+            for (ai, app) in [AppId::WordCount, AppId::TeraSort].into_iter().enumerate() {
+                let freq = 0.15 + 0.11 * (ci * 2 + ai) as f64;
+                db.insert(entry(app, *cfg, freq, 48 + 16 * ci));
+            }
+            db
+        })
+        .collect()
+}
+
+/// A live [`TraceHandle`] over `tracker` with a deterministic virtual
+/// clock: every read ticks, so no recorded span can have zero duration.
+fn traced_handle(tracker: Arc<dyn Tracker>) -> TraceHandle {
+    TraceHandle::with_clock(tracker, Arc::new(VirtualClock::new(10)))
+}
+
+fn traced_state(db: IndexedDb, tracker: Arc<dyn Tracker>) -> ServerState {
+    ServerState {
+        db,
+        runtime: None,
+        metrics: Metrics::new(),
+        sessions: SessionManager::new(),
+        tracer: traced_handle(tracker),
+    }
+}
+
+struct Fleet {
+    addrs: Vec<String>,
+    trackers: Vec<Arc<InMemoryTracker>>,
+    stops: Vec<Arc<AtomicBool>>,
+    joins: Vec<std::thread::JoinHandle<anyhow::Result<()>>>,
+}
+
+fn spawn_traced_fleet(shards: Vec<IndexedDb>) -> Fleet {
+    let mut fleet = Fleet {
+        addrs: Vec::new(),
+        trackers: Vec::new(),
+        stops: Vec::new(),
+        joins: Vec::new(),
+    };
+    for db in shards {
+        let tracker = Arc::new(InMemoryTracker::new());
+        let handle: Arc<dyn Tracker> = Arc::clone(&tracker);
+        let server = MatchServer::bind("127.0.0.1:0", traced_state(db, handle)).unwrap();
+        fleet.addrs.push(server.local_addr().unwrap().to_string());
+        fleet.trackers.push(tracker);
+        fleet.stops.push(server.stop_flag());
+        fleet
+            .joins
+            .push(std::thread::spawn(move || server.serve_with(2, Duration::from_millis(50))));
+    }
+    fleet
+}
+
+impl Fleet {
+    fn shutdown(self) {
+        for (stop, addr) in self.stops.iter().zip(&self.addrs) {
+            stop.store(true, Ordering::SeqCst);
+            let _ = std::net::TcpStream::connect(addr);
+        }
+        for j in self.joins {
+            j.join().unwrap().unwrap();
+        }
+    }
+}
+
+/// The single child of `parent` named `name`, asserting it exists, is
+/// unique, and closed with a strictly positive duration.
+fn only_child(tr: &InMemoryTracker, parent: u64, name: &str) -> SpanRecord {
+    let hits: Vec<SpanRecord> =
+        tr.children_of(parent).into_iter().filter(|s| s.name == name).collect();
+    assert_eq!(hits.len(), 1, "want one `{name}` under span {parent}: {hits:?}");
+    let s = hits.into_iter().next().unwrap();
+    assert!(s.end_ns > s.start_ns, "`{name}` span not closed or zero-length: {s:?}");
+    s
+}
+
+#[test]
+fn routed_knn_batch_builds_a_stitched_distributed_span_tree() {
+    let fleet = spawn_traced_fleet(two_shard_dbs());
+    let router_tracker = Arc::new(InMemoryTracker::new());
+    let metrics = Arc::new(Metrics::new());
+    let router = ShardRouter::connect(&fleet.addrs, Arc::clone(&metrics))
+        .unwrap()
+        .with_tracer(traced_handle(Arc::clone(&router_tracker)));
+    let front = RouterServer::bind("127.0.0.1:0", router).unwrap();
+    let addr = front.local_addr().unwrap();
+    let stop = front.stop_flag();
+    let join = std::thread::spawn(move || front.serve_with(2, Duration::from_millis(50)));
+
+    // One routed batch (config None → fans to both shards), then the
+    // metrics snapshot over the same wire.
+    let mut client = MrtunerClient::connect(&addr.to_string()).unwrap();
+    let queries = vec![raw_wave(0.15, 48), raw_wave(0.3, 64)];
+    let body = client.knn_batch(&queries, 2, None).unwrap();
+    assert_eq!(body.results.len(), 2);
+    assert!(body.results.iter().all(|r| r.neighbors.len() == 2));
+
+    let m = client.metrics().unwrap();
+    assert!(m.get("requests").and_then(Json::as_u64).is_some(), "{m}");
+    let fanout = m.get("fanout").and_then(Json::as_arr).unwrap();
+    assert_eq!(fanout.len(), 2, "both shards timed: {m}");
+
+    drop(client);
+    stop.store(true, Ordering::SeqCst);
+    let _ = std::net::TcpStream::connect(addr);
+    join.join().unwrap().unwrap();
+    let addrs = fleet.addrs.clone();
+    let trackers: Vec<Arc<InMemoryTracker>> = fleet.trackers.iter().map(Arc::clone).collect();
+    fleet.shutdown();
+
+    // ---- router side: request → {decode, handle → knn_batch → shard×2,
+    // encode}, all closed, all strictly positive under the virtual clock.
+    let roots = router_tracker.roots();
+    assert_eq!(roots.len(), 2, "knn_batch + metrics requests: {roots:?}");
+    assert!(roots.iter().all(|r| r.name == "request" && r.remote_parent == 0));
+    let root = roots
+        .iter()
+        .find(|r| {
+            router_tracker
+                .children_of(r.id)
+                .iter()
+                .any(|h| h.notes.contains(&("type", "knn_batch".to_string())))
+        })
+        .expect("a root whose handle is typed knn_batch")
+        .clone();
+    assert!(root.end_ns > root.start_ns);
+    let decode = only_child(&router_tracker, root.id, "decode");
+    let handle = only_child(&router_tracker, root.id, "handle");
+    let encode = only_child(&router_tracker, root.id, "encode");
+    // Decode is timed before the root opens (its window is re-attached
+    // post hoc), so only the phase order is pinned, plus containment of
+    // the phases that genuinely nest.
+    assert!(decode.end_ns <= handle.start_ns && handle.end_ns <= encode.start_ns);
+    assert!(handle.start_ns >= root.start_ns && encode.end_ns <= root.end_ns);
+
+    let batch = only_child(&router_tracker, handle.id, "knn_batch");
+    assert_eq!(batch.events, vec![("queries", 2)]);
+    let shard_spans = router_tracker.children_of(batch.id);
+    assert_eq!(shard_spans.len(), 2, "one fan-out span per shard: {shard_spans:?}");
+    for (si, s) in shard_spans.iter().enumerate() {
+        assert_eq!(s.name, "shard");
+        assert_eq!(s.events, vec![("shard", si as u64)]);
+        assert_eq!(s.notes, vec![("addr", addrs[si].clone())]);
+        assert!(s.end_ns > s.start_ns, "shard span zero-length: {s:?}");
+    }
+
+    // The metrics request traced too (its handle is typed, no children).
+    let metrics_root = roots.iter().find(|r| r.id != root.id).unwrap();
+    let mh = only_child(&router_tracker, metrics_root.id, "handle");
+    assert!(mh.notes.contains(&("type", "metrics".to_string())));
+
+    // ---- shard side: each shard's own tree nests under the router's
+    // per-shard span via the envelope's `trace` field (remote_parent),
+    // and carries the full cascade stage breakdown.
+    for (si, tracker) in trackers.iter().enumerate() {
+        // ShardRouter::connect's untraced shard_info probe is also
+        // recorded (remote_parent 0); the routed batch is the linked one.
+        let linked: Vec<SpanRecord> =
+            tracker.roots().into_iter().filter(|r| r.remote_parent != 0).collect();
+        assert_eq!(linked.len(), 1, "shard {si}: one traced request: {linked:?}");
+        let sroot = &linked[0];
+        assert_eq!(sroot.name, "request");
+        assert_eq!(
+            sroot.remote_parent, shard_spans[si].id,
+            "shard {si}'s tree must hang off the router's fan-out span"
+        );
+        assert!(sroot.end_ns > sroot.start_ns);
+
+        let shandle = only_child(tracker, sroot.id, "handle");
+        assert!(shandle.notes.contains(&("type", "knn_batch".to_string())));
+        let sbatch = only_child(tracker, shandle.id, "knn_batch");
+        assert_eq!(sbatch.events, vec![("queries", 2)]);
+        let cascade = only_child(tracker, sbatch.id, "cascade");
+        assert_eq!(cascade.events, vec![("candidates", 4)], "2 queries × 2 entries");
+        let stage_names: Vec<&str> =
+            tracker.children_of(cascade.id).iter().map(|s| s.name).collect();
+        assert_eq!(stage_names, vec!["lb_kim", "lb_paa", "lb_keogh", "dp"]);
+        for stage in tracker.children_of(cascade.id) {
+            assert!(stage.end_ns > stage.start_ns, "stage zero-length: {stage:?}");
+            assert!(!stage.events.is_empty(), "stage without counters: {stage:?}");
+        }
+        let dp = only_child(tracker, cascade.id, "dp");
+        let evals = dp
+            .events
+            .iter()
+            .find(|(n, _)| *n == "evals")
+            .map(|(_, v)| *v)
+            .unwrap_or(0);
+        assert!(evals >= 1, "dp stage ran no DTW: {dp:?}");
+
+        // Conservation (the SearchStats invariant, now visible per stage
+        // span): candidates = pruned_* + abandoned + dtw_evals.
+        let abandoned = dp
+            .events
+            .iter()
+            .find(|(n, _)| *n == "abandoned")
+            .map(|(_, v)| *v)
+            .unwrap_or(0);
+        let pruned: u64 = tracker
+            .children_of(cascade.id)
+            .iter()
+            .flat_map(|s| s.events.clone())
+            .filter(|(n, _)| *n == "pruned")
+            .map(|(_, v)| v)
+            .sum();
+        assert_eq!(pruned + abandoned + evals, 4, "cascade accounting leak");
+    }
+}
+
+/// With `MRTUNER_EMIT_TRACE` set (CI does), repeat the routed round trip
+/// against a [`ChromeTracker`] and write the artifact. The env var's
+/// value is the output path (`1` means `trace.json` in the CWD).
+#[test]
+fn emit_chrome_trace_artifact_when_asked() {
+    let dest = match std::env::var("MRTUNER_EMIT_TRACE") {
+        Ok(v) if v == "1" => "trace.json".to_string(),
+        Ok(v) if !v.is_empty() => v,
+        _ => return, // opt-in only; a no-op pass otherwise
+    };
+    let fleet = spawn_traced_fleet(two_shard_dbs());
+    let chrome = Arc::new(ChromeTracker::new());
+    let mut router = ShardRouter::connect(&fleet.addrs, Arc::new(Metrics::new()))
+        .unwrap()
+        .with_tracer(traced_handle(Arc::clone(&chrome)));
+
+    // Drive both routed shapes under explicit request roots so the
+    // artifact shows a batch fan-out and a match fan-out side by side.
+    let tracer = router.tracer().clone();
+    {
+        let root = tracer.root("request");
+        let handle = root.child("handle");
+        let batch = handle.child("knn_batch");
+        let req = Request::KnnBatch {
+            queries: vec![raw_wave(0.15, 48), raw_wave(0.3, 64)],
+            k: 2,
+            config: None,
+        };
+        router.route_knn_batch(&req, &batch).unwrap();
+    }
+    {
+        let root = tracer.root("request");
+        let handle = root.child("handle");
+        let m = handle.child("match");
+        let req = Request::Match {
+            series: raw_wave(0.15, 48),
+            config: JobConfig::new(4, 2, 10.0, 20.0),
+        };
+        router.route_match(&req, &m).unwrap();
+    }
+    fleet.shutdown();
+
+    assert!(!chrome.is_empty(), "no events recorded");
+    let doc = chrome.to_json();
+    assert_eq!(
+        doc.get("displayTimeUnit").and_then(Json::as_str),
+        Some("ms")
+    );
+    chrome.write_to(std::path::Path::new(&dest)).unwrap();
+    eprintln!("wrote {} trace events to {dest}", chrome.len());
+}

@@ -35,6 +35,10 @@
 //! - `no-io` — no `std::time` / `println!` / `eprintln!` in `dtw/`,
 //!   `signal/`, `index/` library code. Kernels stay deterministic and
 //!   side-effect free; timing and reporting belong to the coordinator.
+//! - `no-raw-clock` — no direct `Instant::now()` outside `trace/` and
+//!   `metrics.rs`. Time is injected through the `Clock` trait (carried by
+//!   `TraceHandle`) so tests can drive servers and spans with a virtual
+//!   clock; a raw `Instant::now()` silently escapes that control.
 //!
 //! Any finding can be silenced with an inline pragma on the same or the
 //! preceding line: `// lint: allow(<rule>)`.
@@ -52,6 +56,9 @@ pub const RELAXED_COMMENT: &str = "relaxed-comment";
 pub const KERNEL_ALLOC: &str = "kernel-alloc";
 /// Rule id: no time/printing in kernel library code.
 pub const NO_IO: &str = "no-io";
+/// Rule id: `Instant::now()` only in `trace/` and `metrics.rs` — everyone
+/// else reads time through the injected `Clock`.
+pub const NO_RAW_CLOCK: &str = "no-raw-clock";
 
 /// One finding, ready to print as `file:line: [rule] message`.
 #[derive(Debug, Clone, PartialEq, Eq)]
@@ -397,6 +404,8 @@ pub fn lint_str(rel_path: &str, src: &str) -> Vec<Violation> {
     let io_zone = path.starts_with("dtw/")
         || path.starts_with("signal/")
         || path.starts_with("index/");
+    let clock_zone =
+        !(path.starts_with("trace/") || path.ends_with("/metrics.rs") || path == "metrics.rs");
 
     let mut out = Vec::new();
     for (ln, code_line) in code_lines.iter().enumerate() {
@@ -466,6 +475,12 @@ pub fn lint_str(rel_path: &str, src: &str) -> Vec<Violation> {
                     break;
                 }
             }
+        }
+        if clock_zone && !allowed(NO_RAW_CLOCK) && has_token(code_line, "Instant::now") {
+            let msg =
+                "`Instant::now()` outside trace/: read time through the injected `Clock`"
+                    .to_string();
+            out.push(violation(&path, ln, NO_RAW_CLOCK, msg));
         }
     }
     out
@@ -722,11 +737,48 @@ mod tests {
         for path in ["dtw/mod.rs", "signal/noise.rs", "index/knn.rs"] {
             assert_eq!(rules_of(&lint_str(path, bad)), vec![NO_IO], "{path}");
         }
-        // The coordinator may print and time.
+        // The coordinator may print.
         assert!(lint_str("coordinator/server.rs", bad).is_empty());
+        // Raw clock reads trip both rules in kernel dirs (no-io for the
+        // `std::time` path, no-raw-clock for the construct itself).
         let timed = "pub fn slow() {\n    let t = std::time::Instant::now();\n    drop(t);\n}\n";
-        assert_eq!(rules_of(&lint_str("index/db.rs", timed)), vec![NO_IO]);
-        assert!(lint_str("coordinator/profiler.rs", timed).is_empty());
+        assert_eq!(rules_of(&lint_str("index/db.rs", timed)), vec![NO_IO, NO_RAW_CLOCK]);
+        assert_eq!(rules_of(&lint_str("coordinator/profiler.rs", timed)), vec![NO_RAW_CLOCK]);
+    }
+
+    // ---------- no-raw-clock ----------
+
+    #[test]
+    fn raw_clock_banned_outside_trace_and_metrics() {
+        let bad = "pub fn f() -> Instant {\n    Instant::now()\n}\n";
+        for path in ["coordinator/server.rs", "streaming/manager.rs", "util/logging.rs"] {
+            let vs = lint_str(path, bad);
+            assert_eq!(rules_of(&vs), vec![NO_RAW_CLOCK], "{path}");
+            assert_eq!(vs[0].line, 2, "{path}");
+        }
+        // The clock abstraction itself and the metrics registry are the
+        // two places allowed to read real time.
+        assert!(lint_str("trace/clock.rs", bad).is_empty());
+        assert!(lint_str("coordinator/metrics.rs", bad).is_empty());
+    }
+
+    #[test]
+    fn raw_clock_pragma_and_tests_are_exempt() {
+        let pragma = concat!(
+            "pub fn f() -> Instant {\n",
+            "    // lint: allow(no-raw-clock) startup anchor, never compared\n",
+            "    Instant::now()\n}\n"
+        );
+        assert!(lint_str("util/logging.rs", pragma).is_empty());
+        let in_test = concat!(
+            "pub fn f() {}\n\n",
+            "#[cfg(test)]\nmod tests {\n",
+            "    fn t() {\n        let _ = Instant::now();\n    }\n}\n"
+        );
+        assert!(lint_str("util/pool.rs", in_test).is_empty());
+        // Mentions in strings or comments never fire.
+        let in_str = "pub fn f() -> &'static str {\n    \"Instant::now\"\n}\n";
+        assert!(lint_str("coordinator/server.rs", in_str).is_empty());
     }
 
     #[test]
