@@ -56,6 +56,7 @@ fn main() {
         metrics: Metrics::new(),
         sessions: mrtuner::streaming::SessionManager::new(),
         tracer: mrtuner::trace::TraceHandle::disabled(),
+        recorder: None,
     };
     let req = Json::obj(vec![
         ("cmd", Json::Str("match".into())),

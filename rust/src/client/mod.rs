@@ -352,6 +352,16 @@ impl MrtunerClient {
         }
     }
 
+    /// Snapshot the server's flight recorder: `{"spans", "dropped",
+    /// "trace"}` where `trace` is a Chrome-loadable document of the last
+    /// N finished spans. Empty when the server runs without a recorder.
+    pub fn trace_dump(&mut self) -> Result<crate::util::json::Json, ClientError> {
+        match self.call(&Request::TraceDump)? {
+            Response::TraceDump(t) => Ok(t),
+            other => Err(Self::unexpected("trace_dump", &other)),
+        }
+    }
+
     /// Exact k-NN over the server's database (or one config bucket).
     pub fn knn(
         &mut self,

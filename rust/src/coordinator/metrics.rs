@@ -59,6 +59,14 @@ pub struct Metrics {
     /// size — the envelope-pass sharing factor).
     pub knn_batches: AtomicU64,
     pub knn_batch_queries: AtomicU64,
+    /// Trace-layer counters: roots recorded vs. sampled out by the serve
+    /// paths, plus the flight recorder's eviction/dump gauges (synced
+    /// from the recorder when a snapshot is served — the recorder counts
+    /// for itself, monotonically).
+    pub spans_recorded: AtomicU64,
+    pub spans_sampled_out: AtomicU64,
+    pub recorder_dropped: AtomicU64,
+    pub recorder_dumps: AtomicU64,
     /// Wall-clock of each whole batch (not per query).
     knn_batch_latency: Mutex<LatencyTrack>,
     latency: Mutex<LatencyTrack>,
@@ -193,6 +201,35 @@ impl Metrics {
         (s.count(), s.mean(), f.mean())
     }
 
+    /// Count one request root span actually recorded by the tracer.
+    pub fn inc_spans_recorded(&self) {
+        self.spans_recorded.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Count one request root the sampling policy (local or upstream)
+    /// dropped while tracing was otherwise on.
+    pub fn inc_spans_sampled_out(&self) {
+        self.spans_sampled_out.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Sync the flight recorder's own monotone counters into the
+    /// registry (called when a snapshot is about to be served).
+    pub fn set_recorder_stats(&self, dropped: u64, dumps: u64) {
+        self.recorder_dropped.store(dropped, Ordering::Relaxed);
+        self.recorder_dumps.store(dumps, Ordering::Relaxed);
+    }
+
+    /// Snapshot: (spans_recorded, spans_sampled_out, recorder_dropped,
+    /// recorder_dumps).
+    pub fn trace_summary(&self) -> (u64, u64, u64, u64) {
+        (
+            self.spans_recorded.load(Ordering::Relaxed),
+            self.spans_sampled_out.load(Ordering::Relaxed),
+            self.recorder_dropped.load(Ordering::Relaxed),
+            self.recorder_dumps.load(Ordering::Relaxed),
+        )
+    }
+
     /// Count one protocol reject under its error code.
     pub fn inc_proto_error(&self, code: ErrorCode) {
         self.proto_errors[code.index()].fetch_add(1, Ordering::Relaxed);
@@ -229,6 +266,23 @@ impl Metrics {
             .iter()
             .map(|(&s, t)| (s, t.w.count(), t.w.mean(), t.w.max()))
             .collect()
+    }
+
+    /// Fan-out latency aggregated across *all* shards (histograms merged
+    /// bucket-exactly via [`LogHistogram::merge`]): `(n, mean_s, max_s,
+    /// p50_s, p95_s, p99_s)`. All zeros when no fan-out happened.
+    pub fn shard_fanout_total(&self) -> (u64, f64, f64, f64, f64, f64) {
+        let fan = self.shard_fanout.lock().expect("shard fanout lock");
+        let mut h = LogHistogram::new();
+        let (mut n, mut weighted_sum, mut max) = (0u64, 0.0f64, 0.0f64);
+        for t in fan.values() {
+            h.merge(&t.h);
+            n += t.w.count();
+            weighted_sum += t.w.mean() * t.w.count() as f64;
+            max = max.max(t.w.max());
+        }
+        let mean = if n == 0 { 0.0 } else { weighted_sum / n as f64 };
+        (n, mean, max, h.quantile(0.50), h.quantile(0.95), h.quantile(0.99))
     }
 
     /// Record a request latency.
@@ -281,10 +335,24 @@ impl Metrics {
             ));
         }
         if !fanout.is_empty() {
+            // Fleet-wide aggregate after the per-shard rows (merged
+            // histograms, so the quantiles are exact across shards).
+            let (fn_, fmean, fmax, fp50, fp95, _) = self.shard_fanout_total();
+            fanout.push_str(&format!(
+                " all: n={fn_} mean={:.1}ms max={:.1}ms p50={:.1}ms p95={:.1}ms",
+                fmean * 1e3,
+                fmax * 1e3,
+                fp50 * 1e3,
+                fp95 * 1e3
+            ));
             fanout.insert_str(0, " fanout:");
         }
+        let (tr_rec, tr_out, tr_drop, tr_dumps) = self.trace_summary();
+        let trace = format!(
+            " trace: recorded={tr_rec} sampled_out={tr_out} rec_dropped={tr_drop} rec_dumps={tr_dumps}"
+        );
         format!(
-            "requests={} comparisons={} batches={} errors={} pool_panics={} latency: n={} mean={:.1}ms sd={:.1}ms min={:.1}ms max={:.1}ms p50={:.1}ms p95={:.1}ms p99={:.1}ms index: {} knn_batch: n={} queries={} mean={:.1}ms p50={:.1}ms p95={:.1}ms p99={:.1}ms stream: opened={} closed={} reaped={} batches={} culled={} decisions={} mean_at={:.0} mean_frac={:.2}{proto}{fanout}",
+            "requests={} comparisons={} batches={} errors={} pool_panics={} latency: n={} mean={:.1}ms sd={:.1}ms min={:.1}ms max={:.1}ms p50={:.1}ms p95={:.1}ms p99={:.1}ms index: {} knn_batch: n={} queries={} mean={:.1}ms p50={:.1}ms p95={:.1}ms p99={:.1}ms stream: opened={} closed={} reaped={} batches={} culled={} decisions={} mean_at={:.0} mean_frac={:.2}{trace}{proto}{fanout}",
             self.requests.load(Ordering::Relaxed),
             self.comparisons.load(Ordering::Relaxed),
             self.batches.load(Ordering::Relaxed),
@@ -326,6 +394,8 @@ impl Metrics {
         let (kb_p50, kb_p95, kb_p99) = self.knn_batch_quantiles();
         let (decisions, mean_at, mean_frac) = self.decision_summary();
         let s = self.search_stats();
+        let (tr_rec, tr_out, tr_drop, tr_dumps) = self.trace_summary();
+        let (fan_n, fan_mean, fan_max, fan_p50, fan_p95, fan_p99) = self.shard_fanout_total();
         let mut proto = vec![("total", Json::Num(self.proto_errors_total() as f64))];
         for code in ErrorCode::ALL {
             proto.push((code.as_str(), Json::Num(self.proto_error_count(code) as f64)));
@@ -400,8 +470,28 @@ impl Metrics {
                     ("mean_frac", Json::Num(mean_frac)),
                 ]),
             ),
+            (
+                "trace",
+                Json::obj(vec![
+                    ("spans_recorded", Json::Num(tr_rec as f64)),
+                    ("spans_sampled_out", Json::Num(tr_out as f64)),
+                    ("recorder_dropped", Json::Num(tr_drop as f64)),
+                    ("recorder_dumps", Json::Num(tr_dumps as f64)),
+                ]),
+            ),
             ("proto_errors", Json::obj(proto)),
             ("fanout", fanout),
+            (
+                "fanout_total",
+                Json::obj(vec![
+                    ("n", Json::Num(fan_n as f64)),
+                    ("mean_ms", Json::Num(fan_mean * 1e3)),
+                    ("max_ms", Json::Num(fan_max * 1e3)),
+                    ("p50_ms", Json::Num(fan_p50 * 1e3)),
+                    ("p95_ms", Json::Num(fan_p95 * 1e3)),
+                    ("p99_ms", Json::Num(fan_p99 * 1e3)),
+                ]),
+            ),
         ])
     }
 }
@@ -567,6 +657,10 @@ mod tests {
         });
         m.inc_proto_error(ErrorCode::BadRequest);
         m.record_shard_fanout(1, 0.005);
+        m.inc_spans_recorded();
+        m.inc_spans_recorded();
+        m.inc_spans_sampled_out();
+        m.set_recorder_stats(5, 3);
         // Through the serializer, like the real wire path.
         let snap = crate::util::json::Json::parse(&m.snapshot().to_string()).unwrap();
         let num = |path: &[&str]| -> f64 {
@@ -590,11 +684,44 @@ mod tests {
         assert_eq!(num(&["proto_errors", "bad_request"]), 1.0);
         // Every code is always present in the snapshot, even at zero.
         assert_eq!(num(&["proto_errors", "wrong_version"]), 0.0);
+        assert_eq!(num(&["trace", "spans_recorded"]), 2.0);
+        assert_eq!(num(&["trace", "spans_sampled_out"]), 1.0);
+        assert_eq!(num(&["trace", "recorder_dropped"]), 5.0);
+        assert_eq!(num(&["trace", "recorder_dumps"]), 3.0);
         let fanout = snap.get("fanout").and_then(crate::util::json::Json::as_arr).unwrap();
         assert_eq!(fanout.len(), 1);
         assert_eq!(fanout[0].get("shard").and_then(crate::util::json::Json::as_f64), Some(1.0));
         assert_eq!(fanout[0].get("n").and_then(crate::util::json::Json::as_f64), Some(1.0));
         assert!(fanout[0].get("p95_ms").and_then(crate::util::json::Json::as_f64).unwrap() > 0.0);
+        assert_eq!(num(&["fanout_total", "n"]), 1.0);
+        assert!(num(&["fanout_total", "p50_ms"]) > 0.0);
+    }
+
+    #[test]
+    fn trace_counters_land_in_report_and_fanout_total_merges() {
+        let m = Metrics::new();
+        m.inc_spans_recorded();
+        m.inc_spans_sampled_out();
+        m.inc_spans_sampled_out();
+        m.set_recorder_stats(7, 1);
+        let r = m.report();
+        assert!(
+            r.contains("trace: recorded=1 sampled_out=2 rec_dropped=7 rec_dumps=1"),
+            "{r}"
+        );
+
+        // The aggregate is the histogram-merge of the per-shard tracks.
+        m.record_shard_fanout(0, 0.001);
+        m.record_shard_fanout(0, 0.001);
+        m.record_shard_fanout(1, 0.100);
+        let (n, mean, max, p50, p95, _) = m.shard_fanout_total();
+        assert_eq!(n, 3);
+        assert!((mean - 0.034).abs() < 1e-9, "weighted mean, mean={mean}");
+        assert!((max - 0.100).abs() < 1e-12);
+        assert!((0.5e-3..=2e-3).contains(&p50), "p50={p50}");
+        assert!((50e-3..=200e-3).contains(&p95), "p95={p95}");
+        let r = m.report();
+        assert!(r.contains("all: n=3"), "{r}");
     }
 
     #[test]

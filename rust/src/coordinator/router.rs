@@ -217,7 +217,13 @@ impl ShardRouter {
                 span.note("addr", &addr);
             }
             let t0 = self.tracer.now_ns();
-            match self.shards[si].client.send_traced(req, span.id()) {
+            // The envelope's `trace` field carries the sampling fate, not
+            // just the span id: a recording span sends its id (shard tree
+            // nests under it), a sampled-out fan-out sends the
+            // TRACE_SAMPLED_OUT sentinel (shard records nothing), an
+            // untraced router sends 0 (shard applies its own policy). This
+            // is what keeps router and shards sampling the *same* requests.
+            match self.shards[si].client.send_traced(req, self.tracer.wire_trace(&span)) {
                 Ok(id) => sent.push((si, id, t0, span)),
                 Err(e) => {
                     for (sj, idj, _, _) in &sent {
@@ -250,7 +256,15 @@ impl ShardRouter {
                     self.shards[si].client.forget(id);
                     log::debug!("router: shard {addr} recv failed ({first}); replaying once");
                     span.event("replayed", 1);
-                    match self.shards[si].client.call(req) {
+                    // Replay under the same sampling fate as the original
+                    // send, so a retried request cannot half-appear in the
+                    // stitched trace.
+                    let wire = self.tracer.wire_trace(&span);
+                    let replay = match self.shards[si].client.send_traced(req, wire) {
+                        Ok(rid) => self.shards[si].client.recv(rid),
+                        Err(e) => Err(e),
+                    };
+                    match replay {
                         Ok(resp) => {
                             self.metrics
                                 .record_shard_fanout(si, self.tracer.elapsed_secs(t0));
@@ -546,6 +560,11 @@ pub fn dispatch_routed_traced(
         | Request::StreamClose { .. } => Err(ServerError::bad_request(
             "stream sessions are not routed; open them against the shard owning the config set",
         )),
+        // Each flight recorder is process-local forensics; a merged dump
+        // would scramble span ids across processes. Ask each shard.
+        Request::TraceDump => Err(ServerError::bad_request(
+            "trace_dump is not routed; ask each shard directly",
+        )),
     }
 }
 
@@ -561,12 +580,22 @@ pub fn route_line(
     let t0 = tracer.timestamp();
     let (wire, decoded) = decode_line(line);
     let t1 = tracer.timestamp();
-    let remote = match wire {
-        Wire::V2 { trace, .. } => trace,
-        Wire::V1 => 0,
+    let (remote, key) = match wire {
+        Wire::V2 { trace, id } => (trace, id),
+        Wire::V1 => (0, 0),
     };
-    let root = tracer.root_linked("request", remote);
-    tracer.span_at("decode", root.id(), t0, t1);
+    // Same sampling protocol as `server::handle_line`: the decision made
+    // here rides every fan-out envelope (see `ShardRouter::fan`), so the
+    // router and its shards keep or drop the same requests.
+    let root = tracer.root_sampled("request", remote, key);
+    if tracer.enabled() {
+        if root.active() {
+            metrics.inc_spans_recorded();
+            tracer.span_at("decode", root.id(), t0, t1);
+        } else {
+            metrics.inc_spans_sampled_out();
+        }
+    }
     let result = {
         let handle = root.child("handle");
         decoded.and_then(|req| {

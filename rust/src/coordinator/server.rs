@@ -87,7 +87,7 @@ use crate::streaming::{
     DecisionPolicy, FinalLen, SessionManager, StreamDecision, StreamSession, TopEntry,
     MAX_STREAM_LEN,
 };
-use crate::trace::{Span, TraceHandle};
+use crate::trace::{FlightRecorder, Span, TraceHandle};
 use crate::util::json::Json;
 use crate::util::pool::{default_workers, PanicHook, ThreadPool};
 use anyhow::{anyhow, Result};
@@ -132,6 +132,11 @@ pub struct ServerState {
     /// `OBSERVABILITY.md`). [`TraceHandle::disabled`] — the default — costs
     /// nothing on the request path.
     pub tracer: TraceHandle,
+    /// The always-on black box behind the `trace_dump` command and the
+    /// read-loop dump-on-error path. Wired by `main` as one sink of the
+    /// tracer's fan-out ([`crate::trace::MultiTracker`]); kept here too so
+    /// the dispatch layer can snapshot it. `None` when tracing is off.
+    pub recorder: Option<Arc<FlightRecorder>>,
 }
 
 /// The TCP server.
@@ -217,6 +222,9 @@ fn handle_connection(
         || reap_sessions(state),
         |line| handle_line(line, state),
     );
+    if result.is_err() {
+        dump_recorder_on_error(state);
+    }
     log::debug!("peer {peer} disconnected");
     result
 }
@@ -438,16 +446,30 @@ fn write_reply(writer: &mut TcpStream, reply: &Json) -> std::io::Result<()> {
 /// `decode` / `handle` / `encode` children; a v2 envelope carrying a
 /// `trace` field links the request span under that remote span id, so a
 /// routed shard's tree nests below the router's fan-out span.
+///
+/// Roots go through [`TraceHandle::root_sampled`]: a `trace` field of
+/// [`crate::trace::TRACE_SAMPLED_OUT`] (the router sampled this request
+/// out) records nothing, a real span id records unconditionally, and an
+/// absent field asks the local sampling policy with the v2 request id as
+/// the key (v1 lines key on 0). Kept/dropped roots land in the
+/// `spans_recorded` / `spans_sampled_out` metrics counters.
 pub fn handle_line(line: &str, state: &ServerState) -> Json {
     let t0 = state.tracer.timestamp();
     let (wire, decoded) = decode_line(line);
     let t1 = state.tracer.timestamp();
-    let remote = match wire {
-        Wire::V2 { trace, .. } => trace,
-        Wire::V1 => 0,
+    let (remote, key) = match wire {
+        Wire::V2 { trace, id } => (trace, id),
+        Wire::V1 => (0, 0),
     };
-    let root = state.tracer.root_linked("request", remote);
-    state.tracer.span_at("decode", root.id(), t0, t1);
+    let root = state.tracer.root_sampled("request", remote, key);
+    if state.tracer.enabled() {
+        if root.active() {
+            state.metrics.inc_spans_recorded();
+            state.tracer.span_at("decode", root.id(), t0, t1);
+        } else {
+            state.metrics.inc_spans_sampled_out();
+        }
+    }
     let result = {
         let handle = root.child("handle");
         decoded.and_then(|req| {
@@ -500,7 +522,16 @@ pub fn dispatch_traced(
             live_sessions: state.sessions.len(),
         })),
         Request::Apps => Ok(Response::Apps(app_names(state))),
-        Request::Metrics => Ok(Response::Metrics(state.metrics.snapshot())),
+        Request::Metrics => {
+            // Pull-based recorder gauges: freshened at snapshot time, so
+            // the recorder never touches the metrics registry on the hot
+            // record path.
+            if let Some(rec) = &state.recorder {
+                state.metrics.set_recorder_stats(rec.dropped(), rec.dumps());
+            }
+            Ok(Response::Metrics(state.metrics.snapshot()))
+        }
+        Request::TraceDump => Ok(Response::TraceDump(trace_dump_body(state))),
         Request::ShardInfo => Ok(Response::ShardInfo(ShardInfoBody {
             entries: state.db.len(),
             apps: app_names(state),
@@ -569,6 +600,50 @@ fn session_err(e: anyhow::Error) -> ServerError {
     ServerError::new(ErrorCode::UnknownSession, format!("{e:#}"))
 }
 
+/// Body of a `trace_dump` response: the flight recorder's ring as a
+/// Chrome-loadable document plus its occupancy counters. A server with no
+/// recorder answers an empty snapshot (zero spans) rather than an error,
+/// so fleet-wide dump sweeps never trip on untraced processes.
+fn trace_dump_body(state: &ServerState) -> Json {
+    let (spans, dropped, trace) = match &state.recorder {
+        Some(rec) => {
+            let doc = rec.dump();
+            state.metrics.set_recorder_stats(rec.dropped(), rec.dumps());
+            (rec.len(), rec.dropped(), doc)
+        }
+        None => (
+            0,
+            0,
+            Json::obj(vec![
+                ("displayTimeUnit", Json::Str("ms".to_string())),
+                ("traceEvents", Json::arr(Vec::new())),
+            ]),
+        ),
+    };
+    Json::obj(vec![
+        ("spans", Json::Num(spans as f64)),
+        ("dropped", Json::Num(dropped as f64)),
+        ("trace", trace),
+    ])
+}
+
+/// Crash forensics: when the `MRTUNER_FLIGHT_DUMP` env var names a path
+/// and a flight recorder is wired, a connection that dies on a real I/O
+/// error (not an idle drop or clean EOF) writes the recorder's
+/// recent-span ring there — the last thing the server was doing when the
+/// peer blew up, without anyone having to ask for it in time.
+fn dump_recorder_on_error(state: &ServerState) {
+    let Some(rec) = &state.recorder else { return };
+    let Ok(path) = std::env::var("MRTUNER_FLIGHT_DUMP") else { return };
+    if path.is_empty() {
+        return;
+    }
+    match rec.write_to(std::path::Path::new(&path)) {
+        Ok(()) => log::warn!("flight recorder dumped to {path}"),
+        Err(e) => log::warn!("flight recorder dump failed: {e:#}"),
+    }
+}
+
 /// Sweep sessions abandoned by dead clients into the metrics counters.
 fn reap_sessions(state: &ServerState) {
     let reaped = state.sessions.reap_idle(SESSION_IDLE);
@@ -633,12 +708,19 @@ fn handle_stream_open(
     if let Some(s) = min_samples {
         policy.min_samples = s;
     }
+    let margin_x1000 = (policy.margin * 1000.0) as u64;
     let session = StreamSession::open(&state.db, config, final_len, policy);
     let candidates = session.candidates();
     let id = state.sessions.open(session);
     state.metrics.inc_stream_opened();
     span.event("session", id);
     span.event("candidates", candidates as u64);
+    // Annotate the session-lifetime span (opened by the manager) with the
+    // exit policy it runs under; inert when untraced or sampled out.
+    let _ = state.sessions.with_span(id, |_, sspan| {
+        sspan.event("margin", margin_x1000);
+        sspan.event("candidates", candidates as u64);
+    });
     Ok(Response::StreamOpened(StreamOpenBody {
         session: id,
         candidates,
@@ -654,11 +736,22 @@ fn handle_stream_feed(
 ) -> Result<Response, ServerError> {
     let (decided_now, decision, observed, live) = state
         .sessions
-        .with(id, |s| {
+        .with_span(id, |s, sspan| {
+            // One `feed` child per batch on the session-lifetime span, so
+            // a stream renders as one long bar with its feeds inside.
+            let feed = sspan.child("feed");
+            feed.event("samples", samples.len() as u64);
             let had = s.decision().is_some();
             s.push(&state.db, samples);
             let d = s.decision().cloned();
-            (d.is_some() && !had, d, s.observed(), s.live_candidates())
+            let decided_now = d.is_some() && !had;
+            if decided_now {
+                if let Some(d) = &d {
+                    sspan.event("decided", d.at_sample as u64);
+                    sspan.event("samples_seen", s.observed() as u64);
+                }
+            }
+            (decided_now, d, s.observed(), s.live_candidates())
         })
         .map_err(session_err)?;
     if decided_now {
@@ -680,7 +773,9 @@ fn handle_stream_feed(
 fn handle_stream_poll(id: u64, k: usize, state: &ServerState) -> Result<Response, ServerError> {
     let (top, decision, observed, live, culled) = state
         .sessions
-        .with(id, |s| {
+        .with_span(id, |s, sspan| {
+            let poll = sspan.child("poll");
+            poll.event("k", k as u64);
             (
                 s.top(&state.db, k),
                 s.decision().cloned(),
@@ -943,6 +1038,7 @@ mod tests {
             metrics: Metrics::new(),
             sessions: SessionManager::new(),
             tracer: TraceHandle::disabled(),
+            recorder: None,
         }
     }
 
@@ -1298,6 +1394,84 @@ mod tests {
         let resp = handle_line(r#"{"cmd":"metrics"}"#, &state);
         assert_eq!(resp.get("ok"), Some(&Json::Bool(true)), "{resp}");
         assert!(resp.get("requests").and_then(Json::as_u64).is_some());
+    }
+
+    #[test]
+    fn trace_dump_answers_the_recorder_ring() {
+        use crate::trace::{FlightRecorder, VirtualClock};
+        use std::sync::Arc;
+
+        // No recorder wired: an empty snapshot, not an error.
+        let state = state_with_db();
+        let resp = handle_line(r#"{"v":2,"id":1,"type":"trace_dump"}"#, &state);
+        assert_eq!(resp.get("ok"), Some(&Json::Bool(true)), "{resp}");
+        let body = resp.get("body").unwrap();
+        assert_eq!(body.get("spans").and_then(Json::as_u64), Some(0));
+        assert!(body
+            .get("trace")
+            .and_then(|t| t.get("traceEvents"))
+            .and_then(Json::as_arr)
+            .unwrap()
+            .is_empty());
+
+        // Recorder wired as the tracer's sink: requests land in the ring
+        // and come back Chrome-shaped.
+        let recorder = Arc::new(FlightRecorder::new(64));
+        let mut state = state_with_db();
+        state.tracer = TraceHandle::with_clock(
+            Arc::clone(&recorder) as Arc<dyn crate::trace::Tracker>,
+            Arc::new(VirtualClock::new(10)),
+        );
+        state.recorder = Some(Arc::clone(&recorder));
+        let req = Request::Knn { series: raw_wave(0.2), k: 1, config: None };
+        handle_line(&req.to_v2(1).to_string(), &state);
+
+        let resp = handle_line(r#"{"v":2,"id":2,"type":"trace_dump"}"#, &state);
+        assert_eq!(resp.get("ok"), Some(&Json::Bool(true)), "{resp}");
+        let body = resp.get("body").unwrap();
+        let spans = body.get("spans").and_then(Json::as_u64).unwrap();
+        assert!(spans > 0, "the knn request's tree is in the ring");
+        let events = body
+            .get("trace")
+            .and_then(|t| t.get("traceEvents"))
+            .and_then(Json::as_arr)
+            .unwrap();
+        assert!(events.iter().any(|e| e.get("name").and_then(Json::as_str) == Some("request")));
+        // The v1 spelling answers too (shard_info-style "ok" merge).
+        let resp = handle_line(r#"{"cmd":"trace_dump"}"#, &state);
+        assert_eq!(resp.get("ok"), Some(&Json::Bool(true)), "{resp}");
+        assert!(resp.get("spans").and_then(Json::as_u64).unwrap() > 0);
+        // Dump calls were folded back into the metrics gauges.
+        let (_, _, _, dumps) = state.metrics.trace_summary();
+        assert_eq!(dumps, 2);
+    }
+
+    #[test]
+    fn wire_sampling_decisions_are_honored_and_counted() {
+        use crate::trace::{InMemoryTracker, VirtualClock, TRACE_SAMPLED_OUT};
+        use std::sync::Arc;
+
+        let tracker = Arc::new(InMemoryTracker::new());
+        let mut state = state_with_db();
+        state.tracer = TraceHandle::with_clock(
+            Arc::clone(&tracker) as Arc<dyn crate::trace::Tracker>,
+            Arc::new(VirtualClock::new(10)),
+        );
+        let req = Request::Ping;
+
+        // Upstream sampled this request out: nothing recorded, counted.
+        let resp = handle_line(&req.to_v2_traced(1, TRACE_SAMPLED_OUT).to_string(), &state);
+        assert_eq!(resp.get("ok"), Some(&Json::Bool(true)), "{resp}");
+        assert!(tracker.spans().is_empty(), "sampled-out request left no spans");
+
+        // Upstream sampled it in: recorded under the remote parent.
+        let resp = handle_line(&req.to_v2_traced(2, 77).to_string(), &state);
+        assert_eq!(resp.get("ok"), Some(&Json::Bool(true)), "{resp}");
+        assert_eq!(tracker.roots().len(), 1);
+        assert_eq!(tracker.roots()[0].remote_parent, 77);
+
+        let (recorded, sampled_out, _, _) = state.metrics.trace_summary();
+        assert_eq!((recorded, sampled_out), (1, 1));
     }
 
     #[test]

@@ -28,6 +28,60 @@ use mrtuner::workloads::{workload_for, AppId};
 use std::path::PathBuf;
 use std::sync::Arc;
 
+/// Build the serving tracer (see `OBSERVABILITY.md`):
+///
+/// * a bounded [`FlightRecorder`](mrtuner::trace::FlightRecorder) ring is
+///   always on — the black box behind the `trace_dump` command and the
+///   read-loop dump-on-error path;
+/// * `--trace FILE` fans spans out to a Chrome `trace_event` sink too
+///   (written when the server stops), via
+///   [`MultiTracker`](mrtuner::trace::MultiTracker);
+/// * the whole stack sits behind a deterministic seeded 1-in-N head
+///   sampler (`--trace-sample N`, default 64; `1` records everything);
+/// * `--no-trace` turns all of it off (the zero-overhead disabled handle).
+fn build_tracer(
+    args: &Args,
+) -> (
+    mrtuner::trace::TraceHandle,
+    Option<Arc<mrtuner::trace::FlightRecorder>>,
+    Option<Arc<mrtuner::trace::ChromeTracker>>,
+) {
+    use mrtuner::trace::{
+        ChromeTracker, FlightRecorder, MultiTracker, SamplingTracker, TraceHandle, Tracker,
+    };
+    if args.has_flag("no-trace") {
+        return (TraceHandle::disabled(), None, None);
+    }
+    let capacity = args.opt::<usize>("flight-spans", mrtuner::trace::recorder::DEFAULT_CAPACITY);
+    let recorder = Arc::new(FlightRecorder::new(capacity));
+    let mut chrome: Option<Arc<ChromeTracker>> = None;
+    let sink: Arc<dyn Tracker> = if args.opt_str("trace", "").is_empty() {
+        Arc::clone(&recorder) as Arc<dyn Tracker>
+    } else {
+        let c = Arc::new(ChromeTracker::new());
+        chrome = Some(Arc::clone(&c));
+        Arc::new(MultiTracker::new(vec![
+            Arc::clone(&recorder) as Arc<dyn Tracker>,
+            c,
+        ]))
+    };
+    let n = args.opt::<u64>("trace-sample", 64);
+    let seed = args.opt::<u64>("seed", 1);
+    let sampled = Arc::new(SamplingTracker::with_seed(sink, n, seed));
+    (TraceHandle::new(sampled), Some(recorder), chrome)
+}
+
+/// Write the `--trace FILE` Chrome sink on clean shutdown.
+fn write_trace_file(args: &Args, chrome: Option<Arc<mrtuner::trace::ChromeTracker>>) {
+    if let Some(c) = chrome {
+        let path = args.opt_str("trace", "");
+        match c.write_to(&PathBuf::from(&path)) {
+            Ok(()) => println!("trace written to {path}"),
+            Err(e) => eprintln!("writing trace {path}: {e:#}"),
+        }
+    }
+}
+
 fn grid_from(args: &Args) -> ConfigGrid {
     let seed = args.opt::<u64>("seed", 1);
     match args.opt_str("grid", "small").as_str() {
@@ -171,16 +225,21 @@ fn main() -> anyhow::Result<()> {
             }
             // Wrap the store in the similarity index once at startup; every
             // connection then shares the immutable envelope cache.
+            let (tracer, recorder, chrome) = build_tracer(&args);
             let state = ServerState {
                 db: mrtuner::index::IndexedDb::from_db(db),
                 runtime,
                 metrics: Metrics::new(),
-                sessions: mrtuner::streaming::SessionManager::new(),
-                tracer: mrtuner::trace::TraceHandle::disabled(),
+                // Sessions share the request tracer, so session-lifetime
+                // bars and request trees land in one timeline.
+                sessions: mrtuner::streaming::SessionManager::with_tracer(tracer.clone()),
+                tracer,
+                recorder,
             };
             let server = MatchServer::bind(&format!("127.0.0.1:{port}"), state)?;
             println!("serving on {}", server.local_addr()?);
             server.serve(args.opt::<usize>("workers", 4))?;
+            write_trace_file(&args, chrome);
         }
         Some("route") => {
             let shards_arg = args.opt_str("shards", "");
@@ -194,8 +253,9 @@ fn main() -> anyhow::Result<()> {
                 std::process::exit(2);
             }
             let metrics = Arc::new(Metrics::new());
+            let (tracer, _recorder, chrome) = build_tracer(&args);
             let router = match ShardRouter::connect(&addrs, metrics) {
-                Ok(r) => r,
+                Ok(r) => r.with_tracer(tracer),
                 Err(e) => {
                     eprintln!("route: {e}");
                     std::process::exit(1);
@@ -210,6 +270,7 @@ fn main() -> anyhow::Result<()> {
             let server = RouterServer::bind(&format!("127.0.0.1:{port}"), router)?;
             println!("routing on {}", server.local_addr()?);
             server.serve(args.opt::<usize>("workers", 4))?;
+            write_trace_file(&args, chrome);
         }
         Some("calibrate") => {
             let app = app_from(&args);
@@ -227,7 +288,8 @@ fn main() -> anyhow::Result<()> {
                 "usage: mrtuner <profile|match|tune|table1|serve|route|calibrate> \
                  [--app NAME] [--grid table1|grid50|small|N] [--db FILE] \
                  [--seed N] [--workers N] [--port N] [--no-runtime] [--no-noise] \
-                 [--shard-of \"LABEL;LABEL...\"] [--shards host:port,host:port]"
+                 [--shard-of \"LABEL;LABEL...\"] [--shards host:port,host:port] \
+                 [--no-trace] [--trace FILE] [--trace-sample N] [--flight-spans N]"
             );
         }
     }

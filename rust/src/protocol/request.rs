@@ -20,6 +20,10 @@ pub enum Request {
     /// quantiles, per-code proto errors, per-shard fan-out) as JSON — the
     /// machine-readable sibling of `stats`' human report string.
     Metrics,
+    /// Snapshot the server's flight recorder: the last N finished spans
+    /// as a Chrome-loadable trace document. Post-incident forensics
+    /// without restarting anything.
+    TraceDump,
     /// Preprocess a raw capture and score it against every reference of
     /// one configuration set (the paper's matching phase).
     Match { series: Vec<f64>, config: JobConfig },
@@ -209,6 +213,7 @@ impl Request {
             Some("apps") => Ok(Request::Apps),
             Some("shard_info") => Ok(Request::ShardInfo),
             Some("metrics") => Ok(Request::Metrics),
+            Some("trace_dump") => Ok(Request::TraceDump),
             Some("match") => {
                 let series = parse_series_field(req)?;
                 let config = parse_config(
@@ -252,6 +257,7 @@ impl Request {
             Request::Apps => "apps",
             Request::ShardInfo => "shard_info",
             Request::Metrics => "metrics",
+            Request::TraceDump => "trace_dump",
             Request::Match { .. } => "match",
             Request::Knn { .. } => "knn",
             Request::KnnBatch { .. } => "knn_batch",
@@ -295,7 +301,8 @@ impl Request {
             | Request::Stats
             | Request::Apps
             | Request::ShardInfo
-            | Request::Metrics => {}
+            | Request::Metrics
+            | Request::TraceDump => {}
             Request::Match { series, config } => {
                 pairs.push(("series", Json::nums(series)));
                 pairs.push(("config", config_to_json(config)));
@@ -380,6 +387,7 @@ mod tests {
             Request::Apps,
             Request::ShardInfo,
             Request::Metrics,
+            Request::TraceDump,
             Request::Match {
                 series: series(16),
                 config: cfg,
@@ -554,6 +562,7 @@ mod tests {
     #[test]
     fn idempotency_classification() {
         assert!(Request::Ping.is_idempotent());
+        assert!(Request::TraceDump.is_idempotent(), "dumping is read-only, safe to retry");
         assert!(Request::StreamPoll { session: 1, k: 1 }.is_idempotent());
         assert!(!Request::StreamFeed {
             session: 1,

@@ -165,6 +165,11 @@ pub enum Response {
     /// the wire layer never chases the metrics schema; field names are
     /// pinned by the metrics module's own tests.
     Metrics(Json),
+    /// Flight-recorder snapshot: `{"spans": n, "dropped": n, "trace":
+    /// <Chrome trace document>}`. Opaque JSON for the same reason as
+    /// `Metrics` — the trace document's shape belongs to the recorder
+    /// (`trace::FlightRecorder::dump`), not the wire layer.
+    TraceDump(Json),
 }
 
 // ---------- field-level (de)serialization helpers ----------
@@ -488,6 +493,7 @@ impl Response {
             Response::Sessions(_) => "sessions",
             Response::StreamClosed(_) => "stream_closed",
             Response::Metrics(_) => "metrics",
+            Response::TraceDump(_) => "trace_dump",
         }
     }
 
@@ -552,6 +558,7 @@ impl Response {
                 ("decision", opt_decision_json(&c.decision)),
             ]),
             Response::Metrics(m) => m.clone(),
+            Response::TraceDump(t) => t.clone(),
         }
     }
 
@@ -652,6 +659,15 @@ impl Response {
                 obj.insert("ok".to_string(), Json::Bool(true));
                 Json::Obj(obj)
             }
+            // v1 never had trace_dump either; same ok-merged rendering.
+            Response::TraceDump(t) => {
+                let mut obj = match t.clone() {
+                    Json::Obj(map) => map,
+                    other => std::iter::once(("trace".to_string(), other)).collect(),
+                };
+                obj.insert("ok".to_string(), Json::Bool(true));
+                Json::Obj(obj)
+            }
         }
     }
 
@@ -727,6 +743,7 @@ impl Response {
                 decision: opt_decision_from_json(body.get("decision"))?,
             })),
             "metrics" => Ok(Response::Metrics(body.clone())),
+            "trace_dump" => Ok(Response::TraceDump(body.clone())),
             other => Err(format!("unknown response type {other:?}")),
         }
     }
@@ -890,6 +907,25 @@ mod tests {
                     ]),
                 ),
                 ("fanout", Json::arr(vec![])),
+            ])),
+            Response::TraceDump(Json::obj(vec![
+                ("spans", Json::Num(2.0)),
+                ("dropped", Json::Num(1.0)),
+                (
+                    "trace",
+                    Json::obj(vec![
+                        ("displayTimeUnit", Json::Str("ms".into())),
+                        (
+                            "traceEvents",
+                            Json::arr(vec![Json::obj(vec![
+                                ("name", Json::Str("request".into())),
+                                ("ph", Json::Str("X".into())),
+                                ("ts", Json::Num(2.0)),
+                                ("dur", Json::Num(3.0)),
+                            ])]),
+                        ),
+                    ]),
+                ),
             ])),
         ]
     }

@@ -7,9 +7,19 @@
 //! sessions never serialize. Sessions left behind by dead clients are
 //! swept by [`SessionManager::reap_idle`], which the server calls from its
 //! read-timeout tick.
+//!
+//! A manager built with [`SessionManager::with_tracer`] opens one
+//! **session-lifetime span** per registration: a `session` root that stays
+//! open for the whole stream, collects per-feed/poll child spans and
+//! decision events through [`SessionManager::with_span`], and closes when
+//! the slot is dropped — annotated `end=close` on an explicit
+//! `stream_close`, `end=reap` when the idle sweeper collects it. A
+//! day-long MapReduce job thus renders as one long bar with its feeds
+//! nested inside, not as disconnected per-request blips.
 
 use super::session::{StreamDecision, StreamSession, TopEntry};
 use crate::index::IndexedDb;
+use crate::trace::{Span, TraceHandle};
 use anyhow::{anyhow, Result};
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -19,6 +29,9 @@ use std::time::{Duration, Instant};
 struct Slot {
     session: Mutex<StreamSession>,
     touched: Mutex<Instant>,
+    /// Session-lifetime span: opened at registration, ended when the slot
+    /// drops (close, reap, or the last straggling reference going away).
+    span: Span,
 }
 
 /// Registry of live [`StreamSession`]s keyed by server-assigned id.
@@ -26,6 +39,9 @@ struct Slot {
 pub struct SessionManager {
     next: AtomicU64,
     slots: Mutex<HashMap<u64, Arc<Slot>>>,
+    /// Span source for session-lifetime spans; the default (disabled)
+    /// handle makes every session span inert.
+    tracer: TraceHandle,
 }
 
 /// One live session's anytime snapshot, as returned by
@@ -45,16 +61,31 @@ impl SessionManager {
         SessionManager::default()
     }
 
+    /// A manager whose sessions get lifetime spans from `tracer` (the
+    /// server shares its request tracer here, so session bars and request
+    /// trees land in one timeline).
+    pub fn with_tracer(tracer: TraceHandle) -> SessionManager {
+        SessionManager {
+            tracer,
+            ..SessionManager::default()
+        }
+    }
+
     /// Register a session, returning its id.
     pub fn open(&self, session: StreamSession) -> u64 {
         // relaxed: monotone id counter — uniqueness is all that matters,
         // no other memory is published through it.
         let id = self.next.fetch_add(1, Ordering::Relaxed) + 1;
+        // Lifetime span, sampled on the session id so a 1-in-N policy
+        // keeps whole sessions, never half of one.
+        let span = self.tracer.root_sampled("session", 0, id);
+        span.event("session", id);
         let slot = Arc::new(Slot {
             session: Mutex::new(session),
             // Idle-reaping bookkeeping, compared only against other
             // Instants from this registry. lint: allow(no-raw-clock)
             touched: Mutex::new(Instant::now()),
+            span,
         });
         self.slots.lock().expect("session registry").insert(id, slot);
         id
@@ -62,6 +93,18 @@ impl SessionManager {
 
     /// Run `f` against a session, refreshing its idle clock.
     pub fn with<T>(&self, id: u64, f: impl FnOnce(&mut StreamSession) -> T) -> Result<T> {
+        self.with_span(id, |s, _| f(s))
+    }
+
+    /// [`SessionManager::with`], also handing `f` the session's lifetime
+    /// span so callers can hang per-feed/poll child spans and decision
+    /// events on it (inert when the manager is untraced or the session
+    /// was sampled out).
+    pub fn with_span<T>(
+        &self,
+        id: u64,
+        f: impl FnOnce(&mut StreamSession, &Span) -> T,
+    ) -> Result<T> {
         let slot = self
             .slots
             .lock()
@@ -72,7 +115,7 @@ impl SessionManager {
         // lint: allow(no-raw-clock) same registry-internal idle clock.
         *slot.touched.lock().expect("session clock") = Instant::now();
         let mut session = slot.session.lock().expect("session state");
-        Ok(f(&mut session))
+        Ok(f(&mut session, &slot.span))
     }
 
     /// Remove a session, returning its final state.
@@ -83,6 +126,7 @@ impl SessionManager {
             .expect("session registry")
             .remove(&id)
             .ok_or_else(|| anyhow!("unknown session {id}"))?;
+        slot.span.note("end", "close");
         match Arc::try_unwrap(slot) {
             Ok(s) => Ok(s.session.into_inner().expect("session state")),
             // Another connection is mid-call on this session; hand the
@@ -129,14 +173,21 @@ impl SessionManager {
     }
 
     /// Drop sessions idle for longer than `max_idle`; returns how many.
+    /// A reaped session's lifetime span closes annotated `end=reap`, so
+    /// abandoned streams are distinguishable from clean closes in a dump.
     pub fn reap_idle(&self, max_idle: Duration) -> usize {
         let mut slots = self.slots.lock().expect("session registry");
         let before = slots.len();
         slots.retain(|_, slot| {
-            slot.touched
+            let keep = slot
+                .touched
                 .lock()
                 .map(|t| t.elapsed() <= max_idle)
-                .unwrap_or(false)
+                .unwrap_or(false);
+            if !keep {
+                slot.span.note("end", "reap");
+            }
+            keep
         });
         before - slots.len()
     }
@@ -237,6 +288,55 @@ mod tests {
         mgr.poll_all(&idx, 1);
         assert_eq!(mgr.reap_idle(Duration::from_millis(20)), 2);
         assert!(mgr.is_empty());
+    }
+
+    #[test]
+    fn sessions_get_lifetime_spans_closed_by_close_or_reap() {
+        use crate::trace::{InMemoryTracker, VirtualClock};
+
+        let tracker = Arc::new(InMemoryTracker::new());
+        let tracer = TraceHandle::with_clock(
+            Arc::clone(&tracker) as Arc<dyn crate::trace::Tracker>,
+            Arc::new(VirtualClock::new(10)),
+        );
+        let mgr = SessionManager::with_tracer(tracer);
+        let idx = IndexedDb::new();
+
+        let a = mgr.open(session());
+        let b = mgr.open(session());
+        // Feed work hangs child spans and events off the lifetime span.
+        mgr.with_span(a, |s, span| {
+            let feed = span.child("feed");
+            s.push(&idx, &[0.1, 0.2]);
+            feed.event("samples", 2);
+            span.event("samples_seen", s.observed() as u64);
+        })
+        .unwrap();
+
+        // Clean close: span ends annotated end=close.
+        mgr.close(a).unwrap();
+        let spans = tracker.find("session");
+        assert_eq!(spans.len(), 2, "one lifetime span per open");
+        let sa = spans.iter().find(|s| s.events.contains(&("session", a))).unwrap();
+        assert!(sa.end_ns > sa.start_ns, "closed session's span is ended");
+        assert_eq!(sa.notes, vec![("end", "close".to_string())]);
+        assert_eq!(sa.events, vec![("session", a), ("samples_seen", 2)]);
+        let feeds = tracker.find("feed");
+        assert_eq!(feeds.len(), 1);
+        assert_eq!(feeds[0].parent, sa.id, "feed nests under the session span");
+
+        // Abandoned session: the reaper ends the span annotated end=reap.
+        std::thread::sleep(Duration::from_millis(30));
+        assert_eq!(mgr.reap_idle(Duration::from_millis(20)), 1);
+        let spans = tracker.find("session");
+        let sb = spans.iter().find(|s| s.events.contains(&("session", b))).unwrap();
+        assert!(sb.end_ns > sb.start_ns, "reaped session's span is ended");
+        assert_eq!(sb.notes, vec![("end", "reap".to_string())]);
+
+        // An untraced manager stays inert end to end.
+        let plain = SessionManager::new();
+        let id = plain.open(session());
+        plain.with_span(id, |_, span| assert!(!span.active())).unwrap();
     }
 
     #[test]

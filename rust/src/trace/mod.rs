@@ -29,11 +29,17 @@
 pub mod chrome;
 pub mod clock;
 pub mod memory;
+pub mod multi;
+pub mod recorder;
+pub mod sampler;
 pub mod text;
 
 pub use chrome::ChromeTracker;
 pub use clock::{Clock, MonotonicClock, VirtualClock};
 pub use memory::{InMemoryTracker, SpanRecord};
+pub use multi::MultiTracker;
+pub use recorder::FlightRecorder;
+pub use sampler::SamplingTracker;
 pub use text::TextTracker;
 
 use std::fmt;
@@ -42,6 +48,16 @@ use std::sync::Arc;
 /// Identifier of one span within one tracker; `0` means "no span" (the
 /// disabled tracker hands it out for every begin).
 pub type SpanId = u64;
+
+/// Wire sentinel for the v2 envelope `trace` field: "this request was
+/// explicitly sampled *out* by the sender — record nothing, and do not
+/// apply your own policy". Distinct from an absent/0 field, which means
+/// "the sender had no opinion" and leaves the receiver free to sample
+/// locally. The value is `2^53`: real span ids are small sequential
+/// counters that never reach it, and `2^53` is the largest integer that
+/// round-trips exactly through the f64-backed JSON layer
+/// ([`crate::util::json::Json`] stores all numbers as `f64`).
+pub const TRACE_SAMPLED_OUT: u64 = 1 << 53;
 
 /// A span sink. Implementations are clock-free: timestamps arrive as
 /// parameters (nanoseconds on the owning handle's [`Clock`]).
@@ -63,6 +79,16 @@ pub trait Tracker: Send + Sync {
 
     /// Attach a free-text annotation to an open span.
     fn note(&self, span: SpanId, key: &'static str, text: &str, now_ns: u64);
+
+    /// Head-based sampling decision for a *root* span identified by `key`
+    /// (request id, session id — whatever the caller derives identity
+    /// from). Plain sinks record everything; [`SamplingTracker`]
+    /// overrides this with a deterministic seeded 1-in-N policy. Only
+    /// consulted by [`TraceHandle::root_sampled`] and only when no remote
+    /// peer has already decided (see [`TRACE_SAMPLED_OUT`]).
+    fn sample_root(&self, _key: u64) -> bool {
+        true
+    }
 }
 
 /// The zero-overhead default sink: reports itself disabled, so the
@@ -160,6 +186,41 @@ impl TraceHandle {
     /// id carried by the v2 envelope).
     pub fn root_linked(&self, name: &'static str, remote_parent: SpanId) -> Span {
         self.span(name, 0, remote_parent)
+    }
+
+    /// Open a root span subject to the sampling protocol. `remote_parent`
+    /// is the envelope `trace` value (0 when absent) and `key` the local
+    /// sampling identity (v2 request id, session id):
+    ///
+    /// * `remote_parent == `[`TRACE_SAMPLED_OUT`] — the sender explicitly
+    ///   sampled this request out; honor it, record nothing.
+    /// * `remote_parent != 0` — the sender sampled it *in*; record
+    ///   unconditionally so the stitched tree is never half-missing.
+    /// * `remote_parent == 0` — no upstream opinion; ask the tracker's
+    ///   [`Tracker::sample_root`] policy with `key`.
+    pub fn root_sampled(&self, name: &'static str, remote_parent: SpanId, key: u64) -> Span {
+        if !self.enabled || remote_parent == TRACE_SAMPLED_OUT {
+            return Span::none();
+        }
+        if remote_parent == 0 && !self.tracker.sample_root(key) {
+            return Span::none();
+        }
+        self.span(name, 0, remote_parent)
+    }
+
+    /// The envelope `trace` value that propagates `span`'s sampling fate
+    /// downstream: the span's id when it records, [`TRACE_SAMPLED_OUT`]
+    /// when this handle is tracing but the span was sampled out (so the
+    /// receiver must not record either), and 0 when tracing is off
+    /// entirely (the receiver decides for itself).
+    pub fn wire_trace(&self, span: &Span) -> u64 {
+        if span.active() {
+            span.id()
+        } else if self.enabled {
+            TRACE_SAMPLED_OUT
+        } else {
+            0
+        }
     }
 
     /// Record an already-finished interval as a span (used to backdate
@@ -294,5 +355,41 @@ mod tests {
         let decode = &spans[2];
         assert_eq!((decode.start_ns, decode.end_ns), (1, 2));
         assert!(root.end_ns >= handle.end_ns, "root closes last");
+    }
+
+    #[test]
+    fn root_sampled_follows_the_wire_protocol() {
+        let sink = Arc::new(InMemoryTracker::new());
+        let h = TraceHandle::with_clock(sink.clone(), Arc::new(VirtualClock::new(5)));
+
+        // Sender sampled out: inert regardless of local policy.
+        let out = h.root_sampled("request", TRACE_SAMPLED_OUT, 7);
+        assert!(!out.active());
+        assert_eq!(h.wire_trace(&out), TRACE_SAMPLED_OUT, "fate propagates downstream");
+        drop(out);
+
+        // Sender sampled in: recorded with the remote parent attached.
+        let linked = h.root_sampled("request", 99, 7);
+        assert!(linked.active());
+        assert_eq!(h.wire_trace(&linked), linked.id());
+        drop(linked);
+
+        // No upstream opinion: the plain sink's default policy records all.
+        let local = h.root_sampled("request", 0, 7);
+        assert!(local.active());
+        drop(local);
+
+        let spans = sink.spans();
+        assert_eq!(spans.len(), 2);
+        assert_eq!(spans[0].remote_parent, 99);
+        assert_eq!(spans[1].remote_parent, 0);
+    }
+
+    #[test]
+    fn wire_trace_is_zero_when_tracing_is_off() {
+        let h = TraceHandle::disabled();
+        let span = h.root_sampled("request", 0, 1);
+        assert!(!span.active());
+        assert_eq!(h.wire_trace(&span), 0, "untraced processes stay silent");
     }
 }

@@ -1,0 +1,269 @@
+//! [`MultiTracker`]: fan one span stream out to several sinks at once —
+//! e.g. an [`super::InMemoryTracker`] for test assertions plus a
+//! [`super::ChromeTracker`] for export, or a [`super::FlightRecorder`]
+//! always-on beside an on-demand exporter.
+//!
+//! Each sink allocates its own span ids, so the fan-out keeps a mapping
+//! from its public ids to the per-sink ones. Sinks are **error
+//! isolated**: a panicking sink is disabled (its slot goes dead, the
+//! panic is counted in [`MultiTracker::errors`]) and the remaining sinks
+//! keep recording — a broken exporter must never take down the serving
+//! path it observes.
+
+use super::{SpanId, Tracker};
+use std::collections::HashMap;
+use std::panic::AssertUnwindSafe;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+struct Sink {
+    tracker: Arc<dyn Tracker>,
+    dead: AtomicBool,
+}
+
+/// Fan-out span sink; see the module docs.
+pub struct MultiTracker {
+    sinks: Vec<Sink>,
+    next: AtomicU64,
+    /// Public span id → the id each sink returned for it (index-aligned
+    /// with `sinks`; 0 where a sink was dead at begin time).
+    ids: Mutex<HashMap<SpanId, Vec<SpanId>>>,
+    errors: AtomicU64,
+}
+
+impl MultiTracker {
+    pub fn new(sinks: Vec<Arc<dyn Tracker>>) -> MultiTracker {
+        MultiTracker {
+            sinks: sinks
+                .into_iter()
+                .map(|tracker| Sink { tracker, dead: AtomicBool::new(false) })
+                .collect(),
+            next: AtomicU64::new(0),
+            ids: Mutex::new(HashMap::new()),
+            errors: AtomicU64::new(0),
+        }
+    }
+
+    /// Panics swallowed (and sinks disabled) so far.
+    pub fn errors(&self) -> u64 {
+        // relaxed: independent monotone counter.
+        self.errors.load(Ordering::Relaxed)
+    }
+
+    /// Sinks still accepting spans.
+    pub fn live_sinks(&self) -> usize {
+        // relaxed: dead flags are one-way and independent.
+        self.sinks.iter().filter(|s| !s.dead.load(Ordering::Relaxed)).count()
+    }
+
+    fn guard(&self) -> std::sync::MutexGuard<'_, HashMap<SpanId, Vec<SpanId>>> {
+        self.ids.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    /// Run one sink call behind a panic shield; a panic kills that sink
+    /// only. Returns `None` if the sink was already dead or just died.
+    fn shielded<T>(&self, i: usize, f: impl FnOnce(&dyn Tracker) -> T) -> Option<T> {
+        let sink = &self.sinks[i];
+        // relaxed: the flag is advisory — a racing call at death time at
+        // worst double-counts one error.
+        if sink.dead.load(Ordering::Relaxed) {
+            return None;
+        }
+        match std::panic::catch_unwind(AssertUnwindSafe(|| f(sink.tracker.as_ref()))) {
+            Ok(v) => Some(v),
+            Err(_) => {
+                sink.dead.store(true, Ordering::Relaxed);
+                self.errors.fetch_add(1, Ordering::Relaxed);
+                None
+            }
+        }
+    }
+}
+
+impl std::fmt::Debug for MultiTracker {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("MultiTracker")
+            .field("sinks", &self.sinks.len())
+            .field("live", &self.live_sinks())
+            .finish()
+    }
+}
+
+impl Tracker for MultiTracker {
+    fn is_enabled(&self) -> bool {
+        self.sinks
+            .iter()
+            .enumerate()
+            .any(|(i, _)| self.shielded(i, |t| t.is_enabled()).unwrap_or(false))
+    }
+
+    fn begin(
+        &self,
+        name: &'static str,
+        parent: SpanId,
+        remote_parent: SpanId,
+        now_ns: u64,
+    ) -> SpanId {
+        // relaxed: monotone id counter — uniqueness is all that matters.
+        let id = self.next.fetch_add(1, Ordering::Relaxed) + 1;
+        // Map the public parent to each sink's own id before fanning out;
+        // don't hold the lock across sink calls.
+        let parents: Vec<SpanId> = match parent {
+            0 => vec![0; self.sinks.len()],
+            p => self
+                .guard()
+                .get(&p)
+                .cloned()
+                .unwrap_or_else(|| vec![0; self.sinks.len()]),
+        };
+        let per_sink: Vec<SpanId> = (0..self.sinks.len())
+            .map(|i| {
+                self.shielded(i, |t| t.begin(name, parents[i], remote_parent, now_ns))
+                    .unwrap_or(0)
+            })
+            .collect();
+        self.guard().insert(id, per_sink);
+        id
+    }
+
+    fn end(&self, span: SpanId, now_ns: u64) {
+        let Some(per_sink) = self.guard().remove(&span) else {
+            return;
+        };
+        for (i, &sid) in per_sink.iter().enumerate() {
+            if sid != 0 {
+                self.shielded(i, |t| t.end(sid, now_ns));
+            }
+        }
+    }
+
+    fn event(&self, span: SpanId, name: &'static str, value: u64, now_ns: u64) {
+        let per_sink = match self.guard().get(&span) {
+            Some(v) => v.clone(),
+            None => return,
+        };
+        for (i, &sid) in per_sink.iter().enumerate() {
+            if sid != 0 {
+                self.shielded(i, |t| t.event(sid, name, value, now_ns));
+            }
+        }
+    }
+
+    fn note(&self, span: SpanId, key: &'static str, text: &str, now_ns: u64) {
+        let per_sink = match self.guard().get(&span) {
+            Some(v) => v.clone(),
+            None => return,
+        };
+        for (i, &sid) in per_sink.iter().enumerate() {
+            if sid != 0 {
+                self.shielded(i, |t| t.note(sid, key, text, now_ns));
+            }
+        }
+    }
+
+    fn sample_root(&self, key: u64) -> bool {
+        // A root records if *any* live sink wants it; per-sink rates are
+        // not supported (compose a SamplingTracker *around* the fan-out
+        // for a uniform policy instead).
+        self.sinks
+            .iter()
+            .enumerate()
+            .any(|(i, _)| self.shielded(i, |t| t.sample_root(key)).unwrap_or(false))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::{ChromeTracker, InMemoryTracker, TraceHandle, VirtualClock};
+    use crate::util::json::Json;
+
+    #[test]
+    fn every_sink_sees_the_same_tree_under_its_own_ids() {
+        let mem = Arc::new(InMemoryTracker::new());
+        let chrome = Arc::new(ChromeTracker::new());
+        let multi = Arc::new(MultiTracker::new(vec![
+            mem.clone() as Arc<dyn Tracker>,
+            chrome.clone() as Arc<dyn Tracker>,
+        ]));
+        let h = TraceHandle::with_clock(multi.clone(), Arc::new(VirtualClock::new(7)));
+        assert!(h.enabled());
+        {
+            let root = h.root_linked("request", 55);
+            let child = root.child("handle");
+            child.event("queries", 3);
+            child.note("config", "M=2");
+        }
+        // In-memory sink: full tree with stitched remote parent.
+        let spans = mem.spans();
+        assert_eq!(spans.len(), 2);
+        assert_eq!(spans[0].name, "request");
+        assert_eq!(spans[0].remote_parent, 55);
+        assert_eq!(spans[1].parent, spans[0].id, "child nests under the sink's own root id");
+        assert_eq!(spans[1].events, vec![("queries", 3)]);
+        // Chrome sink: both spans finished with payloads intact.
+        assert_eq!(chrome.len(), 2);
+        let doc = chrome.to_json();
+        let events = doc.get("traceEvents").and_then(Json::as_arr).unwrap();
+        let handle = &events[0]; // child ends first
+        assert_eq!(handle.get("name").and_then(Json::as_str), Some("handle"));
+        assert_eq!(
+            handle.get("args").and_then(|a| a.get("queries")).and_then(Json::as_f64),
+            Some(3.0)
+        );
+        assert_eq!(multi.errors(), 0);
+        assert_eq!(multi.live_sinks(), 2);
+    }
+
+    /// A sink that panics on every call after construction.
+    struct HostileSink;
+    impl Tracker for HostileSink {
+        fn is_enabled(&self) -> bool {
+            true
+        }
+        fn begin(&self, _: &'static str, _: SpanId, _: SpanId, _: u64) -> SpanId {
+            panic!("hostile begin")
+        }
+        fn end(&self, _: SpanId, _: u64) {
+            panic!("hostile end")
+        }
+        fn event(&self, _: SpanId, _: &'static str, _: u64, _: u64) {
+            panic!("hostile event")
+        }
+        fn note(&self, _: SpanId, _: &'static str, _: &str, _: u64) {
+            panic!("hostile note")
+        }
+    }
+
+    #[test]
+    fn a_panicking_sink_is_isolated_and_disabled() {
+        let mem = Arc::new(InMemoryTracker::new());
+        let multi = Arc::new(MultiTracker::new(vec![
+            Arc::new(HostileSink) as Arc<dyn Tracker>,
+            mem.clone() as Arc<dyn Tracker>,
+        ]));
+        // Quiet the default panic hook for the intentional panic.
+        let prev = std::panic::take_hook();
+        std::panic::set_hook(Box::new(|_| {}));
+        let h = TraceHandle::with_clock(multi.clone(), Arc::new(VirtualClock::new(2)));
+        {
+            let root = h.root("request");
+            root.event("n", 1);
+        }
+        std::panic::set_hook(prev);
+        assert_eq!(multi.errors(), 1, "one panic, counted once (sink dead afterwards)");
+        assert_eq!(multi.live_sinks(), 1);
+        // The healthy sink recorded the whole span anyway.
+        let spans = mem.spans();
+        assert_eq!(spans.len(), 1);
+        assert_eq!(spans[0].events, vec![("n", 1)]);
+        assert!(spans[0].end_ns > spans[0].start_ns);
+    }
+
+    #[test]
+    fn empty_fanout_reports_disabled() {
+        let multi = MultiTracker::new(Vec::new());
+        assert!(!multi.is_enabled());
+        assert!(!multi.sample_root(1), "no sink wants anything");
+    }
+}

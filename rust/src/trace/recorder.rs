@@ -1,0 +1,281 @@
+//! [`FlightRecorder`]: an always-on black box for the serving path — a
+//! fixed-capacity ring buffer of the most recently *finished* spans, at
+//! bounded memory, dumped on demand (the `trace_dump` wire command) or on
+//! read-loop error.
+//!
+//! Finished spans are stored pre-rendered in the same Chrome
+//! `trace_event` shape as [`super::ChromeTracker`], so
+//! [`FlightRecorder::dump`] is a snapshot that loads directly in
+//! `chrome://tracing` / <https://ui.perfetto.dev>. When the ring is full
+//! the oldest span is evicted and counted in
+//! [`FlightRecorder::dropped`] — the recorder never grows and never
+//! blocks the hot path on anything but a short mutex.
+//!
+//! Memory bound: the ring holds at most `capacity` finished spans; the
+//! open-span table only ever holds spans that are currently live, which
+//! the serving layers bound by construction (one tree per in-flight
+//! request, one long-lived span per streaming session).
+
+use super::{SpanId, Tracker};
+use crate::util::json::Json;
+use anyhow::{Context, Result};
+use std::collections::{HashMap, VecDeque};
+use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+/// Default ring capacity: enough for the last few hundred requests'
+/// trees without mattering next to the index itself.
+pub const DEFAULT_CAPACITY: usize = 4096;
+
+struct Open {
+    name: &'static str,
+    parent: SpanId,
+    remote_parent: SpanId,
+    start_ns: u64,
+    /// Track id: the id of this span's local root (Chrome renders one
+    /// row per tid).
+    tid: u64,
+    args: Vec<(String, Json)>,
+}
+
+#[derive(Default)]
+struct Inner {
+    open: HashMap<SpanId, Open>,
+    ring: VecDeque<Json>,
+}
+
+/// Bounded last-N-spans sink; see the module docs.
+pub struct FlightRecorder {
+    capacity: usize,
+    next: AtomicU64,
+    inner: Mutex<Inner>,
+    dropped: AtomicU64,
+    dumps: AtomicU64,
+}
+
+impl Default for FlightRecorder {
+    fn default() -> Self {
+        FlightRecorder::new(DEFAULT_CAPACITY)
+    }
+}
+
+impl FlightRecorder {
+    /// A recorder keeping the last `capacity` finished spans
+    /// (`capacity == 0` is clamped to 1).
+    pub fn new(capacity: usize) -> FlightRecorder {
+        FlightRecorder {
+            capacity: capacity.max(1),
+            next: AtomicU64::new(0),
+            inner: Mutex::new(Inner::default()),
+            dropped: AtomicU64::new(0),
+            dumps: AtomicU64::new(0),
+        }
+    }
+
+    /// Configured ring capacity.
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Finished spans currently held.
+    pub fn len(&self) -> usize {
+        self.guard().ring.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Spans evicted from the ring to make room for newer ones.
+    pub fn dropped(&self) -> u64 {
+        // relaxed: independent monotone counter.
+        self.dropped.load(Ordering::Relaxed)
+    }
+
+    /// Snapshots taken ([`FlightRecorder::dump`] calls).
+    pub fn dumps(&self) -> u64 {
+        // relaxed: independent monotone counter.
+        self.dumps.load(Ordering::Relaxed)
+    }
+
+    /// Snapshot the ring as a Chrome-loadable trace document (oldest
+    /// first). Recording continues; the ring is not cleared.
+    pub fn dump(&self) -> Json {
+        // relaxed: independent monotone counter.
+        self.dumps.fetch_add(1, Ordering::Relaxed);
+        let inner = self.guard();
+        Json::obj(vec![
+            ("displayTimeUnit", Json::Str("ms".to_string())),
+            ("traceEvents", Json::arr(inner.ring.iter().cloned().collect())),
+        ])
+    }
+
+    /// Write a [`FlightRecorder::dump`] snapshot to `path`
+    /// (pretty-printed; open in a trace viewer).
+    pub fn write_to(&self, path: &Path) -> Result<()> {
+        std::fs::write(path, self.dump().to_pretty())
+            .with_context(|| format!("writing {}", path.display()))
+    }
+
+    fn guard(&self) -> std::sync::MutexGuard<'_, Inner> {
+        self.inner.lock().unwrap_or_else(|e| e.into_inner())
+    }
+}
+
+impl std::fmt::Debug for FlightRecorder {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("FlightRecorder")
+            .field("capacity", &self.capacity)
+            .field("held", &self.len())
+            .finish()
+    }
+}
+
+impl Tracker for FlightRecorder {
+    fn is_enabled(&self) -> bool {
+        true
+    }
+
+    fn begin(
+        &self,
+        name: &'static str,
+        parent: SpanId,
+        remote_parent: SpanId,
+        now_ns: u64,
+    ) -> SpanId {
+        // relaxed: monotone id counter — uniqueness is all that matters.
+        let id = self.next.fetch_add(1, Ordering::Relaxed) + 1;
+        let mut inner = self.guard();
+        let tid = inner.open.get(&parent).map(|p| p.tid).unwrap_or(id);
+        inner.open.insert(
+            id,
+            Open { name, parent, remote_parent, start_ns: now_ns, tid, args: Vec::new() },
+        );
+        id
+    }
+
+    fn end(&self, span: SpanId, now_ns: u64) {
+        let mut inner = self.guard();
+        let Some(s) = inner.open.remove(&span) else {
+            return;
+        };
+        let mut args = vec![
+            ("span".to_string(), Json::Num(span as f64)),
+            ("parent".to_string(), Json::Num(s.parent as f64)),
+        ];
+        if s.remote_parent != 0 {
+            args.push(("remote_parent".to_string(), Json::Num(s.remote_parent as f64)));
+        }
+        args.extend(s.args);
+        let args_obj = Json::obj(args.iter().map(|(k, v)| (k.as_str(), v.clone())).collect());
+        let event = Json::obj(vec![
+            ("name", Json::Str(s.name.to_string())),
+            ("cat", Json::Str("mrtuner".to_string())),
+            ("ph", Json::Str("X".to_string())),
+            ("ts", Json::Num(s.start_ns as f64 / 1e3)),
+            ("dur", Json::Num(now_ns.saturating_sub(s.start_ns) as f64 / 1e3)),
+            ("pid", Json::Num(1.0)),
+            ("tid", Json::Num(s.tid as f64)),
+            ("args", args_obj),
+        ]);
+        if inner.ring.len() == self.capacity {
+            inner.ring.pop_front();
+            // relaxed: independent monotone counter.
+            self.dropped.fetch_add(1, Ordering::Relaxed);
+        }
+        inner.ring.push_back(event);
+    }
+
+    fn event(&self, span: SpanId, name: &'static str, value: u64, _now_ns: u64) {
+        let mut inner = self.guard();
+        if let Some(s) = inner.open.get_mut(&span) {
+            s.args.push((name.to_string(), Json::Num(value as f64)));
+        }
+    }
+
+    fn note(&self, span: SpanId, key: &'static str, text: &str, _now_ns: u64) {
+        let mut inner = self.guard();
+        if let Some(s) = inner.open.get_mut(&span) {
+            s.args.push((key.to_string(), Json::Str(text.to_string())));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn keeps_only_the_most_recent_spans_at_bounded_memory() {
+        let r = FlightRecorder::new(3);
+        for i in 0..10u64 {
+            let id = r.begin("request", 0, 0, i * 100);
+            r.event(id, "seq", i, i * 100 + 1);
+            r.end(id, i * 100 + 50);
+        }
+        assert_eq!(r.len(), 3);
+        assert_eq!(r.dropped(), 7);
+        let doc = r.dump();
+        let events = doc.get("traceEvents").and_then(Json::as_arr).unwrap();
+        let seqs: Vec<u64> = events
+            .iter()
+            .map(|e| e.get("args").and_then(|a| a.get("seq")).and_then(Json::as_u64).unwrap())
+            .collect();
+        assert_eq!(seqs, vec![7, 8, 9], "oldest evicted first, order preserved");
+        assert_eq!(r.dumps(), 1);
+    }
+
+    #[test]
+    fn dump_is_chrome_shaped_and_nonconsuming() {
+        let r = FlightRecorder::new(8);
+        let root = r.begin("request", 0, 41, 2_000);
+        let child = r.begin("handle", root, 0, 3_000);
+        r.note(child, "type", "knn", 3_100);
+        r.end(child, 5_000);
+        r.end(root, 6_000);
+
+        let doc = r.dump();
+        assert_eq!(doc.get("displayTimeUnit").and_then(Json::as_str), Some("ms"));
+        let events = doc.get("traceEvents").and_then(Json::as_arr).unwrap();
+        assert_eq!(events.len(), 2);
+        // Child finished first; inherits the root's track id.
+        let handle = &events[0];
+        assert_eq!(handle.get("name").and_then(Json::as_str), Some("handle"));
+        assert_eq!(handle.get("ph").and_then(Json::as_str), Some("X"));
+        assert_eq!(handle.get("ts").and_then(Json::as_f64), Some(3.0));
+        assert_eq!(handle.get("dur").and_then(Json::as_f64), Some(2.0));
+        let request = &events[1];
+        assert_eq!(
+            handle.get("tid").and_then(Json::as_f64),
+            request.get("tid").and_then(Json::as_f64)
+        );
+        assert_eq!(
+            handle.get("args").and_then(|a| a.get("type")).and_then(Json::as_str),
+            Some("knn")
+        );
+        assert_eq!(
+            request.get("args").and_then(|a| a.get("remote_parent")).and_then(Json::as_f64),
+            Some(41.0)
+        );
+        // A second dump sees the same spans (snapshot, not drain).
+        assert_eq!(
+            r.dump().get("traceEvents").and_then(Json::as_arr).map(Vec::len),
+            Some(2)
+        );
+        assert_eq!(r.dumps(), 2);
+    }
+
+    #[test]
+    fn writes_a_parseable_file() {
+        let r = FlightRecorder::new(4);
+        let id = r.begin("request", 0, 0, 0);
+        r.end(id, 1_000);
+        let path = std::env::temp_dir().join("mrtuner_flight_recorder_test.json");
+        r.write_to(&path).expect("write dump");
+        let text = std::fs::read_to_string(&path).expect("read back");
+        let doc = Json::parse(&text).expect("valid json");
+        assert!(doc.get("traceEvents").and_then(Json::as_arr).is_some());
+        std::fs::remove_file(&path).ok();
+    }
+}

@@ -1,0 +1,202 @@
+//! [`SamplingTracker`]: head-based 1-in-N sampling as a [`Tracker`]
+//! decorator.
+//!
+//! The decision is made once, at the root, from the request's *identity*
+//! (v2 envelope id, session id) — not from ambient entropy — so it is
+//! deterministic and reproducible: the same `(seed, n, key)` always
+//! samples the same way, on every process that shares the seed. Combined
+//! with wire propagation ([`super::TRACE_SAMPLED_OUT`] /
+//! [`super::TraceHandle::wire_trace`]) this is what keeps distributed
+//! stitching intact under sampling: the router decides per request, the
+//! shards inherit the decision, and a sampled-in request yields the
+//! *complete* cross-process tree while a sampled-out one yields nothing
+//! anywhere.
+//!
+//! Everything below the root is unaffected: once a root records, all of
+//! its children record into the inner sink as usual; once it is sampled
+//! out, the inert [`super::Span`] guard never reaches this tracker at
+//! all.
+
+use super::{SpanId, Tracker};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+/// SplitMix64 finalizer: a cheap, well-mixed hash so consecutive request
+/// ids don't alias into the same residue pattern.
+fn splitmix64(mut x: u64) -> u64 {
+    x = x.wrapping_add(0x9e37_79b9_7f4a_7c15);
+    x = (x ^ (x >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    x = (x ^ (x >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+    x ^ (x >> 31)
+}
+
+/// The sampling decision function, exposed so tests (and peers that need
+/// to predict a decision) can evaluate it directly: sample `key` iff
+/// `splitmix64(seed ^ key) % n == 0`. `n <= 1` samples everything.
+pub fn decide(seed: u64, n: u64, key: u64) -> bool {
+    n <= 1 || splitmix64(seed ^ key) % n == 0
+}
+
+/// Decorator recording roughly 1-in-`n` root spans (and everything under
+/// them) into an inner sink. See the module docs for the determinism and
+/// wire-propagation contract.
+pub struct SamplingTracker {
+    inner: Arc<dyn Tracker>,
+    n: u64,
+    seed: u64,
+    sampled_in: AtomicU64,
+    sampled_out: AtomicU64,
+}
+
+impl SamplingTracker {
+    /// Sample 1-in-`n` roots with the default seed (0). `n <= 1` records
+    /// everything (the decorator becomes a pass-through).
+    pub fn new(inner: Arc<dyn Tracker>, n: u64) -> SamplingTracker {
+        SamplingTracker::with_seed(inner, n, 0)
+    }
+
+    /// Sample 1-in-`n` roots, keyed by `seed`. Processes that must agree
+    /// on decisions for the *same keys* share the seed; processes with
+    /// independent traffic pick distinct seeds so they don't sample
+    /// correlated residues.
+    pub fn with_seed(inner: Arc<dyn Tracker>, n: u64, seed: u64) -> SamplingTracker {
+        SamplingTracker {
+            inner,
+            n,
+            seed,
+            sampled_in: AtomicU64::new(0),
+            sampled_out: AtomicU64::new(0),
+        }
+    }
+
+    /// The configured 1-in-N rate.
+    pub fn rate(&self) -> u64 {
+        self.n
+    }
+
+    /// Roots this tracker decided to record.
+    pub fn sampled_in(&self) -> u64 {
+        // relaxed: independent monotone counter.
+        self.sampled_in.load(Ordering::Relaxed)
+    }
+
+    /// Roots this tracker decided to drop.
+    pub fn sampled_out(&self) -> u64 {
+        // relaxed: independent monotone counter.
+        self.sampled_out.load(Ordering::Relaxed)
+    }
+}
+
+impl std::fmt::Debug for SamplingTracker {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("SamplingTracker")
+            .field("n", &self.n)
+            .field("seed", &self.seed)
+            .finish()
+    }
+}
+
+impl Tracker for SamplingTracker {
+    fn is_enabled(&self) -> bool {
+        self.inner.is_enabled()
+    }
+
+    fn begin(
+        &self,
+        name: &'static str,
+        parent: SpanId,
+        remote_parent: SpanId,
+        now_ns: u64,
+    ) -> SpanId {
+        self.inner.begin(name, parent, remote_parent, now_ns)
+    }
+
+    fn end(&self, span: SpanId, now_ns: u64) {
+        self.inner.end(span, now_ns);
+    }
+
+    fn event(&self, span: SpanId, name: &'static str, value: u64, now_ns: u64) {
+        self.inner.event(span, name, value, now_ns);
+    }
+
+    fn note(&self, span: SpanId, key: &'static str, text: &str, now_ns: u64) {
+        self.inner.note(span, key, text, now_ns);
+    }
+
+    fn sample_root(&self, key: u64) -> bool {
+        // The inner sink keeps a veto (a nested SamplingTracker composes
+        // as the product of the two rates).
+        let keep = decide(self.seed, self.n, key) && self.inner.sample_root(key);
+        // relaxed: independent monotone counters.
+        if keep {
+            self.sampled_in.fetch_add(1, Ordering::Relaxed);
+        } else {
+            self.sampled_out.fetch_add(1, Ordering::Relaxed);
+        }
+        keep
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::{InMemoryTracker, TraceHandle, VirtualClock};
+
+    #[test]
+    fn decision_is_deterministic_and_seed_sensitive() {
+        for key in 0..200u64 {
+            assert_eq!(decide(7, 4, key), decide(7, 4, key), "same inputs, same answer");
+        }
+        assert!(decide(0, 1, 42), "n=1 keeps everything");
+        assert!(decide(9, 0, 42), "n=0 degrades to keep-everything");
+        // Different seeds disagree on at least one key in a small window.
+        assert!(
+            (0..64u64).any(|k| decide(1, 4, k) != decide(2, 4, k)),
+            "seed must influence the decision"
+        );
+    }
+
+    #[test]
+    fn rate_is_roughly_one_in_n() {
+        let kept = (0..4096u64).filter(|&k| decide(3, 4, k)).count();
+        // Binomial(4096, 1/4): ~1024 ± a generous window.
+        assert!((800..1250).contains(&kept), "kept {kept} of 4096 at 1-in-4");
+    }
+
+    #[test]
+    fn sampled_roots_record_full_subtrees_and_counters_track() {
+        let sink = Arc::new(InMemoryTracker::new());
+        let sampler = Arc::new(SamplingTracker::with_seed(sink.clone(), 4, 11));
+        let h = TraceHandle::with_clock(sampler.clone(), Arc::new(VirtualClock::new(3)));
+        assert!(h.enabled());
+
+        let mut kept_keys = Vec::new();
+        for key in 0..32u64 {
+            let root = h.root_sampled("request", 0, key);
+            if root.active() {
+                kept_keys.push(key);
+                let child = root.child("handle");
+                child.event("key", key);
+            }
+        }
+        assert_eq!(kept_keys, (0..32).filter(|&k| decide(11, 4, k)).collect::<Vec<_>>());
+        assert_eq!(sampler.sampled_in() as usize, kept_keys.len());
+        assert_eq!(sampler.sampled_out() as usize, 32 - kept_keys.len());
+        // Every kept root carries its child; dropped ones left nothing.
+        assert_eq!(sink.roots().len(), kept_keys.len());
+        assert_eq!(sink.find("handle").len(), kept_keys.len());
+    }
+
+    #[test]
+    fn remote_decisions_bypass_the_local_policy() {
+        let sink = Arc::new(InMemoryTracker::new());
+        // Seed/rate chosen so key 5 would be sampled out locally.
+        let seed = (0..u64::MAX).find(|&s| !decide(s, 4, 5)).unwrap();
+        let sampler = Arc::new(SamplingTracker::with_seed(sink.clone(), 4, seed));
+        let h = TraceHandle::with_clock(sampler, Arc::new(VirtualClock::new(3)));
+        let root = h.root_sampled("request", 123, 5);
+        assert!(root.active(), "an upstream sampled-in decision wins");
+        drop(root);
+        assert_eq!(sink.roots()[0].remote_parent, 123);
+    }
+}

@@ -180,6 +180,18 @@ impl LogHistogram {
         self.total
     }
 
+    /// Fold another histogram into this one, bucket-wise. Exact: merging
+    /// then querying is identical to having recorded every sample into
+    /// one histogram (buckets are fixed, so there is no re-binning
+    /// error). The router uses this to aggregate per-shard fan-out
+    /// latency into one fleet-wide distribution.
+    pub fn merge(&mut self, other: &LogHistogram) {
+        for (a, b) in self.counts.iter_mut().zip(other.counts.iter()) {
+            *a += *b;
+        }
+        self.total += other.total;
+    }
+
     /// The `q`-quantile (`q` in `[0, 1]`) in seconds: the geometric
     /// representative (1.5 × low edge) of the bucket containing the
     /// target rank. Exact to within the factor-2 bucket width; 0.0 when
@@ -259,6 +271,60 @@ mod tests {
             u.record(5e-3);
         }
         assert_eq!(u.quantile(0.5), u.quantile(0.99));
+    }
+
+    #[test]
+    fn log_histogram_merge_equals_recording_into_one() {
+        let samples_a = [1e-3, 2e-3, 50e-3, 1e-6];
+        let samples_b = [4e-3, 100e-3, 0.5, 3e-5];
+        let mut a = LogHistogram::new();
+        let mut b = LogHistogram::new();
+        let mut combined = LogHistogram::new();
+        for &s in &samples_a {
+            a.record(s);
+            combined.record(s);
+        }
+        for &s in &samples_b {
+            b.record(s);
+            combined.record(s);
+        }
+        a.merge(&b);
+        assert_eq!(a.count(), combined.count());
+        for q in [0.0, 0.25, 0.5, 0.75, 0.95, 0.99, 1.0] {
+            assert_eq!(a.quantile(q), combined.quantile(q), "q={q}");
+        }
+    }
+
+    #[test]
+    fn log_histogram_merge_edge_cases() {
+        // Empty ∪ empty: still empty, quantiles stay 0.
+        let mut e = LogHistogram::new();
+        e.merge(&LogHistogram::new());
+        assert_eq!(e.count(), 0);
+        assert_eq!(e.quantile(0.5), 0.0, "empty after merging empties");
+
+        // Single sample merged into an empty: every quantile is that
+        // sample's bucket representative.
+        let mut one = LogHistogram::new();
+        one.record(5e-3);
+        let mut m = LogHistogram::new();
+        m.merge(&one);
+        assert_eq!(m.count(), 1);
+        assert_eq!(m.quantile(0.0), m.quantile(1.0));
+        let rep = m.quantile(0.5);
+        assert!((2.5e-3..=10e-3).contains(&rep), "rep={rep}");
+
+        // Top-bucket saturation: absurd durations clamp into bucket 31 on
+        // both sides and stay clamped after the merge.
+        let mut hot = LogHistogram::new();
+        hot.record(1e9);
+        let mut hot2 = LogHistogram::new();
+        hot2.record(4e9);
+        hot.merge(&hot2);
+        assert_eq!(hot.count(), 2);
+        let top = hot.quantile(1.0);
+        assert_eq!(hot.quantile(0.0), top, "both samples share the top bucket");
+        assert!(top < 1e9, "clamped representative, not the raw value");
     }
 
     #[test]

@@ -45,6 +45,7 @@ fn state_with_db() -> ServerState {
         metrics: Metrics::new(),
         sessions: SessionManager::new(),
         tracer: mrtuner::trace::TraceHandle::disabled(),
+        recorder: None,
     }
 }
 
@@ -805,4 +806,62 @@ fn every_error_code_is_reachable_from_wire_input() {
         assert!(seen.contains(&code), "{} never produced", code.as_str());
     }
     assert_eq!(seen.len(), ErrorCode::ALL.len(), "duplicate coverage: {seen:?}");
+}
+
+// ---------------------------------------------------------------------
+// Flight recorder over the wire: `trace_dump` returns the ring as a
+// Chrome-loadable document without consuming it, and the metrics
+// snapshot carries the trace counters — all through real TCP.
+// ---------------------------------------------------------------------
+
+#[test]
+fn trace_dump_and_trace_counters_round_trip_over_tcp() {
+    use mrtuner::trace::{FlightRecorder, TraceHandle, Tracker, VirtualClock};
+    use std::sync::Arc;
+
+    let recorder = Arc::new(FlightRecorder::new(64));
+    let mut state = state_with_db();
+    state.tracer = TraceHandle::with_clock(
+        Arc::clone(&recorder) as Arc<dyn Tracker>,
+        Arc::new(VirtualClock::new(10)),
+    );
+    state.recorder = Some(Arc::clone(&recorder));
+    let (addr, shutdown) = spawn_server(state);
+
+    let mut client = MrtunerClient::connect(&addr.to_string()).unwrap();
+    let body = client.knn(&raw_wave(0.2), 1, None).unwrap();
+    assert_eq!(body.neighbors.len(), 1);
+
+    // Two dumps of the same ring: point-in-time copies, the knn request's
+    // tree present and Chrome-shaped in both (dumping doesn't drain).
+    for round in 0..2 {
+        let dump = client.trace_dump().unwrap();
+        assert!(
+            dump.get("spans").and_then(Json::as_u64).unwrap() >= 1,
+            "round {round}: empty ring: {dump}"
+        );
+        assert_eq!(dump.get("dropped").and_then(Json::as_u64), Some(0));
+        let doc = dump.get("trace").unwrap();
+        assert_eq!(doc.get("displayTimeUnit").and_then(Json::as_str), Some("ms"));
+        let events = doc.get("traceEvents").and_then(Json::as_arr).unwrap();
+        assert!(
+            events
+                .iter()
+                .any(|e| e.get("name").and_then(Json::as_str) == Some("request")),
+            "round {round}: no request span in {doc}"
+        );
+    }
+
+    // The snapshot's trace block travels too. Four recorded roots by the
+    // time it is taken (knn, both dumps, and the metrics request itself —
+    // roots are counted at decode, before dispatch), two recorder dumps.
+    let m = client.metrics().unwrap();
+    let trace = m.get("trace").expect("pinned trace block");
+    assert_eq!(trace.get("spans_recorded").and_then(Json::as_u64), Some(4), "{m}");
+    assert_eq!(trace.get("spans_sampled_out").and_then(Json::as_u64), Some(0), "{m}");
+    assert_eq!(trace.get("recorder_dumps").and_then(Json::as_u64), Some(2), "{m}");
+    assert_eq!(trace.get("recorder_dropped").and_then(Json::as_u64), Some(0), "{m}");
+
+    drop(client);
+    shutdown();
 }

@@ -69,6 +69,7 @@ fn state_over(db: IndexedDb) -> ServerState {
         metrics: Metrics::new(),
         sessions: SessionManager::new(),
         tracer: mrtuner::trace::TraceHandle::disabled(),
+        recorder: None,
     }
 }
 

@@ -78,6 +78,7 @@ fn traced_state(db: IndexedDb, tracker: Arc<dyn Tracker>) -> ServerState {
         metrics: Metrics::new(),
         sessions: SessionManager::new(),
         tracer: traced_handle(tracker),
+        recorder: None,
     }
 }
 
@@ -263,6 +264,134 @@ fn routed_knn_batch_builds_a_stitched_distributed_span_tree() {
             .sum();
         assert_eq!(pruned + abandoned + evals, 4, "cascade accounting leak");
     }
+}
+
+/// Like [`spawn_traced_fleet`], but each shard's [`InMemoryTracker`] sits
+/// behind a [`SamplingTracker`] sharing `(n, seed)` with the router —
+/// the production topology for head-based sampling.
+fn spawn_sampled_fleet(shards: Vec<IndexedDb>, n: u64, seed: u64) -> Fleet {
+    use mrtuner::trace::SamplingTracker;
+    let mut fleet = Fleet {
+        addrs: Vec::new(),
+        trackers: Vec::new(),
+        stops: Vec::new(),
+        joins: Vec::new(),
+    };
+    for db in shards {
+        let tracker = Arc::new(InMemoryTracker::new());
+        let sampler: Arc<dyn Tracker> = Arc::new(SamplingTracker::with_seed(
+            Arc::clone(&tracker) as Arc<dyn Tracker>,
+            n,
+            seed,
+        ));
+        let server = MatchServer::bind("127.0.0.1:0", traced_state(db, sampler)).unwrap();
+        fleet.addrs.push(server.local_addr().unwrap().to_string());
+        fleet.trackers.push(tracker);
+        fleet.stops.push(server.stop_flag());
+        fleet
+            .joins
+            .push(std::thread::spawn(move || server.serve_with(2, Duration::from_millis(50))));
+    }
+    fleet
+}
+
+/// Head-based 1-in-N sampling agrees across processes: the router decides
+/// per request (seeded, from the v2 request id) and the decision rides
+/// every fan-out envelope, so the router and *both* shards record span
+/// trees for exactly the same request ids — and nothing else. Runs
+/// entirely under virtual clocks; the kept set is computed from
+/// [`mrtuner::trace::sampler::decide`], not observed, so a drift in either
+/// direction (over- or under-recording) fails loudly.
+#[test]
+fn sampling_decisions_agree_across_router_and_shards() {
+    use mrtuner::trace::sampler::decide;
+    use mrtuner::trace::SamplingTracker;
+
+    const RATE: u64 = 4;
+    const REQUESTS: u64 = 16;
+    // The shards' only locally-decided root is the shard_info handshake
+    // probe (their connection's request id 1; everything routed carries an
+    // explicit fate on the wire). Pick a seed that samples key 1 out and
+    // keeps a nontrivial, strict subset of ids 2..=REQUESTS.
+    let seed = (0..10_000u64)
+        .find(|&s| {
+            let kept = (2..=REQUESTS).filter(|&k| decide(s, RATE, k)).count();
+            !decide(s, RATE, 1) && kept >= 2 && kept < (REQUESTS - 1) as usize
+        })
+        .expect("a suitable seed exists");
+    let kept: Vec<u64> = (1..=REQUESTS).filter(|&k| decide(seed, RATE, k)).collect();
+
+    let fleet = spawn_sampled_fleet(two_shard_dbs(), RATE, seed);
+    let router_tracker = Arc::new(InMemoryTracker::new());
+    let router_sampler: Arc<dyn Tracker> = Arc::new(SamplingTracker::with_seed(
+        Arc::clone(&router_tracker) as Arc<dyn Tracker>,
+        RATE,
+        seed,
+    ));
+    let metrics = Arc::new(Metrics::new());
+    let router = ShardRouter::connect(&fleet.addrs, Arc::clone(&metrics))
+        .unwrap()
+        .with_tracer(traced_handle(router_sampler));
+    let front = RouterServer::bind("127.0.0.1:0", router).unwrap();
+    let addr = front.local_addr().unwrap();
+    let stop = front.stop_flag();
+    let join = std::thread::spawn(move || front.serve_with(2, Duration::from_millis(50)));
+
+    // Request id i carries i queries, so every recorded tree states which
+    // request it belongs to in its own `queries` event.
+    let mut client = MrtunerClient::connect(&addr.to_string()).unwrap();
+    for i in 1..=REQUESTS {
+        let queries: Vec<Vec<f64>> = (0..i).map(|_| raw_wave(0.15, 48)).collect();
+        let body = client.knn_batch(&queries, 1, None).unwrap();
+        assert_eq!(body.results.len(), i as usize, "sampling must not affect answers");
+    }
+
+    drop(client);
+    stop.store(true, Ordering::SeqCst);
+    let _ = std::net::TcpStream::connect(addr);
+    join.join().unwrap().unwrap();
+    let trackers: Vec<Arc<InMemoryTracker>> = fleet.trackers.iter().map(Arc::clone).collect();
+    fleet.shutdown();
+
+    // Router side: one root per kept id, in request order, each naming its
+    // request through the batch span's `queries` event.
+    let roots = router_tracker.roots();
+    assert_eq!(roots.len(), kept.len(), "router recorded exactly the kept ids");
+    for (root, &key) in roots.iter().zip(&kept) {
+        let handle = only_child(&router_tracker, root.id, "handle");
+        let batch = only_child(&router_tracker, handle.id, "knn_batch");
+        assert_eq!(batch.events, vec![("queries", key)], "roots arrive in request order");
+        let shard_spans = router_tracker.children_of(batch.id);
+        assert_eq!(shard_spans.len(), 2, "kept requests fan to both shards");
+        // Each shard recorded the same request, stitched under the
+        // router's per-shard span.
+        for (si, tracker) in trackers.iter().enumerate() {
+            let sroot = tracker
+                .roots()
+                .into_iter()
+                .find(|r| r.remote_parent == shard_spans[si].id)
+                .unwrap_or_else(|| panic!("shard {si} missing tree for request {key}"));
+            let sh = only_child(tracker, sroot.id, "handle");
+            let sb = only_child(tracker, sh.id, "knn_batch");
+            assert_eq!(sb.events, vec![("queries", key)], "same request, same tree");
+        }
+    }
+
+    // ... and nothing else: no shard recorded a sampled-out request, an
+    // orphan decode, or the handshake probe.
+    for (si, tracker) in trackers.iter().enumerate() {
+        let sroots = tracker.roots();
+        assert_eq!(sroots.len(), kept.len(), "shard {si} over- or under-recorded");
+        assert!(
+            sroots.iter().all(|r| r.name == "request" && r.remote_parent != 0),
+            "shard {si} recorded a locally-decided root: {sroots:?}"
+        );
+    }
+
+    // The router's metrics counters agree with the decision function.
+    let (recorded, sampled_out, _, _) = metrics.trace_summary();
+    assert_eq!(recorded, kept.len() as u64);
+    assert_eq!(sampled_out, REQUESTS - kept.len() as u64);
 }
 
 /// With `MRTUNER_EMIT_TRACE` set (CI does), repeat the routed round trip

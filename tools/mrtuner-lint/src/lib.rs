@@ -35,10 +35,12 @@
 //! - `no-io` — no `std::time` / `println!` / `eprintln!` in `dtw/`,
 //!   `signal/`, `index/` library code. Kernels stay deterministic and
 //!   side-effect free; timing and reporting belong to the coordinator.
-//! - `no-raw-clock` — no direct `Instant::now()` outside `trace/` and
-//!   `metrics.rs`. Time is injected through the `Clock` trait (carried by
-//!   `TraceHandle`) so tests can drive servers and spans with a virtual
-//!   clock; a raw `Instant::now()` silently escapes that control.
+//! - `no-raw-clock` — no direct `Instant::now()` outside `trace/clock.rs`
+//!   and `metrics.rs`. Time is injected through the `Clock` trait (carried
+//!   by `TraceHandle`) so tests can drive servers and spans with a virtual
+//!   clock; a raw `Instant::now()` silently escapes that control. Even the
+//!   other `trace/` files (sinks, samplers, recorders) are held to it —
+//!   they take timestamps as parameters.
 //!
 //! Any finding can be silenced with an inline pragma on the same or the
 //! preceding line: `// lint: allow(<rule>)`.
@@ -56,8 +58,8 @@ pub const RELAXED_COMMENT: &str = "relaxed-comment";
 pub const KERNEL_ALLOC: &str = "kernel-alloc";
 /// Rule id: no time/printing in kernel library code.
 pub const NO_IO: &str = "no-io";
-/// Rule id: `Instant::now()` only in `trace/` and `metrics.rs` — everyone
-/// else reads time through the injected `Clock`.
+/// Rule id: `Instant::now()` only in `trace/clock.rs` and `metrics.rs` —
+/// everyone else reads time through the injected `Clock`.
 pub const NO_RAW_CLOCK: &str = "no-raw-clock";
 
 /// One finding, ready to print as `file:line: [rule] message`.
@@ -404,8 +406,11 @@ pub fn lint_str(rel_path: &str, src: &str) -> Vec<Violation> {
     let io_zone = path.starts_with("dtw/")
         || path.starts_with("signal/")
         || path.starts_with("index/");
+    // Only the clock abstraction itself may read real time — the rest of
+    // `trace/` (sinks, samplers, recorders) takes timestamps as
+    // parameters, and gets no blanket exemption for it.
     let clock_zone =
-        !(path.starts_with("trace/") || path.ends_with("/metrics.rs") || path == "metrics.rs");
+        !(path == "trace/clock.rs" || path.ends_with("/metrics.rs") || path == "metrics.rs");
 
     let mut out = Vec::new();
     for (ln, code_line) in code_lines.iter().enumerate() {
@@ -751,7 +756,16 @@ mod tests {
     #[test]
     fn raw_clock_banned_outside_trace_and_metrics() {
         let bad = "pub fn f() -> Instant {\n    Instant::now()\n}\n";
-        for path in ["coordinator/server.rs", "streaming/manager.rs", "util/logging.rs"] {
+        // Trace *sinks* get no blanket exemption: they receive timestamps
+        // as parameters, so a raw read there is as suspect as anywhere.
+        for path in [
+            "coordinator/server.rs",
+            "streaming/manager.rs",
+            "util/logging.rs",
+            "trace/recorder.rs",
+            "trace/sampler.rs",
+            "trace/multi.rs",
+        ] {
             let vs = lint_str(path, bad);
             assert_eq!(rules_of(&vs), vec![NO_RAW_CLOCK], "{path}");
             assert_eq!(vs[0].line, 2, "{path}");
