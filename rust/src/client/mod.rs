@@ -26,10 +26,67 @@ use crate::protocol::{
     ShardInfoBody, StatsBody, StreamCloseBody, StreamFeedBody, StreamOpenBody, StreamPollBody,
 };
 use crate::simulator::job::JobConfig;
+use crate::util::rng::Rng;
 use std::collections::BTreeMap;
 use std::io::{BufRead, BufReader, Write};
 use std::net::TcpStream;
 use std::time::Duration;
+
+/// Capped exponential backoff with deterministic seeded jitter, used by
+/// the client's reconnect loop so a dead server never triggers a tight
+/// reconnect storm. The delay before retry `attempt` (0-based) is
+/// `min(cap, base << attempt)`, jittered uniformly into its upper half
+/// (`[delay/2, delay]`) so simultaneous clients decorrelate while the
+/// sequence stays reproducible for a given seed.
+#[derive(Debug, Clone)]
+pub struct Backoff {
+    base: Duration,
+    cap: Duration,
+    attempts: u32,
+    rng: Rng,
+}
+
+impl Backoff {
+    /// First retry delay.
+    pub const DEFAULT_BASE: Duration = Duration::from_millis(5);
+    /// Largest un-jittered delay.
+    pub const DEFAULT_CAP: Duration = Duration::from_millis(200);
+    /// Total connect attempts (1 initial + `DEFAULT_ATTEMPTS - 1` retries).
+    pub const DEFAULT_ATTEMPTS: u32 = 3;
+
+    /// Fully parameterized backoff schedule.
+    pub fn new(base: Duration, cap: Duration, attempts: u32, seed: u64) -> Backoff {
+        Backoff {
+            base,
+            cap,
+            attempts: attempts.max(1),
+            rng: Rng::new(seed),
+        }
+    }
+
+    /// The default schedule with a caller-chosen jitter seed.
+    pub fn from_seed(seed: u64) -> Backoff {
+        Backoff::new(
+            Backoff::DEFAULT_BASE,
+            Backoff::DEFAULT_CAP,
+            Backoff::DEFAULT_ATTEMPTS,
+            seed,
+        )
+    }
+
+    /// Total connect attempts the reconnect loop is bounded by.
+    pub fn attempts(&self) -> u32 {
+        self.attempts
+    }
+
+    /// The jittered delay before retry `attempt` (0-based).
+    pub fn delay(&mut self, attempt: u32) -> Duration {
+        let exp = self.base.saturating_mul(1u32 << attempt.min(16));
+        let nanos = exp.min(self.cap).as_nanos() as u64;
+        let half = nanos / 2;
+        Duration::from_nanos(half + self.rng.below(half + 1))
+    }
+}
 
 /// Why a client call failed.
 #[derive(Debug)]
@@ -98,6 +155,7 @@ pub struct MrtunerClient {
     addr: String,
     conn: Option<Conn>,
     timeout: Option<Duration>,
+    backoff: Backoff,
     next_id: u64,
     /// Connection generation; bumps on every reconnect so ids sent on a
     /// dead connection fail loudly instead of blocking forever.
@@ -121,10 +179,19 @@ impl MrtunerClient {
     }
 
     fn connect_opts(addr: &str, timeout: Option<Duration>) -> Result<MrtunerClient, ClientError> {
+        // The jitter seed is derived from the address (FNV-1a) so two
+        // clients of different backends never share a jitter stream, while
+        // the same client setup replays the same schedule.
+        let seed = addr
+            .bytes()
+            .fold(0xcbf2_9ce4_8422_2325u64, |h, b| {
+                (h ^ b as u64).wrapping_mul(0x0000_0100_0000_01b3)
+            });
         let mut client = MrtunerClient {
             addr: addr.to_string(),
             conn: None,
             timeout,
+            backoff: Backoff::from_seed(seed),
             next_id: 0,
             epoch: 0,
             sent: BTreeMap::new(),
@@ -139,21 +206,61 @@ impl MrtunerClient {
         &self.addr
     }
 
-    fn ensure_connected(&mut self) -> Result<(), ClientError> {
-        if self.conn.is_none() {
-            let stream = TcpStream::connect(&self.addr)?;
-            let _ = stream.set_nodelay(true);
-            if let Some(t) = self.timeout {
-                stream.set_read_timeout(Some(t))?;
-            }
-            let writer = stream.try_clone()?;
-            self.conn = Some(Conn {
-                writer,
-                reader: BufReader::new(stream),
-            });
-            self.epoch += 1;
+    /// Replace the reconnect backoff schedule (tests pin the jitter seed;
+    /// the router shortens the schedule for fast failover probes).
+    pub fn set_backoff(&mut self, backoff: Backoff) {
+        self.backoff = backoff;
+    }
+
+    /// Adjust the per-reply read timeout, effective immediately on the
+    /// live connection and inherited by reconnects. The shard router's
+    /// deadline budgeting uses this to cap each fan-out recv at the
+    /// request's remaining budget.
+    pub fn set_read_timeout(&mut self, timeout: Option<Duration>) -> Result<(), ClientError> {
+        self.timeout = timeout;
+        if let Some(conn) = self.conn.as_ref() {
+            // The reader is a dup of the same socket, so one setsockopt
+            // covers both halves.
+            conn.writer.set_read_timeout(timeout)?;
         }
         Ok(())
+    }
+
+    fn ensure_connected(&mut self) -> Result<(), ClientError> {
+        if self.conn.is_some() {
+            return Ok(());
+        }
+        // Bounded by the backoff's attempt budget: each failed connect
+        // sleeps the capped jittered backoff delay before the next try.
+        let mut attempt = 0;
+        loop {
+            match TcpStream::connect(&self.addr) {
+                Ok(stream) => {
+                    let _ = stream.set_nodelay(true);
+                    if let Some(t) = self.timeout {
+                        stream.set_read_timeout(Some(t))?;
+                    }
+                    let writer = stream.try_clone()?;
+                    self.conn = Some(Conn {
+                        writer,
+                        reader: BufReader::new(stream),
+                    });
+                    self.epoch += 1;
+                    return Ok(());
+                }
+                Err(e) if attempt + 1 < self.backoff.attempts() => {
+                    let delay = self.backoff.delay(attempt);
+                    log::debug!(
+                        "client {}: connect failed ({e}); retry {} in {delay:?}",
+                        self.addr,
+                        attempt + 1
+                    );
+                    std::thread::sleep(delay);
+                    attempt += 1;
+                }
+                Err(e) => return Err(ClientError::Io(e)),
+            }
+        }
     }
 
     fn drop_conn(&mut self) {
@@ -373,6 +480,7 @@ impl MrtunerClient {
             series: series.to_vec(),
             k,
             config: config.copied(),
+            allow_partial: false,
         };
         match self.call(&req)? {
             Response::Knn(b) => Ok(b),
@@ -392,6 +500,7 @@ impl MrtunerClient {
             queries: queries.to_vec(),
             k,
             config: config.copied(),
+            allow_partial: false,
         };
         match self.call(&req)? {
             Response::KnnBatch(b) => Ok(b),
@@ -475,5 +584,36 @@ impl MrtunerClient {
             Response::StreamClosed(b) => Ok(b),
             other => Err(Self::unexpected("stream_closed", &other)),
         }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn backoff_is_deterministic_and_stays_in_bounds() {
+        let base = Duration::from_millis(5);
+        let cap = Duration::from_millis(200);
+        let mut a = Backoff::new(base, cap, 5, 42);
+        let mut b = Backoff::new(base, cap, 5, 42);
+        for attempt in 0..10u32 {
+            let da = a.delay(attempt);
+            assert_eq!(da, b.delay(attempt), "seeded jitter is reproducible");
+            let exp = base.saturating_mul(1u32 << attempt.min(16)).min(cap);
+            assert!(da >= exp / 2 && da <= exp, "attempt {attempt}: {da:?} not in [{:?}, {exp:?}]", exp / 2);
+        }
+        // The cap holds even for absurd attempt counts (no shift overflow).
+        assert!(a.delay(u32::MAX) <= cap);
+        // Different seeds draw different jitter somewhere in the schedule.
+        let mut c = Backoff::new(base, cap, 5, 43);
+        let mut d = Backoff::new(base, cap, 5, 42);
+        assert!((0..10).any(|i| c.delay(i) != d.delay(i)));
+    }
+
+    #[test]
+    fn backoff_attempts_never_below_one() {
+        assert_eq!(Backoff::new(Duration::ZERO, Duration::ZERO, 0, 1).attempts(), 1);
+        assert_eq!(Backoff::from_seed(7).attempts(), Backoff::DEFAULT_ATTEMPTS);
     }
 }

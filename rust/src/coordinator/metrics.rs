@@ -67,6 +67,15 @@ pub struct Metrics {
     pub spans_sampled_out: AtomicU64,
     pub recorder_dropped: AtomicU64,
     pub recorder_dumps: AtomicU64,
+    /// Fault-tolerance counters recorded by the shard router: in-place
+    /// replays after an I/O failure, replica switches, circuit-breaker
+    /// trips, admitted half-open probes, and shard slots a partial reply
+    /// was served without.
+    pub shard_retries: AtomicU64,
+    pub shard_failovers: AtomicU64,
+    pub circuit_opens: AtomicU64,
+    pub circuit_probes: AtomicU64,
+    pub degraded_shards: AtomicU64,
     /// Wall-clock of each whole batch (not per query).
     knn_batch_latency: Mutex<LatencyTrack>,
     latency: Mutex<LatencyTrack>,
@@ -248,6 +257,46 @@ impl Metrics {
             .sum()
     }
 
+    /// Count one in-place replay of a shard request (same replica, fresh
+    /// connection) after an I/O failure.
+    pub fn inc_shard_retry(&self) {
+        self.shard_retries.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Count one replica switch that produced an answer (or reached a
+    /// healthy replica that refused with a structured error).
+    pub fn inc_shard_failover(&self) {
+        self.shard_failovers.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Count one circuit-breaker trip (closed or half-open → open).
+    pub fn inc_circuit_open(&self) {
+        self.circuit_opens.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Count one admitted half-open probe on an open breaker.
+    pub fn inc_circuit_probe(&self) {
+        self.circuit_probes.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Count one shard slot a degraded (partial) reply was served
+    /// without.
+    pub fn inc_degraded_shard(&self) {
+        self.degraded_shards.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Snapshot: (retries, failovers, circuit_opens, circuit_probes,
+    /// degraded_shards).
+    pub fn fault_summary(&self) -> (u64, u64, u64, u64, u64) {
+        (
+            self.shard_retries.load(Ordering::Relaxed),
+            self.shard_failovers.load(Ordering::Relaxed),
+            self.circuit_opens.load(Ordering::Relaxed),
+            self.circuit_probes.load(Ordering::Relaxed),
+            self.degraded_shards.load(Ordering::Relaxed),
+        )
+    }
+
     /// Record one shard's fan-out round trip (send → reply merged).
     pub fn record_shard_fanout(&self, shard: usize, seconds: f64) {
         self.shard_fanout
@@ -351,8 +400,16 @@ impl Metrics {
         let trace = format!(
             " trace: recorded={tr_rec} sampled_out={tr_out} rec_dropped={tr_drop} rec_dumps={tr_dumps}"
         );
+        let (f_retries, f_failovers, f_opens, f_probes, f_degraded) = self.fault_summary();
+        let fault = if f_retries + f_failovers + f_opens + f_probes + f_degraded > 0 {
+            format!(
+                " fault: retries={f_retries} failovers={f_failovers} circuit_opens={f_opens} circuit_probes={f_probes} degraded={f_degraded}"
+            )
+        } else {
+            String::new()
+        };
         format!(
-            "requests={} comparisons={} batches={} errors={} pool_panics={} latency: n={} mean={:.1}ms sd={:.1}ms min={:.1}ms max={:.1}ms p50={:.1}ms p95={:.1}ms p99={:.1}ms index: {} knn_batch: n={} queries={} mean={:.1}ms p50={:.1}ms p95={:.1}ms p99={:.1}ms stream: opened={} closed={} reaped={} batches={} culled={} decisions={} mean_at={:.0} mean_frac={:.2}{trace}{proto}{fanout}",
+            "requests={} comparisons={} batches={} errors={} pool_panics={} latency: n={} mean={:.1}ms sd={:.1}ms min={:.1}ms max={:.1}ms p50={:.1}ms p95={:.1}ms p99={:.1}ms index: {} knn_batch: n={} queries={} mean={:.1}ms p50={:.1}ms p95={:.1}ms p99={:.1}ms stream: opened={} closed={} reaped={} batches={} culled={} decisions={} mean_at={:.0} mean_frac={:.2}{trace}{fault}{proto}{fanout}",
             self.requests.load(Ordering::Relaxed),
             self.comparisons.load(Ordering::Relaxed),
             self.batches.load(Ordering::Relaxed),
@@ -477,6 +534,16 @@ impl Metrics {
                     ("spans_sampled_out", Json::Num(tr_out as f64)),
                     ("recorder_dropped", Json::Num(tr_drop as f64)),
                     ("recorder_dumps", Json::Num(tr_dumps as f64)),
+                ]),
+            ),
+            (
+                "fault",
+                Json::obj(vec![
+                    ("retries", Json::Num(self.shard_retries.load(Ordering::Relaxed) as f64)),
+                    ("failovers", Json::Num(self.shard_failovers.load(Ordering::Relaxed) as f64)),
+                    ("circuit_opens", Json::Num(self.circuit_opens.load(Ordering::Relaxed) as f64)),
+                    ("circuit_probes", Json::Num(self.circuit_probes.load(Ordering::Relaxed) as f64)),
+                    ("degraded_shards", Json::Num(self.degraded_shards.load(Ordering::Relaxed) as f64)),
                 ]),
             ),
             ("proto_errors", Json::obj(proto)),
@@ -657,6 +724,11 @@ mod tests {
         });
         m.inc_proto_error(ErrorCode::BadRequest);
         m.record_shard_fanout(1, 0.005);
+        m.inc_shard_retry();
+        m.inc_shard_failover();
+        m.inc_circuit_open();
+        m.inc_circuit_probe();
+        m.inc_degraded_shard();
         m.inc_spans_recorded();
         m.inc_spans_recorded();
         m.inc_spans_sampled_out();
@@ -688,6 +760,11 @@ mod tests {
         assert_eq!(num(&["trace", "spans_sampled_out"]), 1.0);
         assert_eq!(num(&["trace", "recorder_dropped"]), 5.0);
         assert_eq!(num(&["trace", "recorder_dumps"]), 3.0);
+        assert_eq!(num(&["fault", "retries"]), 1.0);
+        assert_eq!(num(&["fault", "failovers"]), 1.0);
+        assert_eq!(num(&["fault", "circuit_opens"]), 1.0);
+        assert_eq!(num(&["fault", "circuit_probes"]), 1.0);
+        assert_eq!(num(&["fault", "degraded_shards"]), 1.0);
         let fanout = snap.get("fanout").and_then(crate::util::json::Json::as_arr).unwrap();
         assert_eq!(fanout.len(), 1);
         assert_eq!(fanout[0].get("shard").and_then(crate::util::json::Json::as_f64), Some(1.0));
@@ -722,6 +799,24 @@ mod tests {
         assert!((50e-3..=200e-3).contains(&p95), "p95={p95}");
         let r = m.report();
         assert!(r.contains("all: n=3"), "{r}");
+    }
+
+    #[test]
+    fn fault_counters_accumulate_and_stay_silent_at_zero() {
+        let m = Metrics::new();
+        assert!(!m.report().contains("fault:"), "{}", m.report());
+        m.inc_shard_retry();
+        m.inc_shard_retry();
+        m.inc_shard_failover();
+        m.inc_circuit_open();
+        m.inc_circuit_probe();
+        m.inc_degraded_shard();
+        assert_eq!(m.fault_summary(), (2, 1, 1, 1, 1));
+        let r = m.report();
+        assert!(
+            r.contains("fault: retries=2 failovers=1 circuit_opens=1 circuit_probes=1 degraded=1"),
+            "{r}"
+        );
     }
 
     #[test]

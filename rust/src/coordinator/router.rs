@@ -48,11 +48,109 @@ use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
-/// One connected shard: its client plus what the `shard_info` handshake
-/// reported it owns.
+/// Consecutive failures that trip a replica's circuit breaker open.
+pub const BREAKER_THRESHOLD: u32 = 3;
+/// Admission attempts skipped while open before a half-open probe.
+pub const BREAKER_COOLDOWN: u32 = 4;
+
+/// Circuit-breaker state of one replica backend.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BreakerState {
+    /// Healthy: taking traffic.
+    Closed,
+    /// Tripped: skipped until the cooldown admits a probe.
+    Open,
+    /// One probe in flight; its outcome closes or re-trips the breaker.
+    HalfOpen,
+}
+
+/// Per-replica consecutive-failure circuit breaker with half-open
+/// probing. Deterministic by construction: the open cooldown is counted
+/// in admission *attempts*, not wall time, so a scripted fault schedule
+/// walks the same state trajectory on every run.
+#[derive(Debug, Clone)]
+pub struct Breaker {
+    state: BreakerState,
+    failures: u32,
+    cooldown: u32,
+}
+
+impl Breaker {
+    pub fn new() -> Breaker {
+        Breaker {
+            state: BreakerState::Closed,
+            failures: 0,
+            cooldown: 0,
+        }
+    }
+
+    /// Current state (observability/tests).
+    pub fn state(&self) -> BreakerState {
+        self.state
+    }
+
+    /// May this replica take traffic now? Returns `(admitted, probe)`:
+    /// an open breaker counts the attempt against its cooldown and, at
+    /// zero, admits exactly one half-open probe (`probe = true`).
+    pub fn try_admit(&mut self) -> (bool, bool) {
+        match self.state {
+            BreakerState::Closed | BreakerState::HalfOpen => (true, false),
+            BreakerState::Open => {
+                self.cooldown = self.cooldown.saturating_sub(1);
+                if self.cooldown == 0 {
+                    self.state = BreakerState::HalfOpen;
+                    (true, true)
+                } else {
+                    (false, false)
+                }
+            }
+        }
+    }
+
+    /// A request on this replica succeeded: close and reset.
+    pub fn record_success(&mut self) {
+        self.state = BreakerState::Closed;
+        self.failures = 0;
+    }
+
+    /// A request on this replica failed; returns `true` when this
+    /// failure tripped the breaker open (callers count trips). A failed
+    /// half-open probe re-trips immediately.
+    pub fn record_failure(&mut self) -> bool {
+        self.failures = self.failures.saturating_add(1);
+        let trip = match self.state {
+            BreakerState::HalfOpen => true,
+            BreakerState::Closed => self.failures >= BREAKER_THRESHOLD,
+            BreakerState::Open => false,
+        };
+        if trip {
+            self.state = BreakerState::Open;
+            self.cooldown = BREAKER_COOLDOWN;
+        }
+        trip
+    }
+}
+
+impl Default for Breaker {
+    fn default() -> Breaker {
+        Breaker::new()
+    }
+}
+
+/// One replica backend of a shard slot: its address, (lazily) connected
+/// client, and circuit-breaker health.
+struct Replica {
+    addr: String,
+    /// `None` until first activated, and again after a transport failure
+    /// (a failed stream is in an unknown state — reconnect + re-handshake
+    /// before trusting it again).
+    client: Option<MrtunerClient>,
+    breaker: Breaker,
+}
+
+/// One shard slot: the replica set serving one partition of the global
+/// index space, plus what the `shard_info` handshake reported it owns.
 pub struct Shard {
-    /// Address the router (re)connects to.
-    pub addr: String,
     /// Global index base: the sum of entry counts of all earlier shards.
     pub base: usize,
     /// Entries this shard owns.
@@ -61,11 +159,91 @@ pub struct Shard {
     pub apps: Vec<String>,
     /// Configuration-set labels this shard owns.
     pub configs: Vec<String>,
-    client: MrtunerClient,
+    /// Replica backends, in failover order.
+    replicas: Vec<Replica>,
+    /// Index of the replica currently serving traffic.
+    active: usize,
 }
 
-/// Routes `knn` / `knn_batch` / `match` over a fixed set of shards (see
-/// module docs for the determinism contract).
+impl Shard {
+    /// Address of the replica currently serving this slot's traffic.
+    pub fn addr(&self) -> &str {
+        &self.replicas[self.active].addr
+    }
+
+    /// All replica addresses, in failover order.
+    pub fn replica_addrs(&self) -> Vec<&str> {
+        self.replicas.iter().map(|r| r.addr.as_str()).collect()
+    }
+
+    /// Index of the active replica.
+    pub fn active_replica(&self) -> usize {
+        self.active
+    }
+
+    /// Circuit-breaker states per replica (observability/tests).
+    pub fn breaker_states(&self) -> Vec<BreakerState> {
+        self.replicas.iter().map(|r| r.breaker.state()).collect()
+    }
+}
+
+/// A per-request time budget derived from the v2 envelope's optional
+/// `deadline_ms`, measured on the router's trace clock (live even for a
+/// disabled tracer). `None` deadline = unbounded — exactly the
+/// pre-deadline behavior.
+#[derive(Debug, Clone, Copy, Default)]
+struct Budget {
+    deadline_ns: Option<u64>,
+}
+
+/// Attempts stop subdividing the budget below this: the tail is spent
+/// whole, so a stuck fleet reaches `deadline_exceeded` instead of
+/// Zeno-ing through ever-smaller socket waits.
+const BUDGET_FLOOR: Duration = Duration::from_millis(10);
+
+impl Budget {
+    fn none() -> Budget {
+        Budget { deadline_ns: None }
+    }
+
+    fn start(tracer: &TraceHandle, deadline_ms: Option<u64>) -> Budget {
+        Budget {
+            deadline_ns: deadline_ms
+                .map(|ms| tracer.now_ns().saturating_add(ms.saturating_mul(1_000_000))),
+        }
+    }
+
+    /// Remaining budget (`None` = unbounded).
+    fn remaining(&self, tracer: &TraceHandle) -> Option<Duration> {
+        self.deadline_ns
+            .map(|d| Duration::from_nanos(d.saturating_sub(tracer.now_ns())))
+    }
+
+    fn expired(&self, tracer: &TraceHandle) -> bool {
+        matches!(self.remaining(tracer), Some(r) if r < Duration::from_millis(1))
+    }
+}
+
+/// Send-phase outcome for one fan-out slot.
+enum Sent {
+    /// Request in flight on the active replica.
+    Flight { id: u64, t0: u64 },
+    /// The active replica failed (or was inadmissible) at send time;
+    /// recovery runs in the settle phase.
+    NeedsRecovery(ClientError),
+}
+
+/// The typed error a spent budget surfaces as.
+fn deadline_err() -> ClientError {
+    ClientError::Server(ServerError::new(
+        ErrorCode::DeadlineExceeded,
+        "request deadline expired during fan-out",
+    ))
+}
+
+/// Routes `knn` / `knn_batch` / `match` over a fixed set of shard slots
+/// (see module docs for the determinism contract), failing over between
+/// a slot's replicas on transport errors.
 pub struct ShardRouter {
     shards: Vec<Shard>,
     metrics: Arc<Metrics>,
@@ -73,6 +251,9 @@ pub struct ShardRouter {
     /// gets a child span whose id rides the envelope's `trace` field, so
     /// shard-side request trees nest under it. Disabled by default.
     tracer: TraceHandle,
+    /// The in-flight request's deadline budget (set by routed dispatch;
+    /// `none` for budget-less requests and direct helper calls).
+    budget: Budget,
 }
 
 /// Map a shard-call failure onto the routed error surface: structured
@@ -96,27 +277,79 @@ pub const SHARD_REPLY_TIMEOUT: Duration = Duration::from_secs(30);
 
 impl ShardRouter {
     /// Connect to every shard (in the given order — it defines the global
-    /// index space) and run the `shard_info` handshake.
+    /// index space) and run the `shard_info` handshake. One replica per
+    /// slot; see [`ShardRouter::connect_groups`] for replica sets.
     pub fn connect(addrs: &[String], metrics: Arc<Metrics>) -> Result<ShardRouter, ClientError> {
-        let mut shards = Vec::with_capacity(addrs.len());
+        let groups: Vec<Vec<String>> = addrs.iter().map(|a| vec![a.clone()]).collect();
+        ShardRouter::connect_groups(&groups, metrics)
+    }
+
+    /// Connect one replica per shard slot (slot order defines the global
+    /// index space). Within a slot, replicas are tried in order; the
+    /// first that connects and answers the `shard_info` handshake becomes
+    /// active, the rest stay cold standbys that failover connects (and
+    /// geometry-verifies) on demand. A slot where no replica answers is a
+    /// startup error — degradation is a per-request decision, not a
+    /// topology one.
+    pub fn connect_groups(
+        groups: &[Vec<String>],
+        metrics: Arc<Metrics>,
+    ) -> Result<ShardRouter, ClientError> {
+        let mut shards = Vec::with_capacity(groups.len());
         let mut base = 0usize;
-        for addr in addrs {
-            let mut client = MrtunerClient::connect_timeout(addr, SHARD_REPLY_TIMEOUT)
-                .map_err(|e| shard_err(addr, e))?;
-            let info = client.shard_info().map_err(|e| shard_err(addr, e))?;
+        for group in groups {
+            if group.is_empty() {
+                return Err(ClientError::Wire("empty replica group".to_string()));
+            }
+            let mut found: Option<(usize, MrtunerClient, ShardInfoBody)> = None;
+            let mut last: Option<ClientError> = None;
+            // Each replica is tried exactly once at startup — bounded by
+            // the group itself, not a retry policy.
+            // lint: allow(bounded-retry)
+            for (ri, addr) in group.iter().enumerate() {
+                let attempt = MrtunerClient::connect_timeout(addr, SHARD_REPLY_TIMEOUT)
+                    .and_then(|mut client| client.shard_info().map(|info| (client, info)));
+                match attempt {
+                    Ok((client, info)) => {
+                        found = Some((ri, client, info));
+                        break;
+                    }
+                    Err(e) => {
+                        log::warn!("router: replica {addr} unavailable at startup: {e}");
+                        last = Some(e);
+                    }
+                }
+            }
+            let Some((active, client, info)) = found else {
+                let e = last.unwrap_or_else(|| {
+                    ClientError::Wire("no replica answered".to_string())
+                });
+                return Err(shard_err(&group.join(","), e));
+            };
             log::info!(
-                "router: shard {addr} owns {} entries across {} config sets",
+                "router: shard {} owns {} entries across {} config sets ({} replicas)",
+                group[active],
                 info.entries,
-                info.configs.len()
+                info.configs.len(),
+                group.len(),
             );
+            let mut replicas: Vec<Replica> = group
+                .iter()
+                .map(|addr| Replica {
+                    addr: addr.clone(),
+                    client: None,
+                    breaker: Breaker::new(),
+                })
+                .collect();
+            replicas[active].client = Some(client);
             let entries = info.entries;
             shards.push(Shard {
-                addr: addr.clone(),
                 base,
                 entries,
                 apps: info.apps,
                 configs: info.configs,
-                client,
+                replicas,
+                active,
             });
             base += entries;
         }
@@ -124,6 +357,7 @@ impl ShardRouter {
             shards,
             metrics,
             tracer: TraceHandle::disabled(),
+            budget: Budget::none(),
         })
     }
 
@@ -194,87 +428,372 @@ impl ShardRouter {
             .collect()
     }
 
+    /// The socket wait for one shard attempt: the shard reply timeout,
+    /// capped against the request budget. Each attempt gets half the
+    /// remaining budget (a stuck replica must leave time to fail over to
+    /// a standby) until the remainder drops under [`BUDGET_FLOOR`], after
+    /// which the tail is spent whole so expiry is actually reached.
+    fn attempt_timeout(&self) -> Result<Duration, ClientError> {
+        match self.budget.remaining(&self.tracer) {
+            None => Ok(SHARD_REPLY_TIMEOUT),
+            Some(rem) if rem < Duration::from_millis(1) => Err(deadline_err()),
+            Some(rem) => {
+                let per = if rem <= BUDGET_FLOOR { rem } else { rem / 2 };
+                Ok(per.min(SHARD_REPLY_TIMEOUT))
+            }
+        }
+    }
+
+    fn budget_expired(&self) -> bool {
+        self.budget.expired(&self.tracer)
+    }
+
+    /// Mutable client of the active replica. Invariant: failure paths
+    /// either switch `active` to a freshly handshaken replica or drop the
+    /// whole request, so the active replica always holds a client.
+    fn active_client(&mut self, si: usize) -> &mut MrtunerClient {
+        let a = self.shards[si].active;
+        // lint: allow(no-panic) — active replica is connected by construction
+        self.shards[si].replicas[a].client.as_mut().expect("active replica is connected")
+    }
+
+    /// Breaker-gate replica `ri` of shard `si`, counting admitted
+    /// half-open probes.
+    fn try_admit_replica(&mut self, si: usize, ri: usize) -> bool {
+        let (admitted, probe) = self.shards[si].replicas[ri].breaker.try_admit();
+        if probe {
+            self.metrics.inc_circuit_probe();
+        }
+        admitted
+    }
+
+    /// The active replica answered: close its breaker.
+    fn ok_active(&mut self, si: usize) {
+        let a = self.shards[si].active;
+        self.shards[si].replicas[a].breaker.record_success();
+    }
+
+    fn fail_active(&mut self, si: usize) {
+        let a = self.shards[si].active;
+        self.fail_replica(si, a);
+    }
+
+    /// Record a transport failure on a replica: drop its client (a failed
+    /// stream is in an unknown state; the next activation reconnects and
+    /// re-handshakes) and trip its breaker bookkeeping.
+    fn fail_replica(&mut self, si: usize, ri: usize) {
+        let rep = &mut self.shards[si].replicas[ri];
+        rep.client = None;
+        if rep.breaker.record_failure() {
+            log::warn!("router: circuit opened for replica {} of shard {si}", rep.addr);
+            self.metrics.inc_circuit_open();
+        }
+    }
+
+    /// Connect (if cold) and handshake replica `ri` of shard `si`, verify
+    /// it serves the same shard geometry as the slot was connected with,
+    /// and make it the active replica. Structured handshake refusals are
+    /// remapped to transport-shaped errors so a `Server` error escaping
+    /// the failover path can only ever be the *request's* answer.
+    fn activate_replica(&mut self, si: usize, ri: usize) -> Result<(), ClientError> {
+        let timeout = self.attempt_timeout()?;
+        let (want_entries, want_apps, want_configs) = {
+            let s = &self.shards[si];
+            (s.entries, s.apps.clone(), s.configs.clone())
+        };
+        let rep = &mut self.shards[si].replicas[ri];
+        let addr = rep.addr.clone();
+        if rep.client.is_none() {
+            rep.client = Some(MrtunerClient::connect_timeout(&addr, SHARD_REPLY_TIMEOUT)?);
+        }
+        let Some(client) = rep.client.as_mut() else {
+            return Err(ClientError::Wire(format!("replica {addr} lost its connection")));
+        };
+        client.set_read_timeout(Some(timeout))?;
+        let info = match client.shard_info() {
+            Ok(info) => info,
+            Err(ClientError::Server(se)) => {
+                return Err(ClientError::Wire(format!(
+                    "replica {addr} refused the handshake: {se}"
+                )))
+            }
+            Err(e) => return Err(e),
+        };
+        if info.entries != want_entries || info.apps != want_apps || info.configs != want_configs {
+            return Err(ClientError::Wire(format!(
+                "replica {addr} serves a different shard geometry \
+                 ({} entries vs {want_entries})",
+                info.entries,
+            )));
+        }
+        self.shards[si].active = ri;
+        Ok(())
+    }
+
+    /// Receive one in-flight reply with the socket wait capped by the
+    /// request budget; an exhausted budget surfaces as the typed
+    /// `deadline_exceeded` error instead of a transport failure.
+    fn recv_budgeted(&mut self, si: usize, id: u64) -> Result<Response, ClientError> {
+        let timeout = match self.attempt_timeout() {
+            Ok(t) => t,
+            Err(e) => {
+                self.active_client(si).forget(id);
+                return Err(e);
+            }
+        };
+        self.active_client(si).set_read_timeout(Some(timeout))?;
+        match self.active_client(si).recv(id) {
+            Err(e) if self.budget_expired() => {
+                log::debug!("router: shard {si} recv outlived the deadline ({e})");
+                Err(deadline_err())
+            }
+            other => other,
+        }
+    }
+
+    /// Full round trip on the active replica under the current budget.
+    fn roundtrip(&mut self, si: usize, req: &Request, span: &Span) -> Result<Response, ClientError> {
+        let wire = self.tracer.wire_trace(span);
+        let id = self.active_client(si).send_traced(req, wire)?;
+        self.recv_budgeted(si, id)
+    }
+
+    /// The active replica failed hard: rotate through the slot's other
+    /// replicas (breaker-gated, each tried at most once, active last as a
+    /// fresh-reconnect last resort), re-handshake + geometry-verify the
+    /// candidate, and run the full round trip there. A structured reply
+    /// from a replica is a healthy shard answering — passed through,
+    /// never failed over around.
+    fn failover_roundtrip(
+        &mut self,
+        si: usize,
+        req: &Request,
+        parent: &Span,
+        mut last: ClientError,
+    ) -> Result<Response, ClientError> {
+        let n = self.shards[si].replicas.len();
+        let start = self.shards[si].active;
+        for attempt in 1..=n {
+            if self.budget_expired() {
+                return Err(deadline_err());
+            }
+            let ri = (start + attempt) % n;
+            if !self.try_admit_replica(si, ri) {
+                continue;
+            }
+            let addr = self.shards[si].replicas[ri].addr.clone();
+            let span = parent.child("failover");
+            span.event("replica", ri as u64);
+            if span.active() {
+                span.note("addr", &addr);
+            }
+            let t0 = self.tracer.now_ns();
+            let result = self
+                .activate_replica(si, ri)
+                .and_then(|()| self.roundtrip(si, req, &span));
+            match result {
+                Ok(resp) => {
+                    log::info!("router: shard {si} failed over to replica {addr}");
+                    self.ok_active(si);
+                    self.metrics.inc_shard_failover();
+                    self.metrics
+                        .record_shard_fanout(si, self.tracer.elapsed_secs(t0));
+                    return Ok(resp);
+                }
+                // `activate_replica` remaps handshake refusals, so this is
+                // the routed request's own structured answer: the replica
+                // is healthy, surface the shard's code (and count the
+                // failover that got us a live backend).
+                Err(ClientError::Server(se)) => {
+                    self.ok_active(si);
+                    if se.code != ErrorCode::DeadlineExceeded {
+                        self.metrics.inc_shard_failover();
+                    }
+                    return Err(ClientError::Server(se));
+                }
+                Err(e) => {
+                    log::debug!("router: shard {si} replica {addr} failed during failover: {e}");
+                    self.fail_replica(si, ri);
+                    last = e;
+                }
+            }
+        }
+        // Raw (unwrapped) so `fan_partial` can still tell transport
+        // failures apart from structured shard answers when degrading.
+        Err(last)
+    }
+
+    /// Resolve one shard's fan-out slot: receive the in-flight reply
+    /// (with one in-place replay on the same replica), or run failover
+    /// recovery when the replica already failed at send time.
+    fn settle(
+        &mut self,
+        si: usize,
+        state: Sent,
+        req: &Request,
+        span: &Span,
+    ) -> Result<Response, ClientError> {
+        let (id, t0) = match state {
+            Sent::Flight { id, t0 } => (id, t0),
+            Sent::NeedsRecovery(e) => return self.failover_roundtrip(si, req, span, e),
+        };
+        match self.recv_budgeted(si, id) {
+            Ok(resp) => {
+                self.ok_active(si);
+                self.metrics
+                    .record_shard_fanout(si, self.tracer.elapsed_secs(t0));
+                Ok(resp)
+            }
+            // A structured error is a healthy shard answering "no": pass
+            // the shard's own code through untranslated (that includes a
+            // spent budget surfacing as deadline_exceeded).
+            Err(ClientError::Server(se)) => {
+                if se.code != ErrorCode::DeadlineExceeded {
+                    self.ok_active(si);
+                }
+                Err(ClientError::Server(se))
+            }
+            // Shards drop connections idle past their CONN_IDLE; the dead
+            // socket usually swallows the write and only recv notices.
+            // Every routed request is idempotent (streams are not routed),
+            // so replay once on a fresh connection to the same replica
+            // before failing over to a standby.
+            Err(ClientError::Io(first)) if req.is_idempotent() && !self.budget_expired() => {
+                self.active_client(si).forget(id);
+                log::debug!("router: shard {si} recv failed ({first}); replaying once");
+                let rspan = span.child("retry");
+                rspan.event("shard", si as u64);
+                self.metrics.inc_shard_retry();
+                // Replay under the same sampling fate as the original
+                // send, so a retried request cannot half-appear in the
+                // stitched trace.
+                match self.roundtrip(si, req, &rspan) {
+                    Ok(resp) => {
+                        self.ok_active(si);
+                        self.metrics
+                            .record_shard_fanout(si, self.tracer.elapsed_secs(t0));
+                        Ok(resp)
+                    }
+                    Err(ClientError::Server(se)) => {
+                        if se.code != ErrorCode::DeadlineExceeded {
+                            self.ok_active(si);
+                        }
+                        Err(ClientError::Server(se))
+                    }
+                    Err(e) => {
+                        drop(rspan);
+                        self.fail_active(si);
+                        self.failover_roundtrip(si, req, span, e)
+                    }
+                }
+            }
+            Err(e) => {
+                self.active_client(si).forget(id);
+                if self.budget_expired() {
+                    return Err(deadline_err());
+                }
+                self.fail_active(si);
+                self.failover_roundtrip(si, req, span, e)
+            }
+        }
+    }
+
     /// Fan one request to `targets` (pipelined: all sends, then all
-    /// receives), returning each shard's reply in target order and timing
-    /// each round trip into the metrics registry. Each shard gets a child
-    /// span of `parent` covering its whole round trip; the span's id is
-    /// stamped into the request envelope's `trace` field so the shard's
-    /// own request tree nests under it. On any failure, every id still in
-    /// flight is [`MrtunerClient::forget`]-gotten so stray replies cannot
-    /// accumulate in client buffers across shard flaps.
+    /// settles), returning each shard's reply in target order. Each shard
+    /// gets a child span of `parent` covering its whole round trip; the
+    /// span's id is stamped into the request envelope's `trace` field so
+    /// the shard's own request tree nests under it. All-or-nothing: any
+    /// shard slot whose recovery fails drops the whole fan-out (in-flight
+    /// ids are [`MrtunerClient::forget`]-gotten so stray replies cannot
+    /// accumulate in client buffers across shard flaps).
     fn fan(
         &mut self,
         targets: &[usize],
         req: &Request,
         parent: &Span,
     ) -> Result<Vec<Response>, ClientError> {
-        let mut sent: Vec<(usize, u64, u64, Span)> = Vec::with_capacity(targets.len());
+        let (replies, _degraded) = self.fan_partial(targets, req, parent, false)?;
+        Ok(replies.into_iter().flatten().collect())
+    }
+
+    /// [`ShardRouter::fan`], optionally degrading: with `allow_partial`,
+    /// a shard slot whose recovery fails yields `None` plus its slot id
+    /// in the degraded list instead of failing the whole fan-out. A spent
+    /// deadline still fails the request (a partial answer you waited too
+    /// long for helps nobody), as does a structured shard error (a
+    /// healthy shard refusing is an answer, not an outage).
+    fn fan_partial(
+        &mut self,
+        targets: &[usize],
+        req: &Request,
+        parent: &Span,
+        allow_partial: bool,
+    ) -> Result<(Vec<Option<Response>>, Vec<usize>), ClientError> {
+        let mut sent: Vec<(usize, Sent, Span)> = Vec::with_capacity(targets.len());
         for &si in targets {
-            let addr = self.shards[si].addr.clone();
             let span = parent.child("shard");
             span.event("shard", si as u64);
-            if span.active() {
-                span.note("addr", &addr);
-            }
-            let t0 = self.tracer.now_ns();
+            let active = self.shards[si].active;
+            let connected = self.shards[si].replicas[active].client.is_some();
             // The envelope's `trace` field carries the sampling fate, not
             // just the span id: a recording span sends its id (shard tree
             // nests under it), a sampled-out fan-out sends the
             // TRACE_SAMPLED_OUT sentinel (shard records nothing), an
             // untraced router sends 0 (shard applies its own policy). This
             // is what keeps router and shards sampling the *same* requests.
-            match self.shards[si].client.send_traced(req, self.tracer.wire_trace(&span)) {
-                Ok(id) => sent.push((si, id, t0, span)),
-                Err(e) => {
-                    for (sj, idj, _, _) in &sent {
-                        self.shards[*sj].client.forget(*idj);
-                    }
-                    return Err(shard_err(&addr, e));
+            let state = if !self.try_admit_replica(si, active) {
+                Sent::NeedsRecovery(ClientError::Wire(format!(
+                    "active replica {} has an open circuit",
+                    self.shards[si].replicas[active].addr,
+                )))
+            } else if !connected {
+                // A previous recovery failed wholesale; reconnect through
+                // the failover path rather than inline in the send fan.
+                Sent::NeedsRecovery(ClientError::Wire(format!(
+                    "active replica {} is disconnected",
+                    self.shards[si].replicas[active].addr,
+                )))
+            } else {
+                if span.active() {
+                    span.note("addr", &self.shards[si].replicas[active].addr.clone());
                 }
-            }
+                let t0 = self.tracer.now_ns();
+                let wire = self.tracer.wire_trace(&span);
+                match self.active_client(si).send_traced(req, wire) {
+                    Ok(id) => Sent::Flight { id, t0 },
+                    Err(e) => {
+                        self.fail_active(si);
+                        Sent::NeedsRecovery(e)
+                    }
+                }
+            };
+            sent.push((si, state, span));
         }
-        let mut replies = Vec::with_capacity(sent.len());
+        let mut replies: Vec<Option<Response>> = Vec::with_capacity(sent.len());
+        let mut degraded: Vec<usize> = Vec::new();
         let mut failed: Option<ClientError> = None;
-        for (si, id, t0, span) in sent {
+        for (si, state, span) in sent {
             if failed.is_some() {
-                self.shards[si].client.forget(id);
+                if let Sent::Flight { id, .. } = state {
+                    self.active_client(si).forget(id);
+                }
                 continue;
             }
-            let addr = self.shards[si].addr.clone();
-            match self.shards[si].client.recv(id) {
-                Ok(resp) => {
-                    self.metrics
-                        .record_shard_fanout(si, self.tracer.elapsed_secs(t0));
-                    replies.push(resp);
+            match self.settle(si, state, req, &span) {
+                Ok(resp) => replies.push(Some(resp)),
+                Err(ClientError::Server(se)) if se.code == ErrorCode::DeadlineExceeded => {
+                    failed = Some(ClientError::Server(se));
                 }
-                // Shards drop connections idle past their CONN_IDLE; the
-                // dead socket usually swallows the write and only recv
-                // notices. Every routed request is idempotent (streams are
-                // not routed), so replay once on a fresh connection before
-                // declaring the shard unavailable.
-                Err(ClientError::Io(first)) if req.is_idempotent() => {
-                    self.shards[si].client.forget(id);
-                    log::debug!("router: shard {addr} recv failed ({first}); replaying once");
-                    span.event("replayed", 1);
-                    // Replay under the same sampling fate as the original
-                    // send, so a retried request cannot half-appear in the
-                    // stitched trace.
-                    let wire = self.tracer.wire_trace(&span);
-                    let replay = match self.shards[si].client.send_traced(req, wire) {
-                        Ok(rid) => self.shards[si].client.recv(rid),
-                        Err(e) => Err(e),
-                    };
-                    match replay {
-                        Ok(resp) => {
-                            self.metrics
-                                .record_shard_fanout(si, self.tracer.elapsed_secs(t0));
-                            replies.push(resp);
-                        }
-                        Err(e) => failed = Some(shard_err(&addr, e)),
-                    }
+                Err(ClientError::Server(se)) => failed = Some(ClientError::Server(se)),
+                Err(e) if allow_partial => {
+                    log::warn!("router: degrading around shard {si}: {e}");
+                    span.event("degraded", 1);
+                    self.metrics.inc_degraded_shard();
+                    degraded.push(si);
+                    replies.push(None);
                 }
                 Err(e) => {
-                    self.shards[si].client.forget(id);
+                    let addr = self.shards[si].addr().to_string();
                     failed = Some(shard_err(&addr, e));
                 }
             }
@@ -282,7 +801,7 @@ impl ShardRouter {
         }
         match failed {
             Some(e) => Err(e),
-            None => Ok(replies),
+            None => Ok((replies, degraded)),
         }
     }
 
@@ -310,6 +829,7 @@ impl ShardRouter {
         KnnBody {
             neighbors: rows,
             stats,
+            degraded: vec![],
         }
     }
 
@@ -324,8 +844,13 @@ impl ShardRouter {
         req: &Request,
         parent: &Span,
     ) -> Result<KnnBatchBody, ClientError> {
-        let (nqueries, k, config) = match req {
-            Request::KnnBatch { queries, k, config } => (queries.len(), *k, config.as_ref()),
+        let (nqueries, k, config, allow_partial) = match req {
+            Request::KnnBatch {
+                queries,
+                k,
+                config,
+                allow_partial,
+            } => (queries.len(), *k, config.as_ref(), *allow_partial),
             _ => {
                 return Err(ClientError::Wire(
                     "route_knn_batch needs a KnnBatch request".to_string(),
@@ -336,25 +861,34 @@ impl ShardRouter {
             Some(cfg) => self.owners(&cfg.label()),
             None => (0..self.shards.len()).collect(),
         };
-        let bodies: Vec<KnnBatchBody> = if targets.is_empty() {
-            Vec::new()
+        let (degraded, live_targets, bodies) = if targets.is_empty() {
+            (Vec::new(), Vec::new(), Vec::new())
         } else {
-            self.fan(&targets, req, parent)?
-                .into_iter()
-                .map(|resp| match resp {
-                    Response::KnnBatch(b) => Ok(b),
-                    other => Err(ClientError::Wire(format!(
-                        "expected knn_batch reply, got {}",
-                        other.type_name()
-                    ))),
-                })
-                .collect::<Result<_, _>>()?
+            let (replies, degraded) = self.fan_partial(&targets, req, parent, allow_partial)?;
+            let mut live_targets = Vec::with_capacity(replies.len());
+            let mut bodies = Vec::with_capacity(replies.len());
+            for (&si, resp) in targets.iter().zip(replies) {
+                let Some(resp) = resp else { continue };
+                match resp {
+                    Response::KnnBatch(b) => {
+                        live_targets.push(si);
+                        bodies.push(b);
+                    }
+                    other => {
+                        return Err(ClientError::Wire(format!(
+                            "expected knn_batch reply, got {}",
+                            other.type_name()
+                        )))
+                    }
+                }
+            }
+            (degraded, live_targets, bodies)
         };
         for (ti, body) in bodies.iter().enumerate() {
             if body.results.len() != nqueries {
                 return Err(ClientError::Wire(format!(
                     "shard {} answered {} results for {nqueries} queries",
-                    self.shards[targets[ti]].addr,
+                    self.shards[live_targets[ti]].addr(),
                     body.results.len(),
                 )));
             }
@@ -363,13 +897,14 @@ impl ShardRouter {
         let mut merged = SearchStats::default();
         for qi in 0..nqueries {
             let per_shard: Vec<&KnnBody> = bodies.iter().map(|b| &b.results[qi]).collect();
-            let row = self.merge_knn(&targets, per_shard, k);
+            let row = self.merge_knn(&live_targets, per_shard, k);
             merged.merge(&row.stats);
             results.push(row);
         }
         Ok(KnnBatchBody {
             results,
             stats: merged,
+            degraded,
         })
     }
 
@@ -385,7 +920,9 @@ impl ShardRouter {
             queries: queries.to_vec(),
             k,
             config: config.copied(),
+            allow_partial: false,
         };
+        self.budget = Budget::none();
         self.route_knn_batch(&req, &Span::none())
     }
 
@@ -401,28 +938,35 @@ impl ShardRouter {
             queries: vec![series.to_vec()],
             k,
             config: config.copied(),
+            allow_partial: false,
         };
+        self.budget = Budget::none();
         let mut batch = self.route_knn_batch(&req, &Span::none())?;
         Ok(batch.results.remove(0))
     }
 
     /// Routed single-query k-NN with fan-out tracing: same single-element
     /// batch as [`ShardRouter::knn`], but per-shard spans nest under
-    /// `parent`.
+    /// `parent`. The single body inherits the batch-level degraded
+    /// annotation (which shard slots the merge survived without).
     fn knn_traced(
         &mut self,
         series: &[f64],
         k: usize,
         config: Option<&JobConfig>,
+        allow_partial: bool,
         parent: &Span,
     ) -> Result<KnnBody, ClientError> {
         let req = Request::KnnBatch {
             queries: vec![series.to_vec()],
             k,
             config: config.copied(),
+            allow_partial,
         };
         let mut batch = self.route_knn_batch(&req, parent)?;
-        Ok(batch.results.remove(0))
+        let mut one = batch.results.remove(0);
+        one.degraded = batch.degraded;
+        Ok(one)
     }
 
     /// Routed matching phase from an already-decoded [`Request::Match`]:
@@ -490,6 +1034,7 @@ impl ShardRouter {
             series: series.to_vec(),
             config: *config,
         };
+        self.budget = Budget::none();
         self.route_match(&req, &Span::none())
     }
 }
@@ -500,7 +1045,7 @@ pub fn dispatch_routed(
     req: &Request,
     router: &Mutex<ShardRouter>,
 ) -> Result<Response, ServerError> {
-    dispatch_routed_traced(req, router, &Span::none())
+    dispatch_routed_deadline(req, router, &Span::none(), None)
 }
 
 /// [`dispatch_routed`] with fan-out tracing: per-command spans (and the
@@ -509,6 +1054,19 @@ pub fn dispatch_routed_traced(
     req: &Request,
     router: &Mutex<ShardRouter>,
     parent: &Span,
+) -> Result<Response, ServerError> {
+    dispatch_routed_deadline(req, router, parent, None)
+}
+
+/// [`dispatch_routed_traced`] under an optional request deadline (the v2
+/// envelope's `deadline_ms`): fan-out socket waits are budgeted against
+/// it and an exhausted budget answers with the typed `deadline_exceeded`
+/// error. `None` is exactly the undeadlined behavior.
+pub fn dispatch_routed_deadline(
+    req: &Request,
+    router: &Mutex<ShardRouter>,
+    parent: &Span,
+    deadline_ms: Option<u64>,
 ) -> Result<Response, ServerError> {
     let to_server = |e: ClientError| match e {
         ClientError::Server(se) => se,
@@ -521,6 +1079,11 @@ pub fn dispatch_routed_traced(
         Ok(guard) => guard,
         Err(_) => return Err(ServerError::new(ErrorCode::Internal, "router lock poisoned")),
     };
+    // Start the budget clock after the lock: time queued behind another
+    // request's fan-out must not eat this request's deadline (routed
+    // dispatch serializes; queueing is scheduling, not fan-out).
+    let budget = Budget::start(&r.tracer, deadline_ms);
+    r.budget = budget;
     match req {
         Request::Ping => Ok(Response::Pong),
         Request::Apps => Ok(Response::Apps(r.apps())),
@@ -531,10 +1094,15 @@ pub fn dispatch_routed_traced(
             live_sessions: 0,
         })),
         Request::Metrics => Ok(Response::Metrics(r.metrics().snapshot())),
-        Request::Knn { series, k, config } => {
+        Request::Knn {
+            series,
+            k,
+            config,
+            allow_partial,
+        } => {
             let span = parent.child("knn");
             span.event("k", *k as u64);
-            r.knn_traced(series, *k, config.as_ref(), &span)
+            r.knn_traced(series, *k, config.as_ref(), *allow_partial, &span)
                 .map(Response::Knn)
                 .map_err(to_server)
         }
@@ -580,9 +1148,13 @@ pub fn route_line(
     let t0 = tracer.timestamp();
     let (wire, decoded) = decode_line(line);
     let t1 = tracer.timestamp();
-    let (remote, key) = match wire {
-        Wire::V2 { trace, id } => (trace, id),
-        Wire::V1 => (0, 0),
+    let (remote, key, deadline_ms) = match wire {
+        Wire::V2 {
+            trace,
+            id,
+            deadline_ms,
+        } => (trace, id, deadline_ms),
+        Wire::V1 => (0, 0, None),
     };
     // Same sampling protocol as `server::handle_line`: the decision made
     // here rides every fan-out envelope (see `ShardRouter::fan`), so the
@@ -600,7 +1172,7 @@ pub fn route_line(
         let handle = root.child("handle");
         decoded.and_then(|req| {
             handle.note("type", req.type_name());
-            dispatch_routed_traced(&req, router, &handle)
+            dispatch_routed_deadline(&req, router, &handle, deadline_ms)
         })
     };
     if let Err(e) = &result {
@@ -727,6 +1299,7 @@ mod tests {
             shards: Vec::new(),
             metrics: Arc::new(Metrics::new()),
             tracer: TraceHandle::disabled(),
+            budget: Budget::none(),
         });
         let err = dispatch_routed(&Request::StreamPollAll { k: 3 }, &router).unwrap_err();
         assert_eq!(err.code, ErrorCode::BadRequest);
@@ -748,27 +1321,23 @@ mod tests {
     #[test]
     fn merge_is_deterministic_on_ties() {
         use crate::protocol::NeighborRow;
+        let shard = |addr: &str, base: usize| Shard {
+            base,
+            entries: 2,
+            apps: vec![],
+            configs: vec![],
+            replicas: vec![Replica {
+                addr: addr.into(),
+                client: Some(unconnected_client()),
+                breaker: Breaker::new(),
+            }],
+            active: 0,
+        };
         let router = ShardRouter {
-            shards: vec![
-                Shard {
-                    addr: "a".into(),
-                    base: 0,
-                    entries: 2,
-                    apps: vec![],
-                    configs: vec![],
-                    client: unconnected_client(),
-                },
-                Shard {
-                    addr: "b".into(),
-                    base: 2,
-                    entries: 2,
-                    apps: vec![],
-                    configs: vec![],
-                    client: unconnected_client(),
-                },
-            ],
+            shards: vec![shard("a", 0), shard("b", 2)],
             metrics: Arc::new(Metrics::new()),
             tracer: TraceHandle::disabled(),
+            budget: Budget::none(),
         };
         let row = |index: usize, distance: f64| NeighborRow {
             index,
@@ -783,14 +1352,78 @@ mod tests {
         let a = KnnBody {
             neighbors: vec![row(0, 0.5), row(1, 1.0)],
             stats: SearchStats::default(),
+            degraded: vec![],
         };
         let b = KnnBody {
             neighbors: vec![row(0, 1.0), row(1, 2.0)],
             stats: SearchStats::default(),
+            degraded: vec![],
         };
         let merged = router.merge_knn(&[0, 1], vec![&a, &b], 3);
         let got: Vec<(usize, f64)> = merged.neighbors.iter().map(|r| (r.index, r.distance)).collect();
         assert_eq!(got, vec![(0, 0.5), (1, 1.0), (2, 1.0)]);
+    }
+
+    #[test]
+    fn breaker_trips_after_consecutive_failures_and_probes_half_open() {
+        let mut b = Breaker::new();
+        assert_eq!(b.state(), BreakerState::Closed);
+        // One short of the threshold keeps it closed; success resets.
+        for _ in 0..BREAKER_THRESHOLD - 1 {
+            assert!(!b.record_failure());
+        }
+        b.record_success();
+        assert_eq!(b.state(), BreakerState::Closed);
+        // The full run of consecutive failures trips it exactly once.
+        let mut trips = 0;
+        for _ in 0..BREAKER_THRESHOLD {
+            if b.record_failure() {
+                trips += 1;
+            }
+        }
+        assert_eq!(trips, 1);
+        assert_eq!(b.state(), BreakerState::Open);
+        // Open skips exactly BREAKER_COOLDOWN - 1 admissions, then admits
+        // a single half-open probe.
+        for _ in 0..BREAKER_COOLDOWN - 1 {
+            assert_eq!(b.try_admit(), (false, false));
+        }
+        assert_eq!(b.try_admit(), (true, true));
+        assert_eq!(b.state(), BreakerState::HalfOpen);
+        // A failed probe re-trips immediately (one failure, not three).
+        assert!(b.record_failure());
+        assert_eq!(b.state(), BreakerState::Open);
+        // A successful probe closes it for good.
+        for _ in 0..BREAKER_COOLDOWN {
+            b.try_admit();
+        }
+        assert_eq!(b.state(), BreakerState::HalfOpen);
+        b.record_success();
+        assert_eq!(b.state(), BreakerState::Closed);
+        assert_eq!(b.try_admit(), (true, false));
+    }
+
+    #[test]
+    fn budget_expires_and_subdivides_attempt_timeouts() {
+        use crate::trace::{InMemoryTracker, VirtualClock};
+        let tracer = TraceHandle::new(
+            std::sync::Arc::new(InMemoryTracker::new()),
+            std::sync::Arc::new(VirtualClock::new(1_000_000)), // 1ms per read
+        );
+        // now_ns reads tick the virtual clock 1ms at a time.
+        let b = Budget::start(&tracer, Some(10));
+        let rem = b.remaining(&tracer).unwrap();
+        assert!(rem <= Duration::from_millis(10));
+        assert!(!b.expired(&tracer));
+        // Nine more reads put us past the 10ms deadline.
+        for _ in 0..9 {
+            tracer.now_ns();
+        }
+        assert!(b.expired(&tracer));
+        // Unbounded budget never expires.
+        let none = Budget::none();
+        assert_eq!(none.remaining(&tracer), None);
+        assert!(!none.expired(&tracer));
     }
 
     /// A client that never connected (test-only: merge logic needs a

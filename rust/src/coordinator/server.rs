@@ -458,7 +458,7 @@ pub fn handle_line(line: &str, state: &ServerState) -> Json {
     let (wire, decoded) = decode_line(line);
     let t1 = state.tracer.timestamp();
     let (remote, key) = match wire {
-        Wire::V2 { trace, id } => (trace, id),
+        Wire::V2 { trace, id, .. } => (trace, id),
         Wire::V1 => (0, 0),
     };
     let root = state.tracer.root_sampled("request", remote, key);
@@ -539,12 +539,12 @@ pub fn dispatch_traced(
             sessions: state.sessions.ids(),
         })),
         Request::Match { series, config } => handle_match(series, config, state),
-        Request::Knn { series, k, config } => {
+        Request::Knn { series, k, config, .. } => {
             let span = parent.child("knn");
             span.event("k", *k as u64);
             handle_knn(series, *k, config.as_ref(), state, &span)
         }
-        Request::KnnBatch { queries, k, config } => {
+        Request::KnnBatch { queries, k, config, .. } => {
             let span = parent.child("knn_batch");
             span.event("queries", queries.len() as u64);
             handle_knn_batch(queries, *k, config.as_ref(), state, &span)
@@ -923,6 +923,7 @@ fn handle_knn(
     Ok(Response::Knn(KnnBody {
         neighbors: rows,
         stats,
+        degraded: vec![],
     }))
 }
 
@@ -957,6 +958,7 @@ fn handle_knn_batch(
             KnnBody {
                 neighbors: neighbors.iter().map(|nb| neighbor_row(state, q, nb)).collect(),
                 stats: *stats,
+                degraded: vec![],
             }
         })
         .collect();
@@ -965,6 +967,7 @@ fn handle_knn_batch(
     Ok(Response::KnnBatch(KnnBatchBody {
         results: rows,
         stats: merged,
+        degraded: vec![],
     }))
 }
 
@@ -1126,6 +1129,7 @@ mod tests {
             series: series.clone(),
             k: 2,
             config: None,
+            allow_partial: false,
         };
         let resp = handle_line(&req.to_v2(7).to_string(), &state);
         assert_eq!(resp.get("v").and_then(Json::as_u64), Some(2));
@@ -1148,6 +1152,7 @@ mod tests {
             series: series.clone(),
             k: 0,
             config: None,
+            allow_partial: false,
         };
         let resp = handle_line(&req.to_v2(1).to_string(), &state);
         assert_eq!(resp.get("ok"), Some(&Json::Bool(true)), "{resp}");
@@ -1159,6 +1164,7 @@ mod tests {
             queries: vec![series.clone(), series],
             k: 0,
             config: None,
+            allow_partial: false,
         };
         let resp = handle_line(&req.to_v2(2).to_string(), &state);
         assert_eq!(resp.get("ok"), Some(&Json::Bool(true)), "{resp}");
@@ -1183,6 +1189,7 @@ mod tests {
                 series: series.clone(),
                 k: 50,
                 config: None,
+                allow_partial: false,
             }
             .to_v2(1)
             .to_string(),
@@ -1423,7 +1430,7 @@ mod tests {
             Arc::new(VirtualClock::new(10)),
         );
         state.recorder = Some(Arc::clone(&recorder));
-        let req = Request::Knn { series: raw_wave(0.2), k: 1, config: None };
+        let req = Request::Knn { series: raw_wave(0.2), k: 1, config: None, allow_partial: false };
         handle_line(&req.to_v2(1).to_string(), &state);
 
         let resp = handle_line(r#"{"v":2,"id":2,"type":"trace_dump"}"#, &state);
@@ -1491,6 +1498,7 @@ mod tests {
             series: raw_wave(0.2),
             k: 1,
             config: None,
+            allow_partial: false,
         };
         let resp = handle_line(&req.to_v2_traced(1, 77).to_string(), &state);
         assert_eq!(resp.get("ok"), Some(&Json::Bool(true)), "{resp}");

@@ -57,6 +57,7 @@ pub mod client;
 pub mod coordinator;
 pub mod database;
 pub mod dtw;
+pub mod faultproxy;
 pub mod index;
 pub mod protocol;
 pub mod runtime;

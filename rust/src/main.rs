@@ -9,14 +9,18 @@
 //! mrtuner serve   --db db.json --port 7071 \
 //!         --shard-of "M=11,R=6,FS=20M,I=30M;M=21,R=30,FS=10M,I=80M"
 //!                                             # serve only those config sets
-//! mrtuner route   --shards 127.0.0.1:7071,127.0.0.1:7072 --port 7070
+//! mrtuner route   --shards "127.0.0.1:7071;127.0.0.1:7072" --port 7070
 //!                                             # route over shard servers
+//! mrtuner route   --shards "127.0.0.1:7071,127.0.0.1:8071;127.0.0.1:7072" \
+//!         --port 7070                         # slot 0 has a standby replica
 //! mrtuner calibrate --app terasort            # re-measure cost model
 //! ```
 //!
 //! `--shard-of` takes `;`-separated configuration-set labels (labels
-//! contain commas); `route --shards` takes a comma-separated address
-//! list whose order defines the composed database's global index space.
+//! contain commas); `route --shards` takes `;`-separated shard slots
+//! whose order defines the composed database's global index space — each
+//! slot is one address or a comma-separated replica set the router fails
+//! over between (all replicas of a slot must serve the same shard data).
 
 use mrtuner::coordinator::metrics::Metrics;
 use mrtuner::coordinator::router::{RouterServer, ShardRouter};
@@ -243,18 +247,28 @@ fn main() -> anyhow::Result<()> {
         }
         Some("route") => {
             let shards_arg = args.opt_str("shards", "");
-            let addrs: Vec<String> = shards_arg
-                .split(',')
-                .map(|s| s.trim().to_string())
-                .filter(|s| !s.is_empty())
+            // `;` separates shard slots (same separator as `--shard-of`),
+            // `,` separates a slot's replicas in failover order.
+            let groups: Vec<Vec<String>> = shards_arg
+                .split(';')
+                .map(|slot| {
+                    slot.split(',')
+                        .map(|s| s.trim().to_string())
+                        .filter(|s| !s.is_empty())
+                        .collect::<Vec<String>>()
+                })
+                .filter(|slot| !slot.is_empty())
                 .collect();
-            if addrs.is_empty() {
-                eprintln!("route: --shards host:port[,host:port...] is required");
+            if groups.is_empty() {
+                eprintln!(
+                    "route: --shards \"host:port[,host:port...][;host:port...]\" is required \
+                     (`;` between shard slots, `,` between a slot's replicas)"
+                );
                 std::process::exit(2);
             }
             let metrics = Arc::new(Metrics::new());
             let (tracer, _recorder, chrome) = build_tracer(&args);
-            let router = match ShardRouter::connect(&addrs, metrics) {
+            let router = match ShardRouter::connect_groups(&groups, metrics) {
                 Ok(r) => r.with_tracer(tracer),
                 Err(e) => {
                     eprintln!("route: {e}");
@@ -262,8 +276,9 @@ fn main() -> anyhow::Result<()> {
                 }
             };
             println!(
-                "routing over {} shards / {} entries",
+                "routing over {} shards ({} replicas) / {} entries",
                 router.shards().len(),
+                groups.iter().map(Vec::len).sum::<usize>(),
                 router.total_entries()
             );
             let port = args.opt::<u16>("port", 7070);
@@ -288,7 +303,7 @@ fn main() -> anyhow::Result<()> {
                 "usage: mrtuner <profile|match|tune|table1|serve|route|calibrate> \
                  [--app NAME] [--grid table1|grid50|small|N] [--db FILE] \
                  [--seed N] [--workers N] [--port N] [--no-runtime] [--no-noise] \
-                 [--shard-of \"LABEL;LABEL...\"] [--shards host:port,host:port] \
+                 [--shard-of \"LABEL;LABEL...\"] [--shards \"host:port[,replica...];host:port\"] \
                  [--no-trace] [--trace FILE] [--trace-sample N] [--flight-spans N]"
             );
         }

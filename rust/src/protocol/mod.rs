@@ -87,11 +87,14 @@ pub enum ErrorCode {
     ShardUnavailable,
     /// Unexpected server-side failure.
     Internal,
+    /// The request's `deadline_ms` budget expired before an answer was
+    /// assembled (fan-out still in flight, or a retry would overrun it).
+    DeadlineExceeded,
 }
 
 impl ErrorCode {
     /// Every code, in metrics-index order.
-    pub const ALL: [ErrorCode; 7] = [
+    pub const ALL: [ErrorCode; 8] = [
         ErrorCode::BadRequest,
         ErrorCode::UnknownCommand,
         ErrorCode::UnknownSession,
@@ -99,6 +102,7 @@ impl ErrorCode {
         ErrorCode::TooLarge,
         ErrorCode::ShardUnavailable,
         ErrorCode::Internal,
+        ErrorCode::DeadlineExceeded,
     ];
 
     /// Stable wire string.
@@ -111,6 +115,7 @@ impl ErrorCode {
             ErrorCode::TooLarge => "too_large",
             ErrorCode::ShardUnavailable => "shard_unavailable",
             ErrorCode::Internal => "internal",
+            ErrorCode::DeadlineExceeded => "deadline_exceeded",
         }
     }
 
@@ -130,6 +135,7 @@ impl ErrorCode {
             ErrorCode::TooLarge => 4,
             ErrorCode::ShardUnavailable => 5,
             ErrorCode::Internal => 6,
+            ErrorCode::DeadlineExceeded => 7,
         }
     }
 }
@@ -178,10 +184,17 @@ pub enum Wire {
     /// Protocol v2 envelope; `id` is echoed into the reply. `trace` is
     /// the optional trace-propagation field (0 when absent): the sender's
     /// span id, recorded by the receiver as its root span's remote
-    /// parent so both sides' trees merge into one timeline. Replies
-    /// never carry it, and requests without it are byte-identical to
-    /// pre-trace traffic.
-    V2 { id: u64, trace: u64 },
+    /// parent so both sides' trees merge into one timeline. `deadline_ms`
+    /// is the optional per-request time budget: the handling side (today
+    /// the router's fan-out) stops waiting once it expires and answers
+    /// [`ErrorCode::DeadlineExceeded`]; absent means no budget — exactly
+    /// today's behavior. Replies never carry either field, and requests
+    /// without them are byte-identical to pre-trace traffic.
+    V2 {
+        id: u64,
+        trace: u64,
+        deadline_ms: Option<u64>,
+    },
 }
 
 /// Decode one request line into its envelope flavor and (if well-formed)
@@ -204,7 +217,12 @@ pub fn decode_line(line: &str) -> (Wire, Result<Request, ServerError>) {
         Some(v) => {
             let id = req.get("id").and_then(Json::as_u64).unwrap_or(0);
             let trace = req.get("trace").and_then(Json::as_u64).unwrap_or(0);
-            let wire = Wire::V2 { id, trace };
+            let deadline_ms = req.get("deadline_ms").and_then(Json::as_u64);
+            let wire = Wire::V2 {
+                id,
+                trace,
+                deadline_ms,
+            };
             if v.as_f64() != Some(PROTOCOL_VERSION as f64) {
                 let err = ServerError::new(
                     ErrorCode::WrongVersion,
@@ -314,19 +332,30 @@ mod tests {
         assert_eq!(req.unwrap(), Request::Ping);
 
         let (wire, req) = decode_line(r#"{"v":2,"id":9,"type":"ping"}"#);
-        assert_eq!(wire, Wire::V2 { id: 9, trace: 0 });
+        assert_eq!(wire, Wire::V2 { id: 9, trace: 0, deadline_ms: None });
         assert_eq!(req.unwrap(), Request::Ping);
 
         let (wire, req) = decode_line(r#"{"v":2,"id":9,"trace":31,"type":"ping"}"#);
-        assert_eq!(wire, Wire::V2 { id: 9, trace: 31 });
+        assert_eq!(wire, Wire::V2 { id: 9, trace: 31, deadline_ms: None });
+        assert_eq!(req.unwrap(), Request::Ping);
+
+        let (wire, req) = decode_line(r#"{"v":2,"deadline_ms":250,"id":9,"type":"ping"}"#);
+        assert_eq!(
+            wire,
+            Wire::V2 {
+                id: 9,
+                trace: 0,
+                deadline_ms: Some(250)
+            }
+        );
         assert_eq!(req.unwrap(), Request::Ping);
 
         let (wire, req) = decode_line(r#"{"v":3,"id":1,"type":"ping"}"#);
-        assert_eq!(wire, Wire::V2 { id: 1, trace: 0 });
+        assert_eq!(wire, Wire::V2 { id: 1, trace: 0, deadline_ms: None });
         assert_eq!(req.unwrap_err().code, ErrorCode::WrongVersion);
 
         let (wire, req) = decode_line(r#"{"v":2,"type":"ping"}"#);
-        assert_eq!(wire, Wire::V2 { id: 0, trace: 0 });
+        assert_eq!(wire, Wire::V2 { id: 0, trace: 0, deadline_ms: None });
         assert_eq!(req.unwrap_err().code, ErrorCode::BadRequest);
 
         let (wire, req) = decode_line("not json at all");
@@ -344,7 +373,7 @@ mod tests {
     #[test]
     fn v2_error_rendering_carries_code_and_id() {
         let err = ServerError::new(ErrorCode::UnknownSession, "unknown session 5");
-        let v = encode_reply(&Wire::V2 { id: 12, trace: 0 }, &Err(err));
+        let v = encode_reply(&Wire::V2 { id: 12, trace: 0, deadline_ms: None }, &Err(err));
         assert_eq!(v.get("v").and_then(Json::as_u64), Some(2));
         assert_eq!(v.get("id").and_then(Json::as_u64), Some(12));
         assert_eq!(v.get("ok"), Some(&Json::Bool(false)));
@@ -356,18 +385,18 @@ mod tests {
     #[test]
     fn reply_roundtrip_ok_and_err() {
         let resp = Response::Pong;
-        let line = encode_reply(&Wire::V2 { id: 4, trace: 0 }, &Ok(resp.clone())).to_string();
+        let line = encode_reply(&Wire::V2 { id: 4, trace: 0, deadline_ms: None }, &Ok(resp.clone())).to_string();
         let (id, back) = decode_reply(&line).unwrap();
         assert_eq!(id, 4);
         assert_eq!(back.unwrap(), resp);
 
         // The trace field influences request decoding only — replies are
         // rendered identically whether or not the request carried one.
-        let traced = encode_reply(&Wire::V2 { id: 4, trace: 88 }, &Ok(resp.clone())).to_string();
+        let traced = encode_reply(&Wire::V2 { id: 4, trace: 88, deadline_ms: None }, &Ok(resp.clone())).to_string();
         assert_eq!(traced, line, "replies never echo the trace field");
 
         let err = ServerError::new(ErrorCode::TooLarge, "batch too large");
-        let line = encode_reply(&Wire::V2 { id: 5, trace: 0 }, &Err(err.clone())).to_string();
+        let line = encode_reply(&Wire::V2 { id: 5, trace: 0, deadline_ms: None }, &Err(err.clone())).to_string();
         let (id, back) = decode_reply(&line).unwrap();
         assert_eq!(id, 5);
         assert_eq!(back.unwrap_err(), err);

@@ -28,16 +28,22 @@ pub enum Request {
     /// one configuration set (the paper's matching phase).
     Match { series: Vec<f64>, config: JobConfig },
     /// Index-backed exact k-NN (whole database, or one config bucket).
+    /// `allow_partial` opts into graceful degradation behind the router:
+    /// results merged from the surviving shard groups (with a `degraded`
+    /// reply annotation) instead of a `shard_unavailable` error. Single
+    /// nodes ignore it — their answer is never partial.
     Knn {
         series: Vec<f64>,
         k: usize,
         config: Option<JobConfig>,
+        allow_partial: bool,
     },
     /// Many k-NN queries answered in one entry-major pass.
     KnnBatch {
         queries: Vec<Vec<f64>>,
         k: usize,
         config: Option<JobConfig>,
+        allow_partial: bool,
     },
     /// Open a live classification session. Options are kept raw here; the
     /// server applies the same clamping rules to both envelope flavors.
@@ -160,6 +166,10 @@ fn parse_queries_field(req: &Json) -> Result<Vec<Vec<f64>>, ServerError> {
     Ok(queries)
 }
 
+fn allow_partial(req: &Json) -> bool {
+    req.get("allow_partial").and_then(Json::as_bool).unwrap_or(false)
+}
+
 fn stream_open_fields(req: &Json) -> Result<Request, ServerError> {
     Ok(Request::StreamOpen {
         config: opt_config(req)?,
@@ -226,11 +236,13 @@ impl Request {
                 series: parse_series_field(req)?,
                 k: k_knn(),
                 config: opt_config(req)?,
+                allow_partial: allow_partial(req),
             }),
             Some("knn_batch") => Ok(Request::KnnBatch {
                 queries: parse_queries_field(req)?,
                 k: k_knn(),
                 config: opt_config(req)?,
+                allow_partial: allow_partial(req),
             }),
             Some("stream_open") => stream_open_fields(req),
             Some("stream_feed") => Ok(Request::StreamFeed {
@@ -307,14 +319,27 @@ impl Request {
                 pairs.push(("series", Json::nums(series)));
                 pairs.push(("config", config_to_json(config)));
             }
-            Request::Knn { series, k, config } => {
+            Request::Knn {
+                series,
+                k,
+                config,
+                allow_partial,
+            } => {
                 pairs.push(("series", Json::nums(series)));
                 pairs.push(("k", Json::Num(*k as f64)));
                 if let Some(c) = config {
                     pairs.push(("config", config_to_json(c)));
                 }
+                if *allow_partial {
+                    pairs.push(("allow_partial", Json::Bool(true)));
+                }
             }
-            Request::KnnBatch { queries, k, config } => {
+            Request::KnnBatch {
+                queries,
+                k,
+                config,
+                allow_partial,
+            } => {
                 pairs.push((
                     "queries",
                     Json::arr(queries.iter().map(|q| Json::nums(q)).collect()),
@@ -322,6 +347,9 @@ impl Request {
                 pairs.push(("k", Json::Num(*k as f64)));
                 if let Some(c) = config {
                     pairs.push(("config", config_to_json(c)));
+                }
+                if *allow_partial {
+                    pairs.push(("allow_partial", Json::Bool(true)));
                 }
             }
             Request::StreamOpen {
@@ -396,21 +424,25 @@ mod tests {
                 series: series(8),
                 k: 3,
                 config: None,
+                allow_partial: false,
             },
             Request::Knn {
                 series: series(8),
                 k: 0,
                 config: Some(cfg),
+                allow_partial: true,
             },
             Request::KnnBatch {
                 queries: vec![series(8), series(12)],
                 k: 5,
                 config: None,
+                allow_partial: false,
             },
             Request::KnnBatch {
                 queries: vec![series(4)],
                 k: 1,
                 config: Some(cfg),
+                allow_partial: true,
             },
             Request::StreamOpen {
                 config: Some(cfg),
@@ -460,6 +492,7 @@ mod tests {
             queries: vec![series(8)],
             k: 2,
             config: None,
+            allow_partial: false,
         };
         // trace = 0 emits nothing: byte-identical to the untraced line.
         assert_eq!(req.to_v2_traced(3, 0).to_string(), req.to_v2(3).to_string());
@@ -469,6 +502,32 @@ mod tests {
         assert!(line.contains(r#""trace":41"#), "{line}");
         let parsed = Json::parse(&line).unwrap();
         assert_eq!(Request::from_v2(&parsed).unwrap(), req);
+    }
+
+    #[test]
+    fn allow_partial_is_optional_and_off_by_default() {
+        // Absent on the wire parses as false, and false emits nothing —
+        // the serialized line is byte-identical to a pre-degradation one.
+        let base = Request::Knn {
+            series: series(8),
+            k: 2,
+            config: None,
+            allow_partial: false,
+        };
+        let line = base.to_v2(1).to_string();
+        assert!(!line.contains("allow_partial"), "{line}");
+        assert_eq!(Request::from_v2(&Json::parse(&line).unwrap()).unwrap(), base);
+
+        // True rides the wire and round-trips.
+        let partial = Request::Knn {
+            series: series(8),
+            k: 2,
+            config: None,
+            allow_partial: true,
+        };
+        let line = partial.to_v2(1).to_string();
+        assert!(line.contains(r#""allow_partial":true"#), "{line}");
+        assert_eq!(Request::from_v2(&Json::parse(&line).unwrap()).unwrap(), partial);
     }
 
     #[test]

@@ -25,18 +25,24 @@ pub struct NeighborRow {
 }
 
 /// One `knn` answer: rows plus the cascade's pruning counters.
+/// `degraded` lists the shard slots whose answers are missing from a
+/// router's `allow_partial` merge — empty (and absent on the wire) for
+/// every full answer, so non-degraded replies stay byte-identical.
 #[derive(Debug, Clone, PartialEq)]
 pub struct KnnBody {
     pub neighbors: Vec<NeighborRow>,
     pub stats: SearchStats,
+    pub degraded: Vec<usize>,
 }
 
 /// One `knn_batch` answer: per-query results (input order) plus merged
-/// counters.
+/// counters. `degraded` as in [`KnnBody`] — one annotation for the whole
+/// batch, since a lost shard affects every query equally.
 #[derive(Debug, Clone, PartialEq)]
 pub struct KnnBatchBody {
     pub results: Vec<KnnBody>,
     pub stats: SearchStats,
+    pub degraded: Vec<usize>,
 }
 
 /// One per-app similarity row of a `match` answer.
@@ -240,14 +246,36 @@ fn neighbor_from_json(v: &Json) -> Result<NeighborRow, String> {
     })
 }
 
+fn degraded_to_json(shards: &[usize]) -> Json {
+    Json::arr(shards.iter().map(|&s| Json::Num(s as f64)).collect())
+}
+
+fn degraded_from_json(v: Option<&Json>) -> Result<Vec<usize>, String> {
+    match v {
+        None => Ok(Vec::new()),
+        Some(arr) => arr
+            .as_arr()
+            .ok_or_else(|| "degraded is not an array".to_string())?
+            .iter()
+            .map(|s| s.as_usize().ok_or_else(|| "bad degraded shard id".to_string()))
+            .collect(),
+    }
+}
+
 fn knn_to_json(b: &KnnBody, with_entry: bool) -> Json {
-    Json::obj(vec![
+    let mut pairs = vec![
         (
             "neighbors",
             Json::arr(b.neighbors.iter().map(|r| neighbor_to_json(r, with_entry)).collect()),
         ),
         ("stats", stats_to_json(&b.stats)),
-    ])
+    ];
+    // Emitted only for a router's partial merge (v2-only surface, like
+    // `entry`): full answers stay byte-identical to pre-degradation ones.
+    if with_entry && !b.degraded.is_empty() {
+        pairs.push(("degraded", degraded_to_json(&b.degraded)));
+    }
+    Json::obj(pairs)
 }
 
 fn knn_from_json(v: &Json) -> Result<KnnBody, String> {
@@ -261,6 +289,7 @@ fn knn_from_json(v: &Json) -> Result<KnnBody, String> {
     Ok(KnnBody {
         neighbors: rows,
         stats: stats_from_json(v.get("stats").ok_or_else(|| "missing stats".to_string())?)?,
+        degraded: degraded_from_json(v.get("degraded"))?,
     })
 }
 
@@ -518,13 +547,19 @@ impl Response {
                     .collect(),
             ),
             Response::Knn(b) => knn_to_json(b, true),
-            Response::KnnBatch(b) => Json::obj(vec![
-                (
-                    "results",
-                    Json::arr(b.results.iter().map(|r| knn_to_json(r, true)).collect()),
-                ),
-                ("stats", stats_to_json(&b.stats)),
-            ]),
+            Response::KnnBatch(b) => {
+                let mut pairs = vec![
+                    (
+                        "results",
+                        Json::arr(b.results.iter().map(|r| knn_to_json(r, true)).collect()),
+                    ),
+                    ("stats", stats_to_json(&b.stats)),
+                ];
+                if !b.degraded.is_empty() {
+                    pairs.push(("degraded", degraded_to_json(&b.degraded)));
+                }
+                Json::obj(pairs)
+            }
             Response::StreamOpened(o) => Json::obj(vec![
                 ("session", Json::Num(o.session as f64)),
                 ("candidates", Json::Num(o.candidates as f64)),
@@ -704,6 +739,7 @@ impl Response {
                     stats: stats_from_json(
                         body.get("stats").ok_or_else(|| "missing stats".to_string())?,
                     )?,
+                    degraded: degraded_from_json(body.get("degraded"))?,
                 }))
             }
             "stream_opened" => Ok(Response::StreamOpened(StreamOpenBody {
@@ -795,6 +831,7 @@ mod tests {
                 },
             ],
             stats: sample_stats(),
+            degraded: vec![],
         };
         vec![
             Response::Pong,
@@ -830,12 +867,23 @@ mod tests {
                 best_similarity: 0.0,
             }),
             Response::Knn(knn.clone()),
+            Response::Knn(KnnBody {
+                degraded: vec![1, 2],
+                ..knn.clone()
+            }),
             Response::KnnBatch(KnnBatchBody {
                 results: vec![knn.clone(), KnnBody {
                     neighbors: vec![],
                     stats: SearchStats::default(),
+                    degraded: vec![],
                 }],
                 stats: sample_stats(),
+                degraded: vec![],
+            }),
+            Response::KnnBatch(KnnBatchBody {
+                results: vec![knn.clone()],
+                stats: sample_stats(),
+                degraded: vec![0],
             }),
             Response::StreamOpened(StreamOpenBody {
                 session: 7,
@@ -962,5 +1010,26 @@ mod tests {
     #[test]
     fn unknown_body_type_is_an_error() {
         assert!(Response::from_body("nope", &Json::obj(vec![])).is_err());
+    }
+
+    #[test]
+    fn degraded_is_absent_unless_partial() {
+        let full = KnnBody {
+            neighbors: vec![],
+            stats: SearchStats::default(),
+            degraded: vec![],
+        };
+        // Empty degraded emits nothing: full answers are byte-identical
+        // to pre-degradation replies (the compatibility guarantee).
+        let line = Response::Knn(full.clone()).to_body_json().to_string();
+        assert!(!line.contains("degraded"), "{line}");
+        // A partial merge carries the lost shard slots, v2 body only.
+        let partial = Response::Knn(KnnBody {
+            degraded: vec![1],
+            ..full
+        });
+        let line = partial.to_body_json().to_string();
+        assert!(line.contains(r#""degraded":[1]"#), "{line}");
+        assert!(!partial.to_v1().to_string().contains("degraded"), "v1 stays legacy");
     }
 }

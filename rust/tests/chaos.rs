@@ -1,0 +1,454 @@
+//! Chaos suite: a 2-shard × 2-replica fleet behind deterministic
+//! [`FaultProxy`](mrtuner::faultproxy::FaultProxy) instances, driven
+//! through scripted fault schedules. Every assertion is on outcomes —
+//! error codes, fault counters, merged result bits — never on elapsed
+//! wall time:
+//!
+//! * full-health proxied fleet answers **bit-identically** to the same
+//!   fleet with no proxies in the path;
+//! * a single replica failure costs **zero** failed idempotent requests
+//!   (failover to the standby, within a request deadline);
+//! * garbled replies are a transport failure, not an answer: failover
+//!   recovers the request;
+//! * `allow_partial` degrades around a dead shard with a correct
+//!   `degraded` annotation and results bit-identical to a single node
+//!   over the surviving union;
+//! * a replica that answers too slowly burns the request's `deadline_ms`
+//!   budget and surfaces the typed `deadline_exceeded` error;
+//! * retries / failovers / circuit transitions are visible in metrics.
+
+use mrtuner::coordinator::metrics::Metrics;
+use mrtuner::coordinator::router::{dispatch_routed, route_line, ShardRouter};
+use mrtuner::coordinator::server::{MatchServer, ServerState};
+use mrtuner::database::profile::ProfileEntry;
+use mrtuner::faultproxy::{Fault, FaultPlan, FaultProxy};
+use mrtuner::index::IndexedDb;
+use mrtuner::protocol::{ErrorCode, KnnBody, Request, Response};
+use mrtuner::simulator::job::JobConfig;
+use mrtuner::streaming::SessionManager;
+use mrtuner::util::json::Json;
+use mrtuner::workloads::AppId;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+fn raw_wave(freq: f64, len: usize) -> Vec<f64> {
+    (0..len)
+        .map(|i| (0.5 + 0.4 * ((i as f64) * freq).sin()).clamp(0.0, 1.0))
+        .collect()
+}
+
+fn entry(app: AppId, cfg: JobConfig, freq: f64, len: usize) -> ProfileEntry {
+    ProfileEntry {
+        app,
+        config: cfg,
+        series: mrtuner::signal::preprocess(&raw_wave(freq, len)),
+        raw_len: len,
+        completion_secs: 100.0,
+    }
+}
+
+/// Two config sets, two apps each — deterministic, so calling it once
+/// per replica yields byte-identical shard databases (that's what makes
+/// two servers *replicas* of the same shard).
+fn shard_dbs() -> (Vec<IndexedDb>, Vec<JobConfig>) {
+    let configs = vec![
+        JobConfig::new(4, 2, 10.0, 20.0),
+        JobConfig::new(8, 4, 20.0, 40.0),
+    ];
+    let mut shards = Vec::new();
+    for (ci, cfg) in configs.iter().enumerate() {
+        let mut db = IndexedDb::new();
+        for (ai, app) in [AppId::WordCount, AppId::TeraSort].into_iter().enumerate() {
+            let freq = 0.15 + 0.11 * (ci * 2 + ai) as f64;
+            let len = 48 + 16 * ci;
+            db.insert(entry(app, *cfg, freq, len));
+        }
+        shards.push(db);
+    }
+    (shards, configs)
+}
+
+fn state_over(db: IndexedDb) -> ServerState {
+    ServerState {
+        db,
+        runtime: None,
+        metrics: Metrics::new(),
+        sessions: SessionManager::new(),
+        tracer: mrtuner::trace::TraceHandle::disabled(),
+        recorder: None,
+    }
+}
+
+struct Server {
+    addr: String,
+    stop: Arc<AtomicBool>,
+    join: std::thread::JoinHandle<anyhow::Result<()>>,
+}
+
+fn spawn_server(db: IndexedDb) -> Server {
+    let server = MatchServer::bind("127.0.0.1:0", state_over(db)).unwrap();
+    let addr = server.local_addr().unwrap().to_string();
+    let stop = server.stop_flag();
+    let join = std::thread::spawn(move || server.serve_with(2, Duration::from_millis(50)));
+    Server { addr, stop, join }
+}
+
+fn shutdown(servers: Vec<Server>) {
+    for s in &servers {
+        s.stop.store(true, Ordering::SeqCst);
+        let _ = std::net::TcpStream::connect(&s.addr);
+    }
+    for s in servers {
+        s.join.join().unwrap().unwrap();
+    }
+}
+
+/// Spawn `replicas` servers per shard slot: `fleet[si][ri]`.
+fn spawn_replicated_fleet(replicas: usize) -> Vec<Vec<Server>> {
+    let nshards = shard_dbs().0.len();
+    (0..nshards)
+        .map(|si| {
+            (0..replicas)
+                .map(|_| {
+                    let (mut dbs, _) = shard_dbs();
+                    spawn_server(dbs.remove(si))
+                })
+                .collect()
+        })
+        .collect()
+}
+
+fn assert_knn_bits_eq(a: &KnnBody, b: &KnnBody, ctx: &str) {
+    assert_eq!(a.neighbors.len(), b.neighbors.len(), "{ctx}: row count");
+    for (x, y) in a.neighbors.iter().zip(&b.neighbors) {
+        assert_eq!(x.index, y.index, "{ctx}: neighbour index");
+        assert_eq!(
+            x.distance.to_bits(),
+            y.distance.to_bits(),
+            "{ctx}: distance bits ({} vs {})",
+            x.distance,
+            y.distance
+        );
+        assert_eq!(x.app, y.app, "{ctx}: app");
+        assert_eq!(x.config, y.config, "{ctx}: config");
+    }
+}
+
+fn queries() -> Vec<Vec<f64>> {
+    vec![
+        raw_wave(0.15, 48),
+        raw_wave(0.7, 100),
+        raw_wave(0.37, 64),
+    ]
+}
+
+#[test]
+fn full_health_proxied_fleet_is_bit_identical_to_direct_fleet() {
+    let fleet = spawn_replicated_fleet(2);
+    let proxies: Vec<Vec<FaultProxy>> = fleet
+        .iter()
+        .map(|slot| {
+            slot.iter()
+                .map(|s| FaultProxy::spawn(&s.addr, FaultPlan::healthy()).unwrap())
+                .collect()
+        })
+        .collect();
+
+    let proxied_groups: Vec<Vec<String>> = proxies
+        .iter()
+        .map(|slot| slot.iter().map(|p| p.addr().to_string()).collect())
+        .collect();
+    let direct_groups: Vec<Vec<String>> = fleet
+        .iter()
+        .map(|slot| slot.iter().map(|s| s.addr.clone()).collect())
+        .collect();
+
+    let pm = Arc::new(Metrics::new());
+    let mut proxied = ShardRouter::connect_groups(&proxied_groups, Arc::clone(&pm)).unwrap();
+    let mut direct =
+        ShardRouter::connect_groups(&direct_groups, Arc::new(Metrics::new())).unwrap();
+
+    for k in [1usize, 2, 4] {
+        let a = proxied.knn_batch(&queries(), k, None).unwrap();
+        let b = direct.knn_batch(&queries(), k, None).unwrap();
+        assert!(a.degraded.is_empty() && b.degraded.is_empty());
+        assert_eq!(a.results.len(), b.results.len());
+        for (qi, (ra, rb)) in a.results.iter().zip(&b.results).enumerate() {
+            assert_knn_bits_eq(ra, rb, &format!("k={k} query {qi}"));
+        }
+    }
+
+    // A healthy fleet records no fault activity at all.
+    assert_eq!(pm.fault_summary(), (0, 0, 0, 0, 0), "healthy fleet stays silent");
+
+    drop(proxied);
+    drop(direct);
+    drop(proxies);
+    shutdown(fleet.into_iter().flatten().collect());
+}
+
+#[test]
+fn replica_failure_fails_over_with_zero_failed_requests() {
+    let fleet = spawn_replicated_fleet(2);
+    // Only shard 0's first replica sits behind a proxy — the one we
+    // will crash. Everything else is direct.
+    let proxy = FaultProxy::spawn(&fleet[0][0].addr, FaultPlan::healthy()).unwrap();
+    let groups = vec![
+        vec![proxy.addr().to_string(), fleet[0][1].addr.clone()],
+        vec![fleet[1][0].addr.clone()],
+    ];
+
+    let metrics = Arc::new(Metrics::new());
+    let mut router = ShardRouter::connect_groups(&groups, Arc::clone(&metrics)).unwrap();
+    let mut direct = ShardRouter::connect_groups(
+        &[vec![fleet[0][1].addr.clone()], vec![fleet[1][0].addr.clone()]],
+        Arc::new(Metrics::new()),
+    )
+    .unwrap();
+    assert_eq!(router.shards()[0].active_replica(), 0);
+
+    // Warm request through the proxy.
+    let warm = router.knn(&queries()[0], 2, None).unwrap();
+    assert_knn_bits_eq(&warm, &direct.knn(&queries()[0], 2, None).unwrap(), "warm");
+
+    // Crash the active replica: sever its live sockets and refuse every
+    // connection from now on.
+    proxy.set_fault(Fault::Refuse);
+    proxy.kill_connections();
+
+    // Zero failed idempotent requests: every k-NN still answers, and
+    // bit-identically to the always-healthy direct fleet.
+    for (i, q) in queries().iter().enumerate() {
+        let got = router.knn(q, 2, None).unwrap();
+        let want = direct.knn(q, 2, None).unwrap();
+        assert_knn_bits_eq(&got, &want, &format!("post-crash query {i}"));
+    }
+    assert_eq!(
+        router.shards()[0].active_replica(),
+        1,
+        "failover promoted the standby"
+    );
+
+    // Failover also completes under a request deadline generous enough
+    // for the reconnect handshake.
+    let line = r#"{"v":2,"id":1,"type":"knn","series":[1,2,3,4],"k":1,"deadline_ms":20000}"#;
+    let rm = Metrics::new();
+    let tracer = mrtuner::trace::TraceHandle::disabled();
+    let mrouter = Mutex::new(router);
+    let resp = route_line(line, &mrouter, &rm, &tracer);
+    assert_eq!(resp.get("ok"), Some(&Json::Bool(true)), "{resp:?}");
+
+    // The recovery is observable: at least one failover, no degradation.
+    let (_retries, failovers, _opens, _probes, degraded) = metrics.fault_summary();
+    assert!(failovers >= 1, "failover counter: {:?}", metrics.fault_summary());
+    assert_eq!(degraded, 0);
+    let snap = metrics.snapshot();
+    let counted = snap
+        .get("fault")
+        .and_then(|f| f.get("failovers"))
+        .and_then(Json::as_f64)
+        .unwrap();
+    assert!(counted >= 1.0, "{snap:?}");
+
+    drop(mrouter);
+    drop(direct);
+    drop(proxy);
+    shutdown(fleet.into_iter().flatten().collect());
+}
+
+#[test]
+fn garbled_replies_trigger_failover_not_wrong_answers() {
+    let fleet = spawn_replicated_fleet(2);
+    let proxy = FaultProxy::spawn(&fleet[0][0].addr, FaultPlan::new(0xC4A0)).unwrap();
+    let groups = vec![
+        vec![proxy.addr().to_string(), fleet[0][1].addr.clone()],
+        vec![fleet[1][0].addr.clone()],
+    ];
+    let metrics = Arc::new(Metrics::new());
+    let mut router = ShardRouter::connect_groups(&groups, Arc::clone(&metrics)).unwrap();
+    let mut direct = ShardRouter::connect_groups(
+        &[vec![fleet[0][1].addr.clone()], vec![fleet[1][0].addr.clone()]],
+        Arc::new(Metrics::new()),
+    )
+    .unwrap();
+
+    // From now on every new proxied connection garbles reply bytes; the
+    // live startup connection is severed so the next request meets the
+    // garbler, whose output can never parse as a protocol reply.
+    proxy.set_fault(Fault::Garble);
+    proxy.kill_connections();
+
+    for (i, q) in queries().iter().enumerate() {
+        let got = router.knn(q, 2, None).unwrap();
+        let want = direct.knn(q, 2, None).unwrap();
+        assert_knn_bits_eq(&got, &want, &format!("post-garble query {i}"));
+    }
+    assert_eq!(router.shards()[0].active_replica(), 1);
+    let (_retries, failovers, _opens, _probes, _degraded) = metrics.fault_summary();
+    assert!(failovers >= 1);
+
+    drop(router);
+    drop(direct);
+    drop(proxy);
+    shutdown(fleet.into_iter().flatten().collect());
+}
+
+#[test]
+fn allow_partial_degrades_and_matches_single_node_over_surviving_union() {
+    // One replica per shard: when shard 1 dies there is nothing to fail
+    // over to, so the request must degrade instead.
+    let fleet = spawn_replicated_fleet(1);
+    let proxy = FaultProxy::spawn(&fleet[1][0].addr, FaultPlan::healthy()).unwrap();
+    let groups = vec![
+        vec![fleet[0][0].addr.clone()],
+        vec![proxy.addr().to_string()],
+    ];
+    let metrics = Arc::new(Metrics::new());
+    let router = ShardRouter::connect_groups(&groups, Arc::clone(&metrics)).unwrap();
+
+    proxy.set_fault(Fault::Refuse);
+    proxy.kill_connections();
+
+    let (dbs, _) = shard_dbs();
+    let surviving = &dbs[0]; // shard 0's base is 0: global indices align.
+    let mrouter = Mutex::new(router);
+
+    for (qi, q) in queries().iter().enumerate() {
+        // Default strict mode: the dead shard fails the whole request.
+        let strict = Request::Knn {
+            series: q.clone(),
+            k: 3,
+            config: None,
+            allow_partial: false,
+        };
+        let err = dispatch_routed(&strict, &mrouter).unwrap_err();
+        assert_eq!(err.code, ErrorCode::ShardUnavailable, "query {qi}: {err}");
+
+        // Partial mode: merged answer over the survivors, annotated.
+        let partial = Request::Knn {
+            series: q.clone(),
+            k: 3,
+            config: None,
+            allow_partial: true,
+        };
+        let body = match dispatch_routed(&partial, &mrouter).unwrap() {
+            Response::Knn(b) => b,
+            other => panic!("{other:?}"),
+        };
+        assert_eq!(body.degraded, vec![1], "query {qi}: degraded annotation");
+
+        let prepared = mrtuner::coordinator::batcher::prepare_query(q);
+        let local = surviving.knn_batch(&[prepared.as_slice()], 3);
+        let (local_nbs, _) = &local[0];
+        assert_eq!(body.neighbors.len(), local_nbs.len(), "query {qi}");
+        for (r, l) in body.neighbors.iter().zip(local_nbs) {
+            assert_eq!(r.index, l.index, "query {qi}: surviving-union index");
+            assert_eq!(
+                r.distance.to_bits(),
+                l.distance.to_bits(),
+                "query {qi}: surviving-union distance bits"
+            );
+        }
+    }
+
+    // Keep hammering the dead slot: the breaker opens after its
+    // consecutive-failure threshold and later admits half-open probes —
+    // all visible in the fault counters, all still answering partially.
+    for _ in 0..8 {
+        let req = Request::Knn {
+            series: queries()[0].clone(),
+            k: 1,
+            config: None,
+            allow_partial: true,
+        };
+        match dispatch_routed(&req, &mrouter).unwrap() {
+            Response::Knn(b) => assert_eq!(b.degraded, vec![1]),
+            other => panic!("{other:?}"),
+        }
+    }
+    let (_retries, _failovers, opens, probes, degraded) = metrics.fault_summary();
+    assert!(opens >= 1, "circuit opened: {:?}", metrics.fault_summary());
+    assert!(probes >= 1, "half-open probes admitted: {:?}", metrics.fault_summary());
+    assert!(degraded as usize >= queries().len(), "{:?}", metrics.fault_summary());
+
+    // The wire surface carries the annotation too (v2 envelope).
+    let rm = Metrics::new();
+    let tracer = mrtuner::trace::TraceHandle::disabled();
+    let resp = route_line(
+        r#"{"v":2,"id":9,"type":"knn","series":[1,2,3,4],"k":1,"allow_partial":true}"#,
+        &mrouter,
+        &rm,
+        &tracer,
+    );
+    assert_eq!(resp.get("ok"), Some(&Json::Bool(true)), "{resp:?}");
+    let degraded_wire = resp.get("degraded").and_then(Json::as_arr).unwrap();
+    assert_eq!(degraded_wire.len(), 1);
+    assert_eq!(degraded_wire[0].as_usize(), Some(1));
+
+    drop(mrouter);
+    drop(proxy);
+    shutdown(fleet.into_iter().flatten().collect());
+}
+
+#[test]
+fn slow_replies_burn_the_deadline_to_a_typed_error() {
+    // Shard 0's only replica answers everything 500ms late — alive, just
+    // far slower than the request's budget. No failover target exists,
+    // so the deadline is the only thing that can end the wait.
+    let fleet = spawn_replicated_fleet(1);
+    let plan = FaultPlan::new(3).with_default(Fault::DelayReplyMs(500));
+    let proxy = FaultProxy::spawn(&fleet[0][0].addr, plan).unwrap();
+    let groups = vec![
+        vec![proxy.addr().to_string()],
+        vec![fleet[1][0].addr.clone()],
+    ];
+    let metrics = Arc::new(Metrics::new());
+    // Startup handshake tolerates the delay (30s read timeout).
+    let router = ShardRouter::connect_groups(&groups, Arc::clone(&metrics)).unwrap();
+    let mrouter = Mutex::new(router);
+
+    let rm = Metrics::new();
+    let tracer = mrtuner::trace::TraceHandle::disabled();
+    let resp = route_line(
+        r#"{"v":2,"id":3,"type":"knn","series":[1,2,3,4],"k":1,"deadline_ms":8}"#,
+        &mrouter,
+        &rm,
+        &tracer,
+    );
+    assert_eq!(resp.get("ok"), Some(&Json::Bool(false)), "{resp:?}");
+    assert_eq!(
+        resp.get("error").and_then(|e| e.get("code")).and_then(Json::as_str),
+        Some("deadline_exceeded"),
+        "{resp:?}"
+    );
+    assert_eq!(rm.proto_error_count(ErrorCode::DeadlineExceeded), 1);
+
+    // allow_partial does not rescue a spent deadline: a partial answer
+    // you waited too long for helps nobody.
+    let resp = route_line(
+        r#"{"v":2,"id":4,"type":"knn","series":[1,2,3,4],"k":1,"deadline_ms":8,"allow_partial":true}"#,
+        &mrouter,
+        &rm,
+        &tracer,
+    );
+    assert_eq!(
+        resp.get("error").and_then(|e| e.get("code")).and_then(Json::as_str),
+        Some("deadline_exceeded"),
+        "{resp:?}"
+    );
+
+    // Without a deadline the same fleet still answers (slowly but
+    // completely) — the fault is latency, not loss.
+    let resp = route_line(
+        r#"{"v":2,"id":5,"type":"knn","series":[1,2,3,4],"k":1}"#,
+        &mrouter,
+        &rm,
+        &tracer,
+    );
+    assert_eq!(resp.get("ok"), Some(&Json::Bool(true)), "{resp:?}");
+
+    drop(mrouter);
+    drop(proxy);
+    shutdown(fleet.into_iter().flatten().collect());
+}

@@ -664,6 +664,7 @@ fn client_pipelines_and_matches_replies_by_id() {
             series: series.clone(),
             k: 1,
             config: None,
+            allow_partial: false,
         })
         .unwrap();
     let id_apps = client.send(&Request::Apps).unwrap();
@@ -774,8 +775,22 @@ fn every_error_code_is_reachable_from_wire_input() {
     let metrics = Arc::new(Metrics::new());
     let addrs = vec![shard_addr.to_string()];
     let router = Mutex::new(ShardRouter::connect(&addrs, Arc::clone(&metrics)).unwrap());
-    shard_shutdown();
     let tracer = mrtuner::trace::TraceHandle::disabled();
+
+    // deadline_exceeded: a zero-millisecond deadline is spent before the
+    // first shard wait, so the budget check answers — deterministically,
+    // while the shard is still alive and well.
+    let resp = route_line(
+        r#"{"v":2,"id":7,"type":"knn","series":[1,2,3,4],"k":1,"deadline_ms":0}"#,
+        &router,
+        &metrics,
+        &tracer,
+    );
+    let got = code_of(resp.to_string());
+    assert_eq!(got, ErrorCode::DeadlineExceeded);
+    seen.push(got);
+
+    shard_shutdown();
     let resp = route_line(
         r#"{"v":2,"id":5,"type":"knn","series":[1,2,3,4],"k":1}"#,
         &router,

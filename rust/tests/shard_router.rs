@@ -267,7 +267,11 @@ fn dead_shard_surfaces_as_shard_unavailable() {
     let (shards, _union, _configs) = partitioned_dbs();
     let fleet = spawn_fleet(shards);
     let metrics = Arc::new(Metrics::new());
-    let router = ShardRouter::connect(&fleet.addrs, metrics).unwrap();
+    let mut router = ShardRouter::connect(&fleet.addrs, Arc::clone(&metrics)).unwrap();
+
+    // Warm fan-out: every shard answers and records a latency sample.
+    router.knn(&raw_wave(0.3, 64), 1, None).unwrap();
+    assert_eq!(metrics.shard_fanout_summary().len(), 3);
 
     // Kill shard 1 out from under the router.
     fleet.stops[1].store(true, Ordering::SeqCst);
@@ -280,6 +284,7 @@ fn dead_shard_surfaces_as_shard_unavailable() {
         series: raw_wave(0.3, 64),
         k: 1,
         config: None,
+        allow_partial: false,
     };
     let err = dispatch_routed(&req, &router).unwrap_err();
     assert_eq!(err.code, mrtuner::protocol::ErrorCode::ShardUnavailable, "{err}");
@@ -295,6 +300,12 @@ fn dead_shard_surfaces_as_shard_unavailable() {
     );
     assert_eq!(m.proto_error_count(mrtuner::protocol::ErrorCode::ShardUnavailable), 1);
 
+    // Strict mode never degrades, and a single-replica slot has nowhere
+    // to fail over to — the fault counters stay at their pre-kill state.
+    let (_retries, failovers, _opens, _probes, degraded) = metrics.fault_summary();
+    assert_eq!(degraded, 0, "strict mode never degrades");
+    assert_eq!(failovers, 0, "single-replica slots have no standby");
+
     // Shards 0 and 2 still need a clean shutdown.
     for i in [0usize, 2] {
         fleet.stops[i].store(true, Ordering::SeqCst);
@@ -303,4 +314,34 @@ fn dead_shard_surfaces_as_shard_unavailable() {
     for j in fleet.joins {
         j.join().unwrap().unwrap();
     }
+}
+
+#[test]
+fn shard_refusals_pass_through_untranslated() {
+    let (shards, _union, _configs) = partitioned_dbs();
+    let fleet = spawn_fleet(shards);
+    let metrics = Arc::new(Metrics::new());
+    let router = ShardRouter::connect(&fleet.addrs, Arc::clone(&metrics)).unwrap();
+    let router = Mutex::new(router);
+
+    // A three-sample query passes the router (typed request, no wire
+    // decode) but every shard refuses it: shorter than the protocol's
+    // four-sample minimum. A refusal is a healthy shard answering — its
+    // own code must come back untranslated, with `shard_unavailable`
+    // reserved for transport failures.
+    let req = Request::Knn {
+        series: vec![0.1, 0.2, 0.3],
+        k: 1,
+        config: None,
+        allow_partial: false,
+    };
+    let err = dispatch_routed(&req, &router).unwrap_err();
+    assert_eq!(err.code, mrtuner::protocol::ErrorCode::BadRequest, "{err}");
+
+    // And no transport fault was recorded: nothing retried, nothing
+    // failed over, no circuit moved, nothing degraded.
+    assert_eq!(metrics.fault_summary(), (0, 0, 0, 0, 0));
+
+    drop(router);
+    fleet.shutdown();
 }

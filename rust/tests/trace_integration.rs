@@ -421,6 +421,7 @@ fn emit_chrome_trace_artifact_when_asked() {
             queries: vec![raw_wave(0.15, 48), raw_wave(0.3, 64)],
             k: 2,
             config: None,
+            allow_partial: false,
         };
         router.route_knn_batch(&req, &batch).unwrap();
     }

@@ -41,6 +41,13 @@
 //!   clock; a raw `Instant::now()` silently escapes that control. Even the
 //!   other `trace/` files (sinks, samplers, recorders) are held to it —
 //!   they take timestamps as parameters.
+//! - `bounded-retry` — a loop in `client/` or `coordinator/router.rs`
+//!   whose body connects (`connect(` / `connect_timeout(` /
+//!   `ensure_connected(` / `reconnect(`) must reference a retry bound — a
+//!   `backoff` or `attempt` token somewhere in the loop. An unbounded
+//!   reconnect loop turns one dead backend into a live-locked caller; the
+//!   bound (or an explicit pragma) forces the author to say why the loop
+//!   terminates.
 //!
 //! Any finding can be silenced with an inline pragma on the same or the
 //! preceding line: `// lint: allow(<rule>)`.
@@ -61,6 +68,9 @@ pub const NO_IO: &str = "no-io";
 /// Rule id: `Instant::now()` only in `trace/clock.rs` and `metrics.rs` —
 /// everyone else reads time through the injected `Clock`.
 pub const NO_RAW_CLOCK: &str = "no-raw-clock";
+/// Rule id: connect/reconnect loops in `client/` and
+/// `coordinator/router.rs` must reference a backoff/attempt bound.
+pub const BOUNDED_RETRY: &str = "bounded-retry";
 
 /// One finding, ready to print as `file:line: [rule] message`.
 #[derive(Debug, Clone, PartialEq, Eq)]
@@ -331,6 +341,36 @@ fn kernel_fn_ranges(code: &str) -> Vec<(usize, usize)> {
     out
 }
 
+/// Byte ranges of loop constructs (`loop` / `while` / `for` keyword
+/// through the matching close brace, header included) — the scan behind
+/// `bounded-retry`. Like `kernel_fn_ranges` this is a keyword heuristic,
+/// not a parse: the first `{` after the keyword is taken as the body.
+fn loop_ranges(code: &str) -> Vec<(usize, usize)> {
+    let b = code.as_bytes();
+    let mut out = Vec::new();
+    for kw in ["loop", "while", "for"] {
+        let mut from = 0;
+        while let Some(p) = code[from..].find(kw) {
+            let at = from + p;
+            from = at + kw.len();
+            let before_ok = at == 0 || !is_ident_byte(b[at - 1]);
+            let after = at + kw.len();
+            let after_ok = after >= b.len() || !is_ident_byte(b[after]);
+            if !before_ok || !after_ok {
+                continue;
+            }
+            let mut k = after;
+            while k < b.len() && b[k] != b'{' && b[k] != b';' {
+                k += 1;
+            }
+            if k < b.len() && b[k] == b'{' {
+                out.push((at, match_brace(b, k)));
+            }
+        }
+    }
+    out
+}
+
 /// Byte span of each line (newline included), for mapping byte ranges to
 /// per-line flags.
 fn line_spans(text: &str) -> Vec<(usize, usize)> {
@@ -486,6 +526,40 @@ pub fn lint_str(rel_path: &str, src: &str) -> Vec<Violation> {
                 "`Instant::now()` outside trace/: read time through the injected `Clock`"
                     .to_string();
             out.push(violation(&path, ln, NO_RAW_CLOCK, msg));
+        }
+    }
+
+    // bounded-retry is a loop-shaped rule, not a line-shaped one: the
+    // connect call and its bound usually sit on different lines, so the
+    // scan runs over whole loop bodies. The finding (and its pragma)
+    // anchor on the loop's own line.
+    let retry_zone = path.starts_with("client/") || path == "coordinator/router.rs";
+    if retry_zone {
+        const CONNECT_TOKENS: [&str; 4] =
+            ["connect(", "connect_timeout(", "ensure_connected(", "reconnect("];
+        for (start, end) in loop_ranges(&masked.code) {
+            let ln = masked.code[..start].matches('\n').count();
+            if is_test.get(ln).copied().unwrap_or(false) {
+                continue;
+            }
+            let body = &masked.code[start..end];
+            if !CONNECT_TOKENS.iter().any(|t| has_token(body, t)) {
+                continue;
+            }
+            if has_token(body, "backoff") || has_token(body, "attempt") {
+                continue;
+            }
+            let comment_line = comment_lines.get(ln).copied().unwrap_or("");
+            let prev_comment = ln
+                .checked_sub(1)
+                .and_then(|p| comment_lines.get(p))
+                .copied()
+                .unwrap_or("");
+            if allows(comment_line, BOUNDED_RETRY) || allows(prev_comment, BOUNDED_RETRY) {
+                continue;
+            }
+            let msg = "reconnect loop without a backoff/attempt bound".to_string();
+            out.push(violation(&path, ln, BOUNDED_RETRY, msg));
         }
     }
     out
@@ -803,6 +877,88 @@ mod tests {
         assert!(vs[0].message.contains("eprintln!"), "{}", vs[0].message);
         let ok = "pub fn warn() {\n    eprintln!(\"x\"); // lint: allow(no-io)\n}\n";
         assert!(lint_str("dtw/mod.rs", ok).is_empty());
+    }
+
+    // ---------- bounded-retry ----------
+
+    #[test]
+    fn bounded_retry_fires_on_unbounded_connect_loops_in_zone() {
+        let bad = concat!(
+            "fn f(addr: &str) {\n",
+            "    loop {\n",
+            "        if TcpStream::connect(addr).is_ok() {\n",
+            "            break;\n        }\n    }\n}\n"
+        );
+        for path in ["client/mod.rs", "coordinator/router.rs"] {
+            let vs = lint_str(path, bad);
+            assert_eq!(rules_of(&vs), vec![BOUNDED_RETRY], "{path}");
+            assert_eq!(vs[0].line, 2, "{path}");
+        }
+        // The same loop elsewhere is someone else's policy.
+        assert!(lint_str("coordinator/matcher.rs", bad).is_empty());
+        assert!(lint_str("faultproxy/mod.rs", bad).is_empty());
+    }
+
+    #[test]
+    fn bounded_retry_covers_each_connect_spelling() {
+        for call in [
+            "TcpStream::connect(addr)",
+            "MrtunerClient::connect_timeout(addr, t)",
+            "self.ensure_connected()",
+            "self.reconnect()",
+        ] {
+            let bad = format!("fn f() {{\n    while alive {{\n        let _ = {call};\n    }}\n}}\n");
+            assert_eq!(rules_of(&lint_str("client/mod.rs", &bad)), vec![BOUNDED_RETRY], "{call}");
+        }
+        // `connection(`-shaped names are not connect calls.
+        let ok = "fn f() {\n    loop {\n        route_connection(s);\n    }\n}\n";
+        assert!(lint_str("coordinator/router.rs", ok).is_empty());
+    }
+
+    #[test]
+    fn bounded_retry_accepts_backoff_or_attempt_bounds() {
+        let attempts = concat!(
+            "fn f() {\n",
+            "    for attempt in 0..3 {\n",
+            "        let _ = TcpStream::connect(addr);\n    }\n}\n"
+        );
+        assert!(lint_str("client/mod.rs", attempts).is_empty());
+        let backoff = concat!(
+            "fn f() {\n",
+            "    loop {\n",
+            "        let _ = self.ensure_connected();\n",
+            "        std::thread::sleep(self.backoff.delay(n));\n    }\n}\n"
+        );
+        assert!(lint_str("client/mod.rs", backoff).is_empty());
+    }
+
+    #[test]
+    fn bounded_retry_pragma_and_tests_are_exempt() {
+        let pragma = concat!(
+            "fn f(group: &[String]) {\n",
+            "    // each replica is tried exactly once\n",
+            "    // lint: allow(bounded-retry)\n",
+            "    for addr in group {\n",
+            "        let _ = TcpStream::connect(addr);\n    }\n}\n"
+        );
+        assert!(lint_str("coordinator/router.rs", pragma).is_empty());
+        let in_test = concat!(
+            "pub fn f() {}\n\n",
+            "#[cfg(test)]\nmod tests {\n",
+            "    fn t() {\n",
+            "        loop {\n",
+            "            let _ = TcpStream::connect(addr);\n        }\n    }\n}\n"
+        );
+        assert!(lint_str("client/mod.rs", in_test).is_empty());
+        // Connect mentions inside strings or comments never make a loop
+        // a reconnect loop.
+        let in_str = concat!(
+            "fn f() {\n",
+            "    loop {\n",
+            "        // connect(addr) would be wrong here\n",
+            "        log(\"connect(later)\");\n        break;\n    }\n}\n"
+        );
+        assert!(lint_str("client/mod.rs", in_str).is_empty());
     }
 
     // ---------- engine plumbing ----------
