@@ -37,6 +37,8 @@ fn spawn_shard(
         metrics: Metrics::new(),
         sessions: mrtuner::streaming::SessionManager::new(),
         tracer: mrtuner::trace::TraceHandle::disabled(),
+        recorder: None,
+        predictors: Default::default(),
     };
     let server = MatchServer::bind("127.0.0.1:0", state).expect("bind shard");
     let addr = server.local_addr().expect("addr").to_string();

@@ -57,6 +57,7 @@ fn main() {
         sessions: mrtuner::streaming::SessionManager::new(),
         tracer: mrtuner::trace::TraceHandle::disabled(),
         recorder: None,
+        predictors: Default::default(),
     };
     let req = Json::obj(vec![
         ("cmd", Json::Str("match".into())),

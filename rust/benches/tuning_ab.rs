@@ -1,0 +1,249 @@
+//! A/B payoff bench (tuning layer): tuned-mid-run vs untuned completion
+//! time — the repo's headline number.
+//!
+//! For each of six synthetic workloads (the five reference applications
+//! at 60 MB plus WordCount at 160 MB) a job is started from the Hadoop
+//! 0.20 default configuration (2 mappers, 1 reducer, 64 MB blocks) and
+//! run twice from the same seed: once untouched, and once under
+//! [`mrtuner::tuning::run_tuned`] — the closed loop that classifies the
+//! live CPU stream against a clean reference database and re-plans the
+//! not-yet-scheduled work under the matched application's grid-searched
+//! optimal once the hysteresis gate is satisfied.
+//!
+//! Acceptance: the tuned run beats the untuned run on >= 4 of the 6
+//! workloads. Results go to stdout and `BENCH_tuning.json` (the perf
+//! trajectory file). `MRTUNER_BENCH_SMOKE=1` shrinks the optimal-search
+//! grid for CI.
+//!
+//! Run with: `cargo bench --bench tuning_ab`
+
+use mrtuner::database::profile::ProfileEntry;
+use mrtuner::database::store::OptimalConfig;
+use mrtuner::index::IndexedDb;
+use mrtuner::signal;
+use mrtuner::signal::noise::NoiseModel;
+use mrtuner::simulator::cluster::ClusterConfig;
+use mrtuner::simulator::engine::simulate;
+use mrtuner::simulator::job::JobConfig;
+use mrtuner::simulator::profile_run;
+use mrtuner::streaming::DecisionPolicy;
+use mrtuner::tuning::{run_tuned, ControllerPolicy};
+use mrtuner::util::json::Json;
+use mrtuner::util::rng::Rng;
+use mrtuner::workloads::{workload_for, AppId};
+use std::time::Instant;
+
+/// Shared profiling configuration for the reference captures (distinct
+/// from both the Hadoop default and any grid optimum, so matching is
+/// doing real work).
+const PROFILE_CFG: JobConfig = JobConfig {
+    mappers: 4,
+    reducers: 2,
+    split_mb: 16.0,
+    input_mb: 60.0,
+};
+
+/// Noise-free completion time of `app` under `cfg`.
+fn measure(app: AppId, cfg: &JobConfig, cluster: &ClusterConfig, seed: u64) -> f64 {
+    let w = workload_for(app);
+    simulate(w.as_ref(), cfg, cluster, &NoiseModel::none(), &mut Rng::new(seed)).completion_secs
+}
+
+/// Grid-search the best (M, R, FS) for `app` at `input_mb` — the paper's
+/// expensive per-reference-app procedure the loop then transfers for
+/// free. The smoke grid is a subset of the full one.
+fn find_optimal(app: AppId, input_mb: f64, cluster: &ClusterConfig, smoke: bool) -> OptimalConfig {
+    let (ms, rs, fss): (&[usize], &[usize], &[f64]) = if smoke {
+        (&[4, 8, 16], &[2, 4, 8], &[8.0, 16.0, 32.0])
+    } else {
+        (&[2, 4, 8, 12, 16, 24, 32], &[1, 2, 4, 8, 12], &[8.0, 16.0, 32.0, 64.0])
+    };
+    let mut best: Option<OptimalConfig> = None;
+    for &m in ms {
+        for &r in rs {
+            for &fs in fss {
+                let cfg = JobConfig::new(m, r, fs, input_mb);
+                let secs = measure(app, &cfg, cluster, 0x7e57);
+                if best.as_ref().map_or(true, |b| secs < b.completion_secs) {
+                    best = Some(OptimalConfig { config: cfg, completion_secs: secs });
+                }
+            }
+        }
+    }
+    best.expect("nonempty grid")
+}
+
+/// Clean reference database: one profiled capture per application under
+/// [`PROFILE_CFG`], plus its grid-searched cached optimal.
+fn reference_db(cluster: &ClusterConfig, smoke: bool) -> IndexedDb {
+    let mut idx = IndexedDb::new();
+    for &app in AppId::all() {
+        let res = profile_run(app, &PROFILE_CFG, &NoiseModel::none(), 21);
+        let raw_len = res.cpu_clean.len();
+        idx.insert(ProfileEntry {
+            app,
+            config: PROFILE_CFG,
+            series: signal::preprocess(&res.cpu_clean),
+            raw_len,
+            completion_secs: res.completion_secs,
+        });
+        let best = find_optimal(app, PROFILE_CFG.input_mb, cluster, smoke);
+        println!(
+            "  optimal for {}: {} ({:.1}s)",
+            app.name(),
+            best.config.label(),
+            best.completion_secs
+        );
+        idx.set_optimal(app, best);
+    }
+    idx
+}
+
+struct AbRow {
+    workload: &'static str,
+    app: AppId,
+    input_mb: f64,
+    untuned_secs: f64,
+    tuned_secs: f64,
+    decided: Option<AppId>,
+    reconfigured_at: Option<f64>,
+    applied: Option<JobConfig>,
+    suppressed_flaps: u64,
+    wall_ms: f64,
+}
+
+impl AbRow {
+    fn speedup(&self) -> f64 {
+        if self.tuned_secs > 0.0 {
+            self.untuned_secs / self.tuned_secs
+        } else {
+            f64::INFINITY
+        }
+    }
+
+    fn won(&self) -> bool {
+        self.tuned_secs < self.untuned_secs
+    }
+}
+
+fn run_scenario(
+    workload: &'static str,
+    app: AppId,
+    input_mb: f64,
+    idx: &IndexedDb,
+    cluster: &ClusterConfig,
+    seed: u64,
+) -> AbRow {
+    // Hadoop 0.20 default: the mis-tuned starting point both runs share.
+    let start = JobConfig::new(2, 1, 64.0, input_mb);
+    let w = workload_for(app);
+    let untuned =
+        simulate(w.as_ref(), &start, cluster, &NoiseModel::none(), &mut Rng::new(seed));
+    let t0 = Instant::now();
+    let tuned = run_tuned(
+        app,
+        &start,
+        cluster,
+        idx,
+        DecisionPolicy::default(),
+        ControllerPolicy::default(),
+        &NoiseModel::none(),
+        seed,
+    );
+    let wall_ms = t0.elapsed().as_secs_f64() * 1e3;
+    AbRow {
+        workload,
+        app,
+        input_mb,
+        untuned_secs: untuned.completion_secs,
+        tuned_secs: tuned.result.completion_secs,
+        decided: tuned.decided_app,
+        reconfigured_at: tuned.reconfigured_at,
+        applied: tuned.applied,
+        suppressed_flaps: tuned.suppressed_flaps,
+        wall_ms,
+    }
+}
+
+fn main() {
+    mrtuner::util::logging::init();
+    let smoke = std::env::var("MRTUNER_BENCH_SMOKE").is_ok();
+    let cluster = ClusterConfig::pseudo_distributed();
+
+    println!("== reference database (clean profiles + grid optima) ==");
+    let idx = reference_db(&cluster, smoke);
+
+    let scenarios: &[(&str, AppId, f64)] = &[
+        ("wordcount", AppId::WordCount, 60.0),
+        ("terasort", AppId::TeraSort, 60.0),
+        ("exim", AppId::EximParse, 60.0),
+        ("grep", AppId::Grep, 60.0),
+        ("invertedindex", AppId::InvertedIndex, 60.0),
+        ("wordcount-xl", AppId::WordCount, 160.0),
+    ];
+
+    println!("== tuned-mid-run vs untuned, Hadoop-default start ==");
+    let mut rows = Vec::new();
+    for (i, &(name, app, input_mb)) in scenarios.iter().enumerate() {
+        let row = run_scenario(name, app, input_mb, &idx, &cluster, 0xab5eed ^ (i as u64));
+        println!(
+            "  {:14} untuned={:7.1}s tuned={:7.1}s speedup={:.2}x decided={} reconf_at={} flaps={} [{}] ({:.1}ms)",
+            row.workload,
+            row.untuned_secs,
+            row.tuned_secs,
+            row.speedup(),
+            row.decided.map_or("-", |a| a.name()),
+            row.reconfigured_at.map_or("-".to_string(), |t| format!("{t:.0}s")),
+            row.suppressed_flaps,
+            if row.won() { "WIN" } else { "loss" },
+            row.wall_ms,
+        );
+        rows.push(row);
+    }
+
+    let wins = rows.iter().filter(|r| r.won()).count();
+    let pass = wins >= 4;
+    println!(
+        "  acceptance: tuned beats untuned on {wins}/{} workloads (need >= 4): {}",
+        rows.len(),
+        if pass { "PASS" } else { "FAIL" }
+    );
+
+    let workload_rows = rows
+        .iter()
+        .map(|r| {
+            let mut pairs = vec![
+                ("workload", Json::Str(r.workload.into())),
+                ("app", Json::Str(r.app.name().into())),
+                ("input_mb", Json::Num(r.input_mb)),
+                ("untuned_secs", Json::Num(r.untuned_secs)),
+                ("tuned_secs", Json::Num(r.tuned_secs)),
+                ("speedup", Json::Num(r.speedup())),
+                ("win", Json::Bool(r.won())),
+                ("suppressed_flaps", Json::Num(r.suppressed_flaps as f64)),
+                ("wall_ms", Json::Num(r.wall_ms)),
+            ];
+            if let Some(a) = r.decided {
+                pairs.push(("decided_app", Json::Str(a.name().into())));
+            }
+            if let Some(t) = r.reconfigured_at {
+                pairs.push(("reconfigured_at_secs", Json::Num(t)));
+            }
+            if let Some(c) = r.applied {
+                pairs.push(("applied", Json::Str(c.label())));
+            }
+            Json::obj(pairs)
+        })
+        .collect();
+
+    let report = Json::obj(vec![
+        ("bench", Json::Str("tuning_ab".into())),
+        ("smoke", Json::Bool(smoke)),
+        ("wins", Json::Num(wins as f64)),
+        ("workloads", Json::Num(rows.len() as f64)),
+        ("pass", Json::Bool(pass)),
+        ("per_workload", Json::arr(workload_rows)),
+    ]);
+    std::fs::write("BENCH_tuning.json", report.to_pretty()).expect("write BENCH_tuning.json");
+    println!("wrote BENCH_tuning.json");
+}

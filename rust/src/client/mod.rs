@@ -24,6 +24,7 @@
 use crate::protocol::{
     decode_reply, ErrorCode, KnnBatchBody, KnnBody, MatchBody, Request, Response, ServerError,
     ShardInfoBody, StatsBody, StreamCloseBody, StreamFeedBody, StreamOpenBody, StreamPollBody,
+    StreamTunedBody,
 };
 use crate::simulator::job::JobConfig;
 use crate::util::rng::Rng;
@@ -560,9 +561,22 @@ impl MrtunerClient {
         session: u64,
         samples: &[f64],
     ) -> Result<StreamFeedBody, ClientError> {
+        self.stream_feed_progress(session, samples, None)
+    }
+
+    /// [`MrtunerClient::stream_feed`] reporting the producing job's
+    /// completed fraction alongside the samples, so the server's
+    /// final-length predictor can tighten the session's geometry.
+    pub fn stream_feed_progress(
+        &mut self,
+        session: u64,
+        samples: &[f64],
+        progress: Option<f64>,
+    ) -> Result<StreamFeedBody, ClientError> {
         let req = Request::StreamFeed {
             session,
             samples: samples.to_vec(),
+            progress,
         };
         match self.call(&req)? {
             Response::StreamFed(b) => Ok(b),
@@ -583,6 +597,16 @@ impl MrtunerClient {
         match self.call(&Request::StreamClose { session })? {
             Response::StreamClosed(b) => Ok(b),
             other => Err(Self::unexpected("stream_closed", &other)),
+        }
+    }
+
+    /// Tuning advice for a live session: its current match and the
+    /// matched application's cached optimal configuration, if any.
+    /// Read-only on the server, so it retries transparently.
+    pub fn stream_tune(&mut self, session: u64) -> Result<StreamTunedBody, ClientError> {
+        match self.call(&Request::StreamTune { session })? {
+            Response::StreamTuned(b) => Ok(b),
+            other => Err(Self::unexpected("stream_tuned", &other)),
         }
     }
 }

@@ -76,6 +76,18 @@ pub struct Metrics {
     pub circuit_opens: AtomicU64,
     pub circuit_probes: AtomicU64,
     pub degraded_shards: AtomicU64,
+    /// Self-tuning counters: predictor observations folded in from
+    /// `stream_feed` progress reports, final-length hints actually applied
+    /// to a session (split by [`crate::streaming::FinalLen`] variant),
+    /// `stream_tune` recommendations served, and — for embedded
+    /// controllers reporting back — live reconfigurations applied and
+    /// flapping votes the hysteresis gate suppressed.
+    pub tuning_predictor_updates: AtomicU64,
+    pub tuning_hints_known: AtomicU64,
+    pub tuning_hints_at_most: AtomicU64,
+    pub tuning_tunes_served: AtomicU64,
+    pub tuning_reconfigs: AtomicU64,
+    pub tuning_suppressed_flaps: AtomicU64,
     /// Wall-clock of each whole batch (not per query).
     knn_batch_latency: Mutex<LatencyTrack>,
     latency: Mutex<LatencyTrack>,
@@ -297,6 +309,50 @@ impl Metrics {
         )
     }
 
+    /// Count one predictor update folded in from a `stream_feed`
+    /// progress report.
+    pub fn inc_tuning_predictor_update(&self) {
+        self.tuning_predictor_updates.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Count one `FinalLen::Known` hint applied to a live session.
+    pub fn inc_tuning_hint_known(&self) {
+        self.tuning_hints_known.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Count one `FinalLen::AtMost` hint applied to a live session.
+    pub fn inc_tuning_hint_at_most(&self) {
+        self.tuning_hints_at_most.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Count one `stream_tune` recommendation served.
+    pub fn inc_tuning_tune_served(&self) {
+        self.tuning_tunes_served.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Count one live reconfiguration a controller actually applied.
+    pub fn inc_tuning_reconfig(&self) {
+        self.tuning_reconfigs.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Fold in flapping votes a controller's hysteresis gate suppressed.
+    pub fn add_tuning_suppressed(&self, n: u64) {
+        self.tuning_suppressed_flaps.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Snapshot: (predictor_updates, hints_known, hints_at_most,
+    /// tunes_served, reconfigs, suppressed_flaps).
+    pub fn tuning_summary(&self) -> (u64, u64, u64, u64, u64, u64) {
+        (
+            self.tuning_predictor_updates.load(Ordering::Relaxed),
+            self.tuning_hints_known.load(Ordering::Relaxed),
+            self.tuning_hints_at_most.load(Ordering::Relaxed),
+            self.tuning_tunes_served.load(Ordering::Relaxed),
+            self.tuning_reconfigs.load(Ordering::Relaxed),
+            self.tuning_suppressed_flaps.load(Ordering::Relaxed),
+        )
+    }
+
     /// Record one shard's fan-out round trip (send → reply merged).
     pub fn record_shard_fanout(&self, shard: usize, seconds: f64) {
         self.shard_fanout
@@ -408,8 +464,16 @@ impl Metrics {
         } else {
             String::new()
         };
+        let (t_upd, t_known, t_at_most, t_served, t_reconf, t_flaps) = self.tuning_summary();
+        let tuning = if t_upd + t_known + t_at_most + t_served + t_reconf + t_flaps > 0 {
+            format!(
+                " tuning: predictor_updates={t_upd} hints_known={t_known} hints_at_most={t_at_most} tunes_served={t_served} reconfigs={t_reconf} suppressed_flaps={t_flaps}"
+            )
+        } else {
+            String::new()
+        };
         format!(
-            "requests={} comparisons={} batches={} errors={} pool_panics={} latency: n={} mean={:.1}ms sd={:.1}ms min={:.1}ms max={:.1}ms p50={:.1}ms p95={:.1}ms p99={:.1}ms index: {} knn_batch: n={} queries={} mean={:.1}ms p50={:.1}ms p95={:.1}ms p99={:.1}ms stream: opened={} closed={} reaped={} batches={} culled={} decisions={} mean_at={:.0} mean_frac={:.2}{trace}{fault}{proto}{fanout}",
+            "requests={} comparisons={} batches={} errors={} pool_panics={} latency: n={} mean={:.1}ms sd={:.1}ms min={:.1}ms max={:.1}ms p50={:.1}ms p95={:.1}ms p99={:.1}ms index: {} knn_batch: n={} queries={} mean={:.1}ms p50={:.1}ms p95={:.1}ms p99={:.1}ms stream: opened={} closed={} reaped={} batches={} culled={} decisions={} mean_at={:.0} mean_frac={:.2}{trace}{fault}{tuning}{proto}{fanout}",
             self.requests.load(Ordering::Relaxed),
             self.comparisons.load(Ordering::Relaxed),
             self.batches.load(Ordering::Relaxed),
@@ -544,6 +608,29 @@ impl Metrics {
                     ("circuit_opens", Json::Num(self.circuit_opens.load(Ordering::Relaxed) as f64)),
                     ("circuit_probes", Json::Num(self.circuit_probes.load(Ordering::Relaxed) as f64)),
                     ("degraded_shards", Json::Num(self.degraded_shards.load(Ordering::Relaxed) as f64)),
+                ]),
+            ),
+            (
+                "tuning",
+                Json::obj(vec![
+                    (
+                        "predictor_updates",
+                        Json::Num(self.tuning_predictor_updates.load(Ordering::Relaxed) as f64),
+                    ),
+                    ("hints_known", Json::Num(self.tuning_hints_known.load(Ordering::Relaxed) as f64)),
+                    (
+                        "hints_at_most",
+                        Json::Num(self.tuning_hints_at_most.load(Ordering::Relaxed) as f64),
+                    ),
+                    (
+                        "tunes_served",
+                        Json::Num(self.tuning_tunes_served.load(Ordering::Relaxed) as f64),
+                    ),
+                    ("reconfigs", Json::Num(self.tuning_reconfigs.load(Ordering::Relaxed) as f64)),
+                    (
+                        "suppressed_flaps",
+                        Json::Num(self.tuning_suppressed_flaps.load(Ordering::Relaxed) as f64),
+                    ),
                 ]),
             ),
             ("proto_errors", Json::obj(proto)),
@@ -733,6 +820,13 @@ mod tests {
         m.inc_spans_recorded();
         m.inc_spans_sampled_out();
         m.set_recorder_stats(5, 3);
+        m.inc_tuning_predictor_update();
+        m.inc_tuning_predictor_update();
+        m.inc_tuning_hint_known();
+        m.inc_tuning_hint_at_most();
+        m.inc_tuning_tune_served();
+        m.inc_tuning_reconfig();
+        m.add_tuning_suppressed(3);
         // Through the serializer, like the real wire path.
         let snap = crate::util::json::Json::parse(&m.snapshot().to_string()).unwrap();
         let num = |path: &[&str]| -> f64 {
@@ -765,6 +859,12 @@ mod tests {
         assert_eq!(num(&["fault", "circuit_opens"]), 1.0);
         assert_eq!(num(&["fault", "circuit_probes"]), 1.0);
         assert_eq!(num(&["fault", "degraded_shards"]), 1.0);
+        assert_eq!(num(&["tuning", "predictor_updates"]), 2.0);
+        assert_eq!(num(&["tuning", "hints_known"]), 1.0);
+        assert_eq!(num(&["tuning", "hints_at_most"]), 1.0);
+        assert_eq!(num(&["tuning", "tunes_served"]), 1.0);
+        assert_eq!(num(&["tuning", "reconfigs"]), 1.0);
+        assert_eq!(num(&["tuning", "suppressed_flaps"]), 3.0);
         let fanout = snap.get("fanout").and_then(crate::util::json::Json::as_arr).unwrap();
         assert_eq!(fanout.len(), 1);
         assert_eq!(fanout[0].get("shard").and_then(crate::util::json::Json::as_f64), Some(1.0));
@@ -815,6 +915,27 @@ mod tests {
         let r = m.report();
         assert!(
             r.contains("fault: retries=2 failovers=1 circuit_opens=1 circuit_probes=1 degraded=1"),
+            "{r}"
+        );
+    }
+
+    #[test]
+    fn tuning_counters_accumulate_and_stay_silent_at_zero() {
+        let m = Metrics::new();
+        assert!(!m.report().contains("tuning:"), "{}", m.report());
+        m.inc_tuning_predictor_update();
+        m.inc_tuning_predictor_update();
+        m.inc_tuning_hint_known();
+        m.inc_tuning_hint_at_most();
+        m.inc_tuning_tune_served();
+        m.inc_tuning_reconfig();
+        m.add_tuning_suppressed(2);
+        assert_eq!(m.tuning_summary(), (2, 1, 1, 1, 1, 2));
+        let r = m.report();
+        assert!(
+            r.contains(
+                "tuning: predictor_updates=2 hints_known=1 hints_at_most=1 tunes_served=1 reconfigs=1 suppressed_flaps=2"
+            ),
             "{r}"
         );
     }

@@ -1125,7 +1125,8 @@ pub fn dispatch_routed_deadline(
         | Request::StreamFeed { .. }
         | Request::StreamPoll { .. }
         | Request::StreamPollAll { .. }
-        | Request::StreamClose { .. } => Err(ServerError::bad_request(
+        | Request::StreamClose { .. }
+        | Request::StreamTune { .. } => Err(ServerError::bad_request(
             "stream sessions are not routed; open them against the shard owning the config set",
         )),
         // Each flight recorder is process-local forensics; a merged dump

@@ -23,10 +23,11 @@
 //!   {"cmd": "knn_batch", "queries": [[..], ..], "k": K[, "config": {..}]}
 //!   {"cmd": "stream_open"[, "config": {..}][, "final_len": N][, "max_len": N]
 //!    [, "min_fraction": F][, "margin": M][, "min_samples": S]}
-//!   {"cmd": "stream_feed", "session": ID, "samples": [..]}
+//!   {"cmd": "stream_feed", "session": ID, "samples": [..][, "progress": P]}
 //!   {"cmd": "stream_poll", "session": ID[, "k": K]}
 //!   {"cmd": "stream_poll_all"[, "k": K]}
 //!   {"cmd": "stream_close", "session": ID}
+//!   {"cmd": "stream_tune", "session": ID}
 //!
 //! The `match` request carries a *raw* captured CPU series (what a real
 //! deployment's SysStat agent would send); the server preprocesses it,
@@ -58,7 +59,15 @@
 //! early decision the moment the session's exit policy declares one),
 //! `stream_poll` returns the current top-k without feeding, and
 //! `stream_close` finalizes with the exact indexed search over the full
-//! capture. Sessions are addressed by id, not by connection: they survive
+//! capture. A feed may carry the producing job's completed fraction as
+//! `progress`; the server runs a per-session
+//! [`crate::tuning::LengthPredictor`] over those reports and tightens the
+//! session's final-length geometry (`StreamSession::set_final_len`) as
+//! the prediction band narrows. `stream_tune` answers the closed-loop
+//! question — the session's current match (frozen decision or anytime
+//! leader) plus the matched application's *cached* optimal configuration
+//! (`IndexedDb::optimal`); it never grid-searches, so it is cheap enough
+//! to poll every tick. Sessions are addressed by id, not by connection: they survive
 //! reconnects, so a feeder may open on one TCP connection and feed, poll
 //! or close from another. Because live streams hold their connection open
 //! for the whole job, the read loop tolerates idle timeouts instead of
@@ -80,21 +89,23 @@ use crate::protocol::{
     decode_line, encode_reply, DecisionBody, ErrorCode, FinalBody, KnnBatchBody, KnnBody,
     MatchBody, MatchRow, NeighborRow, Request, Response, ServerError, SessionPollBody,
     ShardInfoBody, StatsBody, StreamCloseBody, StreamFeedBody, StreamOpenBody, StreamPollBody,
-    TopRow, Wire,
+    StreamTunedBody, TopRow, Wire,
 };
 use crate::runtime::RuntimeHandle;
 use crate::streaming::{
     DecisionPolicy, FinalLen, SessionManager, StreamDecision, StreamSession, TopEntry,
-    MAX_STREAM_LEN,
+    MAX_RETAINED, MAX_STREAM_LEN,
 };
 use crate::trace::{FlightRecorder, Span, TraceHandle};
+use crate::tuning::LengthPredictor;
 use crate::util::json::Json;
 use crate::util::pool::{default_workers, PanicHook, ThreadPool};
 use anyhow::{anyhow, Result};
+use std::collections::HashMap;
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex, MutexGuard};
 use std::time::Duration;
 
 /// Per-connection read timeout: the cadence at which blocked readers
@@ -137,6 +148,22 @@ pub struct ServerState {
     /// tracer's fan-out ([`crate::trace::MultiTracker`]); kept here too so
     /// the dispatch layer can snapshot it. `None` when tracing is off.
     pub recorder: Option<Arc<FlightRecorder>>,
+    /// Per-session final-length predictors, fed by `stream_feed` lines
+    /// that carry a `progress` fraction. Kept beside (not inside) the
+    /// session registry: the streaming layer stays a pure classifier and
+    /// the tuning loop composes on top. Entries die with their session
+    /// (close or reap). `Default::default()` — an empty map — is always a
+    /// correct initial value.
+    pub predictors: Mutex<HashMap<u64, LengthPredictor>>,
+}
+
+/// The predictor map, recovered even if a panicking holder poisoned it —
+/// a predictor in an odd state can only mis-hint, never corrupt results.
+fn predictor_map(state: &ServerState) -> MutexGuard<'_, HashMap<u64, LengthPredictor>> {
+    match state.predictors.lock() {
+        Ok(g) => g,
+        Err(poisoned) => poisoned.into_inner(),
+    }
 }
 
 /// The TCP server.
@@ -569,11 +596,15 @@ pub fn dispatch_traced(
                 &span,
             )
         }
-        Request::StreamFeed { session, samples } => {
+        Request::StreamFeed {
+            session,
+            samples,
+            progress,
+        } => {
             let span = parent.child("stream_feed");
             span.event("session", *session);
             span.event("samples", samples.len() as u64);
-            handle_stream_feed(*session, samples, state, &span)
+            handle_stream_feed(*session, samples, *progress, state, &span)
         }
         Request::StreamPoll { session, k } => handle_stream_poll(*session, *k, state),
         Request::StreamPollAll { k } => handle_stream_poll_all(*k, state),
@@ -581,6 +612,11 @@ pub fn dispatch_traced(
             let span = parent.child("stream_close");
             span.event("session", *session);
             handle_stream_close(*session, state, &span)
+        }
+        Request::StreamTune { session } => {
+            let span = parent.child("stream_tune");
+            span.event("session", *session);
+            handle_stream_tune(*session, state, &span)
         }
     }
 }
@@ -645,11 +681,14 @@ fn dump_recorder_on_error(state: &ServerState) {
 }
 
 /// Sweep sessions abandoned by dead clients into the metrics counters.
+/// Their final-length predictors die with them.
 fn reap_sessions(state: &ServerState) {
     let reaped = state.sessions.reap_idle(SESSION_IDLE);
     if reaped > 0 {
         state.metrics.add_stream_reaped(reaped as u64);
         log::debug!("reaped {reaped} idle stream sessions");
+        let live: std::collections::HashSet<u64> = state.sessions.ids().into_iter().collect();
+        predictor_map(state).retain(|id, _| live.contains(id));
     }
 }
 
@@ -692,11 +731,13 @@ fn handle_stream_open(
     // Every open sweeps stale sessions, so open-and-abandon clients cannot
     // grow the registry even when no connection ever sits idle.
     reap_sessions(state);
-    // A Known hint beyond the incremental cap only wastes DP width and
-    // disables the fraction gate; clamp it like max_len.
+    // Sessions decimate past the 512-sample resample cap, so length hints
+    // are honoured up to the retention cap; anything beyond it would
+    // never be observed anyway. The *default* expectation stays at the
+    // incremental cap — short jobs decide fastest against it.
     let final_len = match final_len {
-        Some(n) if n > 0 => FinalLen::Known(n.min(MAX_STREAM_LEN)),
-        _ => FinalLen::AtMost(max_len.unwrap_or(MAX_STREAM_LEN).clamp(1, MAX_STREAM_LEN)),
+        Some(n) if n > 0 => FinalLen::Known(n.min(MAX_RETAINED)),
+        _ => FinalLen::AtMost(max_len.unwrap_or(MAX_STREAM_LEN).clamp(1, MAX_RETAINED)),
     };
     let mut policy = DecisionPolicy::default();
     if let Some(f) = min_fraction {
@@ -727,10 +768,15 @@ fn handle_stream_open(
     }))
 }
 
-/// Feed one batch of raw CPU samples into a live session.
+/// Feed one batch of raw CPU samples into a live session. When the feed
+/// carries a `progress` fraction, the session's final-length predictor
+/// observes it and any refined hint is pushed into the session before the
+/// batch is classified — so the tightened geometry benefits this very
+/// batch's bounds.
 fn handle_stream_feed(
     id: u64,
     samples: &[f64],
+    progress: Option<f64>,
     state: &ServerState,
     span: &Span,
 ) -> Result<Response, ServerError> {
@@ -741,6 +787,32 @@ fn handle_stream_feed(
             // a stream renders as one long bar with its feeds inside.
             let feed = sspan.child("feed");
             feed.event("samples", samples.len() as u64);
+            if let Some(p) = progress {
+                // Elapsed = raw samples observed once this batch lands;
+                // the predictor extrapolates the final capture length.
+                let elapsed = (s.observed() + samples.len()) as f64;
+                let hint = {
+                    let mut map = predictor_map(state);
+                    let pred = map.entry(id).or_default();
+                    pred.observe(p, elapsed);
+                    pred.final_len_hint(MAX_RETAINED)
+                };
+                state.metrics.inc_tuning_predictor_update();
+                if let Some(hint) = hint {
+                    let tspan = feed.child("tuning_hint");
+                    match hint {
+                        FinalLen::Known(n) => {
+                            tspan.event("known", n as u64);
+                            state.metrics.inc_tuning_hint_known();
+                        }
+                        FinalLen::AtMost(n) => {
+                            tspan.event("at_most", n as u64);
+                            state.metrics.inc_tuning_hint_at_most();
+                        }
+                    }
+                    s.set_final_len(&state.db, hint);
+                }
+            }
             let had = s.decision().is_some();
             s.push(&state.db, samples);
             let d = s.decision().cloned();
@@ -821,6 +893,7 @@ fn handle_stream_close(
     span: &Span,
 ) -> Result<Response, ServerError> {
     let session = state.sessions.close(id).map_err(session_err)?;
+    predictor_map(state).remove(&id);
     state.metrics.inc_stream_closed();
     state.metrics.record_stream_session(&session.stats());
     let finalize = span.child("finalize");
@@ -847,6 +920,49 @@ fn handle_stream_close(
         observed: session.observed(),
         final_match,
         decision: session.decision().map(decision_body),
+    }))
+}
+
+/// Tuning advice for a live session: the current match — frozen decision
+/// if the session has one, anytime top-1 otherwise — joined with the
+/// matched application's *cached* optimal configuration. Read-only and
+/// cheap: the expensive grid search happened when the reference was
+/// profiled (`Tuner::find_optimal`); this only looks the result up, so a
+/// live controller can poll it every tick.
+fn handle_stream_tune(id: u64, state: &ServerState, span: &Span) -> Result<Response, ServerError> {
+    let (decided, app, similarity, fraction) = state
+        .sessions
+        .with_span(id, |s, sspan| {
+            let tspan = sspan.child("tuning_serve");
+            match s.decision() {
+                Some(d) => {
+                    tspan.event("decided_at", d.at_sample as u64);
+                    (true, Some(d.app), Some(d.similarity), Some(d.fraction))
+                }
+                None => {
+                    let leader = s.top(&state.db, 1).first().map(|t| t.app);
+                    (false, leader, None, None)
+                }
+            }
+        })
+        .map_err(session_err)?;
+    let (optimal, optimal_secs) = match app.and_then(|a| state.db.optimal(a)) {
+        Some(o) => (Some(o.config), Some(o.completion_secs)),
+        None => (None, None),
+    };
+    state.metrics.inc_tuning_tune_served();
+    if let Some(a) = app {
+        span.note("app", a.name());
+    }
+    span.event("has_optimal", optimal.is_some() as u64);
+    Ok(Response::StreamTuned(StreamTunedBody {
+        session: id,
+        decided,
+        app: app.map(|a| a.name().to_string()),
+        similarity,
+        optimal,
+        optimal_secs,
+        fraction,
     }))
 }
 
@@ -1042,6 +1158,7 @@ mod tests {
             sessions: SessionManager::new(),
             tracer: TraceHandle::disabled(),
             recorder: None,
+            predictors: Default::default(),
         }
     }
 

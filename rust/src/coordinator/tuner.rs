@@ -28,12 +28,15 @@ pub struct TuningReport {
 }
 
 impl TuningReport {
-    /// Default-time / tuned-time (>1 means the transfer helped).
+    /// Default-time / tuned-time (>1 means the transfer helped). A
+    /// non-positive tuned time cannot be folded into "no change": it means
+    /// the tuned run took no measurable time at all, so the ratio is
+    /// reported as infinite and callers can tell the two cases apart.
     pub fn speedup(&self) -> f64 {
         if self.tuned_secs > 0.0 {
             self.default_secs / self.tuned_secs
         } else {
-            1.0
+            f64::INFINITY
         }
     }
 }
@@ -197,6 +200,21 @@ mod tests {
         let report = t.tune(AppId::Grep, &outcome, &mut db);
         assert!(report.transferred.is_none());
         assert!((report.speedup() - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn zero_tuned_time_reports_infinite_speedup() {
+        // A degenerate measurement must be distinguishable from "the
+        // transfer changed nothing" (speedup 1.0).
+        let report = TuningReport {
+            app: AppId::Grep,
+            matched_app: None,
+            transferred: None,
+            default_config: Tuner::default_config(10.0),
+            default_secs: 42.0,
+            tuned_secs: 0.0,
+        };
+        assert_eq!(report.speedup(), f64::INFINITY);
     }
 
     #[test]

@@ -46,6 +46,14 @@
 //! into one logical database whose routed k-NN answers are bit-identical
 //! to a single node over the union (see `PROTOCOL.md`).
 //!
+//! The [`tuning`] layer closes the control loop the paper leaves open:
+//! a [`tuning::LengthPredictor`] refines the streaming classifier's
+//! final-length geometry from live task progress, and
+//! [`tuning::run_tuned`] reconfigures a *running* simulated job to the
+//! matched application's cached optimal mid-run, behind a
+//! [`tuning::TuningController`] hysteresis gate so flapping matches
+//! cannot thrash the job (`benches/tuning_ab.rs` measures the payoff).
+//!
 //! Observability is cross-cutting: [`trace`] provides per-request span
 //! trees with pluggable sinks (null / in-memory / text / Chrome
 //! `trace_event` JSON), threaded through server dispatch, router fan-out,
@@ -65,6 +73,7 @@ pub mod signal;
 pub mod simulator;
 pub mod streaming;
 pub mod trace;
+pub mod tuning;
 pub mod util;
 pub mod workloads;
 
@@ -90,5 +99,6 @@ pub mod prelude {
     pub use crate::trace::{
         ChromeTracker, InMemoryTracker, NullTracker, Span, TextTracker, TraceHandle,
     };
+    pub use crate::tuning::{run_tuned, ControllerPolicy, LengthPredictor, TuningController};
     pub use crate::workloads::AppId;
 }

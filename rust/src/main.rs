@@ -230,6 +230,29 @@ fn main() -> anyhow::Result<()> {
             // Wrap the store in the similarity index once at startup; every
             // connection then shares the immutable envelope cache.
             let (tracer, recorder, chrome) = build_tracer(&args);
+            // `--flight-rotate-secs N`: a detached 1 Hz ticker drives a
+            // logrotate-style flight-dump rotation (time- or
+            // pressure-triggered; see `FlightRotator`) off the tracer's
+            // clock, so the black box lands on disk periodically instead
+            // of only on read-loop errors.
+            let rotate_secs = args.opt::<u64>("flight-rotate-secs", 0);
+            if rotate_secs > 0 {
+                if let Some(rec) = recorder.clone() {
+                    let clock = tracer.clone();
+                    let mut rotator = mrtuner::trace::FlightRotator::new(
+                        rec,
+                        format!("mrtuner-flight-{port}.json"),
+                        rotate_secs.saturating_mul(1_000_000_000),
+                        8,
+                    );
+                    std::thread::spawn(move || loop {
+                        std::thread::sleep(std::time::Duration::from_secs(1));
+                        if let Some(path) = rotator.tick(clock.now_ns()) {
+                            println!("flight recorder rotated to {}", path.display());
+                        }
+                    });
+                }
+            }
             let state = ServerState {
                 db: mrtuner::index::IndexedDb::from_db(db),
                 runtime,
@@ -239,6 +262,7 @@ fn main() -> anyhow::Result<()> {
                 sessions: mrtuner::streaming::SessionManager::with_tracer(tracer.clone()),
                 tracer,
                 recorder,
+                predictors: Default::default(),
             };
             let server = MatchServer::bind(&format!("127.0.0.1:{port}"), state)?;
             println!("serving on {}", server.local_addr()?);
@@ -304,7 +328,8 @@ fn main() -> anyhow::Result<()> {
                  [--app NAME] [--grid table1|grid50|small|N] [--db FILE] \
                  [--seed N] [--workers N] [--port N] [--no-runtime] [--no-noise] \
                  [--shard-of \"LABEL;LABEL...\"] [--shards \"host:port[,replica...];host:port\"] \
-                 [--no-trace] [--trace FILE] [--trace-sample N] [--flight-spans N]"
+                 [--no-trace] [--trace FILE] [--trace-sample N] [--flight-spans N] \
+                 [--flight-rotate-secs N]"
             );
         }
     }

@@ -47,7 +47,7 @@ pub use request::Request;
 pub use response::{
     DecisionBody, FinalBody, KnnBatchBody, KnnBody, MatchBody, MatchRow, NeighborRow, Response,
     SessionPollBody, ShardInfoBody, StatsBody, StreamCloseBody, StreamFeedBody, StreamOpenBody,
-    StreamPollBody, TopRow,
+    StreamPollBody, StreamTunedBody, TopRow,
 };
 
 use crate::util::json::Json;

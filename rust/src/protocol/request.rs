@@ -55,14 +55,26 @@ pub enum Request {
         margin: Option<f64>,
         min_samples: Option<usize>,
     },
-    /// Feed one batch of raw CPU samples into a live session.
-    StreamFeed { session: u64, samples: Vec<f64> },
+    /// Feed one batch of raw CPU samples into a live session. `progress`
+    /// optionally reports the producing job's completed fraction in
+    /// `(0, 1]`; the server feeds it to the session's final-length
+    /// predictor so prefix bounds tighten as the job advances.
+    StreamFeed {
+        session: u64,
+        samples: Vec<f64>,
+        progress: Option<f64>,
+    },
     /// A live session's anytime top-k without feeding it.
     StreamPoll { session: u64, k: usize },
     /// Snapshot every live session in one request.
     StreamPollAll { k: usize },
     /// Close a session: exact final search over the whole capture.
     StreamClose { session: u64 },
+    /// Tuning advice for a live session: the current decision (frozen or
+    /// anytime leader) plus the matched application's cached optimal
+    /// configuration, if the server knows one. Read-only — it never
+    /// grid-searches.
+    StreamTune { session: u64 },
 }
 
 fn parse_series_field(req: &Json) -> Result<Vec<f64>, ServerError> {
@@ -248,6 +260,7 @@ impl Request {
             Some("stream_feed") => Ok(Request::StreamFeed {
                 session: parse_session_field(req)?,
                 samples: parse_samples_field(req)?,
+                progress: req.get("progress").and_then(Json::as_f64),
             }),
             Some("stream_poll") => Ok(Request::StreamPoll {
                 session: parse_session_field(req)?,
@@ -255,6 +268,9 @@ impl Request {
             }),
             Some("stream_poll_all") => Ok(Request::StreamPollAll { k: k_poll() }),
             Some("stream_close") => Ok(Request::StreamClose {
+                session: parse_session_field(req)?,
+            }),
+            Some("stream_tune") => Ok(Request::StreamTune {
                 session: parse_session_field(req)?,
             }),
             _ => Err(ServerError::new(ErrorCode::UnknownCommand, unknown)),
@@ -278,6 +294,7 @@ impl Request {
             Request::StreamPoll { .. } => "stream_poll",
             Request::StreamPollAll { .. } => "stream_poll_all",
             Request::StreamClose { .. } => "stream_close",
+            Request::StreamTune { .. } => "stream_tune",
         }
     }
 
@@ -379,9 +396,16 @@ impl Request {
                     pairs.push(("min_samples", Json::Num(*s as f64)));
                 }
             }
-            Request::StreamFeed { session, samples } => {
+            Request::StreamFeed {
+                session,
+                samples,
+                progress,
+            } => {
                 pairs.push(("session", Json::Num(*session as f64)));
                 pairs.push(("samples", Json::nums(samples)));
+                if let Some(p) = progress {
+                    pairs.push(("progress", Json::Num(*p)));
+                }
             }
             Request::StreamPoll { session, k } => {
                 pairs.push(("session", Json::Num(*session as f64)));
@@ -391,6 +415,9 @@ impl Request {
                 pairs.push(("k", Json::Num(*k as f64)));
             }
             Request::StreamClose { session } => {
+                pairs.push(("session", Json::Num(*session as f64)));
+            }
+            Request::StreamTune { session } => {
                 pairs.push(("session", Json::Num(*session as f64)));
             }
         }
@@ -463,10 +490,17 @@ mod tests {
             Request::StreamFeed {
                 session: 7,
                 samples: series(5),
+                progress: None,
+            },
+            Request::StreamFeed {
+                session: 7,
+                samples: series(5),
+                progress: Some(0.25),
             },
             Request::StreamPoll { session: 7, k: 2 },
             Request::StreamPollAll { k: 4 },
             Request::StreamClose { session: 7 },
+            Request::StreamTune { session: 7 },
         ]
     }
 
@@ -625,9 +659,35 @@ mod tests {
         assert!(Request::StreamPoll { session: 1, k: 1 }.is_idempotent());
         assert!(!Request::StreamFeed {
             session: 1,
-            samples: vec![0.5]
+            samples: vec![0.5],
+            progress: None
         }
         .is_idempotent());
         assert!(!Request::StreamClose { session: 1 }.is_idempotent());
+        assert!(
+            Request::StreamTune { session: 1 }.is_idempotent(),
+            "tuning advice is read-only, safe to retry"
+        );
+    }
+
+    #[test]
+    fn feed_progress_is_optional_and_off_the_wire_when_absent() {
+        let bare = Request::StreamFeed {
+            session: 3,
+            samples: series(5),
+            progress: None,
+        };
+        let line = bare.to_v2(1).to_string();
+        assert!(!line.contains("progress"), "{line}");
+        assert_eq!(Request::from_v2(&Json::parse(&line).unwrap()).unwrap(), bare);
+
+        let with = Request::StreamFeed {
+            session: 3,
+            samples: series(5),
+            progress: Some(0.5),
+        };
+        let line = with.to_v2(1).to_string();
+        assert!(line.contains(r#""progress":0.5"#), "{line}");
+        assert_eq!(Request::from_v2(&Json::parse(&line).unwrap()).unwrap(), with);
     }
 }

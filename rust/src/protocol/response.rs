@@ -9,7 +9,9 @@
 //! database `entry` index the shard router needs for its deterministic
 //! merge); v1 rendering simply drops the additions.
 
+use super::request::{config_to_json, parse_config};
 use crate::index::SearchStats;
+use crate::simulator::job::JobConfig;
 use crate::util::json::Json;
 
 /// One k-NN result row. `index` is the entry's position in the answering
@@ -151,6 +153,26 @@ pub struct StreamCloseBody {
     pub decision: Option<DecisionBody>,
 }
 
+/// A `stream_tune` answer: the session's current best match and the
+/// matched application's cached optimal configuration, when one exists.
+/// `decided` distinguishes a frozen [`DecisionBody`]-backed answer from
+/// an anytime leader that may still change.
+#[derive(Debug, Clone, PartialEq)]
+pub struct StreamTunedBody {
+    pub session: u64,
+    pub decided: bool,
+    /// The matched application, frozen or anytime leader.
+    pub app: Option<String>,
+    /// DTW similarity percent behind the match, when known.
+    pub similarity: Option<f64>,
+    /// The matched application's cached optimal configuration.
+    pub optimal: Option<JobConfig>,
+    /// Completion time measured for `optimal` when it was cached.
+    pub optimal_secs: Option<f64>,
+    /// Fraction of the expected final length observed so far.
+    pub fraction: Option<f64>,
+}
+
 /// One typed response, whatever envelope it will be rendered into.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Response {
@@ -166,6 +188,7 @@ pub enum Response {
     StreamTop(StreamPollBody),
     Sessions(Vec<SessionPollBody>),
     StreamClosed(StreamCloseBody),
+    StreamTuned(StreamTunedBody),
     /// Structured metrics snapshot (the object built by
     /// `coordinator::metrics::Metrics::snapshot`). Carried as opaque JSON so
     /// the wire layer never chases the metrics schema; field names are
@@ -503,6 +526,53 @@ fn shard_info_from_json(v: &Json) -> Result<ShardInfoBody, String> {
     })
 }
 
+fn tuned_pairs(t: &StreamTunedBody) -> Vec<(&'static str, Json)> {
+    let mut pairs = vec![
+        ("session", Json::Num(t.session as f64)),
+        ("decided", Json::Bool(t.decided)),
+    ];
+    if let Some(app) = &t.app {
+        pairs.push(("app", Json::Str(app.clone())));
+    }
+    if let Some(s) = t.similarity {
+        pairs.push(("similarity", Json::Num(s)));
+    }
+    if let Some(cfg) = &t.optimal {
+        pairs.push(("optimal", config_to_json(cfg)));
+    }
+    if let Some(s) = t.optimal_secs {
+        pairs.push(("optimal_secs", Json::Num(s)));
+    }
+    if let Some(f) = t.fraction {
+        pairs.push(("fraction", Json::Num(f)));
+    }
+    pairs
+}
+
+fn tuned_from_json(v: &Json) -> Result<StreamTunedBody, String> {
+    Ok(StreamTunedBody {
+        session: v
+            .get("session")
+            .and_then(Json::as_u64)
+            .ok_or_else(|| "missing session".to_string())?,
+        decided: v
+            .get("decided")
+            .and_then(Json::as_bool)
+            .ok_or_else(|| "missing decided".to_string())?,
+        app: match v.get("app") {
+            None | Some(Json::Null) => None,
+            Some(a) => Some(a.as_str().ok_or_else(|| "bad app".to_string())?.to_string()),
+        },
+        similarity: v.get("similarity").and_then(Json::as_f64),
+        optimal: match v.get("optimal") {
+            None | Some(Json::Null) => None,
+            Some(c) => Some(parse_config(c).map_err(|e| e.message)?),
+        },
+        optimal_secs: v.get("optimal_secs").and_then(Json::as_f64),
+        fraction: v.get("fraction").and_then(Json::as_f64),
+    })
+}
+
 // ---------- Response-level rendering ----------
 
 impl Response {
@@ -521,6 +591,7 @@ impl Response {
             Response::StreamTop(_) => "stream_top",
             Response::Sessions(_) => "sessions",
             Response::StreamClosed(_) => "stream_closed",
+            Response::StreamTuned(_) => "stream_tuned",
             Response::Metrics(_) => "metrics",
             Response::TraceDump(_) => "trace_dump",
         }
@@ -592,6 +663,7 @@ impl Response {
                 ("final", final_to_json(&c.final_match)),
                 ("decision", opt_decision_json(&c.decision)),
             ]),
+            Response::StreamTuned(t) => Json::obj(tuned_pairs(t)),
             Response::Metrics(m) => m.clone(),
             Response::TraceDump(t) => t.clone(),
         }
@@ -684,6 +756,13 @@ impl Response {
                 ("final", final_to_json(&c.final_match)),
                 ("decision", opt_decision_json(&c.decision)),
             ]),
+            // v1 never had stream_tune; same treatment as shard_info — the
+            // v2 body plus "ok" so a legacy-framed probe gets an answer.
+            Response::StreamTuned(t) => {
+                let mut pairs = vec![ok];
+                pairs.extend(tuned_pairs(t));
+                Json::obj(pairs)
+            }
             // v1 never had metrics; same treatment as shard_info — the v2
             // body plus "ok" so a legacy-framed probe still gets an answer.
             Response::Metrics(m) => {
@@ -778,6 +857,7 @@ impl Response {
                 final_match: final_from_json(body.get("final"))?,
                 decision: opt_decision_from_json(body.get("decision"))?,
             })),
+            "stream_tuned" => tuned_from_json(body).map(Response::StreamTuned),
             "metrics" => Ok(Response::Metrics(body.clone())),
             "trace_dump" => Ok(Response::TraceDump(body.clone())),
             other => Err(format!("unknown response type {other:?}")),
@@ -944,6 +1024,24 @@ mod tests {
                 observed: 0,
                 final_match: None,
                 decision: None,
+            }),
+            Response::StreamTuned(StreamTunedBody {
+                session: 7,
+                decided: true,
+                app: Some("wordcount".into()),
+                similarity: Some(97.25),
+                optimal: Some(JobConfig::new(8, 4, 16.0, 20.0)),
+                optimal_secs: Some(12.5),
+                fraction: Some(0.5),
+            }),
+            Response::StreamTuned(StreamTunedBody {
+                session: 9,
+                decided: false,
+                app: None,
+                similarity: None,
+                optimal: None,
+                optimal_secs: None,
+                fraction: None,
             }),
             Response::Metrics(Json::obj(vec![
                 ("requests", Json::Num(12.0)),

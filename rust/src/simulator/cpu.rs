@@ -66,6 +66,52 @@ impl Timeline {
         out
     }
 
+    /// Mean value over each *complete* 1-second bucket `[s, s+1)` for `s`
+    /// in `[from_sec, upto_sec)`, resuming the change-point scan from
+    /// `cursor` (pass the same cursor across calls for O(points) total
+    /// work). Uses the exact bucket arithmetic of [`sample_per_second`]
+    /// so a prefix sampled incrementally while the timeline is still
+    /// growing agrees with the post-hoc sampling of the finished
+    /// timeline, as long as only already-final buckets are requested
+    /// (i.e. `upto_sec <= floor(now)` for a timeline last pushed at
+    /// `now`).
+    ///
+    /// [`sample_per_second`]: Timeline::sample_per_second
+    pub fn sample_seconds(&self, from_sec: usize, upto_sec: usize, cursor: &mut usize) -> Vec<f64> {
+        let mut out = vec![0.0f64; upto_sec.saturating_sub(from_sec)];
+        if self.points.is_empty() || out.is_empty() {
+            return out;
+        }
+        let mut idx = (*cursor).min(self.points.len() - 1);
+        for (k, slot) in out.iter_mut().enumerate() {
+            let lo = (from_sec + k) as f64;
+            let hi = (from_sec + k + 1) as f64;
+            let mut acc = 0.0;
+            while idx + 1 < self.points.len() && self.points[idx + 1].0 <= lo {
+                idx += 1;
+            }
+            let mut j = idx;
+            let mut cur = lo;
+            while cur < hi - 1e-12 {
+                let seg_val = if self.points[j].0 <= cur { self.points[j].1 } else { 0.0 };
+                let seg_end = if j + 1 < self.points.len() {
+                    self.points[j + 1].0.min(hi)
+                } else {
+                    hi
+                };
+                let seg_end = seg_end.max(cur);
+                acc += seg_val * (seg_end - cur);
+                cur = seg_end;
+                if j + 1 < self.points.len() && self.points[j + 1].0 <= cur + 1e-12 {
+                    j += 1;
+                }
+            }
+            *slot = acc / (hi - lo).max(1e-12);
+        }
+        *cursor = idx;
+        out
+    }
+
     /// Total integral over `[0, t_end]`.
     pub fn integral(&self, t_end: f64) -> f64 {
         let mut acc = 0.0;
@@ -152,5 +198,48 @@ mod tests {
         let tl = Timeline::new();
         assert_eq!(tl.sample_per_second(3.0), vec![0.0; 3]);
         assert_eq!(tl.integral(3.0), 0.0);
+    }
+
+    #[test]
+    fn incremental_prefix_matches_posthoc_sampling() {
+        // Grow a timeline while sampling only the already-final seconds;
+        // the concatenated prefix must equal the post-hoc full sampling.
+        let mut tl = Timeline::new();
+        let mut cursor = 0usize;
+        let mut sampled_upto = 0usize;
+        let mut prefix: Vec<f64> = Vec::new();
+        let pushes = [
+            (0.0, 2.0),
+            (0.7, 0.5),
+            (1.25, 1.0),
+            (3.0, 0.0),
+            (3.5, 4.0),
+            (6.2, 1.5),
+        ];
+        for &(t, v) in &pushes {
+            tl.push(t, v);
+            let whole = t.floor() as usize;
+            if whole > sampled_upto {
+                // Buckets strictly before the latest push time are final.
+                prefix.extend(tl.sample_seconds(sampled_upto, whole, &mut cursor));
+                sampled_upto = whole;
+            }
+        }
+        let t_end = 6.2f64;
+        let full = tl.sample_per_second(t_end);
+        assert_eq!(prefix.len(), sampled_upto);
+        for (i, (&a, &b)) in prefix.iter().zip(full.iter()).enumerate() {
+            assert!((a - b).abs() < 1e-12, "bucket {i}: {a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn sample_seconds_empty_ranges() {
+        let mut tl = Timeline::new();
+        tl.push(0.0, 1.0);
+        let mut cursor = 0usize;
+        assert!(tl.sample_seconds(3, 3, &mut cursor).is_empty());
+        assert!(tl.sample_seconds(5, 2, &mut cursor).is_empty());
+        assert_eq!(Timeline::new().sample_seconds(0, 2, &mut cursor), vec![0.0; 2]);
     }
 }

@@ -6,12 +6,22 @@
 //! and reducer shuffles are gated on map completions. The engine emits
 //! per-node piecewise-constant CPU / disk / memory timelines which the
 //! SysStat-style sampler turns into 1 Hz series.
+//!
+//! [`simulate_controlled`] additionally closes the paper's control loop:
+//! a controller callback observes the clean 1 Hz CPU prefix as it forms
+//! and may return a new [`JobConfig`] mid-run, upon which the engine
+//! re-plans every not-yet-scheduled map under the new split size and —
+//! while still safe — re-partitions the reduce side to the new reducer
+//! count. Plain [`simulate`] takes the exact same code path with the
+//! controller absent, so its float and RNG behavior is untouched.
 
 use super::cluster::ClusterConfig;
 use super::cpu::Timeline;
 use super::job::JobConfig;
 use super::jobtracker::JobTracker;
-use super::task::{phase_mem_mb, plan_job, JobPlan, PhaseKind, TaskSpec};
+use super::task::{
+    map_spec, phase_mem_mb, plan_job, reduce_spec, JobPlan, PhaseKind, TaskKind, TaskSpec,
+};
 use crate::signal::noise::NoiseModel;
 use crate::util::rng::Rng;
 use crate::workloads::Workload;
@@ -37,6 +47,8 @@ pub struct SimCounters {
     pub speculative_attempts: usize,
     pub shuffle_mb: f64,
     pub events: u64,
+    /// Mid-run configuration changes applied by a controller.
+    pub reconfigurations: usize,
 }
 
 /// Result of one simulated job execution.
@@ -103,10 +115,39 @@ impl LiveStream {
     }
 }
 
+/// A progress snapshot handed to a [`simulate_controlled`] controller
+/// whenever new complete simulated seconds exist.
+#[derive(Debug)]
+pub struct SimTick<'a> {
+    /// Current simulated time (seconds).
+    pub t: f64,
+    /// Clean cluster-mean CPU samples (1 Hz, `[0,1]`) for the seconds
+    /// completed since the previous tick — concatenating them across
+    /// ticks reproduces the run's `cpu_clean` prefix.
+    pub new_samples: &'a [f64],
+    pub maps_done: usize,
+    pub maps_total: usize,
+    pub reduces_done: usize,
+    pub reduces_total: usize,
+    /// Configuration currently in force (reflects prior reconfigurations).
+    pub config: JobConfig,
+}
+
+impl SimTick<'_> {
+    /// Task-weighted completion fraction in `[0,1]`.
+    pub fn progress(&self) -> f64 {
+        let total = self.maps_total + self.reduces_total;
+        if total == 0 {
+            return 1.0;
+        }
+        (self.maps_done + self.reduces_done) as f64 / total as f64
+    }
+}
+
 /// One running attempt of a logical task.
 #[derive(Debug, Clone)]
 struct Attempt {
-    logical: usize, // index into all_specs
+    logical: usize, // index into specs
     node: usize,
     phase: usize,
     cpu_rem: f64,
@@ -116,15 +157,16 @@ struct Attempt {
     speculative: bool,
 }
 
-struct EngineState<'a> {
-    specs: Vec<&'a TaskSpec>,
-    num_maps: usize,
+struct EngineState {
+    /// All task specs ever planned; reconfiguration appends, never removes
+    /// (retired specs stay so logical ids remain stable).
+    specs: Vec<TaskSpec>,
     tracker: JobTracker,
     running: Vec<Attempt>,
     /// Free slots per node: (map, reduce).
     free_map: Vec<usize>,
     free_reduce: Vec<usize>,
-    /// Shuffle bytes made available / consumed per logical reduce index.
+    /// Shuffle bytes made available / consumed per reduce *slot*.
     shuffle_avail: Vec<f64>,
     shuffle_taken: Vec<f64>,
     /// Logical-task attempt bookkeeping for speculative execution.
@@ -133,15 +175,32 @@ struct EngineState<'a> {
     counters: SimCounters,
     rng_spec: Rng,
     jitter: f64,
+    /// Reduce slot → spec index for the current reduce generation.
+    reduce_logical: Vec<usize>,
+    /// Current partition weights (len == reduce slots, sums to 1).
+    weights: Vec<f64>,
+    /// Per-spec map intermediate output MB (0 for reduces).
+    map_out_of: Vec<f64>,
+    /// Σ `map_out_of` over completed maps (shuffle credit already granted).
+    completed_map_out: f64,
+    next_map_index: usize,
 }
 
-impl<'a> EngineState<'a> {
-    fn spec(&self, logical: usize) -> &'a TaskSpec {
-        self.specs[logical]
+impl EngineState {
+    fn spec(&self, logical: usize) -> &TaskSpec {
+        &self.specs[logical]
     }
 
     fn is_map(&self, logical: usize) -> bool {
-        logical < self.num_maps
+        matches!(self.specs[logical].kind, TaskKind::Map { .. })
+    }
+
+    /// The reduce slot an attempt's shuffle accounting lives in.
+    fn reduce_slot(&self, logical: usize) -> Option<usize> {
+        match self.specs[logical].kind {
+            TaskKind::Reduce { index } => Some(index),
+            TaskKind::Map { .. } => None,
+        }
     }
 
     /// Initialize an attempt's phase work, applying the speed factor to CPU.
@@ -158,13 +217,34 @@ impl<'a> EngineState<'a> {
         if !matches!(spec.phases[a.phase].kind, PhaseKind::Shuffle) {
             return f64::INFINITY;
         }
-        let r = a.logical - self.num_maps;
-        (self.shuffle_avail[r] - self.shuffle_taken[r]).max(0.0)
+        match self.reduce_slot(a.logical) {
+            Some(r) => (self.shuffle_avail[r] - self.shuffle_taken[r]).max(0.0),
+            None => f64::INFINITY,
+        }
     }
 
     /// Whether the attempt currently has disk work it is allowed to do.
     fn io_active(&self, a: &Attempt) -> bool {
         a.io_rem > EPS && self.shuffle_headroom(a) > EPS
+    }
+
+    /// Straggler-jitter speed factor for a freshly planned task.
+    fn draw_speed(&mut self) -> f64 {
+        if self.jitter > 0.0 {
+            self.rng_spec.lognormal(0.0, self.jitter)
+        } else {
+            1.0
+        }
+    }
+
+    /// Append a spec, growing the parallel bookkeeping arrays.
+    fn push_spec(&mut self, spec: TaskSpec, map_out: f64) -> usize {
+        let logical = self.specs.len();
+        self.specs.push(spec);
+        self.map_out_of.push(map_out);
+        self.done.push(false);
+        self.attempts_of.push(0);
+        logical
     }
 }
 
@@ -176,14 +256,48 @@ pub fn simulate(
     noise: &NoiseModel,
     rng: &mut Rng,
 ) -> SimResult {
+    simulate_inner(workload, config, cluster, noise, rng, None)
+}
+
+/// Simulate one job under a live controller: `ctl` is invoked whenever new
+/// complete simulated seconds exist, sees the clean CPU prefix plus task
+/// progress, and may return a new configuration to apply mid-run.
+pub fn simulate_controlled(
+    workload: &dyn Workload,
+    config: &JobConfig,
+    cluster: &ClusterConfig,
+    noise: &NoiseModel,
+    rng: &mut Rng,
+    ctl: &mut dyn FnMut(&SimTick<'_>) -> Option<JobConfig>,
+) -> SimResult {
+    simulate_inner(workload, config, cluster, noise, rng, Some(ctl))
+}
+
+fn simulate_inner(
+    workload: &dyn Workload,
+    config: &JobConfig,
+    cluster: &ClusterConfig,
+    noise: &NoiseModel,
+    rng: &mut Rng,
+    mut ctl: Option<&mut dyn FnMut(&SimTick<'_>) -> Option<JobConfig>>,
+) -> SimResult {
     let plan: JobPlan = plan_job(workload, config, cluster, rng);
     let num_maps = plan.maps.len();
     let num_reduces = plan.reduces.len();
-    let specs: Vec<&TaskSpec> = plan.maps.iter().chain(plan.reduces.iter()).collect();
+    let JobPlan {
+        maps,
+        reduces,
+        map_out_mb,
+        weights,
+    } = plan;
+    let mut specs = maps;
+    specs.extend(reduces);
+    let map_out_of: Vec<f64> = (0..specs.len())
+        .map(|i| if i < num_maps { map_out_mb } else { 0.0 })
+        .collect();
 
     let mut st = EngineState {
         specs,
-        num_maps,
         tracker: JobTracker::new(num_maps, num_reduces, cluster.reduce_slowstart),
         running: Vec::new(),
         free_map: vec![cluster.map_slots_per_node; cluster.nodes],
@@ -199,15 +313,60 @@ pub fn simulate(
         },
         rng_spec: rng.fork(),
         jitter: cluster.task_jitter,
+        reduce_logical: (0..num_reduces).map(|r| num_maps + r).collect(),
+        weights,
+        map_out_of,
+        completed_map_out: 0.0,
+        next_map_index: num_maps,
     };
 
     let mut t = 0.0f64;
     let mut cpu_tl: Vec<Timeline> = (0..cluster.nodes).map(|_| Timeline::new()).collect();
     let mut disk_tl: Vec<Timeline> = (0..cluster.nodes).map(|_| Timeline::new()).collect();
     let mut mem_tl: Vec<Timeline> = (0..cluster.nodes).map(|_| Timeline::new()).collect();
+    let cores = cluster.cores_per_node as f64;
+
+    // Controlled-mode incremental sampling state (untouched when ctl is
+    // None, so plain `simulate` pays nothing).
+    let mut cur_cfg = *config;
+    let mut sampled_upto = 0usize;
+    let mut cursors = vec![0usize; cluster.nodes];
 
     let max_events = 50_000_000u64;
     loop {
+        // 0. Controller tick: every second already fully in the past is
+        //    final (the next timeline push happens at the current `t`), so
+        //    sample the new complete seconds and let the controller react.
+        if let Some(f) = ctl.as_mut() {
+            let whole = t.floor() as usize;
+            if whole > sampled_upto {
+                let mut means = vec![0.0f64; whole - sampled_upto];
+                for node in 0..cluster.nodes {
+                    let vals = cpu_tl[node].sample_seconds(sampled_upto, whole, &mut cursors[node]);
+                    for (k, v) in vals.iter().enumerate() {
+                        means[k] += (v / cores).clamp(0.0, 1.0);
+                    }
+                }
+                for m in &mut means {
+                    *m /= cluster.nodes as f64;
+                }
+                sampled_upto = whole;
+                let tick = SimTick {
+                    t,
+                    new_samples: &means,
+                    maps_done: st.tracker.completed_maps,
+                    maps_total: st.tracker.total_maps,
+                    reduces_done: st.tracker.completed_reduces,
+                    reduces_total: st.tracker.total_reduces,
+                    config: cur_cfg,
+                };
+                if let Some(new_cfg) = (**f)(&tick) {
+                    reconfigure(&mut st, workload, &new_cfg);
+                    cur_cfg = new_cfg;
+                }
+            }
+        }
+
         // 1. Schedule: fill free slots; then settle zero-work phases; repeat
         //    until stable (a settled completion may free a slot).
         loop {
@@ -309,11 +468,14 @@ pub fn simulate(
             // Recompute io_active inline (borrow rules: use the headroom
             // captured before mutation — headroom only grows mid-interval
             // if a map completes, which cannot happen inside an interval).
-            let spec = st.specs[a.logical];
+            let spec = &st.specs[a.logical];
             let is_shuffle = matches!(spec.phases[a.phase].kind, PhaseKind::Shuffle);
+            let slot = match spec.kind {
+                TaskKind::Reduce { index } => index,
+                TaskKind::Map { .. } => usize::MAX,
+            };
             let headroom = if is_shuffle {
-                let r = a.logical - st.num_maps;
-                (st.shuffle_avail[r] - st.shuffle_taken[r]).max(0.0)
+                (st.shuffle_avail[slot] - st.shuffle_taken[slot]).max(0.0)
             } else {
                 f64::INFINITY
             };
@@ -321,7 +483,7 @@ pub fn simulate(
                 let consumed = (dt * io_rate[a.node]).min(a.io_rem).min(headroom);
                 a.io_rem = (a.io_rem - consumed).max(0.0);
                 if is_shuffle {
-                    shuffle_deltas.push((a.logical - st.num_maps, consumed));
+                    shuffle_deltas.push((slot, consumed));
                 }
             }
         }
@@ -338,7 +500,6 @@ pub fn simulate(
         disk_tl[node].push(t_end, 0.0);
         mem_tl[node].push(t_end, 0.0);
     }
-    let cores = cluster.cores_per_node as f64;
     let per_node: Vec<NodeSeries> = (0..cluster.nodes)
         .map(|node| NodeSeries {
             cpu: cpu_tl[node]
@@ -365,9 +526,89 @@ pub fn simulate(
     }
 }
 
+/// Apply a mid-run configuration change: every not-yet-scheduled map is
+/// re-planned under the new split size, and — while no reduce has made
+/// any progress (no shuffle byte consumed, every running reducer still in
+/// startup) — the reduce side is re-partitioned to the new reducer count.
+fn reconfigure(st: &mut EngineState, workload: &dyn Workload, new_cfg: &JobConfig) {
+    let costs = workload.default_costs();
+
+    // Maps: drain the FIFO queue and re-split the remaining input.
+    let drained = st.tracker.take_pending_maps();
+    if !drained.is_empty() {
+        let remaining_input: f64 = drained.iter().map(|&m| st.specs[m].phases[1].io_mb).sum();
+        for &m in &drained {
+            st.done[m] = true; // retired before ever running
+        }
+        st.counters.map_tasks -= drained.len();
+        let target = (new_cfg.input_mb / new_cfg.num_map_tasks() as f64).max(1e-6);
+        let n_new = ((remaining_input / target).round() as usize).max(1);
+        let per_map = remaining_input / n_new as f64;
+        let per_out = per_map * costs.map_selectivity;
+        let mut ids = Vec::with_capacity(n_new);
+        for _ in 0..n_new {
+            let index = st.next_map_index;
+            st.next_map_index += 1;
+            let speed = st.draw_speed();
+            ids.push(st.push_spec(map_spec(index, per_map, per_out, &costs, speed), per_out));
+        }
+        st.counters.map_tasks += n_new;
+        st.tracker.add_pending_maps(ids);
+    }
+
+    // Reduces: wholesale replacement, only while it cannot lose work.
+    let r_new = new_cfg.reducers.max(1);
+    let safe = st.tracker.completed_reduces == 0
+        && st.shuffle_taken.iter().all(|&v| v <= EPS)
+        && st
+            .running
+            .iter()
+            .all(|a| st.is_map(a.logical) || a.phase == 0);
+    if safe && r_new != st.reduce_logical.len() {
+        // Kill startup-phase reduce attempts and return their slots.
+        let mut i = 0;
+        while i < st.running.len() {
+            if st.is_map(st.running[i].logical) {
+                i += 1;
+                continue;
+            }
+            let a = st.running.swap_remove(i);
+            st.attempts_of[a.logical] -= 1;
+            st.done[a.logical] = true; // retired
+            st.free_reduce[a.node] += 1;
+        }
+        // Retire the old generation's remaining (pending) slots wholesale.
+        let old = std::mem::take(&mut st.reduce_logical);
+        for logical in old {
+            st.done[logical] = true;
+        }
+        let weights = workload.partition_weights(r_new, &mut st.rng_spec);
+        // Map-output mass reducers will ever see: completed + live maps.
+        let mut total_out = st.completed_map_out;
+        for (m, out) in st.map_out_of.iter().enumerate() {
+            if !st.done[m] && matches!(st.specs[m].kind, TaskKind::Map { .. }) {
+                total_out += out;
+            }
+        }
+        let mut logicals = Vec::with_capacity(r_new);
+        for (slot, w) in weights.iter().enumerate() {
+            let part_mb = total_out * w;
+            let speed = st.draw_speed();
+            logicals.push(st.push_spec(reduce_spec(slot, part_mb, 0.0, &costs, speed), 0.0));
+        }
+        st.reduce_logical = logicals;
+        st.shuffle_avail = weights.iter().map(|w| st.completed_map_out * w).collect();
+        st.shuffle_taken = vec![0.0; r_new];
+        st.weights = weights;
+        st.tracker.reset_reduces(r_new);
+        st.counters.reduce_tasks = r_new;
+    }
+    st.counters.reconfigurations += 1;
+}
+
 /// Fill free slots from the pending queues (and speculatively re-execute
 /// stragglers when enabled). Returns true if anything was scheduled.
-fn schedule(st: &mut EngineState<'_>, cluster: &ClusterConfig) -> bool {
+fn schedule(st: &mut EngineState, cluster: &ClusterConfig) -> bool {
     let mut any = false;
     // Maps first (FIFO priority), round-robin over nodes with free slots.
     loop {
@@ -388,7 +629,8 @@ fn schedule(st: &mut EngineState<'_>, cluster: &ClusterConfig) -> bool {
         let Some(r) = st.tracker.next_reduce() else {
             break;
         };
-        launch(st, st.num_maps + r, node, false);
+        let logical = st.reduce_logical[r];
+        launch(st, logical, node, false);
         st.free_reduce[node] -= 1;
         any = true;
     }
@@ -401,7 +643,7 @@ fn schedule(st: &mut EngineState<'_>, cluster: &ClusterConfig) -> bool {
 
 /// Launch one speculative duplicate of the slowest single-attempt task of
 /// the given kind, if queues are empty and a slot is free.
-fn speculate(st: &mut EngineState<'_>, cluster: &ClusterConfig, maps: bool) -> bool {
+fn speculate(st: &mut EngineState, cluster: &ClusterConfig, maps: bool) -> bool {
     if maps && st.tracker.has_pending_maps() {
         return false;
     }
@@ -446,7 +688,7 @@ fn speculate(st: &mut EngineState<'_>, cluster: &ClusterConfig, maps: bool) -> b
     true
 }
 
-fn launch(st: &mut EngineState<'_>, logical: usize, node: usize, speculative: bool) {
+fn launch(st: &mut EngineState, logical: usize, node: usize, speculative: bool) {
     let speed = if speculative && st.jitter > 0.0 {
         st.rng_spec.lognormal(0.0, st.jitter)
     } else {
@@ -469,7 +711,7 @@ fn launch(st: &mut EngineState<'_>, logical: usize, node: usize, speculative: bo
 
 /// Advance attempts through zero-work phase boundaries and handle task
 /// completions. Returns true if any state changed.
-fn settle(st: &mut EngineState<'_>) -> bool {
+fn settle(st: &mut EngineState) -> bool {
     let mut changed = false;
     let mut i = 0;
     while i < st.running.len() {
@@ -490,14 +732,16 @@ fn settle(st: &mut EngineState<'_>) -> bool {
         changed = true;
         let last_phase = a.phase + 1 == st.spec(a.logical).phases.len();
         if !last_phase {
+            let (logical, next) = (a.logical, a.phase + 1);
+            let (cpu, io, fixed) = {
+                let ph = &st.specs[logical].phases[next];
+                (ph.cpu_secs, ph.io_mb, ph.fixed_secs)
+            };
             let a = &mut st.running[i];
-            a.phase += 1;
-            let (logical, phase) = (a.logical, a.phase);
-            let spec = st.specs[logical];
-            let ph = &spec.phases[phase];
-            a.cpu_rem = ph.cpu_secs * a.speed;
-            a.io_rem = ph.io_mb;
-            a.fixed_rem = ph.fixed_secs;
+            a.phase = next;
+            a.cpu_rem = cpu * a.speed;
+            a.io_rem = io;
+            a.fixed_rem = fixed;
             i += 1;
             continue;
         }
@@ -533,8 +777,10 @@ fn settle(st: &mut EngineState<'_>) -> bool {
         if st.is_map(logical) {
             st.tracker.on_map_complete();
             // Publish this map's partition bytes to every reducer.
+            let out = st.map_out_of[logical];
+            st.completed_map_out += out;
             for r in 0..st.shuffle_avail.len() {
-                st.shuffle_avail[r] += st.spec(st.num_maps + r).shuffle_per_map_mb;
+                st.shuffle_avail[r] += out * st.weights[r];
             }
         } else {
             st.tracker.on_reduce_complete();
@@ -544,8 +790,10 @@ fn settle(st: &mut EngineState<'_>) -> bool {
 }
 
 /// All maps done and this reducer consumed everything that will ever come.
-fn shuffle_fully_fetched(st: &EngineState<'_>, a: &Attempt) -> bool {
-    let r = a.logical - st.num_maps;
+fn shuffle_fully_fetched(st: &EngineState, a: &Attempt) -> bool {
+    let Some(r) = st.reduce_slot(a.logical) else {
+        return false;
+    };
     st.tracker.completed_maps == st.tracker.total_maps
         && st.shuffle_avail[r] - st.shuffle_taken[r] <= 1e-6
         && a.io_rem <= 1e-3 // only float dust may remain
@@ -728,5 +976,132 @@ mod tests {
             &mut Rng::new(8),
         );
         assert!(r4.completion_secs < r1.completion_secs / 2.0);
+    }
+
+    #[test]
+    fn null_controller_is_identical_to_plain_simulate() {
+        let w = workload_for(AppId::TeraSort);
+        let cluster = ClusterConfig::pseudo_distributed();
+        let cfg = JobConfig::new(6, 3, 10.0, 40.0);
+        let plain = simulate(
+            w.as_ref(),
+            &cfg,
+            &cluster,
+            &NoiseModel::default(),
+            &mut Rng::new(11),
+        );
+        let mut ticks = 0usize;
+        let controlled = simulate_controlled(
+            w.as_ref(),
+            &cfg,
+            &cluster,
+            &NoiseModel::default(),
+            &mut Rng::new(11),
+            &mut |_| {
+                ticks += 1;
+                None
+            },
+        );
+        assert!(ticks > 0);
+        assert_eq!(plain.completion_secs, controlled.completion_secs);
+        assert_eq!(plain.cpu_clean, controlled.cpu_clean);
+        assert_eq!(plain.cpu_noisy, controlled.cpu_noisy);
+        assert_eq!(controlled.counters.reconfigurations, 0);
+    }
+
+    #[test]
+    fn tick_samples_reproduce_the_clean_prefix() {
+        let w = workload_for(AppId::WordCount);
+        let cluster = ClusterConfig::pseudo_distributed();
+        let cfg = JobConfig::new(4, 2, 10.0, 30.0);
+        let mut seen: Vec<f64> = Vec::new();
+        let r = simulate_controlled(
+            w.as_ref(),
+            &cfg,
+            &cluster,
+            &NoiseModel::none(),
+            &mut Rng::new(12),
+            &mut |tick| {
+                seen.extend_from_slice(tick.new_samples);
+                assert!((0.0..=1.0).contains(&tick.progress()));
+                None
+            },
+        );
+        // The last (partial) second is never ticked; everything else must
+        // agree with the post-hoc clean series.
+        assert!(seen.len() + 2 >= r.cpu_clean.len(), "{}", seen.len());
+        for (i, (&a, &b)) in seen.iter().zip(r.cpu_clean.iter()).enumerate() {
+            assert!((a - b).abs() < 1e-9, "sample {i}: {a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn mid_run_reconfigure_changes_the_plan_and_conserves_shuffle() {
+        let w = workload_for(AppId::TeraSort);
+        let cluster = ClusterConfig::pseudo_distributed();
+        // Many pending maps, one reducer: plenty of queued work to re-plan.
+        let cfg = JobConfig::new(8, 1, 15.0, 120.0);
+        let better = JobConfig::new(12, 4, 10.0, 120.0);
+        let mut fired = false;
+        let r = simulate_controlled(
+            w.as_ref(),
+            &cfg,
+            &cluster,
+            &NoiseModel::none(),
+            &mut Rng::new(13),
+            &mut |_tick| {
+                // Fire on the very first tick: no map has finished yet, so
+                // the queue is full and no reducer has launched (slow-start).
+                if !fired {
+                    fired = true;
+                    return Some(better);
+                }
+                None
+            },
+        );
+        assert!(fired);
+        assert_eq!(r.counters.reconfigurations, 1);
+        // The reduce side was replaced (no reduce progress that early)…
+        assert_eq!(r.counters.reduce_tasks, 4);
+        // …and the queued maps were re-split under the 10 MB target.
+        assert_ne!(r.counters.map_tasks, 8, "maps={}", r.counters.map_tasks);
+        // Shuffle conservation holds across the re-plan.
+        let expected = 120.0 * w.default_costs().map_selectivity;
+        assert!(
+            (r.counters.shuffle_mb - expected).abs() < 0.1,
+            "{} vs {expected}",
+            r.counters.shuffle_mb
+        );
+        assert!(r.completion_secs > 0.0);
+    }
+
+    #[test]
+    fn reconfigure_after_reduce_progress_keeps_reducers() {
+        let w = workload_for(AppId::WordCount);
+        let mut cluster = ClusterConfig::pseudo_distributed();
+        cluster.reduce_slowstart = 0.0; // reducers launch immediately
+        let cfg = JobConfig::new(4, 2, 10.0, 40.0);
+        let mut fired = false;
+        let r = simulate_controlled(
+            w.as_ref(),
+            &cfg,
+            &cluster,
+            &NoiseModel::none(),
+            &mut Rng::new(14),
+            &mut |tick| {
+                // Fire late: once half the maps are done the running
+                // reducers have long left their startup phase.
+                if !fired && tick.maps_done * 2 >= tick.maps_total && tick.maps_done > 0 {
+                    fired = true;
+                    return Some(JobConfig::new(4, 8, 10.0, 40.0));
+                }
+                None
+            },
+        );
+        assert!(fired);
+        assert_eq!(r.counters.reconfigurations, 1);
+        // Reduce replacement was vetoed — shuffle had already begun.
+        assert_eq!(r.counters.reduce_tasks, 2);
+        assert!(r.completion_secs > 0.0);
     }
 }

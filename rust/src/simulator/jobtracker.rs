@@ -77,6 +77,32 @@ impl JobTracker {
     pub fn map_waves(&self, slots: usize) -> usize {
         self.total_maps.div_ceil(slots.max(1))
     }
+
+    /// Drain every not-yet-scheduled map (mid-run reconfiguration): the
+    /// drained logical ids leave the job entirely, so `total_maps` shrinks
+    /// by the drained count. Running and completed maps are untouched.
+    pub fn take_pending_maps(&mut self) -> Vec<usize> {
+        let drained: Vec<usize> = self.pending_maps.drain(..).collect();
+        self.total_maps -= drained.len();
+        drained
+    }
+
+    /// Enqueue replacement map tasks (by logical id) planned under a new
+    /// configuration; they join the back of the FIFO queue.
+    pub fn add_pending_maps(&mut self, ids: impl IntoIterator<Item = usize>) {
+        let before = self.pending_maps.len();
+        self.pending_maps.extend(ids);
+        self.total_maps += self.pending_maps.len() - before;
+    }
+
+    /// Replace the reduce side wholesale with `num_reduces` fresh slots
+    /// (only valid while no reduce has completed — the engine gates this
+    /// on all running reducers still being in their startup phase).
+    pub fn reset_reduces(&mut self, num_reduces: usize) {
+        debug_assert_eq!(self.completed_reduces, 0);
+        self.pending_reduces = (0..num_reduces).collect();
+        self.total_reduces = num_reduces;
+    }
 }
 
 #[cfg(test)]
@@ -117,6 +143,24 @@ mod tests {
         jt.on_map_complete();
         jt.on_reduce_complete();
         assert!(jt.all_done());
+    }
+
+    #[test]
+    fn reconfigure_queues() {
+        let mut jt = JobTracker::new(6, 3, 0.0);
+        jt.next_map(); // 0 running
+        jt.on_map_complete();
+        let drained = jt.take_pending_maps();
+        assert_eq!(drained, vec![1, 2, 3, 4, 5]);
+        assert_eq!(jt.total_maps, 1);
+        assert_eq!(jt.completed_maps, 1); // map side momentarily complete
+        jt.add_pending_maps([10, 11, 12]);
+        assert_eq!(jt.total_maps, 4);
+        assert_eq!(jt.next_map(), Some(10)); // FIFO over the new ids
+        jt.reset_reduces(5);
+        assert_eq!(jt.total_reduces, 5);
+        assert_eq!(jt.next_reduce(), Some(0));
+        assert!(jt.has_pending_reduces());
     }
 
     #[test]

@@ -26,7 +26,7 @@ pub mod job;
 pub mod jobtracker;
 pub mod task;
 
-pub use engine::{simulate, SimCounters, SimResult};
+pub use engine::{simulate, simulate_controlled, SimCounters, SimResult, SimTick};
 
 use crate::signal::noise::NoiseModel;
 use crate::util::rng::Rng;

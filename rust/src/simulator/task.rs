@@ -82,6 +82,111 @@ pub struct JobPlan {
     pub reduces: Vec<TaskSpec>,
     /// Per-map intermediate output (MB).
     pub map_out_mb: f64,
+    /// Partition weights assigning map-output shares to reducers
+    /// (sums to 1; the engine needs them to credit shuffle bytes per
+    /// completed map, and to re-partition on mid-run reconfiguration).
+    pub weights: Vec<f64>,
+}
+
+/// Build one map task's phase model. Factored out of [`plan_job`] so the
+/// engine can plan *replacement* maps mid-run (self-tuning reconfiguration)
+/// with exactly the same cost expressions.
+pub fn map_spec(
+    index: usize,
+    per_map_mb: f64,
+    per_map_out: f64,
+    costs: &CostModel,
+    speed: f64,
+) -> TaskSpec {
+    TaskSpec {
+        kind: TaskKind::Map { index },
+        speed,
+        shuffle_per_map_mb: 0.0,
+        phases: vec![
+            Phase {
+                kind: PhaseKind::Startup,
+                cpu_secs: costs.startup_cpu_s,
+                io_mb: 2.0, // jar + split metadata
+                idle_cpu_frac: 0.15,
+                fixed_secs: 3.0, // heartbeat-paced task assignment
+            },
+            Phase {
+                kind: PhaseKind::MapProcess,
+                cpu_secs: per_map_mb * costs.map_cpu_s_per_mb,
+                io_mb: per_map_mb,
+                idle_cpu_frac: 0.08,
+                fixed_secs: 0.0,
+            },
+            Phase {
+                kind: PhaseKind::Spill,
+                cpu_secs: per_map_out * costs.sort_cpu_s_per_mb,
+                io_mb: per_map_out, // spill write passes
+                idle_cpu_frac: 0.12,
+                fixed_secs: 0.0,
+            },
+            Phase {
+                kind: PhaseKind::MapWrite,
+                cpu_secs: per_map_out * 0.02,
+                io_mb: per_map_out,
+                idle_cpu_frac: 0.06,
+                fixed_secs: 1.0, // commit round trip
+            },
+        ],
+    }
+}
+
+/// Build one reduce task's phase model from its expected partition bytes.
+/// Shared by [`plan_job`] and the engine's mid-run re-partitioning.
+pub fn reduce_spec(
+    index: usize,
+    part_mb: f64,
+    shuffle_per_map_mb: f64,
+    costs: &CostModel,
+    speed: f64,
+) -> TaskSpec {
+    let out_mb = part_mb * costs.reduce_selectivity;
+    TaskSpec {
+        kind: TaskKind::Reduce { index },
+        speed,
+        shuffle_per_map_mb,
+        phases: vec![
+            Phase {
+                kind: PhaseKind::Startup,
+                cpu_secs: costs.startup_cpu_s,
+                io_mb: 2.0,
+                idle_cpu_frac: 0.15,
+                fixed_secs: 3.0,
+            },
+            Phase {
+                kind: PhaseKind::Shuffle,
+                cpu_secs: part_mb * 0.08, // checksum + in-flight merge
+                io_mb: part_mb,
+                idle_cpu_frac: 0.05,
+                fixed_secs: 5.0, // fetch round trips per map wave
+            },
+            Phase {
+                kind: PhaseKind::MergeSort,
+                cpu_secs: part_mb * costs.sort_cpu_s_per_mb,
+                io_mb: part_mb * 1.4, // merge read+write passes
+                idle_cpu_frac: 0.25,
+                fixed_secs: 0.0,
+            },
+            Phase {
+                kind: PhaseKind::ReduceProcess,
+                cpu_secs: part_mb * costs.reduce_cpu_s_per_mb,
+                io_mb: 0.0,
+                idle_cpu_frac: 0.0,
+                fixed_secs: 0.0,
+            },
+            Phase {
+                kind: PhaseKind::OutputWrite,
+                cpu_secs: out_mb * 0.02,
+                io_mb: out_mb,
+                idle_cpu_frac: 0.06,
+                fixed_secs: 1.0,
+            },
+        ],
+    }
 }
 
 /// Build the task plan for `(workload, config)` on `cluster`.
@@ -109,89 +214,14 @@ pub fn plan_job(
     };
 
     let maps = (0..num_maps)
-        .map(|index| TaskSpec {
-            kind: TaskKind::Map { index },
-            speed: jitter(rng),
-            shuffle_per_map_mb: 0.0,
-            phases: vec![
-                Phase {
-                    kind: PhaseKind::Startup,
-                    cpu_secs: costs.startup_cpu_s,
-                    io_mb: 2.0, // jar + split metadata
-                    idle_cpu_frac: 0.15,
-                    fixed_secs: 3.0, // heartbeat-paced task assignment
-                },
-                Phase {
-                    kind: PhaseKind::MapProcess,
-                    cpu_secs: per_map_mb * costs.map_cpu_s_per_mb,
-                    io_mb: per_map_mb,
-                    idle_cpu_frac: 0.08,
-                    fixed_secs: 0.0,
-                },
-                Phase {
-                    kind: PhaseKind::Spill,
-                    cpu_secs: per_map_out * costs.sort_cpu_s_per_mb,
-                    io_mb: per_map_out, // spill write passes
-                    idle_cpu_frac: 0.12,
-                    fixed_secs: 0.0,
-                },
-                Phase {
-                    kind: PhaseKind::MapWrite,
-                    cpu_secs: per_map_out * 0.02,
-                    io_mb: per_map_out,
-                    idle_cpu_frac: 0.06,
-                    fixed_secs: 1.0, // commit round trip
-                },
-            ],
-        })
+        .map(|index| map_spec(index, per_map_mb, per_map_out, &costs, jitter(rng)))
         .collect();
 
     let reduces = (0..num_reduces)
         .map(|index| {
             let part_mb = map_out_total * weights[index];
-            let out_mb = part_mb * costs.reduce_selectivity;
-            TaskSpec {
-                kind: TaskKind::Reduce { index },
-                speed: jitter(rng),
-                shuffle_per_map_mb: per_map_out * weights[index],
-                phases: vec![
-                    Phase {
-                        kind: PhaseKind::Startup,
-                        cpu_secs: costs.startup_cpu_s,
-                        io_mb: 2.0,
-                        idle_cpu_frac: 0.15,
-                        fixed_secs: 3.0,
-                    },
-                    Phase {
-                        kind: PhaseKind::Shuffle,
-                        cpu_secs: part_mb * 0.08, // checksum + in-flight merge
-                        io_mb: part_mb,
-                        idle_cpu_frac: 0.05,
-                        fixed_secs: 5.0, // fetch round trips per map wave
-                    },
-                    Phase {
-                        kind: PhaseKind::MergeSort,
-                        cpu_secs: part_mb * costs.sort_cpu_s_per_mb,
-                        io_mb: part_mb * 1.4, // merge read+write passes
-                        idle_cpu_frac: 0.25,
-                        fixed_secs: 0.0,
-                    },
-                    Phase {
-                        kind: PhaseKind::ReduceProcess,
-                        cpu_secs: part_mb * costs.reduce_cpu_s_per_mb,
-                        io_mb: 0.0,
-                        idle_cpu_frac: 0.0,
-                        fixed_secs: 0.0,
-                    },
-                    Phase {
-                        kind: PhaseKind::OutputWrite,
-                        cpu_secs: out_mb * 0.02,
-                        io_mb: out_mb,
-                        idle_cpu_frac: 0.06,
-                        fixed_secs: 1.0,
-                    },
-                ],
-            }
+            let speed = jitter(rng);
+            reduce_spec(index, part_mb, per_map_out * weights[index], &costs, speed)
         })
         .collect();
 
@@ -199,6 +229,7 @@ pub fn plan_job(
         maps,
         reduces,
         map_out_mb: per_map_out,
+        weights,
     }
 }
 

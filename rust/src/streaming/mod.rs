@@ -40,7 +40,9 @@
 //!
 //! Two guarantees anchor the design (pinned by `rust/tests/properties.rs`):
 //! the prefix lower bound is monotone and admissible for streams up to the
-//! pipeline's 512-sample resample cap, and a session fed to completion and
+//! pipeline's 512-sample resample cap — longer captures double a
+//! decimation factor and rebuild the online state so sessions stay
+//! incremental at any length — and a session fed to completion and
 //! finalized returns exactly the neighbours of
 //! `Matcher::match_app_indexed` on the full series — culling and early
 //! exit accelerate the *anytime* answer, never the final one.
@@ -52,7 +54,9 @@ pub mod session;
 
 pub use manager::{SessionManager, SessionPoll};
 pub use prefix_lb::FinalLen;
-pub use session::{DecisionPolicy, StreamDecision, StreamSession, TopEntry, MAX_STREAM_LEN};
+pub use session::{
+    DecisionPolicy, StreamDecision, StreamSession, TopEntry, MAX_RETAINED, MAX_STREAM_LEN,
+};
 
 /// Per-session work counters; the streaming analogue of
 /// [`crate::index::SearchStats`].

@@ -31,9 +31,11 @@
 //! in stream length and never exceeds the final banded distance
 //! (`rust/tests/properties.rs` sweeps both properties). The guarantee
 //! covers streams up to the matching pipeline's 512-sample resample cap
-//! ([`super::MAX_STREAM_LEN`]); past it the pipeline resamples the raw
-//! capture and prefix geometry no longer applies, so sessions fall back
-//! to exact finalization.
+//! ([`super::MAX_STREAM_LEN`]); past it sessions decimate the raw capture
+//! to stay incremental — the bound then runs on the decimated query,
+//! still monotone between decimation rebuilds but heuristic with respect
+//! to the pipeline's linear resample, and the exact answer always comes
+//! from finalization.
 
 use crate::dtw::{band_edges, band_radius, band_slope};
 use crate::index::Envelope;

@@ -22,17 +22,24 @@ use crate::signal::normalize::OnlineMinMax;
 use crate::simulator::job::JobConfig;
 use crate::workloads::AppId;
 
-/// Streams longer than this leave the incremental regime: the matching
-/// pipeline linearly resamples raw captures above 512 samples
-/// (`coordinator::batcher::prepare_query`), which invalidates per-row
-/// prefix geometry. Sessions keep accepting samples past the cap but stop
-/// updating bounds; the answer then comes from [`StreamSession::finalize`].
+/// Length budget for the *decimated* query the incremental machinery
+/// operates on. The matching pipeline linearly resamples raw captures
+/// above 512 samples (`coordinator::batcher::prepare_query`), so per-row
+/// prefix geometry is only meaningful up to this length. When the raw
+/// capture outgrows the budget the session doubles its decimation factor
+/// and rebuilds the online state from every `decim`-th raw sample —
+/// streams of any length stay incremental. Decimation approximates the
+/// pipeline's linear resample, so past the first doubling the anytime
+/// ranking is heuristic; [`StreamSession::finalize`] stays exact on the
+/// full retained capture.
 pub const MAX_STREAM_LEN: usize = 512;
 
 /// Hard cap on retained raw samples per session (18 hours at the 1 Hz
 /// SysStat rate, ~512 KB): a client cannot grow server memory without
 /// bound through `stream_feed`. Samples past the cap are counted but
-/// dropped; `finalize` then answers from the retained capture.
+/// dropped (that is the only condition that flags
+/// [`StreamSession::overflowed`]); `finalize` then answers from the
+/// retained capture.
 pub const MAX_RETAINED: usize = 1 << 16;
 
 /// Minimum number of candidates (ranked by lower bound) whose exact
@@ -131,9 +138,16 @@ pub struct StreamSession {
     bucket: Option<String>,
     final_len: FinalLen,
     policy: DecisionPolicy,
+    /// The filter design, kept so decimation rebuilds can restart it.
+    sos: Sos,
     /// Value domain of the filtered signal (`Sos::output_bounds`).
     domain: (f64, f64),
     raw: Vec<f64>,
+    /// Every `decim`-th raw sample feeds the online pipeline; doubles
+    /// whenever the decimated length would exceed [`MAX_STREAM_LEN`].
+    decim: usize,
+    /// Raw samples already consumed into the decimated pipeline.
+    next_raw: usize,
     filt: SosState,
     filtered: Vec<f64>,
     norm: OnlineMinMax,
@@ -169,9 +183,12 @@ impl StreamSession {
             policy,
             domain,
             raw: Vec::new(),
+            decim: 1,
+            next_raw: 0,
             filt: sos.stream(),
             filtered: Vec::new(),
             norm: OnlineMinMax::new(),
+            sos,
             cands: positions
                 .into_iter()
                 .map(|pos| Candidate {
@@ -195,17 +212,78 @@ impl StreamSession {
         self.stats.batches += 1;
         self.stats.samples += samples.len() as u64;
         let room = MAX_RETAINED.saturating_sub(self.raw.len());
-        self.raw.extend_from_slice(&samples[..samples.len().min(room)]);
-        if self.overflow || self.raw.len() > MAX_STREAM_LEN {
-            self.overflow = true;
-            return self.decision.as_ref();
+        if samples.len() > room {
+            self.overflow = true; // retention exhausted: extra samples drop
         }
-        let start = self.filtered.len();
-        let (filt, filtered) = (&mut self.filt, &mut self.filtered);
-        filt.extend(samples, filtered);
-        self.norm.observe(&self.filtered[start..]);
-        self.update(idx);
+        self.raw.extend_from_slice(&samples[..samples.len().min(room)]);
+        let mut rebuilt = false;
+        while self.raw.len().div_ceil(self.decim) > MAX_STREAM_LEN {
+            self.decim *= 2;
+            rebuilt = true;
+        }
+        if rebuilt {
+            self.reset_derived();
+        }
+        let grew = self.ingest_pending();
+        if grew || rebuilt {
+            self.update(idx);
+        }
         self.decision.as_ref()
+    }
+
+    /// Feed not-yet-consumed raw samples through the decimated pipeline.
+    /// Returns whether the filtered series grew (at `decim == 1` this is
+    /// sample-for-sample identical to filtering the batch directly).
+    fn ingest_pending(&mut self) -> bool {
+        let before = self.filtered.len();
+        while self.next_raw < self.raw.len() {
+            if self.next_raw % self.decim == 0 {
+                let y = self.filt.push(self.raw[self.next_raw]);
+                self.filtered.push(y);
+                self.norm.push(y);
+            }
+            self.next_raw += 1;
+        }
+        self.filtered.len() != before
+    }
+
+    /// Drop every derived online structure (filter state, extrema, bounds,
+    /// cull flags) so the retained raw capture can be re-consumed under a
+    /// new decimation factor. The frozen decision, if any, survives — it
+    /// was declared under a then-valid policy.
+    fn reset_derived(&mut self) {
+        self.filt = self.sos.stream();
+        self.filtered.clear();
+        self.norm = OnlineMinMax::new();
+        self.next_raw = 0;
+        self.reset_bounds();
+    }
+
+    /// Reset every candidate's bound state: bounds computed under an older
+    /// band geometry (different decimation or final-length hint) are not
+    /// comparable, and a cull is only as trustworthy as the bound behind
+    /// it.
+    fn reset_bounds(&mut self) {
+        for c in self.cands.iter_mut() {
+            c.lb = 0.0;
+            c.dist = None;
+            c.floor = 0.0;
+            c.culled = false;
+        }
+    }
+
+    /// Install a refined final-length hint mid-stream (e.g. from the
+    /// online length predictor). Candidate bounds were computed under the
+    /// old band geometry, so they reset — culled candidates re-enter the
+    /// race — and the anytime state is recomputed immediately. An
+    /// already-frozen decision is never revisited.
+    pub fn set_final_len(&mut self, idx: &IndexedDb, final_len: FinalLen) {
+        if final_len == self.final_len {
+            return;
+        }
+        self.final_len = final_len;
+        self.reset_bounds();
+        self.update(idx);
     }
 
     /// Refresh bounds, probe finalists, cull, and check the exit policy.
@@ -214,7 +292,12 @@ impl StreamSession {
         if p < 4 || self.cands.is_empty() {
             return;
         }
-        let flen = self.final_len;
+        // Band geometry runs on the decimated scale the filtered series
+        // lives on (identity at `decim == 1`).
+        let flen = match self.final_len {
+            FinalLen::Known(n) => FinalLen::Known(n.div_ceil(self.decim)),
+            FinalLen::AtMost(n) => FinalLen::AtMost(n.div_ceil(self.decim)),
+        };
         let domain = self.domain;
 
         // 1. Monotone lower bounds for every live candidate. Prefix
@@ -323,10 +406,12 @@ impl StreamSession {
         best_dist: f64,
         best_ci: usize,
     ) {
-        let p = self.filtered.len();
-        let expected = self.final_len.expected(p);
-        let fraction = p as f64 / expected as f64;
-        if p < self.policy.min_samples || fraction < self.policy.min_fraction {
+        // Policy thresholds are on the raw-sample scale the caller set
+        // them in, independent of the current decimation factor.
+        let observed = self.raw.len();
+        let expected = self.final_len.expected(observed);
+        let fraction = observed as f64 / expected as f64;
+        if observed < self.policy.min_samples || fraction < self.policy.min_fraction {
             return;
         }
         let best_pos = self.cands[best_ci].pos;
@@ -351,7 +436,7 @@ impl StreamSession {
                 entry: best_pos,
                 distance: best_dist,
                 similarity: similarity_percent_banded(qp, series),
-                at_sample: p,
+                at_sample: observed,
                 fraction,
             });
         }
@@ -432,10 +517,23 @@ impl StreamSession {
         self.cands.iter().filter(|c| !c.culled).count()
     }
 
-    /// Whether the capture outgrew the incremental regime (see
-    /// [`MAX_STREAM_LEN`]).
+    /// Whether raw samples were dropped at the retention cap (see
+    /// [`MAX_RETAINED`]). Long streams no longer overflow the incremental
+    /// regime — they decimate (see [`MAX_STREAM_LEN`]).
     pub fn overflowed(&self) -> bool {
         self.overflow
+    }
+
+    /// Current decimation factor (1 while the capture fits the
+    /// incremental budget; doubles past each multiple of
+    /// [`MAX_STREAM_LEN`]).
+    pub fn decimation(&self) -> usize {
+        self.decim
+    }
+
+    /// The final-length hint currently in force.
+    pub fn final_len(&self) -> FinalLen {
+        self.final_len
     }
 
     /// The config bucket this session is scoped to, if any.
@@ -560,7 +658,7 @@ mod tests {
     }
 
     #[test]
-    fn whole_db_scope_and_overflow() {
+    fn whole_db_scope_and_decimation() {
         let idx = test_db();
         let mut s = StreamSession::open(
             &idx,
@@ -570,17 +668,80 @@ mod tests {
         );
         assert_eq!(s.candidates(), idx.len());
         assert!(s.bucket().is_none());
-        // Overrun the cap: the session flags overflow but finalize still
-        // answers (via the resampling offline path).
+        assert_eq!(s.decimation(), 1);
+        // Outgrow the incremental budget: the session doubles its
+        // decimation factor instead of overflowing, and finalize still
+        // answers from the full capture via the resampling offline path.
         let long = sine_raw(MAX_STREAM_LEN + 100, WC_FREQ, 3);
         for chunk in long.chunks(64) {
             s.push(&idx, chunk);
         }
-        assert!(s.overflowed());
+        assert!(!s.overflowed(), "decimation keeps long streams incremental");
+        assert_eq!(s.decimation(), 2);
+        assert_eq!(s.observed(), long.len());
         let (top, _) = s.finalize(&idx, 1);
         assert_eq!(top.len(), 1);
         let q = crate::coordinator::batcher::prepare_query(&long);
         let (want, _) = idx.knn(&q, 1);
+        assert_eq!(top[0].index, want[0].index);
+    }
+
+    #[test]
+    fn decimated_sessions_keep_updating_bounds() {
+        let idx = test_db();
+        let mut s = StreamSession::open(
+            &idx,
+            None,
+            FinalLen::AtMost(4 * MAX_STREAM_LEN),
+            DecisionPolicy::never(),
+        );
+        let long = sine_raw(3 * MAX_STREAM_LEN, WC_FREQ, 8);
+        let mut mid = StreamStats::default();
+        for (i, chunk) in long.chunks(128).enumerate() {
+            s.push(&idx, chunk);
+            if i == 5 {
+                mid = s.stats(); // past the first doubling (768 samples)
+            }
+        }
+        assert_eq!(s.decimation(), 4); // 1536 raw / 4 = 384 <= 512
+        assert!(
+            s.stats().lb_evals > mid.lb_evals,
+            "bounds must keep refreshing after decimation: {} then {}",
+            mid.lb_evals,
+            s.stats().lb_evals
+        );
+        assert!(!s.overflowed());
+        assert!(!s.top(&idx, 1).is_empty());
+    }
+
+    #[test]
+    fn refined_length_hint_resets_and_redecides() {
+        let idx = test_db();
+        let raw = sine_raw(200, WC_FREQ, 41);
+        // Open with only the loose cap; install the exact length
+        // mid-stream, as the online length predictor would.
+        let mut s = StreamSession::open(
+            &idx,
+            Some(&cfg()),
+            FinalLen::AtMost(MAX_STREAM_LEN),
+            DecisionPolicy::default(),
+        );
+        for chunk in raw[..100].chunks(10) {
+            s.push(&idx, chunk);
+        }
+        assert_eq!(s.final_len(), FinalLen::AtMost(MAX_STREAM_LEN));
+        s.set_final_len(&idx, FinalLen::Known(200));
+        assert_eq!(s.final_len(), FinalLen::Known(200));
+        for chunk in raw[100..].chunks(10) {
+            s.push(&idx, chunk);
+        }
+        let d = s.decision().expect("known length must let the session decide");
+        assert_eq!(d.app, AppId::WordCount);
+        assert!(d.at_sample <= 200);
+        // The geometry reset never disturbs the exact final answer.
+        let (top, _) = s.finalize(&idx, 1);
+        let q = crate::coordinator::batcher::prepare_query(&raw);
+        let (want, _) = idx.knn_in_config(&q, &cfg().label(), 1);
         assert_eq!(top[0].index, want[0].index);
     }
 

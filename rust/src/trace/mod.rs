@@ -38,7 +38,7 @@ pub use chrome::ChromeTracker;
 pub use clock::{Clock, MonotonicClock, VirtualClock};
 pub use memory::{InMemoryTracker, SpanRecord};
 pub use multi::MultiTracker;
-pub use recorder::FlightRecorder;
+pub use recorder::{FlightRecorder, FlightRotator};
 pub use sampler::SamplingTracker;
 pub use text::TextTracker;
 

@@ -20,9 +20,9 @@ use super::{SpanId, Tracker};
 use crate::util::json::Json;
 use anyhow::{Context, Result};
 use std::collections::{HashMap, VecDeque};
-use std::path::Path;
+use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 
 /// Default ring capacity: enough for the last few hundred requests'
 /// trees without mattering next to the index itself.
@@ -120,6 +120,94 @@ impl FlightRecorder {
 
     fn guard(&self) -> std::sync::MutexGuard<'_, Inner> {
         self.inner.lock().unwrap_or_else(|e| e.into_inner())
+    }
+}
+
+/// Periodic dump rotation for a [`FlightRecorder`]: logrotate-style
+/// numbered snapshots (`base.0`, `base.1`, ...) written whenever the
+/// configured interval has elapsed — or early, when the ring has started
+/// evicting spans since the last snapshot (time *or* size triggered), so
+/// a burst that overruns the ring still lands on disk before it is gone.
+///
+/// The rotator is clock-free like the trackers: callers drive
+/// [`FlightRotator::tick`] from any periodic loop and pass timestamps
+/// from the injected [`Clock`](super::Clock), so tests rotate under a
+/// [`VirtualClock`](super::VirtualClock) without sleeping. The first tick
+/// only anchors the interval; at most `keep` rotated files are retained
+/// (older ones are pruned as new snapshots land).
+#[derive(Debug)]
+pub struct FlightRotator {
+    recorder: Arc<FlightRecorder>,
+    base: PathBuf,
+    every_ns: u64,
+    keep: u64,
+    last_ns: Option<u64>,
+    dropped_mark: u64,
+    seq: u64,
+}
+
+impl FlightRotator {
+    /// A rotator writing `recorder` snapshots next to `base` every
+    /// `every_ns` nanoseconds, keeping the `keep` most recent files
+    /// (`every_ns` and `keep` are clamped to at least 1).
+    pub fn new(
+        recorder: Arc<FlightRecorder>,
+        base: impl Into<PathBuf>,
+        every_ns: u64,
+        keep: u64,
+    ) -> FlightRotator {
+        FlightRotator {
+            recorder,
+            base: base.into(),
+            every_ns: every_ns.max(1),
+            keep: keep.max(1),
+            last_ns: None,
+            dropped_mark: 0,
+            seq: 0,
+        }
+    }
+
+    /// Snapshots written so far.
+    pub fn rotations(&self) -> u64 {
+        self.seq
+    }
+
+    fn path_for(&self, seq: u64) -> PathBuf {
+        let mut name = self.base.clone().into_os_string();
+        name.push(format!(".{seq}"));
+        PathBuf::from(name)
+    }
+
+    /// Drive the rotator: called periodically with the current clock
+    /// reading. Returns the path written when a rotation happened. A
+    /// failed write is logged and the interval still advances, so a bad
+    /// path degrades to a warning per interval, not a hot loop.
+    pub fn tick(&mut self, now_ns: u64) -> Option<PathBuf> {
+        let Some(last) = self.last_ns else {
+            self.last_ns = Some(now_ns);
+            self.dropped_mark = self.recorder.dropped();
+            return None;
+        };
+        let due_time = now_ns.saturating_sub(last) >= self.every_ns;
+        let due_size = self.recorder.dropped() > self.dropped_mark;
+        if !due_time && !due_size {
+            return None;
+        }
+        let path = self.path_for(self.seq);
+        let wrote = match self.recorder.write_to(&path) {
+            Ok(()) => Some(path),
+            Err(e) => {
+                log::warn!("flight rotation failed: {e:#}");
+                None
+            }
+        };
+        self.last_ns = Some(now_ns);
+        self.dropped_mark = self.recorder.dropped();
+        self.seq += 1;
+        if self.seq > self.keep {
+            std::fs::remove_file(self.path_for(self.seq - self.keep - 1)).ok();
+        }
+        wrote
     }
 }
 
@@ -264,6 +352,61 @@ mod tests {
             Some(2)
         );
         assert_eq!(r.dumps(), 2);
+    }
+
+    #[test]
+    fn rotator_writes_on_the_virtual_interval_and_prunes_old_files() {
+        use crate::trace::{Clock, VirtualClock};
+        let dir = std::env::temp_dir().join("mrtuner_flight_rotator_interval");
+        std::fs::create_dir_all(&dir).expect("mkdir");
+        let base = dir.join("flight.json");
+        let r = Arc::new(FlightRecorder::new(8));
+        let clock = VirtualClock::new(1);
+        let mut rot = FlightRotator::new(Arc::clone(&r), &base, 1_000, 2);
+
+        assert!(rot.tick(clock.now_ns()).is_none(), "first tick only anchors");
+        let id = r.begin("request", 0, 0, 0);
+        r.end(id, 50);
+        assert!(rot.tick(clock.now_ns()).is_none(), "interval not yet elapsed");
+
+        clock.advance(2_000);
+        let p0 = rot.tick(clock.now_ns()).expect("interval elapsed");
+        assert!(p0.to_string_lossy().ends_with("flight.json.0"), "{}", p0.display());
+        let doc = Json::parse(&std::fs::read_to_string(&p0).expect("read")).expect("json");
+        assert_eq!(doc.get("traceEvents").and_then(Json::as_arr).map(Vec::len), Some(1));
+
+        assert!(rot.tick(clock.now_ns()).is_none(), "fresh interval, nothing due");
+        clock.advance(2_000);
+        let p1 = rot.tick(clock.now_ns()).expect("second rotation");
+        clock.advance(2_000);
+        let p2 = rot.tick(clock.now_ns()).expect("third rotation");
+        assert_eq!(rot.rotations(), 3);
+        assert!(!p0.exists(), "oldest snapshot pruned past keep=2");
+        assert!(p1.exists() && p2.exists());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn rotator_rotates_early_when_the_ring_starts_dropping() {
+        use crate::trace::{Clock, VirtualClock};
+        let dir = std::env::temp_dir().join("mrtuner_flight_rotator_pressure");
+        std::fs::create_dir_all(&dir).expect("mkdir");
+        let r = Arc::new(FlightRecorder::new(1));
+        let clock = VirtualClock::new(1);
+        let mut rot =
+            FlightRotator::new(Arc::clone(&r), dir.join("flight.json"), u64::MAX, 2);
+        assert!(rot.tick(clock.now_ns()).is_none());
+
+        // Two finished spans through a 1-slot ring: one eviction.
+        for i in 0..2u64 {
+            let id = r.begin("request", 0, 0, i * 10);
+            r.end(id, i * 10 + 5);
+        }
+        assert_eq!(r.dropped(), 1);
+        let p = rot.tick(clock.now_ns()).expect("size trigger fires before the interval");
+        assert!(p.exists());
+        assert!(rot.tick(clock.now_ns()).is_none(), "no further drops, no further writes");
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

@@ -1,0 +1,349 @@
+//! Live mid-run tuning controller: closes the loop between the streaming
+//! classifier and the running job.
+//!
+//! The paper tunes a job *after* classifying its completed CPU capture —
+//! by which time the job is done and the optimal configuration helps only
+//! its next run. With the simulator able to accept mid-run
+//! reconfiguration ([`crate::simulator::simulate_controlled`]) and the
+//! streaming layer able to classify a prefix
+//! ([`crate::streaming::StreamSession`]), the two can be composed into a
+//! closed loop: watch the live CPU stream, match it against the reference
+//! database, and re-plan the not-yet-scheduled work under the matched
+//! application's cached optimal configuration while the job is still
+//! running.
+//!
+//! Two components:
+//!
+//! * [`TuningController`] — the hysteresis gate. Classification votes
+//!   arrive every simulated second and the anytime leader can flap while
+//!   the evidence is thin; reconfiguration, on the other hand, re-splits
+//!   pending maps and may replace reducers, so thrashing is far worse
+//!   than waiting. The controller requires a run of *consecutive*
+//!   identical votes before acting ([`ControllerPolicy::first_after_votes`]),
+//!   a longer run for any second move
+//!   ([`ControllerPolicy::repeat_after_votes`]), and a hard cap on total
+//!   reconfigurations ([`ControllerPolicy::max_reconfigs`]).
+//! * [`run_tuned`] — the glue: drives one simulated job under a
+//!   controller that feeds every tick's clean samples to a
+//!   [`StreamSession`], keeps a [`LengthPredictor`] refining the
+//!   session's final-length geometry, and applies the matched
+//!   application's cached optimal (input size corrected to the live
+//!   job's) through the hysteresis gate. `benches/tuning_ab.rs` measures
+//!   the payoff against the untuned run.
+
+use super::predictor::LengthPredictor;
+use crate::index::IndexedDb;
+use crate::signal::noise::NoiseModel;
+use crate::simulator::cluster::ClusterConfig;
+use crate::simulator::engine::{simulate_controlled, SimResult};
+use crate::simulator::job::JobConfig;
+use crate::streaming::{DecisionPolicy, FinalLen, StreamSession, MAX_RETAINED, MAX_STREAM_LEN};
+use crate::util::rng::Rng;
+use crate::workloads::{workload_for, AppId};
+
+/// When the controller may act on classification votes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ControllerPolicy {
+    /// Consecutive identical votes required before the first
+    /// reconfiguration.
+    pub first_after_votes: usize,
+    /// Consecutive identical votes required before any *later*
+    /// reconfiguration — stiffer, because a job that already moved once
+    /// should rarely move again.
+    pub repeat_after_votes: usize,
+    /// Hard cap on mid-run reconfigurations.
+    pub max_reconfigs: usize,
+}
+
+impl Default for ControllerPolicy {
+    fn default() -> Self {
+        ControllerPolicy {
+            first_after_votes: 3,
+            repeat_after_votes: 8,
+            max_reconfigs: 2,
+        }
+    }
+}
+
+/// Hysteresis gate between classification votes and reconfigurations.
+#[derive(Debug, Clone)]
+pub struct TuningController {
+    policy: ControllerPolicy,
+    last_vote: Option<AppId>,
+    streak: usize,
+    reconfigs: usize,
+    suppressed: u64,
+}
+
+impl TuningController {
+    pub fn new(policy: ControllerPolicy) -> TuningController {
+        TuningController {
+            policy,
+            last_vote: None,
+            streak: 0,
+            reconfigs: 0,
+            suppressed: 0,
+        }
+    }
+
+    /// Reconfigurations issued so far.
+    pub fn reconfigurations(&self) -> usize {
+        self.reconfigs
+    }
+
+    /// Flapping votes absorbed after the first reconfiguration — each one
+    /// would have thrashed the job without the hysteresis.
+    pub fn suppressed_flaps(&self) -> u64 {
+        self.suppressed
+    }
+
+    /// Length of the current run of identical votes.
+    pub fn streak(&self) -> usize {
+        self.streak
+    }
+
+    /// The application the last vote named, if any.
+    pub fn last_vote(&self) -> Option<AppId> {
+        self.last_vote
+    }
+
+    /// Feed one classification vote: the current leading app, that app's
+    /// cached optimal configuration (already corrected to the live job's
+    /// input size), and the configuration currently in force. Returns the
+    /// configuration to apply when — and only when — the hysteresis
+    /// policy is satisfied.
+    pub fn vote(
+        &mut self,
+        app: AppId,
+        optimal: Option<JobConfig>,
+        current: JobConfig,
+    ) -> Option<JobConfig> {
+        if self.last_vote == Some(app) {
+            self.streak += 1;
+        } else {
+            if self.last_vote.is_some() && self.reconfigs > 0 {
+                self.suppressed += 1;
+            }
+            self.last_vote = Some(app);
+            self.streak = 1;
+        }
+        let cfg = optimal?;
+        if cfg == current || self.reconfigs >= self.policy.max_reconfigs {
+            return None;
+        }
+        let needed = if self.reconfigs == 0 {
+            self.policy.first_after_votes
+        } else {
+            self.policy.repeat_after_votes
+        };
+        if self.streak < needed {
+            return None;
+        }
+        self.reconfigs += 1;
+        self.streak = 0;
+        Some(cfg)
+    }
+}
+
+/// Outcome of one self-tuned simulated run.
+#[derive(Debug, Clone)]
+pub struct TunedRun {
+    pub result: SimResult,
+    /// The frozen streaming decision the run converged on, if any.
+    pub decided_app: Option<AppId>,
+    /// Simulated second at which the first reconfiguration fired.
+    pub reconfigured_at: Option<f64>,
+    /// The configuration applied mid-run, if any.
+    pub applied: Option<JobConfig>,
+    /// Flapping votes the hysteresis absorbed.
+    pub suppressed_flaps: u64,
+}
+
+/// Simulate `app` starting from `start`, classifying its live clean CPU
+/// stream against `idx` and reconfiguring mid-run to the matched
+/// application's cached optimal (`IndexedDb::optimal`) once the
+/// controller's hysteresis is satisfied. Votes before the session's
+/// frozen decision come from the anytime top-1, so the hysteresis gate is
+/// doing real work; the final-length predictor keeps tightening the
+/// session's band geometry from the job's task progress.
+pub fn run_tuned(
+    app: AppId,
+    start: &JobConfig,
+    cluster: &ClusterConfig,
+    idx: &IndexedDb,
+    decision_policy: DecisionPolicy,
+    policy: ControllerPolicy,
+    noise: &NoiseModel,
+    seed: u64,
+) -> TunedRun {
+    let workload = workload_for(app);
+    let mut session =
+        StreamSession::open(idx, None, FinalLen::AtMost(MAX_STREAM_LEN), decision_policy);
+    let mut predictor = LengthPredictor::new();
+    let mut gate = TuningController::new(policy);
+    let mut decided: Option<AppId> = None;
+    let mut applied: Option<JobConfig> = None;
+    let mut reconfigured_at: Option<f64> = None;
+    let mut rng = Rng::new(seed);
+    let result = simulate_controlled(
+        workload.as_ref(),
+        start,
+        cluster,
+        noise,
+        &mut rng,
+        &mut |tick| {
+            predictor.observe(tick.progress(), tick.t);
+            if let Some(hint) = predictor.final_len_hint(MAX_RETAINED) {
+                session.set_final_len(idx, hint);
+            }
+            if let Some(d) = session.push(idx, tick.new_samples) {
+                decided = Some(d.app);
+            }
+            let leader = match decided {
+                Some(a) => a,
+                None => session.top(idx, 1).first().map(|t| t.app)?,
+            };
+            let optimal = idx.optimal(leader).map(|o| {
+                let mut cfg = o.config;
+                cfg.input_mb = tick.config.input_mb;
+                cfg
+            });
+            let cfg = gate.vote(leader, optimal, tick.config)?;
+            applied = Some(cfg);
+            if reconfigured_at.is_none() {
+                reconfigured_at = Some(tick.t);
+            }
+            Some(cfg)
+        },
+    );
+    TunedRun {
+        result,
+        decided_app: decided,
+        reconfigured_at,
+        applied,
+        suppressed_flaps: gate.suppressed_flaps(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::database::profile::ProfileEntry;
+    use crate::database::store::OptimalConfig;
+    use crate::signal;
+    use crate::simulator::profile_run;
+
+    #[test]
+    fn hysteresis_survives_single_flaps() {
+        let a_cfg = JobConfig::new(8, 4, 16.0, 100.0);
+        let b_cfg = JobConfig::new(16, 8, 32.0, 100.0);
+        let start = JobConfig::new(2, 1, 64.0, 100.0);
+        let mut c = TuningController::new(ControllerPolicy::default());
+        // Three consistent votes fire the first reconfiguration.
+        assert_eq!(c.vote(AppId::WordCount, Some(a_cfg), start), None);
+        assert_eq!(c.vote(AppId::WordCount, Some(a_cfg), start), None);
+        assert_eq!(c.vote(AppId::WordCount, Some(a_cfg), start), Some(a_cfg));
+        assert_eq!(c.reconfigurations(), 1);
+        // One flapping vote must NOT trigger a second reconfiguration.
+        assert_eq!(c.vote(AppId::TeraSort, Some(b_cfg), a_cfg), None);
+        assert_eq!(c.suppressed_flaps(), 1);
+        assert_eq!(c.reconfigurations(), 1);
+        // Even seven in a row stay below the repeat threshold of eight.
+        for _ in 0..6 {
+            assert_eq!(c.vote(AppId::TeraSort, Some(b_cfg), a_cfg), None);
+        }
+        // The eighth consecutive vote may finally move the job again.
+        assert_eq!(c.vote(AppId::TeraSort, Some(b_cfg), a_cfg), Some(b_cfg));
+        assert_eq!(c.reconfigurations(), 2);
+        // The hard cap stops any further motion, however persistent.
+        for _ in 0..20 {
+            assert_eq!(c.vote(AppId::WordCount, Some(a_cfg), b_cfg), None);
+        }
+        assert_eq!(c.reconfigurations(), 2);
+    }
+
+    #[test]
+    fn aligned_or_unknown_votes_never_fire() {
+        let cur = JobConfig::new(8, 4, 16.0, 100.0);
+        let mut c = TuningController::new(ControllerPolicy::default());
+        for _ in 0..10 {
+            // No cached optimal → nothing to transfer.
+            assert_eq!(c.vote(AppId::Grep, None, cur), None);
+            // Already running the optimal → nothing to change.
+            assert_eq!(c.vote(AppId::Grep, Some(cur), cur), None);
+        }
+        assert_eq!(c.reconfigurations(), 0);
+        assert_eq!(c.last_vote(), Some(AppId::Grep));
+        assert!(c.streak() >= 10);
+    }
+
+    #[test]
+    fn run_tuned_reconfigures_a_live_job() {
+        // Reference database: clean profiles of two distinguishable apps
+        // under a shared profiling config, with cached optimals.
+        let profile_cfg = JobConfig::new(4, 2, 16.0, 60.0);
+        let mut idx = IndexedDb::new();
+        for app in [AppId::WordCount, AppId::TeraSort] {
+            let res = profile_run(app, &profile_cfg, &NoiseModel::none(), 21);
+            let raw_len = res.cpu_clean.len();
+            idx.insert(ProfileEntry {
+                app,
+                config: profile_cfg,
+                series: signal::preprocess(&res.cpu_clean),
+                raw_len,
+                completion_secs: res.completion_secs,
+            });
+            idx.set_optimal(
+                app,
+                OptimalConfig {
+                    config: JobConfig::new(8, 4, 8.0, 60.0),
+                    completion_secs: 0.0,
+                },
+            );
+        }
+        // Run WordCount from the Hadoop default: whichever app the stream
+        // matches, a cached optimal exists and differs from the default,
+        // so the controller must fire exactly through the hysteresis gate.
+        let start = JobConfig::new(2, 1, 64.0, 60.0);
+        let cluster = ClusterConfig::pseudo_distributed();
+        let tuned = run_tuned(
+            AppId::WordCount,
+            &start,
+            &cluster,
+            &idx,
+            DecisionPolicy::default(),
+            ControllerPolicy::default(),
+            &NoiseModel::none(),
+            77,
+        );
+        assert!(
+            tuned.result.counters.reconfigurations >= 1,
+            "controller never fired"
+        );
+        assert_eq!(tuned.applied.map(|c| (c.mappers, c.reducers)), Some((8, 4)));
+        assert_eq!(tuned.applied.map(|c| c.input_mb), Some(60.0));
+        assert!(tuned.reconfigured_at.is_some());
+        assert!(tuned.result.completion_secs.is_finite());
+        assert!(!tuned.result.cpu_clean.is_empty());
+    }
+
+    #[test]
+    fn run_tuned_with_empty_db_is_a_plain_run() {
+        let idx = IndexedDb::new();
+        let start = JobConfig::new(2, 1, 64.0, 40.0);
+        let cluster = ClusterConfig::pseudo_distributed();
+        let tuned = run_tuned(
+            AppId::Grep,
+            &start,
+            &cluster,
+            &idx,
+            DecisionPolicy::default(),
+            ControllerPolicy::default(),
+            &NoiseModel::none(),
+            5,
+        );
+        assert_eq!(tuned.result.counters.reconfigurations, 0);
+        assert!(tuned.applied.is_none());
+        assert!(tuned.decided_app.is_none());
+    }
+}

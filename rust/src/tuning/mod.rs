@@ -1,0 +1,36 @@
+//! Self-tuning of *running* jobs: the closed control loop the paper
+//! stops short of.
+//!
+//! The paper's pipeline (profile → match → transfer the matched app's
+//! optimal configuration) tunes the *next* run of a job — classification
+//! needs the completed CPU capture, by which point the run being
+//! classified is over. This subsystem closes the loop mid-run:
+//!
+//! 1. [`predictor::LengthPredictor`] watches the job's task progress and
+//!    fits a polynomial trend to predict the final capture length, with a
+//!    confidence band that only ever tightens. Its
+//!    [`predictor::LengthPredictor::final_len_hint`] feeds
+//!    [`crate::streaming::StreamSession::set_final_len`], so the
+//!    streaming classifier's prefix bounds work against an increasingly
+//!    accurate final-length geometry instead of a loose worst case.
+//! 2. [`controller::TuningController`] gates classification votes behind
+//!    hysteresis — consecutive-vote thresholds and a reconfiguration cap
+//!    — so a flapping anytime leader cannot thrash the job.
+//! 3. [`controller::run_tuned`] wires both into
+//!    [`crate::simulator::simulate_controlled`]: the live job's clean CPU
+//!    stream is classified as it is produced, and once the gate opens the
+//!    matched application's cached optimal configuration
+//!    ([`crate::index::IndexedDb::optimal`]) is applied to the remaining
+//!    work of the *same* run.
+//!
+//! `rust/benches/tuning_ab.rs` measures the payoff (tuned-mid-run vs
+//! untuned completion across synthetic workloads, emitted as
+//! `BENCH_tuning.json`); `rust/tests/tuning_loop.rs` pins the live
+//! reconfiguration end-to-end. Over the wire, the blocking server serves
+//! the same loop via `stream_tune` (see `PROTOCOL.md`).
+
+pub mod controller;
+pub mod predictor;
+
+pub use controller::{run_tuned, ControllerPolicy, TunedRun, TuningController};
+pub use predictor::{LengthPredictor, Prediction};

@@ -1,0 +1,374 @@
+//! Online final-length prediction from a partial run.
+//!
+//! A streaming session's band geometry (see
+//! [`crate::streaming::prefix_lb`]) is only as tight as its
+//! [`FinalLen`] hint, and mid-run the final capture length is unknown.
+//! This module closes that gap: a [`LengthPredictor`] ingests
+//! `(progress, elapsed)` observations from the running job — the
+//! simulator's [`crate::simulator::SimTick::progress`] task fraction, or
+//! a client-reported fraction over the wire — and extrapolates the final
+//! length (at the 1 Hz SysStat rate, seconds and samples coincide).
+//!
+//! The estimate is a least-squares polynomial fit of elapsed time over
+//! progress (degree 2 once enough points exist, degree 1 before that,
+//! with a plain `elapsed/progress` ratio as the numerical fallback),
+//! evaluated at progress 1. Around it the predictor keeps a confidence
+//! band built from two conservative edges — the elapsed time itself from
+//! below (a job never finishes before *now*) and the estimate widened by
+//! a slack proportional to the unobserved remainder from above — and
+//! *intersects* the band across updates, so the interval tightens
+//! monotonically and keeps covering the final length as long as each
+//! individual band does. Tight intervals promote the session hint to
+//! [`FinalLen::Known`]; wide ones still narrow its [`FinalLen::AtMost`]
+//! geometry. Short or low-progress prefixes yield no prediction at all
+//! (`rust/tests/properties.rs` and the tests below pin all three
+//! behaviours).
+
+use crate::streaming::FinalLen;
+
+/// Fewest observations before any prediction is attempted.
+const MIN_POINTS: usize = 4;
+
+/// Minimum observed completion fraction before extrapolating: below it
+/// the fit has essentially no leverage and any interval would be noise.
+const MIN_PROGRESS: f64 = 0.05;
+
+/// Switch from a linear to a quadratic fit at this many points (a
+/// quadratic needs enough support not to chase its own tail).
+const QUADRATIC_AT: usize = 8;
+
+/// Relative half-width of one update's band per unit of *unobserved*
+/// progress: at fraction `p` the band spans `estimate * (1 ± SLACK *
+/// (1/p - 1))`, so it is wide early and collapses as `p → 1`.
+const SLACK: f64 = 0.75;
+
+/// Interval widths at or below `max(KNOWN_ABS_WIDTH, estimate *
+/// KNOWN_REL_WIDTH)` promote the hint to `FinalLen::Known`.
+const KNOWN_ABS_WIDTH: f64 = 2.0;
+const KNOWN_REL_WIDTH: f64 = 0.06;
+
+/// A predicted final length with its confidence interval (seconds ≙
+/// samples at 1 Hz).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Prediction {
+    /// Point estimate of the final length.
+    pub estimate: f64,
+    /// Conservative lower edge (never below the elapsed time observed).
+    pub lo: f64,
+    /// Conservative upper edge.
+    pub hi: f64,
+}
+
+impl Prediction {
+    /// Interval width.
+    pub fn width(&self) -> f64 {
+        self.hi - self.lo
+    }
+}
+
+/// Online predictor of a running job's final capture length.
+#[derive(Debug, Clone, Default)]
+pub struct LengthPredictor {
+    /// `(progress, elapsed_secs)` observations, progress in `(0, 1]`,
+    /// kept monotone in both coordinates.
+    points: Vec<(f64, f64)>,
+    /// Running intersection of every per-update confidence band.
+    band: Option<(f64, f64)>,
+}
+
+impl LengthPredictor {
+    pub fn new() -> LengthPredictor {
+        LengthPredictor::default()
+    }
+
+    /// Observations accepted so far.
+    pub fn observations(&self) -> usize {
+        self.points.len()
+    }
+
+    /// Latest accepted completion fraction (`0.0` before any).
+    pub fn progress(&self) -> f64 {
+        match self.points.last() {
+            Some(&(p, _)) => p,
+            None => 0.0,
+        }
+    }
+
+    /// Ingest one `(progress, elapsed_secs)` observation. Non-finite,
+    /// non-positive-progress, or non-monotone samples (stale or
+    /// reordered feeds) are dropped — ignoring them can only cost
+    /// tightness, never correctness.
+    pub fn observe(&mut self, progress: f64, elapsed_secs: f64) {
+        if !progress.is_finite() || !elapsed_secs.is_finite() {
+            return;
+        }
+        if progress <= 0.0 || elapsed_secs < 0.0 {
+            return;
+        }
+        let progress = progress.min(1.0);
+        if let Some(&(lp, le)) = self.points.last() {
+            if progress < lp || elapsed_secs < le {
+                return;
+            }
+        }
+        self.points.push((progress, elapsed_secs));
+        self.refresh();
+    }
+
+    /// The current prediction, or `None` while the prefix is too short
+    /// (fewer than [`MIN_POINTS`] observations or progress below
+    /// [`MIN_PROGRESS`]).
+    pub fn predict(&self) -> Option<Prediction> {
+        let (p, _) = *self.points.last()?;
+        if self.points.len() < MIN_POINTS || p < MIN_PROGRESS {
+            return None;
+        }
+        let (lo, hi) = self.band?;
+        let estimate = self.extrapolate()?.clamp(lo, hi);
+        Some(Prediction { estimate, lo, hi })
+    }
+
+    /// Convert the current prediction into a final-length hint for a
+    /// streaming session, capped at `cap` samples. `Known` is issued
+    /// only once the interval is tight; a wide interval still narrows
+    /// the session's `AtMost` geometry. `None` means "keep whatever
+    /// hint you have".
+    pub fn final_len_hint(&self, cap: usize) -> Option<FinalLen> {
+        let pred = self.predict()?;
+        let tight = pred.width() <= (pred.estimate * KNOWN_REL_WIDTH).max(KNOWN_ABS_WIDTH);
+        if tight {
+            let est = pred.estimate.round().max(1.0) as usize;
+            Some(FinalLen::Known(est.min(cap)))
+        } else {
+            let hi = pred.hi.ceil().max(1.0) as usize;
+            Some(FinalLen::AtMost(hi.min(cap)))
+        }
+    }
+
+    /// Point-extrapolate the final length from the fit (clamped from
+    /// below by the elapsed time — a job never finishes before now).
+    fn extrapolate(&self) -> Option<f64> {
+        let (p, elapsed) = *self.points.last()?;
+        let ratio = elapsed / p;
+        let deg = if self.points.len() >= QUADRATIC_AT { 2 } else { 1 };
+        let est = match polyfit_at_one(&self.points, deg) {
+            Some(v) if v.is_finite() => v,
+            _ => ratio,
+        };
+        Some(est.max(elapsed))
+    }
+
+    /// Recompute this update's confidence band and intersect it with the
+    /// running one. The intersection keeps `lo` non-decreasing and `hi`
+    /// non-increasing while staying non-empty, which is exactly the
+    /// monotone-tightening guarantee the property tests pin.
+    fn refresh(&mut self) {
+        let Some(est) = self.extrapolate() else {
+            return;
+        };
+        let Some(&(p, elapsed)) = self.points.last() else {
+            return;
+        };
+        let rel = SLACK * (1.0 / p - 1.0);
+        let lo = elapsed.max(est * (1.0 - rel));
+        let hi = (est * (1.0 + rel) + 1.0).max(lo);
+        self.band = Some(match self.band {
+            None => (lo, hi),
+            Some((bl, bh)) => {
+                let l = bl.max(lo).min(bh);
+                let h = bh.min(hi).max(l);
+                (l, h)
+            }
+        });
+    }
+}
+
+/// Least-squares polynomial fit of `y` over `x` of degree `deg` (≤ 2),
+/// evaluated at `x = 1` (the sum of the coefficients). Solves the normal
+/// equations by Gaussian elimination with partial pivoting; returns
+/// `None` when the system is underdetermined or numerically singular.
+fn polyfit_at_one(points: &[(f64, f64)], deg: usize) -> Option<f64> {
+    let n = deg + 1;
+    if n > 3 || points.len() < n {
+        return None;
+    }
+    let mut a = [[0.0f64; 3]; 3];
+    let mut b = [0.0f64; 3];
+    for &(x, y) in points {
+        let xs = [1.0, x, x * x];
+        for i in 0..n {
+            for j in 0..n {
+                a[i][j] += xs[i] * xs[j];
+            }
+            b[i] += xs[i] * y;
+        }
+    }
+    for col in 0..n {
+        let mut piv = col;
+        for row in col + 1..n {
+            if a[row][col].abs() > a[piv][col].abs() {
+                piv = row;
+            }
+        }
+        if a[piv][col].abs() < 1e-12 {
+            return None;
+        }
+        a.swap(col, piv);
+        b.swap(col, piv);
+        for row in col + 1..n {
+            let f = a[row][col] / a[col][col];
+            for k in col..n {
+                a[row][k] -= f * a[col][k];
+            }
+            b[row] -= f * b[col];
+        }
+    }
+    let mut c = [0.0f64; 3];
+    for row in (0..n).rev() {
+        let mut acc = b[row];
+        for k in row + 1..n {
+            acc -= a[row][k] * c[k];
+        }
+        c[row] = acc / a[row][row];
+    }
+    Some(c[..n].iter().sum())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::signal::noise::NoiseModel;
+    use crate::simulator::job::JobConfig;
+    use crate::simulator::profile_run;
+    use crate::workloads::AppId;
+
+    #[test]
+    fn intervals_tighten_and_cover_on_simulator_runs() {
+        // Noise-free simulator captures with an honest progress signal:
+        // the interval must cover the true final length at every prefix
+        // and only ever tighten.
+        for (app, cfg) in [
+            (AppId::WordCount, JobConfig::new(4, 2, 10.0, 40.0)),
+            (AppId::TeraSort, JobConfig::new(6, 3, 10.0, 60.0)),
+            (AppId::Grep, JobConfig::new(2, 1, 16.0, 30.0)),
+        ] {
+            let res = profile_run(app, &cfg, &NoiseModel::none(), 9);
+            let truth = res.cpu_clean.len() as f64;
+            let mut pred = LengthPredictor::new();
+            let mut last: Option<Prediction> = None;
+            for i in 1..=res.cpu_clean.len() {
+                let t = i as f64;
+                pred.observe(t / truth, t);
+                let Some(p) = pred.predict() else { continue };
+                assert!(
+                    p.lo <= truth + 1e-6 && truth <= p.hi + 1e-6,
+                    "{app:?}: [{}, {}] misses truth {truth} at t={t}",
+                    p.lo,
+                    p.hi
+                );
+                if let Some(q) = last {
+                    assert!(
+                        p.lo >= q.lo - 1e-9 && p.hi <= q.hi + 1e-9,
+                        "{app:?}: interval widened at t={t}: [{}, {}] after [{}, {}]",
+                        p.lo,
+                        p.hi,
+                        q.lo,
+                        q.hi
+                    );
+                }
+                last = Some(p);
+            }
+            let p = last.expect("a full run must yield predictions");
+            assert!(
+                (p.estimate - truth).abs() <= 0.1 * truth + 2.0,
+                "{app:?}: estimate {} far from {truth}",
+                p.estimate
+            );
+        }
+    }
+
+    #[test]
+    fn short_prefixes_degrade_gracefully_to_at_most() {
+        let mut p = LengthPredictor::new();
+        assert!(p.predict().is_none());
+        assert!(p.final_len_hint(512).is_none());
+        p.observe(0.01, 2.0);
+        p.observe(0.02, 4.0);
+        p.observe(0.03, 6.0);
+        assert!(p.predict().is_none(), "below MIN_POINTS");
+        p.observe(0.04, 8.0);
+        assert!(p.predict().is_none(), "progress below MIN_PROGRESS");
+        p.observe(0.06, 12.0);
+        let hint = p.final_len_hint(512).expect("enough evidence now");
+        assert!(
+            matches!(hint, FinalLen::AtMost(_)),
+            "wide early interval must stay AtMost: {hint:?}"
+        );
+    }
+
+    #[test]
+    fn tight_intervals_promote_to_known() {
+        let mut p = LengthPredictor::new();
+        let truth = 100.0;
+        for i in 1..=99 {
+            let t = i as f64;
+            p.observe(t / truth, t);
+        }
+        match p.final_len_hint(1 << 16) {
+            Some(FinalLen::Known(n)) => {
+                assert!((n as f64 - truth).abs() <= KNOWN_ABS_WIDTH, "Known({n})")
+            }
+            other => panic!("expected a Known hint, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn hint_respects_the_cap() {
+        let mut p = LengthPredictor::new();
+        for i in 1..=10 {
+            // 6% progress at t=600: the extrapolated length is ~10_000.
+            p.observe(0.006 * i as f64, 60.0 * i as f64);
+        }
+        match p.final_len_hint(512) {
+            Some(FinalLen::AtMost(n)) => assert_eq!(n, 512),
+            other => panic!("expected a capped AtMost, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn hostile_inputs_are_ignored() {
+        let mut p = LengthPredictor::new();
+        p.observe(f64::NAN, 1.0);
+        p.observe(0.5, f64::INFINITY);
+        p.observe(-0.1, 1.0);
+        p.observe(0.0, 1.0);
+        p.observe(0.5, -3.0);
+        assert_eq!(p.observations(), 0);
+        p.observe(0.5, 10.0);
+        p.observe(0.4, 12.0); // progress went backwards: stale, dropped
+        p.observe(0.6, 8.0); // elapsed went backwards: stale, dropped
+        assert_eq!(p.observations(), 1);
+        assert_eq!(p.progress(), 0.5);
+    }
+
+    #[test]
+    fn polyfit_recovers_exact_polynomials() {
+        // y = 3 + 2x  →  value at 1 is 5.
+        let line: Vec<(f64, f64)> = (1..=6).map(|i| {
+            let x = i as f64 * 0.1;
+            (x, 3.0 + 2.0 * x)
+        }).collect();
+        let v = polyfit_at_one(&line, 1).expect("well-posed");
+        assert!((v - 5.0).abs() < 1e-9, "{v}");
+        // y = 1 + x + 4x²  →  value at 1 is 6.
+        let quad: Vec<(f64, f64)> = (1..=9).map(|i| {
+            let x = i as f64 * 0.1;
+            (x, 1.0 + x + 4.0 * x * x)
+        }).collect();
+        let v = polyfit_at_one(&quad, 2).expect("well-posed");
+        assert!((v - 6.0).abs() < 1e-9, "{v}");
+        // Underdetermined and degenerate systems decline.
+        assert!(polyfit_at_one(&line[..1], 1).is_none());
+        assert!(polyfit_at_one(&[(0.5, 1.0), (0.5, 1.0), (0.5, 1.0)], 1).is_none());
+    }
+}

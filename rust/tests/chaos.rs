@@ -77,6 +77,7 @@ fn state_over(db: IndexedDb) -> ServerState {
         sessions: SessionManager::new(),
         tracer: mrtuner::trace::TraceHandle::disabled(),
         recorder: None,
+        predictors: Default::default(),
     }
 }
 

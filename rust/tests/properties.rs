@@ -483,6 +483,113 @@ fn normalization_idempotent() {
 }
 
 #[test]
+fn predictor_intervals_tighten_and_cover_across_seeds() {
+    // Seeded sweep of the online final-length predictor (fixed-config
+    // variants live in `tuning::predictor`'s unit tests): on noise-free
+    // simulator captures with an honest progress signal, every interval
+    // covers the true final length, intervals only ever tighten, and any
+    // hint issued is consistent with the truth — `Known` lands within
+    // the promotion tolerance, `AtMost` never undershoots.
+    use mrtuner::simulator::profile_run;
+    use mrtuner::streaming::FinalLen;
+    use mrtuner::tuning::LengthPredictor;
+
+    let mut g = Pcg32::new(130, 7);
+    let apps = AppId::all();
+    for case in 0..12u64 {
+        let app = apps[g.below(apps.len() as u32) as usize];
+        let cfg = JobConfig::new(
+            1 + g.below(4) as usize,
+            1 + g.below(3) as usize,
+            (8 + g.below(24)) as f64,
+            (40 + g.below(80)) as f64,
+        );
+        let res = profile_run(app, &cfg, &NoiseModel::none(), 500 + case);
+        let truth = res.cpu_clean.len() as f64;
+        // Irregular observation stride: the predictor must not depend on
+        // a fixed 1 Hz reporting cadence.
+        let mut pred = LengthPredictor::new();
+        let mut last: Option<(f64, f64)> = None;
+        let mut t = 0.0;
+        while t < truth {
+            t = (t + 1.0 + g.below(3) as f64).min(truth);
+            pred.observe(t / truth, t);
+            let Some(p) = pred.predict() else { continue };
+            assert!(
+                p.lo <= p.hi && p.lo <= p.estimate && p.estimate <= p.hi,
+                "{app:?} case {case}: malformed interval [{}, {}] est {}",
+                p.lo,
+                p.hi,
+                p.estimate
+            );
+            assert!(
+                p.lo <= truth + 1e-6 && truth <= p.hi + 1e-6,
+                "{app:?} case {case}: [{}, {}] misses truth {truth} at t={t}",
+                p.lo,
+                p.hi
+            );
+            if let Some((lo, hi)) = last {
+                assert!(
+                    p.lo >= lo - 1e-9 && p.hi <= hi + 1e-9,
+                    "{app:?} case {case}: interval widened at t={t}",
+                );
+            }
+            last = Some((p.lo, p.hi));
+            match pred.final_len_hint(1 << 20) {
+                Some(FinalLen::Known(n)) => assert!(
+                    (n as f64 - truth).abs() <= truth * 0.1 + 3.0,
+                    "{app:?} case {case}: Known({n}) far from truth {truth}"
+                ),
+                Some(FinalLen::AtMost(n)) => assert!(
+                    n as f64 + 1.0 >= truth,
+                    "{app:?} case {case}: AtMost({n}) below truth {truth}"
+                ),
+                None => {}
+            }
+        }
+        assert!(last.is_some(), "{app:?} case {case}: no prediction by run end");
+    }
+}
+
+#[test]
+fn predictor_declines_on_short_prefixes_then_starts_wide() {
+    // Graceful degradation: with fewer than four observations or under
+    // the minimum progress fraction the predictor declines entirely, and
+    // the first hint it does issue — while the confidence band is still
+    // wide — is `AtMost`, never a premature `Known`.
+    use mrtuner::streaming::FinalLen;
+    use mrtuner::tuning::LengthPredictor;
+
+    let mut g = Pcg32::new(131, 9);
+    for case in 0..20 {
+        let truth = (200 + g.below(1800)) as f64;
+        let mut pred = LengthPredictor::new();
+        let mut first: Option<FinalLen> = None;
+        for i in 1..=(truth as usize / 10) {
+            let t = i as f64;
+            let frac = t / truth;
+            pred.observe(frac, t);
+            if pred.observations() < 4 || frac < 0.05 {
+                assert!(
+                    pred.predict().is_none(),
+                    "case {case}: predicted on a short prefix ({} points, p={frac})",
+                    pred.observations()
+                );
+            }
+            if first.is_none() {
+                first = pred.final_len_hint(1 << 20);
+            }
+        }
+        // Only ~10% of the run was observed, so the band is still wide.
+        let first = first.expect("10% of a run is past the minimum progress");
+        assert!(
+            matches!(first, FinalLen::AtMost(_)),
+            "case {case}: premature hint {first:?}"
+        );
+    }
+}
+
+#[test]
 fn profile_entries_roundtrip_through_db_json() {
     use mrtuner::database::{profile::ProfileEntry, store::ReferenceDb};
     let mut g = Pcg32::new(111, 12);

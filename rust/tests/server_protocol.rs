@@ -46,6 +46,7 @@ fn state_with_db() -> ServerState {
         sessions: SessionManager::new(),
         tracer: mrtuner::trace::TraceHandle::disabled(),
         recorder: None,
+        predictors: Default::default(),
     }
 }
 
@@ -73,7 +74,8 @@ mod legacy {
     use mrtuner::coordinator::batcher::{prepare_query, similarities_auto};
     use mrtuner::dtw::corr::MATCH_THRESHOLD;
     use mrtuner::streaming::{
-        DecisionPolicy, FinalLen, StreamDecision, StreamSession, TopEntry, MAX_STREAM_LEN,
+        DecisionPolicy, FinalLen, StreamDecision, StreamSession, TopEntry, MAX_RETAINED,
+        MAX_STREAM_LEN,
     };
     use mrtuner::util::pool::default_workers;
 
@@ -173,12 +175,12 @@ mod legacy {
             None => None,
         };
         let final_len = match req.get("final_len").and_then(Json::as_usize) {
-            Some(n) if n > 0 => FinalLen::Known(n.min(MAX_STREAM_LEN)),
+            Some(n) if n > 0 => FinalLen::Known(n.min(MAX_RETAINED)),
             _ => FinalLen::AtMost(
                 req.get("max_len")
                     .and_then(Json::as_usize)
                     .unwrap_or(MAX_STREAM_LEN)
-                    .clamp(1, MAX_STREAM_LEN),
+                    .clamp(1, MAX_RETAINED),
             ),
         };
         let mut policy = DecisionPolicy::default();

@@ -79,6 +79,7 @@ fn traced_state(db: IndexedDb, tracker: Arc<dyn Tracker>) -> ServerState {
         sessions: SessionManager::new(),
         tracer: traced_handle(tracker),
         recorder: None,
+        predictors: Default::default(),
     }
 }
 

@@ -1,0 +1,166 @@
+//! The closed tuning loop, end to end: a live simulated job's
+//! configuration actually changes mid-run in response to a streaming
+//! match (with the hysteresis pinned: one flapping vote does not trigger
+//! a second reconfiguration), and the server's `stream_tune` command
+//! serves the same advice over the wire with its metrics visible.
+
+use mrtuner::client::MrtunerClient;
+use mrtuner::coordinator::metrics::Metrics;
+use mrtuner::coordinator::server::{MatchServer, ServerState};
+use mrtuner::database::profile::ProfileEntry;
+use mrtuner::database::store::OptimalConfig;
+use mrtuner::index::IndexedDb;
+use mrtuner::signal::noise::NoiseModel;
+use mrtuner::simulator::cluster::ClusterConfig;
+use mrtuner::simulator::job::JobConfig;
+use mrtuner::simulator::profile_run;
+use mrtuner::streaming::{DecisionPolicy, SessionManager};
+use mrtuner::tuning::{run_tuned, ControllerPolicy, TuningController};
+use mrtuner::workloads::AppId;
+use std::sync::atomic::Ordering;
+use std::time::Duration;
+
+/// Clean two-app reference database with *distinct* cached optimals, so
+/// the applied configuration identifies which transfer fired.
+fn tuned_db() -> IndexedDb {
+    let profile_cfg = JobConfig::new(4, 2, 16.0, 60.0);
+    let mut idx = IndexedDb::new();
+    for (app, optimal) in [
+        (AppId::WordCount, JobConfig::new(8, 4, 8.0, 60.0)),
+        (AppId::TeraSort, JobConfig::new(16, 8, 32.0, 60.0)),
+    ] {
+        let res = profile_run(app, &profile_cfg, &NoiseModel::none(), 21);
+        let raw_len = res.cpu_clean.len();
+        idx.insert(ProfileEntry {
+            app,
+            config: profile_cfg,
+            series: mrtuner::signal::preprocess(&res.cpu_clean),
+            raw_len,
+            completion_secs: res.completion_secs,
+        });
+        idx.set_optimal(app, OptimalConfig { config: optimal, completion_secs: 30.0 });
+    }
+    idx
+}
+
+#[test]
+fn live_job_reconfigures_mid_run_from_a_streaming_match() {
+    let idx = tuned_db();
+    // Hadoop 0.20 default — the mis-tuned start both A/B arms share.
+    let start = JobConfig::new(2, 1, 64.0, 60.0);
+    let tuned = run_tuned(
+        AppId::WordCount,
+        &start,
+        &ClusterConfig::pseudo_distributed(),
+        &idx,
+        DecisionPolicy::default(),
+        ControllerPolicy::default(),
+        &NoiseModel::none(),
+        77,
+    );
+    // The engine itself counted a mid-run configuration change...
+    assert!(
+        tuned.result.counters.reconfigurations >= 1,
+        "no mid-run reconfiguration fired"
+    );
+    // ...to one of the two cached optimals, input-corrected to the live job.
+    let applied = tuned.applied.expect("a config was applied");
+    assert!(
+        [(8, 4), (16, 8)].contains(&(applied.mappers, applied.reducers)),
+        "applied {applied:?} is not a cached optimal"
+    );
+    assert_eq!(applied.input_mb, 60.0);
+    // The change happened strictly mid-run, not at either edge.
+    let at = tuned.reconfigured_at.expect("reconfiguration timestamp");
+    assert!(at > 0.0 && at < tuned.result.completion_secs, "at={at}");
+    assert!(tuned.result.completion_secs.is_finite());
+}
+
+#[test]
+fn one_flapping_vote_cannot_trigger_a_second_reconfiguration() {
+    let a = JobConfig::new(8, 4, 8.0, 60.0);
+    let b = JobConfig::new(16, 8, 32.0, 60.0);
+    let start = JobConfig::new(2, 1, 64.0, 60.0);
+    let mut gate = TuningController::new(ControllerPolicy::default());
+    // Converge and fire the first reconfiguration.
+    while gate.reconfigurations() == 0 {
+        gate.vote(AppId::WordCount, Some(a), start);
+    }
+    // A single flap to the other app: suppressed, not applied.
+    assert_eq!(gate.vote(AppId::TeraSort, Some(b), a), None);
+    assert_eq!(gate.reconfigurations(), 1, "flap must not move the job");
+    assert_eq!(gate.suppressed_flaps(), 1);
+    // Returning to the winning app keeps the job where it is too.
+    assert_eq!(gate.vote(AppId::WordCount, Some(a), a), None);
+    assert_eq!(gate.reconfigurations(), 1);
+}
+
+#[test]
+fn stream_tune_serves_cached_optimals_over_the_wire() {
+    let idx = tuned_db();
+    let profile_cfg = JobConfig::new(4, 2, 16.0, 60.0);
+    let state = ServerState {
+        db: idx,
+        runtime: None,
+        metrics: Metrics::new(),
+        sessions: SessionManager::new(),
+        tracer: mrtuner::trace::TraceHandle::disabled(),
+        recorder: None,
+        predictors: Default::default(),
+    };
+    let server = MatchServer::bind("127.0.0.1:0", state).unwrap();
+    let addr = server.local_addr().unwrap();
+    let stop = server.stop_flag();
+    let handle = std::thread::spawn(move || server.serve_with(2, Duration::from_millis(50)));
+
+    let mut client = MrtunerClient::connect(&addr.to_string()).unwrap();
+    // A fresh WordCount capture at the profiled config, streamed in with
+    // job-progress reports so the server-side predictor runs.
+    let run = profile_run(AppId::WordCount, &profile_cfg, &NoiseModel::none(), 99);
+    let total = run.cpu_clean.len().max(1);
+    let opened = client.stream_open(Some(&profile_cfg), Some(total)).unwrap();
+    let mut fed = 0usize;
+    for chunk in run.cpu_clean.chunks(16) {
+        fed += chunk.len();
+        let progress = fed as f64 / total as f64;
+        client
+            .stream_feed_progress(opened.session, chunk, Some(progress))
+            .unwrap();
+    }
+
+    let advice = client.stream_tune(opened.session).unwrap();
+    assert_eq!(advice.session, opened.session);
+    let app = advice.app.as_deref().expect("a leading app");
+    assert!(["wordcount", "terasort"].contains(&app), "{app}");
+    // Every app in this database has a cached optimal, so advice carries one.
+    let optimal = advice.optimal.expect("cached optimal");
+    assert!(
+        [(8, 4), (16, 8)].contains(&(optimal.mappers, optimal.reducers)),
+        "{optimal:?}"
+    );
+    assert!(advice.optimal_secs.unwrap() > 0.0);
+    if advice.decided {
+        assert!(advice.similarity.is_some() && advice.fraction.is_some());
+    }
+
+    // The pinned tuning metrics block saw the loop run.
+    let metrics = client.metrics().unwrap();
+    let num = |path: &[&str]| -> f64 {
+        let mut v = &metrics;
+        for k in path {
+            v = v.get(k).unwrap_or_else(|| panic!("missing {path:?}"));
+        }
+        v.as_f64().unwrap()
+    };
+    assert!(num(&["tuning", "tunes_served"]) >= 1.0);
+    assert!(num(&["tuning", "predictor_updates"]) >= 1.0);
+
+    // Unknown sessions get the typed error, not a hang or a panic.
+    let err = client.stream_tune(opened.session + 1000).unwrap_err();
+    assert_eq!(err.code(), Some(mrtuner::protocol::ErrorCode::UnknownSession));
+
+    client.stream_close(opened.session).unwrap();
+    stop.store(true, Ordering::SeqCst);
+    let _ = std::net::TcpStream::connect(addr);
+    handle.join().unwrap().unwrap();
+}

@@ -17,10 +17,11 @@
 //! Rules (paths are relative to the linted root, normally `rust/src`):
 //!
 //! - `no-panic` — no `.unwrap()` / `.expect(` / `panic!` in non-test code
-//!   under `protocol/`, `client/`, `coordinator/server.rs`,
+//!   under `protocol/`, `client/`, `tuning/`, `coordinator/server.rs`,
 //!   `coordinator/router.rs`. Those layers answer malformed input with
-//!   typed `ErrorCode` replies; a panic there tears down a connection (or
-//!   poisons a lock) instead of reporting the error.
+//!   typed `ErrorCode` replies (and the tuning controller sits on the live
+//!   control loop); a panic there tears down a connection (or poisons a
+//!   lock) instead of reporting the error.
 //! - `relaxed-comment` — every `Ordering::Relaxed` outside `metrics.rs`
 //!   must carry a `// relaxed:` justification on the same line or in the
 //!   contiguous comment block directly above (a code line in between
@@ -33,8 +34,9 @@
 //!   scratch-arena hot path; an allocation there silently reintroduces the
 //!   per-call cost the arenas removed.
 //! - `no-io` — no `std::time` / `println!` / `eprintln!` in `dtw/`,
-//!   `signal/`, `index/` library code. Kernels stay deterministic and
-//!   side-effect free; timing and reporting belong to the coordinator.
+//!   `signal/`, `index/`, `tuning/` library code. Kernels stay
+//!   deterministic and side-effect free; timing and reporting belong to
+//!   the coordinator.
 //! - `no-raw-clock` — no direct `Instant::now()` outside `trace/clock.rs`
 //!   and `metrics.rs`. Time is injected through the `Clock` trait (carried
 //!   by `TraceHandle`) so tests can drive servers and spans with a virtual
@@ -439,13 +441,15 @@ pub fn lint_str(rel_path: &str, src: &str) -> Vec<Violation> {
 
     let no_panic_zone = path.starts_with("protocol/")
         || path.starts_with("client/")
+        || path.starts_with("tuning/")
         || path == "coordinator/server.rs"
         || path == "coordinator/router.rs";
     let relaxed_zone = !(path.ends_with("/metrics.rs") || path == "metrics.rs");
     let kernel_zone = path.starts_with("dtw/");
     let io_zone = path.starts_with("dtw/")
         || path.starts_with("signal/")
-        || path.starts_with("index/");
+        || path.starts_with("index/")
+        || path.starts_with("tuning/");
     // Only the clock abstraction itself may read real time — the rest of
     // `trace/` (sinks, samplers, recorders) takes timestamps as
     // parameters, and gets no blanket exemption for it.
@@ -678,7 +682,12 @@ mod tests {
     #[test]
     fn no_panic_fires_in_zone_files() {
         let bad = "fn f() -> u32 {\n    x.unwrap()\n}\n";
-        for path in ["protocol/mod.rs", "client/mod.rs", "coordinator/server.rs"] {
+        for path in [
+            "protocol/mod.rs",
+            "client/mod.rs",
+            "coordinator/server.rs",
+            "tuning/controller.rs",
+        ] {
             let vs = lint_str(path, bad);
             assert_eq!(rules_of(&vs), vec![NO_PANIC], "{path}");
             assert_eq!(vs[0].line, 2, "{path}");
@@ -813,7 +822,12 @@ mod tests {
     #[test]
     fn no_io_fires_in_kernel_dirs_only() {
         let bad = "pub fn trace(x: f64) {\n    println!(\"{x}\");\n}\n";
-        for path in ["dtw/mod.rs", "signal/noise.rs", "index/knn.rs"] {
+        for path in [
+            "dtw/mod.rs",
+            "signal/noise.rs",
+            "index/knn.rs",
+            "tuning/predictor.rs",
+        ] {
             assert_eq!(rules_of(&lint_str(path, bad)), vec![NO_IO], "{path}");
         }
         // The coordinator may print.
